@@ -1,0 +1,45 @@
+//! Quickstart: simulate Symphony's deferred batch scheduler against
+//! eager scheduling on an 8-GPU cluster serving ResNet50 under a 25 ms
+//! SLO, and print goodput + batch statistics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use symphony::core::model_zoo;
+use symphony::harness::{GoodputExperiment, SystemKind};
+
+fn main() {
+    // 1. Pick a model from the paper's zoo (Table 2 profile).
+    let resnet50 = model_zoo::resnet50_table2();
+    println!(
+        "model {}: l(b) = {:.3}b + {:.3} ms, SLO {}",
+        resnet50.name, resnet50.profile.alpha_ms, resnet50.profile.beta_ms, resnet50.slo
+    );
+
+    // 2. Define the experiment: 8 emulated GPUs, Poisson arrivals.
+    let exp = GoodputExperiment::new(vec![resnet50], 8).sim_secs(8.0);
+
+    // 3. Binary-search the goodput of each system (§2.1's definition:
+    //    max rate with p99 latency within SLO).
+    for sys in [
+        SystemKind::Symphony,
+        SystemKind::Eager,
+        SystemKind::Clockwork,
+        SystemKind::Nexus { frontends: 1 },
+        SystemKind::Shepherd,
+    ] {
+        let res = exp.goodput(|e| {
+            sys.build(&e.models, e.num_gpus, symphony::Micros::ZERO)
+        });
+        let hist = res.metrics.batch_hist_all();
+        println!(
+            "{:<10} goodput {:>6.0} r/s   median batch {:>2}   p95 batch {:>2}",
+            sys.label(),
+            res.goodput,
+            hist.median(),
+            hist.quantile(0.95),
+        );
+    }
+    println!("\n(expect symphony to lead with ~2x the eager median batch — Fig 1 / Table 2)");
+}

@@ -1,0 +1,95 @@
+//! **End-to-end validation driver**: serve the real AOT-compiled TinyCNN
+//! (JAX + Pallas → HLO text → PJRT CPU) behind the ModelThread/RankThread
+//! coordinator under a live Poisson workload, and report latency,
+//! goodput, and batch statistics. Python is not involved at runtime.
+//!
+//! ```bash
+//! make artifacts          # once: lowers the model per batch size
+//! cargo run --release --example serve_real -- [rate] [secs] [gpus]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Duration;
+
+use symphony::core::profile::ModelSpec;
+use symphony::runtime::{default_artifacts_dir, ModelRuntime};
+use symphony::serve::{serve, BackendKind, ServeConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rate: f64 = args.first().and_then(|v| v.parse().ok()).unwrap_or(400.0);
+    let secs: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(5.0);
+    let gpus: usize = args.get(2).and_then(|v| v.parse().ok()).unwrap_or(2);
+
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("artifacts/ not found — run `make artifacts` first");
+        std::process::exit(1);
+    };
+
+    // Load once up front to report the compiled inventory and measured
+    // profile (the serving path reloads inside its executor thread
+    // because PJRT handles are not Send).
+    println!("loading artifacts from {}", dir.display());
+    let rt = ModelRuntime::load(&dir).expect("load artifacts");
+    println!(
+        "platform: {}   batch sizes: {:?}",
+        rt.platform(),
+        rt.batch_sizes()
+    );
+    let profile = rt
+        .profile
+        .as_ref()
+        .map(|p| p.fitted)
+        .unwrap_or_else(|| symphony::core::profile::LatencyProfile::new(0.05, 0.2));
+    println!(
+        "measured profile: l(b) = {:.3}b + {:.3} ms",
+        profile.alpha_ms, profile.beta_ms
+    );
+
+    // Two "services" share the TinyCNN with a 50 ms SLO; the scheduler
+    // plans with the measured CPU ℓ(b).
+    let model = |name: &str| {
+        let mut m = ModelSpec::new(name, profile.alpha_ms.max(0.02), profile.beta_ms.max(0.05), 50.0);
+        m.profile = symphony::core::profile::LatencyProfile::new(
+            profile.alpha_ms.max(0.02),
+            profile.beta_ms.max(0.05),
+        );
+        m
+    };
+    let models = vec![model("tinycnn-a"), model("tinycnn-b")];
+
+    println!(
+        "\nserving {} models on {gpus} emulated GPUs at {rate} r/s for {secs}s ...",
+        models.len()
+    );
+    let report = serve(ServeConfig {
+        models,
+        num_gpus: gpus,
+        total_rate: rate,
+        duration: Duration::from_secs_f64(secs),
+        backend: BackendKind::Pjrt {
+            artifacts_dir: dir,
+        },
+        seed: 42,
+    })
+    .expect("serving run");
+
+    println!("\n================ serve_real report ================");
+    println!("submitted          {}", report.submitted);
+    println!("completed          {}", report.completed);
+    println!("dropped            {}", report.dropped);
+    println!("SLO violations     {}", report.violations);
+    println!("goodput            {:.1} req/s", report.goodput);
+    println!("p50 latency        {:.2} ms", report.p50_latency_ms);
+    println!("p99 latency        {:.2} ms", report.p99_latency_ms);
+    println!("median batch size  {}", report.median_batch);
+    println!("mean batch size    {:.2}", report.mean_batch);
+    println!("batches executed   {}", report.batches);
+    println!("bad fraction       {:.4}", report.bad_fraction());
+    println!("===================================================");
+
+    if report.bad_fraction() > 0.05 {
+        eprintln!("warning: >5% SLO violations — lower the rate for this host");
+    }
+}

@@ -1,0 +1,130 @@
+"""AOT entry point: lower TinyCNN to HLO text, one artifact per batch size.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+  model_b{B}.hlo.txt   — lowered forward pass at batch size B
+  manifest.tsv         — batch_size -> artifact path + I/O shapes
+  profile.tsv          — measured CPU ℓ(b) per batch size, plus the fitted
+                         α/β the serving examples use for SLO math
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+BATCH_SIZES = [1, 2, 4, 8, 16, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the Rust side's
+    HLO-text parser silently reads back as *zeros* — the baked-in model
+    weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def measure_latency_ms(fn, args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-clock latency of the jitted fn on this host (ms)."""
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        samples.append((time.perf_counter() - t0) * 1e3)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def fit_affine(batch_sizes, lat_ms):
+    """Least-squares fit ℓ(b) = αb + β."""
+    b = np.asarray(batch_sizes, dtype=np.float64)
+    y = np.asarray(lat_ms, dtype=np.float64)
+    a = np.vstack([b, np.ones_like(b)]).T
+    (alpha, beta), *_ = np.linalg.lstsq(a, y, rcond=None)
+    return float(alpha), float(beta)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--batch-sizes",
+        default=",".join(map(str, BATCH_SIZES)),
+        help="comma-separated batch sizes to lower",
+    )
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument(
+        "--skip-profile", action="store_true", help="skip ℓ(b) measurement"
+    )
+    args = parser.parse_args()
+
+    batch_sizes = [int(s) for s in args.batch_sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    params = model_lib.init_params(args.seed)
+
+    manifest_rows = []
+    profile_rows = []
+    for b in batch_sizes:
+        fn, specs = model_lib.batched_entry(params, b)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        name = f"model_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        in_shape = "x".join(map(str, specs[0].shape))
+        out_shape = f"{b}x{model_lib.NUM_CLASSES}"
+        manifest_rows.append((b, name, in_shape, out_shape))
+        print(f"lowered b={b:<3d} -> {path} ({len(text)} chars)")
+
+        if not args.skip_profile:
+            x = np.zeros(specs[0].shape, np.float32)
+            ms = measure_latency_ms(fn, (jnp.asarray(x),))
+            profile_rows.append((b, ms))
+            print(f"  measured latency: {ms:.3f} ms")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("batch_size\tartifact\tinput_shape\toutput_shape\n")
+        for row in manifest_rows:
+            f.write("\t".join(map(str, row)) + "\n")
+
+    if profile_rows:
+        alpha, beta = fit_affine(*zip(*profile_rows))
+        with open(os.path.join(args.out_dir, "profile.tsv"), "w") as f:
+            f.write(f"# fitted alpha_ms={alpha:.6f} beta_ms={beta:.6f}\n")
+            f.write("batch_size\tlatency_ms\n")
+            for b, ms in profile_rows:
+                f.write(f"{b}\t{ms:.6f}\n")
+        print(f"fitted profile: l(b) = {alpha:.3f}*b + {beta:.3f} ms")
+
+    print(f"wrote {len(manifest_rows)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernel: fused tiled ``matmul + bias + activation``.
+
+This is the dense hot path of the served model (the batched-GEMM that
+dominates DNN inference work and that batching amortizes, per Symphony
+§2.1). The kernel is written TPU-style even though we validate it under
+``interpret=True`` on CPU:
+
+* the grid tiles the output into ``(bm, bn)`` blocks (MXU-shaped,
+  multiples of 128 when the problem is large enough);
+* the K axis is the innermost grid dimension, accumulating partial
+  products into the resident output tile in f32 (the MXU accumulation
+  dtype) — the Pallas revisit-the-same-block idiom, equivalent to a VMEM
+  accumulator;
+* ``BlockSpec`` expresses the HBM->VMEM schedule that a CUDA
+  implementation would express with threadblocks + shared memory
+  (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, activation: str):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-style: f32 accumulation regardless of input dtype.
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "gelu":
+            acc = jax.nn.gelu(acc)
+        elif activation != "none":
+            raise ValueError(f"unknown activation {activation!r}")
+        o_ref[...] = acc
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (prefers MXU multiples)."""
+    if dim <= target:
+        return dim
+    for cand in (target, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "relu",
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+) -> jax.Array:
+    """``activation(x @ w + b)`` as a Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` input activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      activation: ``"relu" | "gelu" | "none"``.
+      bm/bn/bk: tile sizes; defaults pick MXU-friendly divisors (<=128).
+
+    Returns:
+      ``[M, N]`` float32 output.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch: x[{m},{k}] @ w[{k2},{n}]")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm = bm or _pick_block(m, 128)
+    bn = bn or _pick_block(n, 128)
+    bk = bk or _pick_block(k, 128)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"tiles ({bm},{bn},{bk}) must divide ({m},{n},{k})")
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=n_k, activation=activation),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(
+    bm: int, bn: int, bk: int, dtype_bytes: int = 4, double_buffer: bool = True
+) -> int:
+    """Structural VMEM estimate for one grid step (DESIGN.md §Perf).
+
+    x-tile + w-tile + bias-tile (double-buffered for the HBM->VMEM
+    pipeline) + resident f32 output/accumulator tile.
+    """
+    streams = bm * bk * dtype_bytes + bk * bn * dtype_bytes + bn * dtype_bytes
+    if double_buffer:
+        streams *= 2
+    return streams + bm * bn * 4
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of 128x128x128 MXU lanes busy per issue, from tile padding.
+
+    Tiles that are not multiples of 128 waste systolic-array lanes; this is
+    the padding-efficiency upper bound used in EXPERIMENTS.md §Perf.
+    """
+
+    def eff(blk: int) -> float:
+        padded = ((blk + 127) // 128) * 128
+        return blk / padded
+
+    return eff(bm) * eff(bn) * eff(bk)

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the model.
+
+These are the ground truth against which ``pytest python/tests`` checks
+every kernel (hypothesis sweeps shapes/dtypes) and the full forward pass.
+No Pallas, no tiling — just the textbook math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, activation: str = "relu"
+) -> jax.Array:
+    """``activation(x @ w + b)`` in plain jnp (f32 accumulation)."""
+    out = (
+        jnp.dot(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        + b.astype(jnp.float32)
+    )
+    if activation == "relu":
+        return jnp.maximum(out, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(out)
+    if activation == "none":
+        return out
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Row-wise stable softmax in plain jnp."""
+    x = x.astype(jnp.float32)
+    x_max = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - x_max)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def tiny_cnn_ref(params, images: jax.Array) -> jax.Array:
+    """Reference forward pass of the served model (see model.py).
+
+    Mirrors model.tiny_cnn_forward but with jnp-only dense layers +
+    softmax instead of the Pallas kernels.
+    """
+    x = images.astype(jnp.float32)
+    for conv in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x,
+            conv["w"],
+            window_strides=(2, 2),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        x = jnp.maximum(x + conv["b"], 0.0)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool -> [B, C]
+    x = fused_linear_ref(x, params["fc1"]["w"], params["fc1"]["b"], activation="relu")
+    logits = fused_linear_ref(
+        x, params["fc2"]["w"], params["fc2"]["b"], activation="none"
+    )
+    return softmax_ref(logits)

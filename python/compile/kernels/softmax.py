@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: row-wise numerically-stable softmax.
+
+The classifier head of the served model. One grid step owns a block of
+rows; the full feature axis stays resident in VMEM (class counts are
+small for the serving workloads Symphony targets), so the max/sum
+reductions are single-pass — the TPU analogue of a warp-level softmax.
+
+``interpret=True`` for the same reason as ``fused_linear``: the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    x_max = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - x_max)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _pick_rows(m: int, target: int = 128) -> int:
+    if m <= target:
+        return m
+    for cand in (target, 64, 32, 16, 8, 4, 2, 1):
+        if m % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax(x: jax.Array, *, block_rows: Optional[int] = None) -> jax.Array:
+    """Row-wise softmax over the last axis of a 2-D array.
+
+    Args:
+      x: ``[M, N]`` logits.
+      block_rows: rows per grid step (default: divisor of M, <=128).
+
+    Returns:
+      ``[M, N]`` float32 probabilities summing to 1 along the last axis.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"softmax expects 2-D input, got {x.shape}")
+    m, n = x.shape
+    bm = block_rows or _pick_rows(m)
+    if m % bm:
+        raise ValueError(f"block_rows {bm} must divide {m}")
+
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,101 @@
+"""Layer-2 JAX model: ``TinyCNN``, the real DNN served end-to-end.
+
+A small ResNet-style image classifier (strided convs + global average
+pool + Pallas dense head + Pallas softmax). It is deliberately modest —
+the point of this repo is the *scheduler*, and the model exists so the
+runtime executes a genuine compiled DNN per batch rather than a sleep.
+Its latency profile still has the affine ℓ(b) = αb + β shape that
+Symphony's deferred batch scheduling exploits (aot.py measures it into
+``artifacts/profile.tsv``).
+
+Build-time only: ``aot.py`` lowers `tiny_cnn_forward` once per batch size
+to HLO text. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.softmax import softmax
+
+# Architecture constants (kept MXU/VMEM-friendly: dense dims multiple of 64).
+IMAGE_SIZE = 32
+IN_CHANNELS = 3
+CONV_CHANNELS: List[int] = [16, 32, 64]
+HIDDEN = 128
+NUM_CLASSES = 64
+
+
+def init_params(seed: int = 0) -> Dict:
+    """He-initialized parameters for TinyCNN."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict = {"convs": []}
+    cin = IN_CHANNELS
+    for cout in CONV_CHANNELS:
+        key, kw, kb = jax.random.split(key, 3)
+        fan_in = 3 * 3 * cin
+        params["convs"].append(
+            {
+                "w": jax.random.normal(kw, (3, 3, cin, cout), jnp.float32)
+                * jnp.sqrt(2.0 / fan_in),
+                "b": jnp.zeros((cout,), jnp.float32),
+            }
+        )
+        cin = cout
+    key, k1, k2 = jax.random.split(key, 3)
+    params["fc1"] = {
+        "w": jax.random.normal(k1, (cin, HIDDEN), jnp.float32) * jnp.sqrt(2.0 / cin),
+        "b": jnp.zeros((HIDDEN,), jnp.float32),
+    }
+    params["fc2"] = {
+        "w": jax.random.normal(k2, (HIDDEN, NUM_CLASSES), jnp.float32)
+        * jnp.sqrt(2.0 / HIDDEN),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params
+
+
+def tiny_cnn_forward(params: Dict, images: jax.Array) -> jax.Array:
+    """Forward pass: ``[B, 32, 32, 3]`` images -> ``[B, NUM_CLASSES]`` probs.
+
+    Convs/pool are plain XLA ops (they fuse well already); the dense head
+    and softmax go through the Layer-1 Pallas kernels so the whole stack —
+    Pallas -> JAX -> HLO -> Rust/PJRT — is exercised by every batch.
+    """
+    x = images.astype(jnp.float32)
+    for conv in params["convs"]:
+        x = jax.lax.conv_general_dilated(
+            x,
+            conv["w"],
+            window_strides=(2, 2),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        x = jnp.maximum(x + conv["b"], 0.0)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool -> [B, C]
+    x = fused_linear(x, params["fc1"]["w"], params["fc1"]["b"], activation="relu")
+    logits = fused_linear(
+        x, params["fc2"]["w"], params["fc2"]["b"], activation="none"
+    )
+    return softmax(logits)
+
+
+def batched_entry(params: Dict, batch_size: int):
+    """Returns (fn, example_args) for AOT lowering at a fixed batch size.
+
+    Weights are closed over (baked into the HLO as constants) so the Rust
+    runtime feeds only the input batch — matching a serving deployment
+    where weights live on the accelerator.
+    """
+    spec = jax.ShapeDtypeStruct(
+        (batch_size, IMAGE_SIZE, IMAGE_SIZE, IN_CHANNELS), jnp.float32
+    )
+
+    def fn(images):
+        return (tiny_cnn_forward(params, images),)
+
+    return fn, (spec,)

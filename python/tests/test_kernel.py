@@ -1,0 +1,134 @@
+"""Pallas kernels vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes/tilings; every case asserts allclose
+against ref.py. These run at build time (`make test`); nothing here is on
+the serving path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_linear import (
+    fused_linear,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import fused_linear_ref, softmax_ref
+from compile.kernels.softmax import softmax
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 4, 5, 8, 16, 24, 32, 64, 96, 128])
+ACTIVATIONS = st.sampled_from(["relu", "gelu", "none"])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestFusedLinear:
+    @settings(max_examples=40, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=ACTIVATIONS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, act, dtype, seed):
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x, w = _rand(k0, (m, k), dtype), _rand(k1, (k, n), dtype)
+        b = _rand(k2, (n,), dtype)
+        out = fused_linear(x, w, b, activation=act)
+        ref = fused_linear_ref(x, w, b, activation=act)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+        assert out.dtype == jnp.float32
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bm=st.sampled_from([1, 2, 4, 8]),
+        bn=st.sampled_from([2, 4, 8, 16]),
+        bk=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_explicit_tilings(self, bm, bn, bk, seed):
+        """Any tiling that divides the problem gives identical results."""
+        m, k, n = 8, 16, 16
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x, w = _rand(k0, (m, k), jnp.float32), _rand(k1, (k, n), jnp.float32)
+        b = _rand(k2, (n,), jnp.float32)
+        out = fused_linear(x, w, b, bm=bm, bn=bn, bk=bk)
+        ref = fused_linear_ref(x, w, b)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_relu_clamps(self):
+        x = -jnp.ones((4, 4), jnp.float32)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = fused_linear(x, w, b, activation="relu")
+        assert np.all(np.asarray(out) == 0.0)
+
+    def test_none_activation_passes_negatives(self):
+        x = -jnp.ones((4, 4), jnp.float32)
+        w = jnp.eye(4, dtype=jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        out = fused_linear(x, w, b, activation="none")
+        np.testing.assert_allclose(out, np.asarray(x), rtol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        x = jnp.zeros((2, 3))
+        w = jnp.zeros((4, 5))
+        b = jnp.zeros((5,))
+        with pytest.raises(ValueError, match="shape mismatch"):
+            fused_linear(x, w, b)
+
+    def test_bad_tile_raises(self):
+        x = jnp.zeros((4, 4), jnp.float32)
+        w = jnp.zeros((4, 4), jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        with pytest.raises(ValueError, match="must divide"):
+            fused_linear(x, w, b, bm=3)
+
+    def test_vmem_estimate_monotone(self):
+        small = vmem_footprint_bytes(128, 128, 128)
+        big = vmem_footprint_bytes(256, 256, 256)
+        assert small < big
+        # Default serving tiles fit the 16 MiB VMEM budget comfortably.
+        assert small < 16 * 1024 * 1024
+
+    def test_mxu_estimate_bounds(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert 0.0 < mxu_utilization_estimate(32, 64, 128) < 1.0
+
+
+class TestSoftmax:
+    @settings(max_examples=40, deadline=None)
+    @given(m=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, n, dtype, seed):
+        x = _rand(jax.random.PRNGKey(seed), (m, n), dtype)
+        out = softmax(x)
+        np.testing.assert_allclose(out, softmax_ref(x), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_rows_sum_to_one(self, m, n, seed):
+        x = _rand(jax.random.PRNGKey(seed), (m, n), jnp.float32)
+        out = np.asarray(softmax(x))
+        np.testing.assert_allclose(out.sum(-1), np.ones(m), rtol=1e-5)
+        assert np.all(out >= 0.0)
+
+    def test_stability_large_logits(self):
+        """No overflow for logits around +-1e4 (the stable-max trick)."""
+        x = jnp.array([[1e4, 1e4 - 1.0], [-1e4, -1e4 + 1.0]], jnp.float32)
+        out = np.asarray(softmax(x))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out.sum(-1), [1.0, 1.0], rtol=1e-5)
+
+    def test_block_rows_tiling(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 8), jnp.float32)
+        full = softmax(x)
+        tiled = softmax(x, block_rows=4)
+        np.testing.assert_allclose(full, tiled, rtol=1e-6)
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError, match="2-D"):
+            softmax(jnp.zeros((2, 2, 2)))

@@ -1,0 +1,96 @@
+"""Layer-2 model tests: shapes, numerics vs ref, AOT round-trip."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.aot import fit_affine, to_hlo_text
+from compile.kernels.ref import tiny_cnn_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model_lib.init_params(seed=0)
+
+
+class TestTinyCNN:
+    @pytest.mark.parametrize("batch", [1, 2, 4, 8])
+    def test_output_shape_and_distribution(self, params, batch):
+        x = jax.random.normal(
+            jax.random.PRNGKey(batch),
+            (batch, model_lib.IMAGE_SIZE, model_lib.IMAGE_SIZE, model_lib.IN_CHANNELS),
+        )
+        out = np.asarray(model_lib.tiny_cnn_forward(params, x))
+        assert out.shape == (batch, model_lib.NUM_CLASSES)
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out.sum(-1), np.ones(batch), rtol=1e-5)
+
+    @pytest.mark.parametrize("batch", [1, 3, 8])
+    def test_matches_pure_jnp_ref(self, params, batch):
+        """Pallas head == jnp head through the full network."""
+        x = jax.random.normal(
+            jax.random.PRNGKey(17 + batch),
+            (batch, model_lib.IMAGE_SIZE, model_lib.IMAGE_SIZE, model_lib.IN_CHANNELS),
+        )
+        out = model_lib.tiny_cnn_forward(params, x)
+        ref = tiny_cnn_ref(params, x)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+    def test_batch_consistency(self, params):
+        """Row i of a batched forward == forward of row i alone."""
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 32, 32, 3))
+        batched = np.asarray(model_lib.tiny_cnn_forward(params, x))
+        for i in range(4):
+            single = np.asarray(model_lib.tiny_cnn_forward(params, x[i : i + 1]))
+            np.testing.assert_allclose(batched[i], single[0], rtol=1e-4, atol=1e-5)
+
+    def test_deterministic_params(self):
+        p1 = model_lib.init_params(seed=42)
+        p2 = model_lib.init_params(seed=42)
+        np.testing.assert_array_equal(p1["fc1"]["w"], p2["fc1"]["w"])
+
+
+class TestAot:
+    def test_lower_to_hlo_text(self, params):
+        fn, specs = model_lib.batched_entry(params, 2)
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        assert "HloModule" in text
+        # Weights are baked in: entry takes exactly one arg (the images).
+        assert "entry_computation_layout={(f32[2,32,32,3]" in text
+        assert "parameter(0)" in text
+
+    def test_entry_runs(self, params):
+        fn, specs = model_lib.batched_entry(params, 2)
+        x = jnp.zeros(specs[0].shape, jnp.float32)
+        (out,) = jax.jit(fn)(x)
+        assert out.shape == (2, model_lib.NUM_CLASSES)
+
+    def test_fit_affine_recovers_profile(self):
+        alpha, beta = fit_affine([1, 2, 4, 8], [1.5 * b + 3.0 for b in [1, 2, 4, 8]])
+        assert abs(alpha - 1.5) < 1e-9
+        assert abs(beta - 3.0) < 1e-9
+
+    def test_manifest_written(self, params, tmp_path=None):
+        """End-to-end aot.main() on a tiny batch list writes all outputs."""
+        import sys
+        from compile import aot
+
+        with tempfile.TemporaryDirectory() as d:
+            argv = sys.argv
+            sys.argv = ["aot", "--out-dir", d, "--batch-sizes", "1,2", "--skip-profile"]
+            try:
+                aot.main()
+            finally:
+                sys.argv = argv
+            assert os.path.exists(os.path.join(d, "model_b1.hlo.txt"))
+            assert os.path.exists(os.path.join(d, "model_b2.hlo.txt"))
+            manifest = open(os.path.join(d, "manifest.tsv")).read()
+            assert "model_b1.hlo.txt" in manifest
+            assert manifest.startswith("batch_size\t")

@@ -1,0 +1,135 @@
+//! `cargo bench --bench bench_ablations` — ablations of the design
+//! choices DESIGN.md calls out:
+//!
+//! 1. overload shedding (drop-head batch gathering) on/off — the
+//!    flat-top property (§3.5);
+//! 2. the network-delay budget Symphony subtracts from its windows
+//!    (§5.6) — too small violates SLOs under jitter, too large wastes
+//!    batch headroom;
+//! 3. Shepherd with and without 3× preemption (§2.2);
+//! 4. batch-size caps on the deferred scheduler.
+
+use symphony::core::model_zoo::{self, GpuKind};
+use symphony::core::time::Micros;
+use symphony::harness::{GoodputExperiment, SystemKind};
+use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
+use symphony::scheduler::shepherd::ShepherdScheduler;
+use symphony::sim::NetworkModel;
+use symphony::util::table::{banner, f1, pct, Table};
+
+fn main() {
+    banner("Ablation 1: overload shedding (flat-top, §3.5)");
+    {
+        let models = model_zoo::resnet_like_variants(10, 100.0, GpuKind::Gtx1080Ti);
+        let exp = GoodputExperiment::new(models, 24).sim_secs(5.0);
+        let mut t = Table::new(vec!["shed", "offered_rps", "goodput", "bad_rate"]);
+        for shed in [true, false] {
+            for load in [9_000.0, 15_000.0, 24_000.0] {
+                let m = exp.run_at(load, &|e: &GoodputExperiment| {
+                    DeferredScheduler::new(
+                        e.models.iter().map(|mm| mm.profile).collect(),
+                        e.num_gpus,
+                        DeferredConfig {
+                            shed,
+                            ..Default::default()
+                        },
+                    )
+                });
+                t.row(vec![
+                    shed.to_string(),
+                    f1(load),
+                    f1(m.goodput()),
+                    pct(m.bad_fraction()),
+                ]);
+            }
+        }
+        t.emit("ablation_shedding");
+    }
+
+    banner("Ablation 2: network-delay budget vs actual jitter (§5.6)");
+    {
+        let models = model_zoo::resnet_like_variants(10, 25.0, GpuKind::Gtx1080Ti);
+        let mut t = Table::new(vec!["budget_us", "network", "goodput"]);
+        for (net, label) in [
+            (NetworkModel::Rdma, "rdma"),
+            (
+                NetworkModel::Constant {
+                    latency: Micros(2_000),
+                },
+                "const2ms",
+            ),
+        ] {
+            for budget_us in [0u64, 33, 500, 2_000, 5_000] {
+                let exp = GoodputExperiment::new(models.clone(), 16)
+                    .network(net)
+                    .sim_secs(4.0);
+                let g = exp
+                    .goodput(|e| {
+                        let cfg = DeferredConfig {
+                            net_bound: Micros(budget_us),
+                            ..Default::default()
+                        };
+                        DeferredScheduler::new(
+                            e.models.iter().map(|mm| mm.profile).collect(),
+                            e.num_gpus,
+                            cfg,
+                        )
+                    })
+                    .goodput;
+                t.row(vec![budget_us.to_string(), label.to_string(), f1(g)]);
+            }
+        }
+        t.emit("ablation_netbudget");
+    }
+
+    banner("Ablation 3: Shepherd preemption on/off (§2.2)");
+    {
+        let models = model_zoo::resnet_like_variants(8, 25.0, GpuKind::Gtx1080Ti);
+        let mut t = Table::new(vec!["preemption", "goodput", "wasted_batches"]);
+        for pre in [true, false] {
+            let exp = GoodputExperiment::new(models.clone(), 16)
+                .gamma_shape(0.2)
+                .sim_secs(5.0);
+            let res = exp.goodput(|e| {
+                let mut s = ShepherdScheduler::new(
+                    e.models.iter().map(|mm| mm.profile).collect(),
+                    e.num_gpus,
+                );
+                s.preemption = pre;
+                s
+            });
+            t.row(vec![
+                pre.to_string(),
+                f1(res.goodput),
+                res.metrics.preempted_batches.to_string(),
+            ]);
+        }
+        t.emit("ablation_preemption");
+    }
+
+    banner("Ablation 4: deferred batch-size cap");
+    {
+        let model = model_zoo::resnet50_table2();
+        let mut t = Table::new(vec!["max_batch", "goodput"]);
+        for cap in [0u32, 4, 8, 16, 32] {
+            let exp = GoodputExperiment::new(vec![model.clone()], 8).sim_secs(5.0);
+            let g = exp
+                .goodput(|e| {
+                    DeferredScheduler::new(
+                        e.models.iter().map(|mm| mm.profile).collect(),
+                        e.num_gpus,
+                        DeferredConfig {
+                            max_batch: cap,
+                            ..Default::default()
+                        },
+                    )
+                })
+                .goodput;
+            t.row(vec![
+                if cap == 0 { "none".into() } else { cap.to_string() },
+                f1(g),
+            ]);
+        }
+        t.emit("ablation_batchcap");
+    }
+}

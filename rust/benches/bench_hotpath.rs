@@ -1,0 +1,135 @@
+//! `cargo bench --bench bench_hotpath` — microbenchmarks of the hot
+//! paths (§Perf): discrete-event engine event rate, deferred-scheduler
+//! operation cost, candidate-window math, and the RNG. These are the
+//! numbers the EXPERIMENTS.md §Perf iteration log tracks.
+
+use std::time::Instant;
+
+use symphony::core::model_zoo;
+use symphony::core::time::Micros;
+use symphony::harness::{GoodputExperiment, SystemKind};
+use symphony::util::rng::Rng;
+use symphony::util::table::{banner, Table};
+
+fn time_it<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    banner("Hot-path microbenchmarks (§Perf)");
+    let mut table = Table::new(vec!["bench", "metric", "value"]);
+
+    // 1. Simulation event rate: 1 model, 8 GPUs, heavy load.
+    {
+        let model = model_zoo::resnet50_table2();
+        let exp = GoodputExperiment::new(vec![model], 8).sim_secs(20.0);
+        let mut events = 0u64;
+        let secs = time_it(|| {
+            let spec = symphony::workload::WorkloadSpec::new(exp.models.clone(), 5_000.0)
+                .seed(3);
+            let cfg = symphony::sim::SimConfig::new(8, Micros::from_secs_f64(20.0))
+                .samples(false);
+            let engine = symphony::sim::Engine::new(
+                spec.build(),
+                SystemKind::Symphony.build(&exp.models, 8, Micros::ZERO),
+                cfg,
+            );
+            let res = engine.run();
+            events = res.events_processed
+                + res.metrics.total_finished();
+        });
+        table.row(vec![
+            "sim_engine".to_string(),
+            "events_per_sec".to_string(),
+            format!("{:.0}", events as f64 / secs),
+        ]);
+        table.row(vec![
+            "sim_engine".to_string(),
+            "sim_seconds_per_wall_second".to_string(),
+            format!("{:.1}", 20.0 / secs),
+        ]);
+    }
+
+    // 2. Scheduler ops: requests through the deferred scheduler alone
+    //    (no engine), measuring per-request handler cost.
+    {
+        use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
+        use symphony::scheduler::Scheduler;
+        let profile = symphony::core::profile::LatencyProfile::new(1.0, 5.0);
+        let mut sched = DeferredScheduler::new(vec![profile; 16], 64, DeferredConfig::default());
+        let n = 2_000_000u64;
+        let mut out = Vec::new();
+        let secs = time_it(|| {
+            for i in 0..n {
+                let t = Micros(i * 3);
+                out.clear();
+                sched.on_request(
+                    symphony::core::types::Request {
+                        id: symphony::core::types::RequestId(i),
+                        model: symphony::core::types::ModelId((i % 16) as u32),
+                        arrival: t,
+                        deadline: t + Micros(100_000),
+                    },
+                    t,
+                    &mut out,
+                );
+                // Periodically free a GPU so queues drain.
+                if i % 16 == 0 {
+                    out.clear();
+                    sched.on_gpu_free(
+                        symphony::core::types::GpuId((i / 16 % 64) as u32),
+                        t,
+                        &mut out,
+                    );
+                }
+            }
+        });
+        table.row(vec![
+            "deferred_scheduler".to_string(),
+            "on_request_per_sec".to_string(),
+            format!("{:.0}", n as f64 / secs),
+        ]);
+    }
+
+    // 3. Window math: ℓ(b), max_batch_within.
+    {
+        let p = symphony::core::profile::LatencyProfile::new(1.053, 5.072);
+        let n = 10_000_000u64;
+        let mut acc = 0u64;
+        let secs = time_it(|| {
+            for i in 0..n {
+                acc = acc.wrapping_add(
+                    p.max_batch_within(Micros(10_000 + (i % 50_000))) as u64
+                );
+            }
+        });
+        assert!(acc > 0);
+        table.row(vec![
+            "profile_math".to_string(),
+            "max_batch_within_per_sec".to_string(),
+            format!("{:.0}", n as f64 / secs),
+        ]);
+    }
+
+    // 4. RNG throughput (workload generation feeds every sweep).
+    {
+        let mut rng = Rng::new(1);
+        let n = 20_000_000u64;
+        let mut acc = 0.0f64;
+        let secs = time_it(|| {
+            for _ in 0..n {
+                acc += rng.exp1();
+            }
+        });
+        assert!(acc > 0.0);
+        table.row(vec![
+            "rng".to_string(),
+            "exp_samples_per_sec".to_string(),
+            format!("{:.0}", n as f64 / secs),
+        ]);
+    }
+
+    table.emit("bench_hotpath");
+}

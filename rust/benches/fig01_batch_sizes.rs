@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig01_batch_sizes` — regenerates the paper's
+//! Figure 1: batch size distribution.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 1: batch size distribution");
+    let t0 = std::time::Instant::now();
+    experiments::fig01_batch_sizes().emit("fig01_batch_sizes");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

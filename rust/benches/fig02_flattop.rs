@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig02_flattop` — regenerates the paper's
+//! Figure 2: goodput stability + load-proportional GPU usage.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 2: goodput stability + load-proportional GPU usage");
+    let t0 = std::time::Instant::now();
+    experiments::fig02_flattop().emit("fig02_flattop");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

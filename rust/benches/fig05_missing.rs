@@ -1,0 +1,33 @@
+//! `cargo bench --bench fig05_missing` — reproduces Figure 5: reaction
+//! to three missing requests (R13–R15). Eager scheduling degrades into
+//! small batches and drops; deferred scheduling idles briefly and
+//! regains the staggered pattern.
+
+use symphony::core::time::Micros;
+use symphony::harness::experiments::{render_trace, worked_example_workload};
+use symphony::harness::SystemKind;
+use symphony::sim::{Engine, SimConfig};
+use symphony::util::table::{banner, Table};
+
+fn main() {
+    banner("Figure 5: reaction to three missing requests");
+    let mut table = Table::new(vec![
+        "system", "batches", "good", "dropped", "median_batch",
+    ]);
+    for sys in [SystemKind::Eager, SystemKind::Symphony] {
+        let (models, workload) = worked_example_workload(72, true);
+        let cfg = SimConfig::new(3, Micros::from_secs_f64(0.1)).trace(true);
+        let res = Engine::new(workload, sys.build(&models, 3, Micros::ZERO), cfg).run();
+        println!("\n--- {} ---", sys.label());
+        print!("{}", render_trace(&res.trace, 3, 55.0));
+        table.row(vec![
+            sys.label(),
+            res.trace.len().to_string(),
+            res.metrics.per_model[0].good.to_string(),
+            res.metrics.per_model[0].dropped.to_string(),
+            res.metrics.per_model[0].median_batch().to_string(),
+        ]);
+    }
+    println!();
+    table.emit("fig05_missing");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig06a_betaalpha` — regenerates the paper's
+//! Figure 6a: eager vs deferred across batching-effect strength.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 6a: eager vs deferred across batching-effect strength");
+    let t0 = std::time::Instant::now();
+    experiments::fig06a_betaalpha().emit("fig06a_betaalpha");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig06b_timeout` — regenerates the paper's
+//! Figure 6b: timeout-based batch scheduling comparison.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 6b: timeout-based batch scheduling comparison");
+    let t0 = std::time::Instant::now();
+    experiments::fig06b_timeout().emit("fig06b_timeout");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig07_sweep` — regenerates the paper's
+//! Figure 7: synthetic-workload sweep (SYMPHONY_FULL_SWEEP=1 for the full 5880-config grid).
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 7: synthetic-workload sweep (SYMPHONY_FULL_SWEEP=1 for the full 5880-config grid)");
+    let t0 = std::time::Instant::now();
+    experiments::fig07_sweep().emit("fig07_sweep");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

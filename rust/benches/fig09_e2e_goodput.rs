@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig09_e2e_goodput` — regenerates the paper's
+//! Figure 9: end-to-end goodput on the model zoo (64 GPUs).
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 9: end-to-end goodput on the model zoo (64 GPUs)");
+    let t0 = std::time::Instant::now();
+    experiments::fig09_e2e_goodput().emit("fig09_e2e_goodput");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig10_min_gpus` — regenerates the paper's
+//! Figure 10: minimum GPUs for 15k RPS.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 10: minimum GPUs for 15k RPS");
+    let t0 = std::time::Instant::now();
+    experiments::fig10_min_gpus().emit("fig10_min_gpus");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig11_workload_chars` — regenerates the paper's
+//! Figure 11: SLO x popularity x arrival-process grid.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 11: SLO x popularity x arrival-process grid");
+    let t0 = std::time::Instant::now();
+    experiments::fig11_workload_chars().emit("fig11_workload_chars");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

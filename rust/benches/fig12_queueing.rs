@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig12_queueing` — regenerates the paper's
+//! Figure 12: queueing delay quantiles.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 12: queueing delay quantiles");
+    let t0 = std::time::Instant::now();
+    experiments::fig12_queueing().emit("fig12_queueing");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

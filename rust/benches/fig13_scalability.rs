@@ -1,0 +1,124 @@
+//! `cargo bench --bench fig13_scalability` — Figure 13 (left): the
+//! multithreaded coordinator's request throughput vs the number of
+//! ModelThreads, with the RankThread shared (the §5.5 scheduler-only
+//! benchmark: no network messages, no real GPUs — requests and GPUs are
+//! in-process objects). Also runs the Figure 13 (right) goodput-vs-GPUs
+//! simulation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use symphony::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use symphony::core::profile::LatencyProfile;
+use symphony::core::time::Micros;
+use symphony::core::types::{ModelId, Request, RequestId};
+use symphony::harness::experiments;
+use symphony::util::table::{banner, Table};
+
+/// Drive `n_models` ModelThreads at line rate for `dur`; return req/s.
+fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f64 {
+    let profile = LatencyProfile::new(1.0, 5.0);
+    // Backend sinks: a drain thread per GPU channel (batches discarded).
+    let mut backend_txs = Vec::new();
+    let mut drains = Vec::new();
+    for _ in 0..num_gpus {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        drains.push(std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                if matches!(msg, ToBackend::Shutdown) {
+                    break;
+                }
+            }
+        }));
+    }
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let comp_drain = std::thread::spawn(move || while comp_rx.recv().is_ok() {});
+
+    let coord = Coordinator::spawn(
+        CoordinatorConfig {
+            profiles: vec![profile; n_models],
+            num_gpus,
+            net_bound: Micros::ZERO,
+            exec_margin: Micros::ZERO,
+        },
+        backend_txs.clone(),
+        comp_tx,
+    );
+
+    // Load generators: one feeder thread per ModelThread, submitting as
+    // fast as the channel accepts (line rate), SLO 100 ms.
+    let stop = Arc::new(AtomicBool::new(false));
+    let clock = coord.clock;
+    let coord = Arc::new(coord);
+    let mut feeders = Vec::new();
+    for m in 0..n_models {
+        let stop = stop.clone();
+        let coord = coord.clone();
+        feeders.push(std::thread::spawn(move || {
+            let slo = Micros::from_millis_f64(100.0);
+            let mut sent = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let now = clock.now();
+                coord.submit(Request {
+                    id: RequestId((m as u64) << 40 | sent),
+                    model: ModelId(m as u32),
+                    arrival: now,
+                    deadline: now + slo,
+                });
+                sent += 1;
+            }
+            sent
+        }));
+    }
+    std::thread::sleep(dur);
+    stop.store(true, Ordering::Relaxed);
+    let submitted: u64 = feeders.into_iter().map(|f| f.join().unwrap()).sum();
+    let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
+    let (processed, _grants) = coord.shutdown();
+    for tx in &backend_txs {
+        let _ = tx.send(ToBackend::Shutdown);
+    }
+    for d in drains {
+        let _ = d.join();
+    }
+    drop(comp_drain);
+    let _ = submitted;
+    processed as f64 / dur.as_secs_f64()
+}
+
+fn main() {
+    banner("Figure 13 (left): scheduler multicore scalability");
+    let dur = Duration::from_millis(800);
+    let mut table = Table::new(vec![
+        "model_threads", "gpus", "requests_per_sec", "speedup_vs_1",
+    ]);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    let mut base = 0.0;
+    let mut counts = vec![1usize, 2, 4, 8, 16];
+    counts.retain(|&c| c <= cores.max(4));
+    for &n in &counts {
+        for &gpus in &[64usize, 1024] {
+            let tput = coordinator_throughput(n, gpus, dur);
+            if n == 1 && gpus == 64 {
+                base = tput;
+            }
+            table.row(vec![
+                n.to_string(),
+                gpus.to_string(),
+                format!("{tput:.0}"),
+                format!("{:.2}x", tput / base.max(1.0)),
+            ]);
+        }
+    }
+    table.emit("fig13_scalability");
+
+    banner("Figure 13 (right): goodput vs number of GPUs");
+    let t0 = Instant::now();
+    experiments::fig13_goodput_vs_gpus().emit("fig13_gpus");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig14_network` — regenerates the paper's
+//! Figure 14: network latency sensitivity.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 14: network latency sensitivity");
+    let t0 = std::time::Instant::now();
+    experiments::fig14_network().emit("fig14_network");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

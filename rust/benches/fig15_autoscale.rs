@@ -1,0 +1,20 @@
+//! `cargo bench --bench fig15_autoscale` — Figure 15: a changing
+//! workload (24 models, synthetic diurnal+burst rate traces) on a
+//! 512-GPU emulated cluster with the §3.5 autoscaling controller in the
+//! loop: offered load, active GPUs, bad rate, and scaling advice over
+//! time.
+
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 15: changing workload on a 512-GPU cluster");
+    let t0 = std::time::Instant::now();
+    let secs = if std::env::var("SYMPHONY_FULL_SWEEP").is_ok() {
+        1200.0
+    } else {
+        180.0
+    };
+    experiments::fig15_autoscale(secs, 512).emit("fig15_autoscale");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

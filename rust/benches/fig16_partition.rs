@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig16_partition` — regenerates the paper's
+//! Figure 16: MILP-style partitioning vs random search.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 16: MILP-style partitioning vs random search");
+    let t0 = std::time::Instant::now();
+    experiments::fig16_partition(20, 300).emit("fig16_partition");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench fig17_incast` — regenerates the paper's
+//! Figure 17: RDMA vs TCP incast latency distributions.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Figure 17: RDMA vs TCP incast latency distributions");
+    let t0 = std::time::Instant::now();
+    experiments::fig17_incast(200_000).emit("fig17_incast");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench table2_analytical` — regenerates the paper's
+//! Table 2: analytical batching model vs measured goodput.
+use symphony::harness::experiments;
+use symphony::util::table::banner;
+
+fn main() {
+    banner("Table 2: analytical batching model vs measured goodput");
+    let t0 = std::time::Instant::now();
+    experiments::table2_analytical().emit("table2_analytical");
+    println!("[{}s]", t0.elapsed().as_secs());
+}

@@ -1,0 +1,196 @@
+//! Autoscaling support (§3.5, §5.4, Fig 15).
+//!
+//! Symphony's *flat-top* behavior makes two signals trustworthy:
+//! * **bad rate** `r` under overload ⇒ allocate `N·r/(1−r)` GPUs;
+//! * **GPU idle fraction** `f` under underload ⇒ deallocate `N·f` GPUs.
+//!
+//! The [`AutoscaleController`] turns windowed measurements of those two
+//! signals into advice; the Fig 15 driver applies the advice to the
+//! emulated cluster (removing only idle, highest-id GPUs — which
+//! Symphony's min-id dispatch rule keeps idle on purpose).
+
+use crate::core::time::Micros;
+
+/// Windowed measurements the controller consumes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowStats {
+    pub good: u64,
+    pub bad: u64,
+    /// Mean busy fraction across active GPUs in the window, 0..1.
+    pub busy_fraction: f64,
+    pub active_gpus: usize,
+}
+
+impl WindowStats {
+    pub fn bad_rate(&self) -> f64 {
+        let t = self.good + self.bad;
+        if t == 0 {
+            0.0
+        } else {
+            self.bad as f64 / t as f64
+        }
+    }
+
+    pub fn idle_fraction(&self) -> f64 {
+        (1.0 - self.busy_fraction).clamp(0.0, 1.0)
+    }
+}
+
+/// The controller's advice for the next epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Cluster is sized right.
+    Hold,
+    /// Add this many GPUs.
+    Allocate(usize),
+    /// Remove this many (idle) GPUs.
+    Deallocate(usize),
+}
+
+/// Controller configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Bad-rate threshold that triggers allocation (§3.5: "if the bad
+    /// rate r is above a threshold").
+    pub bad_rate_threshold: f64,
+    /// Idle-fraction threshold that triggers deallocation.
+    pub idle_threshold: f64,
+    /// Never shrink below this many GPUs.
+    pub min_gpus: usize,
+    /// Never grow beyond this many GPUs.
+    pub max_gpus: usize,
+    /// Decision epoch.
+    pub epoch: Micros,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            bad_rate_threshold: 0.01,
+            idle_threshold: 0.10,
+            min_gpus: 1,
+            max_gpus: 4096,
+            epoch: Micros::from_secs_f64(10.0),
+        }
+    }
+}
+
+/// The §3.5 controller.
+#[derive(Clone, Debug)]
+pub struct AutoscaleController {
+    pub cfg: AutoscaleConfig,
+}
+
+impl AutoscaleController {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        AutoscaleController { cfg }
+    }
+
+    /// Advice from this window's stats.
+    pub fn advise(&self, w: &WindowStats) -> Advice {
+        let n = w.active_gpus;
+        let r = w.bad_rate();
+        if r > self.cfg.bad_rate_threshold {
+            // Allocate N·r/(1−r), at least 1, capped.
+            let want = ((n as f64 * r / (1.0 - r)).ceil() as usize).max(1);
+            let room = self.cfg.max_gpus.saturating_sub(n);
+            let add = want.min(room);
+            return if add == 0 { Advice::Hold } else { Advice::Allocate(add) };
+        }
+        let f = w.idle_fraction();
+        if f > self.cfg.idle_threshold {
+            // Deallocate N·f, keeping min_gpus.
+            let want = (n as f64 * f).floor() as usize;
+            let room = n.saturating_sub(self.cfg.min_gpus);
+            let del = want.min(room);
+            return if del == 0 {
+                Advice::Hold
+            } else {
+                Advice::Deallocate(del)
+            };
+        }
+        Advice::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> AutoscaleController {
+        AutoscaleController::new(AutoscaleConfig::default())
+    }
+
+    #[test]
+    fn overload_allocates_proportionally() {
+        // 10% bad on 24 GPUs: N·r/(1−r) = 24·0.1/0.9 ≈ 2.67 → 3.
+        let w = WindowStats {
+            good: 900,
+            bad: 100,
+            busy_fraction: 1.0,
+            active_gpus: 24,
+        };
+        assert_eq!(ctl().advise(&w), Advice::Allocate(3));
+    }
+
+    #[test]
+    fn underload_deallocates_idle_share() {
+        // 50% idle on 24 GPUs → remove 12.
+        let w = WindowStats {
+            good: 1000,
+            bad: 0,
+            busy_fraction: 0.5,
+            active_gpus: 24,
+        };
+        assert_eq!(ctl().advise(&w), Advice::Deallocate(12));
+    }
+
+    #[test]
+    fn balanced_holds() {
+        let w = WindowStats {
+            good: 1000,
+            bad: 2,
+            busy_fraction: 0.95,
+            active_gpus: 24,
+        };
+        assert_eq!(ctl().advise(&w), Advice::Hold);
+    }
+
+    #[test]
+    fn respects_min_and_max() {
+        let c = AutoscaleController::new(AutoscaleConfig {
+            min_gpus: 4,
+            max_gpus: 8,
+            ..Default::default()
+        });
+        let idle = WindowStats {
+            good: 100,
+            bad: 0,
+            busy_fraction: 0.0,
+            active_gpus: 4,
+        };
+        assert_eq!(c.advise(&idle), Advice::Hold, "won't shrink below min");
+        let over = WindowStats {
+            good: 100,
+            bad: 100,
+            busy_fraction: 1.0,
+            active_gpus: 8,
+        };
+        assert_eq!(c.advise(&over), Advice::Hold, "won't grow past max");
+    }
+
+    #[test]
+    fn empty_window_holds() {
+        let w = WindowStats {
+            good: 0,
+            bad: 0,
+            busy_fraction: 0.0,
+            active_gpus: 8,
+        };
+        // No traffic: idle-driven shrink is allowed.
+        match ctl().advise(&w) {
+            Advice::Deallocate(n) => assert!(n <= 7),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Wall-clock mapping for the real-time coordinator: `Micros` since an
+//! epoch `Instant`, so the same window math drives simulation and
+//! serving.
+
+use std::time::Instant;
+
+use crate::core::time::Micros;
+
+/// Monotonic clock with a fixed origin.
+#[derive(Clone, Copy, Debug)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock {
+            origin: Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn now(&self) -> Micros {
+        Micros(self.origin.elapsed().as_micros() as u64)
+    }
+
+    /// Duration from now until `t` (zero if already past).
+    pub fn until(&self, t: Micros) -> std::time::Duration {
+        let now = self.now();
+        std::time::Duration::from_micros(t.0.saturating_sub(now.0))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone() {
+        let c = Clock::new();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = c.now();
+        assert!(b > a);
+        assert!(b.0 - a.0 >= 1_500, "elapsed {}", b.0 - a.0);
+    }
+
+    #[test]
+    fn until_saturates() {
+        let c = Clock::new();
+        assert_eq!(c.until(Micros::ZERO), std::time::Duration::ZERO);
+        let d = c.until(Micros(10_000_000));
+        assert!(d.as_secs_f64() > 9.0);
+    }
+}

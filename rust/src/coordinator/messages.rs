@@ -1,0 +1,68 @@
+//! Message vocabulary between the coordinator's threads (Figure 18):
+//! ModelThread ⇄ RankThread ⇄ (timers), ModelThread → backend workers,
+//! backend workers → completion collector.
+
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId, Request};
+
+/// A candidate's schedulable window as registered with the RankThread
+/// (`inform_candidate`).
+#[derive(Clone, Copy, Debug)]
+pub struct CandWindow {
+    pub exec: Micros,
+    pub latest: Micros,
+    pub size: u32,
+}
+
+/// RankThread / frontend → ModelThread.
+#[derive(Debug)]
+pub enum ToModel {
+    /// A new inference request for this model (frontend → MT, step ②).
+    Request(Request),
+    /// "GPU Granted" (RankThread → MT): finalize the batch and dispatch
+    /// it to `gpu` immediately (§4.2).
+    Granted { gpu: GpuId },
+    /// The RankThread discarded this model's candidate (its window
+    /// expired un-granted); recompute and re-register.
+    Revalidate,
+    Shutdown,
+}
+
+/// ModelThread → RankThread.
+#[derive(Debug)]
+pub enum ToRank {
+    /// Register / replace / clear this model's candidate.
+    Candidate {
+        model: ModelId,
+        cand: Option<CandWindow>,
+    },
+    /// The granted GPU will be busy until `free_at` (`inform_gpu`).
+    GpuBusyUntil { gpu: GpuId, free_at: Micros },
+    Shutdown,
+}
+
+/// ModelThread → backend worker (step ④: batch metadata to the backend,
+/// which in the paper then RDMA-reads inputs from frontends ⑤).
+#[derive(Debug)]
+pub enum ToBackend {
+    Execute {
+        model: ModelId,
+        requests: Vec<Request>,
+        dispatched_at: Micros,
+    },
+    Shutdown,
+}
+
+/// Backend / ModelThread → metrics collector.
+#[derive(Debug)]
+pub enum Completion {
+    Batch {
+        gpu: GpuId,
+        model: ModelId,
+        requests: Vec<Request>,
+        dispatched_at: Micros,
+        start: Micros,
+        end: Micros,
+    },
+    Dropped(Vec<Request>),
+}

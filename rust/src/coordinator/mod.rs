@@ -1,0 +1,226 @@
+//! The multithreaded centralized scheduler (§4.2, Fig 18): independent
+//! **ModelThreads** (request-rate work, embarrassingly parallel) and a
+//! single **RankThread** (batch-rate matchmaking) — the architecture
+//! that lets Symphony's scheduler process millions of requests per
+//! second (Fig 13 left).
+//!
+//! The coordinator is backend-agnostic: callers supply one `ToBackend`
+//! channel per GPU (real PJRT executors in [`crate::serve`], sleep
+//! emulators, or sinks for scheduler-only benchmarks).
+
+pub mod clock;
+pub mod messages;
+pub mod model_thread;
+pub mod rank_thread;
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::core::profile::LatencyProfile;
+use crate::core::time::Micros;
+use crate::core::types::{ModelId, Request};
+pub use clock::Clock;
+pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
+use model_thread::ModelThread;
+use rank_thread::RankThread;
+
+/// Configuration of a running coordinator.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub profiles: Vec<LatencyProfile>,
+    pub num_gpus: usize,
+    /// Network-delay budget subtracted from candidate windows (§5.6).
+    pub net_bound: Micros,
+    /// Safety margin added to busy estimates sent to the RankThread.
+    pub exec_margin: Micros,
+}
+
+/// A live coordinator: RankThread + one ModelThread per model.
+pub struct Coordinator {
+    pub clock: Clock,
+    model_txs: Vec<Sender<ToModel>>,
+    rank_tx: Sender<ToRank>,
+    model_handles: Vec<JoinHandle<u64>>,
+    rank_handle: Option<JoinHandle<u64>>,
+}
+
+impl Coordinator {
+    /// Spawn the scheduler threads. `backends[g]` receives the batches
+    /// dispatched to GPU `g`; `completions` receives drop notices from
+    /// ModelThreads (backends send their own batch completions).
+    pub fn spawn(
+        cfg: CoordinatorConfig,
+        backends: Vec<Sender<ToBackend>>,
+        completions: Sender<Completion>,
+    ) -> Self {
+        assert_eq!(backends.len(), cfg.num_gpus, "one backend per GPU");
+        let clock = Clock::new();
+        let (rank_tx, rank_rx) = channel::<ToRank>();
+
+        let mut model_txs = Vec::new();
+        let mut model_rx_store = Vec::new();
+        for _ in 0..cfg.profiles.len() {
+            let (tx, rx) = channel::<ToModel>();
+            model_txs.push(tx);
+            model_rx_store.push(rx);
+        }
+
+        let rank = RankThread {
+            clock,
+            inbox: rank_rx,
+            model_txs: model_txs.clone(),
+            num_gpus: cfg.num_gpus,
+        };
+        let rank_handle = std::thread::Builder::new()
+            .name("rank-thread".into())
+            .spawn(move || rank.run())
+            .expect("spawn rank thread");
+
+        let mut model_handles = Vec::new();
+        for (i, rx) in model_rx_store.into_iter().enumerate() {
+            let mt = ModelThread {
+                model: ModelId(i as u32),
+                profile: cfg.profiles[i],
+                clock,
+                inbox: rx,
+                to_rank: rank_tx.clone(),
+                backends: backends.clone(),
+                completions: completions.clone(),
+                net_bound: cfg.net_bound,
+                exec_margin: cfg.exec_margin,
+            };
+            model_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("model-thread-{i}"))
+                    .spawn(move || mt.run())
+                    .expect("spawn model thread"),
+            );
+        }
+
+        Coordinator {
+            clock,
+            model_txs,
+            rank_tx,
+            model_handles,
+            rank_handle: Some(rank_handle),
+        }
+    }
+
+    /// Submit a request (frontend step ②). Arrival/deadline must be on
+    /// this coordinator's clock.
+    pub fn submit(&self, r: Request) {
+        let _ = self.model_txs[r.model.0 as usize].send(ToModel::Request(r));
+    }
+
+    /// Convenience: stamp arrival = now, deadline = now + slo.
+    pub fn submit_now(&self, id: u64, model: ModelId, slo: Micros) {
+        let now = self.clock.now();
+        self.submit(Request {
+            id: crate::core::types::RequestId(id),
+            model,
+            arrival: now,
+            deadline: now + slo,
+        });
+    }
+
+    /// Stop all threads; returns (requests processed, grants issued).
+    pub fn shutdown(mut self) -> (u64, u64) {
+        for tx in &self.model_txs {
+            let _ = tx.send(ToModel::Shutdown);
+        }
+        let processed: u64 = self
+            .model_handles
+            .drain(..)
+            .map(|h| h.join().unwrap_or(0))
+            .sum();
+        let _ = self.rank_tx.send(ToRank::Shutdown);
+        let grants = self
+            .rank_handle
+            .take()
+            .map(|h| h.join().unwrap_or(0))
+            .unwrap_or(0);
+        (processed, grants)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    /// End-to-end through real threads: submit a burst, expect the
+    /// deferred window to group it into one large batch. ℓ is ms-scale
+    /// and `net_bound` budgets for OS-thread wakeup jitter (the paper
+    /// budgets the RDMA p99.99 the same way, §5.6).
+    #[test]
+    fn coordinator_batches_a_burst() {
+        let profile = LatencyProfile::new(1.0, 5.0);
+        let (backend_tx, backend_rx) = channel::<ToBackend>();
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile],
+                num_gpus: 1,
+                net_bound: Micros::from_millis_f64(2.0),
+                exec_margin: Micros::from_millis_f64(0.5),
+            },
+            vec![backend_tx],
+            comp_tx,
+        );
+        for i in 0..8 {
+            coord.submit_now(i, ModelId(0), Micros::from_millis_f64(100.0));
+        }
+        let msg = backend_rx
+            .recv_timeout(Duration::from_millis(1_000))
+            .expect("batch dispatched");
+        match msg {
+            ToBackend::Execute { requests, .. } => {
+                assert!(
+                    requests.len() >= 6,
+                    "expected a large batch, got {}",
+                    requests.len()
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let (processed, grants) = coord.shutdown();
+        assert_eq!(processed, 8);
+        assert!(grants >= 1);
+    }
+
+    /// Two models, one GPU: both get served. The second model's looser
+    /// SLO leaves room for its deferred batch after the first model's
+    /// batch finishes.
+    #[test]
+    fn coordinator_multiplexes_models() {
+        let profile = LatencyProfile::new(1.0, 5.0);
+        let (backend_tx, backend_rx) = channel::<ToBackend>();
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile, profile],
+                num_gpus: 1,
+                net_bound: Micros::from_millis_f64(2.0),
+                exec_margin: Micros::from_millis_f64(0.5),
+            },
+            vec![backend_tx],
+            comp_tx,
+        );
+        for i in 0..4 {
+            coord.submit_now(i, ModelId(0), Micros::from_millis_f64(40.0));
+            coord.submit_now(100 + i, ModelId(1), Micros::from_millis_f64(100.0));
+        }
+        let mut seen = std::collections::HashSet::new();
+        let deadline = std::time::Instant::now() + Duration::from_millis(800);
+        while seen.len() < 2 && std::time::Instant::now() < deadline {
+            if let Ok(ToBackend::Execute { model, .. }) =
+                backend_rx.recv_timeout(Duration::from_millis(100))
+            {
+                seen.insert(model);
+            }
+        }
+        assert_eq!(seen.len(), 2, "both models dispatched");
+        coord.shutdown();
+    }
+}

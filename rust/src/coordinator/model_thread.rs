@@ -1,0 +1,214 @@
+//! ModelThread (§4.2, Fig 18): one thread per model. "It accesses only
+//! model-local information and updates the candidate. The candidate is
+//! then sent to the RankThread." On "GPU Granted" it finalizes the batch
+//! and sends it to the backend immediately.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::coordinator::clock::Clock;
+use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
+use crate::core::profile::LatencyProfile;
+use crate::core::time::Micros;
+use crate::core::types::{ModelId, Request};
+
+pub struct ModelThread {
+    pub model: ModelId,
+    pub profile: LatencyProfile,
+    pub clock: Clock,
+    pub inbox: Receiver<ToModel>,
+    pub to_rank: Sender<ToRank>,
+    /// One channel per GPU backend worker.
+    pub backends: Vec<Sender<ToBackend>>,
+    pub completions: Sender<Completion>,
+    /// Network-delay budget (§5.6).
+    pub net_bound: Micros,
+    /// Dispatch-overhead margin added to the busy estimate sent to the
+    /// RankThread (keeps real execution from overrunning its slot).
+    pub exec_margin: Micros,
+}
+
+impl ModelThread {
+    /// Run until `Shutdown`. Returns the number of requests processed.
+    pub fn run(self) -> u64 {
+        let ModelThread {
+            model,
+            profile,
+            clock,
+            inbox,
+            to_rank,
+            backends,
+            completions,
+            net_bound,
+            exec_margin,
+        } = self;
+        // Track requests by id so drops can report full `Request`s.
+        let mut queue = TrackingQueue::new();
+        let mut processed = 0u64;
+
+        while let Ok(msg) = inbox.recv() {
+            match msg {
+                ToModel::Request(r) => {
+                    processed += 1;
+                    queue.push(r);
+                    let now = clock.now();
+                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
+                    if !dropped.is_empty() {
+                        let _ = completions.send(Completion::Dropped(dropped));
+                    }
+                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                        break;
+                    }
+                }
+                ToModel::Granted { gpu } => {
+                    let now = clock.now();
+                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
+                    if !dropped.is_empty() {
+                        let _ = completions.send(Completion::Dropped(dropped));
+                    }
+                    if let Some(c) = cand {
+                        let batch = queue.take(c.size as usize);
+                        let busy_until = now + profile.latency(c.size) + exec_margin;
+                        let _ = backends[gpu.0 as usize].send(ToBackend::Execute {
+                            model,
+                            requests: batch,
+                            dispatched_at: now,
+                        });
+                        let _ = to_rank.send(ToRank::GpuBusyUntil {
+                            gpu,
+                            free_at: busy_until,
+                        });
+                    } else {
+                        // Nothing left to run; hand the GPU back as free.
+                        let _ = to_rank.send(ToRank::GpuBusyUntil { gpu, free_at: now });
+                    }
+                    // Register the next candidate.
+                    let now = clock.now();
+                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
+                    if !dropped.is_empty() {
+                        let _ = completions.send(Completion::Dropped(dropped));
+                    }
+                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                        break;
+                    }
+                }
+                ToModel::Revalidate => {
+                    let now = clock.now();
+                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
+                    if !dropped.is_empty() {
+                        let _ = completions.send(Completion::Dropped(dropped));
+                    }
+                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                        break;
+                    }
+                }
+                ToModel::Shutdown => break,
+            }
+        }
+        processed
+    }
+}
+
+/// A deadline-ordered queue that returns full `Request`s for drops (the
+/// sim-side `ModelQueue` only tracks ids).
+struct TrackingQueue {
+    q: std::collections::VecDeque<Request>,
+}
+
+impl TrackingQueue {
+    fn new() -> Self {
+        TrackingQueue {
+            q: std::collections::VecDeque::new(),
+        }
+    }
+
+    fn push(&mut self, r: Request) {
+        self.q.push_back(r);
+    }
+
+    fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n.min(self.q.len()))
+            .map(|_| self.q.pop_front().unwrap())
+            .collect()
+    }
+
+    /// Drop hopeless heads, then compute the candidate window.
+    fn candidate(
+        &mut self,
+        profile: &LatencyProfile,
+        now: Micros,
+        net_bound: Micros,
+    ) -> (Option<CandWindow>, Vec<Request>) {
+        let mut dropped = Vec::new();
+        while let Some(front) = self.q.front() {
+            let budget = front.deadline.saturating_sub(now + net_bound);
+            if profile.max_batch_within(budget) == 0 {
+                dropped.push(self.q.pop_front().unwrap());
+            } else {
+                break;
+            }
+        }
+        let Some(front) = self.q.front() else {
+            return (None, dropped);
+        };
+        let budget = front.deadline.saturating_sub(now + net_bound);
+        let b = (profile.max_batch_within(budget) as usize).min(self.q.len()) as u32;
+        let d = front.deadline;
+        let frontrun = d.saturating_sub(profile.latency(b + 1) + net_bound);
+        let latest = d.saturating_sub(profile.latency(b) + net_bound);
+        (
+            Some(CandWindow {
+                exec: frontrun.max(now),
+                latest,
+                size: b,
+            }),
+            dropped,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::RequestId;
+
+    fn req(id: u64, arrival: Micros, deadline: Micros) -> Request {
+        Request {
+            id: RequestId(id),
+            model: ModelId(0),
+            arrival,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn tracking_queue_window_math() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = TrackingQueue::new();
+        for i in 0..4 {
+            q.push(req(
+                i,
+                Micros::from_millis_f64(0.75 * i as f64),
+                Micros::from_millis_f64(12.0 + 0.75 * i as f64),
+            ));
+        }
+        let (cand, dropped) = q.candidate(&p, Micros::from_millis_f64(2.25), Micros::ZERO);
+        assert!(dropped.is_empty());
+        let c = cand.unwrap();
+        assert_eq!(c.size, 4);
+        // frontrun = 12 - ℓ(5) = 2 < now -> exec = now = 2.25ms.
+        assert_eq!(c.exec, Micros::from_millis_f64(2.25));
+        assert_eq!(c.latest, Micros::from_millis_f64(3.0));
+    }
+
+    #[test]
+    fn tracking_queue_drops_expired() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = TrackingQueue::new();
+        q.push(req(0, Micros::ZERO, Micros::from_millis_f64(5.0)));
+        q.push(req(1, Micros::ZERO, Micros::from_millis_f64(50.0)));
+        let (cand, dropped) = q.candidate(&p, Micros::from_millis_f64(1.0), Micros::ZERO);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, RequestId(0));
+        assert_eq!(cand.unwrap().size, 1);
+    }
+}

@@ -1,0 +1,183 @@
+//! RankThread (§4.2, Fig 18): "organizes the global information: GPU
+//! free time, each model's timer, and each GPU's timer. Model-GPU
+//! matchmaking is triggered by the timers." A single RankThread serves
+//! dozens of ModelThreads because it only processes batch-granularity
+//! events, an order of magnitude fewer than request-granularity ones.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use crate::coordinator::clock::Clock;
+use crate::coordinator::messages::{CandWindow, ToModel, ToRank};
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId};
+
+pub struct RankThread {
+    pub clock: Clock,
+    pub inbox: Receiver<ToRank>,
+    pub model_txs: Vec<Sender<ToModel>>,
+    pub num_gpus: usize,
+}
+
+struct State {
+    /// Candidates registered by ModelThreads.
+    cands: BTreeMap<ModelId, CandWindow>,
+    /// Candidates whose exec has passed, by urgency: (latest, model).
+    ready: BTreeSet<(Micros, ModelId)>,
+    /// Candidates waiting for their exec moment: (exec, model).
+    pending: BTreeSet<(Micros, ModelId)>,
+    /// GPUs free right now (min id first — consolidation).
+    free: BTreeSet<GpuId>,
+    /// GPUs that will free at a known time: (free_at, gpu).
+    busy: BTreeSet<(Micros, GpuId)>,
+    /// Leased to a ModelThread, waiting for its GpuBusyUntil.
+    leased: BTreeSet<GpuId>,
+}
+
+impl State {
+    fn unregister(&mut self, m: ModelId) {
+        if let Some(old) = self.cands.remove(&m) {
+            self.ready.remove(&(old.latest, m));
+            self.pending.remove(&(old.exec, m));
+        }
+    }
+
+    fn next_wakeup(&self) -> Option<Micros> {
+        let a = self.pending.iter().next().map(|&(t, _)| t);
+        let b = self.busy.iter().next().map(|&(t, _)| t);
+        match (a, b) {
+            (Some(x), Some(y)) => Some(x.min(y)),
+            (x, y) => x.or(y),
+        }
+    }
+}
+
+impl RankThread {
+    pub fn run(self) -> u64 {
+        let RankThread {
+            clock,
+            inbox,
+            model_txs,
+            num_gpus,
+        } = self;
+        let mut st = State {
+            cands: BTreeMap::new(),
+            ready: BTreeSet::new(),
+            pending: BTreeSet::new(),
+            free: (0..num_gpus as u32).map(GpuId).collect(),
+            busy: BTreeSet::new(),
+            leased: BTreeSet::new(),
+        };
+        let mut grants = 0u64;
+
+        'outer: loop {
+            // 1. Drain the mailbox.
+            loop {
+                match inbox.try_recv() {
+                    Ok(ToRank::Candidate { model, cand }) => {
+                        st.unregister(model);
+                        if let Some(c) = cand {
+                            st.cands.insert(model, c);
+                            st.pending.insert((c.exec, model));
+                        }
+                    }
+                    Ok(ToRank::GpuBusyUntil { gpu, free_at }) => {
+                        st.leased.remove(&gpu);
+                        st.free.remove(&gpu);
+                        st.busy.retain(|&(_, g)| g != gpu);
+                        if free_at <= clock.now() {
+                            st.free.insert(gpu);
+                        } else {
+                            st.busy.insert((free_at, gpu));
+                        }
+                    }
+                    Ok(ToRank::Shutdown) => break 'outer,
+                    Err(_) => break,
+                }
+            }
+
+            let now = clock.now();
+
+            // 2. GPU timers: promote GPUs whose free_at has passed.
+            while let Some(&(t, gpu)) = st.busy.iter().next() {
+                if t > now {
+                    break;
+                }
+                st.busy.remove(&(t, gpu));
+                st.free.insert(gpu);
+            }
+
+            // 3. Model timers: promote candidates whose exec has passed.
+            while let Some(&(t, m)) = st.pending.iter().next() {
+                if t > now {
+                    break;
+                }
+                st.pending.remove(&(t, m));
+                let c = st.cands[&m];
+                st.ready.insert((c.latest, m));
+            }
+
+            // 4. Matchmaking.
+            //    OnModelTimer semantics: a ready candidate takes the
+            //    free GPU with the smallest id. OnGpuTimer semantics:
+            //    among ready candidates the closest `latest` wins. The
+            //    combined loop below pairs (min-latest candidate,
+            //    min-id GPU) until one side is empty — equivalent to
+            //    processing the timers in time order at this instant.
+            while !st.free.is_empty() {
+                let Some(&(latest, m)) = st.ready.iter().next() else {
+                    break;
+                };
+                if latest < now {
+                    // Expired: tell the ModelThread to re-register.
+                    st.unregister(m);
+                    let _ = model_txs[m.0 as usize].send(ToModel::Revalidate);
+                    continue;
+                }
+                let gpu = *st.free.iter().next().unwrap();
+                st.free.remove(&gpu);
+                st.leased.insert(gpu);
+                st.unregister(m);
+                grants += 1;
+                if model_txs[m.0 as usize].send(ToModel::Granted { gpu }).is_err() {
+                    break 'outer;
+                }
+            }
+
+            // 5. Sleep until the next timer or message.
+            let timeout = match st.next_wakeup() {
+                Some(t) => clock.until(t).min(Duration::from_millis(50)),
+                None => Duration::from_millis(50),
+            };
+            match inbox.recv_timeout(timeout) {
+                Ok(msg) => {
+                    // Re-inject and loop (drain handles it).
+                    match msg {
+                        ToRank::Candidate { model, cand } => {
+                            st.unregister(model);
+                            if let Some(c) = cand {
+                                st.cands.insert(model, c);
+                                st.pending.insert((c.exec, model));
+                            }
+                        }
+                        ToRank::GpuBusyUntil { gpu, free_at } => {
+                            st.leased.remove(&gpu);
+                            st.free.remove(&gpu);
+                            st.busy.retain(|&(_, g)| g != gpu);
+                            if free_at <= clock.now() {
+                                st.free.insert(gpu);
+                            } else {
+                                st.busy.insert((free_at, gpu));
+                            }
+                        }
+                        ToRank::Shutdown => break 'outer,
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break 'outer,
+            }
+        }
+        grants
+    }
+}

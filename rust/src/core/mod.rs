@@ -1,0 +1,7 @@
+//! Core domain types: virtual time, identifiers, latency profiles, and
+//! the paper's model zoo (Appendix C).
+
+pub mod model_zoo;
+pub mod profile;
+pub mod time;
+pub mod types;

@@ -1,0 +1,244 @@
+//! The paper's model zoo: latency profiles measured on NVIDIA 1080Ti
+//! (Appendix C, Table 3) and A100 (Table 4), transcribed verbatim.
+//! α/β in milliseconds, SLO in milliseconds. These drive every
+//! emulated-cluster experiment, exactly as in the paper ("we emulate the
+//! execution by simply introducing a delay at the backend").
+
+use crate::core::profile::{LatencyProfile, ModelSpec};
+use crate::core::time::Micros;
+
+/// GPU generation the profile was measured on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GpuKind {
+    Gtx1080Ti,
+    A100,
+}
+
+impl GpuKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuKind::Gtx1080Ti => "1080Ti",
+            GpuKind::A100 => "A100",
+        }
+    }
+}
+
+/// (name, alpha_ms, beta_ms, slo_ms) — Table 3 (NVIDIA 1080Ti).
+pub const TABLE3_1080TI: &[(&str, f64, f64, f64)] = &[
+    ("NASNetMobile", 0.570, 14.348, 33.0),
+    ("MobileNetV3Small", 0.335, 5.350, 20.0),
+    ("DenseNet169", 1.271, 13.618, 37.0),
+    ("DenseNet121", 1.061, 10.312, 29.0),
+    ("DenseNet201", 1.733, 15.687, 45.0),
+    ("EfficientNetV2B0", 1.006, 7.493, 23.0),
+    ("MobileNetV3Large", 0.820, 5.256, 20.0),
+    ("InceptionV3", 1.964, 8.771, 33.0),
+    ("EfficientNetV2B1", 1.661, 7.247, 27.0),
+    ("ResNet50V2", 1.409, 5.947, 23.0),
+    ("ResNet152V2", 3.471, 13.049, 53.0),
+    ("ResNet101V2", 2.438, 9.095, 37.0),
+    ("InceptionResNetV2", 5.090, 18.368, 77.0),
+    ("EfficientNetB0", 1.569, 5.586, 23.0),
+    ("MobileNetV2", 1.180, 3.483, 20.0),
+    ("ResNet101", 3.164, 9.065, 43.0),
+    ("EfficientNetB1", 2.489, 6.674, 33.0),
+    ("ResNet50", 2.050, 5.378, 27.0),
+    ("EfficientNetV2B2", 2.254, 5.896, 29.0),
+    ("VGG19", 3.059, 7.857, 40.0),
+    ("ResNet152", 4.599, 11.212, 59.0),
+    ("MobileNet", 1.009, 2.390, 20.0),
+    ("VGG16", 2.734, 5.786, 33.0),
+    ("EfficientNetB2", 3.446, 5.333, 38.0),
+    ("EfficientNetV2B3", 4.072, 5.981, 44.0),
+    ("NASNetLarge", 17.656, 18.952, 179.0),
+    ("EfficientNetV2S", 8.463, 8.862, 85.0),
+    ("EfficientNetB3", 5.924, 4.849, 57.0),
+    ("EfficientNetV2L", 40.313, 28.208, 378.0),
+    ("EfficientNetV2M", 22.619, 14.786, 210.0),
+    ("EfficientNetB5", 23.435, 10.301, 208.0),
+    ("Xception", 4.751, 2.046, 42.0),
+    ("SSDMobilenet", 23.778, 9.729, 209.0),
+    ("EfficientNetB4", 12.088, 4.412, 105.0),
+    ("BERT", 7.008, 0.159, 56.0),
+];
+
+/// (name, alpha_ms, beta_ms, slo_ms) — Table 4 (NVIDIA A100).
+pub const TABLE4_A100: &[(&str, f64, f64, f64)] = &[
+    ("DenseNet121", 0.054, 10.546, 21.0),
+    ("DenseNet201", 0.304, 14.345, 31.0),
+    ("DenseNet169", 0.289, 13.365, 29.0),
+    ("ResNet50V2", 0.135, 5.560, 20.0),
+    ("EfficientNetB0", 0.115, 4.326, 20.0),
+    ("ResNet101", 0.284, 8.266, 20.0),
+    ("ResNet152", 0.390, 10.449, 24.0),
+    ("ResNet101V2", 0.391, 8.219, 20.0),
+    ("MobileNetV3Large", 0.196, 4.072, 20.0),
+    ("EfficientNetB1", 0.291, 5.797, 20.0),
+    ("ResNet50", 0.268, 5.172, 20.0),
+    ("ResNet152V2", 0.589, 10.054, 24.0),
+    ("MobileNetV2", 0.190, 2.892, 20.0),
+    ("EfficientNetV2B3", 0.543, 7.596, 20.0),
+    ("InceptionResNetV2", 1.112, 15.270, 39.0),
+    ("EfficientNetV2B1", 0.443, 5.929, 20.0),
+    ("NASNetMobile", 0.536, 6.860, 20.0),
+    ("EfficientNetV2B0", 0.377, 4.272, 20.0),
+    ("EfficientNetB2", 0.520, 5.333, 20.0),
+    ("MobileNetV3Small", 0.315, 3.211, 20.0),
+    ("InceptionV3", 0.913, 6.732, 20.0),
+    ("MobileNet", 0.285, 1.901, 20.0),
+    ("EfficientNetV2S", 1.454, 7.378, 26.0),
+    ("EfficientNetV2B2", 0.901, 4.532, 20.0),
+    ("VGG16", 0.660, 2.252, 20.0),
+    ("EfficientNetB3", 1.239, 4.205, 20.0),
+    ("Xception", 0.801, 2.638, 20.0),
+    ("VGG19", 0.893, 2.181, 20.0),
+    ("NASNetLarge", 3.464, 7.154, 42.0),
+    ("EfficientNetV2M", 4.479, 6.861, 49.0),
+    ("EfficientNetB4", 2.881, 4.103, 31.0),
+    ("EfficientNetV2L", 7.520, 6.675, 73.0),
+    ("EfficientNetB5", 6.121, 2.283, 53.0),
+    ("SSDMobilenet", 19.448, 4.442, 164.0),
+    ("EfficientNetB6", 9.754, 1.984, 82.0),
+    ("EfficientNetB7", 16.339, 2.751, 136.0),
+    ("BERT", 7.353, 0.222, 59.0),
+];
+
+/// Table 2's two single-model case studies (1080Ti measurements).
+pub fn resnet50_table2() -> ModelSpec {
+    ModelSpec::new("ResNet50", 1.053, 5.072, 25.0)
+}
+pub fn inception_resnet_v2_table2() -> ModelSpec {
+    ModelSpec::new("InceptionResNetV2", 5.090, 18.368, 70.0)
+}
+
+/// Full zoo for a GPU generation.
+pub fn zoo(kind: GpuKind) -> Vec<ModelSpec> {
+    let table = match kind {
+        GpuKind::Gtx1080Ti => TABLE3_1080TI,
+        GpuKind::A100 => TABLE4_A100,
+    };
+    table
+        .iter()
+        .map(|&(name, a, b, slo)| ModelSpec::new(name, a, b, slo))
+        .collect()
+}
+
+/// Models with a strong batching effect (β/α > 2), per §5.1.
+pub fn zoo_strong(kind: GpuKind) -> Vec<ModelSpec> {
+    zoo(kind)
+        .into_iter()
+        .filter(|m| m.profile.batch_effect() > 2.0)
+        .collect()
+}
+
+/// Models with a weak batching effect (β/α < 2), per §5.1.
+pub fn zoo_weak(kind: GpuKind) -> Vec<ModelSpec> {
+    zoo(kind)
+        .into_iter()
+        .filter(|m| m.profile.batch_effect() < 2.0)
+        .collect()
+}
+
+/// Look a model up by name.
+pub fn by_name(kind: GpuKind, name: &str) -> Option<ModelSpec> {
+    zoo(kind).into_iter().find(|m| m.name == name)
+}
+
+/// N identical "ResNet50-like" variants (Fig 11 / Fig 13R: specialized
+/// instantiations of the same architecture with a shared SLO).
+pub fn resnet_like_variants(n: usize, slo_ms: f64, kind: GpuKind) -> Vec<ModelSpec> {
+    let base = by_name(kind, "ResNet50").expect("ResNet50 in zoo");
+    (0..n)
+        .map(|i| {
+            let mut m = ModelSpec::new(
+                &format!("ResNet50-v{i}"),
+                base.profile.alpha_ms,
+                base.profile.beta_ms,
+                slo_ms,
+            );
+            m.slo = Micros::from_millis_f64(slo_ms);
+            m
+        })
+        .collect()
+}
+
+/// Synthetic profile family used by Fig 6a: α = 1 ms, β ∈ 1..15 ms,
+/// SLO = 2·ℓ(8).
+pub fn synthetic_beta_family(beta_ms: f64) -> ModelSpec {
+    let profile = LatencyProfile::new(1.0, beta_ms);
+    let slo = Micros(2 * profile.latency(8).0);
+    let mut m = ModelSpec::new(&format!("synthetic-b{beta_ms}"), 1.0, beta_ms, 1.0);
+    m.slo = slo;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_expected_sizes() {
+        assert_eq!(TABLE3_1080TI.len(), 35);
+        assert_eq!(TABLE4_A100.len(), 37);
+    }
+
+    #[test]
+    fn table3_ordered_by_descending_batch_effect() {
+        // Paper: "Models listed in Table 1 are ordered by descending
+        // batching effect (β/α ranging from 9.7 to 0.02)" — Table 3 is
+        // likewise sorted.
+        let z = zoo(GpuKind::Gtx1080Ti);
+        for w in z.windows(2) {
+            assert!(
+                w[0].profile.batch_effect() >= w[1].profile.batch_effect() - 1e-9,
+                "{} before {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+    }
+
+    #[test]
+    fn strong_weak_split() {
+        let strong = zoo_strong(GpuKind::Gtx1080Ti);
+        let weak = zoo_weak(GpuKind::Gtx1080Ti);
+        assert!(strong.iter().all(|m| m.profile.batch_effect() > 2.0));
+        assert!(weak.iter().all(|m| m.profile.batch_effect() < 2.0));
+        assert_eq!(strong.len() + weak.len(), 35);
+        assert!(strong.iter().any(|m| m.name == "ResNet50"));
+        assert!(weak.iter().any(|m| m.name == "BERT"));
+    }
+
+    #[test]
+    fn every_model_fits_batch_4_within_slo() {
+        // Appendix C: "Latency SLO associated with each model ensures that
+        // each model can run with batch size >= 4."
+        for kind in [GpuKind::Gtx1080Ti, GpuKind::A100] {
+            for m in zoo(kind) {
+                assert!(
+                    m.profile.max_batch_within(m.slo) >= 4,
+                    "{} on {} only fits {}",
+                    m.name,
+                    kind.name(),
+                    m.profile.max_batch_within(m.slo)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_and_variants() {
+        let r50 = by_name(GpuKind::A100, "ResNet50").unwrap();
+        assert!((r50.profile.alpha_ms - 0.268).abs() < 1e-9);
+        let variants = resnet_like_variants(20, 100.0, GpuKind::Gtx1080Ti);
+        assert_eq!(variants.len(), 20);
+        assert_eq!(variants[7].slo, Micros::from_millis_f64(100.0));
+    }
+
+    #[test]
+    fn synthetic_family_slo_rule() {
+        let m = synthetic_beta_family(5.0);
+        // ℓ(8) = 8 + 5 = 13ms, SLO = 26ms.
+        assert_eq!(m.slo, Micros::from_millis_f64(26.0));
+    }
+}

@@ -1,0 +1,143 @@
+//! Latency profiles: the affine batching model ℓ(b) = αb + β (§2.1).
+//!
+//! Everything the deferred batch scheduler does — the schedulable window,
+//! the staggered-execution analysis, the goodput bounds — is a function
+//! of this profile, so it lives in `core` and is shared by the simulator,
+//! the schedulers, and the analytical model.
+
+use crate::core::time::Micros;
+
+/// Affine latency profile ℓ(b) = αb + β, stored in milliseconds like the
+/// paper's tables; evaluated to integer microseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencyProfile {
+    /// Per-request marginal cost (ms).
+    pub alpha_ms: f64,
+    /// Fixed batch-invocation cost (ms).
+    pub beta_ms: f64,
+}
+
+impl LatencyProfile {
+    pub fn new(alpha_ms: f64, beta_ms: f64) -> Self {
+        assert!(alpha_ms > 0.0, "alpha must be positive");
+        assert!(beta_ms >= 0.0, "beta must be non-negative");
+        LatencyProfile { alpha_ms, beta_ms }
+    }
+
+    /// ℓ(b) in microseconds.
+    #[inline]
+    pub fn latency(&self, batch: u32) -> Micros {
+        debug_assert!(batch > 0, "latency of empty batch");
+        Micros::from_millis_f64(self.alpha_ms * batch as f64 + self.beta_ms)
+    }
+
+    /// Batching-effect strength β/α — the paper's classifier: strong if
+    /// β/α > 2, weak otherwise (§5.1).
+    #[inline]
+    pub fn batch_effect(&self) -> f64 {
+        self.beta_ms / self.alpha_ms
+    }
+
+    /// Largest b ≥ 0 with ℓ(b) ≤ budget (0 when even b=1 doesn't fit).
+    pub fn max_batch_within(&self, budget: Micros) -> u32 {
+        let budget_ms = budget.as_millis_f64();
+        if budget_ms < self.alpha_ms + self.beta_ms {
+            return 0;
+        }
+        let b = ((budget_ms - self.beta_ms) / self.alpha_ms).floor() as u32;
+        // Guard against float rounding on the boundary.
+        let mut b = b.max(1);
+        while self.latency(b) > budget {
+            b -= 1;
+            if b == 0 {
+                return 0;
+            }
+        }
+        while self.latency(b + 1) <= budget {
+            b += 1;
+        }
+        b
+    }
+
+    /// Per-GPU throughput at batch size b: b / ℓ(b), in requests/second.
+    pub fn throughput(&self, batch: u32) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        batch as f64 / (self.latency(batch).as_secs_f64())
+    }
+
+    /// Asymptotic per-GPU throughput (1/α), requests/second.
+    pub fn peak_throughput(&self) -> f64 {
+        1_000.0 / self.alpha_ms
+    }
+}
+
+/// A model entry: profile + latency SLO (+ memory, for partitioning).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub profile: LatencyProfile,
+    pub slo: Micros,
+    /// Static (weights) memory footprint in MB — partitioning constraint.
+    pub static_mem_mb: f64,
+    /// Peak runtime (activations) memory in MB.
+    pub dyn_mem_mb: f64,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, alpha_ms: f64, beta_ms: f64, slo_ms: f64) -> Self {
+        ModelSpec {
+            name: name.to_string(),
+            profile: LatencyProfile::new(alpha_ms, beta_ms),
+            slo: Micros::from_millis_f64(slo_ms),
+            // Default memory model: proportional to compute cost — used
+            // only when the experiment doesn't specify real numbers.
+            static_mem_mb: 50.0 + 40.0 * beta_ms,
+            dyn_mem_mb: 20.0 + 10.0 * alpha_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_affine() {
+        // The paper's worked example: ℓ(b) = b + 5 (time units = ms here).
+        let p = LatencyProfile::new(1.0, 5.0);
+        assert_eq!(p.latency(4), Micros::from_millis_f64(9.0));
+        assert_eq!(p.latency(5), Micros::from_millis_f64(10.0));
+        assert!((p.batch_effect() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_batch_within_budget() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        // ℓ(7) = 12 <= 12, ℓ(8) = 13 > 12.
+        assert_eq!(p.max_batch_within(Micros::from_millis_f64(12.0)), 7);
+        assert_eq!(p.max_batch_within(Micros::from_millis_f64(5.9)), 0);
+        assert_eq!(p.max_batch_within(Micros::from_millis_f64(6.0)), 1);
+        assert_eq!(p.max_batch_within(Micros::ZERO), 0);
+    }
+
+    #[test]
+    fn max_batch_boundary_exact() {
+        // ResNet50 on 1080Ti (Table 3): α=2.050, β=5.378, SLO 27ms.
+        let p = LatencyProfile::new(2.050, 5.378);
+        let b = p.max_batch_within(Micros::from_millis_f64(27.0));
+        assert!(p.latency(b) <= Micros::from_millis_f64(27.0));
+        assert!(p.latency(b + 1) > Micros::from_millis_f64(27.0));
+    }
+
+    #[test]
+    fn throughput_grows_with_batch() {
+        let p = LatencyProfile::new(1.053, 5.072); // ResNet50, Table 2
+        assert!(p.throughput(16) > p.throughput(7));
+        assert!(p.throughput(16) < p.peak_throughput());
+        // Table 2 staggered column: 8 GPUs * ℓ(16)-batches ≈ 5839 r/s.
+        let n_gpu_tput = 8.0 * p.throughput(16);
+        assert!((n_gpu_tput - 5839.0).abs() / 5839.0 < 0.02, "{n_gpu_tput}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Virtual time. All scheduling math runs on integer microseconds —
+//! `Micros` — so simulations are exact and deterministic (no float drift
+//! in event ordering). Wall-clock serving maps `Instant`s onto the same
+//! type.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in time (or a duration) in microseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    pub const ZERO: Micros = Micros(0);
+    pub const MAX: Micros = Micros(u64::MAX);
+
+    #[inline]
+    pub fn from_millis_f64(ms: f64) -> Micros {
+        debug_assert!(ms >= 0.0, "negative duration {ms}");
+        Micros((ms * 1_000.0).round() as u64)
+    }
+
+    #[inline]
+    pub fn from_secs_f64(s: f64) -> Micros {
+        Micros((s * 1_000_000.0).round() as u64)
+    }
+
+    #[inline]
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    #[inline]
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+
+    #[inline]
+    pub fn min(self, other: Micros) -> Micros {
+        Micros(self.0.min(other.0))
+    }
+
+    #[inline]
+    pub fn max(self, other: Micros) -> Micros {
+        Micros(self.0.max(other.0))
+    }
+}
+
+impl Add for Micros {
+    type Output = Micros;
+    #[inline]
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Micros {
+    #[inline]
+    fn add_assign(&mut self, rhs: Micros) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Micros {
+    type Output = Micros;
+    #[inline]
+    fn sub(self, rhs: Micros) -> Micros {
+        debug_assert!(self.0 >= rhs.0, "time underflow {} - {}", self.0, rhs.0);
+        Micros(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}us", self.0)
+    }
+}
+
+impl fmt::Display for Micros {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 1_000_000 {
+            write!(f, "{:.3}s", self.as_secs_f64())
+        } else if self.0 >= 1_000 {
+            write!(f, "{:.3}ms", self.as_millis_f64())
+        } else {
+            write!(f, "{}us", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(Micros::from_millis_f64(25.0).0, 25_000);
+        assert_eq!(Micros::from_secs_f64(1.5).0, 1_500_000);
+        assert!((Micros(25_000).as_millis_f64() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Micros(100) + Micros(50);
+        assert_eq!(a, Micros(150));
+        assert_eq!(a - Micros(150), Micros::ZERO);
+        assert_eq!(Micros(10).saturating_sub(Micros(20)), Micros::ZERO);
+        assert_eq!(Micros(5).max(Micros(9)), Micros(9));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(Micros(12).to_string(), "12us");
+        assert_eq!(Micros(12_500).to_string(), "12.500ms");
+        assert_eq!(Micros(2_000_000).to_string(), "2.000s");
+    }
+}

@@ -1,0 +1,106 @@
+//! Core identifiers and request/batch records shared by the simulator,
+//! the schedulers, and the real-time coordinator.
+
+use crate::core::time::Micros;
+
+/// Model identifier — index into the experiment's model table.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct ModelId(pub u32);
+
+/// GPU identifier. Symphony's "pick the smallest identifier" rule (§3.2)
+/// makes the ordering semantically meaningful: low ids consolidate load,
+/// high ids go idle and can be reclaimed by the autoscaler.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct GpuId(pub u32);
+
+/// Request identifier, unique within a run.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct RequestId(pub u64);
+
+/// An inference request: which model, when it arrived, when it must be
+/// done. `deadline = arrival + SLO` (frontends attach deadlines, §4.1).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: Micros,
+    pub deadline: Micros,
+}
+
+impl Request {
+    pub fn slo(&self) -> Micros {
+        self.deadline - self.arrival
+    }
+}
+
+/// A batch dispatched to a GPU.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub model: ModelId,
+    pub gpu: GpuId,
+    pub requests: Vec<RequestId>,
+    /// When the scheduler issued the dispatch.
+    pub dispatched_at: Micros,
+    /// When the GPU begins executing (>= dispatched_at under network delay).
+    pub start: Micros,
+    /// When execution completes.
+    pub end: Micros,
+}
+
+impl Batch {
+    pub fn size(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Terminal state of a request.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OutcomeKind {
+    /// Completed at or before its deadline.
+    Good,
+    /// Completed after its deadline (an SLO violation that still ran).
+    Late,
+    /// Dropped by the scheduler (could not meet the deadline).
+    Dropped,
+    /// Still queued/in-flight when the experiment ended (excluded from
+    /// goodput accounting).
+    Unfinished,
+}
+
+/// Per-request outcome record consumed by the metrics layer.
+#[derive(Clone, Copy, Debug)]
+pub struct Outcome {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: Micros,
+    pub deadline: Micros,
+    /// Batch execution start (queueing delay = start - arrival), if run.
+    pub start: Option<Micros>,
+    /// Completion time, if run.
+    pub end: Option<Micros>,
+    pub kind: OutcomeKind,
+    /// Batch size the request executed in, if run.
+    pub batch_size: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_slo() {
+        let r = Request {
+            id: RequestId(1),
+            model: ModelId(0),
+            arrival: Micros(1_000),
+            deadline: Micros(26_000),
+        };
+        assert_eq!(r.slo(), Micros(25_000));
+    }
+
+    #[test]
+    fn ids_order() {
+        assert!(GpuId(0) < GpuId(1));
+        assert!(ModelId(2) > ModelId(1));
+    }
+}

@@ -1,0 +1,974 @@
+//! One entry point per paper table/figure (DESIGN.md §5). Each returns
+//! a [`Table`] whose rows mirror what the paper plots; benches print it
+//! and write `results/<id>.tsv`.
+//!
+//! Simulation lengths are sized so `cargo bench` completes in minutes;
+//! set `SYMPHONY_FULL_SWEEP=1` for the full Fig 7 grid and longer runs.
+
+use std::time::Duration;
+
+use crate::autoscale::{Advice, AutoscaleConfig, AutoscaleController, WindowStats};
+use crate::core::model_zoo::{self, GpuKind};
+use crate::core::profile::ModelSpec;
+use crate::core::time::Micros;
+use crate::harness::goodput::GoodputExperiment;
+use crate::harness::systems::SystemKind;
+use crate::metrics::Metrics;
+use crate::partition;
+use crate::scheduler::analytical;
+use crate::sim::{ClusterOps, Engine, EngineDriver, NetworkModel, SimConfig};
+use crate::util::par::par_map;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, Histogram};
+use crate::util::table::{f1, f2, pct, Table};
+use crate::workload::trace::TraceSpec;
+use crate::workload::{ArrivalKind, ArrivalStream, Popularity, Workload, WorkloadSpec};
+
+fn full_sweep() -> bool {
+    std::env::var("SYMPHONY_FULL_SWEEP").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+fn goodput_of(exp: &GoodputExperiment, sys: SystemKind) -> f64 {
+    exp.goodput(|e| sys.build(&e.models, e.num_gpus, e.network.bound()))
+        .goodput
+}
+
+/// Metrics of `sys` serving `exp`'s workload at rate `rate`.
+fn metrics_at(exp: &GoodputExperiment, sys: SystemKind, rate: f64) -> Metrics {
+    let spec = WorkloadSpec::new(exp.models.clone(), rate)
+        .popularity(exp.popularity)
+        .gamma_shape(exp.gamma_shape)
+        .seed(exp.seed);
+    let cfg = SimConfig::new(exp.num_gpus, Micros::from_secs_f64(exp.sim_secs))
+        .network(exp.network)
+        .warmup(Micros::from_secs_f64(exp.warmup_secs))
+        .seed(exp.seed ^ 0x5A5A);
+    Engine::new(
+        spec.build(),
+        sys.build(&exp.models, exp.num_gpus, exp.network.bound()),
+        cfg,
+    )
+    .run()
+    .metrics
+}
+
+// ---------------------------------------------------------------------
+// Figure 1 — batch size distribution
+// ---------------------------------------------------------------------
+
+/// Fig 1: batch-size distribution of ResNet50 (25 ms) and
+/// InceptionResNetV2 (70 ms), one model on 8 GPUs, each system driven at
+/// its own goodput.
+pub fn fig01_batch_sizes() -> Table {
+    let cases = [
+        model_zoo::resnet50_table2(),
+        model_zoo::inception_resnet_v2_table2(),
+    ];
+    let mut table = Table::new(vec![
+        "model", "system", "goodput", "batch_p25", "batch_median", "batch_p75",
+        "batch_p95",
+    ]);
+    for model in cases {
+        let exp = GoodputExperiment::new(vec![model.clone()], 8).sim_secs(8.0);
+        let rows = par_map(SystemKind::HEADLINE.to_vec(), |&sys| {
+            let res = exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO));
+            let hist = res.metrics.batch_hist_all();
+            (
+                sys.label(),
+                res.goodput,
+                hist.quantile(0.25),
+                hist.median(),
+                hist.quantile(0.75),
+                hist.quantile(0.95),
+            )
+        });
+        for (label, goodput, q25, med, q75, q95) in rows {
+            table.row(vec![
+                model.name.clone(),
+                label,
+                f1(goodput),
+                q25.to_string(),
+                med.to_string(),
+                q75.to_string(),
+                q95.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 2 — goodput stability + load-proportional GPU usage
+// ---------------------------------------------------------------------
+
+/// Fig 2: 10 ResNet-like models, 100 ms SLO, 24 emulated GPUs; sweep the
+/// offered load and report goodput (left) and GPU utilization (right).
+pub fn fig02_flattop() -> Table {
+    let models = model_zoo::resnet_like_variants(10, 100.0, GpuKind::Gtx1080Ti);
+    let exp = GoodputExperiment::new(models, 24).sim_secs(6.0);
+    let loads: Vec<f64> = (1..=10).map(|i| i as f64 * 3_000.0).collect();
+    let mut table = Table::new(vec![
+        "offered_rps", "system", "goodput", "bad_rate", "utilization", "gpus_used",
+    ]);
+    let mut jobs = Vec::new();
+    for &load in &loads {
+        for sys in SystemKind::HEADLINE {
+            jobs.push((load, sys));
+        }
+    }
+    let rows = par_map(jobs, |&(load, sys)| {
+        let m = metrics_at(&exp, sys, load);
+        (
+            load,
+            sys.label(),
+            m.goodput(),
+            m.bad_fraction(),
+            m.utilization(24),
+            m.gpus_used(),
+        )
+    });
+    for (load, label, goodput, bad, util, used) in rows {
+        table.row(vec![
+            f1(load),
+            label,
+            f1(goodput),
+            pct(bad),
+            pct(util),
+            used.to_string(),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figures 4 & 5 — worked-example traces
+// ---------------------------------------------------------------------
+
+/// Build the §3.3 workload: ℓ(b) = b + 5 ms, SLO 12 ms, R_i at
+/// 0.75·(i−1) ms; optionally skipping R13..R15 (Fig 5).
+pub fn worked_example_workload(n: usize, skip_13_15: bool) -> (Vec<ModelSpec>, Workload) {
+    let model = ModelSpec::new("example", 1.0, 5.0, 12.0);
+    let times: Vec<Micros> = (0..n)
+        .filter(|&i| !(skip_13_15 && (12..15).contains(&i)))
+        .map(|i| Micros::from_millis_f64(0.75 * i as f64))
+        .collect();
+    let w = Workload::explicit(vec![model.clone()], vec![times]);
+    (vec![model], w)
+}
+
+/// Render an execution trace as ASCII rows per GPU (Figs 4/5).
+pub fn render_trace(trace: &[crate::sim::TraceEntry], gpus: usize, until_ms: f64) -> String {
+    let scale = 1.0; // 1 char per ms
+    let width = (until_ms * scale) as usize + 2;
+    let mut rows = vec![vec![b'.'; width]; gpus];
+    for t in trace {
+        let s = ((t.start.as_millis_f64() * scale) as usize).min(width - 1);
+        let e = ((t.end.as_millis_f64() * scale) as usize).min(width - 1);
+        let c = if t.preempted {
+            b'x'
+        } else {
+            b'0' + (t.size as u8).min(9)
+        };
+        for x in s..=e.max(s) {
+            rows[t.gpu.0 as usize][x] = c;
+        }
+    }
+    let mut out = String::new();
+    for (g, row) in rows.iter().enumerate() {
+        out.push_str(&format!("GPU{g} |{}|\n", String::from_utf8_lossy(row)));
+    }
+    out
+}
+
+/// Fig 4 / Fig 5: deferred vs eager traces, plus summary counters.
+pub fn fig04_05_traces() -> Table {
+    let mut table = Table::new(vec![
+        "scenario", "system", "good", "dropped", "median_batch",
+    ]);
+    for (scenario, skip) in [("fig4_uniform", false), ("fig5_missing", true)] {
+        for sys in [SystemKind::Symphony, SystemKind::Eager] {
+            let (models, workload) = worked_example_workload(64, skip);
+            let cfg = SimConfig::new(3, Micros::from_secs_f64(0.2)).trace(true);
+            let res = Engine::new(workload, sys.build(&models, 3, Micros::ZERO), cfg).run();
+            table.row(vec![
+                scenario.to_string(),
+                sys.label(),
+                res.metrics.per_model[0].good.to_string(),
+                res.metrics.per_model[0].dropped.to_string(),
+                res.metrics.per_model[0].median_batch().to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 6a — batching effect strength (β/α)
+// ---------------------------------------------------------------------
+
+/// Fig 6a: α = 1 ms, β ∈ 1..15 ms, SLO = 2ℓ(8), 32 GPUs, 10 identical
+/// models, Poisson arrivals. Plots eager goodput as % of deferred.
+pub fn fig06a_betaalpha() -> Table {
+    let betas: Vec<f64> = (1..=15).map(|b| b as f64).collect();
+    let mut table = Table::new(vec!["beta_over_alpha", "eager_pct_of_deferred"]);
+    let rows = par_map(betas, |&beta| {
+        let base = model_zoo::synthetic_beta_family(beta);
+        let models: Vec<ModelSpec> = (0..10)
+            .map(|i| {
+                let mut m = base.clone();
+                m.name = format!("syn-b{beta}-{i}");
+                m
+            })
+            .collect();
+        let exp = GoodputExperiment::new(models, 32).sim_secs(5.0);
+        let def = goodput_of(&exp, SystemKind::Symphony);
+        let eag = goodput_of(&exp, SystemKind::Eager);
+        (beta, if def > 0.0 { eag / def } else { f64::NAN })
+    });
+    for (beta, ratio) in rows {
+        table.row(vec![f1(beta), pct(ratio)]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 6b — timeout-based scheduling comparison
+// ---------------------------------------------------------------------
+
+/// Fig 6b: timeout value as a fraction of SLO; goodput relative to
+/// deferred. Single ResNet50 (50 ms, 8 GPUs) and the 37-model A100 mix
+/// (64 GPUs).
+pub fn fig06b_timeout() -> Table {
+    let fracs: Vec<f64> = vec![0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+    let mut table = Table::new(vec!["workload", "timeout_frac_slo", "pct_of_deferred"]);
+
+    // Case 1: single ResNet50, SLO 50 ms, 8 GPUs.
+    let mut r50 = model_zoo::by_name(GpuKind::Gtx1080Ti, "ResNet50").unwrap();
+    r50.slo = Micros::from_millis_f64(50.0);
+    let single = GoodputExperiment::new(vec![r50], 8).sim_secs(6.0);
+    let def_single = goodput_of(&single, SystemKind::Symphony);
+
+    // Case 2: mixed 37 models (A100), 64 GPUs.
+    let mixed_models = model_zoo::zoo(GpuKind::A100);
+    let mixed = GoodputExperiment::new(mixed_models, 64).sim_secs(5.0);
+    let def_mixed = goodput_of(&mixed, SystemKind::Symphony);
+
+    let single_rows = par_map(fracs.clone(), |&f| {
+        // Per-model timeout k = f * SLO (single model: one SLO).
+        let k = Micros((single.models[0].slo.0 as f64 * f) as u64);
+        let g = goodput_of(&single, SystemKind::Timeout { k });
+        (f, g / def_single.max(1e-9))
+    });
+    for (f, r) in single_rows {
+        table.row(vec!["resnet50_50ms".into(), f2(f), pct(r)]);
+    }
+
+    // Mixed models share one timeout fraction but have different SLOs:
+    // use the *minimum* SLO as the reference the way an operator with a
+    // single knob would ("tuning per model ... significant operational
+    // overhead").
+    let min_slo = mixed.models.iter().map(|m| m.slo).min().unwrap();
+    let mixed_rows = par_map(fracs, |&f| {
+        let k = Micros((min_slo.0 as f64 * f) as u64);
+        let g = goodput_of(&mixed, SystemKind::Timeout { k });
+        (f, g / def_mixed.max(1e-9))
+    });
+    for (f, r) in mixed_rows {
+        table.row(vec!["mixed37_a100".into(), f2(f), pct(r)]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 7 — the synthetic-workload sweep
+// ---------------------------------------------------------------------
+
+/// One Fig 7 configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub model_name: String,
+    pub n_models: usize,
+    pub gpu_ratio: f64,
+    pub slo_ms: f64,
+    pub gamma_shape: f64,
+}
+
+/// The Table 1 grid. `full` = all 5880+ configs; otherwise a stratified
+/// sample (~1 in 48 — this sandbox exposes a single core, so the
+/// default keeps `cargo bench` to minutes).
+pub fn fig07_grid(full: bool) -> Vec<SweepConfig> {
+    let model_names = [
+        "DenseNet121", "InceptionV3", "ResNet50V2", "VGG16", "Xception", "BERT",
+    ];
+    let n_models = [8usize, 16, 24, 32, 48, 64];
+    let ratios = [1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0];
+    let slos = [20.0, 25.0, 30.0, 40.0, 50.0];
+    let shapes = [0.1, 0.2, 0.3, 0.5, 0.7, 1.0];
+    let mut grid = Vec::new();
+    let mut idx = 0usize;
+    for name in model_names {
+        for &n in &n_models {
+            for &r in &ratios {
+                for &slo in &slos {
+                    for &sh in &shapes {
+                        idx += 1;
+                        // Stride coprime with every grid dimension so
+                        // the subset covers all axes (48 would alias the
+                        // 6-value burstiness axis).
+                        if !full && idx % 47 != 0 {
+                            continue;
+                        }
+                        grid.push(SweepConfig {
+                            model_name: name.to_string(),
+                            n_models: n,
+                            gpu_ratio: r,
+                            slo_ms: slo,
+                            gamma_shape: sh,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    grid
+}
+
+/// Run one sweep config: returns deferred/eager goodput ratio.
+pub fn fig07_run_one(cfg: &SweepConfig) -> f64 {
+    let base = model_zoo::by_name(GpuKind::Gtx1080Ti, &cfg.model_name).unwrap();
+    let models: Vec<ModelSpec> = (0..cfg.n_models)
+        .map(|i| {
+            ModelSpec::new(
+                &format!("{}-{i}", cfg.model_name),
+                base.profile.alpha_ms,
+                base.profile.beta_ms,
+                cfg.slo_ms,
+            )
+        })
+        .collect();
+    let gpus = ((cfg.n_models as f64 * cfg.gpu_ratio).round() as usize).max(1);
+    let exp = GoodputExperiment::new(models, gpus)
+        .gamma_shape(cfg.gamma_shape)
+        .sim_secs(3.0);
+    let def = goodput_of(&exp, SystemKind::Symphony);
+    let eag = goodput_of(&exp, SystemKind::Eager);
+    if eag <= 0.0 {
+        if def > 0.0 {
+            f64::INFINITY
+        } else {
+            1.0
+        }
+    } else {
+        def / eag
+    }
+}
+
+/// Fig 7: distribution of deferred/eager goodput ratios over the grid.
+pub fn fig07_sweep() -> Table {
+    let grid = fig07_grid(full_sweep());
+    let ratios = par_map(grid.clone(), fig07_run_one);
+
+    let mut table = Table::new(vec![
+        "slice", "cases", "ratio_p10", "ratio_median", "ratio_p90",
+        "pct_no_worse(>=0.95)", "pct_gain>=1.5x",
+    ]);
+    let mut slice = |name: &str, sel: &dyn Fn(&SweepConfig) -> bool| {
+        let vals: Vec<f64> = grid
+            .iter()
+            .zip(&ratios)
+            .filter(|(c, _)| sel(c))
+            .map(|(_, &r)| if r.is_finite() { r } else { 10.0 })
+            .collect();
+        if vals.is_empty() {
+            return;
+        }
+        let no_worse = vals.iter().filter(|&&r| r >= 0.95).count() as f64 / vals.len() as f64;
+        let big = vals.iter().filter(|&&r| r >= 1.5).count() as f64 / vals.len() as f64;
+        table.row(vec![
+            name.to_string(),
+            vals.len().to_string(),
+            f2(percentile(&vals, 10.0)),
+            f2(percentile(&vals, 50.0)),
+            f2(percentile(&vals, 90.0)),
+            pct(no_worse),
+            pct(big),
+        ]);
+    };
+    slice("all", &|_| true);
+    slice("densenet121(strong)", &|c| c.model_name == "DenseNet121");
+    slice("bert(weak)", &|c| c.model_name == "BERT");
+    slice("slo<=30ms", &|c| c.slo_ms <= 30.0);
+    slice("slo>=50ms", &|c| c.slo_ms >= 50.0);
+    slice("bursty(shape<=0.2)", &|c| c.gamma_shape <= 0.2);
+    slice("poisson(shape=1)", &|c| c.gamma_shape >= 1.0);
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 9 — end-to-end goodput on the model zoo
+// ---------------------------------------------------------------------
+
+/// Fig 9: mixed / strong / weak zoo splits on 64 emulated GPUs, 1080Ti
+/// and A100 profiles; scheduler-only (s: ideal network) and end-to-end
+/// (e: RDMA network) for Symphony; baselines + Nexus with 8 frontends.
+pub fn fig09_e2e_goodput() -> Table {
+    let mut table = Table::new(vec!["gpu", "setting", "system", "goodput"]);
+    let mut jobs = Vec::new();
+    for kind in [GpuKind::Gtx1080Ti, GpuKind::A100] {
+        for (setting, models) in [
+            ("mixed", model_zoo::zoo(kind)),
+            ("strong", model_zoo::zoo_strong(kind)),
+            ("weak", model_zoo::zoo_weak(kind)),
+        ] {
+            let systems = vec![
+                (SystemKind::Symphony, NetworkModel::Ideal, "symphony(s)"),
+                (SystemKind::Symphony, NetworkModel::Rdma, "symphony(e)"),
+                (SystemKind::Clockwork, NetworkModel::Ideal, "clockwork(s)"),
+                (SystemKind::Clockwork, NetworkModel::Rdma, "clockwork(e)"),
+                (
+                    SystemKind::Nexus { frontends: 1 },
+                    NetworkModel::Rdma,
+                    "nexus1fe",
+                ),
+                (
+                    SystemKind::Nexus { frontends: 8 },
+                    NetworkModel::Rdma,
+                    "nexus8fe",
+                ),
+                (SystemKind::Shepherd, NetworkModel::Ideal, "shepherd(s)"),
+            ];
+            for (sys, net, label) in systems {
+                jobs.push((kind, setting, models.clone(), sys, net, label));
+            }
+        }
+    }
+    let rows = par_map(jobs, |(kind, setting, models, sys, net, label)| {
+        let exp = GoodputExperiment::new(models.clone(), 64)
+            .network(*net)
+            .sim_secs(3.0);
+        let g = goodput_of(&exp, *sys);
+        (kind.name(), setting.to_string(), label.to_string(), g)
+    });
+    for (gpu, setting, label, g) in rows {
+        table.row(vec![gpu.to_string(), setting, label, f1(g)]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 10 — minimum GPUs for 15k RPS
+// ---------------------------------------------------------------------
+
+/// Smallest cluster size at which `sys` sustains `rate` on `models`.
+pub fn min_gpus_for(
+    models: &[ModelSpec],
+    sys: SystemKind,
+    rate: f64,
+    max_gpus: usize,
+) -> Option<usize> {
+    let mut lo = 1usize;
+    let mut hi = max_gpus;
+    let feasible = |n: usize| {
+        let exp = GoodputExperiment::new(models.to_vec(), n).sim_secs(3.0);
+        let m = exp.run_at(rate, &|e: &GoodputExperiment| {
+            sys.build(&e.models, e.num_gpus, Micros::ZERO)
+        });
+        m.slo_satisfied(0.01)
+    };
+    if !feasible(hi) {
+        return None;
+    }
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(hi)
+}
+
+/// Fig 10: min #GPUs to serve 15k RPS — single ResNet50 (25 ms SLO) and
+/// the 37-model mix, A100 profiles.
+pub fn fig10_min_gpus() -> Table {
+    let mut r50 = model_zoo::by_name(GpuKind::A100, "ResNet50").unwrap();
+    r50.slo = Micros::from_millis_f64(25.0);
+    let single = vec![r50];
+    let mixed = model_zoo::zoo(GpuKind::A100);
+    let mut table = Table::new(vec!["workload", "system", "min_gpus"]);
+    let mut jobs = Vec::new();
+    for sys in SystemKind::HEADLINE {
+        jobs.push(("resnet50_25ms", single.clone(), sys, 64usize));
+        jobs.push(("mixed37", mixed.clone(), sys, 256usize));
+    }
+    let rows = par_map(jobs, |(wl, models, sys, cap)| {
+        let n = min_gpus_for(models, *sys, 15_000.0, *cap);
+        (wl.to_string(), sys.label(), n)
+    });
+    for (wl, label, n) in rows {
+        table.row(vec![
+            wl,
+            label,
+            n.map(|v| v.to_string()).unwrap_or_else(|| ">cap".into()),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 11 — workload characteristics
+// ---------------------------------------------------------------------
+
+/// Fig 11: 20 ResNet50-like models on 32 GPUs; SLO sweep × popularity
+/// (equal / Zipf 0.9) × arrival (Poisson / Γ(0.05)).
+pub fn fig11_workload_chars() -> Table {
+    let slos = [15.0, 20.0, 25.0, 30.0, 50.0, 75.0, 100.0];
+    let mut table = Table::new(vec![
+        "slo_ms", "popularity", "arrival", "system", "goodput",
+    ]);
+    let mut jobs = Vec::new();
+    for &slo in &slos {
+        for (pop_name, pop) in [("equal", Popularity::Equal), ("zipf0.9", Popularity::Zipf(0.9))]
+        {
+            for (arr_name, shape) in [("poisson", 1.0), ("gamma0.05", 0.05)] {
+                for sys in SystemKind::HEADLINE {
+                    jobs.push((slo, pop_name, pop, arr_name, shape, sys));
+                }
+            }
+        }
+    }
+    let rows = par_map(jobs, |&(slo, pop_name, pop, arr_name, shape, sys)| {
+        let models = model_zoo::resnet_like_variants(20, slo, GpuKind::Gtx1080Ti);
+        let exp = GoodputExperiment::new(models, 32)
+            .popularity(pop)
+            .gamma_shape(shape)
+            .sim_secs(3.0);
+        (
+            slo,
+            pop_name,
+            arr_name,
+            sys.label(),
+            goodput_of(&exp, sys),
+        )
+    });
+    for (slo, pop, arr, label, g) in rows {
+        table.row(vec![
+            f1(slo),
+            pop.to_string(),
+            arr.to_string(),
+            label,
+            f1(g),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — analytical vs measured
+// ---------------------------------------------------------------------
+
+/// Table 2: analytical batch size + throughput for no-coordination and
+/// staggered execution, and measured goodput for the four systems.
+pub fn table2_analytical() -> Table {
+    let cases = [
+        (model_zoo::resnet50_table2(), "ResNet50"),
+        (model_zoo::inception_resnet_v2_table2(), "InceptionResNetV2"),
+    ];
+    let mut table = Table::new(vec![
+        "model", "nocoord_bs", "nocoord_tput", "staggered_bs", "staggered_tput",
+        "symphony", "clockwork", "nexus", "shepherd",
+    ]);
+    for (model, name) in cases {
+        let nc = analytical::no_coordination(&model.profile, model.slo, 8);
+        let st = analytical::staggered(&model.profile, model.slo, 8);
+        let exp = GoodputExperiment::new(vec![model.clone()], 8).sim_secs(8.0);
+        let g: Vec<f64> = par_map(SystemKind::HEADLINE.to_vec(), |&sys| {
+            goodput_of(&exp, sys)
+        });
+        table.row(vec![
+            name.to_string(),
+            nc.batch_size.to_string(),
+            f1(nc.throughput),
+            st.batch_size.to_string(),
+            f1(st.throughput),
+            f1(g[0]),
+            f1(g[1]),
+            f1(g[2]),
+            f1(g[3]),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 12 — queueing delay
+// ---------------------------------------------------------------------
+
+/// Fig 12: queueing-delay quantiles per system at each system's goodput
+/// (ResNet50 & InceptionResNetV2, 8 GPUs).
+pub fn fig12_queueing() -> Table {
+    let cases = [
+        model_zoo::resnet50_table2(),
+        model_zoo::inception_resnet_v2_table2(),
+    ];
+    let mut table = Table::new(vec![
+        "model", "system", "q50_ms", "q90_ms", "q99_ms", "max_ms",
+    ]);
+    for model in cases {
+        let exp = GoodputExperiment::new(vec![model.clone()], 8).sim_secs(8.0);
+        let rows = par_map(SystemKind::HEADLINE.to_vec(), |&sys| {
+            let res = exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO));
+            // Re-run at the frontier with samples on.
+            let m = {
+                let spec =
+                    WorkloadSpec::new(exp.models.clone(), res.offered.max(100.0)).seed(exp.seed);
+                let cfg = SimConfig::new(exp.num_gpus, Micros::from_secs_f64(exp.sim_secs))
+                    .warmup(Micros::from_secs_f64(exp.warmup_secs));
+                Engine::new(
+                    spec.build(),
+                    sys.build(&exp.models, exp.num_gpus, Micros::ZERO),
+                    cfg,
+                )
+                .run()
+                .metrics
+            };
+            let q = m.queueing_all();
+            (
+                sys.label(),
+                percentile(&q, 50.0),
+                percentile(&q, 90.0),
+                percentile(&q, 99.0),
+                q.iter().cloned().fold(0.0, f64::max),
+            )
+        });
+        for (label, q50, q90, q99, qmax) in rows {
+            table.row(vec![
+                model.name.clone(),
+                label,
+                f2(q50),
+                f2(q90),
+                f2(q99),
+                f2(qmax),
+            ]);
+        }
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 13 right — goodput vs cluster size
+// ---------------------------------------------------------------------
+
+/// Fig 13 (right): 20 equally popular ResNet-like models, 100 ms SLO;
+/// goodput vs number of emulated GPUs.
+pub fn fig13_goodput_vs_gpus() -> Table {
+    let sizes = [8usize, 16, 32, 64, 128];
+    let mut table = Table::new(vec!["gpus", "system", "goodput", "goodput_per_gpu"]);
+    let mut jobs = Vec::new();
+    for &n in &sizes {
+        for sys in [SystemKind::Symphony, SystemKind::Clockwork] {
+            jobs.push((n, sys));
+        }
+    }
+    let rows = par_map(jobs, |&(n, sys)| {
+        let models = model_zoo::resnet_like_variants(20, 100.0, GpuKind::Gtx1080Ti);
+        let exp = GoodputExperiment::new(models, n).sim_secs(4.0);
+        let g = goodput_of(&exp, sys);
+        (n, sys.label(), g)
+    });
+    for (n, label, g) in rows {
+        table.row(vec![
+            n.to_string(),
+            label,
+            f1(g),
+            f1(g / n as f64),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 14 — network latency sensitivity
+// ---------------------------------------------------------------------
+
+/// Fig 14: 20 similar models, 32 GPUs, SLO ∈ {20,25,50,100} ms; goodput
+/// vs injected constant network latency — the RDMA range (≤ 200 µs) and
+/// the TCP range (≤ 40 ms).
+pub fn fig14_network() -> Table {
+    let slos = [20.0, 25.0, 50.0, 100.0];
+    let rdma_range: Vec<u64> = vec![0, 25, 50, 100, 200];
+    let tcp_range: Vec<u64> = vec![1_000, 3_000, 10_000, 20_000, 40_000];
+    let mut table = Table::new(vec!["range", "latency_us", "slo_ms", "goodput"]);
+    let mut jobs = Vec::new();
+    for &slo in &slos {
+        for &us in rdma_range.iter().chain(&tcp_range) {
+            jobs.push((slo, us));
+        }
+    }
+    let rows = par_map(jobs, |&(slo, us)| {
+        let models = model_zoo::resnet_like_variants(20, slo, GpuKind::Gtx1080Ti);
+        let exp = GoodputExperiment::new(models, 32)
+            .network(NetworkModel::Constant {
+                latency: Micros(us),
+            })
+            .sim_secs(4.0);
+        (slo, us, goodput_of(&exp, SystemKind::Symphony))
+    });
+    for (slo, us, g) in rows {
+        let range = if us <= 200 { "rdma" } else { "tcp" };
+        table.row(vec![range.to_string(), us.to_string(), f1(slo), f1(g)]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 15 — large cluster, changing workload, autoscaling
+// ---------------------------------------------------------------------
+
+/// Engine driver implementing the §3.5 autoscaler over epoch windows.
+struct AutoscaleDriver {
+    ctl: AutoscaleController,
+    epoch: Micros,
+    last_good: u64,
+    last_bad: u64,
+    last_busy: std::collections::HashMap<u32, Micros>,
+    last_t: Micros,
+    /// (time_s, offered_window_rps, active_gpus, bad_rate, advice)
+    pub log: Vec<(f64, f64, usize, f64, i64)>,
+}
+
+impl AutoscaleDriver {
+    fn new(cfg: AutoscaleConfig) -> Self {
+        AutoscaleDriver {
+            ctl: AutoscaleController::new(cfg),
+            epoch: cfg.epoch,
+            last_good: 0,
+            last_bad: 0,
+            last_busy: Default::default(),
+            last_t: Micros::ZERO,
+            log: Vec::new(),
+        }
+    }
+}
+
+impl EngineDriver for AutoscaleDriver {
+    fn on_tick(&mut self, _tag: u64, now: Micros, cluster: &mut ClusterOps) -> Option<Micros> {
+        let m = cluster.metrics;
+        let good: u64 = m.per_model.iter().map(|pm| pm.good).sum();
+        let bad: u64 = m.per_model.iter().map(|pm| pm.late + pm.dropped).sum();
+        let dgood = good - self.last_good;
+        let dbad = bad - self.last_bad;
+        self.last_good = good;
+        self.last_bad = bad;
+
+        // Busy fraction this window across active GPUs.
+        let window = (now - self.last_t).as_secs_f64().max(1e-9);
+        let mut busy_sum = 0.0;
+        let mut active = 0usize;
+        for (i, g) in cluster.gpus.iter().enumerate() {
+            if g.retired {
+                continue;
+            }
+            active += 1;
+            let prev = self
+                .last_busy
+                .get(&(i as u32))
+                .copied()
+                .unwrap_or(Micros::ZERO);
+            let mut cur = g.busy;
+            if let Some(f) = &g.in_flight {
+                if now > f.start {
+                    cur += now.min(f.end) - f.start;
+                }
+            }
+            busy_sum += (cur.saturating_sub(prev)).as_secs_f64() / window;
+            self.last_busy.insert(i as u32, cur);
+        }
+        self.last_t = now;
+        let stats = WindowStats {
+            good: dgood,
+            bad: dbad,
+            busy_fraction: if active > 0 { busy_sum / active as f64 } else { 0.0 },
+            active_gpus: active,
+        };
+        let advice = self.ctl.advise(&stats);
+        let mut delta: i64 = 0;
+        match advice {
+            Advice::Allocate(n) => {
+                for _ in 0..n {
+                    cluster.add_gpu();
+                    delta += 1;
+                }
+            }
+            Advice::Deallocate(n) => {
+                // Remove idle GPUs from the highest id down (Symphony's
+                // min-id dispatch keeps those idle).
+                let mut removed = 0;
+                for i in (0..cluster.gpus.len()).rev() {
+                    if removed == n {
+                        break;
+                    }
+                    if cluster.remove_gpu(crate::core::types::GpuId(i as u32)) {
+                        removed += 1;
+                        delta -= 1;
+                    }
+                }
+            }
+            Advice::Hold => {}
+        }
+        let offered = (dgood + dbad) as f64 / window;
+        self.log.push((
+            now.as_secs_f64(),
+            offered,
+            cluster.active_gpus(),
+            stats.bad_rate(),
+            delta,
+        ));
+        Some(now + self.epoch)
+    }
+}
+
+/// Fig 15: a changing workload (24 models, synthetic diurnal+burst
+/// traces) on a cluster that autoscaled from 512 GPUs. Reports the
+/// time series.
+pub fn fig15_autoscale(duration_s: f64, start_gpus: usize) -> Table {
+    let n_models = 24;
+    let mut rng = Rng::new(1234);
+    let duration = Micros::from_secs_f64(duration_s);
+    // Models with varying batching characteristics (drawn from Table 4).
+    let zoo = model_zoo::zoo(GpuKind::A100);
+    let models: Vec<ModelSpec> = (0..n_models).map(|i| zoo[i % zoo.len()].clone()).collect();
+    // Per-model rate traces; aggregate mean sized to ~60% of cluster peak.
+    let per_model_mean = 15_000.0 / n_models as f64;
+    let streams: Vec<ArrivalStream> = (0..n_models)
+        .map(|i| {
+            let spec = TraceSpec::new(duration, per_model_mean)
+                .phase(i as f64 / n_models as f64);
+            let segments = spec.generate(&mut rng);
+            ArrivalStream::new(
+                ArrivalKind::PiecewiseRate {
+                    segments,
+                    shape: 1.0,
+                },
+                rng.fork(i as u64),
+            )
+        })
+        .collect();
+    let workload = Workload::from_streams(models.clone(), streams);
+    let scheduler = SystemKind::Symphony.build(&models, start_gpus, Micros::ZERO);
+    let cfg = SimConfig::new(start_gpus, duration).samples(false);
+    let driver = AutoscaleDriver::new(AutoscaleConfig {
+        min_gpus: 8,
+        max_gpus: start_gpus * 2,
+        ..Default::default()
+    });
+    let mut engine = Engine::with_driver(workload, scheduler, driver, cfg);
+    engine.arm_external(0, Micros::from_secs_f64(10.0));
+    let res = engine.run();
+
+    let mut table = Table::new(vec![
+        "t_s", "offered_rps", "active_gpus", "bad_rate", "scale_delta",
+    ]);
+    for &(t, offered, gpus, bad, delta) in &res.driver.log {
+        table.row(vec![
+            f1(t),
+            f1(offered),
+            gpus.to_string(),
+            pct(bad),
+            delta.to_string(),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 16 — partitioning quality
+// ---------------------------------------------------------------------
+
+/// Fig 16: CDF of imbalance factors for the MILP-style solver vs random
+/// search, 800 models / 20 partitions, many instances.
+pub fn fig16_partition(instances: usize, budget_ms: u64) -> Table {
+    let jobs: Vec<u64> = (0..instances as u64).collect();
+    let results = par_map(jobs, |&seed| {
+        let mut rng = Rng::new(9000 + seed);
+        let p = partition::random_instance(800, 20, &mut rng);
+        let budget = Duration::from_millis(budget_ms);
+        let ours = partition::solve(&p, budget, &mut rng);
+        let rand = partition::random_search(&p, budget, &mut rng);
+        let (or, os) = ours.map(|a| p.imbalance(&a)).unwrap_or((f64::NAN, f64::NAN));
+        let (rr, rs) = rand.map(|a| p.imbalance(&a)).unwrap_or((f64::NAN, f64::NAN));
+        (or, os, rr, rs)
+    });
+    let mut table = Table::new(vec![
+        "metric", "solver_p50", "solver_p90", "random_p50", "random_p90",
+    ]);
+    let col = |f: &dyn Fn(&(f64, f64, f64, f64)) -> f64| -> Vec<f64> {
+        results.iter().map(f).filter(|v| v.is_finite()).collect()
+    };
+    let ours_rate = col(&|r| r.0);
+    let ours_mem = col(&|r| r.1);
+    let rand_rate = col(&|r| r.2);
+    let rand_mem = col(&|r| r.3);
+    table.row(vec![
+        "rate_imbalance".to_string(),
+        f2(percentile(&ours_rate, 50.0)),
+        f2(percentile(&ours_rate, 90.0)),
+        f2(percentile(&rand_rate, 50.0)),
+        f2(percentile(&rand_rate, 90.0)),
+    ]);
+    table.row(vec![
+        "mem_imbalance".to_string(),
+        f2(percentile(&ours_mem, 50.0)),
+        f2(percentile(&ours_mem, 90.0)),
+        f2(percentile(&rand_mem, 50.0)),
+        f2(percentile(&rand_mem, 90.0)),
+    ]);
+    table
+}
+
+// ---------------------------------------------------------------------
+// Figure 17 — RDMA vs TCP incast latency
+// ---------------------------------------------------------------------
+
+/// Fig 17: quantiles of the modeled incast latency distributions.
+pub fn fig17_incast(samples: usize) -> Table {
+    let mut table = Table::new(vec![
+        "network", "min_us", "p50_us", "p99_us", "p9999_us", "tail_over_median",
+    ]);
+    for net in [NetworkModel::Rdma, NetworkModel::Tcp] {
+        let mut rng = Rng::new(0xF17);
+        let mut xs: Vec<f64> = (0..samples).map(|_| net.sample(&mut rng).0 as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = percentile(&xs, 50.0);
+        let p9999 = percentile(&xs, 99.99);
+        table.row(vec![
+            net.name(),
+            f1(xs[0]),
+            f1(med),
+            f1(percentile(&xs, 99.0)),
+            f1(p9999),
+            f2(p9999 / med),
+        ]);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Batch-size CDFs (Fig 1 supplement)
+// ---------------------------------------------------------------------
+
+/// Dump the full batch-size CDF per system (Fig 1's actual curves).
+pub fn fig01_cdfs() -> Table {
+    let model = model_zoo::resnet50_table2();
+    let mut table = Table::new(vec!["system", "batch_size", "cdf"]);
+    for sys in SystemKind::HEADLINE {
+        let exp = GoodputExperiment::new(vec![model.clone()], 8).sim_secs(6.0);
+        let res = exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO));
+        let hist: Histogram = res.metrics.batch_hist_all();
+        for (b, c) in hist.cdf() {
+            table.row(vec![sys.label(), b.to_string(), f2(c)]);
+        }
+    }
+    table
+}

@@ -1,0 +1,225 @@
+//! Goodput measurement (§2.1, §3.4): "Goodput is found by a binary
+//! search over sending a fixed request rate" — the highest offered rate
+//! at which every model's p99 latency stays within its SLO (with
+//! drop-based schedulers: per-model bad fraction ≤ 1%).
+
+use crate::core::profile::ModelSpec;
+use crate::core::time::Micros;
+use crate::metrics::Metrics;
+use crate::scheduler::Scheduler;
+use crate::sim::{Engine, NetworkModel, SimConfig};
+use crate::workload::{Popularity, WorkloadSpec};
+
+/// Default SLO-violation budget for feasibility.
+pub const BAD_THRESHOLD: f64 = 0.01;
+
+/// One goodput experiment: how to build a scheduler for a given cluster,
+/// and the workload shape.
+#[derive(Clone)]
+pub struct GoodputExperiment {
+    pub models: Vec<ModelSpec>,
+    pub num_gpus: usize,
+    pub popularity: Popularity,
+    pub gamma_shape: f64,
+    pub network: NetworkModel,
+    pub sim_secs: f64,
+    pub warmup_secs: f64,
+    pub seed: u64,
+    pub bad_threshold: f64,
+}
+
+impl GoodputExperiment {
+    pub fn new(models: Vec<ModelSpec>, num_gpus: usize) -> Self {
+        GoodputExperiment {
+            models,
+            num_gpus,
+            popularity: Popularity::Equal,
+            gamma_shape: 1.0,
+            network: NetworkModel::Ideal,
+            sim_secs: 10.0,
+            warmup_secs: 2.0,
+            seed: 42,
+            bad_threshold: BAD_THRESHOLD,
+        }
+    }
+
+    pub fn popularity(mut self, p: Popularity) -> Self {
+        self.popularity = p;
+        self
+    }
+
+    pub fn gamma_shape(mut self, s: f64) -> Self {
+        self.gamma_shape = s;
+        self
+    }
+
+    pub fn network(mut self, n: NetworkModel) -> Self {
+        self.network = n;
+        self
+    }
+
+    pub fn sim_secs(mut self, s: f64) -> Self {
+        self.sim_secs = s;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn bad_threshold(mut self, t: f64) -> Self {
+        self.bad_threshold = t;
+        self
+    }
+
+    /// Run one simulation at `rate` with the scheduler produced by `mk`.
+    pub fn run_at<S, F>(&self, rate: f64, mk: &F) -> Metrics
+    where
+        S: Scheduler,
+        F: Fn(&Self) -> S,
+    {
+        let spec = WorkloadSpec::new(self.models.clone(), rate)
+            .popularity(self.popularity)
+            .gamma_shape(self.gamma_shape)
+            .seed(self.seed);
+        let cfg = SimConfig::new(self.num_gpus, Micros::from_secs_f64(self.sim_secs))
+            .network(self.network)
+            .warmup(Micros::from_secs_f64(self.warmup_secs))
+            .samples(false)
+            .seed(self.seed ^ 0x9E37);
+        Engine::new(spec.build(), mk(self), cfg).run().metrics
+    }
+
+    /// Upper bound for the search: aggregate peak throughput if every
+    /// GPU ran its max-SLO batch continuously, padded 2x.
+    pub fn rate_upper_bound(&self) -> f64 {
+        let per_gpu_best: f64 = self
+            .models
+            .iter()
+            .map(|m| m.profile.throughput(m.profile.max_batch_within(m.slo)))
+            .fold(0.0, f64::max);
+        (per_gpu_best * self.num_gpus as f64 * 2.0).max(100.0)
+    }
+
+    /// Binary-search goodput. Returns (goodput, feasible_rate).
+    pub fn goodput<S, F>(&self, mk: F) -> GoodputResult
+    where
+        S: Scheduler,
+        F: Fn(&Self) -> S,
+    {
+        let mut lo = 0.0f64;
+        let mut hi = self.rate_upper_bound();
+        let mut best_metrics: Option<Metrics> = None;
+        let mut best_rate = 0.0;
+        // Expand hi if somehow feasible at the bound (cheap check).
+        for _ in 0..14 {
+            let mid = 0.5 * (lo + hi);
+            if mid < 1.0 {
+                break;
+            }
+            let m = self.run_at(mid, &mk);
+            if m.slo_satisfied(self.bad_threshold) {
+                best_rate = mid;
+                best_metrics = Some(m);
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        match best_metrics {
+            Some(m) => GoodputResult {
+                goodput: m.goodput(),
+                offered: best_rate,
+                metrics: m,
+            },
+            None => {
+                let m = self.run_at(1.0, &mk);
+                GoodputResult {
+                    goodput: 0.0,
+                    offered: 0.0,
+                    metrics: m,
+                }
+            }
+        }
+    }
+}
+
+/// Outcome of a goodput search.
+pub struct GoodputResult {
+    /// Good requests/second at the highest feasible offered rate.
+    pub goodput: f64,
+    /// That offered rate.
+    pub offered: f64,
+    /// Metrics of the run at the frontier.
+    pub metrics: Metrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::deferred::{DeferredConfig, DeferredScheduler};
+    use crate::scheduler::timeout::{TimeoutConfig, TimeoutScheduler};
+
+    fn resnet50() -> ModelSpec {
+        ModelSpec::new("ResNet50", 1.053, 5.072, 25.0)
+    }
+
+    #[test]
+    fn deferred_goodput_close_to_staggered_analysis() {
+        // Table 2: Symphony measured 5264 r/s on 8 GPUs (staggered
+        // analytical bound 5839). Accept the 4800..5900 band.
+        let exp = GoodputExperiment::new(vec![resnet50()], 8).sim_secs(6.0);
+        let res = exp.goodput(|e| {
+            DeferredScheduler::new(
+                e.models.iter().map(|m| m.profile).collect(),
+                e.num_gpus,
+                DeferredConfig::default(),
+            )
+        });
+        assert!(
+            (4600.0..5900.0).contains(&res.goodput),
+            "deferred goodput {}",
+            res.goodput
+        );
+    }
+
+    #[test]
+    fn deferred_beats_eager_on_strong_batching() {
+        let exp = GoodputExperiment::new(vec![resnet50()], 8).sim_secs(5.0);
+        let def = exp
+            .goodput(|e| {
+                DeferredScheduler::new(
+                    e.models.iter().map(|m| m.profile).collect(),
+                    e.num_gpus,
+                    DeferredConfig::default(),
+                )
+            })
+            .goodput;
+        let eager = exp
+            .goodput(|e| {
+                TimeoutScheduler::new(
+                    e.models.iter().map(|m| m.profile).collect(),
+                    e.num_gpus,
+                    TimeoutConfig::eager(),
+                )
+            })
+            .goodput;
+        assert!(def > eager, "deferred {def} vs eager {eager}");
+    }
+
+    #[test]
+    fn infeasible_workload_reports_zero() {
+        // 1 GPU, SLO so tight nothing fits: goodput ~0.
+        let model = ModelSpec::new("impossible", 10.0, 50.0, 20.0);
+        let exp = GoodputExperiment::new(vec![model], 1).sim_secs(2.0);
+        let res = exp.goodput(|e| {
+            DeferredScheduler::new(
+                e.models.iter().map(|m| m.profile).collect(),
+                e.num_gpus,
+                DeferredConfig::default(),
+            )
+        });
+        assert_eq!(res.goodput, 0.0);
+    }
+}

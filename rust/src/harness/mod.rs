@@ -1,0 +1,10 @@
+//! Experiment harness: the goodput search, uniform system construction,
+//! and one entry point per paper table/figure (shared by `cargo bench`
+//! targets and the `symphony` CLI).
+
+pub mod experiments;
+pub mod goodput;
+pub mod systems;
+
+pub use goodput::{GoodputExperiment, GoodputResult, BAD_THRESHOLD};
+pub use systems::SystemKind;

@@ -1,0 +1,137 @@
+//! Uniform construction of all five systems under test, so every
+//! experiment compares them through one interface.
+
+use crate::core::profile::ModelSpec;
+use crate::core::time::Micros;
+use crate::scheduler::clockwork::ClockworkScheduler;
+use crate::scheduler::deferred::{DeferredConfig, DeferredScheduler};
+use crate::scheduler::nexus::NexusScheduler;
+use crate::scheduler::shepherd::ShepherdScheduler;
+use crate::scheduler::timeout::{TimeoutConfig, TimeoutScheduler};
+use crate::scheduler::Scheduler;
+
+/// The systems compared throughout the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SystemKind {
+    /// Symphony's deferred batch scheduling (Algorithm 1).
+    Symphony,
+    /// Clockwork-style: eager, earliest latest-executable-moment.
+    Clockwork,
+    /// Nexus-style: distributed epoch planning, k frontends.
+    Nexus { frontends: usize },
+    /// Shepherd Flex: eager biggest-batch + 3x preemption.
+    Shepherd,
+    /// Pure eager (timeout k = 0).
+    Eager,
+    /// Timeout-based with fixed k.
+    Timeout { k: Micros },
+}
+
+impl SystemKind {
+    pub const BASELINES: [SystemKind; 4] = [
+        SystemKind::Clockwork,
+        SystemKind::Nexus { frontends: 1 },
+        SystemKind::Shepherd,
+        SystemKind::Eager,
+    ];
+
+    /// The paper's four headline systems (Figs 1, 2, 9-12).
+    pub const HEADLINE: [SystemKind; 4] = [
+        SystemKind::Symphony,
+        SystemKind::Clockwork,
+        SystemKind::Nexus { frontends: 1 },
+        SystemKind::Shepherd,
+    ];
+
+    pub fn label(&self) -> String {
+        match self {
+            SystemKind::Symphony => "symphony".into(),
+            SystemKind::Clockwork => "clockwork".into(),
+            SystemKind::Nexus { frontends: 1 } => "nexus".into(),
+            SystemKind::Nexus { frontends } => format!("nexus{frontends}fe"),
+            SystemKind::Shepherd => "shepherd".into(),
+            SystemKind::Eager => "eager".into(),
+            SystemKind::Timeout { k } => format!("timeout({k})"),
+        }
+    }
+
+    /// Build the scheduler for a cluster of `num_gpus` serving `models`.
+    /// `net_bound` is the network-delay budget Symphony subtracts from
+    /// its windows (§5.6).
+    pub fn build(
+        &self,
+        models: &[ModelSpec],
+        num_gpus: usize,
+        net_bound: Micros,
+    ) -> Box<dyn Scheduler> {
+        let profiles: Vec<_> = models.iter().map(|m| m.profile).collect();
+        match self {
+            SystemKind::Symphony => Box::new(DeferredScheduler::new(
+                profiles,
+                num_gpus,
+                DeferredConfig {
+                    net_bound,
+                    max_batch: 0,
+                    shed: true,
+                },
+            )),
+            SystemKind::Clockwork => Box::new(ClockworkScheduler::new(profiles, num_gpus)),
+            SystemKind::Nexus { frontends } => Box::new(NexusScheduler::new(
+                models.iter().map(|m| (m.profile, m.slo)).collect(),
+                num_gpus,
+                *frontends,
+            )),
+            SystemKind::Shepherd => Box::new(ShepherdScheduler::new(profiles, num_gpus)),
+            SystemKind::Eager => Box::new(TimeoutScheduler::new(
+                profiles,
+                num_gpus,
+                TimeoutConfig {
+                    timeout: Micros::ZERO,
+                    max_batch: 0,
+                    net_bound,
+                },
+            )),
+            SystemKind::Timeout { k } => Box::new(TimeoutScheduler::new(
+                profiles,
+                num_gpus,
+                TimeoutConfig {
+                    timeout: *k,
+                    max_batch: 0,
+                    net_bound,
+                },
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_unique() {
+        let labels: Vec<String> = SystemKind::HEADLINE.iter().map(|s| s.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len());
+    }
+
+    #[test]
+    fn builds_all() {
+        let models = vec![ModelSpec::new("m", 1.0, 5.0, 25.0)];
+        for sys in [
+            SystemKind::Symphony,
+            SystemKind::Clockwork,
+            SystemKind::Nexus { frontends: 8 },
+            SystemKind::Shepherd,
+            SystemKind::Eager,
+            SystemKind::Timeout {
+                k: Micros::from_millis_f64(5.0),
+            },
+        ] {
+            let s = sys.build(&models, 4, Micros::ZERO);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

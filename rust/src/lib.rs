@@ -1,0 +1,42 @@
+//! # Symphony — deferred batch scheduling for DNN model serving
+//!
+//! A full reproduction of *"Symphony: Optimized DNN Model Serving using
+//! Deferred Batch Scheduling"* (cs.DC 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the deferred
+//!   batch scheduler ([`scheduler::deferred`]), four baselines
+//!   (Clockwork / Nexus / Shepherd / timeout-eager), the discrete-event
+//!   cluster emulator ([`sim`]), the multithreaded
+//!   ModelThread/RankThread coordinator ([`coordinator`]), the
+//!   autoscaling controller ([`autoscale`]), and the sub-cluster
+//!   partitioner ([`partition`]).
+//! * **Layer 2 (JAX, build-time)** — `python/compile/model.py`, lowered
+//!   to HLO text once per batch size.
+//! * **Layer 1 (Pallas, build-time)** — the fused dense kernels in
+//!   `python/compile/kernels/`, validated against `ref.py`.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the
+//! `xla` crate) and [`serve`] runs them behind the coordinator in real
+//! time — Python never executes on the request path.
+//!
+//! Start with `examples/quickstart.rs`; every table and figure of the
+//! paper regenerates via `cargo bench` (see DESIGN.md §5).
+
+pub mod autoscale;
+pub mod coordinator;
+pub mod core;
+pub mod harness;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod scheduler;
+pub mod serve;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::model_zoo::GpuKind;
+pub use crate::core::profile::{LatencyProfile, ModelSpec};
+pub use crate::core::time::Micros;
+pub use crate::core::types::{GpuId, ModelId, Request, RequestId};

@@ -1,0 +1,323 @@
+//! `symphony` — CLI for the Symphony reproduction.
+//!
+//! ```text
+//! symphony fig <id>              regenerate a paper figure/table
+//! symphony simulate [opts]       one simulation run, printed summary
+//! symphony serve [opts]          real-time serving (sleep or PJRT backend)
+//! symphony zoo [1080ti|a100]     print the model zoo
+//! symphony analytic <model> <slo_ms> <gpus>
+//! symphony partition [models] [parts] [budget_ms]
+//! ```
+//!
+//! (The offline registry has no clap; this is a deliberate, small,
+//! hand-rolled parser.)
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use symphony::core::model_zoo::{self, GpuKind};
+use symphony::core::time::Micros;
+use symphony::harness::{experiments, GoodputExperiment, SystemKind};
+use symphony::partition;
+use symphony::scheduler::analytical;
+use symphony::serve::{serve, BackendKind, ServeConfig};
+use symphony::util::rng::Rng;
+use symphony::util::table::banner;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            usage();
+            return;
+        }
+    };
+    match cmd {
+        "fig" => cmd_fig(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "serve" => cmd_serve(&rest),
+        "zoo" => cmd_zoo(&rest),
+        "analytic" => cmd_analytic(&rest),
+        "partition" => cmd_partition(&rest),
+        "-h" | "--help" | "help" => usage(),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "symphony — deferred batch scheduling (paper reproduction)\n\n\
+         USAGE:\n  symphony fig <1|2|4|6a|6b|7|9|10|11|12|13|14|15|16|17|table2|all>\n  \
+         symphony simulate [--system S] [--gpus N] [--models N] [--rate R] [--slo MS] [--secs S]\n  \
+         symphony serve [--pjrt DIR] [--gpus N] [--rate R] [--secs S]\n  \
+         symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
+         symphony partition [n_models] [parts] [budget_ms]\n\n\
+         systems: symphony clockwork nexus shepherd eager"
+    );
+}
+
+/// Parse `--key value` flags.
+fn flags(rest: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < rest.len() {
+        if let Some(k) = rest[i].strip_prefix("--") {
+            if i + 1 < rest.len() {
+                out.insert(k.to_string(), rest[i + 1].clone());
+                i += 2;
+                continue;
+            }
+            out.insert(k.to_string(), "true".to_string());
+        }
+        i += 1;
+    }
+    out
+}
+
+fn getf(f: &HashMap<String, String>, k: &str, d: f64) -> f64 {
+    f.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn getu(f: &HashMap<String, String>, k: &str, d: usize) -> usize {
+    f.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn parse_system(name: &str) -> SystemKind {
+    match name {
+        "symphony" => SystemKind::Symphony,
+        "clockwork" => SystemKind::Clockwork,
+        "nexus" => SystemKind::Nexus { frontends: 1 },
+        "shepherd" => SystemKind::Shepherd,
+        "eager" => SystemKind::Eager,
+        other => {
+            eprintln!("unknown system {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_fig(rest: &[String]) {
+    let Some(id) = rest.first() else {
+        eprintln!("fig: which one? (1 2 4 6a 6b 7 9 10 11 12 13 14 15 16 17 table2 all)");
+        std::process::exit(2);
+    };
+    run_fig(id);
+}
+
+pub fn run_fig(id: &str) {
+    match id {
+        "1" => {
+            banner("Figure 1: batch size distribution");
+            experiments::fig01_batch_sizes().emit("fig01_batch_sizes");
+            experiments::fig01_cdfs().emit("fig01_cdfs");
+        }
+        "2" => {
+            banner("Figure 2: goodput + GPU utilization vs offered load");
+            experiments::fig02_flattop().emit("fig02_flattop");
+        }
+        "4" | "5" => {
+            banner("Figures 4/5: worked-example traces");
+            experiments::fig04_05_traces().emit("fig04_05_traces");
+        }
+        "6a" => {
+            banner("Figure 6a: batching-effect strength");
+            experiments::fig06a_betaalpha().emit("fig06a_betaalpha");
+        }
+        "6b" => {
+            banner("Figure 6b: timeout-based scheduling");
+            experiments::fig06b_timeout().emit("fig06b_timeout");
+        }
+        "7" => {
+            banner("Figure 7: synthetic workload sweep");
+            experiments::fig07_sweep().emit("fig07_sweep");
+        }
+        "9" => {
+            banner("Figure 9: end-to-end goodput (model zoo)");
+            experiments::fig09_e2e_goodput().emit("fig09_e2e_goodput");
+        }
+        "10" => {
+            banner("Figure 10: minimum GPUs for 15k RPS");
+            experiments::fig10_min_gpus().emit("fig10_min_gpus");
+        }
+        "11" => {
+            banner("Figure 11: workload characteristics");
+            experiments::fig11_workload_chars().emit("fig11_workload_chars");
+        }
+        "12" => {
+            banner("Figure 12: queueing delay");
+            experiments::fig12_queueing().emit("fig12_queueing");
+        }
+        "13" => {
+            banner("Figure 13 (right): goodput vs #GPUs");
+            experiments::fig13_goodput_vs_gpus().emit("fig13_gpus");
+            println!(
+                "(Figure 13 left is the multithreaded-coordinator bench: \
+                 cargo bench --bench fig13_scalability)"
+            );
+        }
+        "14" => {
+            banner("Figure 14: network latency sensitivity");
+            experiments::fig14_network().emit("fig14_network");
+        }
+        "15" => {
+            banner("Figure 15: changing workload + autoscaling (512 GPUs)");
+            experiments::fig15_autoscale(180.0, 512).emit("fig15_autoscale");
+        }
+        "16" => {
+            banner("Figure 16: partitioning quality");
+            experiments::fig16_partition(20, 300).emit("fig16_partition");
+        }
+        "17" => {
+            banner("Figure 17: RDMA vs TCP incast latency");
+            experiments::fig17_incast(200_000).emit("fig17_incast");
+        }
+        "table2" => {
+            banner("Table 2: analytical vs measured");
+            experiments::table2_analytical().emit("table2_analytical");
+        }
+        "all" => {
+            for id in [
+                "1", "2", "4", "6a", "6b", "7", "9", "10", "11", "12", "13", "14",
+                "15", "16", "17", "table2",
+            ] {
+                run_fig(id);
+            }
+        }
+        other => {
+            eprintln!("unknown figure {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_simulate(rest: &[String]) {
+    let f = flags(rest);
+    let sys = parse_system(f.get("system").map(String::as_str).unwrap_or("symphony"));
+    let gpus = getu(&f, "gpus", 8);
+    let n_models = getu(&f, "models", 1);
+    let slo = getf(&f, "slo", 25.0);
+    let rate = getf(&f, "rate", 0.0);
+    let secs = getf(&f, "secs", 8.0);
+    let models = model_zoo::resnet_like_variants(n_models, slo, GpuKind::Gtx1080Ti);
+    let exp = GoodputExperiment::new(models, gpus).sim_secs(secs);
+    if rate > 0.0 {
+        let m = exp.run_at(rate, &|e: &GoodputExperiment| {
+            sys.build(&e.models, e.num_gpus, Micros::ZERO)
+        });
+        println!(
+            "{} @ {rate} rps on {gpus} GPUs: goodput={:.0} bad={:.3} util={:.2} median_batch={}",
+            sys.label(),
+            m.goodput(),
+            m.bad_fraction(),
+            m.utilization(gpus),
+            m.batch_hist_all().median()
+        );
+    } else {
+        let res = exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO));
+        println!(
+            "{} on {gpus} GPUs x {n_models} models (SLO {slo}ms): goodput={:.0} (offered {:.0})",
+            sys.label(),
+            res.goodput,
+            res.offered
+        );
+    }
+}
+
+fn cmd_serve(rest: &[String]) {
+    let f = flags(rest);
+    let gpus = getu(&f, "gpus", 2);
+    let rate = getf(&f, "rate", 300.0);
+    let secs = getf(&f, "secs", 3.0);
+    let backend = match f.get("pjrt") {
+        Some(dir) => BackendKind::Pjrt {
+            artifacts_dir: dir.into(),
+        },
+        None => BackendKind::Sleep,
+    };
+    let models = vec![
+        symphony::core::profile::ModelSpec::new("svc-a", 0.2, 2.0, 50.0),
+        symphony::core::profile::ModelSpec::new("svc-b", 0.2, 2.0, 50.0),
+    ];
+    match serve(ServeConfig {
+        models,
+        num_gpus: gpus,
+        total_rate: rate,
+        duration: Duration::from_secs_f64(secs),
+        backend,
+        seed: 7,
+    }) {
+        Ok(r) => println!("{r:#?}"),
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_zoo(rest: &[String]) {
+    let kind = match rest.first().map(String::as_str) {
+        Some("a100") => GpuKind::A100,
+        _ => GpuKind::Gtx1080Ti,
+    };
+    let mut t = symphony::util::table::Table::new(vec![
+        "model", "alpha_ms", "beta_ms", "beta/alpha", "slo_ms", "maxbatch@slo",
+    ]);
+    for m in model_zoo::zoo(kind) {
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.3}", m.profile.alpha_ms),
+            format!("{:.3}", m.profile.beta_ms),
+            format!("{:.2}", m.profile.batch_effect()),
+            format!("{:.0}", m.slo.as_millis_f64()),
+            m.profile.max_batch_within(m.slo).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_analytic(rest: &[String]) {
+    if rest.len() < 3 {
+        eprintln!("usage: symphony analytic <model> <slo_ms> <gpus>");
+        std::process::exit(2);
+    }
+    let Some(m) = model_zoo::by_name(GpuKind::Gtx1080Ti, &rest[0]) else {
+        eprintln!("model {} not in zoo (try `symphony zoo`)", rest[0]);
+        std::process::exit(2);
+    };
+    let slo = Micros::from_millis_f64(rest[1].parse().expect("slo_ms"));
+    let gpus: u32 = rest[2].parse().expect("gpus");
+    let st = analytical::staggered(&m.profile, slo, gpus);
+    let nc = analytical::no_coordination(&m.profile, slo, gpus);
+    println!(
+        "{}: staggered b={} tput={:.0} r/s | no-coordination b={} tput={:.0} r/s",
+        m.name, st.batch_size, st.throughput, nc.batch_size, nc.throughput
+    );
+}
+
+fn cmd_partition(rest: &[String]) {
+    let n: usize = rest.first().and_then(|v| v.parse().ok()).unwrap_or(800);
+    let parts: usize = rest.get(1).and_then(|v| v.parse().ok()).unwrap_or(20);
+    let budget: u64 = rest.get(2).and_then(|v| v.parse().ok()).unwrap_or(1_000);
+    let mut rng = Rng::new(1);
+    let p = partition::random_instance(n, parts, &mut rng);
+    let ours = partition::solve(&p, Duration::from_millis(budget), &mut rng);
+    let rand = partition::random_search(&p, Duration::from_millis(budget), &mut rng);
+    match (ours, rand) {
+        (Some(a), Some(b)) => {
+            let (ra, sa) = p.imbalance(&a);
+            let (rb, sb) = p.imbalance(&b);
+            println!(
+                "solver: obj={:.2} imbalance rate={ra:.3} mem={sa:.3}\n\
+                 random: obj={:.2} imbalance rate={rb:.3} mem={sb:.3}",
+                p.objective(&a),
+                p.objective(&b)
+            );
+        }
+        _ => println!("no feasible assignment found within budget"),
+    }
+}

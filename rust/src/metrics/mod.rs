@@ -1,0 +1,293 @@
+//! Experiment metrics: goodput / bad rate, queueing delay, batch-size
+//! distributions (Fig 1), GPU utilization (Fig 2) — collected by the
+//! engine, summarized per model and per cluster.
+
+use std::collections::HashMap;
+
+use crate::core::time::Micros;
+use crate::core::types::{ModelId, OutcomeKind};
+use crate::util::stats::{percentile, Histogram};
+
+/// What to record. Latency samples cost memory; the big sweeps turn the
+/// sample vectors off and rely on counters.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsConfig {
+    /// Ignore requests arriving before this time (warm-up).
+    pub warmup: Micros,
+    /// Keep per-request latency / queueing-delay samples.
+    pub record_samples: bool,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        MetricsConfig {
+            warmup: Micros::ZERO,
+            record_samples: true,
+        }
+    }
+}
+
+/// Counters + samples for one model.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMetrics {
+    pub good: u64,
+    pub late: u64,
+    pub dropped: u64,
+    pub unfinished: u64,
+    /// End-to-end latency (arrival → completion) of completed requests, ms.
+    pub latency_ms: Vec<f64>,
+    /// Queueing delay (arrival → batch start) of executed requests, ms.
+    pub queueing_ms: Vec<f64>,
+    /// Batch sizes weighted by request (a request in a batch of 8 adds one
+    /// count to bucket 8) — Fig 1's distribution.
+    pub batch_hist: Histogram,
+}
+
+impl ModelMetrics {
+    pub fn total(&self) -> u64 {
+        self.good + self.late + self.dropped
+    }
+
+    /// Fraction of finished requests that violated their SLO.
+    pub fn bad_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            (self.late + self.dropped) as f64 / t as f64
+        }
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        percentile(&self.latency_ms, 99.0)
+    }
+
+    pub fn median_batch(&self) -> usize {
+        self.batch_hist.median()
+    }
+}
+
+/// Whole-run metrics.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub cfg: MetricsConfig,
+    pub per_model: Vec<ModelMetrics>,
+    /// Batches executed (count, size histogram — per batch, not weighted).
+    pub batches: Histogram,
+    /// Batches canceled by preemption.
+    pub preempted_batches: u64,
+    /// Requests' worth of GPU work thrown away by preemption.
+    pub wasted_work: u64,
+    /// Per-GPU busy time within the measurement window.
+    pub gpu_busy: HashMap<u32, Micros>,
+    /// Measurement window (set by the engine when the run ends).
+    pub window: (Micros, Micros),
+}
+
+impl Metrics {
+    pub fn new(models: usize, cfg: MetricsConfig) -> Self {
+        Metrics {
+            cfg,
+            per_model: vec![ModelMetrics::default(); models],
+            batches: Histogram::new(),
+            preempted_batches: 0,
+            wasted_work: 0,
+            gpu_busy: HashMap::new(),
+            window: (cfg.warmup, cfg.warmup),
+        }
+    }
+
+    #[inline]
+    pub fn in_window(&self, arrival: Micros) -> bool {
+        arrival >= self.cfg.warmup
+    }
+
+    pub fn record_outcome(
+        &mut self,
+        model: ModelId,
+        arrival: Micros,
+        kind: OutcomeKind,
+        start: Option<Micros>,
+        end: Option<Micros>,
+        batch_size: u32,
+    ) {
+        if !self.in_window(arrival) {
+            return;
+        }
+        let m = &mut self.per_model[model.0 as usize];
+        match kind {
+            OutcomeKind::Good => m.good += 1,
+            OutcomeKind::Late => m.late += 1,
+            OutcomeKind::Dropped => m.dropped += 1,
+            OutcomeKind::Unfinished => m.unfinished += 1,
+        }
+        if matches!(kind, OutcomeKind::Good | OutcomeKind::Late) {
+            m.batch_hist.add(batch_size as usize);
+            if self.cfg.record_samples {
+                if let (Some(s), Some(e)) = (start, end) {
+                    m.latency_ms.push((e - arrival).as_millis_f64());
+                    m.queueing_ms.push((s - arrival).as_millis_f64());
+                }
+            }
+        }
+    }
+
+    pub fn record_batch(&mut self, size: u32, start: Micros) {
+        if self.in_window(start) {
+            self.batches.add(size as usize);
+        }
+    }
+
+    /// Duration of the measurement window in seconds.
+    pub fn window_secs(&self) -> f64 {
+        (self.window.1.saturating_sub(self.window.0)).as_secs_f64()
+    }
+
+    /// Good requests per second over the measurement window (the paper's
+    /// goodput once the offered rate is at the feasibility frontier).
+    pub fn goodput(&self) -> f64 {
+        let good: u64 = self.per_model.iter().map(|m| m.good).sum();
+        let secs = self.window_secs();
+        if secs == 0.0 {
+            0.0
+        } else {
+            good as f64 / secs
+        }
+    }
+
+    pub fn total_finished(&self) -> u64 {
+        self.per_model.iter().map(|m| m.total()).sum()
+    }
+
+    /// Aggregate SLO-violation fraction.
+    pub fn bad_fraction(&self) -> f64 {
+        let total: u64 = self.total_finished();
+        if total == 0 {
+            return 0.0;
+        }
+        let bad: u64 = self.per_model.iter().map(|m| m.late + m.dropped).sum();
+        bad as f64 / total as f64
+    }
+
+    /// Does every model meet the goodput criterion (§2.1: p99 < SLO; with
+    /// drop-based schedulers this is a ≤1% bad-fraction test)?
+    /// Models with very few samples are judged on the aggregate instead.
+    pub fn slo_satisfied(&self, bad_threshold: f64) -> bool {
+        if self.bad_fraction() > bad_threshold {
+            return false;
+        }
+        self.per_model
+            .iter()
+            .filter(|m| m.total() >= 100)
+            .all(|m| m.bad_fraction() <= bad_threshold)
+    }
+
+    /// Mean GPU busy fraction over the window (Fig 2 right).
+    pub fn utilization(&self, num_gpus: usize) -> f64 {
+        let secs = self.window_secs();
+        if secs == 0.0 || num_gpus == 0 {
+            return 0.0;
+        }
+        let busy: f64 = self.gpu_busy.values().map(|b| b.as_secs_f64()).sum();
+        busy / (secs * num_gpus as f64)
+    }
+
+    /// Number of GPUs that did any work in the window ("GPUs used").
+    pub fn gpus_used(&self) -> usize {
+        self.gpu_busy.values().filter(|b| b.0 > 0).count()
+    }
+
+    /// Request-weighted batch-size histogram across all models (Fig 1).
+    pub fn batch_hist_all(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for m in &self.per_model {
+            h.merge(&m.batch_hist);
+        }
+        h
+    }
+
+    /// All queueing-delay samples pooled (Fig 12).
+    pub fn queueing_all(&self) -> Vec<f64> {
+        let mut v = Vec::new();
+        for m in &self.per_model {
+            v.extend_from_slice(&m.queueing_ms);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_excludes_early_requests() {
+        let mut m = Metrics::new(
+            1,
+            MetricsConfig {
+                warmup: Micros(1_000),
+                record_samples: true,
+            },
+        );
+        m.record_outcome(
+            ModelId(0),
+            Micros(500),
+            OutcomeKind::Good,
+            Some(Micros(600)),
+            Some(Micros(700)),
+            4,
+        );
+        assert_eq!(m.per_model[0].good, 0);
+        m.record_outcome(
+            ModelId(0),
+            Micros(1_500),
+            OutcomeKind::Good,
+            Some(Micros(1_600)),
+            Some(Micros(1_700)),
+            4,
+        );
+        assert_eq!(m.per_model[0].good, 1);
+        assert_eq!(m.per_model[0].latency_ms.len(), 1);
+        assert!((m.per_model[0].latency_ms[0] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_and_bad_fraction() {
+        let mut m = Metrics::new(2, MetricsConfig::default());
+        for i in 0..98u64 {
+            m.record_outcome(
+                ModelId((i % 2) as u32),
+                Micros(i),
+                OutcomeKind::Good,
+                Some(Micros(100)),
+                Some(Micros(200)),
+                8,
+            );
+        }
+        m.record_outcome(ModelId(0), Micros(1), OutcomeKind::Dropped, None, None, 0);
+        m.record_outcome(
+            ModelId(1),
+            Micros(2),
+            OutcomeKind::Late,
+            Some(Micros(10)),
+            Some(Micros(99)),
+            2,
+        );
+        m.window = (Micros::ZERO, Micros::from_secs_f64(2.0));
+        assert_eq!(m.total_finished(), 100);
+        assert!((m.bad_fraction() - 0.02).abs() < 1e-12);
+        assert!((m.goodput() - 49.0).abs() < 1e-9);
+        assert!(!m.slo_satisfied(0.01));
+        assert!(m.slo_satisfied(0.05));
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut m = Metrics::new(1, MetricsConfig::default());
+        m.window = (Micros::ZERO, Micros::from_secs_f64(10.0));
+        m.gpu_busy.insert(0, Micros::from_secs_f64(5.0));
+        m.gpu_busy.insert(1, Micros::from_secs_f64(0.0));
+        assert!((m.utilization(2) - 0.25).abs() < 1e-12);
+        assert_eq!(m.gpus_used(), 1);
+    }
+}

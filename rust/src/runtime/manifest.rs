@@ -1,0 +1,151 @@
+//! Parsers for the build-time artifact metadata: `manifest.tsv` (batch
+//! size → artifact path) and `profile.tsv` (measured CPU ℓ(b) + fitted
+//! α/β) written by `python/compile/aot.py`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::profile::LatencyProfile;
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub batch_size: u32,
+    pub artifact: String,
+    pub input_shape: String,
+    pub output_shape: String,
+}
+
+/// Parsed `manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if !header.starts_with("batch_size\t") {
+            bail!("unexpected manifest header: {header}");
+        }
+        let mut entries = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {} malformed: {line}", i + 2);
+            }
+            entries.push(ManifestEntry {
+                batch_size: cols[0].parse().context("batch_size")?,
+                artifact: cols[1].to_string(),
+                input_shape: cols[2].to_string(),
+                output_shape: cols[3].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// Parsed `profile.tsv`: measured per-batch latency + fitted α/β.
+#[derive(Clone, Debug)]
+pub struct MeasuredProfile {
+    pub fitted: LatencyProfile,
+    /// (batch_size, measured ms).
+    pub points: Vec<(u32, f64)>,
+}
+
+impl MeasuredProfile {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut alpha = None;
+        let mut beta = None;
+        let mut points = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# fitted ") {
+                for tok in rest.split_whitespace() {
+                    if let Some(v) = tok.strip_prefix("alpha_ms=") {
+                        alpha = v.parse::<f64>().ok();
+                    } else if let Some(v) = tok.strip_prefix("beta_ms=") {
+                        beta = v.parse::<f64>().ok();
+                    }
+                }
+            } else if !line.starts_with('#') && !line.starts_with("batch_size") {
+                let cols: Vec<&str> = line.split('\t').collect();
+                if cols.len() == 2 {
+                    if let (Ok(b), Ok(ms)) = (cols[0].parse(), cols[1].parse()) {
+                        points.push((b, ms));
+                    }
+                }
+            }
+        }
+        let (Some(a), Some(b)) = (alpha, beta) else {
+            bail!("profile.tsv missing fitted alpha/beta");
+        };
+        // The CPU fit can produce a tiny or even negative beta; clamp to
+        // a small positive cost so ℓ stays a valid profile.
+        Ok(MeasuredProfile {
+            fitted: LatencyProfile::new(a.max(1e-6), b.max(0.0)),
+            points,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let text = "batch_size\tartifact\tinput_shape\toutput_shape\n\
+                    1\tmodel_b1.hlo.txt\t1x32x32x3\t1x64\n\
+                    8\tmodel_b8.hlo.txt\t8x32x32x3\t8x64\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[1].batch_size, 8);
+        assert_eq!(m.entries[1].artifact, "model_b8.hlo.txt");
+    }
+
+    #[test]
+    fn parse_manifest_rejects_garbage() {
+        assert!(Manifest::parse("nope\n").is_err());
+        assert!(Manifest::parse("batch_size\tartifact\tinput_shape\toutput_shape\n").is_err());
+        assert!(Manifest::parse(
+            "batch_size\tartifact\tinput_shape\toutput_shape\n1\tonly-two\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_profile() {
+        let text = "# fitted alpha_ms=0.036000 beta_ms=0.058000\n\
+                    batch_size\tlatency_ms\n1\t0.1\n2\t0.13\n";
+        let p = MeasuredProfile::parse(text).unwrap();
+        assert!((p.fitted.alpha_ms - 0.036).abs() < 1e-9);
+        assert!((p.fitted.beta_ms - 0.058).abs() < 1e-9);
+        assert_eq!(p.points.len(), 2);
+    }
+
+    #[test]
+    fn parse_profile_requires_fit() {
+        assert!(MeasuredProfile::parse("batch_size\tlatency_ms\n1\t0.1\n").is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! `GetBatch` (Algorithm 1, line 2): per-model FIFO queue + the
+//! batch-gathering policy that returns the maximum batch that can still
+//! finish within the head request's deadline, dropping heads that can no
+//! longer run at all.
+
+use std::collections::VecDeque;
+
+use crate::core::profile::LatencyProfile;
+use crate::core::time::Micros;
+use crate::core::types::{Request, RequestId};
+
+/// A model's pending-request queue. Requests of one model share an SLO,
+/// so FIFO order is deadline order.
+#[derive(Clone, Debug, Default)]
+pub struct ModelQueue {
+    q: VecDeque<Request>,
+}
+
+/// Result of `get_batch`.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    /// The batch (a prefix of the queue); empty if nothing can run.
+    pub batch: Vec<RequestId>,
+    /// Deadline of the batch = earliest deadline among its requests.
+    pub deadline: Micros,
+    /// Requests dropped because even a batch of 1 can't meet their SLO.
+    pub dropped: Vec<RequestId>,
+}
+
+impl ModelQueue {
+    pub fn new() -> Self {
+        ModelQueue::default()
+    }
+
+    pub fn push(&mut self, r: Request) {
+        debug_assert!(
+            self.q.back().map_or(true, |b| b.deadline <= r.deadline),
+            "queue must stay deadline-ordered"
+        );
+        self.q.push_back(r);
+    }
+
+    /// Re-insert preempted requests, restoring global deadline order
+    /// (a merge — preempted requests usually all precede the queue, but
+    /// same-timestamp arrivals and repeated preemptions can interleave).
+    pub fn push_front_sorted(&mut self, mut rs: Vec<Request>) {
+        rs.sort_by_key(|r| r.deadline);
+        let mut merged = VecDeque::with_capacity(self.q.len() + rs.len());
+        let mut old = std::mem::take(&mut self.q);
+        let mut it = rs.into_iter().peekable();
+        while let Some(front) = old.front() {
+            while it.peek().map_or(false, |r| r.deadline <= front.deadline) {
+                merged.push_back(it.next().unwrap());
+            }
+            merged.push_back(old.pop_front().unwrap());
+        }
+        merged.extend(it);
+        self.q = merged;
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn head_deadline(&self) -> Option<Micros> {
+        self.q.front().map(|r| r.deadline)
+    }
+
+    pub fn head_arrival(&self) -> Option<Micros> {
+        self.q.front().map(|r| r.arrival)
+    }
+
+    /// Plan the maximum batch that can start at `start` and finish by the
+    /// head deadline, after dropping hopeless heads. `budget_slack` is
+    /// subtracted from every deadline (network-delay bound, Fig 18's
+    /// `delay(bs)`), `max_batch` caps the size (0 = uncapped).
+    pub fn plan(
+        &mut self,
+        start: Micros,
+        profile: &LatencyProfile,
+        budget_slack: Micros,
+        max_batch: u32,
+    ) -> BatchPlan {
+        self.plan_target(start, profile, budget_slack, max_batch, 0)
+    }
+
+    /// `plan` with Nexus-style *drop-head batch gathering* (§3.2: "the
+    /// batch-gathering algorithm can prematurely drop the head of the
+    /// queue in order to maintain a larger target batch size"). When the
+    /// queue holds at least `target` requests but the (stale) head's
+    /// deadline would force a batch smaller than `target`, heads are
+    /// shed until the achievable batch recovers — this is what gives
+    /// goodput *stability* under overload (§3.5): bad rate ≈ (o−p)/o
+    /// instead of a collapsing batch-size death spiral. `target = 0`
+    /// disables the policy.
+    pub fn plan_target(
+        &mut self,
+        start: Micros,
+        profile: &LatencyProfile,
+        budget_slack: Micros,
+        max_batch: u32,
+        target: u32,
+    ) -> BatchPlan {
+        let mut plan = BatchPlan::default();
+        // Drop heads that cannot run even alone.
+        while let Some(front) = self.q.front() {
+            let budget = front.deadline.saturating_sub(start + budget_slack);
+            if profile.max_batch_within(budget) == 0 {
+                plan.dropped.push(front.id);
+                self.q.pop_front();
+            } else {
+                break;
+            }
+        }
+        // Drop stale heads that would cap the batch below the target
+        // while enough fresher requests are queued to reach it.
+        if target > 0 {
+            while let Some(front) = self.q.front() {
+                let budget = front.deadline.saturating_sub(start + budget_slack);
+                let b = profile.max_batch_within(budget);
+                let reachable = target.min(self.q.len() as u32);
+                if b < reachable {
+                    plan.dropped.push(front.id);
+                    self.q.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        let Some(front) = self.q.front() else {
+            return plan;
+        };
+        let budget = front.deadline.saturating_sub(start + budget_slack);
+        let mut b = profile.max_batch_within(budget);
+        if max_batch > 0 {
+            b = b.min(max_batch);
+        }
+        let b = (b as usize).min(self.q.len());
+        plan.deadline = front.deadline;
+        plan.batch = self.q.iter().take(b).map(|r| r.id).collect();
+        plan
+    }
+
+    /// Like [`plan_target`] but without materializing the batch id
+    /// vector — candidate (re)computation only needs the count, and it
+    /// runs on every request arrival (§Perf: this is the scheduler's
+    /// hottest allocation).
+    pub fn plan_len(
+        &mut self,
+        start: Micros,
+        profile: &LatencyProfile,
+        budget_slack: Micros,
+        max_batch: u32,
+        target: u32,
+    ) -> (usize, Micros, Vec<RequestId>) {
+        let mut dropped = Vec::new();
+        while let Some(front) = self.q.front() {
+            let budget = front.deadline.saturating_sub(start + budget_slack);
+            if profile.max_batch_within(budget) == 0 {
+                dropped.push(front.id);
+                self.q.pop_front();
+            } else {
+                break;
+            }
+        }
+        if target > 0 {
+            while let Some(front) = self.q.front() {
+                let budget = front.deadline.saturating_sub(start + budget_slack);
+                let b = profile.max_batch_within(budget);
+                let reachable = target.min(self.q.len() as u32);
+                if b < reachable {
+                    dropped.push(front.id);
+                    self.q.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        let Some(front) = self.q.front() else {
+            return (0, Micros::ZERO, dropped);
+        };
+        let budget = front.deadline.saturating_sub(start + budget_slack);
+        let mut b = profile.max_batch_within(budget);
+        if max_batch > 0 {
+            b = b.min(max_batch);
+        }
+        ((b as usize).min(self.q.len()), front.deadline, dropped)
+    }
+
+    /// Remove the first `n` requests (they were dispatched).
+    pub fn take(&mut self, n: usize) -> Vec<RequestId> {
+        (0..n).map(|_| self.q.pop_front().unwrap().id).collect()
+    }
+
+    /// Drop every queued request (used at shutdown).
+    pub fn drain_ids(&mut self) -> Vec<RequestId> {
+        self.q.drain(..).map(|r| r.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::types::ModelId;
+
+    fn req(id: u64, arrival_ms: f64, deadline_ms: f64) -> Request {
+        Request {
+            id: RequestId(id),
+            model: ModelId(0),
+            arrival: Micros::from_millis_f64(arrival_ms),
+            deadline: Micros::from_millis_f64(deadline_ms),
+        }
+    }
+
+    #[test]
+    fn plan_max_fit() {
+        // ℓ(b) = b + 5 (ms), head deadline 12ms, start at 0: fits b=7,
+        // but only 4 queued.
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        for i in 0..4 {
+            q.push(req(i, 0.75 * i as f64, 12.0 + 0.75 * i as f64));
+        }
+        let plan = q.plan(Micros::ZERO, &p, Micros::ZERO, 0);
+        assert_eq!(plan.batch.len(), 4);
+        assert_eq!(plan.deadline, Micros::from_millis_f64(12.0));
+        assert!(plan.dropped.is_empty());
+    }
+
+    #[test]
+    fn plan_caps_at_deadline() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        for i in 0..20 {
+            q.push(req(i, 0.0, 12.0));
+        }
+        // At start=0, budget=12 => max fit ℓ(7)=12 => b=7.
+        let plan = q.plan(Micros::ZERO, &p, Micros::ZERO, 0);
+        assert_eq!(plan.batch.len(), 7);
+        // With slack 2ms, budget=10 => b=5.
+        let plan = q.plan(Micros::ZERO, &p, Micros::from_millis_f64(2.0), 0);
+        assert_eq!(plan.batch.len(), 5);
+        // With max_batch=3.
+        let plan = q.plan(Micros::ZERO, &p, Micros::ZERO, 3);
+        assert_eq!(plan.batch.len(), 3);
+    }
+
+    #[test]
+    fn plan_drops_hopeless_heads() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        q.push(req(0, 0.0, 10.0));
+        q.push(req(1, 1.0, 11.0));
+        q.push(req(2, 20.0, 32.0));
+        // At t=6, head needs ℓ(1)=6 > 10-6=4 -> dropped; same for id 1
+        // (11-6=5 < 6); id 2 fits.
+        let plan = q.plan(Micros::from_millis_f64(6.0), &p, Micros::ZERO, 0);
+        assert_eq!(plan.dropped, vec![RequestId(0), RequestId(1)]);
+        assert_eq!(plan.batch, vec![RequestId(2)]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn take_removes_prefix() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        for i in 0..5 {
+            q.push(req(i, 0.0, 100.0));
+        }
+        let plan = q.plan(Micros::ZERO, &p, Micros::ZERO, 3);
+        assert_eq!(plan.batch.len(), 3);
+        let taken = q.take(3);
+        assert_eq!(taken, vec![RequestId(0), RequestId(1), RequestId(2)]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn preempted_requests_reinserted_in_order() {
+        let mut q = ModelQueue::new();
+        q.push(req(5, 10.0, 40.0));
+        q.push_front_sorted(vec![req(2, 3.0, 33.0), req(1, 2.0, 32.0)]);
+        assert_eq!(q.head_deadline(), Some(Micros::from_millis_f64(32.0)));
+        assert_eq!(q.len(), 3);
+        let taken = q.take(3);
+        assert_eq!(taken, vec![RequestId(1), RequestId(2), RequestId(5)]);
+    }
+}

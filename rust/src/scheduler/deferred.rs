@@ -1,0 +1,382 @@
+//! Symphony's deferred batch scheduler — Algorithm 1 / Figure 18.
+//!
+//! Per model, one *candidate batch* with a schedulable window
+//! `[exec, latest]` where
+//!
+//! ```text
+//! frontrun = d − ℓ(b+1) − net      exec = max(now, frontrun)
+//! latest   = d − ℓ(b)   − net
+//! ```
+//!
+//! (§3.1: dispatching at *frontrun* keeps the batching efficiency of
+//! *latest* — any request arriving after frontrun could not join the
+//! batch without violating the deadline — while reducing GPU idle time.)
+//!
+//! Matchmaking (§3.2):
+//! * a model timer fires at `exec`; the scheduler picks the free GPU
+//!   with the **smallest id** (consolidation — high-id GPUs stay idle so
+//!   the autoscaler can reclaim them);
+//! * when a GPU frees, it picks among schedulable candidates
+//!   (`exec ≤ now ≤ latest`) the one whose `latest` is **closest**
+//!   (urgency first).
+//!
+//! Data structures give the paper's `O(log M + log G)` bounds: a
+//! `BTreeSet<(latest, model)>` of ready candidates and a `BTreeSet<GpuId>`
+//! of free GPUs.
+
+use std::collections::BTreeSet;
+
+use crate::core::profile::LatencyProfile;
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId, Request};
+use crate::scheduler::batch_policy::ModelQueue;
+use crate::scheduler::{Command, Scheduler, TimerKey};
+
+/// A candidate batch (Algorithm 1: `c_M = (B, exec, latest)`).
+/// The request set is the current queue prefix of length `size`; it is
+/// re-materialized at dispatch ("Update exec", line 10).
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    size: u32,
+    exec: Micros,
+    latest: Micros,
+    /// In the ready set (exec has passed, awaiting a GPU)?
+    ready: bool,
+}
+
+struct MState {
+    queue: ModelQueue,
+    profile: LatencyProfile,
+    cand: Option<Candidate>,
+}
+
+/// Configuration for the deferred scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct DeferredConfig {
+    /// High-percentile network-delay bound budgeted per dispatch (§5.6).
+    pub net_bound: Micros,
+    /// Batch-size cap (0 = uncapped).
+    pub max_batch: u32,
+    /// Overload shedding via drop-head batch gathering (§3.2/§3.5).
+    /// Disable only for ablations — without it goodput loses the
+    /// flat-top under overload.
+    pub shed: bool,
+}
+
+impl Default for DeferredConfig {
+    fn default() -> Self {
+        DeferredConfig {
+            net_bound: Micros::ZERO,
+            max_batch: 0,
+            shed: true,
+        }
+    }
+}
+
+pub struct DeferredScheduler {
+    models: Vec<MState>,
+    free_gpus: BTreeSet<GpuId>,
+    /// Schedulable candidates ordered by urgency: (latest, model).
+    ready: BTreeSet<(Micros, ModelId)>,
+    cfg: DeferredConfig,
+    num_gpus: usize,
+}
+
+impl DeferredScheduler {
+    pub fn new(profiles: Vec<LatencyProfile>, num_gpus: usize, cfg: DeferredConfig) -> Self {
+        DeferredScheduler {
+            models: profiles
+                .into_iter()
+                .map(|profile| MState {
+                    queue: ModelQueue::new(),
+                    profile,
+                    cand: None,
+                })
+                .collect(),
+            free_gpus: (0..num_gpus as u32).map(GpuId).collect(),
+            ready: BTreeSet::new(),
+            cfg,
+            num_gpus,
+        }
+    }
+
+    /// Overload-shedding target for the drop-head batch-gathering policy
+    /// (§3.2 / §3.5). Start from the staggered-execution optimal batch
+    /// b* (largest b with `(1 + 1/N)·ℓ(b) ≤ SLO`, §3.3), then relax to
+    /// the smallest batch achieving ≥90% of b*'s throughput — for
+    /// weak-batching models (BERT-like) that is b = 1, so no useful work
+    /// is ever shed; for strong-batching models the queue head is kept
+    /// fresh enough that goodput stays at the flat-top under overload.
+    fn target_batch(profile: &LatencyProfile, slo: Micros, n: usize, max_batch: u32) -> u32 {
+        let budget = Micros((slo.0 as f64 / (1.0 + 1.0 / n.max(1) as f64)) as u64);
+        let mut b_star = profile.max_batch_within(budget);
+        if max_batch > 0 {
+            // Never shed toward a batch the cap forbids — that would
+            // drop requests forever chasing an unreachable target.
+            b_star = b_star.min(max_batch);
+        }
+        if b_star <= 1 {
+            return b_star;
+        }
+        let goal = 0.9 * profile.throughput(b_star);
+        for b in 1..b_star {
+            if profile.throughput(b) >= goal {
+                return b;
+            }
+        }
+        b_star
+    }
+
+    fn clear_candidate(&mut self, m: ModelId) {
+        if let Some(c) = self.models[m.0 as usize].cand.take() {
+            if c.ready {
+                self.ready.remove(&(c.latest, m));
+            }
+        }
+    }
+
+    /// `UpdateCandidate(M)` — recompute the candidate batch and its
+    /// window; arm timers / try to dispatch as appropriate.
+    fn update_candidate(&mut self, m: ModelId, now: Micros, out: &mut Vec<Command>) {
+        self.clear_candidate(m);
+        let max_batch = self.cfg.max_batch;
+        let slack = self.cfg.net_bound;
+        let n = self.num_gpus;
+        let st = &mut self.models[m.0 as usize];
+        let target = match (st.queue.head_deadline(), st.queue.head_arrival()) {
+            (Some(d), Some(a)) if self.cfg.shed => {
+                Self::target_batch(&st.profile, d - a, n, max_batch)
+            }
+            _ => 0,
+        };
+        let (b, d, dropped) = st
+            .queue
+            .plan_len(now, &st.profile, slack, max_batch, target);
+        if !dropped.is_empty() {
+            out.push(Command::Drop(dropped));
+        }
+        if b == 0 {
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            out.push(Command::CancelTimer { key: TimerKey::ModelAux(m) });
+            return;
+        }
+        let b = b as u32;
+        let frontrun = d.saturating_sub(st.profile.latency(b + 1) + slack);
+        let latest = d.saturating_sub(st.profile.latency(b) + slack);
+        let exec = frontrun.max(now);
+        debug_assert!(exec <= latest, "window inverted: exec {exec:?} > latest {latest:?}");
+        let cand = Candidate {
+            size: b,
+            exec,
+            latest,
+            ready: false,
+        };
+        self.models[m.0 as usize].cand = Some(cand);
+
+        if exec > now {
+            // Defer: wait for the frontrun moment (§3.1 — "we explicitly
+            // disallow dispatching a batch prior to frontrun").
+            out.push(Command::SetTimer {
+                key: TimerKey::Model(m),
+                at: exec,
+            });
+            out.push(Command::CancelTimer { key: TimerKey::ModelAux(m) });
+        } else {
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            self.enter_ready(m, now, out);
+        }
+    }
+
+    /// The candidate's window is open — dispatch if a GPU is free, else
+    /// park it in the ready set until a GPU frees or `latest` expires.
+    fn enter_ready(&mut self, m: ModelId, now: Micros, out: &mut Vec<Command>) {
+        // OnModelTimer: G* = argmin id of free GPUs.
+        if let Some(&gpu) = self.free_gpus.iter().next() {
+            self.dispatch(m, gpu, now, out);
+            return;
+        }
+        let st = &mut self.models[m.0 as usize];
+        let c = st.cand.as_mut().expect("enter_ready without candidate");
+        c.ready = true;
+        let latest = c.latest;
+        self.ready.insert((latest, m));
+        // Revalidate just past expiry: the batch shrinks and the window
+        // moves; repeated shrinking eventually drops hopeless heads.
+        out.push(Command::SetTimer {
+            key: TimerKey::ModelAux(m),
+            at: Micros(latest.0 + 1),
+        });
+    }
+
+    /// `Dispatch(M, G)` — re-materialize the batch at dispatch time
+    /// ("Update exec"), send it, and immediately prepare the next
+    /// candidate.
+    fn dispatch(&mut self, m: ModelId, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.clear_candidate(m);
+        let max_batch = self.cfg.max_batch;
+        let slack = self.cfg.net_bound;
+        let n = self.num_gpus;
+        let st = &mut self.models[m.0 as usize];
+        let target = match (st.queue.head_deadline(), st.queue.head_arrival()) {
+            (Some(d), Some(a)) if self.cfg.shed => {
+                Self::target_batch(&st.profile, d - a, n, max_batch)
+            }
+            _ => 0,
+        };
+        let plan = st
+            .queue
+            .plan_target(now, &st.profile, slack, max_batch, target);
+        if !plan.dropped.is_empty() {
+            out.push(Command::Drop(plan.dropped.clone()));
+        }
+        if plan.batch.is_empty() {
+            // Everything expired between scheduling and dispatch.
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            return;
+        }
+        let n = plan.batch.len();
+        let requests = st.queue.take(n);
+        self.free_gpus.remove(&gpu);
+        out.push(Command::Dispatch {
+            gpu,
+            model: m,
+            requests,
+        });
+        // Prepare the next batch from the remaining queue.
+        self.update_candidate(m, now, out);
+    }
+
+    /// `OnGpuTimer(G)` — find the most urgent schedulable candidate.
+    fn match_gpu(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        loop {
+            let Some(&(latest, m)) = self.ready.iter().next() else {
+                return; // no ready candidates; GPU stays free
+            };
+            if latest < now {
+                // Expired while waiting — recompute (shrinks the batch,
+                // possibly drops heads) and retry. The recompute may
+                // itself dispatch to `gpu` (its enter_ready sees the
+                // free set); stop if the GPU got taken.
+                self.update_candidate(m, now, out);
+                if !self.free_gpus.contains(&gpu) {
+                    return;
+                }
+                continue;
+            }
+            self.dispatch(m, gpu, now, out);
+            return;
+        }
+    }
+
+    /// Total queued requests (coordination/diagnostics).
+    pub fn queued(&self) -> usize {
+        self.models.iter().map(|m| m.queue.len()).sum()
+    }
+}
+
+impl Scheduler for DeferredScheduler {
+    fn on_request(&mut self, req: Request, now: Micros, out: &mut Vec<Command>) {
+        let m = req.model;
+        self.models[m.0 as usize].queue.push(req);
+        self.update_candidate(m, now, out);
+    }
+
+    fn on_timer(&mut self, key: TimerKey, now: Micros, out: &mut Vec<Command>) {
+        match key {
+            // The frontrun moment arrived.
+            TimerKey::Model(m) => {
+                if self.models[m.0 as usize].cand.is_some() {
+                    self.enter_ready(m, now, out);
+                }
+            }
+            // Candidate expired un-dispatched; recompute.
+            TimerKey::ModelAux(m) => self.update_candidate(m, now, out),
+            _ => {}
+        }
+    }
+
+    fn on_gpu_free(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.free_gpus.insert(gpu);
+        self.match_gpu(gpu, now, out);
+    }
+
+    fn on_gpu_added(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.free_gpus.insert(gpu);
+        self.match_gpu(gpu, now, out);
+    }
+
+    fn on_gpu_removed(&mut self, gpu: GpuId, _now: Micros, _out: &mut Vec<Command>) {
+        self.free_gpus.remove(&gpu);
+    }
+
+    fn name(&self) -> &'static str {
+        "symphony"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::profile::ModelSpec;
+    use crate::metrics::Metrics;
+    use crate::sim::{Engine, SimConfig};
+    use crate::workload::Workload;
+
+    /// §3.3 worked example: ℓ(b)=b+5 ms, SLO 12 ms, arrivals every
+    /// 0.75 ms, 3 GPUs — first batch must be {R1..R4} dispatched at t=2
+    /// (frontrun of b=4: 12 − ℓ(5) = 2).
+    fn fig4_engine(n_req: usize) -> (Metrics, Vec<crate::sim::TraceEntry>) {
+        let model = ModelSpec::new("m", 1.0, 5.0, 12.0);
+        let times: Vec<Micros> = (0..n_req)
+            .map(|i| Micros::from_millis_f64(0.75 * i as f64))
+            .collect();
+        let workload = Workload::explicit(vec![model.clone()], vec![times]);
+        let sched =
+            DeferredScheduler::new(vec![model.profile], 3, DeferredConfig::default());
+        let cfg = SimConfig::new(3, Micros::from_secs_f64(1.0)).trace(true);
+        let res = Engine::new(workload, sched, cfg).run();
+        (res.metrics, res.trace)
+    }
+
+    #[test]
+    fn fig4_first_batch_is_four_at_t2() {
+        let (_metrics, trace) = fig4_engine(16);
+        assert!(!trace.is_empty());
+        let first = &trace[0];
+        // §3.3: frontrun = 12 − ℓ(5) = 2, latest = 3; R4 arrives at 2.25
+        // inside the window, so the batch {R1..R4} dispatches right then
+        // ("At t = 2.25, R4 arrives ... the first batch, including the
+        // first four requests, is dispatched").
+        assert_eq!(first.size, 4, "first batch size");
+        assert_eq!(first.start, Micros::from_millis_f64(2.25), "window dispatch");
+    }
+
+    #[test]
+    fn fig4_staggered_pattern_sustains() {
+        let (metrics, trace) = fig4_engine(64);
+        // All requests good, no drops.
+        assert_eq!(metrics.per_model[0].dropped, 0);
+        assert_eq!(metrics.per_model[0].late, 0);
+        // After warm-up the batches stabilize at size 4 across 3 GPUs.
+        let steady: Vec<u32> = trace.iter().skip(3).map(|t| t.size).collect();
+        assert!(steady.iter().all(|&s| s == 4), "steady sizes {steady:?}");
+        // Staggered: consecutive batches on different GPUs.
+        for w in trace.windows(2) {
+            assert_ne!(w[0].gpu, w[1].gpu, "consecutive batches staggered");
+        }
+    }
+
+    #[test]
+    fn window_never_violates_slo() {
+        // Deferred scheduling must never complete a request late.
+        let model = ModelSpec::new("m", 2.05, 5.378, 27.0);
+        let spec = crate::workload::WorkloadSpec::new(vec![model.clone()], 3000.0).seed(5);
+        let sched =
+            DeferredScheduler::new(vec![model.profile], 8, DeferredConfig::default());
+        let cfg = SimConfig::new(8, Micros::from_secs_f64(5.0));
+        let res = Engine::new(spec.build(), sched, cfg).run();
+        let metrics = res.metrics;
+        assert_eq!(metrics.per_model[0].late, 0, "late requests under deferred");
+        assert!(metrics.per_model[0].good > 1000);
+    }
+}

@@ -1,0 +1,121 @@
+//! The scheduler interface shared by Symphony's deferred batch scheduler
+//! and all baselines, plus the command vocabulary they use to drive a
+//! cluster (simulated or real).
+//!
+//! A scheduler is a *pure event handler*: the engine (or the real-time
+//! coordinator) feeds it `on_request` / `on_timer` / `on_gpu_free`
+//! events with the current time, and it emits `Command`s. This is the
+//! same shape as the paper's Figure 18 pseudocode, factored so one
+//! implementation runs under the discrete-event simulator, the
+//! multithreaded coordinator, and the property tests.
+
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId, Request, RequestId};
+
+pub mod analytical;
+pub mod batch_policy;
+pub mod clockwork;
+pub mod deferred;
+pub mod nexus;
+pub mod shepherd;
+pub mod timeout;
+
+/// Keys for scheduler-owned timers. The engine multiplexes them; setting
+/// a key that is already pending replaces (cancels) the earlier timer.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum TimerKey {
+    /// Fires at a candidate's `exec` moment (Algorithm 1 model timer).
+    Model(ModelId),
+    /// Auxiliary per-model timer (candidate revalidation / drops).
+    ModelAux(ModelId),
+    /// Per-GPU timer (used by baselines that poll their own queues).
+    Gpu(GpuId),
+    /// Periodic/custom timers (Nexus epochs, autoscaler ticks).
+    Custom(u64),
+}
+
+/// Actions a scheduler can take in response to an event.
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Start executing `requests` as one batch on `gpu` *now*. The GPU
+    /// must be free; execution takes `ℓ(|requests|)` plus network delay.
+    Dispatch {
+        gpu: GpuId,
+        model: ModelId,
+        requests: Vec<RequestId>,
+    },
+    /// Give up on requests that can no longer meet their deadline.
+    Drop(Vec<RequestId>),
+    /// Arm (or re-arm) a timer.
+    SetTimer { key: TimerKey, at: Micros },
+    /// Disarm a timer if pending.
+    CancelTimer { key: TimerKey },
+    /// Cancel the batch currently running on `gpu` (Shepherd-style
+    /// preemption). The engine frees the GPU immediately and hands the
+    /// unfinished requests back via `on_preempted`.
+    Preempt { gpu: GpuId },
+}
+
+/// Event-driven scheduler interface (Algorithm 1's event procedures).
+pub trait Scheduler {
+    /// `OnNewRequest` — a request arrived at the cluster.
+    fn on_request(&mut self, req: Request, now: Micros, out: &mut Vec<Command>);
+
+    /// A timer previously set via `Command::SetTimer` fired.
+    fn on_timer(&mut self, key: TimerKey, now: Micros, out: &mut Vec<Command>);
+
+    /// `OnGpuTimer` — a GPU finished its batch and is free.
+    fn on_gpu_free(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>);
+
+    /// A `Preempt` completed; `requests` did not finish and are the
+    /// scheduler's responsibility again. Default: schedulers that never
+    /// preempt never receive this.
+    fn on_preempted(
+        &mut self,
+        _gpu: GpuId,
+        _requests: Vec<Request>,
+        _now: Micros,
+        _out: &mut Vec<Command>,
+    ) {
+        unreachable!("scheduler issued no Preempt but got on_preempted");
+    }
+
+    /// Cluster grew (autoscaling). The new GPU starts free.
+    fn on_gpu_added(&mut self, _gpu: GpuId, _now: Micros, _out: &mut Vec<Command>) {}
+
+    /// Cluster shrank; `gpu` was idle and is gone.
+    fn on_gpu_removed(&mut self, _gpu: GpuId, _now: Micros, _out: &mut Vec<Command>) {}
+
+    /// Human-readable name for tables.
+    fn name(&self) -> &'static str;
+}
+
+impl Scheduler for Box<dyn Scheduler> {
+    fn on_request(&mut self, req: Request, now: Micros, out: &mut Vec<Command>) {
+        (**self).on_request(req, now, out)
+    }
+    fn on_timer(&mut self, key: TimerKey, now: Micros, out: &mut Vec<Command>) {
+        (**self).on_timer(key, now, out)
+    }
+    fn on_gpu_free(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        (**self).on_gpu_free(gpu, now, out)
+    }
+    fn on_preempted(
+        &mut self,
+        gpu: GpuId,
+        requests: Vec<Request>,
+        now: Micros,
+        out: &mut Vec<Command>,
+    ) {
+        (**self).on_preempted(gpu, requests, now, out)
+    }
+    fn on_gpu_added(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        (**self).on_gpu_added(gpu, now, out)
+    }
+    fn on_gpu_removed(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        (**self).on_gpu_removed(gpu, now, out)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}

@@ -1,0 +1,330 @@
+//! Timeout-based batch scheduling (TensorFlow-Serving style, §2.2/§3.4)
+//! and its `k = 0` special case, **eager scheduling**.
+//!
+//! Identical to the deferred scheduler except Algorithm 1's line 5:
+//!
+//! ```text
+//! exec ← max(now(), a + k)        (a = earliest arrival in the batch)
+//! ```
+//!
+//! plus the TF-Serving max-batch trigger: when the batch reaches the
+//! configured cap it becomes dispatchable immediately. With `k = 0`
+//! every candidate is immediately schedulable — eager batching: a batch
+//! is dispatched whenever a GPU is idle, with whatever has accumulated.
+
+use std::collections::BTreeSet;
+
+use crate::core::profile::LatencyProfile;
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId, Request};
+use crate::scheduler::batch_policy::ModelQueue;
+use crate::scheduler::{Command, Scheduler, TimerKey};
+
+#[derive(Clone, Copy, Debug)]
+struct Candidate {
+    exec: Micros,
+    latest: Micros,
+    ready: bool,
+}
+
+struct MState {
+    queue: ModelQueue,
+    profile: LatencyProfile,
+    cand: Option<Candidate>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TimeoutConfig {
+    /// The timeout `k`; `ZERO` = eager.
+    pub timeout: Micros,
+    /// Dispatch as soon as the batch reaches this size (0 = use the
+    /// SLO-derived max fit).
+    pub max_batch: u32,
+    pub net_bound: Micros,
+}
+
+impl TimeoutConfig {
+    pub fn eager() -> Self {
+        TimeoutConfig {
+            timeout: Micros::ZERO,
+            max_batch: 0,
+            net_bound: Micros::ZERO,
+        }
+    }
+
+    pub fn with_timeout(timeout: Micros) -> Self {
+        TimeoutConfig {
+            timeout,
+            max_batch: 0,
+            net_bound: Micros::ZERO,
+        }
+    }
+}
+
+pub struct TimeoutScheduler {
+    models: Vec<MState>,
+    free_gpus: BTreeSet<GpuId>,
+    ready: BTreeSet<(Micros, ModelId)>,
+    cfg: TimeoutConfig,
+    eager: bool,
+}
+
+impl TimeoutScheduler {
+    pub fn new(profiles: Vec<LatencyProfile>, num_gpus: usize, cfg: TimeoutConfig) -> Self {
+        TimeoutScheduler {
+            models: profiles
+                .into_iter()
+                .map(|profile| MState {
+                    queue: ModelQueue::new(),
+                    profile,
+                    cand: None,
+                })
+                .collect(),
+            free_gpus: (0..num_gpus as u32).map(GpuId).collect(),
+            ready: BTreeSet::new(),
+            eager: cfg.timeout == Micros::ZERO,
+            cfg,
+        }
+    }
+
+    fn clear_candidate(&mut self, m: ModelId) {
+        if let Some(c) = self.models[m.0 as usize].cand.take() {
+            if c.ready {
+                self.ready.remove(&(c.latest, m));
+            }
+        }
+    }
+
+    fn update_candidate(&mut self, m: ModelId, now: Micros, out: &mut Vec<Command>) {
+        self.clear_candidate(m);
+        let slack = self.cfg.net_bound;
+        let st = &mut self.models[m.0 as usize];
+        let plan = st.queue.plan(now, &st.profile, slack, self.cfg.max_batch);
+        if !plan.dropped.is_empty() {
+            out.push(Command::Drop(plan.dropped.clone()));
+        }
+        if plan.batch.is_empty() {
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            out.push(Command::CancelTimer { key: TimerKey::ModelAux(m) });
+            return;
+        }
+        let b = plan.batch.len() as u32;
+        let d = plan.deadline;
+        let latest = d.saturating_sub(st.profile.latency(b) + slack);
+        let a = st.queue.head_arrival().unwrap();
+        // Timeout semantics: wait until `a + k` unless the batch already
+        // hit its cap (TF-Serving's second trigger).
+        let cap = if self.cfg.max_batch > 0 {
+            self.cfg.max_batch
+        } else {
+            st.profile
+                .max_batch_within(d.saturating_sub(now + slack))
+        };
+        let exec = if b >= cap {
+            now
+        } else {
+            (a + self.cfg.timeout).max(now)
+        };
+        let cand = Candidate {
+            exec,
+            latest,
+            ready: false,
+        };
+        self.models[m.0 as usize].cand = Some(cand);
+
+        if exec > now && exec <= latest {
+            out.push(Command::SetTimer {
+                key: TimerKey::Model(m),
+                at: exec,
+            });
+            out.push(Command::CancelTimer { key: TimerKey::ModelAux(m) });
+        } else if exec > latest {
+            // Mistuned timeout: the window closed before the timeout
+            // expires. The batch is not schedulable; revalidate after
+            // `latest` — the shrinking batch raises `latest` until the
+            // window reopens (Fig 6b's goodput collapse for large k).
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            out.push(Command::SetTimer {
+                key: TimerKey::ModelAux(m),
+                at: Micros(latest.0 + 1),
+            });
+        } else {
+            out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            self.enter_ready(m, now, out);
+        }
+    }
+
+    fn enter_ready(&mut self, m: ModelId, now: Micros, out: &mut Vec<Command>) {
+        if let Some(&gpu) = self.free_gpus.iter().next() {
+            self.dispatch(m, gpu, now, out);
+            return;
+        }
+        let st = &mut self.models[m.0 as usize];
+        let c = st.cand.as_mut().expect("enter_ready without candidate");
+        c.ready = true;
+        let latest = c.latest;
+        self.ready.insert((latest, m));
+        out.push(Command::SetTimer {
+            key: TimerKey::ModelAux(m),
+            at: Micros(latest.0 + 1),
+        });
+    }
+
+    fn dispatch(&mut self, m: ModelId, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.clear_candidate(m);
+        let slack = self.cfg.net_bound;
+        let st = &mut self.models[m.0 as usize];
+        let plan = st.queue.plan(now, &st.profile, slack, self.cfg.max_batch);
+        if !plan.dropped.is_empty() {
+            out.push(Command::Drop(plan.dropped.clone()));
+        }
+        if plan.batch.is_empty() {
+            return;
+        }
+        let n = plan.batch.len();
+        let requests = st.queue.take(n);
+        self.free_gpus.remove(&gpu);
+        out.push(Command::Dispatch {
+            gpu,
+            model: m,
+            requests,
+        });
+        self.update_candidate(m, now, out);
+    }
+
+    fn match_gpu(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        loop {
+            let Some(&(latest, m)) = self.ready.iter().next() else {
+                return;
+            };
+            if latest < now {
+                // Recompute may dispatch to `gpu` itself — stop if taken.
+                self.update_candidate(m, now, out);
+                if !self.free_gpus.contains(&gpu) {
+                    return;
+                }
+                continue;
+            }
+            self.dispatch(m, gpu, now, out);
+            return;
+        }
+    }
+}
+
+impl Scheduler for TimeoutScheduler {
+    fn on_request(&mut self, req: Request, now: Micros, out: &mut Vec<Command>) {
+        let m = req.model;
+        self.models[m.0 as usize].queue.push(req);
+        self.update_candidate(m, now, out);
+    }
+
+    fn on_timer(&mut self, key: TimerKey, now: Micros, out: &mut Vec<Command>) {
+        match key {
+            TimerKey::Model(m) => {
+                if self.models[m.0 as usize].cand.is_some() {
+                    self.enter_ready(m, now, out);
+                }
+            }
+            TimerKey::ModelAux(m) => self.update_candidate(m, now, out),
+            _ => {}
+        }
+    }
+
+    fn on_gpu_free(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.free_gpus.insert(gpu);
+        self.match_gpu(gpu, now, out);
+    }
+
+    fn on_gpu_added(&mut self, gpu: GpuId, now: Micros, out: &mut Vec<Command>) {
+        self.free_gpus.insert(gpu);
+        self.match_gpu(gpu, now, out);
+    }
+
+    fn on_gpu_removed(&mut self, gpu: GpuId, _now: Micros, _out: &mut Vec<Command>) {
+        self.free_gpus.remove(&gpu);
+    }
+
+    fn name(&self) -> &'static str {
+        if self.eager {
+            "eager"
+        } else {
+            "timeout"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::profile::ModelSpec;
+    use crate::sim::{Engine, SimConfig};
+    use crate::workload::{Workload, WorkloadSpec};
+
+    #[test]
+    fn eager_dispatches_immediately_when_gpu_free() {
+        // Single request, free GPUs: eager runs it at t=arrival.
+        let model = ModelSpec::new("m", 1.0, 5.0, 12.0);
+        let workload = Workload::explicit(
+            vec![model.clone()],
+            vec![vec![Micros::from_millis_f64(1.0)]],
+        );
+        let sched =
+            TimeoutScheduler::new(vec![model.profile], 2, TimeoutConfig::eager());
+        let res = Engine::new(
+            workload,
+            sched,
+            SimConfig::new(2, Micros::from_secs_f64(1.0)).trace(true),
+        )
+        .run();
+        assert_eq!(res.trace.len(), 1);
+        assert_eq!(res.trace[0].start, Micros::from_millis_f64(1.0));
+        assert_eq!(res.trace[0].size, 1);
+    }
+
+    #[test]
+    fn timeout_waits_k_after_first_arrival() {
+        let model = ModelSpec::new("m", 1.0, 5.0, 20.0);
+        let times: Vec<Micros> = (0..4)
+            .map(|i| Micros::from_millis_f64(i as f64))
+            .collect();
+        let workload = Workload::explicit(vec![model.clone()], vec![times]);
+        let sched = TimeoutScheduler::new(
+            vec![model.profile],
+            1,
+            TimeoutConfig::with_timeout(Micros::from_millis_f64(5.0)),
+        );
+        let res = Engine::new(
+            workload,
+            sched,
+            SimConfig::new(1, Micros::from_secs_f64(1.0)).trace(true),
+        )
+        .run();
+        // First batch dispatches at a_0 + k = 5ms with all 4 requests.
+        assert_eq!(res.trace[0].start, Micros::from_millis_f64(5.0));
+        assert_eq!(res.trace[0].size, 4);
+    }
+
+    #[test]
+    fn eager_runs_smaller_batches_than_deferred() {
+        // ResNet50-like model near saturation: eager median batch must be
+        // smaller (§2.2 / Fig 1's ordering).
+        let model = ModelSpec::new("r50", 1.053, 5.072, 25.0);
+        let mk_spec = || WorkloadSpec::new(vec![model.clone()], 4000.0).seed(3);
+        let cfg = || SimConfig::new(8, Micros::from_secs_f64(4.0));
+
+        let eager =
+            TimeoutScheduler::new(vec![model.profile], 8, TimeoutConfig::eager());
+        let r_eager = Engine::new(mk_spec().build(), eager, cfg()).run();
+
+        let deferred = crate::scheduler::deferred::DeferredScheduler::new(
+            vec![model.profile],
+            8,
+            Default::default(),
+        );
+        let r_def = Engine::new(mk_spec().build(), deferred, cfg()).run();
+
+        let eb = r_eager.metrics.per_model[0].median_batch();
+        let db = r_def.metrics.per_model[0].median_batch();
+        assert!(db > eb, "deferred median {db} vs eager {eb}");
+    }
+}

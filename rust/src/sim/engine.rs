@@ -1,0 +1,629 @@
+//! Discrete-event cluster engine.
+//!
+//! Binds a `Workload` (request stream), a `Scheduler` (policy under
+//! test), a set of emulated GPUs (delay-injection execution from ℓ(b)
+//! profiles — the paper's own end-to-end methodology, §5), and a
+//! `NetworkModel`. Produces `Metrics`.
+//!
+//! The engine owns the virtual clock and timers; schedulers are pure
+//! event handlers (see `scheduler::Scheduler`). Timer cancellation is
+//! done lazily with generation counters so `SetTimer` is O(log n).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::core::profile::ModelSpec;
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId, OutcomeKind, Request, RequestId};
+use crate::metrics::{Metrics, MetricsConfig};
+use crate::scheduler::{Command, Scheduler, TimerKey};
+use crate::sim::gpu::GpuState;
+use crate::sim::network::NetworkModel;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// Active-timer generations with O(1) array lookup for the hot keys
+/// (per-model and per-GPU timers); Custom keys fall back to a map.
+/// Generation 0 = no timer armed.
+struct TimerSlots {
+    n_models: usize,
+    model: Vec<u64>,
+    model_aux: Vec<u64>,
+    gpu: Vec<u64>,
+    custom: HashMap<u64, u64>,
+}
+
+impl TimerSlots {
+    fn new(n_models: usize, n_gpus: usize) -> Self {
+        TimerSlots {
+            n_models,
+            model: vec![0; n_models],
+            model_aux: vec![0; n_models],
+            gpu: vec![0; n_gpus],
+            custom: HashMap::new(),
+        }
+    }
+
+    #[inline]
+    fn slot(&mut self, key: TimerKey) -> &mut u64 {
+        match key {
+            TimerKey::Model(m) => &mut self.model[m.0 as usize],
+            TimerKey::ModelAux(m) => &mut self.model_aux[m.0 as usize],
+            TimerKey::Gpu(g) => {
+                let i = g.0 as usize;
+                if i >= self.gpu.len() {
+                    self.gpu.resize(i + 1, 0);
+                }
+                &mut self.gpu[i]
+            }
+            TimerKey::Custom(c) => self.custom.entry(c).or_insert(0),
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, key: TimerKey, gen: u64) {
+        *self.slot(key) = gen;
+    }
+
+    #[inline]
+    fn clear(&mut self, key: TimerKey) {
+        *self.slot(key) = 0;
+    }
+
+    #[inline]
+    fn matches(&mut self, key: TimerKey, gen: u64) -> bool {
+        *self.slot(key) == gen
+    }
+
+    fn n_models(&self) -> usize {
+        self.n_models
+    }
+}
+
+/// Internal event queue entries, ordered by (time, sequence).
+#[derive(Clone, Debug)]
+enum Ev {
+    Timer { key: TimerKey, gen: u64 },
+    GpuDone { gpu: GpuId, epoch: u64 },
+    /// Autoscaler / engine-driver callback hook.
+    External { tag: u64 },
+}
+
+/// Request bookkeeping for metrics + preemption.
+#[derive(Clone, Copy, Debug)]
+struct ReqRecord {
+    model: ModelId,
+    arrival: Micros,
+    deadline: Micros,
+    state: ReqState,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ReqState {
+    Queued,
+    Running,
+    Done,
+    Dropped,
+}
+
+/// Configuration of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub num_gpus: usize,
+    pub horizon: Micros,
+    pub network: NetworkModel,
+    pub metrics: MetricsConfig,
+    pub seed: u64,
+    /// Capture a per-batch execution trace (Fig 4/5 style).
+    pub record_trace: bool,
+}
+
+impl SimConfig {
+    pub fn new(num_gpus: usize, horizon: Micros) -> Self {
+        SimConfig {
+            num_gpus,
+            horizon,
+            network: NetworkModel::Ideal,
+            metrics: MetricsConfig::default(),
+            seed: 1,
+            record_trace: false,
+        }
+    }
+
+    pub fn network(mut self, n: NetworkModel) -> Self {
+        self.network = n;
+        self
+    }
+
+    pub fn warmup(mut self, w: Micros) -> Self {
+        self.metrics.warmup = w;
+        self
+    }
+
+    pub fn samples(mut self, on: bool) -> Self {
+        self.metrics.record_samples = on;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+}
+
+/// One executed batch in the captured trace (Fig 4/5 rendering).
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    pub gpu: GpuId,
+    pub model: ModelId,
+    pub size: u32,
+    pub start: Micros,
+    pub end: Micros,
+    pub preempted: bool,
+}
+
+/// External hooks the engine driver can use mid-run (autoscaling).
+pub trait EngineDriver {
+    /// Called when an `External { tag }` event fires. Returning a new
+    /// time re-arms the hook.
+    fn on_tick(&mut self, tag: u64, now: Micros, cluster: &mut ClusterOps) -> Option<Micros>;
+}
+
+/// No-op driver.
+pub struct NoDriver;
+impl EngineDriver for NoDriver {
+    fn on_tick(&mut self, _: u64, _: Micros, _: &mut ClusterOps) -> Option<Micros> {
+        None
+    }
+}
+
+/// The mutable cluster surface exposed to drivers (autoscaler).
+pub struct ClusterOps<'a> {
+    pub gpus: &'a mut Vec<GpuState>,
+    pub metrics: &'a Metrics,
+    /// GPUs added this run (the scheduler is notified by the engine).
+    pub added: Vec<GpuId>,
+    pub removed: Vec<GpuId>,
+}
+
+impl<'a> ClusterOps<'a> {
+    /// Add one GPU; returns its id.
+    pub fn add_gpu(&mut self) -> GpuId {
+        // Reuse a retired slot if any, else grow.
+        for (i, g) in self.gpus.iter_mut().enumerate() {
+            if g.retired {
+                g.retired = false;
+                let id = GpuId(i as u32);
+                self.added.push(id);
+                return id;
+            }
+        }
+        let id = GpuId(self.gpus.len() as u32);
+        self.gpus.push(GpuState::default());
+        self.added.push(id);
+        id
+    }
+
+    /// Retire an idle GPU (highest-id idle first is the caller's policy).
+    /// Returns false if the GPU is busy.
+    pub fn remove_gpu(&mut self, id: GpuId) -> bool {
+        let g = &mut self.gpus[id.0 as usize];
+        if g.is_busy() || g.retired {
+            return false;
+        }
+        g.retired = true;
+        self.removed.push(id);
+        true
+    }
+
+    pub fn active_gpus(&self) -> usize {
+        self.gpus.iter().filter(|g| !g.retired).count()
+    }
+}
+
+/// The discrete-event simulator.
+pub struct Engine<S: Scheduler, D: EngineDriver = NoDriver> {
+    pub scheduler: S,
+    pub driver: D,
+    workload: Workload,
+    cfg: SimConfig,
+    gpus: Vec<GpuState>,
+    events: BinaryHeap<Reverse<(Micros, u64, usize)>>,
+    ev_payload: Vec<Option<Ev>>,
+    ev_free: Vec<usize>,
+    seq: u64,
+    timers: TimerSlots,
+    timer_gen: u64,
+    requests: Vec<ReqRecord>,
+    req_base: u64,
+    metrics: Metrics,
+    rng: Rng,
+    now: Micros,
+    pending_req: Option<Request>,
+    cmd_queue: Vec<Command>,
+    pub trace: Vec<TraceEntry>,
+    events_processed: u64,
+}
+
+impl<S: Scheduler> Engine<S, NoDriver> {
+    pub fn new(workload: Workload, scheduler: S, cfg: SimConfig) -> Self {
+        Engine::with_driver(workload, scheduler, NoDriver, cfg)
+    }
+}
+
+impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
+    pub fn with_driver(workload: Workload, scheduler: S, driver: D, cfg: SimConfig) -> Self {
+        let models = workload.models.len();
+        let metrics = Metrics::new(models, cfg.metrics);
+        Engine {
+            scheduler,
+            driver,
+            workload,
+            gpus: (0..cfg.num_gpus).map(|_| GpuState::default()).collect(),
+            events: BinaryHeap::new(),
+            ev_payload: Vec::new(),
+            ev_free: Vec::new(),
+            seq: 0,
+            timers: TimerSlots::new(models, cfg.num_gpus),
+            timer_gen: 0,
+            requests: Vec::new(),
+            req_base: 0,
+            metrics,
+            rng: Rng::new(cfg.seed ^ 0x5173_09AD),
+            now: Micros::ZERO,
+            pending_req: None,
+            cmd_queue: Vec::new(),
+            trace: Vec::new(),
+            cfg,
+            events_processed: 0,
+        }
+    }
+
+    /// Arm an external (driver) hook at `at`.
+    pub fn arm_external(&mut self, tag: u64, at: Micros) {
+        self.push_event(at, Ev::External { tag });
+    }
+
+    fn push_event(&mut self, at: Micros, ev: Ev) {
+        let slot = if let Some(i) = self.ev_free.pop() {
+            self.ev_payload[i] = Some(ev);
+            i
+        } else {
+            self.ev_payload.push(Some(ev));
+            self.ev_payload.len() - 1
+        };
+        self.seq += 1;
+        self.events.push(Reverse((at, self.seq, slot)));
+    }
+
+    fn pop_event(&mut self) -> Option<(Micros, Ev)> {
+        let Reverse((at, _, slot)) = self.events.pop()?;
+        let ev = self.ev_payload[slot].take().expect("event slot empty");
+        self.ev_free.push(slot);
+        Some((at, ev))
+    }
+
+    #[inline]
+    fn req(&self, id: RequestId) -> &ReqRecord {
+        &self.requests[(id.0 - self.req_base) as usize]
+    }
+
+    #[inline]
+    fn req_mut(&mut self, id: RequestId) -> &mut ReqRecord {
+        &mut self.requests[(id.0 - self.req_base) as usize]
+    }
+
+    fn model_spec(&self, m: ModelId) -> &ModelSpec {
+        &self.workload.models[m.0 as usize]
+    }
+
+    /// Run to the horizon.
+    pub fn run(mut self) -> SimResult<S, D> {
+        loop {
+            // Pull the next arrival lazily so the heap stays small.
+            if self.pending_req.is_none() {
+                if let Some(r) = self.workload.next_request() {
+                    if r.arrival <= self.cfg.horizon {
+                        self.pending_req = Some(r);
+                    }
+                    // Requests past the horizon are discarded unrecorded.
+                }
+            }
+
+            let next_ev_t = self.events.peek().map(|Reverse((t, _, _))| *t);
+            let next_arr_t = self.pending_req.as_ref().map(|r| r.arrival);
+
+            let (t, is_arrival) = match (next_ev_t, next_arr_t) {
+                (None, None) => break,
+                (Some(e), None) => (e, false),
+                (None, Some(a)) => (a, true),
+                (Some(e), Some(a)) => {
+                    if a <= e {
+                        (a, true)
+                    } else {
+                        (e, false)
+                    }
+                }
+            };
+            if t > self.cfg.horizon {
+                break;
+            }
+            self.now = t;
+            self.events_processed += 1;
+
+            if is_arrival {
+                let r = self.pending_req.take().unwrap();
+                self.track_request(r);
+                let mut cmds = std::mem::take(&mut self.cmd_queue);
+                cmds.clear();
+                self.scheduler.on_request(r, self.now, &mut cmds);
+                self.apply_commands(cmds);
+            } else {
+                let (at, ev) = self.pop_event().unwrap();
+                debug_assert_eq!(at, self.now);
+                self.handle_event(ev);
+            }
+        }
+        self.finalize()
+    }
+
+    fn track_request(&mut self, r: Request) {
+        let idx = (r.id.0 - self.req_base) as usize;
+        debug_assert_eq!(idx, self.requests.len(), "request ids must be sequential");
+        self.requests.push(ReqRecord {
+            model: r.model,
+            arrival: r.arrival,
+            deadline: r.deadline,
+            state: ReqState::Queued,
+        });
+    }
+
+    fn handle_event(&mut self, ev: Ev) {
+        match ev {
+            Ev::Timer { key, gen } => {
+                if !self.timers.matches(key, gen) {
+                    return; // canceled or superseded
+                }
+                self.timers.clear(key);
+                let mut cmds = std::mem::take(&mut self.cmd_queue);
+                cmds.clear();
+                self.scheduler.on_timer(key, self.now, &mut cmds);
+                self.apply_commands(cmds);
+            }
+            Ev::GpuDone { gpu, epoch } => {
+                let finished = self.gpus[gpu.0 as usize].complete(epoch);
+                let Some(batch) = finished else { return };
+                let size = batch.requests.len() as u32;
+                for rid in &batch.requests {
+                    let rec = *self.req(*rid);
+                    let kind = if batch.end <= rec.deadline {
+                        OutcomeKind::Good
+                    } else {
+                        OutcomeKind::Late
+                    };
+                    self.req_mut(*rid).state = ReqState::Done;
+                    self.metrics.record_outcome(
+                        rec.model,
+                        rec.arrival,
+                        kind,
+                        Some(batch.start),
+                        Some(batch.end),
+                        size,
+                    );
+                }
+                if self.cfg.record_trace {
+                    self.trace.push(TraceEntry {
+                        gpu,
+                        model: batch.model,
+                        size,
+                        start: batch.start,
+                        end: batch.end,
+                        preempted: false,
+                    });
+                }
+                if self.gpus[gpu.0 as usize].retired {
+                    return; // autoscaler already removed it
+                }
+                let mut cmds = std::mem::take(&mut self.cmd_queue);
+                cmds.clear();
+                self.scheduler.on_gpu_free(gpu, self.now, &mut cmds);
+                self.apply_commands(cmds);
+            }
+            Ev::External { tag } => {
+                let mut ops = ClusterOps {
+                    gpus: &mut self.gpus,
+                    metrics: &self.metrics,
+                    added: Vec::new(),
+                    removed: Vec::new(),
+                };
+                let next = self.driver.on_tick(tag, self.now, &mut ops);
+                let (added, removed) = (ops.added, ops.removed);
+                let mut cmds = std::mem::take(&mut self.cmd_queue);
+                cmds.clear();
+                for g in added {
+                    self.scheduler.on_gpu_added(g, self.now, &mut cmds);
+                }
+                for g in removed {
+                    self.scheduler.on_gpu_removed(g, self.now, &mut cmds);
+                }
+                self.apply_commands(cmds);
+                if let Some(at) = next {
+                    self.push_event(at, Ev::External { tag });
+                }
+            }
+        }
+    }
+
+    fn apply_commands(&mut self, mut cmds: Vec<Command>) {
+        let mut i = 0;
+        while i < cmds.len() {
+            // Take ownership without cloning (Dispatch carries the batch
+            // id vector — cloning it was the hottest allocation in the
+            // §Perf profile).
+            let cmd = std::mem::replace(&mut cmds[i], Command::Drop(Vec::new()));
+            i += 1;
+            match cmd {
+                Command::Dispatch {
+                    gpu,
+                    model,
+                    requests,
+                } => self.do_dispatch(gpu, model, requests),
+                Command::Drop(ids) => {
+                    for rid in ids {
+                        let rec = *self.req(rid);
+                        debug_assert_eq!(
+                            rec.state,
+                            ReqState::Queued,
+                            "dropping non-queued request"
+                        );
+                        self.req_mut(rid).state = ReqState::Dropped;
+                        self.metrics.record_outcome(
+                            rec.model,
+                            rec.arrival,
+                            OutcomeKind::Dropped,
+                            None,
+                            None,
+                            0,
+                        );
+                    }
+                }
+                Command::SetTimer { key, at } => {
+                    // Timers in the past fire "immediately" (clamped to
+                    // now) — e.g. revalidation of an already-expired
+                    // candidate window.
+                    self.timer_gen += 1;
+                    self.timers.set(key, self.timer_gen);
+                    self.push_event(at.max(self.now), Ev::Timer {
+                        key,
+                        gen: self.timer_gen,
+                    });
+                }
+                Command::CancelTimer { key } => {
+                    self.timers.clear(key);
+                }
+                Command::Preempt { gpu } => {
+                    let Some(batch) = self.gpus[gpu.0 as usize].preempt(self.now) else {
+                        continue;
+                    };
+                    self.metrics.preempted_batches += 1;
+                    self.metrics.wasted_work += batch.requests.len() as u64;
+                    if self.cfg.record_trace {
+                        self.trace.push(TraceEntry {
+                            gpu,
+                            model: batch.model,
+                            size: batch.requests.len() as u32,
+                            start: batch.start,
+                            end: self.now,
+                            preempted: true,
+                        });
+                    }
+                    let reqs: Vec<Request> = batch
+                        .requests
+                        .iter()
+                        .map(|rid| {
+                            let rec = self.req_mut(*rid);
+                            rec.state = ReqState::Queued;
+                            Request {
+                                id: *rid,
+                                model: rec.model,
+                                arrival: rec.arrival,
+                                deadline: rec.deadline,
+                            }
+                        })
+                        .collect();
+                    let mut extra = Vec::new();
+                    self.scheduler
+                        .on_preempted(gpu, reqs, self.now, &mut extra);
+                    cmds.extend(extra);
+                }
+            }
+        }
+        self.cmd_queue = cmds;
+    }
+
+    fn do_dispatch(&mut self, gpu: GpuId, model: ModelId, requests: Vec<RequestId>) {
+        assert!(!requests.is_empty(), "empty batch dispatched");
+        let g = &mut self.gpus[gpu.0 as usize];
+        assert!(!g.is_busy(), "dispatch to busy GPU {gpu:?} at {:?}", self.now);
+        assert!(!g.retired, "dispatch to retired GPU {gpu:?}");
+        let size = requests.len() as u32;
+        let net = self.cfg.network.sample(&mut self.rng);
+        let exec = self.model_spec(model).profile.latency(size);
+        let start = self.now + net;
+        let end = start + exec;
+        for rid in &requests {
+            let rec = self.req_mut(*rid);
+            debug_assert_eq!(rec.state, ReqState::Queued, "request not queued");
+            rec.state = ReqState::Running;
+        }
+        let epoch = self.gpus[gpu.0 as usize].begin(model, requests, self.now, start, end);
+        self.metrics.record_batch(size, start);
+        self.push_event(end, Ev::GpuDone { gpu, epoch });
+    }
+
+    fn finalize(mut self) -> SimResult<S, D> {
+        // Unfinished requests (queued or running at the horizon).
+        for i in 0..self.requests.len() {
+            let rec = self.requests[i];
+            if matches!(rec.state, ReqState::Queued | ReqState::Running) {
+                self.metrics.record_outcome(
+                    rec.model,
+                    rec.arrival,
+                    OutcomeKind::Unfinished,
+                    None,
+                    None,
+                    0,
+                );
+            }
+        }
+        // GPU busy time clipped to the metrics window.
+        let w0 = self.metrics.cfg.warmup;
+        for (i, g) in self.gpus.iter().enumerate() {
+            // `busy` accumulated from t=0; subtract an estimate of the
+            // pre-warmup fraction by scaling. For exactness experiments
+            // use warmup=0; for goodput runs the steady-state approx is
+            // fine. In-flight batch at the horizon still counts up to now.
+            let mut busy = g.busy;
+            if let Some(f) = &g.in_flight {
+                if self.now > f.start {
+                    busy += self.now.min(f.end) - f.start;
+                }
+            }
+            let total = self.now;
+            let busy_in_window = if w0 == Micros::ZERO || total <= w0 {
+                busy
+            } else {
+                // Steady-state scaling of busy time into the window.
+                let frac = (total - w0).as_secs_f64() / total.as_secs_f64();
+                Micros::from_secs_f64(busy.as_secs_f64() * frac)
+            };
+            self.metrics.gpu_busy.insert(i as u32, busy_in_window);
+        }
+        self.metrics.window = (w0, self.now.max(w0));
+        SimResult {
+            metrics: self.metrics,
+            scheduler: self.scheduler,
+            driver: self.driver,
+            trace: self.trace,
+            events_processed: self.events_processed,
+        }
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+}
+
+/// Everything a finished run produces.
+pub struct SimResult<S, D = NoDriver> {
+    pub metrics: Metrics,
+    pub scheduler: S,
+    pub driver: D,
+    pub trace: Vec<TraceEntry>,
+    pub events_processed: u64,
+}

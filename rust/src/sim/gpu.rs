@@ -1,0 +1,129 @@
+//! Emulated GPU state. The paper's end-to-end evaluation emulates GPUs
+//! "by simply introducing a delay at the backend" from measured ℓ(b)
+//! profiles (§5); this is the discrete-event equivalent, with busy-time
+//! accounting for the utilization figures.
+
+use crate::core::time::Micros;
+use crate::core::types::{ModelId, RequestId};
+
+/// The batch a GPU is currently executing.
+#[derive(Clone, Debug)]
+pub struct InFlight {
+    pub model: ModelId,
+    pub requests: Vec<RequestId>,
+    pub dispatched_at: Micros,
+    pub start: Micros,
+    pub end: Micros,
+    /// Monotone token distinguishing this execution from a preempted one
+    /// whose completion event is still in the queue.
+    pub epoch: u64,
+}
+
+/// One emulated GPU.
+#[derive(Clone, Debug, Default)]
+pub struct GpuState {
+    pub in_flight: Option<InFlight>,
+    /// Accumulated busy time (within + outside the metrics window; the
+    /// engine clips to the window when finalizing).
+    pub busy: Micros,
+    pub batches_run: u64,
+    pub epoch: u64,
+    /// Removed by the autoscaler — refuses new work.
+    pub retired: bool,
+}
+
+impl GpuState {
+    pub fn is_busy(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    /// Begin executing a batch; returns the epoch token for completion.
+    pub fn begin(
+        &mut self,
+        model: ModelId,
+        requests: Vec<RequestId>,
+        dispatched_at: Micros,
+        start: Micros,
+        end: Micros,
+    ) -> u64 {
+        debug_assert!(!self.is_busy(), "GPU double-booked");
+        debug_assert!(!self.retired, "dispatch to retired GPU");
+        self.epoch += 1;
+        self.in_flight = Some(InFlight {
+            model,
+            requests,
+            dispatched_at,
+            start,
+            end,
+            epoch: self.epoch,
+        });
+        self.epoch
+    }
+
+    /// Normal completion at `end` — credit busy time, return the batch.
+    pub fn complete(&mut self, epoch: u64) -> Option<InFlight> {
+        match &self.in_flight {
+            Some(f) if f.epoch == epoch => {
+                let f = self.in_flight.take().unwrap();
+                self.busy += f.end - f.start;
+                self.batches_run += 1;
+                Some(f)
+            }
+            _ => None, // stale completion of a preempted batch
+        }
+    }
+
+    /// Preempt at `now` — busy time credited only for the executed part.
+    pub fn preempt(&mut self, now: Micros) -> Option<InFlight> {
+        let f = self.in_flight.take()?;
+        if now > f.start {
+            self.busy += now.min(f.end) - f.start;
+        }
+        Some(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut g = GpuState::default();
+        assert!(!g.is_busy());
+        let ep = g.begin(
+            ModelId(0),
+            vec![RequestId(1)],
+            Micros(10),
+            Micros(12),
+            Micros(20),
+        );
+        assert!(g.is_busy());
+        let f = g.complete(ep).unwrap();
+        assert_eq!(f.requests, vec![RequestId(1)]);
+        assert_eq!(g.busy, Micros(8));
+        assert_eq!(g.batches_run, 1);
+        assert!(!g.is_busy());
+    }
+
+    #[test]
+    fn stale_completion_ignored_after_preempt() {
+        let mut g = GpuState::default();
+        let ep = g.begin(ModelId(0), vec![RequestId(1)], Micros(0), Micros(0), Micros(100));
+        let pre = g.preempt(Micros(40)).unwrap();
+        assert_eq!(pre.requests, vec![RequestId(1)]);
+        assert_eq!(g.busy, Micros(40));
+        // The completion event for the preempted batch must be a no-op.
+        assert!(g.complete(ep).is_none());
+        assert_eq!(g.batches_run, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-booked")]
+    #[cfg(debug_assertions)]
+    fn double_book_panics() {
+        let mut g = GpuState::default();
+        g.begin(ModelId(0), vec![], Micros(0), Micros(0), Micros(1));
+        g.begin(ModelId(0), vec![], Micros(0), Micros(0), Micros(1));
+    }
+}

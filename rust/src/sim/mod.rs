@@ -1,0 +1,10 @@
+//! Discrete-event cluster emulator: event engine, emulated GPUs
+//! (delay-injection from ℓ(b) profiles, the paper's own methodology),
+//! and network latency models.
+
+pub mod engine;
+pub mod gpu;
+pub mod network;
+
+pub use engine::{ClusterOps, Engine, EngineDriver, NoDriver, SimConfig, SimResult, TraceEntry};
+pub use network::NetworkModel;

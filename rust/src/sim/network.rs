@@ -1,0 +1,136 @@
+//! Network latency models (§4.3, §5.6, Appendix B).
+//!
+//! A dispatch decision travels scheduler → backend (control plane), then
+//! the backend pulls inputs from frontends (data plane, one-sided RDMA
+//! READ in the paper). The *sampled* delay is what the simulated batch
+//! actually experiences; the *bound* is the high-percentile estimate the
+//! scheduler budgets for ("The scheduler always uses the high percentile
+//! bound of network latency as the network delay estimation", §5.6).
+//!
+//! `Rdma` and `Tcp` are calibrated to Appendix B / Figure 17: RDMA floor
+//! 24 µs with a 99.99th percentile of 33 µs; TCP median 3034 µs with a
+//! 99.99th percentile 12× the median.
+
+use crate::core::time::Micros;
+use crate::util::rng::Rng;
+
+/// z-score of the 99.99th percentile of a normal distribution.
+const Z9999: f64 = 3.719;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NetworkModel {
+    /// No network (scheduler-only runs).
+    Ideal,
+    /// Deterministic latency — the Fig 14 sweep axis.
+    Constant { latency: Micros },
+    /// InfiniBand RDMA incast (Appendix B): 24 µs floor + light tail.
+    Rdma,
+    /// Kernel TCP incast (Appendix B): 3.0 ms median, 12× p99.99 tail.
+    Tcp,
+}
+
+impl NetworkModel {
+    /// Parameters of the lognormal tail component, `(floor_us, mu, sigma)`.
+    fn lognormal_params(&self) -> Option<(f64, f64, f64)> {
+        match self {
+            NetworkModel::Ideal | NetworkModel::Constant { .. } => None,
+            // Floor 24us; median tail ~3us (median total 27us), p9999
+            // total 33us => sigma = ln(9/3)/z.
+            NetworkModel::Rdma => Some((24.0, 3f64.ln(), (9f64 / 3.0).ln() / Z9999)),
+            // Median 3034us, p9999 = 12x median.
+            NetworkModel::Tcp => Some((0.0, 3034f64.ln(), 12f64.ln() / Z9999)),
+        }
+    }
+
+    /// Sample one control+data round for a batch dispatch.
+    pub fn sample(&self, rng: &mut Rng) -> Micros {
+        match self {
+            NetworkModel::Ideal => Micros::ZERO,
+            NetworkModel::Constant { latency } => *latency,
+            _ => {
+                let (floor, mu, sigma) = self.lognormal_params().unwrap();
+                Micros((floor + rng.lognormal(mu, sigma)).round() as u64)
+            }
+        }
+    }
+
+    /// High-percentile bound the scheduler budgets for (p99.99).
+    pub fn bound(&self) -> Micros {
+        match self {
+            NetworkModel::Ideal => Micros::ZERO,
+            NetworkModel::Constant { latency } => *latency,
+            _ => {
+                let (floor, mu, sigma) = self.lognormal_params().unwrap();
+                Micros((floor + (mu + Z9999 * sigma).exp()).round() as u64)
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            NetworkModel::Ideal => "ideal".into(),
+            NetworkModel::Constant { latency } => format!("const({latency})"),
+            NetworkModel::Rdma => "rdma".into(),
+            NetworkModel::Tcp => "tcp".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile;
+
+    fn quantiles(model: NetworkModel, n: usize) -> (f64, f64, f64) {
+        let mut rng = Rng::new(42);
+        let mut xs: Vec<f64> = (0..n).map(|_| model.sample(&mut rng).0 as f64).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            xs[0],
+            percentile(&xs, 50.0),
+            percentile(&xs, 99.99),
+        )
+    }
+
+    #[test]
+    fn rdma_matches_appendix_b() {
+        let (min, med, p9999) = quantiles(NetworkModel::Rdma, 200_000);
+        assert!(min >= 24.0, "floor {min}");
+        assert!((26.0..30.0).contains(&med), "median {med}");
+        // Paper: 99.99th within 33us.
+        assert!((30.0..38.0).contains(&p9999), "p9999 {p9999}");
+    }
+
+    #[test]
+    fn tcp_matches_appendix_b() {
+        let (_, med, p9999) = quantiles(NetworkModel::Tcp, 400_000);
+        assert!((2800.0..3300.0).contains(&med), "median {med}");
+        // Paper: p99.99 = 12x median.
+        let ratio = p9999 / med;
+        assert!((9.0..16.0).contains(&ratio), "tail ratio {ratio}");
+    }
+
+    #[test]
+    fn bound_is_conservative() {
+        let mut rng = Rng::new(1);
+        for model in [NetworkModel::Rdma, NetworkModel::Tcp] {
+            let bound = model.bound();
+            let over = (0..100_000)
+                .filter(|_| model.sample(&mut rng) > bound)
+                .count();
+            // ~1e-4 exceed by construction.
+            assert!(over < 60, "{}: {over} exceed bound {bound}", model.name());
+        }
+    }
+
+    #[test]
+    fn ideal_and_constant() {
+        let mut rng = Rng::new(2);
+        assert_eq!(NetworkModel::Ideal.sample(&mut rng), Micros::ZERO);
+        let c = NetworkModel::Constant {
+            latency: Micros(150),
+        };
+        assert_eq!(c.sample(&mut rng), Micros(150));
+        assert_eq!(c.bound(), Micros(150));
+    }
+}

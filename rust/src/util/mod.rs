@@ -1,0 +1,8 @@
+//! Shared infrastructure: deterministic RNG + distributions, statistics,
+//! table/TSV output, and the mini property-test runner.
+
+pub mod par;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,75 @@
+//! Minimal property-testing helper (the `proptest` crate is unavailable
+//! in the offline registry). Runs a property over many seeded random
+//! cases and reports the failing seed so a failure is reproducible with
+//! `SYMPHONY_PROP_SEED=<seed>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with SYMPHONY_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("SYMPHONY_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the seed on failure.
+///
+/// `prop` returns `Err(message)` to fail the case.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("SYMPHONY_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("SYMPHONY_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed (seed {seed}): {msg}");
+        }
+        return;
+    }
+    let base: u64 = 0xC0FF_EE00;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name} failed on case {case} (reproduce with \
+                 SYMPHONY_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion macro for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("trivial", 16, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SYMPHONY_PROP_SEED")]
+    fn reports_seed_on_failure() {
+        check("always_fails", 4, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic pseudo-random numbers and the distributions the paper's
+//! workloads need (Poisson / Gamma / Zipf / log-normal).
+//!
+//! The offline registry has no `rand` crate, so this is a small,
+//! well-tested PCG64 (XSL-RR 128/64) plus SplitMix64 seeding — the same
+//! generators `rand_pcg` ships. Everything in the repo that needs
+//! randomness takes an explicit `&mut Rng` so experiments are exactly
+//! reproducible from a seed.
+
+/// SplitMix64 — used to expand a `u64` seed into PCG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG64 (XSL-RR 128/64). Deterministic, fast, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+impl Rng {
+    const MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+    /// Create a generator from a 64-bit seed (stream derived from seed).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let s1 = splitmix64(&mut sm);
+        let i0 = splitmix64(&mut sm);
+        let i1 = splitmix64(&mut sm);
+        let mut rng = Rng {
+            state: 0,
+            inc: (((i0 as u128) << 64 | i1 as u128) << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng.state = rng
+            .state
+            .wrapping_add((s0 as u128) << 64 | s1 as u128);
+        rng.state = rng.state.wrapping_mul(Self::MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (per-model streams etc.).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1]` — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method.
+        debug_assert!(n > 0);
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                m = (self.next_u64() as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)` (f64).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard exponential (mean 1) via inverse transform.
+    #[inline]
+    pub fn exp1(&mut self) -> f64 {
+        -self.f64_open().ln()
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape k, scale θ) via Marsaglia–Tsang; valid for any k > 0.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) * U^(1/k).
+            let g = self.gamma(shape + 1.0, 1.0);
+            return g * self.f64_open().powf(1.0 / shape) * scale;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Log-normal with the given parameters of the underlying normal.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+}
+
+/// Zipf sampler over `{0, .., n-1}` with exponent `s` (popularity skew).
+///
+/// Precomputes the CDF — sampling is a binary search, good enough for the
+/// workload generator (n is the number of models, ≤ a few thousand).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 1..=n {
+            total += 1.0 / (i as f64).powf(s);
+            cdf.push(total);
+        }
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Normalized weight of rank `i`.
+    pub fn weight(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+
+    pub fn weights(&self) -> Vec<f64> {
+        (0..self.cdf.len()).map(|i| self.weight(i)).collect()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = rng.f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn below_is_uniform() {
+        let mut rng = Rng::new(2);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.exp1()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(k, θ): mean kθ, var kθ².  Check a bursty shape (0.1) and a
+        // Poisson-equivalent shape (1.0) — the two ends of Table 1.
+        for &(k, theta) in &[(0.1, 10.0), (0.5, 2.0), (1.0, 1.0), (4.0, 0.25)] {
+            let mut rng = Rng::new(5);
+            let n = 300_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.gamma(k, theta)).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - k * theta).abs() / (k * theta) < 0.05,
+                "k={k} mean {mean}"
+            );
+            assert!(
+                (var - k * theta * theta).abs() / (k * theta * theta) < 0.15,
+                "k={k} var {var}"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = Zipf::new(100, 0.9);
+        let w = z.weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(w[0] > w[10] && w[10] > w[99]);
+        let mut rng = Rng::new(6);
+        let mut counts = vec![0u32; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[50]);
+        let observed = counts[0] as f64 / 100_000.0;
+        assert!((observed - w[0]).abs() < 0.01);
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut rng = Rng::new(9);
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal(2.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        assert!((median - 2.0f64.exp()).abs() / 2.0f64.exp() < 0.03);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Rng::new(10);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,265 @@
+//! Summary statistics used by the metrics layer and every bench:
+//! exact percentiles, histograms, CDF dumps, streaming mean/variance.
+
+/// Exact percentile over a sample (sorts a copy; fine at experiment scale).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p}");
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&xs, p)
+}
+
+/// Percentile over an already-sorted sample (nearest-rank with linear
+/// interpolation, the same convention numpy's default uses).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.iter().sum::<f64>() / samples.len() as f64
+}
+
+/// Welford streaming mean/variance — used where storing samples is too
+/// expensive (e.g. per-event accounting in the 5880-config sweep).
+#[derive(Clone, Debug, Default)]
+pub struct Streaming {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Streaming {
+    pub fn new() -> Self {
+        Streaming {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Integer-bucket histogram (e.g. batch-size distributions, Fig 1).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, bucket: usize) {
+        self.add_n(bucket, 1);
+    }
+
+    #[inline]
+    pub fn add_n(&mut self, bucket: usize, n: u64) {
+        if bucket >= self.counts.len() {
+            self.counts.resize(bucket + 1, 0);
+        }
+        self.counts[bucket] += n;
+        self.total += n;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn count(&self, bucket: usize) -> u64 {
+        self.counts.get(bucket).copied().unwrap_or(0)
+    }
+
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Smallest bucket b such that cumulative fraction ≥ q (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> usize {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut cum = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return b;
+            }
+        }
+        self.counts.len().saturating_sub(1)
+    }
+
+    pub fn median(&self) -> usize {
+        self.quantile(0.5)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let sum: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(b, &c)| b as u64 * c)
+            .sum();
+        sum as f64 / self.total as f64
+    }
+
+    /// `(bucket, fraction)` pairs for non-empty buckets — CDF-plot input.
+    pub fn cdf(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((b, cum as f64 / self.total as f64));
+            }
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, &c) in other.counts.iter().enumerate() {
+            if c > 0 {
+                self.add_n(b, c);
+            }
+        }
+    }
+}
+
+/// Dump a sample's CDF at fixed evaluation points (for figure output).
+pub fn cdf_points(samples: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if samples.is_empty() {
+        return Vec::new();
+    }
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..=points)
+        .map(|i| {
+            let q = i as f64 / points as f64;
+            (percentile_sorted(&xs, q * 100.0), q)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[3.0], 99.0), 3.0);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut s = Streaming::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - mean(&xs)).abs() < 1e-9);
+        let batch_var = xs.iter().map(|x| (x - mean(&xs)).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((s.var() - batch_var).abs() < 1e-6);
+        assert_eq!(s.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for b in 1..=10 {
+            h.add_n(b, 10);
+        }
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.median(), 5);
+        assert_eq!(h.quantile(1.0), 10);
+        assert!((h.mean() - 5.5).abs() < 1e-9);
+        let cdf = h.cdf();
+        assert_eq!(cdf.first().unwrap().0, 1);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        a.add(1);
+        let mut b = Histogram::new();
+        b.add(2);
+        b.add(2);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.count(2), 2);
+    }
+}

@@ -1,0 +1,140 @@
+//! Aligned text tables + TSV result files. Every bench prints the paper's
+//! rows through this and mirrors them to `results/<id>.tsv`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", c, w = widths[i] + 2);
+            }
+            out.push('\n');
+        };
+        fmt_row(&mut out, &self.header);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Print to stdout and mirror to `results/<name>.tsv`.
+    pub fn emit(&self, name: &str) {
+        print!("{}", self.render());
+        if let Err(e) = self.write_tsv(Path::new("results").join(format!("{name}.tsv"))) {
+            eprintln!("warn: could not write results/{name}.tsv: {e}");
+        }
+    }
+
+    pub fn write_tsv<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = fs::File::create(path)?;
+        writeln!(f, "{}", self.header.join("\t"))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join("\t"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Section banner used by benches so `cargo bench` output reads like the
+/// paper's evaluation section.
+pub fn banner(title: &str) {
+    let line = "=".repeat(title.len() + 8);
+    println!("\n{line}\n=== {title} ===\n{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["sys", "goodput"]);
+        t.row(vec!["symphony".to_string(), "5264".to_string()]);
+        t.row(vec!["nexus".to_string(), "4027".to_string()]);
+        let s = t.render();
+        assert!(s.contains("symphony"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // Columns aligned: "goodput" starts at the same offset everywhere.
+        let col = lines[0].find("goodput").unwrap();
+        assert_eq!(&lines[2][col..col + 4], "5264");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn tsv_round_trip() {
+        let mut t = Table::new(vec!["x", "y"]);
+        t.row(vec!["1", "2"]);
+        let dir = std::env::temp_dir().join("symphony_table_test");
+        let path = dir.join("t.tsv");
+        t.write_tsv(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "x\ty\n1\t2\n");
+    }
+}

@@ -1,0 +1,237 @@
+//! Per-model arrival processes.
+//!
+//! The paper's workloads use Poisson arrivals by default and Gamma
+//! inter-arrival distributions with shape 0.1–1.0 for burstiness
+//! (Table 1; Γ(1.0) ≡ Poisson). Fig 15 drives rates from a time-varying
+//! trace, modeled here as a piecewise-constant rate function.
+
+use crate::core::time::Micros;
+use crate::util::rng::Rng;
+
+/// The arrival process of one model's request stream.
+#[derive(Clone, Debug)]
+pub enum ArrivalKind {
+    /// Poisson process at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Gamma-distributed inter-arrivals with the given `shape` and mean
+    /// `1/rate` (shape < 1 is burstier than Poisson; shape = 1 is
+    /// exactly Poisson).
+    Gamma { rate: f64, shape: f64 },
+    /// Deterministic arrivals every `1/rate` seconds (the §3.3 worked
+    /// example's uniform process).
+    Uniform { rate: f64 },
+    /// Piecewise-constant rate: `(start_time, rate)` segments, sorted.
+    /// Sampling uses the rate of the segment containing the current time.
+    PiecewiseRate { segments: Vec<(Micros, f64)>, shape: f64 },
+    /// Explicit arrival times (unit tests / worked examples).
+    Explicit { times: Vec<Micros> },
+}
+
+impl ArrivalKind {
+    /// Mean rate right now (requests/second).
+    pub fn rate_at(&self, now: Micros) -> f64 {
+        match self {
+            ArrivalKind::Poisson { rate }
+            | ArrivalKind::Gamma { rate, .. }
+            | ArrivalKind::Uniform { rate } => *rate,
+            ArrivalKind::PiecewiseRate { segments, .. } => {
+                let mut r = 0.0;
+                for &(t, rate) in segments {
+                    if t <= now {
+                        r = rate;
+                    } else {
+                        break;
+                    }
+                }
+                r
+            }
+            ArrivalKind::Explicit { .. } => 0.0,
+        }
+    }
+}
+
+/// Stateful generator of one model's arrival times.
+#[derive(Clone, Debug)]
+pub struct ArrivalStream {
+    kind: ArrivalKind,
+    rng: Rng,
+    next_explicit: usize,
+}
+
+impl ArrivalStream {
+    pub fn new(kind: ArrivalKind, rng: Rng) -> Self {
+        ArrivalStream {
+            kind,
+            rng,
+            next_explicit: 0,
+        }
+    }
+
+    /// Time of the next arrival strictly after `now`, or `None` if the
+    /// stream is exhausted (explicit) or the rate is zero forever.
+    pub fn next_after(&mut self, now: Micros) -> Option<Micros> {
+        match &self.kind {
+            ArrivalKind::Poisson { rate } => {
+                if *rate <= 0.0 {
+                    return None;
+                }
+                Some(now + Micros::from_secs_f64(self.rng.exp1() / rate))
+            }
+            ArrivalKind::Gamma { rate, shape } => {
+                if *rate <= 0.0 {
+                    return None;
+                }
+                // Mean inter-arrival 1/rate => scale = 1/(rate*shape).
+                let gap = self.rng.gamma(*shape, 1.0 / (rate * shape));
+                Some(now + Micros::from_secs_f64(gap))
+            }
+            ArrivalKind::Uniform { rate } => {
+                if *rate <= 0.0 {
+                    return None;
+                }
+                Some(now + Micros::from_secs_f64(1.0 / rate))
+            }
+            ArrivalKind::PiecewiseRate { segments, shape } => {
+                // Draw from the current segment's rate; if there is no
+                // load now, jump to the next segment with load.
+                let mut t = now;
+                loop {
+                    let rate = self.kind_rate_at(t, segments);
+                    if rate > 0.0 {
+                        let gap = if *shape >= 1.0 {
+                            self.rng.exp1() / rate
+                        } else {
+                            self.rng.gamma(*shape, 1.0 / (rate * shape))
+                        };
+                        return Some(t + Micros::from_secs_f64(gap));
+                    }
+                    // Find the next segment start after t.
+                    let next = segments.iter().map(|&(s, _)| s).find(|&s| s > t)?;
+                    t = next;
+                }
+            }
+            ArrivalKind::Explicit { times } => {
+                while self.next_explicit < times.len() {
+                    let t = times[self.next_explicit];
+                    self.next_explicit += 1;
+                    if t >= now {
+                        return Some(t);
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    fn kind_rate_at(&self, t: Micros, segments: &[(Micros, f64)]) -> f64 {
+        let mut r = 0.0;
+        for &(s, rate) in segments {
+            if s <= t {
+                r = rate;
+            } else {
+                break;
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_rate(kind: ArrivalKind, horizon_s: f64) -> f64 {
+        let mut s = ArrivalStream::new(kind, Rng::new(7));
+        let horizon = Micros::from_secs_f64(horizon_s);
+        let mut t = Micros::ZERO;
+        let mut n = 0u64;
+        while let Some(next) = s.next_after(t) {
+            if next > horizon {
+                break;
+            }
+            t = next;
+            n += 1;
+        }
+        n as f64 / horizon_s
+    }
+
+    #[test]
+    fn poisson_rate() {
+        let r = mean_rate(ArrivalKind::Poisson { rate: 1000.0 }, 20.0);
+        assert!((r - 1000.0).abs() / 1000.0 < 0.03, "rate {r}");
+    }
+
+    #[test]
+    fn gamma_rate_all_shapes() {
+        for shape in [0.1, 0.3, 0.7, 1.0] {
+            let r = mean_rate(ArrivalKind::Gamma { rate: 500.0, shape }, 30.0);
+            assert!((r - 500.0).abs() / 500.0 < 0.06, "shape {shape} rate {r}");
+        }
+    }
+
+    #[test]
+    fn gamma_small_shape_is_burstier() {
+        // Burstiness: coefficient of variation of inter-arrival gaps
+        // is 1/sqrt(shape) for Gamma.
+        let cv = |shape: f64| {
+            let mut s = ArrivalStream::new(
+                ArrivalKind::Gamma { rate: 1000.0, shape },
+                Rng::new(3),
+            );
+            let mut t = Micros::ZERO;
+            let mut gaps = Vec::new();
+            for _ in 0..50_000 {
+                let n = s.next_after(t).unwrap();
+                gaps.push((n - t).as_secs_f64());
+                t = n;
+            }
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>()
+                / gaps.len() as f64;
+            v.sqrt() / m
+        };
+        let bursty = cv(0.1);
+        let poisson = cv(1.0);
+        assert!((poisson - 1.0).abs() < 0.1, "cv(1.0) = {poisson}");
+        assert!((bursty - (1.0f64 / 0.1).sqrt()).abs() < 0.4, "cv(0.1) = {bursty}");
+    }
+
+    #[test]
+    fn uniform_is_exact() {
+        let mut s = ArrivalStream::new(ArrivalKind::Uniform { rate: 4.0 }, Rng::new(1));
+        // Gap = 0.25s each.
+        let t1 = s.next_after(Micros::ZERO).unwrap();
+        let t2 = s.next_after(t1).unwrap();
+        assert_eq!(t1, Micros::from_secs_f64(0.25));
+        assert_eq!(t2, Micros::from_secs_f64(0.5));
+    }
+
+    #[test]
+    fn piecewise_respects_segments() {
+        let kind = ArrivalKind::PiecewiseRate {
+            segments: vec![
+                (Micros::ZERO, 0.0),
+                (Micros::from_secs_f64(10.0), 1000.0),
+                (Micros::from_secs_f64(20.0), 0.0),
+            ],
+            shape: 1.0,
+        };
+        let mut s = ArrivalStream::new(kind, Rng::new(5));
+        // No load until t=10s: the first arrival must be after that.
+        let first = s.next_after(Micros::ZERO).unwrap();
+        assert!(first >= Micros::from_secs_f64(10.0));
+        // After t=20s the rate is 0 forever -> None.
+        let none = s.next_after(Micros::from_secs_f64(25.0));
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn explicit_stream() {
+        let times = vec![Micros(5), Micros(10), Micros(15)];
+        let mut s = ArrivalStream::new(ArrivalKind::Explicit { times }, Rng::new(1));
+        assert_eq!(s.next_after(Micros::ZERO), Some(Micros(5)));
+        assert_eq!(s.next_after(Micros(6)), Some(Micros(10)));
+        assert_eq!(s.next_after(Micros(10)), Some(Micros(15)));
+        assert_eq!(s.next_after(Micros(15)), None);
+    }
+}

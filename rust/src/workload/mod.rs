@@ -1,0 +1,11 @@
+//! Workload generation: per-model arrival processes (Poisson / Gamma
+//! burstiness / piecewise-rate traces, §5), popularity skew (uniform /
+//! Zipf-0.9), and the synthetic rate trace used by the Fig 15
+//! changing-workload experiment.
+
+pub mod arrival;
+pub mod spec;
+pub mod trace;
+
+pub use arrival::{ArrivalKind, ArrivalStream};
+pub use spec::{Popularity, Workload, WorkloadSpec};

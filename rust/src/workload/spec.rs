@@ -1,0 +1,230 @@
+//! Workload specification: a set of models, a popularity split of the
+//! aggregate offered rate, and an arrival process per model — merged
+//! into one time-ordered request stream for the engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::core::profile::ModelSpec;
+use crate::core::time::Micros;
+use crate::core::types::{ModelId, Request, RequestId};
+use crate::util::rng::{Rng, Zipf};
+use crate::workload::arrival::{ArrivalKind, ArrivalStream};
+
+/// How the aggregate rate splits across models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Popularity {
+    /// All models equally popular (the paper's default, §3.4).
+    Equal,
+    /// Zipfian with the given exponent (Fig 11 uses 0.9).
+    Zipf(f64),
+}
+
+impl Popularity {
+    pub fn weights(&self, n: usize) -> Vec<f64> {
+        match self {
+            Popularity::Equal => vec![1.0 / n as f64; n],
+            Popularity::Zipf(s) => Zipf::new(n, *s).weights(),
+        }
+    }
+}
+
+/// Declarative description of a workload.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub models: Vec<ModelSpec>,
+    /// Aggregate offered rate (requests/second) across all models.
+    pub total_rate: f64,
+    pub popularity: Popularity,
+    /// Gamma shape of inter-arrivals (1.0 = Poisson).
+    pub gamma_shape: f64,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn new(models: Vec<ModelSpec>, total_rate: f64) -> Self {
+        WorkloadSpec {
+            models,
+            total_rate,
+            popularity: Popularity::Equal,
+            gamma_shape: 1.0,
+            seed: 0,
+        }
+    }
+
+    pub fn popularity(mut self, p: Popularity) -> Self {
+        self.popularity = p;
+        self
+    }
+
+    pub fn gamma_shape(mut self, shape: f64) -> Self {
+        self.gamma_shape = shape;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn rate(mut self, total_rate: f64) -> Self {
+        self.total_rate = total_rate;
+        self
+    }
+
+    /// Per-model rates implied by the popularity split.
+    pub fn model_rates(&self) -> Vec<f64> {
+        self.popularity
+            .weights(self.models.len())
+            .into_iter()
+            .map(|w| w * self.total_rate)
+            .collect()
+    }
+
+    /// Materialize the merged request stream.
+    pub fn build(&self) -> Workload {
+        let mut rng = Rng::new(self.seed);
+        let streams = self
+            .model_rates()
+            .into_iter()
+            .enumerate()
+            .map(|(i, rate)| {
+                let kind = if (self.gamma_shape - 1.0).abs() < 1e-12 {
+                    ArrivalKind::Poisson { rate }
+                } else {
+                    ArrivalKind::Gamma {
+                        rate,
+                        shape: self.gamma_shape,
+                    }
+                };
+                ArrivalStream::new(kind, rng.fork(i as u64))
+            })
+            .collect();
+        Workload::from_streams(self.models.clone(), streams)
+    }
+}
+
+/// The merged, time-ordered request stream.
+pub struct Workload {
+    pub models: Vec<ModelSpec>,
+    streams: Vec<ArrivalStream>,
+    /// Min-heap of (next_arrival, model index).
+    heap: BinaryHeap<Reverse<(Micros, u32)>>,
+    next_id: u64,
+}
+
+impl Workload {
+    pub fn from_streams(models: Vec<ModelSpec>, mut streams: Vec<ArrivalStream>) -> Self {
+        assert_eq!(models.len(), streams.len());
+        let mut heap = BinaryHeap::new();
+        for (i, s) in streams.iter_mut().enumerate() {
+            if let Some(t) = s.next_after(Micros::ZERO) {
+                heap.push(Reverse((t, i as u32)));
+            }
+        }
+        Workload {
+            models,
+            streams,
+            heap,
+            next_id: 0,
+        }
+    }
+
+    /// Build a workload from explicit per-model arrival times (worked
+    /// examples, Fig 4/5).
+    pub fn explicit(models: Vec<ModelSpec>, times: Vec<Vec<Micros>>) -> Self {
+        let streams = times
+            .into_iter()
+            .map(|t| ArrivalStream::new(ArrivalKind::Explicit { times: t }, Rng::new(0)))
+            .collect();
+        Workload::from_streams(models, streams)
+    }
+
+    /// Time of the next request without consuming it.
+    pub fn peek_time(&self) -> Option<Micros> {
+        self.heap.peek().map(|Reverse((t, _))| *t)
+    }
+
+    /// Consume and return the next request (deadline = arrival + SLO).
+    pub fn next_request(&mut self) -> Option<Request> {
+        let Reverse((t, m)) = self.heap.pop()?;
+        if let Some(next) = self.streams[m as usize].next_after(t) {
+            debug_assert!(next >= t);
+            // Enforce strict progress so zero gaps cannot live-lock.
+            let next = if next == t { Micros(t.0 + 1) } else { next };
+            self.heap.push(Reverse((next, m)));
+        }
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        Some(Request {
+            id,
+            model: ModelId(m),
+            arrival: t,
+            deadline: t + self.models[m as usize].slo,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::model_zoo::resnet_like_variants;
+    use crate::core::model_zoo::GpuKind;
+
+    #[test]
+    fn merged_stream_is_time_ordered() {
+        let models = resnet_like_variants(4, 50.0, GpuKind::Gtx1080Ti);
+        let mut w = WorkloadSpec::new(models, 2000.0).seed(3).build();
+        let mut last = Micros::ZERO;
+        let mut counts = [0u32; 4];
+        for _ in 0..5000 {
+            let r = w.next_request().unwrap();
+            assert!(r.arrival >= last);
+            assert_eq!(r.deadline, r.arrival + Micros::from_millis_f64(50.0));
+            counts[r.model.0 as usize] += 1;
+            last = r.arrival;
+        }
+        // Equal popularity: each model ~1250.
+        for c in counts {
+            assert!((900..1600).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn zipf_popularity_skews_counts() {
+        let models = resnet_like_variants(10, 50.0, GpuKind::Gtx1080Ti);
+        let mut w = WorkloadSpec::new(models, 5000.0)
+            .popularity(Popularity::Zipf(0.9))
+            .seed(11)
+            .build();
+        let mut counts = [0u32; 10];
+        for _ in 0..20_000 {
+            counts[w.next_request().unwrap().model.0 as usize] += 1;
+        }
+        assert!(counts[0] > 2 * counts[9], "{counts:?}");
+    }
+
+    #[test]
+    fn request_ids_unique_and_sequential() {
+        let models = resnet_like_variants(2, 20.0, GpuKind::Gtx1080Ti);
+        let mut w = WorkloadSpec::new(models, 100.0).build();
+        for i in 0..100 {
+            assert_eq!(w.next_request().unwrap().id, RequestId(i));
+        }
+    }
+
+    #[test]
+    fn explicit_workload_matches_fig4_example() {
+        // §3.3: R_i arrives at t = 0.75 * (i-1) time units (ms here).
+        let models = vec![crate::core::profile::ModelSpec::new("m", 1.0, 5.0, 12.0)];
+        let times: Vec<Micros> = (0..16)
+            .map(|i| Micros::from_millis_f64(0.75 * i as f64))
+            .collect();
+        let mut w = Workload::explicit(models, vec![times]);
+        let r1 = w.next_request().unwrap();
+        assert_eq!(r1.arrival, Micros::ZERO);
+        assert_eq!(r1.deadline, Micros::from_millis_f64(12.0));
+        let r2 = w.next_request().unwrap();
+        assert_eq!(r2.arrival, Micros(750));
+    }
+}

@@ -1,0 +1,112 @@
+//! Synthetic time-varying rate traces for the Fig 15 changing-workload
+//! experiment. The paper derives per-model rates from 150 hours of
+//! video; we synthesize traces with the same qualitative structure — a
+//! slow diurnal swing, per-model phase offsets, and occasional bursts —
+//! as piecewise-constant rate segments (DESIGN.md §3).
+
+use crate::core::time::Micros;
+use crate::util::rng::Rng;
+
+/// Parameters of a synthetic diurnal+burst trace.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Experiment duration.
+    pub duration: Micros,
+    /// Rate-segment granularity.
+    pub segment: Micros,
+    /// Mean rate of the model's trace (requests/second).
+    pub mean_rate: f64,
+    /// Peak-to-trough swing as a fraction of the mean (0..1).
+    pub swing: f64,
+    /// Diurnal period.
+    pub period: Micros,
+    /// Phase offset (per-model decorrelation).
+    pub phase: f64,
+    /// Probability that a segment is a burst.
+    pub burst_prob: f64,
+    /// Burst multiplier applied to the segment rate.
+    pub burst_mult: f64,
+}
+
+impl TraceSpec {
+    pub fn new(duration: Micros, mean_rate: f64) -> Self {
+        TraceSpec {
+            duration,
+            segment: Micros::from_secs_f64(10.0),
+            mean_rate,
+            swing: 0.6,
+            period: Micros::from_secs_f64(600.0),
+            phase: 0.0,
+            burst_prob: 0.02,
+            burst_mult: 2.5,
+        }
+    }
+
+    pub fn phase(mut self, phase: f64) -> Self {
+        self.phase = phase;
+        self
+    }
+
+    /// Generate the `(start, rate)` segments.
+    pub fn generate(&self, rng: &mut Rng) -> Vec<(Micros, f64)> {
+        let mut segments = Vec::new();
+        let mut t = Micros::ZERO;
+        while t < self.duration {
+            let x = t.as_secs_f64() / self.period.as_secs_f64();
+            let diurnal =
+                1.0 + self.swing * (2.0 * std::f64::consts::PI * (x + self.phase)).sin();
+            let mut rate = self.mean_rate * diurnal.max(0.05);
+            if rng.f64() < self.burst_prob {
+                rate *= self.burst_mult;
+            }
+            segments.push((t, rate));
+            t += self.segment;
+        }
+        segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_mean_close_to_spec() {
+        let spec = TraceSpec::new(Micros::from_secs_f64(1200.0), 100.0);
+        let mut rng = Rng::new(9);
+        let segs = spec.generate(&mut rng);
+        assert_eq!(segs.len(), 120);
+        let mean: f64 = segs.iter().map(|&(_, r)| r).sum::<f64>() / segs.len() as f64;
+        // Bursts push the mean slightly above 100.
+        assert!((95.0..125.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn trace_swings() {
+        let spec = TraceSpec::new(Micros::from_secs_f64(1200.0), 100.0);
+        let mut rng = Rng::new(10);
+        let segs = spec.generate(&mut rng);
+        let max = segs.iter().map(|&(_, r)| r).fold(0.0, f64::max);
+        let min = segs.iter().map(|&(_, r)| r).fold(f64::MAX, f64::min);
+        assert!(max > 140.0, "max {max}");
+        assert!(min < 60.0, "min {min}");
+    }
+
+    #[test]
+    fn phases_decorrelate() {
+        let mut rng = Rng::new(11);
+        let a = TraceSpec::new(Micros::from_secs_f64(600.0), 100.0)
+            .phase(0.0)
+            .generate(&mut rng);
+        let b = TraceSpec::new(Micros::from_secs_f64(600.0), 100.0)
+            .phase(0.5)
+            .generate(&mut rng);
+        // Opposite phases: where a is high, b is low.
+        let corr: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&(_, x), &(_, y))| (x - 100.0) * (y - 100.0))
+            .sum();
+        assert!(corr < 0.0, "corr {corr}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration: the autoscaling loop on a changing workload (Fig 15)
+//! and the partitioning solver at paper scale (Fig 16 / Appendix A).
+
+use std::time::Duration;
+
+use symphony::partition;
+use symphony::util::rng::Rng;
+
+/// Fig 15 (scaled down): the autoscaler tracks a diurnal load — GPU
+/// count falls in troughs and rises at peaks, and the bad rate stays
+/// low in underload.
+#[test]
+fn autoscaler_tracks_load() {
+    let table = symphony::harness::experiments::fig15_autoscale(180.0, 64);
+    // Parse back the rows (t, offered, gpus, bad, delta).
+    let text = table.render();
+    let mut rows: Vec<(f64, f64, usize, f64)> = Vec::new();
+    for line in text.lines().skip(2) {
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        if cols.len() >= 5 {
+            let t: f64 = cols[0].parse().unwrap();
+            let offered: f64 = cols[1].parse().unwrap();
+            let gpus: usize = cols[2].parse().unwrap();
+            let bad: f64 = cols[3].trim_end_matches('%').parse().unwrap();
+            rows.push((t, offered, gpus, bad / 100.0));
+        }
+    }
+    assert!(rows.len() >= 10, "got {} epochs", rows.len());
+    // GPU count varies (not pinned at the initial size).
+    let min_g = rows.iter().map(|r| r.2).min().unwrap();
+    let max_g = rows.iter().map(|r| r.2).max().unwrap();
+    assert!(min_g < max_g, "autoscaler never changed the cluster");
+    assert!(min_g < 64, "never consolidated below the initial 64");
+    // Load-proportionality: correlation between offered load and GPUs.
+    let n = rows.len() as f64;
+    let mean_o = rows.iter().map(|r| r.1).sum::<f64>() / n;
+    let mean_g = rows.iter().map(|r| r.2 as f64).sum::<f64>() / n;
+    let cov: f64 = rows
+        .iter()
+        .map(|r| (r.1 - mean_o) * (r.2 as f64 - mean_g))
+        .sum();
+    assert!(cov > 0.0, "GPU count not positively tracking load");
+    // Bad rate mostly low (bursts may transiently violate).
+    let low_bad = rows.iter().filter(|r| r.3 < 0.05).count();
+    assert!(
+        low_bad as f64 >= 0.7 * n,
+        "only {low_bad}/{} epochs with <5% bad",
+        rows.len()
+    );
+}
+
+/// Appendix A.2 at paper scale: 800 models, 20 partitions; the solver's
+/// partition beats random search on the MILP objective and both
+/// imbalance factors.
+#[test]
+fn partition_paper_scale() {
+    let mut rng = Rng::new(4242);
+    let p = partition::random_instance(800, 20, &mut rng);
+    let budget = Duration::from_millis(400);
+    let ours = partition::solve(&p, budget, &mut rng).expect("solver feasible");
+    let rand = partition::random_search(&p, budget, &mut rng).expect("random feasible");
+    assert!(p.feasible(&ours));
+    let (ri, si) = p.imbalance(&ours);
+    let (rr, sr) = p.imbalance(&rand);
+    assert!(
+        p.objective(&ours) < p.objective(&rand),
+        "objective {} !< {}",
+        p.objective(&ours),
+        p.objective(&rand)
+    );
+    assert!(ri < rr, "rate imbalance {ri} !< {rr}");
+    assert!(si < sr * 1.2, "mem imbalance {si} vs {sr}");
+}
+
+/// Disruption-bounded re-solve: with a tight switching budget the new
+/// assignment stays close to the old one.
+#[test]
+fn partition_disruption_minimized() {
+    let mut rng = Rng::new(99);
+    let mut p = partition::random_instance(200, 8, &mut rng);
+    let initial = partition::solve(&p, Duration::from_millis(150), &mut rng).unwrap();
+    // Perturb rates, re-solve with a budget allowing ~10 moves.
+    for m in p.models.iter_mut() {
+        m.rate *= rng.range_f64(0.7, 1.4);
+    }
+    p.disruption = Some((initial.clone(), vec![1.0; 200], 20.0));
+    let next = partition::solve(&p, Duration::from_millis(150), &mut rng).unwrap();
+    let moves = initial.iter().zip(&next).filter(|(a, b)| a != b).count();
+    assert!(moves <= 10, "moved {moves} models despite C_max");
+    assert!(p.feasible(&next));
+}

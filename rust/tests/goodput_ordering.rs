@@ -1,0 +1,146 @@
+//! Cross-system goodput relationships the paper's evaluation claims —
+//! the "shape" assertions of DESIGN.md §5: who wins, roughly by what
+//! factor, and where the advantage disappears.
+
+use symphony::core::model_zoo::{self, GpuKind};
+use symphony::core::time::Micros;
+use symphony::harness::{GoodputExperiment, SystemKind};
+
+fn goodput(exp: &GoodputExperiment, sys: SystemKind) -> f64 {
+    exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO))
+        .goodput
+}
+
+/// Table 2, ResNet50: Symphony > Shepherd > Nexus ≫ Clockwork, and
+/// Symphony lands between the no-coordination and staggered analytical
+/// throughputs, near the staggered one.
+#[test]
+fn table2_ordering_resnet50() {
+    let exp = GoodputExperiment::new(vec![model_zoo::resnet50_table2()], 8).sim_secs(6.0);
+    let sym = goodput(&exp, SystemKind::Symphony);
+    let clk = goodput(&exp, SystemKind::Clockwork);
+    let nex = goodput(&exp, SystemKind::Nexus { frontends: 1 });
+    assert!(sym > nex, "symphony {sym} vs nexus {nex}");
+    assert!(sym > clk, "symphony {sym} vs clockwork {clk}");
+    // Paper: Symphony 5264 vs staggered analytical 5839 on this model.
+    assert!((4600.0..5900.0).contains(&sym), "symphony {sym}");
+    // Nexus near the no-coordination analytical 4501.
+    assert!((3300.0..4800.0).contains(&nex), "nexus {nex}");
+}
+
+/// Fig 1: median batch sizes ordered Clockwork < Nexus < Symphony, with
+/// Symphony at roughly twice Nexus (paper: 1, 6, 14).
+#[test]
+fn fig1_batch_ordering() {
+    let exp = GoodputExperiment::new(vec![model_zoo::resnet50_table2()], 8).sim_secs(6.0);
+    let median = |sys: SystemKind| {
+        exp.goodput(|e| sys.build(&e.models, e.num_gpus, Micros::ZERO))
+            .metrics
+            .batch_hist_all()
+            .median()
+    };
+    let clk = median(SystemKind::Clockwork);
+    let nex = median(SystemKind::Nexus { frontends: 1 });
+    let sym = median(SystemKind::Symphony);
+    assert!(clk <= 3, "clockwork median {clk}");
+    assert!(nex < sym, "nexus {nex} vs symphony {sym}");
+    assert!(sym >= 12, "symphony median {sym} (paper: 14)");
+}
+
+/// Fig 7c: for a weak-batching model (BERT, β/α ≈ 0.02) deferred and
+/// eager goodputs are essentially equal.
+#[test]
+fn weak_batching_no_advantage() {
+    let bert = model_zoo::by_name(GpuKind::Gtx1080Ti, "BERT").unwrap();
+    let models: Vec<_> = (0..4)
+        .map(|i| {
+            let mut m = bert.clone();
+            m.name = format!("bert-{i}");
+            m
+        })
+        .collect();
+    let exp = GoodputExperiment::new(models, 8).sim_secs(4.0);
+    let def = goodput(&exp, SystemKind::Symphony);
+    let eag = goodput(&exp, SystemKind::Eager);
+    let ratio = def / eag.max(1.0);
+    assert!(
+        (0.9..1.25).contains(&ratio),
+        "BERT deferred/eager ratio {ratio}"
+    );
+}
+
+/// Fig 11's headline: under tight SLOs and bursty multi-model load,
+/// Symphony clearly beats the uncoordinated baseline (Nexus).
+#[test]
+fn tight_slo_bursty_advantage() {
+    let models = model_zoo::resnet_like_variants(8, 25.0, GpuKind::Gtx1080Ti);
+    let exp = GoodputExperiment::new(models, 16)
+        .gamma_shape(0.05)
+        .sim_secs(5.0);
+    let sym = goodput(&exp, SystemKind::Symphony);
+    let nex = goodput(&exp, SystemKind::Nexus { frontends: 1 });
+    assert!(
+        sym > nex * 1.2,
+        "symphony {sym} should beat nexus {nex} by >20% here"
+    );
+}
+
+/// Fig 2's flat-top property: Symphony's goodput under 2x overload
+/// stays within 25% of its peak (Clockwork's collapses).
+#[test]
+fn flattop_under_overload() {
+    let models = model_zoo::resnet_like_variants(10, 100.0, GpuKind::Gtx1080Ti);
+    let exp = GoodputExperiment::new(models, 24).sim_secs(5.0);
+    let peak = goodput(&exp, SystemKind::Symphony);
+    let over = exp.run_at(peak * 2.0, &|e: &GoodputExperiment| {
+        SystemKind::Symphony.build(&e.models, e.num_gpus, Micros::ZERO)
+    });
+    assert!(
+        over.goodput() > peak * 0.75,
+        "overloaded goodput {} vs peak {peak}",
+        over.goodput()
+    );
+    // Clockwork under the same overload delivers less than Symphony
+    // and (Fig 2 right) has burned all GPUs long before its peak.
+    let clk_over = exp.run_at(peak * 2.0, &|e: &GoodputExperiment| {
+        SystemKind::Clockwork.build(&e.models, e.num_gpus, Micros::ZERO)
+    });
+    assert!(
+        clk_over.goodput() < over.goodput(),
+        "clockwork overloaded {} vs symphony {}",
+        clk_over.goodput(),
+        over.goodput()
+    );
+    let clk_light = exp.run_at(3_000.0, &|e: &GoodputExperiment| {
+        SystemKind::Clockwork.build(&e.models, e.num_gpus, Micros::ZERO)
+    });
+    assert!(
+        clk_light.gpus_used() >= 20,
+        "clockwork should occupy nearly all GPUs even at light load, used {}",
+        clk_light.gpus_used()
+    );
+}
+
+/// Fig 2 right: at one-third load, Symphony uses well under half the
+/// GPUs while eager baselines occupy all of them.
+#[test]
+fn load_proportional_gpu_usage() {
+    let models = model_zoo::resnet_like_variants(10, 100.0, GpuKind::Gtx1080Ti);
+    let exp = GoodputExperiment::new(models, 24).sim_secs(5.0);
+    let m_sym = exp.run_at(3_000.0, &|e: &GoodputExperiment| {
+        SystemKind::Symphony.build(&e.models, e.num_gpus, Micros::ZERO)
+    });
+    let m_shep = exp.run_at(3_000.0, &|e: &GoodputExperiment| {
+        SystemKind::Shepherd.build(&e.models, e.num_gpus, Micros::ZERO)
+    });
+    assert!(
+        m_sym.gpus_used() <= 14,
+        "symphony used {} GPUs at light load",
+        m_sym.gpus_used()
+    );
+    assert!(
+        m_shep.gpus_used() >= 20,
+        "shepherd used only {} GPUs (expected all-busy eagerness)",
+        m_shep.gpus_used()
+    );
+}

@@ -1,0 +1,95 @@
+//! Integration tests pinning the paper's worked examples (§3.3, Figs
+//! 4/5) and the analytical relationships they illustrate.
+
+use symphony::core::time::Micros;
+use symphony::harness::experiments::worked_example_workload;
+use symphony::harness::SystemKind;
+use symphony::sim::{Engine, SimConfig};
+
+fn run(sys: SystemKind, skip: bool, n: usize) -> symphony::sim::SimResult<Box<dyn symphony::scheduler::Scheduler>> {
+    let (models, workload) = worked_example_workload(n, skip);
+    let cfg = SimConfig::new(3, Micros::from_secs_f64(0.5)).trace(true);
+    Engine::new(workload, sys.build(&models, 3, Micros::ZERO), cfg).run()
+}
+
+/// Fig 4: the first batch is {R1..R4}, dispatched inside the window
+/// [frontrun=2, latest=3] when R4 arrives at 2.25; the pattern then
+/// staggers across the 3 GPUs with batch size 4 forever.
+#[test]
+fn fig4_trace_exact() {
+    let res = run(SystemKind::Symphony, false, 48);
+    let first = &res.trace[0];
+    assert_eq!(first.size, 4);
+    assert_eq!(first.start, Micros::from_millis_f64(2.25));
+    assert_eq!(first.gpu.0, 0, "min-id GPU first");
+    // Steady state: all batches size 4, no drops, staggered GPUs.
+    assert!(res.trace.iter().all(|t| t.size == 4));
+    for w in res.trace.windows(2) {
+        assert_ne!(w[0].gpu, w[1].gpu);
+    }
+    assert_eq!(res.metrics.per_model[0].dropped, 0);
+    assert_eq!(res.metrics.per_model[0].late, 0);
+}
+
+/// Fig 4 cadence: consecutive dispatches are 3 ms apart (= ℓ(4)/3 GPUs
+/// = staggered offset) once the pattern is established.
+#[test]
+fn fig4_staggered_cadence() {
+    let res = run(SystemKind::Symphony, false, 48);
+    let starts: Vec<f64> = res.trace.iter().map(|t| t.start.as_millis_f64()).collect();
+    for w in starts.windows(2).skip(1) {
+        let gap = w[1] - w[0];
+        assert!((gap - 3.0).abs() < 0.26, "gap {gap}");
+    }
+}
+
+/// Fig 5: with R13–R15 missing, eager degrades (drops) while deferred
+/// loses only the requests that were never sent and recovers the
+/// staggered pattern.
+#[test]
+fn fig5_deferred_recovers_eager_degrades() {
+    let eager = run(SystemKind::Eager, true, 72);
+    let deferred = run(SystemKind::Symphony, true, 72);
+    let e = &eager.metrics.per_model[0];
+    let d = &deferred.metrics.per_model[0];
+    assert!(
+        d.good > e.good,
+        "deferred good {} vs eager good {}",
+        d.good,
+        e.good
+    );
+    assert!(
+        d.dropped < e.dropped,
+        "deferred dropped {} vs eager {}",
+        d.dropped,
+        e.dropped
+    );
+    // Deferred regains batch-4 staggering by the tail of the trace (the
+    // very last batch only collects the workload's leftover stragglers).
+    let tail: Vec<u32> = deferred
+        .trace
+        .iter()
+        .rev()
+        .skip(1)
+        .take(5)
+        .map(|t| t.size)
+        .collect();
+    assert!(tail.iter().all(|&s| s == 4), "tail {tail:?}");
+}
+
+/// §3.3 goodput upper bound: measured Symphony goodput never exceeds
+/// the staggered-execution analytical bound, and gets within 15%.
+#[test]
+fn staggered_bound_respected() {
+    use symphony::core::model_zoo;
+    use symphony::harness::GoodputExperiment;
+    use symphony::scheduler::analytical;
+    let model = model_zoo::resnet50_table2();
+    let bound = analytical::staggered(&model.profile, model.slo, 8).throughput;
+    let exp = GoodputExperiment::new(vec![model], 8).sim_secs(6.0);
+    let got = exp
+        .goodput(|e| SystemKind::Symphony.build(&e.models, e.num_gpus, Micros::ZERO))
+        .goodput;
+    assert!(got <= bound * 1.02, "goodput {got} exceeds bound {bound}");
+    assert!(got >= bound * 0.85, "goodput {got} too far below bound {bound}");
+}

@@ -1,0 +1,189 @@
+//! Property-based integration tests: randomized workloads through every
+//! scheduler, asserting the invariants that must hold regardless of
+//! policy (accounting conservation, no double-booking — enforced by
+//! engine asserts —, SLO discipline, determinism, consolidation).
+
+use symphony::core::model_zoo::GpuKind;
+use symphony::core::time::Micros;
+use symphony::core::{model_zoo, profile::ModelSpec};
+use symphony::harness::SystemKind;
+use symphony::prop_assert;
+use symphony::sim::{Engine, SimConfig};
+use symphony::util::proptest::{check, default_cases};
+use symphony::util::rng::Rng;
+use symphony::workload::WorkloadSpec;
+
+fn random_models(rng: &mut Rng) -> Vec<ModelSpec> {
+    let n = 1 + rng.below(6) as usize;
+    (0..n)
+        .map(|i| {
+            let alpha = rng.range_f64(0.3, 6.0);
+            let beta = rng.range_f64(0.1, 15.0);
+            // SLO large enough that at least batch 2 fits.
+            let min_slo = 2.0 * alpha + beta;
+            let slo = rng.range_f64(min_slo * 1.2, min_slo * 4.0);
+            ModelSpec::new(&format!("m{i}"), alpha, beta, slo)
+        })
+        .collect()
+}
+
+fn all_systems() -> Vec<SystemKind> {
+    vec![
+        SystemKind::Symphony,
+        SystemKind::Clockwork,
+        SystemKind::Nexus { frontends: 1 },
+        SystemKind::Shepherd,
+        SystemKind::Eager,
+        SystemKind::Timeout {
+            k: Micros::from_millis_f64(3.0),
+        },
+    ]
+}
+
+/// Every submitted request reaches exactly one terminal state and the
+/// per-model counters conserve.
+#[test]
+fn prop_accounting_conserves() {
+    check("accounting", default_cases(), |rng| {
+        let models = random_models(rng);
+        let gpus = 1 + rng.below(12) as usize;
+        let rate = rng.range_f64(50.0, 4_000.0);
+        let sys = all_systems()[rng.below(6) as usize];
+        let spec = WorkloadSpec::new(models.clone(), rate).seed(rng.next_u64());
+        let cfg = SimConfig::new(gpus, Micros::from_secs_f64(2.0)).seed(rng.next_u64());
+        let res = Engine::new(spec.build(), sys.build(&models, gpus, Micros::ZERO), cfg).run();
+        let m = &res.metrics;
+        for (i, pm) in m.per_model.iter().enumerate() {
+            let total = pm.good + pm.late + pm.dropped + pm.unfinished;
+            prop_assert!(
+                pm.batch_hist.total() == pm.good + pm.late,
+                "model {i}: batch-hist {} != completed {}",
+                pm.batch_hist.total(),
+                pm.good + pm.late
+            );
+            prop_assert!(total > 0 || rate < 100.0, "model {i} got nothing");
+        }
+        Ok(())
+    });
+}
+
+/// The deferred scheduler never finishes a request after its deadline —
+/// it must drop instead (the schedulable window guarantees it).
+#[test]
+fn prop_deferred_never_late() {
+    check("deferred_never_late", default_cases(), |rng| {
+        let models = random_models(rng);
+        let gpus = 1 + rng.below(12) as usize;
+        let rate = rng.range_f64(50.0, 6_000.0);
+        let spec = WorkloadSpec::new(models.clone(), rate)
+            .gamma_shape(if rng.f64() < 0.5 { 1.0 } else { 0.2 })
+            .seed(rng.next_u64());
+        let cfg = SimConfig::new(gpus, Micros::from_secs_f64(2.0));
+        let res = Engine::new(
+            spec.build(),
+            SystemKind::Symphony.build(&models, gpus, Micros::ZERO),
+            cfg,
+        )
+        .run();
+        let late: u64 = res.metrics.per_model.iter().map(|pm| pm.late).sum();
+        prop_assert!(late == 0, "deferred produced {late} late completions");
+        Ok(())
+    });
+}
+
+/// Same seed ⇒ bit-identical outcome counts (full determinism).
+#[test]
+fn prop_deterministic() {
+    check("determinism", 16, |rng| {
+        let models = random_models(rng);
+        let gpus = 1 + rng.below(8) as usize;
+        let rate = rng.range_f64(100.0, 3_000.0);
+        let seed = rng.next_u64();
+        let sys = all_systems()[rng.below(6) as usize];
+        let run = || {
+            let spec = WorkloadSpec::new(models.clone(), rate).seed(seed);
+            let cfg = SimConfig::new(gpus, Micros::from_secs_f64(1.5)).seed(seed);
+            let res =
+                Engine::new(spec.build(), sys.build(&models, gpus, Micros::ZERO), cfg).run();
+            res.metrics
+                .per_model
+                .iter()
+                .map(|pm| (pm.good, pm.late, pm.dropped))
+                .collect::<Vec<_>>()
+        };
+        prop_assert!(run() == run(), "non-deterministic run for {}", sys.label());
+        Ok(())
+    });
+}
+
+/// Symphony's min-id GPU rule consolidates: at light load, the highest
+/// GPU ids do no work at all.
+#[test]
+fn prop_consolidation() {
+    check("consolidation", 24, |rng| {
+        let models = vec![model_zoo::resnet50_table2()];
+        let gpus = 8;
+        // Light load: well under one GPU's capacity.
+        let rate = rng.range_f64(20.0, 120.0);
+        let spec = WorkloadSpec::new(models.clone(), rate).seed(rng.next_u64());
+        let cfg = SimConfig::new(gpus, Micros::from_secs_f64(3.0));
+        let res = Engine::new(
+            spec.build(),
+            SystemKind::Symphony.build(&models, gpus, Micros::ZERO),
+            cfg,
+        )
+        .run();
+        let used = res.metrics.gpus_used();
+        prop_assert!(used <= 2, "light load used {used} of {gpus} GPUs");
+        Ok(())
+    });
+}
+
+/// Batch sizes never exceed what the SLO admits: ℓ(b) ≤ SLO for every
+/// executed batch, for every scheduler.
+#[test]
+fn prop_batches_fit_slo() {
+    check("batches_fit_slo", default_cases(), |rng| {
+        let models = random_models(rng);
+        let gpus = 1 + rng.below(8) as usize;
+        let rate = rng.range_f64(100.0, 5_000.0);
+        let sys = all_systems()[rng.below(6) as usize];
+        let spec = WorkloadSpec::new(models.clone(), rate).seed(rng.next_u64());
+        let cfg = SimConfig::new(gpus, Micros::from_secs_f64(1.5)).trace(true);
+        let res = Engine::new(spec.build(), sys.build(&models, gpus, Micros::ZERO), cfg).run();
+        for t in &res.trace {
+            let m = &models[t.model.0 as usize];
+            prop_assert!(
+                m.profile.latency(t.size) <= m.slo,
+                "{}: batch {} of {} exceeds SLO",
+                sys.label(),
+                t.size,
+                m.name
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Under Gamma(0.1) burstiness the deferred scheduler still satisfies
+/// its feasibility discipline at low rates (sanity under the paper's
+/// harshest arrival pattern).
+#[test]
+fn prop_bursty_low_load_clean() {
+    check("bursty_low_load", 24, |rng| {
+        let models = model_zoo::resnet_like_variants(4, 50.0, GpuKind::Gtx1080Ti);
+        let spec = WorkloadSpec::new(models.clone(), 200.0)
+            .gamma_shape(0.1)
+            .seed(rng.next_u64());
+        let cfg = SimConfig::new(8, Micros::from_secs_f64(3.0));
+        let res = Engine::new(
+            spec.build(),
+            SystemKind::Symphony.build(&models, 8, Micros::ZERO),
+            cfg,
+        )
+        .run();
+        let bad = res.metrics.bad_fraction();
+        prop_assert!(bad < 0.05, "bad fraction {bad} at light bursty load");
+        Ok(())
+    });
+}

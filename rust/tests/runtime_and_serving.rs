@@ -1,0 +1,122 @@
+//! Integration over the PJRT runtime + real-time serving stack. PJRT
+//! tests skip gracefully when `artifacts/` has not been built (`make
+//! artifacts`); the sleep-backend tests always run.
+
+use std::time::Duration;
+
+use symphony::core::profile::ModelSpec;
+use symphony::runtime::{default_artifacts_dir, ModelRuntime, NUM_CLASSES};
+use symphony::serve::{serve, BackendKind, ServeConfig};
+
+#[test]
+fn sleep_backend_meets_slo_at_moderate_load() {
+    let models = vec![
+        ModelSpec::new("a", 0.2, 2.0, 60.0),
+        ModelSpec::new("b", 0.2, 2.0, 60.0),
+        ModelSpec::new("c", 0.2, 2.0, 60.0),
+    ];
+    let report = serve(ServeConfig {
+        models,
+        num_gpus: 3,
+        total_rate: 300.0,
+        duration: Duration::from_millis(800),
+        backend: BackendKind::Sleep,
+        seed: 11,
+    })
+    .unwrap();
+    assert!(report.submitted > 150);
+    assert!(report.bad_fraction() < 0.1, "bad {}", report.bad_fraction());
+    assert!(report.median_batch >= 1);
+}
+
+#[test]
+fn sleep_backend_batches_under_pressure() {
+    // One GPU, high rate: the coordinator must batch to survive.
+    let models = vec![ModelSpec::new("a", 0.5, 5.0, 80.0)];
+    let report = serve(ServeConfig {
+        models,
+        num_gpus: 1,
+        total_rate: 400.0,
+        duration: Duration::from_millis(700),
+        backend: BackendKind::Sleep,
+        seed: 3,
+    })
+    .unwrap();
+    assert!(
+        report.mean_batch >= 4.0,
+        "mean batch {} too small under pressure",
+        report.mean_batch
+    );
+}
+
+#[test]
+fn pjrt_runtime_numerics() {
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("skipping pjrt test: artifacts/ not built");
+        return;
+    };
+    let rt = ModelRuntime::load(&dir).expect("load");
+    // Batch padding: executing n=5 uses the b=8 executable but returns
+    // exactly 5 rows.
+    let n = 5;
+    let len = n * 32 * 32 * 3;
+    // Structured (non-constant) inputs — constant images can die in the
+    // zero-bias ReLUs and make every class equally likely.
+    let inputs: Vec<f32> = (0..len).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let out = rt.execute(n as u32, &inputs).unwrap();
+    assert_eq!(out.len(), n * NUM_CLASSES);
+    for row in out.chunks(NUM_CLASSES) {
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+    }
+    // Different inputs give different outputs (the network isn't
+    // degenerate).
+    let inputs2: Vec<f32> = (0..len).map(|i| ((i as f32) * 0.11).cos()).collect();
+    let out2 = rt.execute(n as u32, &inputs2).unwrap();
+    let diff: f32 = out
+        .iter()
+        .zip(&out2)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>();
+    assert!(diff > 1e-4, "outputs identical for different inputs");
+}
+
+#[test]
+fn pjrt_end_to_end_serving() {
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("skipping pjrt serving test: artifacts/ not built");
+        return;
+    };
+    // Use the measured CPU profile for scheduling so windows are honest.
+    let rt = ModelRuntime::load(&dir).expect("load");
+    let p = rt
+        .profile
+        .as_ref()
+        .map(|m| m.fitted)
+        .unwrap_or(symphony::core::profile::LatencyProfile::new(0.05, 0.2));
+    drop(rt);
+    let mut model = ModelSpec::new("tinycnn", p.alpha_ms.max(0.02), p.beta_ms.max(0.05), 60.0);
+    model.profile =
+        symphony::core::profile::LatencyProfile::new(p.alpha_ms.max(0.02), p.beta_ms.max(0.05));
+    let report = serve(ServeConfig {
+        models: vec![model],
+        num_gpus: 1,
+        total_rate: 150.0,
+        duration: Duration::from_millis(700),
+        backend: BackendKind::Pjrt {
+            artifacts_dir: dir,
+        },
+        seed: 9,
+    })
+    .unwrap();
+    assert!(report.submitted > 60, "submitted {}", report.submitted);
+    assert!(
+        report.completed + report.dropped >= report.submitted / 2,
+        "too few finished: {report:?}"
+    );
+    assert!(
+        report.bad_fraction() < 0.2,
+        "bad fraction {} on real model",
+        report.bad_fraction()
+    );
+}
