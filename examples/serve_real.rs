@@ -66,6 +66,7 @@ fn main() {
     let report = serve(ServeConfig {
         models,
         num_gpus: gpus,
+        rank_shards: 1,
         total_rate: rate,
         duration: Duration::from_secs_f64(secs),
         backend: BackendKind::Pjrt {

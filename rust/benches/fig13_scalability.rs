@@ -1,9 +1,15 @@
 //! `cargo bench --bench fig13_scalability` — Figure 13 (left): the
-//! multithreaded coordinator's request throughput vs the number of
-//! ModelThreads, with the RankThread shared (the §5.5 scheduler-only
-//! benchmark: no network messages, no real GPUs — requests and GPUs are
-//! in-process objects). Also runs the Figure 13 (right) goodput-vs-GPUs
-//! simulation.
+//! multithreaded coordinator's scheduler-only throughput as the rank
+//! tier is sharded (§5.5: no network messages, no real GPUs — requests
+//! and GPUs are in-process objects, backends are drain threads).
+//!
+//! The sweep runs 1/2/4/8 rank shards × offered request rate and
+//! reports requests/s through the ModelThreads, grants/s out of the
+//! rank tier, and the p99 grant latency (µs a candidate's window was
+//! open before a GPU was granted). On a multi-core host grants/s
+//! scales with the shard count once a single rank thread saturates;
+//! `speedup` is relative to 1 shard at the same offered rate. Also
+//! runs the Figure 13 (right) goodput-vs-GPUs simulation.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
@@ -17,8 +23,22 @@ use symphony::core::types::{ModelId, Request, RequestId};
 use symphony::harness::experiments;
 use symphony::util::table::{banner, Table};
 
-/// Drive `n_models` ModelThreads at line rate for `dur`; return req/s.
-fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f64 {
+struct SweepPoint {
+    processed_per_sec: f64,
+    grants_per_sec: f64,
+    p99_grant_latency_us: usize,
+}
+
+/// Drive `n_models` ModelThreads for `dur` against a sharded rank tier.
+/// `rate` is the offered aggregate rate in requests/second; `None`
+/// submits at line rate (as fast as the channels accept).
+fn coordinator_sweep(
+    n_models: usize,
+    num_gpus: usize,
+    rank_shards: usize,
+    rate: Option<f64>,
+    dur: Duration,
+) -> SweepPoint {
     let profile = LatencyProfile::new(1.0, 5.0);
     // Backend sinks: a drain thread per GPU channel (batches discarded).
     let mut backend_txs = Vec::new();
@@ -41,6 +61,7 @@ fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f6
         CoordinatorConfig {
             profiles: vec![profile; n_models],
             num_gpus,
+            rank_shards,
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
         },
@@ -48,27 +69,44 @@ fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f6
         comp_tx,
     );
 
-    // Load generators: one feeder thread per ModelThread, submitting as
-    // fast as the channel accepts (line rate), SLO 100 ms.
+    // Load generators: one feeder thread per ModelThread, SLO 100 ms.
+    // Paced feeders submit the deficit vs the target rate in small
+    // chunks; line-rate feeders submit as fast as the channel accepts.
     let stop = Arc::new(AtomicBool::new(false));
     let clock = coord.clock;
     let coord = Arc::new(coord);
+    let per_model_rate = rate.map(|r| r / n_models as f64);
     let mut feeders = Vec::new();
     for m in 0..n_models {
         let stop = stop.clone();
         let coord = coord.clone();
         feeders.push(std::thread::spawn(move || {
             let slo = Micros::from_millis_f64(100.0);
+            let t0 = clock.now();
             let mut sent = 0u64;
             while !stop.load(Ordering::Relaxed) {
                 let now = clock.now();
-                coord.submit(Request {
-                    id: RequestId((m as u64) << 40 | sent),
-                    model: ModelId(m as u32),
-                    arrival: now,
-                    deadline: now + slo,
-                });
-                sent += 1;
+                let quota = match per_model_rate {
+                    Some(r) => {
+                        let elapsed = (now.saturating_sub(t0)).as_secs_f64();
+                        let due = (elapsed * r) as u64;
+                        if due <= sent {
+                            std::thread::sleep(Duration::from_micros(200));
+                            continue;
+                        }
+                        (due - sent).min(256)
+                    }
+                    None => 1,
+                };
+                for _ in 0..quota {
+                    coord.submit(Request {
+                        id: RequestId((m as u64) << 40 | sent),
+                        model: ModelId(m as u32),
+                        arrival: now,
+                        deadline: now + slo,
+                    });
+                    sent += 1;
+                }
             }
             sent
         }));
@@ -77,7 +115,7 @@ fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f6
     stop.store(true, Ordering::Relaxed);
     let submitted: u64 = feeders.into_iter().map(|f| f.join().unwrap()).sum();
     let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
-    let (processed, _grants) = coord.shutdown();
+    let (processed, stats) = coord.shutdown_stats();
     for tx in &backend_txs {
         let _ = tx.send(ToBackend::Shutdown);
     }
@@ -86,32 +124,49 @@ fn coordinator_throughput(n_models: usize, num_gpus: usize, dur: Duration) -> f6
     }
     drop(comp_drain);
     let _ = submitted;
-    processed as f64 / dur.as_secs_f64()
+    let secs = dur.as_secs_f64();
+    SweepPoint {
+        processed_per_sec: processed as f64 / secs,
+        grants_per_sec: stats.grants as f64 / secs,
+        p99_grant_latency_us: stats.p99_grant_latency_us(),
+    }
 }
 
 fn main() {
-    banner("Figure 13 (left): scheduler multicore scalability");
+    banner("Figure 13 (left): rank-shard scalability (scheduler-only)");
     let dur = Duration::from_millis(800);
-    let mut table = Table::new(vec![
-        "model_threads", "gpus", "requests_per_sec", "speedup_vs_1",
-    ]);
+    let num_gpus = 64usize;
+    let n_models = 16usize;
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(8);
-    let mut base = 0.0;
-    let mut counts = vec![1usize, 2, 4, 8, 16];
-    counts.retain(|&c| c <= cores.max(4));
-    for &n in &counts {
-        for &gpus in &[64usize, 1024] {
-            let tput = coordinator_throughput(n, gpus, dur);
-            if n == 1 && gpus == 64 {
-                base = tput;
+    println!("(host has {cores} cores; {n_models} models, {num_gpus} in-process GPUs)");
+
+    let mut table = Table::new(vec![
+        "rank_shards",
+        "offered_rps",
+        "requests_per_sec",
+        "grants_per_sec",
+        "p99_grant_lat_us",
+        "speedup_vs_1shard",
+    ]);
+    // Offered rates: two paced points plus line rate (0 = line rate).
+    let rates: [Option<f64>; 3] = [Some(50_000.0), Some(200_000.0), None];
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut base: Vec<f64> = vec![0.0; rates.len()];
+    for &shards in &shard_counts {
+        for (ri, &rate) in rates.iter().enumerate() {
+            let pt = coordinator_sweep(n_models, num_gpus, shards, rate, dur);
+            if shards == 1 {
+                base[ri] = pt.grants_per_sec;
             }
             table.row(vec![
-                n.to_string(),
-                gpus.to_string(),
-                format!("{tput:.0}"),
-                format!("{:.2}x", tput / base.max(1.0)),
+                shards.to_string(),
+                rate.map_or("line".to_string(), |r| format!("{r:.0}")),
+                format!("{:.0}", pt.processed_per_sec),
+                format!("{:.0}", pt.grants_per_sec),
+                pt.p99_grant_latency_us.to_string(),
+                format!("{:.2}x", pt.grants_per_sec / base[ri].max(1.0)),
             ]);
         }
     }

@@ -1,11 +1,11 @@
 //! Message vocabulary between the coordinator's threads (Figure 18):
-//! ModelThread ⇄ RankThread ⇄ (timers), ModelThread → backend workers,
+//! ModelThread ⇄ rank shards ⇄ (timers), ModelThread → backend workers,
 //! backend workers → completion collector.
 
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, Request};
 
-/// A candidate's schedulable window as registered with the RankThread
+/// A candidate's schedulable window as registered with a rank shard
 /// (`inform_candidate`).
 #[derive(Clone, Copy, Debug)]
 pub struct CandWindow {
@@ -14,29 +14,43 @@ pub struct CandWindow {
     pub size: u32,
 }
 
-/// RankThread / frontend → ModelThread.
+/// Rank shard / frontend → ModelThread.
 #[derive(Debug)]
 pub enum ToModel {
     /// A new inference request for this model (frontend → MT, step ②).
     Request(Request),
-    /// "GPU Granted" (RankThread → MT): finalize the batch and dispatch
+    /// "GPU Granted" (rank shard → MT): finalize the batch and dispatch
     /// it to `gpu` immediately (§4.2).
     Granted { gpu: GpuId },
-    /// The RankThread discarded this model's candidate (its window
+    /// The rank shard discarded this model's candidate (its window
     /// expired un-granted); recompute and re-register.
     Revalidate,
+    /// The registered shard has no free GPU, but shard `to_shard`
+    /// advertises spare capacity: re-register the candidate there.
+    /// `seq` echoes the registration this verdict applies to; the
+    /// ModelThread ignores it if the candidate has been replaced since.
+    Overflow { to_shard: usize, seq: u64 },
     Shutdown,
 }
 
-/// ModelThread → RankThread.
+/// ModelThread → rank shard.
 #[derive(Debug)]
 pub enum ToRank {
     /// Register / replace / clear this model's candidate.
+    ///
+    /// `seq` is the ModelThread's monotone registration counter (echoed
+    /// back in [`ToModel::Overflow`] so stale verdicts are detectable);
+    /// `hops` counts overflow re-registrations of this logical
+    /// candidate — a shard parks rather than re-steers once `hops`
+    /// reaches the shard count, bounding migration.
     Candidate {
         model: ModelId,
         cand: Option<CandWindow>,
+        seq: u64,
+        hops: u32,
     },
     /// The granted GPU will be busy until `free_at` (`inform_gpu`).
+    /// Routed to the shard owning `gpu`.
     GpuBusyUntil { gpu: GpuId, free_at: Micros },
     Shutdown,
 }

@@ -1,8 +1,10 @@
 //! The multithreaded centralized scheduler (§4.2, Fig 18): independent
-//! **ModelThreads** (request-rate work, embarrassingly parallel) and a
-//! single **RankThread** (batch-rate matchmaking) — the architecture
-//! that lets Symphony's scheduler process millions of requests per
-//! second (Fig 13 left).
+//! **ModelThreads** (request-rate work, embarrassingly parallel) and
+//! `R` **rank shards** (batch-rate matchmaking, each owning a
+//! contiguous GPU id range) — the architecture that lets Symphony's
+//! scheduler process millions of requests per second and coordinate
+//! thousands of GPUs (Fig 13 left). `rank_shards = 1` is exactly the
+//! paper's single-RankThread configuration.
 //!
 //! The coordinator is backend-agnostic: callers supply one `ToBackend`
 //! channel per GPU (real PJRT executors in [`crate::serve`], sleep
@@ -11,7 +13,8 @@
 pub mod clock;
 pub mod messages;
 pub mod model_thread;
-pub mod rank_thread;
+pub mod rank_shard;
+pub mod router;
 
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
@@ -22,26 +25,30 @@ use crate::core::types::{ModelId, Request};
 pub use clock::Clock;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
 use model_thread::ModelThread;
-use rank_thread::RankThread;
+pub use rank_shard::{RankShard, ShardStats};
+pub use router::{FreeHints, RankRouter, ShardTopology};
 
 /// Configuration of a running coordinator.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub profiles: Vec<LatencyProfile>,
     pub num_gpus: usize,
+    /// Rank shards (clamped to `1..=num_gpus`); 1 = the paper's single
+    /// RankThread.
+    pub rank_shards: usize,
     /// Network-delay budget subtracted from candidate windows (§5.6).
     pub net_bound: Micros,
-    /// Safety margin added to busy estimates sent to the RankThread.
+    /// Safety margin added to busy estimates sent to the rank shards.
     pub exec_margin: Micros,
 }
 
-/// A live coordinator: RankThread + one ModelThread per model.
+/// A live coordinator: rank shards + one ModelThread per model.
 pub struct Coordinator {
     pub clock: Clock,
     model_txs: Vec<Sender<ToModel>>,
-    rank_tx: Sender<ToRank>,
+    shard_txs: Vec<Sender<ToRank>>,
     model_handles: Vec<JoinHandle<u64>>,
-    rank_handle: Option<JoinHandle<u64>>,
+    shard_handles: Vec<JoinHandle<ShardStats>>,
 }
 
 impl Coordinator {
@@ -55,7 +62,9 @@ impl Coordinator {
     ) -> Self {
         assert_eq!(backends.len(), cfg.num_gpus, "one backend per GPU");
         let clock = Clock::new();
-        let (rank_tx, rank_rx) = channel::<ToRank>();
+        let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
+        let shards = topo.num_shards();
+        let hints = FreeHints::new(shards);
 
         let mut model_txs = Vec::new();
         let mut model_rx_store = Vec::new();
@@ -65,16 +74,26 @@ impl Coordinator {
             model_rx_store.push(rx);
         }
 
-        let rank = RankThread {
-            clock,
-            inbox: rank_rx,
-            model_txs: model_txs.clone(),
-            num_gpus: cfg.num_gpus,
-        };
-        let rank_handle = std::thread::Builder::new()
-            .name("rank-thread".into())
-            .spawn(move || rank.run())
-            .expect("spawn rank thread");
+        let mut shard_txs = Vec::new();
+        let mut shard_handles = Vec::new();
+        for s in 0..shards {
+            let (tx, rx) = channel::<ToRank>();
+            shard_txs.push(tx);
+            let shard = RankShard {
+                clock,
+                shard: s,
+                inbox: rx,
+                model_txs: model_txs.clone(),
+                gpus: topo.range(s),
+                hints: hints.clone(),
+            };
+            shard_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank-shard-{s}"))
+                    .spawn(move || shard.run())
+                    .expect("spawn rank shard"),
+            );
+        }
 
         let mut model_handles = Vec::new();
         for (i, rx) in model_rx_store.into_iter().enumerate() {
@@ -83,7 +102,7 @@ impl Coordinator {
                 profile: cfg.profiles[i],
                 clock,
                 inbox: rx,
-                to_rank: rank_tx.clone(),
+                router: RankRouter::new(topo.clone(), shard_txs.clone(), ModelId(i as u32)),
                 backends: backends.clone(),
                 completions: completions.clone(),
                 net_bound: cfg.net_bound,
@@ -100,9 +119,9 @@ impl Coordinator {
         Coordinator {
             clock,
             model_txs,
-            rank_tx,
+            shard_txs,
             model_handles,
-            rank_handle: Some(rank_handle),
+            shard_handles,
         }
     }
 
@@ -124,7 +143,14 @@ impl Coordinator {
     }
 
     /// Stop all threads; returns (requests processed, grants issued).
-    pub fn shutdown(mut self) -> (u64, u64) {
+    pub fn shutdown(self) -> (u64, u64) {
+        let (processed, stats) = self.shutdown_stats();
+        (processed, stats.grants)
+    }
+
+    /// Stop all threads; returns requests processed plus the merged
+    /// per-shard grant statistics (Fig 13 left reporting).
+    pub fn shutdown_stats(mut self) -> (u64, ShardStats) {
         for tx in &self.model_txs {
             let _ = tx.send(ToModel::Shutdown);
         }
@@ -133,13 +159,16 @@ impl Coordinator {
             .drain(..)
             .map(|h| h.join().unwrap_or(0))
             .sum();
-        let _ = self.rank_tx.send(ToRank::Shutdown);
-        let grants = self
-            .rank_handle
-            .take()
-            .map(|h| h.join().unwrap_or(0))
-            .unwrap_or(0);
-        (processed, grants)
+        for tx in &self.shard_txs {
+            let _ = tx.send(ToRank::Shutdown);
+        }
+        let mut stats = ShardStats::new();
+        for h in self.shard_handles.drain(..) {
+            if let Ok(s) = h.join() {
+                stats.merge(&s);
+            }
+        }
+        (processed, stats)
     }
 }
 
@@ -162,6 +191,7 @@ mod tests {
             CoordinatorConfig {
                 profiles: vec![profile],
                 num_gpus: 1,
+                rank_shards: 1,
                 net_bound: Micros::from_millis_f64(2.0),
                 exec_margin: Micros::from_millis_f64(0.5),
             },
@@ -201,6 +231,7 @@ mod tests {
             CoordinatorConfig {
                 profiles: vec![profile, profile],
                 num_gpus: 1,
+                rank_shards: 1,
                 net_bound: Micros::from_millis_f64(2.0),
                 exec_margin: Micros::from_millis_f64(0.5),
             },
@@ -222,5 +253,64 @@ mod tests {
         }
         assert_eq!(seen.len(), 2, "both models dispatched");
         coord.shutdown();
+    }
+
+    /// Sharded coordinator: four models across two shards, all served,
+    /// every request dispatched exactly once across the GPU channels.
+    #[test]
+    fn sharded_coordinator_serves_all_models() {
+        let profile = LatencyProfile::new(0.5, 2.0);
+        let mut backend_txs = Vec::new();
+        let mut backend_rxs = Vec::new();
+        for _ in 0..4 {
+            let (tx, rx) = channel::<ToBackend>();
+            backend_txs.push(tx);
+            backend_rxs.push(rx);
+        }
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile; 4],
+                num_gpus: 4,
+                rank_shards: 2,
+                net_bound: Micros::from_millis_f64(2.0),
+                exec_margin: Micros::from_millis_f64(0.5),
+            },
+            backend_txs,
+            comp_tx,
+        );
+        for m in 0..4u32 {
+            for i in 0..6 {
+                coord.submit_now(
+                    (m as u64) * 100 + i,
+                    ModelId(m),
+                    Micros::from_millis_f64(120.0),
+                );
+            }
+        }
+        // Collect executes across all GPU channels until every model's
+        // requests are accounted for (or timeout).
+        let mut got: std::collections::HashMap<u32, usize> = Default::default();
+        let deadline = std::time::Instant::now() + Duration::from_millis(1_500);
+        while got.values().copied().sum::<usize>() < 24
+            && std::time::Instant::now() < deadline
+        {
+            for rx in &backend_rxs {
+                while let Ok(ToBackend::Execute { model, requests, .. }) = rx.try_recv() {
+                    *got.entry(model.0).or_default() += requests.len();
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let (processed, grants) = coord.shutdown();
+        assert_eq!(processed, 24);
+        assert!(grants >= 4, "at least one grant per model, got {grants}");
+        for m in 0..4u32 {
+            assert_eq!(
+                got.get(&m).copied().unwrap_or(0),
+                6,
+                "model {m} must have all requests executed: {got:?}"
+            );
+        }
     }
 }

@@ -2,11 +2,18 @@
 //! model-local information and updates the candidate. The candidate is
 //! then sent to the RankThread." On "GPU Granted" it finalizes the batch
 //! and sends it to the backend immediately.
+//!
+//! With the sharded coordinator the ModelThread talks to the rank
+//! shards through a [`RankRouter`]: candidate updates go to whichever
+//! shard currently holds the registration, `Overflow` verdicts migrate
+//! the candidate to a shard with free capacity, and a grant or
+//! revalidation resets the registration to the home shard.
 
 use std::sync::mpsc::{Receiver, Sender};
 
 use crate::coordinator::clock::Clock;
-use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
+use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel};
+use crate::coordinator::router::RankRouter;
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{ModelId, Request};
@@ -16,14 +23,15 @@ pub struct ModelThread {
     pub profile: LatencyProfile,
     pub clock: Clock,
     pub inbox: Receiver<ToModel>,
-    pub to_rank: Sender<ToRank>,
+    /// Routing handle to the rank shards.
+    pub router: RankRouter,
     /// One channel per GPU backend worker.
     pub backends: Vec<Sender<ToBackend>>,
     pub completions: Sender<Completion>,
     /// Network-delay budget (§5.6).
     pub net_bound: Micros,
     /// Dispatch-overhead margin added to the busy estimate sent to the
-    /// RankThread (keeps real execution from overrunning its slot).
+    /// rank shard (keeps real execution from overrunning its slot).
     pub exec_margin: Micros,
 }
 
@@ -35,7 +43,7 @@ impl ModelThread {
             profile,
             clock,
             inbox,
-            to_rank,
+            mut router,
             backends,
             completions,
             net_bound,
@@ -44,27 +52,47 @@ impl ModelThread {
         // Track requests by id so drops can report full `Request`s.
         let mut queue = TrackingQueue::new();
         let mut processed = 0u64;
+        // Overflow migrations of the current logical candidate.
+        let mut hops = 0u32;
+
+        let compute = |queue: &mut TrackingQueue,
+                       completions: &Sender<Completion>,
+                       now: Micros|
+         -> Option<CandWindow> {
+            let (cand, dropped) = queue.candidate(&profile, now, net_bound);
+            if !dropped.is_empty() {
+                let _ = completions.send(Completion::Dropped(dropped));
+            }
+            cand
+        };
 
         while let Ok(msg) = inbox.recv() {
             match msg {
                 ToModel::Request(r) => {
                     processed += 1;
                     queue.push(r);
-                    let now = clock.now();
-                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
-                    if !dropped.is_empty() {
-                        let _ = completions.send(Completion::Dropped(dropped));
+                    let cand = compute(&mut queue, &completions, clock.now());
+                    // An emptied queue ends the logical candidate: reset
+                    // the migration budget so the next one starts fresh
+                    // at the home shard instead of inheriting exhausted
+                    // hops on a stale overflow shard.
+                    if cand.is_none() {
+                        hops = 0;
+                        if router.register_home(None).is_err() {
+                            break;
+                        }
+                        continue;
                     }
-                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                    // Replace in place: a steered candidate stays at its
+                    // current shard (re-homing on every request would
+                    // thrash under sustained overflow).
+                    if router.register_current(cand, hops).is_err() {
                         break;
                     }
                 }
                 ToModel::Granted { gpu } => {
                     let now = clock.now();
-                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
-                    if !dropped.is_empty() {
-                        let _ = completions.send(Completion::Dropped(dropped));
-                    }
+                    let cand = compute(&mut queue, &completions, now);
                     if let Some(c) = cand {
                         let batch = queue.take(c.size as usize);
                         let busy_until = now + profile.latency(c.size) + exec_margin;
@@ -73,31 +101,45 @@ impl ModelThread {
                             requests: batch,
                             dispatched_at: now,
                         });
-                        let _ = to_rank.send(ToRank::GpuBusyUntil {
-                            gpu,
-                            free_at: busy_until,
-                        });
+                        let _ = router.gpu_busy_until(gpu, busy_until);
                     } else {
                         // Nothing left to run; hand the GPU back as free.
-                        let _ = to_rank.send(ToRank::GpuBusyUntil { gpu, free_at: now });
+                        let _ = router.gpu_busy_until(gpu, now);
                     }
-                    // Register the next candidate.
-                    let now = clock.now();
-                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
-                    if !dropped.is_empty() {
-                        let _ = completions.send(Completion::Dropped(dropped));
-                    }
-                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                    // Register the next candidate — a fresh logical
+                    // candidate, so it starts back at the home shard.
+                    hops = 0;
+                    let cand = compute(&mut queue, &completions, clock.now());
+                    if router.register_home(cand).is_err() {
                         break;
                     }
                 }
                 ToModel::Revalidate => {
-                    let now = clock.now();
-                    let (cand, dropped) = queue.candidate(&profile, now, net_bound);
-                    if !dropped.is_empty() {
-                        let _ = completions.send(Completion::Dropped(dropped));
+                    hops = 0;
+                    let cand = compute(&mut queue, &completions, clock.now());
+                    if router.register_home(cand).is_err() {
+                        break;
                     }
-                    if to_rank.send(ToRank::Candidate { model, cand }).is_err() {
+                }
+                ToModel::Overflow { to_shard, seq } => {
+                    // Stale verdicts (the candidate was replaced since
+                    // that registration) are ignored.
+                    if !router.overflow_is_current(seq) {
+                        continue;
+                    }
+                    let cand = compute(&mut queue, &completions, clock.now());
+                    // The recompute can empty the queue: that ends the
+                    // logical candidate, so reset the migration budget
+                    // and re-home (same invariant as the Request arm).
+                    if cand.is_none() {
+                        hops = 0;
+                        if router.register_home(None).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                    hops += 1;
+                    if router.register_overflow(to_shard, cand, hops).is_err() {
                         break;
                     }
                 }

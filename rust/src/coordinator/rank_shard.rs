@@ -1,0 +1,545 @@
+//! RankShard (§4.2, Fig 18, sharded): one of `R` rank threads, each
+//! owning a contiguous [`GpuId`] range and its own inbox. A shard runs
+//! the same batch-granularity state machine the paper's single
+//! RankThread runs — GPU free timers, model candidate timers,
+//! model-GPU matchmaking — over its own GPU range only, so the
+//! batch-rate matchmaking work parallelizes across cores instead of
+//! saturating one.
+//!
+//! Cross-shard coordination is deliberately thin (batch-rate, not
+//! request-rate): each shard publishes its free-GPU count through
+//! [`FreeHints`]; a shard whose ready candidates outnumber its free
+//! GPUs steers the overflow to the **lowest** shard advertising spare
+//! capacity (via `ToModel::Overflow`, keeping the ModelThread the
+//! single authority for its candidate). Scanning hints from shard 0
+//! upward preserves the global consolidation order — shard 0's lowest
+//! GPU ids fill first, so the autoscaler can still reclaim high-id
+//! GPUs from the top of the id space.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::Duration;
+
+use crate::coordinator::clock::Clock;
+use crate::coordinator::messages::{CandWindow, ToModel, ToRank};
+use crate::coordinator::router::FreeHints;
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId};
+use crate::util::stats::Histogram;
+
+/// Idle wake-up cap: bounds staleness of cross-shard free hints when no
+/// messages arrive.
+const MAX_IDLE: Duration = Duration::from_millis(50);
+/// Faster poll while GPU-starved with parked candidates, so a sibling
+/// shard's freed GPU is noticed promptly.
+const STARVED_IDLE: Duration = Duration::from_millis(1);
+/// Grant-latency histogram cap (µs); latencies above this clamp.
+const LAT_CAP_US: u64 = 1_000_000;
+/// Grant-latency histogram bucket width (µs): `util::stats::Histogram`
+/// is a dense integer-bucket vector, so raw-µs buckets would cost up to
+/// 8 MB per shard; 10 µs granularity bounds it to ~100 kB.
+const LAT_BUCKET_US: u64 = 10;
+
+/// What one shard did over its lifetime.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub grants: u64,
+    /// Histogram of grant latency in `LAT_BUCKET_US`-µs buckets: how
+    /// long a candidate's window had been open (past `exec`) when the
+    /// GPU was granted.
+    pub grant_lat: Histogram,
+}
+
+impl ShardStats {
+    pub fn new() -> Self {
+        ShardStats {
+            grants: 0,
+            grant_lat: Histogram::new(),
+        }
+    }
+
+    pub fn merge(&mut self, other: &ShardStats) {
+        self.grants += other.grants;
+        self.grant_lat.merge(&other.grant_lat);
+    }
+
+    /// p99 grant latency in µs, at bucket granularity (0 when no grants).
+    pub fn p99_grant_latency_us(&self) -> usize {
+        self.grant_lat.quantile(0.99) * LAT_BUCKET_US as usize
+    }
+}
+
+impl Default for ShardStats {
+    fn default() -> Self {
+        ShardStats::new()
+    }
+}
+
+/// A registered candidate plus its routing metadata.
+#[derive(Clone, Copy, Debug)]
+struct CandState {
+    win: CandWindow,
+    /// ModelThread registration counter, echoed in `Overflow`.
+    seq: u64,
+    /// Overflow migrations this logical candidate has done.
+    hops: u32,
+}
+
+#[derive(PartialEq, Eq)]
+enum Flow {
+    Continue,
+    Shutdown,
+}
+
+struct State {
+    /// This shard's GPU id range.
+    gpus: std::ops::Range<u32>,
+    /// Candidates registered by ModelThreads.
+    cands: BTreeMap<ModelId, CandState>,
+    /// Candidates whose exec has passed, by urgency: (latest, model).
+    ready: BTreeSet<(Micros, ModelId)>,
+    /// Candidates waiting for their exec moment: (exec, model).
+    pending: BTreeSet<(Micros, ModelId)>,
+    /// GPUs free right now (min id first — consolidation).
+    free: BTreeSet<GpuId>,
+    /// GPUs that will free at a known time: (free_at, gpu).
+    busy: BTreeSet<(Micros, GpuId)>,
+    /// Leased to a ModelThread, waiting for its GpuBusyUntil.
+    leased: BTreeSet<GpuId>,
+}
+
+impl State {
+    fn new(gpus: std::ops::Range<u32>) -> Self {
+        State {
+            free: gpus.clone().map(GpuId).collect(),
+            gpus,
+            cands: BTreeMap::new(),
+            ready: BTreeSet::new(),
+            pending: BTreeSet::new(),
+            busy: BTreeSet::new(),
+            leased: BTreeSet::new(),
+        }
+    }
+
+    fn unregister(&mut self, m: ModelId) {
+        if let Some(old) = self.cands.remove(&m) {
+            self.ready.remove(&(old.win.latest, m));
+            self.pending.remove(&(old.win.exec, m));
+        }
+    }
+
+    /// The single message-application code path (shared by the drain
+    /// loop and the `recv_timeout` arm).
+    fn apply(&mut self, msg: ToRank, now: Micros) -> Flow {
+        match msg {
+            ToRank::Candidate {
+                model,
+                cand,
+                seq,
+                hops,
+            } => {
+                self.unregister(model);
+                if let Some(win) = cand {
+                    self.cands.insert(model, CandState { win, seq, hops });
+                    self.pending.insert((win.exec, model));
+                }
+            }
+            ToRank::GpuBusyUntil { gpu, free_at } => {
+                if !self.gpus.contains(&gpu.0) {
+                    debug_assert!(false, "misrouted GpuBusyUntil for {gpu:?}");
+                    return Flow::Continue;
+                }
+                self.leased.remove(&gpu);
+                self.free.remove(&gpu);
+                self.busy.retain(|&(_, g)| g != gpu);
+                if free_at <= now {
+                    self.free.insert(gpu);
+                } else {
+                    self.busy.insert((free_at, gpu));
+                }
+            }
+            ToRank::Shutdown => return Flow::Shutdown,
+        }
+        Flow::Continue
+    }
+
+    fn next_wakeup(&self) -> Option<Micros> {
+        let exec = self.pending.iter().next().map(|&(t, _)| t);
+        let gpu = self.busy.iter().next().map(|&(t, _)| t);
+        // Parked candidates need a wake just past expiry to revalidate.
+        let expiry = self.ready.iter().next().map(|&(t, _)| Micros(t.0 + 1));
+        [exec, gpu, expiry].into_iter().flatten().min()
+    }
+}
+
+pub struct RankShard {
+    pub clock: Clock,
+    /// This shard's index in the topology.
+    pub shard: usize,
+    pub inbox: Receiver<ToRank>,
+    pub model_txs: Vec<Sender<ToModel>>,
+    /// Contiguous GPU id range this shard owns.
+    pub gpus: std::ops::Range<u32>,
+    /// Shared free-GPU counters for overflow steering.
+    pub hints: FreeHints,
+}
+
+impl RankShard {
+    pub fn run(self) -> ShardStats {
+        let RankShard {
+            clock,
+            shard,
+            inbox,
+            model_txs,
+            gpus,
+            hints,
+        } = self;
+        let num_shards = hints.num_shards();
+        let mut st = State::new(gpus);
+        let mut stats = ShardStats::new();
+        hints.publish(shard, st.free.len());
+
+        'outer: loop {
+            // 1. Drain the mailbox through the single `apply` path.
+            loop {
+                match inbox.try_recv() {
+                    Ok(msg) => {
+                        if st.apply(msg, clock.now()) == Flow::Shutdown {
+                            break 'outer;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            }
+
+            let now = clock.now();
+
+            // 2. GPU timers: promote GPUs whose free_at has passed.
+            while let Some(&(t, gpu)) = st.busy.iter().next() {
+                if t > now {
+                    break;
+                }
+                st.busy.remove(&(t, gpu));
+                st.free.insert(gpu);
+            }
+
+            // 3. Model timers. Expiry is checked *at promotion*: a
+            //    candidate whose window already closed is sent straight
+            //    back for revalidation instead of taking a pointless
+            //    ready-insert + unregister + Revalidate round trip.
+            let mut revalidate: Vec<ModelId> = Vec::new();
+            while let Some(&(t, m)) = st.pending.iter().next() {
+                if t > now {
+                    break;
+                }
+                st.pending.remove(&(t, m));
+                let win = st.cands[&m].win;
+                if win.latest < now {
+                    st.cands.remove(&m);
+                    revalidate.push(m);
+                } else {
+                    st.ready.insert((win.latest, m));
+                }
+            }
+            // Parked candidates whose window closed while waiting for a
+            // GPU also revalidate (the single-rank code left them in the
+            // ready set until a GPU happened to free).
+            while let Some(&(latest, m)) = st.ready.iter().next() {
+                if latest >= now {
+                    break;
+                }
+                st.ready.remove(&(latest, m));
+                st.cands.remove(&m);
+                revalidate.push(m);
+            }
+            for m in revalidate {
+                if model_txs[m.0 as usize].send(ToModel::Revalidate).is_err() {
+                    break 'outer;
+                }
+            }
+
+            // 4. Matchmaking: most urgent ready candidate × min-id free
+            //    GPU (equivalent to processing the timers in time order
+            //    at this instant; expired entries were purged above).
+            while !st.free.is_empty() {
+                let Some(&(latest, m)) = st.ready.iter().next() else {
+                    break;
+                };
+                let gpu = *st.free.iter().next().unwrap();
+                st.free.remove(&gpu);
+                st.leased.insert(gpu);
+                let cs = st.cands.remove(&m).expect("ready candidate registered");
+                st.ready.remove(&(latest, m));
+                st.pending.remove(&(cs.win.exec, m));
+                stats.grants += 1;
+                let waited = now.saturating_sub(cs.win.exec);
+                stats
+                    .grant_lat
+                    .add((waited.0.min(LAT_CAP_US) / LAT_BUCKET_US) as usize);
+                if model_txs[m.0 as usize].send(ToModel::Granted { gpu }).is_err() {
+                    break 'outer;
+                }
+            }
+
+            hints.publish(shard, st.free.len());
+
+            // 5. Overflow steering: GPU-starved candidates migrate to
+            //    the lowest sibling shard advertising free capacity
+            //    (consolidation order — shard 0 fills first). A
+            //    candidate that has already migrated `num_shards` times
+            //    parks here until it is granted or expires.
+            if st.free.is_empty() && !st.ready.is_empty() && num_shards > 1 {
+                let mut budgets: Vec<usize> = (0..num_shards)
+                    .map(|s| if s == shard { 0 } else { hints.free_of(s) })
+                    .collect();
+                let mut steer: Vec<(ModelId, usize, u64)> = Vec::new();
+                for &(_, m) in st.ready.iter() {
+                    let cs = &st.cands[&m];
+                    if cs.hops as usize >= num_shards {
+                        continue;
+                    }
+                    let Some(t) = budgets.iter().position(|&b| b > 0) else {
+                        break;
+                    };
+                    budgets[t] -= 1;
+                    steer.push((m, t, cs.seq));
+                }
+                for (m, to_shard, seq) in steer {
+                    st.unregister(m);
+                    let msg = ToModel::Overflow { to_shard, seq };
+                    if model_txs[m.0 as usize].send(msg).is_err() {
+                        break 'outer;
+                    }
+                }
+            }
+
+            // 6. Sleep until the next timer or message. The fast
+            //    starved-poll exists only to re-read sibling free
+            //    hints, so a single-shard tier never uses it.
+            let idle_cap = if num_shards > 1 && st.free.is_empty() && !st.ready.is_empty() {
+                STARVED_IDLE
+            } else {
+                MAX_IDLE
+            };
+            let timeout = match st.next_wakeup() {
+                Some(t) => clock.until(t).min(idle_cap),
+                None => idle_cap,
+            };
+            match inbox.recv_timeout(timeout) {
+                Ok(msg) => {
+                    if st.apply(msg, clock.now()) == Flow::Shutdown {
+                        break 'outer;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break 'outer,
+            }
+        }
+        // Stop attracting overflow traffic once this shard is gone.
+        hints.publish(shard, 0);
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn spawn_shard(
+        shard: usize,
+        gpus: std::ops::Range<u32>,
+        hints: FreeHints,
+        n_models: usize,
+    ) -> (
+        Clock,
+        Sender<ToRank>,
+        Vec<Receiver<ToModel>>,
+        std::thread::JoinHandle<ShardStats>,
+    ) {
+        let clock = Clock::new();
+        let (rank_tx, rank_rx) = channel();
+        let mut model_txs = Vec::new();
+        let mut model_rxs = Vec::new();
+        for _ in 0..n_models {
+            let (tx, rx) = channel();
+            model_txs.push(tx);
+            model_rxs.push(rx);
+        }
+        let rs = RankShard {
+            clock,
+            shard,
+            inbox: rank_rx,
+            model_txs,
+            gpus,
+            hints,
+        };
+        let h = std::thread::spawn(move || rs.run());
+        (clock, rank_tx, model_rxs, h)
+    }
+
+    fn ms(v: f64) -> Micros {
+        Micros::from_millis_f64(v)
+    }
+
+    /// Regression (stale-candidate promotion): an expired candidate must
+    /// be revalidated even when the shard has no free GPU — the old
+    /// single-rank loop only noticed expiry during matchmaking, so a
+    /// GPU-less shard never sent Revalidate.
+    #[test]
+    fn expired_candidate_revalidates_without_free_gpu() {
+        let hints = FreeHints::new(1);
+        let (_clock, rank_tx, model_rxs, h) = spawn_shard(0, 0..0, hints, 1);
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: Micros(0),
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        let msg = model_rxs[0]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("revalidate sent");
+        assert!(matches!(msg, ToModel::Revalidate), "{msg:?}");
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 0, "expired candidate must not be granted");
+    }
+
+    /// A live candidate on a shard with a free GPU is granted the
+    /// lowest id; the lease blocks a second grant until GpuBusyUntil.
+    #[test]
+    fn grants_min_id_and_respects_lease() {
+        let hints = FreeHints::new(1);
+        let (clock, rank_tx, model_rxs, h) = spawn_shard(0, 4..6, hints, 2);
+        let far = clock.now() + ms(500.0);
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        let msg = model_rxs[0]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("granted");
+        assert!(
+            matches!(msg, ToModel::Granted { gpu: GpuId(4) }),
+            "lowest owned id: {msg:?}"
+        );
+        // Occupy the granted GPU, register a second model: it must get
+        // the *other* GPU, not the leased one.
+        rank_tx
+            .send(ToRank::GpuBusyUntil {
+                gpu: GpuId(4),
+                free_at: far,
+            })
+            .unwrap();
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(1),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        let msg = model_rxs[1]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("granted second gpu");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(5) }), "{msg:?}");
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 2);
+    }
+
+    /// A GPU-starved shard steers a ready candidate toward the lowest
+    /// sibling shard advertising free capacity.
+    #[test]
+    fn starved_shard_overflows_to_advertised_sibling() {
+        let hints = FreeHints::new(2);
+        // Shard 1 exists only as a hint here: pretend it has capacity.
+        hints.publish(1, 3);
+        let (clock, rank_tx, model_rxs, h) = spawn_shard(0, 0..1, hints, 1);
+        let far = clock.now() + ms(500.0);
+        // Occupy shard 0's only GPU, then register a candidate.
+        rank_tx
+            .send(ToRank::GpuBusyUntil {
+                gpu: GpuId(0),
+                free_at: far,
+            })
+            .unwrap();
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 7,
+                hops: 0,
+            })
+            .unwrap();
+        let msg = model_rxs[0]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("overflow verdict");
+        assert!(
+            matches!(msg, ToModel::Overflow { to_shard: 1, seq: 7 }),
+            "{msg:?}"
+        );
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 0);
+    }
+
+    /// A candidate that has exhausted its migration budget parks
+    /// instead of bouncing, and is granted once the local GPU frees.
+    #[test]
+    fn exhausted_hops_park_until_local_gpu_frees() {
+        let hints = FreeHints::new(2);
+        hints.publish(1, 1); // tempting, but hops are exhausted
+        let (clock, rank_tx, model_rxs, h) = spawn_shard(0, 0..1, hints, 1);
+        let soon = clock.now() + ms(30.0);
+        let far = clock.now() + ms(500.0);
+        rank_tx
+            .send(ToRank::GpuBusyUntil {
+                gpu: GpuId(0),
+                free_at: soon,
+            })
+            .unwrap();
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 2, // >= num_shards: sticky
+            })
+            .unwrap();
+        let msg = model_rxs[0]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("grant after local GPU frees");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(0) }), "{msg:?}");
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 1);
+    }
+}

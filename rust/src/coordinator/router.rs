@@ -1,0 +1,286 @@
+//! Shard-routing layer between ModelThreads and the rank shards.
+//!
+//! [`ShardTopology`] splits the GPU id space into `R` contiguous ranges
+//! (shard 0 owns the lowest ids — the consolidation prefix the
+//! autoscaler reclaims from the top). [`RankRouter`] is the
+//! ModelThread-side handle: it remembers which shard currently holds
+//! this model's candidate (exactly one shard at a time), routes
+//! candidate updates there, clears the old registration when the
+//! candidate migrates on overflow, and routes `GpuBusyUntil` to the
+//! shard owning the GPU.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{SendError, Sender};
+use std::sync::Arc;
+
+use crate::coordinator::messages::{CandWindow, ToRank};
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId};
+
+/// Contiguous partition of `num_gpus` GPU ids across `shards` ranges.
+#[derive(Clone, Debug)]
+pub struct ShardTopology {
+    /// `bounds[s]..bounds[s+1]` is shard `s`'s GPU id range.
+    bounds: Vec<u32>,
+}
+
+impl ShardTopology {
+    pub fn new(num_gpus: usize, shards: usize) -> Self {
+        let shards = shards.clamp(1, num_gpus.max(1));
+        let mut bounds = Vec::with_capacity(shards + 1);
+        for s in 0..=shards {
+            bounds.push((num_gpus * s / shards) as u32);
+        }
+        ShardTopology { bounds }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// The GPU ids shard `s` owns.
+    pub fn range(&self, s: usize) -> std::ops::Range<u32> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// The shard owning GPU `g`.
+    pub fn shard_of(&self, g: GpuId) -> usize {
+        // Shard ranges are contiguous and ascending: binary search on
+        // the upper bounds.
+        match self.bounds[1..].binary_search(&(g.0 + 1)) {
+            Ok(i) => i,
+            Err(i) => i,
+        }
+    }
+
+    /// The home shard for a model: registrations spread round-robin so
+    /// candidate bookkeeping parallelizes even when grants consolidate
+    /// onto shard 0.
+    pub fn home_of(&self, m: ModelId) -> usize {
+        m.0 as usize % self.num_shards()
+    }
+}
+
+/// Free-GPU hints: one counter per shard, written only by the owning
+/// shard, read racily by siblings to pick overflow targets. Staleness is
+/// benign — a mis-steered candidate is re-steered or revalidated.
+#[derive(Clone)]
+pub struct FreeHints {
+    counts: Arc<Vec<AtomicUsize>>,
+}
+
+impl FreeHints {
+    pub fn new(shards: usize) -> Self {
+        FreeHints {
+            counts: Arc::new((0..shards).map(|_| AtomicUsize::new(0)).collect()),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn publish(&self, shard: usize, free: usize) {
+        self.counts[shard].store(free, Ordering::Relaxed);
+    }
+
+    pub fn free_of(&self, shard: usize) -> usize {
+        self.counts[shard].load(Ordering::Relaxed)
+    }
+}
+
+/// ModelThread-side routing handle. Owns the single-authority invariant:
+/// at any time at most one shard holds this model's candidate (modulo
+/// messages in flight, which the `seq` echo makes detectable).
+pub struct RankRouter {
+    topo: ShardTopology,
+    shard_txs: Vec<Sender<ToRank>>,
+    model: ModelId,
+    home: usize,
+    /// Shard currently holding the registration.
+    reg_shard: usize,
+    /// Monotone registration counter (echoed by `ToModel::Overflow`).
+    seq: u64,
+}
+
+impl RankRouter {
+    pub fn new(topo: ShardTopology, shard_txs: Vec<Sender<ToRank>>, model: ModelId) -> Self {
+        assert_eq!(topo.num_shards(), shard_txs.len(), "one inbox per shard");
+        let home = topo.home_of(model);
+        RankRouter {
+            topo,
+            shard_txs,
+            model,
+            home,
+            reg_shard: home,
+            seq: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shard_txs.len()
+    }
+
+    /// The registration sequence the router most recently sent.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Is this overflow verdict about the current registration?
+    pub fn overflow_is_current(&self, seq: u64) -> bool {
+        seq == self.seq
+    }
+
+    /// Register / replace / clear the candidate at its *home* shard
+    /// (post-grant re-registration, revalidation — a fresh logical
+    /// candidate).
+    pub fn register_home(&mut self, cand: Option<CandWindow>) -> Result<(), SendError<ToRank>> {
+        self.register_at(self.home, cand, 0)
+    }
+
+    /// Replace the candidate wherever it is currently registered
+    /// (request arrivals update the window without re-homing).
+    pub fn register_current(
+        &mut self,
+        cand: Option<CandWindow>,
+        hops: u32,
+    ) -> Result<(), SendError<ToRank>> {
+        self.register_at(self.reg_shard, cand, hops)
+    }
+
+    /// Re-register at `shard` after an overflow verdict; `hops` bounds
+    /// how often one logical candidate migrates.
+    pub fn register_overflow(
+        &mut self,
+        shard: usize,
+        cand: Option<CandWindow>,
+        hops: u32,
+    ) -> Result<(), SendError<ToRank>> {
+        self.register_at(shard.min(self.num_shards() - 1), cand, hops)
+    }
+
+    fn register_at(
+        &mut self,
+        shard: usize,
+        cand: Option<CandWindow>,
+        hops: u32,
+    ) -> Result<(), SendError<ToRank>> {
+        if shard != self.reg_shard {
+            // Clear the old registration first so at most one shard can
+            // grant for this model (a grant already in flight is handled
+            // by the ModelThread returning the GPU unused).
+            self.seq += 1;
+            let _ = self.shard_txs[self.reg_shard].send(ToRank::Candidate {
+                model: self.model,
+                cand: None,
+                seq: self.seq,
+                hops: 0,
+            });
+            self.reg_shard = shard;
+        }
+        self.seq += 1;
+        self.shard_txs[shard].send(ToRank::Candidate {
+            model: self.model,
+            cand,
+            seq: self.seq,
+            hops,
+        })
+    }
+
+    /// `inform_gpu`: routed to the shard that owns the GPU.
+    pub fn gpu_busy_until(&self, gpu: GpuId, free_at: Micros) -> Result<(), SendError<ToRank>> {
+        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::GpuBusyUntil { gpu, free_at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_partitions_contiguously() {
+        let t = ShardTopology::new(10, 4);
+        assert_eq!(t.num_shards(), 4);
+        let mut seen = Vec::new();
+        for s in 0..4 {
+            for g in t.range(s) {
+                assert_eq!(t.shard_of(GpuId(g)), s, "gpu {g}");
+                seen.push(g);
+            }
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn topology_clamps_shards_to_gpus() {
+        let t = ShardTopology::new(2, 8);
+        assert_eq!(t.num_shards(), 2);
+        let t = ShardTopology::new(5, 1);
+        assert_eq!(t.num_shards(), 1);
+        assert_eq!(t.range(0), 0..5);
+        // Zero shards is coerced to one.
+        let t = ShardTopology::new(3, 0);
+        assert_eq!(t.num_shards(), 1);
+    }
+
+    #[test]
+    fn homes_cover_all_shards() {
+        let t = ShardTopology::new(8, 4);
+        let homes: std::collections::BTreeSet<usize> =
+            (0..8).map(|m| t.home_of(ModelId(m))).collect();
+        assert_eq!(homes.len(), 4);
+    }
+
+    #[test]
+    fn hints_publish_and_read_per_shard() {
+        let h = FreeHints::new(3);
+        assert_eq!(h.num_shards(), 3);
+        assert_eq!(h.free_of(0), 0);
+        h.publish(2, 4);
+        let h2 = h.clone();
+        assert_eq!(h2.free_of(2), 4, "clones share the counters");
+        h2.publish(2, 0);
+        assert_eq!(h.free_of(2), 0);
+    }
+
+    #[test]
+    fn router_clears_old_shard_on_migration() {
+        use std::sync::mpsc::channel;
+        let topo = ShardTopology::new(4, 2);
+        let (tx0, rx0) = channel();
+        let (tx1, rx1) = channel();
+        // ModelId(0) homes on shard 0.
+        let mut r = RankRouter::new(topo, vec![tx0, tx1], ModelId(0));
+        let cand = CandWindow {
+            exec: Micros(10),
+            latest: Micros(20),
+            size: 2,
+        };
+        r.register_home(Some(cand)).unwrap();
+        let first_seq = r.seq();
+        assert!(r.overflow_is_current(first_seq));
+        // Overflow to shard 1: shard 0 must see a clearing registration.
+        r.register_overflow(1, Some(cand), 1).unwrap();
+        assert!(!r.overflow_is_current(first_seq));
+        let msgs0: Vec<ToRank> = rx0.try_iter().collect();
+        assert_eq!(msgs0.len(), 2);
+        assert!(
+            matches!(&msgs0[1], ToRank::Candidate { cand: None, .. }),
+            "{msgs0:?}"
+        );
+        let msgs1: Vec<ToRank> = rx1.try_iter().collect();
+        assert!(
+            matches!(&msgs1[..], [ToRank::Candidate { cand: Some(_), hops: 1, .. }]),
+            "{msgs1:?}"
+        );
+        // GpuBusyUntil routes by GPU id range.
+        r.gpu_busy_until(GpuId(3), Micros(99)).unwrap();
+        assert!(matches!(
+            rx1.try_iter().next(),
+            Some(ToRank::GpuBusyUntil {
+                gpu: GpuId(3),
+                ..
+            })
+        ));
+    }
+}

@@ -68,9 +68,14 @@ impl AddAssign for Micros {
 
 impl Sub for Micros {
     type Output = Micros;
+    /// Panics on underflow in **all** build profiles. A `debug_assert`
+    /// here once let `--release` wrap `d - a` to ~u64::MAX in the
+    /// deferred scheduler's shedding target, silently inflating the SLO
+    /// budget; hot paths that may legitimately cross zero must say so
+    /// explicitly with [`Micros::saturating_sub`].
     #[inline]
     fn sub(self, rhs: Micros) -> Micros {
-        debug_assert!(self.0 >= rhs.0, "time underflow {} - {}", self.0, rhs.0);
+        assert!(self.0 >= rhs.0, "time underflow {} - {}", self.0, rhs.0);
         Micros(self.0 - rhs.0)
     }
 }
@@ -111,6 +116,13 @@ mod tests {
         assert_eq!(a - Micros(150), Micros::ZERO);
         assert_eq!(Micros(10).saturating_sub(Micros(20)), Micros::ZERO);
         assert_eq!(Micros(5).max(Micros(9)), Micros(9));
+    }
+
+    /// Regression: `Sub` must panic (not wrap) in release builds too.
+    #[test]
+    #[should_panic(expected = "time underflow")]
+    fn sub_underflow_panics_in_all_profiles() {
+        let _ = Micros(1) - Micros(2);
     }
 
     #[test]

@@ -54,7 +54,7 @@ fn usage() {
         "symphony — deferred batch scheduling (paper reproduction)\n\n\
          USAGE:\n  symphony fig <1|2|4|6a|6b|7|9|10|11|12|13|14|15|16|17|table2|all>\n  \
          symphony simulate [--system S] [--gpus N] [--models N] [--rate R] [--slo MS] [--secs S]\n  \
-         symphony serve [--pjrt DIR] [--gpus N] [--rate R] [--secs S]\n  \
+         symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--rate R] [--secs S]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n\n\
          systems: symphony clockwork nexus shepherd eager"
@@ -231,6 +231,7 @@ fn cmd_simulate(rest: &[String]) {
 fn cmd_serve(rest: &[String]) {
     let f = flags(rest);
     let gpus = getu(&f, "gpus", 2);
+    let rank_shards = getu(&f, "rank-shards", 1);
     let rate = getf(&f, "rate", 300.0);
     let secs = getf(&f, "secs", 3.0);
     let backend = match f.get("pjrt") {
@@ -246,6 +247,7 @@ fn cmd_serve(rest: &[String]) {
     match serve(ServeConfig {
         models,
         num_gpus: gpus,
+        rank_shards,
         total_rate: rate,
         duration: Duration::from_secs_f64(secs),
         backend,

@@ -5,7 +5,8 @@
 use std::fs;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::core::profile::LatencyProfile;
 

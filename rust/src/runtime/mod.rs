@@ -4,13 +4,22 @@
 //! protos, while the text parser reassigns ids) and executes them on the
 //! PJRT CPU client. One compiled executable per batch size; Python never
 //! runs on the request path.
+//!
+//! The PJRT client comes from the external `xla` crate, which is not in
+//! the offline registry; the execution path is therefore gated behind
+//! the `pjrt` cargo feature. The default build ships a stub
+//! [`ModelRuntime`] with the same API whose `load` fails, so the
+//! manifest/profile parsers, the serving stack, and every scheduler
+//! experiment build and run with zero external dependencies.
 
 pub mod manifest;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::Result;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
 
 pub use manifest::{Manifest, MeasuredProfile};
 
@@ -20,6 +29,7 @@ pub const IMAGE_CHANNELS: usize = 3;
 pub const NUM_CLASSES: usize = 64;
 
 /// A loaded model: PJRT executables keyed by batch size.
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     client: xla::PjRtClient,
     executables: BTreeMap<u32, xla::PjRtLoadedExecutable>,
@@ -27,6 +37,7 @@ pub struct ModelRuntime {
     pub profile: Option<MeasuredProfile>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load every artifact listed in `<dir>/manifest.tsv` and compile it
     /// on the PJRT CPU client.
@@ -49,7 +60,7 @@ impl ModelRuntime {
             executables.insert(entry.batch_size, exe);
         }
         if executables.is_empty() {
-            bail!("no artifacts in {}", dir.display());
+            crate::bail!("no artifacts in {}", dir.display());
         }
         Ok(ModelRuntime {
             client,
@@ -102,6 +113,47 @@ impl ModelRuntime {
     }
 }
 
+/// Stub runtime for builds without the `pjrt` feature: same API, but
+/// `load` always fails, so callers fall back exactly as they do when
+/// `artifacts/` has not been built.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
+    executables: BTreeMap<u32, ()>,
+    pub manifest: Manifest,
+    pub profile: Option<MeasuredProfile>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    pub fn load(dir: &Path) -> Result<Self> {
+        crate::bail!(
+            "PJRT runtime disabled: rebuild with `--features pjrt` (and the \
+             `xla` crate available) to execute artifacts in {}",
+            dir.display()
+        )
+    }
+
+    pub fn batch_sizes(&self) -> Vec<u32> {
+        self.executables.keys().copied().collect()
+    }
+
+    pub fn padded_batch(&self, n: u32) -> u32 {
+        self.executables
+            .range(n..)
+            .next()
+            .map(|(&b, _)| b)
+            .unwrap_or(n)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
+    pub fn execute(&self, _n: u32, _inputs: &[f32]) -> Result<Vec<f32>> {
+        crate::bail!("PJRT runtime disabled: rebuild with `--features pjrt`")
+    }
+}
+
 /// Locate `artifacts/` relative to the repo root (works from the repo
 /// root, `rust/`, or a target dir).
 pub fn default_artifacts_dir() -> Option<PathBuf> {
@@ -121,6 +173,7 @@ mod tests {
 
     /// Full PJRT round trip — skipped when artifacts aren't built
     /// (`make artifacts` first).
+    #[cfg(feature = "pjrt")]
     #[test]
     fn execute_real_model() {
         let Some(dir) = default_artifacts_dir() else {
@@ -144,6 +197,13 @@ mod tests {
         for (x, y) in a.iter().zip(b) {
             assert!((x - y).abs() < 1e-5);
         }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_disabled_feature() {
+        let err = ModelRuntime::load(Path::new("/tmp/none")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     #[test]

@@ -143,9 +143,12 @@ impl DeferredScheduler {
         let slack = self.cfg.net_bound;
         let n = self.num_gpus;
         let st = &mut self.models[m.0 as usize];
+        // `saturating_sub`: the head's SLO (d − a) is non-negative for
+        // well-formed requests, but a wrap here would hand the shedding
+        // target a ~u64::MAX budget (see `Micros::Sub`).
         let target = match (st.queue.head_deadline(), st.queue.head_arrival()) {
             (Some(d), Some(a)) if self.cfg.shed => {
-                Self::target_batch(&st.profile, d - a, n, max_batch)
+                Self::target_batch(&st.profile, d.saturating_sub(a), n, max_batch)
             }
             _ => 0,
         };
@@ -219,7 +222,7 @@ impl DeferredScheduler {
         let st = &mut self.models[m.0 as usize];
         let target = match (st.queue.head_deadline(), st.queue.head_arrival()) {
             (Some(d), Some(a)) if self.cfg.shed => {
-                Self::target_batch(&st.profile, d - a, n, max_batch)
+                Self::target_batch(&st.profile, d.saturating_sub(a), n, max_batch)
             }
             _ => 0,
         };
@@ -230,8 +233,11 @@ impl DeferredScheduler {
             out.push(Command::Drop(plan.dropped.clone()));
         }
         if plan.batch.is_empty() {
-            // Everything expired between scheduling and dispatch.
+            // Everything expired between scheduling and dispatch. Cancel
+            // *both* timers: leaving `ModelAux` armed leaks a dead
+            // revalidation timer that later fires on an empty queue.
             out.push(Command::CancelTimer { key: TimerKey::Model(m) });
+            out.push(Command::CancelTimer { key: TimerKey::ModelAux(m) });
             return;
         }
         let n = plan.batch.len();
@@ -364,6 +370,75 @@ mod tests {
         for w in trace.windows(2) {
             assert_ne!(w[0].gpu, w[1].gpu, "consecutive batches staggered");
         }
+    }
+
+    /// Regression (ModelAux leak): an empty-batch dispatch must cancel
+    /// the auxiliary revalidation timer along with the model timer —
+    /// otherwise a dead timer stays armed and fires on an empty queue.
+    #[test]
+    fn empty_dispatch_cancels_aux_timer() {
+        use crate::core::types::RequestId;
+        let profile = LatencyProfile::new(1.0, 5.0);
+        let mut s = DeferredScheduler::new(vec![profile], 1, DeferredConfig::default());
+        // A request whose deadline has long passed: the dispatch-time
+        // re-plan drops it and returns an empty batch.
+        s.models[0].queue.push(Request {
+            id: RequestId(0),
+            model: ModelId(0),
+            arrival: Micros::ZERO,
+            deadline: Micros::from_millis_f64(10.0),
+        });
+        let mut out = Vec::new();
+        s.dispatch(ModelId(0), GpuId(0), Micros::from_millis_f64(50.0), &mut out);
+        let dropped = out
+            .iter()
+            .any(|c| matches!(c, Command::Drop(ids) if ids.len() == 1 && ids[0] == RequestId(0)));
+        assert!(dropped, "expired head must be dropped: {out:?}");
+        let cancels_aux = out.iter().any(|c| {
+            matches!(
+                c,
+                Command::CancelTimer {
+                    key: TimerKey::ModelAux(ModelId(0))
+                }
+            )
+        });
+        assert!(cancels_aux, "ModelAux timer leaked: {out:?}");
+        assert!(
+            !out.iter().any(|c| matches!(c, Command::Dispatch { .. })),
+            "nothing to dispatch: {out:?}"
+        );
+    }
+
+    /// Regression (release-mode time underflow): a zero-slack request
+    /// (deadline == arrival) exercises the shedding target's
+    /// `d.saturating_sub(a)` path; it must drop cleanly, not wrap the
+    /// SLO budget to ~u64::MAX.
+    #[test]
+    fn zero_slo_request_drops_cleanly() {
+        let profile = LatencyProfile::new(1.0, 5.0);
+        let mut s = DeferredScheduler::new(vec![profile], 1, DeferredConfig::default());
+        let mut out = Vec::new();
+        let now = Micros::from_millis_f64(3.0);
+        s.on_request(
+            Request {
+                id: crate::core::types::RequestId(0),
+                model: ModelId(0),
+                arrival: now,
+                deadline: now,
+            },
+            now,
+            &mut out,
+        );
+        assert!(
+            out.iter()
+                .any(|c| matches!(c, Command::Drop(ids) if ids.len() == 1)),
+            "hopeless request must be dropped: {out:?}"
+        );
+        // target_batch itself must treat a zero budget as "no target".
+        assert_eq!(
+            DeferredScheduler::target_batch(&profile, Micros::ZERO, 4, 0),
+            0
+        );
     }
 
     #[test]

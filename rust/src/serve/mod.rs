@@ -1,4 +1,4 @@
-//! Real-time serving: the coordinator (ModelThread/RankThread) driving
+//! Real-time serving: the coordinator (ModelThreads + rank shards) driving
 //! actual backend execution under wall-clock time — the end-to-end (e)
 //! configuration of §5.1, with Python entirely out of the request path.
 //!
@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
 use crate::core::profile::ModelSpec;
@@ -38,6 +38,9 @@ pub enum BackendKind {
 pub struct ServeConfig {
     pub models: Vec<ModelSpec>,
     pub num_gpus: usize,
+    /// Rank shards in the coordinator (1 = the paper's single
+    /// RankThread; clamped to `num_gpus`).
+    pub rank_shards: usize,
     /// Aggregate offered rate, requests/second.
     pub total_rate: f64,
     pub duration: Duration,
@@ -123,6 +126,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         CoordinatorConfig {
             profiles: cfg.models.iter().map(|m| m.profile).collect(),
             num_gpus: cfg.num_gpus,
+            rank_shards: cfg.rank_shards,
             // The paper budgets the RDMA p99.99 (33 µs) here; without a
             // kernel-bypass control plane we budget OS-thread wakeup +
             // channel jitter instead (§4.3's predictability argument,
@@ -363,6 +367,7 @@ mod tests {
         let report = serve(ServeConfig {
             models,
             num_gpus: 2,
+            rank_shards: 2,
             total_rate: 200.0,
             duration: Duration::from_millis(500),
             backend: BackendKind::Sleep,

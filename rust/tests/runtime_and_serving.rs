@@ -18,6 +18,7 @@ fn sleep_backend_meets_slo_at_moderate_load() {
     let report = serve(ServeConfig {
         models,
         num_gpus: 3,
+        rank_shards: 1,
         total_rate: 300.0,
         duration: Duration::from_millis(800),
         backend: BackendKind::Sleep,
@@ -36,6 +37,7 @@ fn sleep_backend_batches_under_pressure() {
     let report = serve(ServeConfig {
         models,
         num_gpus: 1,
+        rank_shards: 1,
         total_rate: 400.0,
         duration: Duration::from_millis(700),
         backend: BackendKind::Sleep,
@@ -101,6 +103,7 @@ fn pjrt_end_to_end_serving() {
     let report = serve(ServeConfig {
         models: vec![model],
         num_gpus: 1,
+        rank_shards: 1,
         total_rate: 150.0,
         duration: Duration::from_millis(700),
         backend: BackendKind::Pjrt {
