@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_hotpath.json files and emit GitHub warnings (never
+fail) when a `*_per_sec` metric regresses more than 30% against the
+checked-in baseline. Usage: compare_bench.py <baseline.json> <new.json>.
+Missing or empty baselines are skipped silently (the trajectory starts
+with the first committed run)."""
+
+import json
+import sys
+
+REGRESSION_FRACTION = 0.30
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f).get("results", {}) or {}
+    except (OSError, ValueError):
+        return {}
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: compare_bench.py <baseline.json> <new.json>")
+        return 0
+    base, new = load(sys.argv[1]), load(sys.argv[2])
+    if not base:
+        print("no baseline bench results; skipping comparison")
+        return 0
+    checked = regressed = 0
+    for key, old in sorted(base.items()):
+        if not key.endswith("_per_sec") or not isinstance(old, (int, float)) or old <= 0:
+            continue
+        cur = new.get(key)
+        if not isinstance(cur, (int, float)):
+            continue
+        checked += 1
+        if cur < (1.0 - REGRESSION_FRACTION) * old:
+            regressed += 1
+            drop = 100.0 * (1.0 - cur / old)
+            print(
+                f"::warning title=bench_hotpath regression::"
+                f"{key}: {old:.0f} -> {cur:.0f} events/sec (-{drop:.0f}%)"
+            )
+    print(f"bench comparison: {checked} metrics checked, {regressed} regressed >30%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

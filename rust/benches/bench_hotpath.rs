@@ -1,13 +1,21 @@
 //! `cargo bench --bench bench_hotpath` — microbenchmarks of the hot
-//! paths (§Perf): discrete-event engine event rate, deferred-scheduler
-//! operation cost, candidate-window math, and the RNG. These are the
-//! numbers the EXPERIMENTS.md §Perf iteration log tracks.
+//! paths (§Perf): a scheduler-only throughput sweep (models × arrival
+//! gaps), discrete-event engine event rate, integer vs seed-float
+//! candidate-window math, and the RNG. Results print as a table, mirror
+//! to `results/bench_hotpath.tsv`, and are written machine-readable to
+//! `BENCH_hotpath.json` at the repo root — the perf trajectory the
+//! EXPERIMENTS.md §Perf iteration log and the CI regression check track.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use symphony::core::model_zoo;
+use symphony::core::profile::{reference, LatencyProfile};
 use symphony::core::time::Micros;
+use symphony::core::types::{GpuId, ModelId, Request, RequestId};
 use symphony::harness::{GoodputExperiment, SystemKind};
+use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
+use symphony::scheduler::Scheduler;
 use symphony::util::rng::Rng;
 use symphony::util::table::{banner, Table};
 
@@ -17,11 +25,68 @@ fn time_it<F: FnMut()>(mut f: F) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// Scheduler-only request pump: `n` arrivals spaced `gap_us` apart,
+/// round-robin over `n_models`, freeing a GPU every 16th event so the
+/// queues drain. Returns events/second through `on_request`.
+fn sched_ops(n_models: usize, gap_us: u64, n: u64) -> f64 {
+    let gpus = (n_models * 2).clamp(8, 512);
+    let profile = LatencyProfile::new(1.0, 5.0);
+    let mut sched =
+        DeferredScheduler::new(vec![profile; n_models], gpus, DeferredConfig::default());
+    let mut out = Vec::with_capacity(64);
+    let secs = time_it(|| {
+        for i in 0..n {
+            let t = Micros(i * gap_us);
+            out.clear();
+            sched.on_request(
+                Request {
+                    id: RequestId(i),
+                    model: ModelId((i % n_models as u64) as u32),
+                    arrival: t,
+                    deadline: t + Micros(100_000),
+                },
+                t,
+                &mut out,
+            );
+            if i % 16 == 0 {
+                out.clear();
+                sched.on_gpu_free(GpuId((i / 16 % gpus as u64) as u32), t, &mut out);
+            }
+        }
+    });
+    n as f64 / secs
+}
+
 fn main() {
     banner("Hot-path microbenchmarks (§Perf)");
     let mut table = Table::new(vec!["bench", "metric", "value"]);
+    let mut json: Vec<(String, f64)> = Vec::new();
 
-    // 1. Simulation event rate: 1 model, 8 GPUs, heavy load.
+    // 1. Scheduler-only throughput sweep: models × inter-arrival gap
+    //    (1 µs ≈ hard overload, 3 µs ≈ saturation, 10 µs ≈ heavy load).
+    //    This is the number the paper's "millions of requests per
+    //    second" claim (Fig 13) rests on.
+    for &n_models in &[1usize, 16, 256] {
+        for &gap_us in &[1u64, 3, 10] {
+            let n = 1_000_000u64;
+            let ops = sched_ops(n_models, gap_us, n);
+            let name = format!("sched_m{n_models}_gap{gap_us}");
+            table.row(vec![
+                name.clone(),
+                "requests_per_sec".to_string(),
+                format!("{ops:.0}"),
+            ]);
+            table.row(vec![
+                name.clone(),
+                "ns_per_op".to_string(),
+                format!("{:.1}", 1e9 / ops),
+            ]);
+            json.push((format!("{name}_per_sec"), ops));
+            json.push((format!("{name}_ns_per_op"), 1e9 / ops));
+        }
+    }
+
+    // 2. Simulation event rate: 1 model, 8 GPUs, heavy load.
     {
         let model = model_zoo::resnet50_table2();
         let exp = GoodputExperiment::new(vec![model], 8).sim_secs(20.0);
@@ -37,80 +102,64 @@ fn main() {
                 cfg,
             );
             let res = engine.run();
-            events = res.events_processed
-                + res.metrics.total_finished();
+            events = res.events_processed + res.metrics.total_finished();
         });
+        let eps = events as f64 / secs;
         table.row(vec![
             "sim_engine".to_string(),
             "events_per_sec".to_string(),
-            format!("{:.0}", events as f64 / secs),
+            format!("{eps:.0}"),
         ]);
         table.row(vec![
             "sim_engine".to_string(),
             "sim_seconds_per_wall_second".to_string(),
             format!("{:.1}", 20.0 / secs),
         ]);
+        json.push(("sim_engine_events_per_sec".to_string(), eps));
     }
 
-    // 2. Scheduler ops: requests through the deferred scheduler alone
-    //    (no engine), measuring per-request handler cost.
+    // 3. Window math: integer closed form vs the seed float reference —
+    //    the same-host before/after proxy recorded with every run.
     {
-        use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
-        use symphony::scheduler::Scheduler;
-        let profile = symphony::core::profile::LatencyProfile::new(1.0, 5.0);
-        let mut sched = DeferredScheduler::new(vec![profile; 16], 64, DeferredConfig::default());
-        let n = 2_000_000u64;
-        let mut out = Vec::new();
-        let secs = time_it(|| {
-            for i in 0..n {
-                let t = Micros(i * 3);
-                out.clear();
-                sched.on_request(
-                    symphony::core::types::Request {
-                        id: symphony::core::types::RequestId(i),
-                        model: symphony::core::types::ModelId((i % 16) as u32),
-                        arrival: t,
-                        deadline: t + Micros(100_000),
-                    },
-                    t,
-                    &mut out,
-                );
-                // Periodically free a GPU so queues drain.
-                if i % 16 == 0 {
-                    out.clear();
-                    sched.on_gpu_free(
-                        symphony::core::types::GpuId((i / 16 % 64) as u32),
-                        t,
-                        &mut out,
-                    );
-                }
-            }
-        });
-        table.row(vec![
-            "deferred_scheduler".to_string(),
-            "on_request_per_sec".to_string(),
-            format!("{:.0}", n as f64 / secs),
-        ]);
-    }
-
-    // 3. Window math: ℓ(b), max_batch_within.
-    {
-        let p = symphony::core::profile::LatencyProfile::new(1.053, 5.072);
+        let p = LatencyProfile::new(1.053, 5.072);
         let n = 10_000_000u64;
         let mut acc = 0u64;
-        let secs = time_it(|| {
+        let secs_int = time_it(|| {
             for i in 0..n {
-                acc = acc.wrapping_add(
-                    p.max_batch_within(Micros(10_000 + (i % 50_000))) as u64
-                );
+                acc = acc
+                    .wrapping_add(p.max_batch_within(Micros(10_000 + (i % 50_000))) as u64);
+            }
+        });
+        let secs_flt = time_it(|| {
+            for i in 0..n {
+                acc = acc.wrapping_add(reference::max_batch_within(
+                    1.053,
+                    5.072,
+                    Micros(10_000 + (i % 50_000)),
+                ) as u64);
             }
         });
         assert!(acc > 0);
+        let int_ops = n as f64 / secs_int;
+        let flt_ops = n as f64 / secs_flt;
+        table.row(vec![
+            "profile_math_int".to_string(),
+            "max_batch_within_per_sec".to_string(),
+            format!("{int_ops:.0}"),
+        ]);
+        table.row(vec![
+            "profile_math_float_ref".to_string(),
+            "max_batch_within_per_sec".to_string(),
+            format!("{flt_ops:.0}"),
+        ]);
         table.row(vec![
             "profile_math".to_string(),
-            "max_batch_within_per_sec".to_string(),
-            format!("{:.0}", n as f64 / secs),
+            "int_over_float_speedup".to_string(),
+            format!("{:.2}", int_ops / flt_ops),
         ]);
+        json.push(("profile_math_int_per_sec".to_string(), int_ops));
+        json.push(("profile_math_float_ref_per_sec".to_string(), flt_ops));
+        json.push(("profile_math_speedup".to_string(), int_ops / flt_ops));
     }
 
     // 4. RNG throughput (workload generation feeds every sweep).
@@ -124,12 +173,31 @@ fn main() {
             }
         });
         assert!(acc > 0.0);
+        let ops = n as f64 / secs;
         table.row(vec![
             "rng".to_string(),
             "exp_samples_per_sec".to_string(),
-            format!("{:.0}", n as f64 / secs),
+            format!("{ops:.0}"),
         ]);
+        json.push(("rng_exp_samples_per_sec".to_string(), ops));
     }
 
     table.emit("bench_hotpath");
+    write_json(&json);
+}
+
+/// Hand-rolled JSON (zero registry deps): `{"bench": ..., "results":
+/// {name: value, ...}}` at the repo root, consumed by the CI regression
+/// check (`.github/compare_bench.py`).
+fn write_json(rows: &[(String, f64)]) {
+    let mut s = String::from("{\n  \"bench\": \"bench_hotpath\",\n  \"schema\": 1,\n  \"results\": {\n");
+    for (i, (k, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(s, "    \"{k}\": {v:.1}{sep}");
+    }
+    s.push_str("  }\n}\n");
+    match std::fs::write("BENCH_hotpath.json", &s) {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("warn: could not write BENCH_hotpath.json: {e}"),
+    }
 }

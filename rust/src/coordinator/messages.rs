@@ -6,8 +6,9 @@ use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, Request};
 
 /// A candidate's schedulable window as registered with a rank shard
-/// (`inform_candidate`).
-#[derive(Clone, Copy, Debug)]
+/// (`inform_candidate`). `PartialEq` lets the [`crate::coordinator::router::RankRouter`]
+/// coalesce re-registrations of an unchanged window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CandWindow {
     pub exec: Micros,
     pub latest: Micros,

@@ -91,6 +91,9 @@ impl ModelThread {
                     }
                 }
                 ToModel::Granted { gpu } => {
+                    // The shard consumed the registration at grant time:
+                    // the router must not coalesce the next one away.
+                    router.invalidate_last_sent();
                     let now = clock.now();
                     let cand = compute(&mut queue, &completions, now);
                     if let Some(c) = cand {
@@ -115,6 +118,9 @@ impl ModelThread {
                     }
                 }
                 ToModel::Revalidate => {
+                    // Expiry revalidation: the shard dropped the
+                    // registration before sending this.
+                    router.invalidate_last_sent();
                     hops = 0;
                     let cand = compute(&mut queue, &completions, clock.now());
                     if router.register_home(cand).is_err() {
@@ -127,6 +133,9 @@ impl ModelThread {
                     if !router.overflow_is_current(seq) {
                         continue;
                     }
+                    // The steering shard unregistered the candidate
+                    // before sending the verdict.
+                    router.invalidate_last_sent();
                     let cand = compute(&mut queue, &completions, clock.now());
                     // The recompute can empty the queue: that ends the
                     // logical candidate, so reset the migration budget
@@ -163,8 +172,22 @@ impl TrackingQueue {
         }
     }
 
+    /// Insert preserving deadline order (same contract as the sim-side
+    /// `ModelQueue::push`): `candidate` budgets the whole batch against
+    /// `q.front().deadline`, so an out-of-order delivery — frontend
+    /// clock skew, a per-request SLO override — must insert-sort, not
+    /// silently hide an earlier deadline behind the head. In-order
+    /// arrival stays O(1).
     fn push(&mut self, r: Request) {
-        self.q.push_back(r);
+        let mut i = self.q.len();
+        while i > 0 && self.q[i - 1].deadline > r.deadline {
+            i -= 1;
+        }
+        if i == self.q.len() {
+            self.q.push_back(r);
+        } else {
+            self.q.insert(i, r);
+        }
     }
 
     fn take(&mut self, n: usize) -> Vec<Request> {
@@ -240,6 +263,24 @@ mod tests {
         // frontrun = 12 - ℓ(5) = 2 < now -> exec = now = 2.25ms.
         assert_eq!(c.exec, Micros::from_millis_f64(2.25));
         assert_eq!(c.latest, Micros::from_millis_f64(3.0));
+    }
+
+    /// Regression: an out-of-order (earlier-deadline) delivery must
+    /// become the head so the window is budgeted against it.
+    #[test]
+    fn tracking_queue_out_of_order_insert_sorts() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = TrackingQueue::new();
+        q.push(req(0, Micros::ZERO, Micros::from_millis_f64(50.0)));
+        q.push(req(1, Micros::ZERO, Micros::from_millis_f64(20.0)));
+        let (cand, dropped) = q.candidate(&p, Micros::ZERO, Micros::ZERO);
+        assert!(dropped.is_empty());
+        let c = cand.unwrap();
+        // Window budgeted against the 20 ms head, not the 50 ms one.
+        assert_eq!(c.latest, Micros::from_millis_f64(20.0 - 7.0));
+        let taken = q.take(2);
+        assert_eq!(taken[0].id, RequestId(1));
+        assert_eq!(taken[1].id, RequestId(0));
     }
 
     #[test]

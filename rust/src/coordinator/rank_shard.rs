@@ -16,7 +16,7 @@
 //! GPU ids fill first, so the autoscaler can still reclaim high-id
 //! GPUs from the top of the id space.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::Duration;
 
@@ -166,9 +166,66 @@ impl State {
     fn next_wakeup(&self) -> Option<Micros> {
         let exec = self.pending.iter().next().map(|&(t, _)| t);
         let gpu = self.busy.iter().next().map(|&(t, _)| t);
-        // Parked candidates need a wake just past expiry to revalidate.
-        let expiry = self.ready.iter().next().map(|&(t, _)| Micros(t.0 + 1));
+        // Parked candidates need a wake just past expiry to revalidate
+        // (`saturating_add`: a ~u64::MAX `latest` must not wrap to 0).
+        let expiry = self
+            .ready
+            .iter()
+            .next()
+            .map(|&(t, _)| t.saturating_add(Micros(1)));
         [exec, gpu, expiry].into_iter().flatten().min()
+    }
+}
+
+/// Latest-wins coalescing of a drained inbox burst (the ROADMAP's
+/// "shard-local batching of `GpuBusyUntil` traffic"): a burst collapses
+/// to at most one candidate registration per model and one busy-until
+/// per GPU before the BTree state is touched, so a shard receiving
+/// request-rate traffic pays batch-rate bookkeeping. Per-sender message
+/// order is preserved by keeping only the newest message per key;
+/// messages for different keys touch disjoint state, so application
+/// order across keys is irrelevant. The maps are reused across drains —
+/// steady-state batching does not allocate.
+#[derive(Default)]
+struct InboxBatch {
+    cands: HashMap<ModelId, (Option<CandWindow>, u64, u32)>,
+    busy: HashMap<GpuId, Micros>,
+    shutdown: bool,
+}
+
+impl InboxBatch {
+    fn absorb(&mut self, msg: ToRank) {
+        match msg {
+            ToRank::Candidate {
+                model,
+                cand,
+                seq,
+                hops,
+            } => {
+                self.cands.insert(model, (cand, seq, hops));
+            }
+            ToRank::GpuBusyUntil { gpu, free_at } => {
+                self.busy.insert(gpu, free_at);
+            }
+            ToRank::Shutdown => self.shutdown = true,
+        }
+    }
+
+    fn flush(&mut self, st: &mut State, now: Micros) {
+        for (model, (cand, seq, hops)) in self.cands.drain() {
+            let _ = st.apply(
+                ToRank::Candidate {
+                    model,
+                    cand,
+                    seq,
+                    hops,
+                },
+                now,
+            );
+        }
+        for (gpu, free_at) in self.busy.drain() {
+            let _ = st.apply(ToRank::GpuBusyUntil { gpu, free_at }, now);
+        }
     }
 }
 
@@ -197,21 +254,23 @@ impl RankShard {
         let num_shards = hints.num_shards();
         let mut st = State::new(gpus);
         let mut stats = ShardStats::new();
+        let mut batch = InboxBatch::default();
         hints.publish(shard, st.free.len());
 
         'outer: loop {
-            // 1. Drain the mailbox through the single `apply` path.
+            // 1. Drain the mailbox into the latest-wins batch, then
+            //    apply the net effect through the single `apply` path.
             loop {
                 match inbox.try_recv() {
-                    Ok(msg) => {
-                        if st.apply(msg, clock.now()) == Flow::Shutdown {
-                            break 'outer;
-                        }
-                    }
+                    Ok(msg) => batch.absorb(msg),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => break 'outer,
                 }
             }
+            if batch.shutdown {
+                break 'outer;
+            }
+            batch.flush(&mut st, clock.now());
 
             let now = clock.now();
 
@@ -327,11 +386,9 @@ impl RankShard {
                 None => idle_cap,
             };
             match inbox.recv_timeout(timeout) {
-                Ok(msg) => {
-                    if st.apply(msg, clock.now()) == Flow::Shutdown {
-                        break 'outer;
-                    }
-                }
+                // Absorbed only: the loop top keeps draining the burst
+                // this message may be the head of, then flushes once.
+                Ok(msg) => batch.absorb(msg),
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => break 'outer,
             }

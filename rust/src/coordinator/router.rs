@@ -101,6 +101,11 @@ pub struct RankRouter {
     reg_shard: usize,
     /// Monotone registration counter (echoed by `ToModel::Overflow`).
     seq: u64,
+    /// What `reg_shard` provably holds, when known: `Some(x)` = exactly
+    /// the registration `x`; `None` = unknown (the shard consumed the
+    /// registration — grant, expiry revalidation, or overflow verdict —
+    /// so the next registration must be sent even if unchanged).
+    last_sent: Option<Option<CandWindow>>,
 }
 
 impl RankRouter {
@@ -114,6 +119,9 @@ impl RankRouter {
             home,
             reg_shard: home,
             seq: 0,
+            // A fresh shard holds no registration, which "cleared" (None)
+            // describes exactly.
+            last_sent: Some(None),
         }
     }
 
@@ -140,12 +148,37 @@ impl RankRouter {
 
     /// Replace the candidate wherever it is currently registered
     /// (request arrivals update the window without re-homing).
+    ///
+    /// Coalescing: when the shard provably already holds an equivalent
+    /// registration, the send is skipped — arrivals recompute the window
+    /// at request rate while the shard only needs batch-rate traffic.
+    /// Equivalent means same `size` and `latest` with `exec` not moving
+    /// backward: once the window is open, `exec = max(now, frontrun)`
+    /// drifts forward with the clock on every arrival, but the shard
+    /// only compares `exec` against *its* clock to decide readiness —
+    /// an already-past `exec` is behaviorally identical to a
+    /// slightly-later already-past `exec` (grants re-plan the batch at
+    /// the ModelThread anyway), so forward drift alone is no reason to
+    /// re-register. `last_sent` is invalidated whenever the shard
+    /// consumes the registration, so a skip can never lose a candidate.
     pub fn register_current(
         &mut self,
         cand: Option<CandWindow>,
         hops: u32,
     ) -> Result<(), SendError<ToRank>> {
+        if let (Some(new), Some(Some(prev))) = (cand.as_ref(), self.last_sent.as_ref()) {
+            if new.size == prev.size && new.latest == prev.latest && new.exec >= prev.exec {
+                return Ok(());
+            }
+        }
         self.register_at(self.reg_shard, cand, hops)
+    }
+
+    /// The registered shard consumed or raced this model's registration
+    /// (a grant, expiry revalidation, or overflow verdict arrived): the
+    /// router can no longer assume what the shard holds.
+    pub fn invalidate_last_sent(&mut self) {
+        self.last_sent = None;
     }
 
     /// Re-register at `shard` after an overflow verdict; `hops` bounds
@@ -179,12 +212,14 @@ impl RankRouter {
             self.reg_shard = shard;
         }
         self.seq += 1;
-        self.shard_txs[shard].send(ToRank::Candidate {
+        let res = self.shard_txs[shard].send(ToRank::Candidate {
             model: self.model,
             cand,
             seq: self.seq,
             hops,
-        })
+        });
+        self.last_sent = if res.is_ok() { Some(cand) } else { None };
+        res
     }
 
     /// `inform_gpu`: routed to the shard that owns the GPU.
@@ -241,6 +276,43 @@ mod tests {
         assert_eq!(h2.free_of(2), 4, "clones share the counters");
         h2.publish(2, 0);
         assert_eq!(h.free_of(2), 0);
+    }
+
+    /// Unchanged-window re-registrations coalesce to a single send; an
+    /// invalidation (grant/revalidate/overflow) forces the next send.
+    #[test]
+    fn router_coalesces_unchanged_registrations() {
+        use std::sync::mpsc::channel;
+        let topo = ShardTopology::new(2, 1);
+        let (tx, rx) = channel();
+        let mut r = RankRouter::new(topo, vec![tx], ModelId(0));
+        let w = CandWindow {
+            exec: Micros(10),
+            latest: Micros(20),
+            size: 3,
+        };
+        r.register_current(Some(w), 0).unwrap();
+        let seq_after_first = r.seq();
+        // Identical window: skipped, seq unchanged.
+        r.register_current(Some(w), 0).unwrap();
+        // Open-window exec drift (same size/latest, exec moved forward
+        // with the clock): behaviorally identical, also skipped.
+        r.register_current(Some(CandWindow { exec: Micros(15), ..w }), 0)
+            .unwrap();
+        assert_eq!(r.seq(), seq_after_first);
+        // Changed window: sent.
+        let w2 = CandWindow { size: 4, ..w };
+        r.register_current(Some(w2), 0).unwrap();
+        // Shard consumed the registration (e.g. grant): identical window
+        // must be re-sent.
+        r.invalidate_last_sent();
+        r.register_current(Some(w2), 0).unwrap();
+        let msgs: Vec<ToRank> = rx.try_iter().collect();
+        assert_eq!(msgs.len(), 3, "{msgs:?}");
+        assert!(msgs.iter().all(|m| matches!(
+            m,
+            ToRank::Candidate { cand: Some(_), .. }
+        )));
     }
 
     #[test]

@@ -9,26 +9,63 @@ use crate::core::time::Micros;
 
 /// Affine latency profile ℓ(b) = αb + β, stored in milliseconds like the
 /// paper's tables; evaluated to integer microseconds.
+///
+/// The hot-path evaluations (`latency`, `max_batch_within`) are
+/// closed-form integer arithmetic on `alpha_us`/`beta_us`, precomputed
+/// at construction — the scheduler calls them on every arrival and
+/// dispatch, and the seed's ms-float round-trip plus boundary-correction
+/// loops dominated that path. α and β are quantized to whole
+/// microseconds (the resolution of [`Micros`] and of the paper's
+/// tables); the float fields remain for reporting and the analytical
+/// model.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LatencyProfile {
     /// Per-request marginal cost (ms).
     pub alpha_ms: f64,
     /// Fixed batch-invocation cost (ms).
     pub beta_ms: f64,
+    /// `round(alpha_ms · 1000)`, clamped to ≥ 1 µs (the integer model's
+    /// resolution floor; also the `max_batch_within` division guard).
+    alpha_us: u64,
+    /// `round(beta_ms · 1000)`.
+    beta_us: u64,
 }
 
 impl LatencyProfile {
     pub fn new(alpha_ms: f64, beta_ms: f64) -> Self {
         assert!(alpha_ms > 0.0, "alpha must be positive");
         assert!(beta_ms >= 0.0, "beta must be non-negative");
-        LatencyProfile { alpha_ms, beta_ms }
+        let alpha_us = Micros::from_millis_f64(alpha_ms).0.max(1);
+        let beta_us = Micros::from_millis_f64(beta_ms).0;
+        LatencyProfile {
+            alpha_ms,
+            beta_ms,
+            alpha_us,
+            beta_us,
+        }
     }
 
-    /// ℓ(b) in microseconds.
+    /// α in integer microseconds (≥ 1).
+    #[inline]
+    pub fn alpha_us(&self) -> u64 {
+        self.alpha_us
+    }
+
+    /// β in integer microseconds.
+    #[inline]
+    pub fn beta_us(&self) -> u64 {
+        self.beta_us
+    }
+
+    /// ℓ(b) in microseconds: `α_us·b + β_us`, exact.
     #[inline]
     pub fn latency(&self, batch: u32) -> Micros {
         debug_assert!(batch > 0, "latency of empty batch");
-        Micros::from_millis_f64(self.alpha_ms * batch as f64 + self.beta_ms)
+        Micros(
+            self.alpha_us
+                .saturating_mul(batch as u64)
+                .saturating_add(self.beta_us),
+        )
     }
 
     /// Batching-effect strength β/α — the paper's classifier: strong if
@@ -39,24 +76,14 @@ impl LatencyProfile {
     }
 
     /// Largest b ≥ 0 with ℓ(b) ≤ budget (0 when even b=1 doesn't fit).
+    /// Closed form: `⌊(budget − β) / α⌋` over integer microseconds — no
+    /// float round-trip, no correction loops.
+    #[inline]
     pub fn max_batch_within(&self, budget: Micros) -> u32 {
-        let budget_ms = budget.as_millis_f64();
-        if budget_ms < self.alpha_ms + self.beta_ms {
+        if budget.0 < self.alpha_us.saturating_add(self.beta_us) {
             return 0;
         }
-        let b = ((budget_ms - self.beta_ms) / self.alpha_ms).floor() as u32;
-        // Guard against float rounding on the boundary.
-        let mut b = b.max(1);
-        while self.latency(b) > budget {
-            b -= 1;
-            if b == 0 {
-                return 0;
-            }
-        }
-        while self.latency(b + 1) <= budget {
-            b += 1;
-        }
-        b
+        ((budget.0 - self.beta_us) / self.alpha_us).min(u32::MAX as u64) as u32
     }
 
     /// Per-GPU throughput at batch size b: b / ℓ(b), in requests/second.
@@ -70,6 +97,77 @@ impl LatencyProfile {
     /// Asymptotic per-GPU throughput (1/α), requests/second.
     pub fn peak_throughput(&self) -> f64 {
         1_000.0 / self.alpha_ms
+    }
+}
+
+/// The seed's float implementations, kept verbatim as the ground truth
+/// for the integer hot path: `rust/tests/hotpath_equivalence.rs` checks
+/// the closed-form integer math against these across random µs-grain
+/// α/β/budget, and `bench_hotpath` times both so every run records the
+/// float→integer speedup.
+pub mod reference {
+    use crate::core::time::Micros;
+
+    /// ℓ(b) via the ms-float round-trip (seed `LatencyProfile::latency`).
+    pub fn latency(alpha_ms: f64, beta_ms: f64, batch: u32) -> Micros {
+        Micros::from_millis_f64(alpha_ms * batch as f64 + beta_ms)
+    }
+
+    /// Seed `max_batch_within`: float estimate plus boundary-correction
+    /// loops. Note the early-out guard compares ms floats, so exactly at
+    /// the ℓ(1) boundary it can be one ulp off — the equivalence tests
+    /// account for that corner.
+    pub fn max_batch_within(alpha_ms: f64, beta_ms: f64, budget: Micros) -> u32 {
+        let budget_ms = budget.as_millis_f64();
+        if budget_ms < alpha_ms + beta_ms {
+            return 0;
+        }
+        let b = ((budget_ms - beta_ms) / alpha_ms).floor() as u32;
+        let mut b = b.max(1);
+        while latency(alpha_ms, beta_ms, b) > budget {
+            b -= 1;
+            if b == 0 {
+                return 0;
+            }
+        }
+        while latency(alpha_ms, beta_ms, b + 1) <= budget {
+            b += 1;
+        }
+        b
+    }
+
+    /// Seed throughput b / ℓ(b), requests/second.
+    pub fn throughput(alpha_ms: f64, beta_ms: f64, batch: u32) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        batch as f64 / latency(alpha_ms, beta_ms, batch).as_secs_f64()
+    }
+
+    /// Seed shedding target (`DeferredScheduler::target_batch` before
+    /// memoization), built on the float pieces above.
+    pub fn target_batch(
+        alpha_ms: f64,
+        beta_ms: f64,
+        slo: Micros,
+        n: usize,
+        max_batch: u32,
+    ) -> u32 {
+        let budget = Micros((slo.0 as f64 / (1.0 + 1.0 / n.max(1) as f64)) as u64);
+        let mut b_star = max_batch_within(alpha_ms, beta_ms, budget);
+        if max_batch > 0 {
+            b_star = b_star.min(max_batch);
+        }
+        if b_star <= 1 {
+            return b_star;
+        }
+        let goal = 0.9 * throughput(alpha_ms, beta_ms, b_star);
+        for b in 1..b_star {
+            if throughput(alpha_ms, beta_ms, b) >= goal {
+                return b;
+            }
+        }
+        b_star
     }
 }
 
@@ -129,6 +227,40 @@ mod tests {
         let b = p.max_batch_within(Micros::from_millis_f64(27.0));
         assert!(p.latency(b) <= Micros::from_millis_f64(27.0));
         assert!(p.latency(b + 1) > Micros::from_millis_f64(27.0));
+    }
+
+    #[test]
+    fn integer_fields_precomputed() {
+        let p = LatencyProfile::new(2.050, 5.378);
+        assert_eq!(p.alpha_us(), 2_050);
+        assert_eq!(p.beta_us(), 5_378);
+        assert_eq!(p.latency(3), Micros(3 * 2_050 + 5_378));
+        // Sub-µs α clamps to the 1 µs resolution floor instead of
+        // dividing by zero in `max_batch_within`.
+        let tiny = LatencyProfile::new(1e-6, 0.0);
+        assert_eq!(tiny.alpha_us(), 1);
+        assert_eq!(tiny.max_batch_within(Micros(5)), 5);
+    }
+
+    #[test]
+    fn integer_matches_reference_float_on_table_profiles() {
+        // Spot-check the closed form against the seed implementation on
+        // the paper's Table 2/3 profiles (the property tests sweep
+        // random µs-grain profiles).
+        for &(a, b) in &[(1.0, 5.0), (2.050, 5.378), (1.053, 5.072), (0.268, 5.172)] {
+            let p = LatencyProfile::new(a, b);
+            for batch in 1..64u32 {
+                assert_eq!(p.latency(batch), reference::latency(a, b, batch));
+            }
+            for budget_us in (0..60_000u64).step_by(137) {
+                let budget = Micros(budget_us);
+                assert_eq!(
+                    p.max_batch_within(budget),
+                    reference::max_batch_within(a, b, budget),
+                    "α={a} β={b} budget={budget:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -40,6 +40,14 @@ impl Micros {
         Micros(self.0.saturating_sub(rhs.0))
     }
 
+    /// Saturating add for deadline arithmetic near `u64::MAX` (e.g. the
+    /// "revalidate just past expiry" timer at `latest + 1`): a plain add
+    /// would wrap a ~`u64::MAX` `latest` to 0 in release builds.
+    #[inline]
+    pub fn saturating_add(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_add(rhs.0))
+    }
+
     #[inline]
     pub fn min(self, other: Micros) -> Micros {
         Micros(self.0.min(other.0))
@@ -115,6 +123,7 @@ mod tests {
         assert_eq!(a, Micros(150));
         assert_eq!(a - Micros(150), Micros::ZERO);
         assert_eq!(Micros(10).saturating_sub(Micros(20)), Micros::ZERO);
+        assert_eq!(Micros(u64::MAX).saturating_add(Micros(1)), Micros::MAX);
         assert_eq!(Micros(5).max(Micros(9)), Micros(9));
     }
 

@@ -17,6 +17,158 @@ pub struct GpuId(pub u32);
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
 pub struct RequestId(pub u64);
 
+/// Inline capacity of [`ReqList`]: batches and drop sets up to this size
+/// live on the stack, so steady-state dispatching touches no allocator.
+/// Sized for the paper's typical batches (Fig 1 medians ≤ 16).
+pub const REQLIST_INLINE: usize = 16;
+
+#[derive(Clone, Debug)]
+enum ReqListRepr {
+    Inline {
+        len: u8,
+        buf: [RequestId; REQLIST_INLINE],
+    },
+    Heap(Vec<RequestId>),
+}
+
+/// A hand-rolled inline small-vec of request ids (zero registry deps).
+/// Carried by `scheduler::Command::{Dispatch, Drop}` so the per-event
+/// hot path is allocation-free for batches ≤ [`REQLIST_INLINE`]; larger
+/// batches spill to a heap `Vec` transparently.
+#[derive(Clone, Debug)]
+pub struct ReqList(ReqListRepr);
+
+impl ReqList {
+    pub fn new() -> Self {
+        ReqList(ReqListRepr::Inline {
+            len: 0,
+            buf: [RequestId(0); REQLIST_INLINE],
+        })
+    }
+
+    /// Inline when `n` fits, pre-sized heap otherwise.
+    pub fn with_capacity(n: usize) -> Self {
+        if n <= REQLIST_INLINE {
+            ReqList::new()
+        } else {
+            ReqList(ReqListRepr::Heap(Vec::with_capacity(n)))
+        }
+    }
+
+    pub fn from_slice(ids: &[RequestId]) -> Self {
+        let mut out = ReqList::with_capacity(ids.len());
+        for &id in ids {
+            out.push(id);
+        }
+        out
+    }
+
+    pub fn push(&mut self, id: RequestId) {
+        match &mut self.0 {
+            ReqListRepr::Inline { len, buf } => {
+                if (*len as usize) < REQLIST_INLINE {
+                    buf[*len as usize] = id;
+                    *len += 1;
+                } else {
+                    let mut v = Vec::with_capacity(REQLIST_INLINE * 2);
+                    v.extend_from_slice(&buf[..]);
+                    v.push(id);
+                    self.0 = ReqListRepr::Heap(v);
+                }
+            }
+            ReqListRepr::Heap(v) => v.push(id),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[RequestId] {
+        match &self.0 {
+            ReqListRepr::Inline { len, buf } => &buf[..*len as usize],
+            ReqListRepr::Heap(v) => v.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn iter(&self) -> std::slice::Iter<'_, RequestId> {
+        self.as_slice().iter()
+    }
+
+    pub fn into_vec(self) -> Vec<RequestId> {
+        match self.0 {
+            ReqListRepr::Inline { len, buf } => buf[..len as usize].to_vec(),
+            ReqListRepr::Heap(v) => v,
+        }
+    }
+}
+
+impl Default for ReqList {
+    fn default() -> Self {
+        ReqList::new()
+    }
+}
+
+impl std::ops::Deref for ReqList {
+    type Target = [RequestId];
+    #[inline]
+    fn deref(&self) -> &[RequestId] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<RequestId>> for ReqList {
+    fn from(v: Vec<RequestId>) -> Self {
+        ReqList(ReqListRepr::Heap(v))
+    }
+}
+
+impl FromIterator<RequestId> for ReqList {
+    fn from_iter<I: IntoIterator<Item = RequestId>>(iter: I) -> Self {
+        let mut out = ReqList::new();
+        for id in iter {
+            out.push(id);
+        }
+        out
+    }
+}
+
+impl<'a> IntoIterator for &'a ReqList {
+    type Item = &'a RequestId;
+    type IntoIter = std::slice::Iter<'a, RequestId>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl PartialEq for ReqList {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for ReqList {}
+
+impl PartialEq<Vec<RequestId>> for ReqList {
+    fn eq(&self, other: &Vec<RequestId>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[RequestId]> for ReqList {
+    fn eq(&self, other: &[RequestId]) -> bool {
+        self.as_slice() == other
+    }
+}
+
 /// An inference request: which model, when it arrived, when it must be
 /// done. `deadline = arrival + SLO` (frontends attach deadlines, §4.1).
 #[derive(Clone, Copy, Debug)]
@@ -102,5 +254,39 @@ mod tests {
     fn ids_order() {
         assert!(GpuId(0) < GpuId(1));
         assert!(ModelId(2) > ModelId(1));
+    }
+
+    #[test]
+    fn reqlist_inline_then_spills() {
+        let mut l = ReqList::new();
+        assert!(l.is_empty());
+        for i in 0..REQLIST_INLINE as u64 {
+            l.push(RequestId(i));
+        }
+        assert_eq!(l.len(), REQLIST_INLINE);
+        assert_eq!(l[0], RequestId(0));
+        // One past the inline capacity spills to the heap, preserving
+        // contents and order.
+        l.push(RequestId(99));
+        assert_eq!(l.len(), REQLIST_INLINE + 1);
+        let expect: Vec<RequestId> = (0..REQLIST_INLINE as u64)
+            .map(RequestId)
+            .chain(std::iter::once(RequestId(99)))
+            .collect();
+        assert_eq!(l, expect);
+        assert_eq!(l.clone().into_vec(), expect);
+    }
+
+    #[test]
+    fn reqlist_conversions() {
+        let v = vec![RequestId(3), RequestId(4)];
+        let l: ReqList = v.clone().into();
+        assert_eq!(l, v);
+        let l2 = ReqList::from_slice(&v);
+        assert_eq!(l2, l);
+        let collected: ReqList = v.iter().copied().collect();
+        assert_eq!(collected.as_slice(), &v[..]);
+        let sum: u64 = (&collected).into_iter().map(|r| r.0).sum();
+        assert_eq!(sum, 7);
     }
 }

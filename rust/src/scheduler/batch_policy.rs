@@ -7,7 +7,7 @@ use std::collections::VecDeque;
 
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
-use crate::core::types::{Request, RequestId};
+use crate::core::types::{ReqList, Request, RequestId};
 
 /// A model's pending-request queue. Requests of one model share an SLO,
 /// so FIFO order is deadline order.
@@ -32,12 +32,22 @@ impl ModelQueue {
         ModelQueue::default()
     }
 
+    /// Insert preserving deadline order. In-order arrival is the common
+    /// case (one SLO per model makes FIFO order deadline order) and is
+    /// O(1); an out-of-order arrival insert-sorts from the back. The
+    /// seed only `debug_assert`ed the ordering, so a single out-of-order
+    /// arrival silently corrupted head-deadline planning in release
+    /// builds.
     pub fn push(&mut self, r: Request) {
-        debug_assert!(
-            self.q.back().map_or(true, |b| b.deadline <= r.deadline),
-            "queue must stay deadline-ordered"
-        );
-        self.q.push_back(r);
+        let mut i = self.q.len();
+        while i > 0 && self.q[i - 1].deadline > r.deadline {
+            i -= 1;
+        }
+        if i == self.q.len() {
+            self.q.push_back(r);
+        } else {
+            self.q.insert(i, r);
+        }
     }
 
     /// Re-insert preempted requests, restoring global deadline order
@@ -106,31 +116,7 @@ impl ModelQueue {
         target: u32,
     ) -> BatchPlan {
         let mut plan = BatchPlan::default();
-        // Drop heads that cannot run even alone.
-        while let Some(front) = self.q.front() {
-            let budget = front.deadline.saturating_sub(start + budget_slack);
-            if profile.max_batch_within(budget) == 0 {
-                plan.dropped.push(front.id);
-                self.q.pop_front();
-            } else {
-                break;
-            }
-        }
-        // Drop stale heads that would cap the batch below the target
-        // while enough fresher requests are queued to reach it.
-        if target > 0 {
-            while let Some(front) = self.q.front() {
-                let budget = front.deadline.saturating_sub(start + budget_slack);
-                let b = profile.max_batch_within(budget);
-                let reachable = target.min(self.q.len() as u32);
-                if b < reachable {
-                    plan.dropped.push(front.id);
-                    self.q.pop_front();
-                } else {
-                    break;
-                }
-            }
-        }
+        self.shed_heads(start, profile, budget_slack, target, &mut plan.dropped);
         let Some(front) = self.q.front() else {
             return plan;
         };
@@ -147,8 +133,10 @@ impl ModelQueue {
 
     /// Like [`plan_target`] but without materializing the batch id
     /// vector — candidate (re)computation only needs the count, and it
-    /// runs on every request arrival (§Perf: this is the scheduler's
-    /// hottest allocation).
+    /// runs on every request arrival. Dropped ids go into the
+    /// caller-provided scratch buffer (appended), so the steady-state
+    /// no-drop path performs zero allocations (§Perf: this was the
+    /// scheduler's hottest allocation).
     pub fn plan_len(
         &mut self,
         start: Micros,
@@ -156,8 +144,34 @@ impl ModelQueue {
         budget_slack: Micros,
         max_batch: u32,
         target: u32,
-    ) -> (usize, Micros, Vec<RequestId>) {
-        let mut dropped = Vec::new();
+        dropped: &mut Vec<RequestId>,
+    ) -> (usize, Micros) {
+        self.shed_heads(start, profile, budget_slack, target, dropped);
+        let Some(front) = self.q.front() else {
+            return (0, Micros::ZERO);
+        };
+        let budget = front.deadline.saturating_sub(start + budget_slack);
+        let mut b = profile.max_batch_within(budget);
+        if max_batch > 0 {
+            b = b.min(max_batch);
+        }
+        ((b as usize).min(self.q.len()), front.deadline)
+    }
+
+    /// The shared head-shedding pass of [`plan_target`](Self::plan_target)
+    /// and [`plan_len`](Self::plan_len): drop heads that cannot run even
+    /// alone, then (with `target > 0`) drop stale heads that would cap
+    /// the batch below the target while enough fresher requests are
+    /// queued to reach it. One implementation keeps the arrival path and
+    /// the materializing path drop-for-drop identical.
+    fn shed_heads(
+        &mut self,
+        start: Micros,
+        profile: &LatencyProfile,
+        budget_slack: Micros,
+        target: u32,
+        dropped: &mut Vec<RequestId>,
+    ) {
         while let Some(front) = self.q.front() {
             let budget = front.deadline.saturating_sub(start + budget_slack);
             if profile.max_batch_within(budget) == 0 {
@@ -180,20 +194,22 @@ impl ModelQueue {
                 }
             }
         }
-        let Some(front) = self.q.front() else {
-            return (0, Micros::ZERO, dropped);
-        };
-        let budget = front.deadline.saturating_sub(start + budget_slack);
-        let mut b = profile.max_batch_within(budget);
-        if max_batch > 0 {
-            b = b.min(max_batch);
-        }
-        ((b as usize).min(self.q.len()), front.deadline, dropped)
     }
 
     /// Remove the first `n` requests (they were dispatched).
     pub fn take(&mut self, n: usize) -> Vec<RequestId> {
         (0..n).map(|_| self.q.pop_front().unwrap().id).collect()
+    }
+
+    /// Like [`take`](Self::take) but into an inline-first [`ReqList`] —
+    /// the dispatch hot path: batches up to `REQLIST_INLINE` ids
+    /// allocate nothing.
+    pub fn take_list(&mut self, n: usize) -> ReqList {
+        let mut out = ReqList::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.q.pop_front().unwrap().id);
+        }
+        out
     }
 
     /// Drop every queued request (used at shutdown).
@@ -276,6 +292,48 @@ mod tests {
         let taken = q.take(3);
         assert_eq!(taken, vec![RequestId(0), RequestId(1), RequestId(2)]);
         assert_eq!(q.len(), 2);
+    }
+
+    /// Regression (release-mode ordering): an out-of-order arrival must
+    /// insert-sort, not silently corrupt head-deadline planning.
+    #[test]
+    fn push_out_of_order_insert_sorts() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        q.push(req(0, 0.0, 20.0));
+        q.push(req(1, 1.0, 30.0));
+        // Late-delivered request with the earliest deadline: must become
+        // the head, so planning budgets against it.
+        q.push(req(2, 0.5, 10.0));
+        // Equal deadline keeps arrival (FIFO) order among ties.
+        q.push(req(3, 2.0, 20.0));
+        assert_eq!(q.head_deadline(), Some(Micros::from_millis_f64(10.0)));
+        let plan = q.plan(Micros::ZERO, &p, Micros::ZERO, 0);
+        assert_eq!(plan.deadline, Micros::from_millis_f64(10.0));
+        let taken = q.take(4);
+        assert_eq!(
+            taken,
+            vec![RequestId(2), RequestId(0), RequestId(3), RequestId(1)]
+        );
+    }
+
+    #[test]
+    fn plan_len_and_take_list_match_plan_target() {
+        let p = LatencyProfile::new(1.0, 5.0);
+        let mut q = ModelQueue::new();
+        for i in 0..20 {
+            q.push(req(i, 0.0, 12.0));
+        }
+        let mut q2 = q.clone();
+        let plan = q.plan_target(Micros::ZERO, &p, Micros::ZERO, 0, 0);
+        let mut dropped = Vec::new();
+        let (b, d) = q2.plan_len(Micros::ZERO, &p, Micros::ZERO, 0, 0, &mut dropped);
+        assert_eq!(b, plan.batch.len());
+        assert_eq!(d, plan.deadline);
+        assert!(dropped.is_empty());
+        let list = q2.take_list(b);
+        assert_eq!(list.as_slice(), &plan.batch[..]);
+        assert_eq!(q2.len(), q.len() - b);
     }
 
     #[test]

@@ -110,7 +110,7 @@ impl ClockworkScheduler {
             for (mi, st) in self.models.iter_mut().enumerate() {
                 let plan = st.queue.plan(start_est, &st.profile, Micros::ZERO, 0);
                 if !plan.dropped.is_empty() {
-                    out.push(Command::Drop(plan.dropped.clone()));
+                    out.push(Command::Drop(plan.dropped.clone().into()));
                 }
                 if plan.batch.is_empty() {
                     continue;
@@ -141,7 +141,7 @@ impl ClockworkScheduler {
                 out.push(Command::Dispatch {
                     gpu,
                     model: action.model,
-                    requests: action.requests,
+                    requests: action.requests.into(),
                 });
             }
             self.refresh_slot(gpu);
@@ -173,7 +173,7 @@ impl Scheduler for ClockworkScheduler {
             out.push(Command::Dispatch {
                 gpu,
                 model: action.model,
-                requests: action.requests,
+                requests: action.requests.into(),
             });
         } else {
             slot.drained_at = now;

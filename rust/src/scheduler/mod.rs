@@ -8,9 +8,36 @@
 //! same shape as the paper's Figure 18 pseudocode, factored so one
 //! implementation runs under the discrete-event simulator, the
 //! multithreaded coordinator, and the property tests.
+//!
+//! ## Hot-path architecture (§Perf)
+//!
+//! Steady-state request handling is integer-only and allocation-free:
+//!
+//! * [`crate::core::profile::LatencyProfile`] precomputes `alpha_us` /
+//!   `beta_us` at construction, so ℓ(b) and the max-batch-within-budget
+//!   query — called on every arrival and dispatch — are closed-form
+//!   integer arithmetic (the seed did an ms-float round-trip plus two
+//!   boundary-correction loops per call);
+//! * [`Command::Dispatch`] and [`Command::Drop`] carry their ids in
+//!   [`ReqList`], a hand-rolled inline small-vec: batches up to
+//!   `REQLIST_INLINE` ids never touch the allocator;
+//! * the deferred scheduler memoizes its overload-shedding target per
+//!   model (the head's SLO budget is constant per model in practice),
+//!   keeps its free-GPU set in an allocation-free bitset
+//!   ([`crate::util::bitset::GpuSet`]), and skips all bookkeeping when a
+//!   recomputed candidate is unchanged;
+//! * the engine skips re-arming timers whose deadline didn't move and
+//!   compacts its event heap when dead (superseded/canceled) entries
+//!   accumulate.
+//!
+//! `rust/tests/alloc_free.rs` pins the zero-allocation property with a
+//! counting global allocator; `rust/tests/hotpath_equivalence.rs` pins
+//! integer/float equivalence against the seed implementations kept in
+//! `core::profile::reference`; `rust/benches/bench_hotpath.rs` tracks
+//! the throughput trajectory in `BENCH_hotpath.json`.
 
 use crate::core::time::Micros;
-use crate::core::types::{GpuId, ModelId, Request, RequestId};
+use crate::core::types::{GpuId, ModelId, ReqList, Request};
 
 pub mod analytical;
 pub mod batch_policy;
@@ -42,10 +69,10 @@ pub enum Command {
     Dispatch {
         gpu: GpuId,
         model: ModelId,
-        requests: Vec<RequestId>,
+        requests: ReqList,
     },
     /// Give up on requests that can no longer meet their deadline.
-    Drop(Vec<RequestId>),
+    Drop(ReqList),
     /// Arm (or re-arm) a timer.
     SetTimer { key: TimerKey, at: Micros },
     /// Disarm a timer if pending.

@@ -206,13 +206,13 @@ impl NexusScheduler {
             };
             let _ = target;
             if !plan.dropped.is_empty() {
-                out.push(Command::Drop(plan.dropped.clone()));
+                out.push(Command::Drop(plan.dropped.clone().into()));
             }
             if plan.batch.is_empty() {
                 continue;
             }
             let b = plan.batch.len();
-            let requests = self.gpus[gi].queues[qi].1.take(b);
+            let requests = self.gpus[gi].queues[qi].1.take_list(b);
             self.gpus[gi].rr = (qi + 1) % n;
             self.free_gpus.remove(&gpu);
             out.push(Command::Dispatch {

@@ -65,7 +65,7 @@ impl ShepherdScheduler {
         for (mi, st) in self.models.iter_mut().enumerate() {
             let plan = st.queue.plan(now, &st.profile, Micros::ZERO, 0);
             if !plan.dropped.is_empty() {
-                out.push(Command::Drop(plan.dropped.clone()));
+                out.push(Command::Drop(plan.dropped.clone().into()));
             }
             let b = plan.batch.len();
             if b == 0 {
@@ -79,7 +79,7 @@ impl ShepherdScheduler {
     }
 
     fn dispatch_to(&mut self, gpu: GpuId, mi: usize, b: usize, now: Micros, out: &mut Vec<Command>) {
-        let requests = self.models[mi].queue.take(b);
+        let requests = self.models[mi].queue.take_list(b);
         self.free_gpus.remove(&gpu);
         let end = now + self.models[mi].profile.latency(b as u32);
         self.running[gpu.0 as usize] = Some(Running {
@@ -143,7 +143,7 @@ impl Scheduler for ShepherdScheduler {
             st.queue.plan(now, &st.profile, Micros::ZERO, 0)
         };
         if !plan.dropped.is_empty() {
-            out.push(Command::Drop(plan.dropped.clone()));
+            out.push(Command::Drop(plan.dropped.clone().into()));
         }
         let b = plan.batch.len();
         if b > 0 {

@@ -101,7 +101,7 @@ impl TimeoutScheduler {
         let st = &mut self.models[m.0 as usize];
         let plan = st.queue.plan(now, &st.profile, slack, self.cfg.max_batch);
         if !plan.dropped.is_empty() {
-            out.push(Command::Drop(plan.dropped.clone()));
+            out.push(Command::Drop(plan.dropped.clone().into()));
         }
         if plan.batch.is_empty() {
             out.push(Command::CancelTimer { key: TimerKey::Model(m) });
@@ -146,7 +146,7 @@ impl TimeoutScheduler {
             out.push(Command::CancelTimer { key: TimerKey::Model(m) });
             out.push(Command::SetTimer {
                 key: TimerKey::ModelAux(m),
-                at: Micros(latest.0 + 1),
+                at: latest.saturating_add(Micros(1)),
             });
         } else {
             out.push(Command::CancelTimer { key: TimerKey::Model(m) });
@@ -166,7 +166,7 @@ impl TimeoutScheduler {
         self.ready.insert((latest, m));
         out.push(Command::SetTimer {
             key: TimerKey::ModelAux(m),
-            at: Micros(latest.0 + 1),
+            at: latest.saturating_add(Micros(1)),
         });
     }
 
@@ -176,13 +176,13 @@ impl TimeoutScheduler {
         let st = &mut self.models[m.0 as usize];
         let plan = st.queue.plan(now, &st.profile, slack, self.cfg.max_batch);
         if !plan.dropped.is_empty() {
-            out.push(Command::Drop(plan.dropped.clone()));
+            out.push(Command::Drop(plan.dropped.clone().into()));
         }
         if plan.batch.is_empty() {
             return;
         }
         let n = plan.batch.len();
-        let requests = st.queue.take(n);
+        let requests = st.queue.take_list(n);
         self.free_gpus.remove(&gpu);
         out.push(Command::Dispatch {
             gpu,

@@ -7,14 +7,19 @@
 //!
 //! The engine owns the virtual clock and timers; schedulers are pure
 //! event handlers (see `scheduler::Scheduler`). Timer cancellation is
-//! done lazily with generation counters so `SetTimer` is O(log n).
+//! done lazily with generation counters so `SetTimer` is O(log n);
+//! re-arming a timer at its unchanged deadline is skipped outright (the
+//! pending heap entry already fires there), and the heap is compacted
+//! when dead entries — superseded or canceled generations — outnumber
+//! live ones (§Perf: `update_candidate` re-arms per-model timers on
+//! every arrival, which used to leave a trail of dead heap entries).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::core::profile::ModelSpec;
 use crate::core::time::Micros;
-use crate::core::types::{GpuId, ModelId, OutcomeKind, Request, RequestId};
+use crate::core::types::{GpuId, ModelId, OutcomeKind, ReqList, Request, RequestId};
 use crate::metrics::{Metrics, MetricsConfig};
 use crate::scheduler::{Command, Scheduler, TimerKey};
 use crate::sim::gpu::GpuState;
@@ -22,61 +27,84 @@ use crate::sim::network::NetworkModel;
 use crate::util::rng::Rng;
 use crate::workload::Workload;
 
-/// Active-timer generations with O(1) array lookup for the hot keys
-/// (per-model and per-GPU timers); Custom keys fall back to a map.
-/// Generation 0 = no timer armed.
+/// Minimum dead-entry count before the event heap is compacted; below
+/// this the dead entries are cheaper to pop lazily than to sweep.
+const COMPACT_MIN_DEAD: usize = 64;
+
+/// Active timers — (generation, armed deadline) with O(1) array lookup
+/// for the hot keys (per-model and per-GPU timers); Custom keys fall
+/// back to a map. Generation 0 = no timer armed. The deadline lets
+/// `SetTimer` detect unchanged re-arms and skip the heap push.
 struct TimerSlots {
-    n_models: usize,
-    model: Vec<u64>,
-    model_aux: Vec<u64>,
-    gpu: Vec<u64>,
-    custom: HashMap<u64, u64>,
+    model: Vec<(u64, Micros)>,
+    model_aux: Vec<(u64, Micros)>,
+    gpu: Vec<(u64, Micros)>,
+    custom: HashMap<u64, (u64, Micros)>,
 }
+
+const UNARMED: (u64, Micros) = (0, Micros::ZERO);
 
 impl TimerSlots {
     fn new(n_models: usize, n_gpus: usize) -> Self {
         TimerSlots {
-            n_models,
-            model: vec![0; n_models],
-            model_aux: vec![0; n_models],
-            gpu: vec![0; n_gpus],
+            model: vec![UNARMED; n_models],
+            model_aux: vec![UNARMED; n_models],
+            gpu: vec![UNARMED; n_gpus],
             custom: HashMap::new(),
         }
     }
 
     #[inline]
-    fn slot(&mut self, key: TimerKey) -> &mut u64 {
+    fn slot(&mut self, key: TimerKey) -> &mut (u64, Micros) {
         match key {
             TimerKey::Model(m) => &mut self.model[m.0 as usize],
             TimerKey::ModelAux(m) => &mut self.model_aux[m.0 as usize],
             TimerKey::Gpu(g) => {
                 let i = g.0 as usize;
                 if i >= self.gpu.len() {
-                    self.gpu.resize(i + 1, 0);
+                    self.gpu.resize(i + 1, UNARMED);
                 }
                 &mut self.gpu[i]
             }
-            TimerKey::Custom(c) => self.custom.entry(c).or_insert(0),
+            TimerKey::Custom(c) => self.custom.entry(c).or_insert(UNARMED),
         }
     }
 
     #[inline]
-    fn set(&mut self, key: TimerKey, gen: u64) {
-        *self.slot(key) = gen;
+    fn set(&mut self, key: TimerKey, gen: u64, at: Micros) {
+        *self.slot(key) = (gen, at);
     }
 
     #[inline]
     fn clear(&mut self, key: TimerKey) {
-        *self.slot(key) = 0;
+        *self.slot(key) = UNARMED;
+    }
+
+    /// `(gen, at)` if a timer is armed for `key`.
+    #[inline]
+    fn armed(&mut self, key: TimerKey) -> Option<(u64, Micros)> {
+        let s = *self.slot(key);
+        if s.0 != 0 {
+            Some(s)
+        } else {
+            None
+        }
     }
 
     #[inline]
     fn matches(&mut self, key: TimerKey, gen: u64) -> bool {
-        *self.slot(key) == gen
+        self.slot(key).0 == gen
     }
 
-    fn n_models(&self) -> usize {
-        self.n_models
+    /// Read-only liveness check for heap compaction.
+    fn live(&self, key: TimerKey, gen: u64) -> bool {
+        let s = match key {
+            TimerKey::Model(m) => self.model.get(m.0 as usize),
+            TimerKey::ModelAux(m) => self.model_aux.get(m.0 as usize),
+            TimerKey::Gpu(g) => self.gpu.get(g.0 as usize),
+            TimerKey::Custom(c) => self.custom.get(&c),
+        };
+        s.map_or(false, |&(g, _)| g == gen)
     }
 }
 
@@ -248,6 +276,9 @@ pub struct Engine<S: Scheduler, D: EngineDriver = NoDriver> {
     cmd_queue: Vec<Command>,
     pub trace: Vec<TraceEntry>,
     events_processed: u64,
+    /// Heap entries whose timer generation was superseded or canceled;
+    /// drives the compaction trigger.
+    dead_timers: usize,
 }
 
 impl<S: Scheduler> Engine<S, NoDriver> {
@@ -281,6 +312,7 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
             trace: Vec::new(),
             cfg,
             events_processed: 0,
+            dead_timers: 0,
         }
     }
 
@@ -325,6 +357,11 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
     /// Run to the horizon.
     pub fn run(mut self) -> SimResult<S, D> {
         loop {
+            // Sweep dead timer entries once they dominate the heap.
+            if self.dead_timers > COMPACT_MIN_DEAD && self.dead_timers * 2 > self.events.len() {
+                self.compact_events();
+            }
+
             // Pull the next arrival lazily so the heap stays small.
             if self.pending_req.is_none() {
                 if let Some(r) = self.workload.next_request() {
@@ -383,11 +420,39 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
         });
     }
 
+    /// Rebuild the event heap without dead timer entries and release
+    /// their payload slots. O(heap); amortized by the dead-fraction
+    /// trigger in `run`.
+    fn compact_events(&mut self) {
+        let old = std::mem::take(&mut self.events);
+        let mut live = Vec::with_capacity(old.len());
+        for Reverse((t, seq, slot)) in old.into_vec() {
+            let keep = match &self.ev_payload[slot] {
+                Some(Ev::Timer { key, gen }) => self.timers.live(*key, *gen),
+                Some(_) => true,
+                None => {
+                    debug_assert!(false, "queued event with empty payload");
+                    false
+                }
+            };
+            if keep {
+                live.push(Reverse((t, seq, slot)));
+            } else if self.ev_payload[slot].take().is_some() {
+                self.ev_free.push(slot);
+            }
+        }
+        self.events = BinaryHeap::from(live);
+        self.dead_timers = 0;
+    }
+
     fn handle_event(&mut self, ev: Ev) {
         match ev {
             Ev::Timer { key, gen } => {
                 if !self.timers.matches(key, gen) {
-                    return; // canceled or superseded
+                    // Canceled or superseded — its dead heap entry is
+                    // gone now.
+                    self.dead_timers = self.dead_timers.saturating_sub(1);
+                    return;
                 }
                 self.timers.clear(key);
                 let mut cmds = std::mem::take(&mut self.cmd_queue);
@@ -399,14 +464,14 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
                 let finished = self.gpus[gpu.0 as usize].complete(epoch);
                 let Some(batch) = finished else { return };
                 let size = batch.requests.len() as u32;
-                for rid in &batch.requests {
-                    let rec = *self.req(*rid);
+                for &rid in batch.requests.iter() {
+                    let rec = *self.req(rid);
                     let kind = if batch.end <= rec.deadline {
                         OutcomeKind::Good
                     } else {
                         OutcomeKind::Late
                     };
-                    self.req_mut(*rid).state = ReqState::Done;
+                    self.req_mut(rid).state = ReqState::Done;
                     self.metrics.record_outcome(
                         rec.model,
                         rec.arrival,
@@ -463,9 +528,9 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
         let mut i = 0;
         while i < cmds.len() {
             // Take ownership without cloning (Dispatch carries the batch
-            // id vector — cloning it was the hottest allocation in the
+            // id list — cloning it was the hottest allocation in the
             // §Perf profile).
-            let cmd = std::mem::replace(&mut cmds[i], Command::Drop(Vec::new()));
+            let cmd = std::mem::replace(&mut cmds[i], Command::Drop(ReqList::new()));
             i += 1;
             match cmd {
                 Command::Dispatch {
@@ -474,7 +539,7 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
                     requests,
                 } => self.do_dispatch(gpu, model, requests),
                 Command::Drop(ids) => {
-                    for rid in ids {
+                    for &rid in ids.iter() {
                         let rec = *self.req(rid);
                         debug_assert_eq!(
                             rec.state,
@@ -496,15 +561,30 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
                     // Timers in the past fire "immediately" (clamped to
                     // now) — e.g. revalidation of an already-expired
                     // candidate window.
-                    self.timer_gen += 1;
-                    self.timers.set(key, self.timer_gen);
-                    self.push_event(at.max(self.now), Ev::Timer {
-                        key,
-                        gen: self.timer_gen,
-                    });
+                    match self.timers.armed(key) {
+                        // Re-arm at the unchanged deadline: the pending
+                        // heap entry already fires there — skip the push
+                        // (§Perf: timer churn; `update_candidate` re-arms
+                        // on every arrival).
+                        Some((_, armed_at)) if armed_at == at => {}
+                        prev => {
+                            if prev.is_some() {
+                                self.dead_timers += 1;
+                            }
+                            self.timer_gen += 1;
+                            self.timers.set(key, self.timer_gen, at);
+                            self.push_event(at.max(self.now), Ev::Timer {
+                                key,
+                                gen: self.timer_gen,
+                            });
+                        }
+                    }
                 }
                 Command::CancelTimer { key } => {
-                    self.timers.clear(key);
+                    if self.timers.armed(key).is_some() {
+                        self.dead_timers += 1;
+                        self.timers.clear(key);
+                    }
                 }
                 Command::Preempt { gpu } => {
                     let Some(batch) = self.gpus[gpu.0 as usize].preempt(self.now) else {
@@ -546,7 +626,7 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
         self.cmd_queue = cmds;
     }
 
-    fn do_dispatch(&mut self, gpu: GpuId, model: ModelId, requests: Vec<RequestId>) {
+    fn do_dispatch(&mut self, gpu: GpuId, model: ModelId, requests: ReqList) {
         assert!(!requests.is_empty(), "empty batch dispatched");
         let g = &mut self.gpus[gpu.0 as usize];
         assert!(!g.is_busy(), "dispatch to busy GPU {gpu:?} at {:?}", self.now);
@@ -556,8 +636,8 @@ impl<S: Scheduler, D: EngineDriver> Engine<S, D> {
         let exec = self.model_spec(model).profile.latency(size);
         let start = self.now + net;
         let end = start + exec;
-        for rid in &requests {
-            let rec = self.req_mut(*rid);
+        for &rid in requests.iter() {
+            let rec = self.req_mut(rid);
             debug_assert_eq!(rec.state, ReqState::Queued, "request not queued");
             rec.state = ReqState::Running;
         }

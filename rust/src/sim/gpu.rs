@@ -4,13 +4,13 @@
 //! accounting for the utilization figures.
 
 use crate::core::time::Micros;
-use crate::core::types::{ModelId, RequestId};
+use crate::core::types::{ModelId, ReqList};
 
 /// The batch a GPU is currently executing.
 #[derive(Clone, Debug)]
 pub struct InFlight {
     pub model: ModelId,
-    pub requests: Vec<RequestId>,
+    pub requests: ReqList,
     pub dispatched_at: Micros,
     pub start: Micros,
     pub end: Micros,
@@ -41,7 +41,7 @@ impl GpuState {
     pub fn begin(
         &mut self,
         model: ModelId,
-        requests: Vec<RequestId>,
+        requests: ReqList,
         dispatched_at: Micros,
         start: Micros,
         end: Micros,
@@ -86,6 +86,7 @@ impl GpuState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::types::RequestId;
 
     #[test]
     fn lifecycle() {
@@ -93,7 +94,7 @@ mod tests {
         assert!(!g.is_busy());
         let ep = g.begin(
             ModelId(0),
-            vec![RequestId(1)],
+            vec![RequestId(1)].into(),
             Micros(10),
             Micros(12),
             Micros(20),
@@ -109,7 +110,8 @@ mod tests {
     #[test]
     fn stale_completion_ignored_after_preempt() {
         let mut g = GpuState::default();
-        let ep = g.begin(ModelId(0), vec![RequestId(1)], Micros(0), Micros(0), Micros(100));
+        let ep =
+            g.begin(ModelId(0), vec![RequestId(1)].into(), Micros(0), Micros(0), Micros(100));
         let pre = g.preempt(Micros(40)).unwrap();
         assert_eq!(pre.requests, vec![RequestId(1)]);
         assert_eq!(g.busy, Micros(40));
@@ -123,7 +125,7 @@ mod tests {
     #[cfg(debug_assertions)]
     fn double_book_panics() {
         let mut g = GpuState::default();
-        g.begin(ModelId(0), vec![], Micros(0), Micros(0), Micros(1));
-        g.begin(ModelId(0), vec![], Micros(0), Micros(0), Micros(1));
+        g.begin(ModelId(0), ReqList::new(), Micros(0), Micros(0), Micros(1));
+        g.begin(ModelId(0), ReqList::new(), Micros(0), Micros(0), Micros(1));
     }
 }

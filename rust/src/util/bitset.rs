@@ -1,0 +1,145 @@
+//! Allocation-free min-id GPU set. Replaces the `BTreeSet<GpuId>` free
+//! set on the scheduler hot path: `insert`/`remove`/`contains` are O(1)
+//! bit operations on preallocated words and never touch the allocator
+//! (BTree nodes come and go with membership), and the min-id lookup —
+//! Symphony's consolidation pick (§3.2) — scans 64 ids per step with
+//! `trailing_zeros`.
+
+use crate::core::types::GpuId;
+
+/// A set of GPU ids backed by a bitmask word vector.
+#[derive(Clone, Debug, Default)]
+pub struct GpuSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl GpuSet {
+    pub fn new() -> Self {
+        GpuSet::default()
+    }
+
+    /// Preallocate room for ids `0..n_ids` so inserts in that range
+    /// never grow the word vector.
+    pub fn with_id_capacity(n_ids: usize) -> Self {
+        GpuSet {
+            words: vec![0; n_ids.div_ceil(64)],
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Returns true if `g` was newly inserted.
+    pub fn insert(&mut self, g: GpuId) -> bool {
+        let w = (g.0 / 64) as usize;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let bit = 1u64 << (g.0 % 64);
+        if self.words[w] & bit != 0 {
+            return false;
+        }
+        self.words[w] |= bit;
+        self.len += 1;
+        true
+    }
+
+    /// Returns true if `g` was present.
+    pub fn remove(&mut self, g: GpuId) -> bool {
+        let w = (g.0 / 64) as usize;
+        if w >= self.words.len() {
+            return false;
+        }
+        let bit = 1u64 << (g.0 % 64);
+        if self.words[w] & bit == 0 {
+            return false;
+        }
+        self.words[w] &= !bit;
+        self.len -= 1;
+        true
+    }
+
+    #[inline]
+    pub fn contains(&self, g: GpuId) -> bool {
+        let w = (g.0 / 64) as usize;
+        w < self.words.len() && self.words[w] & (1u64 << (g.0 % 64)) != 0
+    }
+
+    /// Smallest id in the set (the consolidation pick), if any.
+    #[inline]
+    pub fn min(&self) -> Option<GpuId> {
+        for (i, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(GpuId((i as u32) * 64 + w.trailing_zeros()));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains_min() {
+        let mut s = GpuSet::with_id_capacity(8);
+        assert!(s.is_empty());
+        assert_eq!(s.min(), None);
+        assert!(s.insert(GpuId(5)));
+        assert!(s.insert(GpuId(2)));
+        assert!(!s.insert(GpuId(2)), "double insert");
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(GpuId(2)) && s.contains(GpuId(5)));
+        assert!(!s.contains(GpuId(3)));
+        assert_eq!(s.min(), Some(GpuId(2)));
+        assert!(s.remove(GpuId(2)));
+        assert!(!s.remove(GpuId(2)), "double remove");
+        assert_eq!(s.min(), Some(GpuId(5)));
+        assert!(s.remove(GpuId(5)));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn spans_word_boundaries() {
+        let mut s = GpuSet::new();
+        for id in [0u32, 63, 64, 127, 128, 1000] {
+            assert!(s.insert(GpuId(id)));
+        }
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.min(), Some(GpuId(0)));
+        assert!(s.remove(GpuId(0)));
+        assert_eq!(s.min(), Some(GpuId(63)));
+        assert!(s.remove(GpuId(63)));
+        assert_eq!(s.min(), Some(GpuId(64)));
+        assert!(s.contains(GpuId(1000)));
+        assert!(!s.contains(GpuId(2000)), "beyond allocated words");
+    }
+
+    #[test]
+    fn matches_btreeset_under_random_ops() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        let mut s = GpuSet::with_id_capacity(100);
+        let mut reference = std::collections::BTreeSet::new();
+        for _ in 0..10_000 {
+            let id = GpuId(rng.below(100) as u32);
+            if rng.f64() < 0.5 {
+                assert_eq!(s.insert(id), reference.insert(id));
+            } else {
+                assert_eq!(s.remove(id), reference.remove(&id));
+            }
+            assert_eq!(s.len(), reference.len());
+            assert_eq!(s.min(), reference.iter().next().copied());
+        }
+    }
+}

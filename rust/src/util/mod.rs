@@ -1,6 +1,7 @@
 //! Shared infrastructure: deterministic RNG + distributions, statistics,
 //! table/TSV output, and the mini property-test runner.
 
+pub mod bitset;
 pub mod error;
 pub mod par;
 pub mod proptest;

@@ -1,0 +1,231 @@
+//! Equivalence proofs for the integer-micros hot path (§Perf): the
+//! closed-form integer `latency`/`max_batch_within` and the memoized
+//! shedding target must agree with the seed float implementations
+//! (kept verbatim in `core::profile::reference`) across random µs-grain
+//! α/β/budget, the count-only planner must match the materializing
+//! planner, and the refactored scheduler must produce byte-identical
+//! dispatch traces run-to-run on random workloads.
+
+use symphony::core::profile::{reference, LatencyProfile, ModelSpec};
+use symphony::core::time::Micros;
+use symphony::core::types::{ModelId, Request, RequestId};
+use symphony::prop_assert;
+use symphony::scheduler::batch_policy::ModelQueue;
+use symphony::scheduler::deferred::DeferredScheduler;
+use symphony::sim::{Engine, SimConfig, TraceEntry};
+use symphony::util::proptest::{check, default_cases};
+use symphony::util::rng::Rng;
+use symphony::workload::WorkloadSpec;
+
+/// Random profile with whole-µs α/β — the resolution of `Micros` and of
+/// the paper's tables, and the domain on which integer and float math
+/// are exactly equivalent.
+fn us_grain_profile(rng: &mut Rng) -> (u64, u64, LatencyProfile) {
+    let alpha_us = 1 + rng.below(20_000);
+    let beta_us = rng.below(60_000);
+    let p = LatencyProfile::new(alpha_us as f64 / 1_000.0, beta_us as f64 / 1_000.0);
+    (alpha_us, beta_us, p)
+}
+
+/// Random budget, biased toward exact ℓ(b) boundaries where float
+/// rounding is most fragile.
+fn random_budget(rng: &mut Rng, alpha_us: u64, beta_us: u64) -> Micros {
+    if rng.f64() < 0.25 {
+        let b = rng.below(64);
+        let jitter = rng.below(3); // boundary − 1, exact, + 1
+        Micros((alpha_us * b + beta_us + jitter).saturating_sub(1))
+    } else {
+        Micros(rng.below(2_000_000))
+    }
+}
+
+#[test]
+fn prop_latency_integer_equals_float_reference() {
+    check("latency_int_float", default_cases(), |rng| {
+        let (alpha_us, beta_us, p) = us_grain_profile(rng);
+        for _ in 0..64 {
+            let b = 1 + rng.below(2_000) as u32;
+            let int = p.latency(b);
+            prop_assert!(
+                int.0 == alpha_us * b as u64 + beta_us,
+                "α={alpha_us} β={beta_us} b={b}: closed form {int:?}"
+            );
+            let flt = reference::latency(p.alpha_ms, p.beta_ms, b);
+            prop_assert!(
+                int == flt,
+                "α={alpha_us} β={beta_us} b={b}: int {int:?} != float {flt:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_batch_within_integer_equals_float_reference() {
+    check("max_batch_int_float", default_cases(), |rng| {
+        let (alpha_us, beta_us, p) = us_grain_profile(rng);
+        for _ in 0..64 {
+            let budget = random_budget(rng, alpha_us, beta_us);
+            let int = p.max_batch_within(budget);
+            let flt = reference::max_batch_within(p.alpha_ms, p.beta_ms, budget);
+            if int != flt {
+                // Known one-ulp corner: the seed's early-out guard
+                // compares ms floats, so exactly at the ℓ(1) boundary it
+                // can report 0 where the integer math correctly fits 1.
+                prop_assert!(
+                    flt == 0 && int == 1 && p.latency(1) == budget,
+                    "α={alpha_us} β={beta_us} budget={budget:?}: int {int} != float {flt}"
+                );
+            }
+            // Self-consistency: the closed form is exactly the largest
+            // fitting batch.
+            if int > 0 {
+                prop_assert!(
+                    p.latency(int) <= budget && p.latency(int + 1) > budget,
+                    "α={alpha_us} β={beta_us} budget={budget:?}: b={int} not maximal"
+                );
+            } else {
+                prop_assert!(
+                    p.latency(1) > budget,
+                    "α={alpha_us} β={beta_us} budget={budget:?}: b=0 but ℓ(1) fits"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_target_batch_equals_float_reference() {
+    check("target_batch_int_float", default_cases(), |rng| {
+        let (alpha_us, beta_us, p) = us_grain_profile(rng);
+        for _ in 0..32 {
+            let slo = Micros(rng.below(4_000_000));
+            let n = 1 + rng.below(64) as usize;
+            let max_batch = if rng.f64() < 0.5 {
+                0
+            } else {
+                1 + rng.below(64) as u32
+            };
+            let int = DeferredScheduler::target_batch(&p, slo, n, max_batch);
+            let flt = reference::target_batch(p.alpha_ms, p.beta_ms, slo, n, max_batch);
+            if int != flt {
+                // Same documented ℓ(1)-boundary corner as above,
+                // propagated through b*.
+                prop_assert!(
+                    flt == 0 && int == 1,
+                    "α={alpha_us} β={beta_us} slo={slo:?} n={n} cap={max_batch}: \
+                     int {int} != float {flt}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The count-only planner (`plan_len` + `take_list`, the dispatch hot
+/// path) agrees exactly with the materializing planner (`plan_target`)
+/// on random queues: same drops, same batch, same deadline, same
+/// remaining queue.
+#[test]
+fn prop_plan_len_matches_plan_target() {
+    check("plan_len_vs_plan_target", default_cases(), |rng| {
+        let (_a, _b, p) = us_grain_profile(rng);
+        let mut q = ModelQueue::new();
+        let n = rng.below(40);
+        let slo = 1_000 + rng.below(200_000);
+        let mut arrival = 0u64;
+        for i in 0..n {
+            arrival += rng.below(3_000);
+            // Occasional out-of-order deadline exercises the sorted
+            // insert path too.
+            let skew = rng.below(2_000);
+            q.push(Request {
+                id: RequestId(i),
+                model: ModelId(0),
+                arrival: Micros(arrival),
+                deadline: Micros(arrival + slo + skew),
+            });
+        }
+        let mut q2 = q.clone();
+        let start = Micros(rng.below(300_000));
+        let slack = Micros(rng.below(2_000));
+        let max_batch = rng.below(20) as u32;
+        let target = rng.below(20) as u32;
+        let plan = q.plan_target(start, &p, slack, max_batch, target);
+        let mut dropped = Vec::new();
+        let (b, d) = q2.plan_len(start, &p, slack, max_batch, target, &mut dropped);
+        prop_assert!(
+            b == plan.batch.len(),
+            "count {b} != materialized {}",
+            plan.batch.len()
+        );
+        prop_assert!(d == plan.deadline, "deadline {d:?} != {:?}", plan.deadline);
+        prop_assert!(
+            dropped == plan.dropped,
+            "drops {dropped:?} != {:?}",
+            plan.dropped
+        );
+        let list = q2.take_list(b);
+        prop_assert!(
+            list.as_slice() == &plan.batch[..],
+            "batch ids {list:?} != {:?}",
+            plan.batch
+        );
+        prop_assert!(
+            q2.len() + b == q.len(),
+            "remaining {} + taken {b} != {}",
+            q2.len(),
+            q.len()
+        );
+        Ok(())
+    });
+}
+
+fn trace_key(t: &TraceEntry) -> (u32, u32, u32, u64, u64, bool) {
+    (t.gpu.0, t.model.0, t.size, t.start.0, t.end.0, t.preempted)
+}
+
+/// Byte-identical dispatch traces: the refactored planner (memoized
+/// target, scratch buffers, timer dedup, heap compaction) is fully
+/// deterministic — the same seed yields the exact same batch trace on
+/// random workloads. (The fig4 worked example pins the absolute
+/// numbers: `{R1..R4} @ t=2.25` in `scheduler::deferred::tests`.)
+#[test]
+fn prop_dispatch_trace_deterministic() {
+    check("dispatch_trace_identical", 16, |rng| {
+        let n_models = 1 + rng.below(4) as usize;
+        let models: Vec<ModelSpec> = (0..n_models)
+            .map(|i| {
+                let alpha = (1 + rng.below(4_000)) as f64 / 1_000.0;
+                let beta = rng.below(12_000) as f64 / 1_000.0;
+                let min_slo = 2.0 * alpha + beta;
+                ModelSpec::new(&format!("m{i}"), alpha, beta, min_slo * 2.5)
+            })
+            .collect();
+        let gpus = 1 + rng.below(8) as usize;
+        let rate = rng.range_f64(200.0, 4_000.0);
+        let seed = rng.next_u64();
+        let run = || {
+            let spec = WorkloadSpec::new(models.clone(), rate).seed(seed);
+            let sched = symphony::harness::SystemKind::Symphony.build(&models, gpus, Micros::ZERO);
+            let cfg = SimConfig::new(gpus, Micros::from_secs_f64(1.5)).trace(true);
+            Engine::new(spec.build(), sched, cfg)
+                .run()
+                .trace
+                .iter()
+                .map(trace_key)
+                .collect::<Vec<_>>()
+        };
+        let t1 = run();
+        let t2 = run();
+        prop_assert!(!t1.is_empty(), "no batches dispatched at rate {rate}");
+        prop_assert!(
+            t1 == t2,
+            "trace diverged: {} vs {} entries",
+            t1.len(),
+            t2.len()
+        );
+        Ok(())
+    });
+}
