@@ -27,6 +27,9 @@ struct SweepPoint {
     processed_per_sec: f64,
     grants_per_sec: f64,
     p99_grant_latency_us: usize,
+    /// Overflow-routed candidates that found no free GPU (stale
+    /// steering hints) — the ROADMAP's mis-steer rate, per grant.
+    missteer_per_kgrant: f64,
 }
 
 /// Drive `n_models` ModelThreads for `dur` against a sharded rank tier.
@@ -61,6 +64,7 @@ fn coordinator_sweep(
         CoordinatorConfig {
             profiles: vec![profile; n_models],
             num_gpus,
+            initial_gpus: None,
             rank_shards,
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
@@ -129,6 +133,7 @@ fn coordinator_sweep(
         processed_per_sec: processed as f64 / secs,
         grants_per_sec: stats.grants as f64 / secs,
         p99_grant_latency_us: stats.p99_grant_latency_us(),
+        missteer_per_kgrant: stats.mis_steers as f64 / (stats.grants as f64 / 1e3).max(1e-9),
     }
 }
 
@@ -148,6 +153,7 @@ fn main() {
         "requests_per_sec",
         "grants_per_sec",
         "p99_grant_lat_us",
+        "missteer_per_kgrant",
         "speedup_vs_1shard",
     ]);
     // Offered rates: two paced points plus line rate (0 = line rate).
@@ -166,6 +172,7 @@ fn main() {
                 format!("{:.0}", pt.processed_per_sec),
                 format!("{:.0}", pt.grants_per_sec),
                 pt.p99_grant_latency_us.to_string(),
+                format!("{:.2}", pt.missteer_per_kgrant),
                 format!("{:.2}x", pt.grants_per_sec / base[ri].max(1.0)),
             ]);
         }

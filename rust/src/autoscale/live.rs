@@ -1,0 +1,280 @@
+//! Live autoscaling (§3.5 wired to the real coordinator): the
+//! [`LiveAutoscaler`] consumes per-epoch [`WindowStats`] measured from
+//! the completion stream and acts on the running cluster through a
+//! [`ClusterCtl`] — attaching detached GPUs on `Allocate` advice and
+//! draining attached ones on `Deallocate`.
+//!
+//! Retirement order is always **highest id first** (the highest shard's
+//! highest `GpuId`s): Symphony's min-id dispatch rule and the
+//! shard-0-first overflow steering keep exactly those GPUs idle, so
+//! they drain fastest and the active set stays a contiguous low-id
+//! prefix — the consolidation invariant the whole stack preserves.
+//! Attach order is symmetric: lowest detached id first.
+//!
+//! A drained GPU is not forgotten at the moment the `Drain` is issued:
+//! it sits in `Draining` until the owning shard acks that its in-flight
+//! batch finished (LazyBatching's lesson — act on measured windows, and
+//! retire only provably-idle accelerators). Only acked GPUs return to
+//! the attachable pool.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::autoscale::{Advice, AutoscaleController, WindowStats};
+use crate::coordinator::ClusterCtl;
+use crate::core::types::GpuId;
+
+/// Where one GPU slot is in the attach/drain lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuState {
+    /// Registered with its shard; grantable.
+    Attached,
+    /// Drain issued; waiting for the shard's idle ack.
+    Draining,
+    /// Retired (or never attached); available to attach.
+    Detached,
+}
+
+/// The actor that applies [`AutoscaleController`] advice to a live
+/// coordinator. Single-writer: exactly one `LiveAutoscaler` may manage
+/// a cluster (it assumes nobody else attaches or drains GPUs).
+pub struct LiveAutoscaler {
+    pub ctl: AutoscaleController,
+    cluster: ClusterCtl,
+    state: Vec<GpuState>,
+    ack_tx: Sender<GpuId>,
+    ack_rx: Receiver<GpuId>,
+}
+
+impl LiveAutoscaler {
+    /// `initial_gpus` must match the coordinator's
+    /// `CoordinatorConfig::initial_gpus` (the attached low-id prefix).
+    pub fn new(ctl: AutoscaleController, cluster: ClusterCtl, initial_gpus: usize) -> Self {
+        let (ack_tx, ack_rx) = channel();
+        let state = (0..cluster.num_gpus())
+            .map(|g| {
+                if g < initial_gpus {
+                    GpuState::Attached
+                } else {
+                    GpuState::Detached
+                }
+            })
+            .collect();
+        LiveAutoscaler {
+            ctl,
+            cluster,
+            state,
+            ack_tx,
+            ack_rx,
+        }
+    }
+
+    /// GPUs currently attached (grantable). Draining GPUs no longer
+    /// count: they take no new work.
+    pub fn active_gpus(&self) -> usize {
+        self.state.iter().filter(|s| **s == GpuState::Attached).count()
+    }
+
+    /// GPUs whose drain ack is still outstanding.
+    pub fn draining_gpus(&self) -> usize {
+        self.state.iter().filter(|s| **s == GpuState::Draining).count()
+    }
+
+    /// Per-GPU lifecycle states, indexed by `GpuId` (callers diff this
+    /// across [`Self::step`] to run attach-time side effects like
+    /// spawning a backend worker).
+    pub fn gpu_states(&self) -> &[GpuState] {
+        &self.state
+    }
+
+    /// Absorb shard acks: a `Draining` GPU whose shard confirmed it is
+    /// idle becomes `Detached` (re-attachable capacity).
+    pub fn reap_acks(&mut self) {
+        while let Ok(gpu) = self.ack_rx.try_recv() {
+            let s = &mut self.state[gpu.0 as usize];
+            debug_assert_eq!(*s, GpuState::Draining, "unexpected ack for {gpu:?}");
+            *s = GpuState::Detached;
+        }
+    }
+
+    /// One epoch: feed the window through the controller and act on the
+    /// advice. Returns the net delta (GPUs attached minus drains
+    /// issued) actually applied.
+    pub fn step(&mut self, w: &WindowStats) -> i64 {
+        self.reap_acks();
+        match self.ctl.advise(w) {
+            Advice::Hold => 0,
+            Advice::Allocate(n) => {
+                // Lowest detached ids first: the active set stays a
+                // contiguous prefix (modulo drains still in flight).
+                let mut added = 0i64;
+                for g in 0..self.state.len() {
+                    if added == n as i64 {
+                        break;
+                    }
+                    if self.state[g] == GpuState::Detached
+                        && self.cluster.attach(GpuId(g as u32)).is_ok()
+                    {
+                        self.state[g] = GpuState::Attached;
+                        added += 1;
+                    }
+                }
+                added
+            }
+            Advice::Deallocate(n) => {
+                // Highest attached ids first — the consolidation order.
+                // Never drain below the controller's floor even if the
+                // advice and the attached count disagree transiently
+                // (drains from the previous epoch may still be in
+                // flight and uncounted by `w.active_gpus`).
+                let room = self.active_gpus().saturating_sub(self.ctl.cfg.min_gpus);
+                let n = n.min(room);
+                let mut drained = 0i64;
+                for g in (0..self.state.len()).rev() {
+                    if drained == n as i64 {
+                        break;
+                    }
+                    if self.state[g] == GpuState::Attached
+                        && self.cluster.drain(GpuId(g as u32), self.ack_tx.clone()).is_ok()
+                    {
+                        self.state[g] = GpuState::Draining;
+                        drained += 1;
+                    }
+                }
+                -drained
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::AutoscaleConfig;
+    use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+    use crate::core::profile::LatencyProfile;
+    use crate::core::time::Micros;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn overloaded() -> WindowStats {
+        WindowStats {
+            good: 10,
+            bad: 90,
+            busy_fraction: 1.0,
+            active_gpus: 0, // filled per test
+        }
+    }
+
+    fn idle() -> WindowStats {
+        WindowStats {
+            good: 100,
+            bad: 0,
+            busy_fraction: 0.02,
+            active_gpus: 0,
+        }
+    }
+
+    /// End-to-end against a real (idle) coordinator: allocate attaches
+    /// the lowest detached ids, deallocate drains the highest attached
+    /// ones and their acks return them to the pool.
+    #[test]
+    fn live_autoscaler_attach_and_drain_order() {
+        let profile = LatencyProfile::new(0.5, 2.0);
+        let num_gpus = 6;
+        let mut backend_txs = Vec::new();
+        let mut _backend_rxs = Vec::new();
+        for _ in 0..num_gpus {
+            let (tx, rx) = channel::<ToBackend>();
+            backend_txs.push(tx);
+            _backend_rxs.push(rx);
+        }
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile],
+                num_gpus,
+                initial_gpus: Some(2),
+                rank_shards: 2,
+                net_bound: Micros::ZERO,
+                exec_margin: Micros::ZERO,
+            },
+            backend_txs,
+            comp_tx,
+        );
+        let ctl = AutoscaleController::new(AutoscaleConfig {
+            min_gpus: 1,
+            max_gpus: num_gpus,
+            ..Default::default()
+        });
+        let mut scaler = LiveAutoscaler::new(ctl, coord.cluster_ctl(), 2);
+        assert_eq!(scaler.active_gpus(), 2);
+
+        // Overload: 2 GPUs, 90% bad → allocate (bounded by capacity).
+        let mut w = overloaded();
+        w.active_gpus = scaler.active_gpus();
+        let delta = scaler.step(&w);
+        assert!(delta > 0, "overload must allocate, got {delta}");
+        let grown = scaler.active_gpus();
+        assert!(grown > 2 && grown <= num_gpus);
+        assert_eq!(
+            scaler.state[..grown],
+            vec![GpuState::Attached; grown][..],
+            "attached set must be the low-id prefix: {:?}",
+            scaler.state
+        );
+
+        // Idle: drain back down; acks arrive from the shards (the GPUs
+        // are idle, so immediately) and free the slots.
+        let mut w = idle();
+        w.active_gpus = scaler.active_gpus();
+        let delta = scaler.step(&w);
+        assert!(delta < 0, "idle must deallocate, got {delta}");
+        assert!(scaler.active_gpus() >= 1, "floor respected");
+        // Draining GPUs are the *highest* ids.
+        let first_draining = scaler
+            .state
+            .iter()
+            .position(|s| *s == GpuState::Draining)
+            .expect("something draining");
+        assert!(
+            scaler.state[first_draining..].iter().all(|s| *s != GpuState::Attached),
+            "drains must come from the top: {:?}",
+            scaler.state
+        );
+        // Idle GPUs ack fast.
+        std::thread::sleep(Duration::from_millis(150));
+        scaler.reap_acks();
+        assert_eq!(scaler.draining_gpus(), 0, "{:?}", scaler.state);
+        coord.shutdown();
+    }
+
+    /// An empty window must not scale (the controller regression,
+    /// exercised through the live actor).
+    #[test]
+    fn live_autoscaler_holds_on_empty_window() {
+        let profile = LatencyProfile::new(0.5, 2.0);
+        let (backend_tx, _backend_rx) = channel::<ToBackend>();
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile],
+                num_gpus: 1,
+                initial_gpus: None,
+                rank_shards: 1,
+                net_bound: Micros::ZERO,
+                exec_margin: Micros::ZERO,
+            },
+            vec![backend_tx],
+            comp_tx,
+        );
+        let ctl = AutoscaleController::new(AutoscaleConfig::default());
+        let mut scaler = LiveAutoscaler::new(ctl, coord.cluster_ctl(), 1);
+        let w = WindowStats {
+            active_gpus: 1,
+            ..Default::default()
+        };
+        assert_eq!(scaler.step(&w), 0);
+        assert_eq!(scaler.active_gpus(), 1);
+        coord.shutdown();
+    }
+}

@@ -9,6 +9,8 @@
 //! emulated cluster (removing only idle, highest-id GPUs — which
 //! Symphony's min-id dispatch rule keeps idle on purpose).
 
+pub mod live;
+
 use crate::core::time::Micros;
 
 /// Windowed measurements the controller consumes.
@@ -22,6 +24,14 @@ pub struct WindowStats {
 }
 
 impl WindowStats {
+    /// Did any request finish (well or badly) this window? An empty
+    /// window carries no signal: `busy_fraction` is left at its 0.0
+    /// default by most producers, which would otherwise read as a fully
+    /// idle cluster and trigger a mass deallocation.
+    pub fn is_empty(&self) -> bool {
+        self.good + self.bad == 0
+    }
+
     pub fn bad_rate(&self) -> f64 {
         let t = self.good + self.bad;
         if t == 0 {
@@ -86,12 +96,32 @@ impl AutoscaleController {
         AutoscaleController { cfg }
     }
 
+    /// Clamp on the bad rate fed to the `N·r/(1−r)` allocation formula:
+    /// at `r = 1` the formula divides by zero (`want` becomes `inf`,
+    /// which a saturating cast turns into `usize::MAX`), and near 1 it
+    /// explodes. Full overload carries no proportional signal — the bad
+    /// rate says "everything missed", not "by how much" — so saturation
+    /// becomes a bounded multiplicative step (`0.95/0.05 = 19×`,
+    /// still capped by `max_gpus`) applied once per epoch.
+    const MAX_BAD_RATE: f64 = 0.95;
+
     /// Advice from this window's stats.
     pub fn advise(&self, w: &WindowStats) -> Advice {
+        // No completions this window: nothing to react to. Scaling on
+        // the defaulted busy_fraction would deallocate an idle-looking
+        // cluster down to `min_gpus` on every quiet epoch. Tradeoff: a
+        // cluster whose traffic stops entirely holds at its current
+        // size until requests resume (revisit with an explicit
+        // has-measurement flag if full-idle decay is ever needed —
+        // production clusters at this scale are never request-silent).
+        if w.is_empty() {
+            return Advice::Hold;
+        }
         let n = w.active_gpus;
         let r = w.bad_rate();
         if r > self.cfg.bad_rate_threshold {
             // Allocate N·r/(1−r), at least 1, capped.
+            let r = r.min(Self::MAX_BAD_RATE);
             let want = ((n as f64 * r / (1.0 - r)).ceil() as usize).max(1);
             let room = self.cfg.max_gpus.saturating_sub(n);
             let add = want.min(room);
@@ -179,18 +209,54 @@ mod tests {
         assert_eq!(c.advise(&over), Advice::Hold, "won't grow past max");
     }
 
+    /// Regression: a zero-traffic epoch (all-default `WindowStats`, the
+    /// exact shape a live wiring produces on an idle epoch) must not
+    /// read the defaulted `busy_fraction == 0.0` as a fully idle
+    /// cluster and advise mass deallocation.
     #[test]
     fn empty_window_holds() {
         let w = WindowStats {
+            active_gpus: 8,
+            ..Default::default()
+        };
+        assert_eq!(ctl().advise(&w), Advice::Hold, "no signal, no action");
+        // The fully-default window (active_gpus = 0 too) also holds.
+        assert_eq!(ctl().advise(&WindowStats::default()), Advice::Hold);
+    }
+
+    /// Regression: `bad_rate == 1.0` used to divide by zero in
+    /// `N·r/(1−r)` (`want = inf → usize::MAX` via saturating cast). A
+    /// saturated window must advise a *bounded* allocation.
+    #[test]
+    fn saturated_bad_rate_allocates_bounded() {
+        let c = AutoscaleController::new(AutoscaleConfig {
+            max_gpus: 100_000,
+            ..Default::default()
+        });
+        let w = WindowStats {
             good: 0,
-            bad: 0,
-            busy_fraction: 0.0,
+            bad: 500,
+            busy_fraction: 1.0,
             active_gpus: 8,
         };
-        // No traffic: idle-driven shrink is allowed.
-        match ctl().advise(&w) {
-            Advice::Deallocate(n) => assert!(n <= 7),
-            other => panic!("{other:?}"),
-        }
+        // r clamps to 0.95: 8·0.95/0.05 = 152.
+        assert_eq!(c.advise(&w), Advice::Allocate(152));
+        // r just below 1.0 (999/1000) clamps the same way instead of
+        // exploding toward 8·999 = 7992.
+        let w = WindowStats {
+            good: 1,
+            bad: 999,
+            busy_fraction: 1.0,
+            active_gpus: 8,
+        };
+        assert_eq!(c.advise(&w), Advice::Allocate(152));
+        // Unclamped rates keep the exact proportional formula.
+        let w = WindowStats {
+            good: 500,
+            bad: 500,
+            busy_fraction: 1.0,
+            active_gpus: 8,
+        };
+        assert_eq!(c.advise(&w), Advice::Allocate(8));
     }
 }

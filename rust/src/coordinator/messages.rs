@@ -2,6 +2,8 @@
 //! ModelThread ⇄ rank shards ⇄ (timers), ModelThread → backend workers,
 //! backend workers → completion collector.
 
+use std::sync::mpsc::Sender;
+
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, Request};
 
@@ -53,6 +55,21 @@ pub enum ToRank {
     /// The granted GPU will be busy until `free_at` (`inform_gpu`).
     /// Routed to the shard owning `gpu`.
     GpuBusyUntil { gpu: GpuId, free_at: Micros },
+    /// Autoscaler → shard (§3.5 live wiring): stop granting `gpu`,
+    /// stop advertising it in the free hints, let any in-flight batch
+    /// finish, then retire it. `ack` fires exactly once, when the GPU
+    /// is provably idle and detached — the moment it is safe to tear
+    /// down the backend worker or return the device to the cluster
+    /// manager. Idempotent: draining an already-detached GPU acks
+    /// immediately. Exception: an `Attach` of a still-draining GPU
+    /// cancels the drain and its ack never fires (the GPU was never
+    /// idle-retired) — callers that only attach acked/detached ids,
+    /// like `autoscale::live::LiveAutoscaler`, never hit this.
+    Drain { gpu: GpuId, ack: Sender<GpuId> },
+    /// Autoscaler → shard: (re)activate a detached GPU — it joins the
+    /// shard's free set and is advertised/grantable from the next
+    /// matchmaking pass. Attaching an active GPU is a no-op.
+    Attach { gpu: GpuId },
     Shutdown,
 }
 

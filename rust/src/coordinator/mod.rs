@@ -16,12 +16,12 @@ pub mod model_thread;
 pub mod rank_shard;
 pub mod router;
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, SendError, Sender};
 use std::thread::JoinHandle;
 
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
-use crate::core::types::{ModelId, Request};
+use crate::core::types::{GpuId, ModelId, Request};
 pub use clock::Clock;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
 use model_thread::ModelThread;
@@ -32,7 +32,14 @@ pub use router::{FreeHints, RankRouter, ShardTopology};
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub profiles: Vec<LatencyProfile>,
+    /// Total GPU capacity: one backend channel and one shard-owned slot
+    /// per id. The ids in `initial_gpus..num_gpus` start detached —
+    /// headroom the autoscaler can attach at runtime.
     pub num_gpus: usize,
+    /// GPUs attached at spawn (`None` = all of `num_gpus`). Always the
+    /// lowest ids: attach grows the active prefix upward, drain retires
+    /// from the top — the consolidation order min-id dispatch preserves.
+    pub initial_gpus: Option<usize>,
     /// Rank shards (clamped to `1..=num_gpus`); 1 = the paper's single
     /// RankThread.
     pub rank_shards: usize,
@@ -45,10 +52,42 @@ pub struct CoordinatorConfig {
 /// A live coordinator: rank shards + one ModelThread per model.
 pub struct Coordinator {
     pub clock: Clock,
+    topo: ShardTopology,
     model_txs: Vec<Sender<ToModel>>,
     shard_txs: Vec<Sender<ToRank>>,
     model_handles: Vec<JoinHandle<u64>>,
     shard_handles: Vec<JoinHandle<ShardStats>>,
+}
+
+/// Cheap clonable handle for runtime cluster resizing (§3.5 live
+/// autoscaling): routes `Drain`/`Attach` to the shard owning the GPU.
+/// Obtained from [`Coordinator::cluster_ctl`]; safe to hand to an
+/// autoscaler thread while the coordinator keeps serving.
+#[derive(Clone)]
+pub struct ClusterCtl {
+    topo: ShardTopology,
+    shard_txs: Vec<Sender<ToRank>>,
+    num_gpus: usize,
+}
+
+impl ClusterCtl {
+    /// Total GPU capacity (attached or not).
+    pub fn num_gpus(&self) -> usize {
+        self.num_gpus
+    }
+
+    /// Begin retiring `gpu`: its shard stops granting/advertising it
+    /// immediately on receipt, lets any in-flight batch finish, then
+    /// sends `gpu` on `ack` once it is provably idle.
+    pub fn drain(&self, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), SendError<ToRank>> {
+        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::Drain { gpu, ack })
+    }
+
+    /// Activate a detached GPU: it joins its shard's free set and is
+    /// grantable from the next matchmaking pass.
+    pub fn attach(&self, gpu: GpuId) -> Result<(), SendError<ToRank>> {
+        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::Attach { gpu })
+    }
 }
 
 impl Coordinator {
@@ -65,6 +104,8 @@ impl Coordinator {
         let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
         let shards = topo.num_shards();
         let hints = FreeHints::new(shards);
+        // The attached set is always the id prefix `0..active_end`.
+        let active_end = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus) as u32;
 
         let mut model_txs = Vec::new();
         let mut model_rx_store = Vec::new();
@@ -79,12 +120,14 @@ impl Coordinator {
         for s in 0..shards {
             let (tx, rx) = channel::<ToRank>();
             shard_txs.push(tx);
+            let range = topo.range(s);
             let shard = RankShard {
                 clock,
                 shard: s,
                 inbox: rx,
                 model_txs: model_txs.clone(),
-                gpus: topo.range(s),
+                active: range.start.min(active_end)..range.end.min(active_end),
+                gpus: range,
                 hints: hints.clone(),
             };
             shard_handles.push(
@@ -118,10 +161,20 @@ impl Coordinator {
 
         Coordinator {
             clock,
+            topo,
             model_txs,
             shard_txs,
             model_handles,
             shard_handles,
+        }
+    }
+
+    /// Handle for runtime GPU drain/attach (live autoscaling).
+    pub fn cluster_ctl(&self) -> ClusterCtl {
+        ClusterCtl {
+            topo: self.topo.clone(),
+            shard_txs: self.shard_txs.clone(),
+            num_gpus: self.topo.range(self.topo.num_shards() - 1).end as usize,
         }
     }
 
@@ -191,6 +244,7 @@ mod tests {
             CoordinatorConfig {
                 profiles: vec![profile],
                 num_gpus: 1,
+                initial_gpus: None,
                 rank_shards: 1,
                 net_bound: Micros::from_millis_f64(2.0),
                 exec_margin: Micros::from_millis_f64(0.5),
@@ -231,6 +285,7 @@ mod tests {
             CoordinatorConfig {
                 profiles: vec![profile, profile],
                 num_gpus: 1,
+                initial_gpus: None,
                 rank_shards: 1,
                 net_bound: Micros::from_millis_f64(2.0),
                 exec_margin: Micros::from_millis_f64(0.5),
@@ -272,6 +327,7 @@ mod tests {
             CoordinatorConfig {
                 profiles: vec![profile; 4],
                 num_gpus: 4,
+                initial_gpus: None,
                 rank_shards: 2,
                 net_bound: Micros::from_millis_f64(2.0),
                 exec_margin: Micros::from_millis_f64(0.5),

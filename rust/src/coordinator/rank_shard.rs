@@ -44,6 +44,11 @@ const LAT_BUCKET_US: u64 = 10;
 #[derive(Clone, Debug)]
 pub struct ShardStats {
     pub grants: u64,
+    /// Mis-steers: an `Overflow`-routed candidate (`hops > 0`) arrived
+    /// at this shard when it had no free GPU — the steering shard's
+    /// free hint was stale. The ROADMAP's "measure mis-steer rates"
+    /// item; surfaced in the fig13 scalability report.
+    pub mis_steers: u64,
     /// Histogram of grant latency in `LAT_BUCKET_US`-µs buckets: how
     /// long a candidate's window had been open (past `exec`) when the
     /// GPU was granted.
@@ -54,12 +59,14 @@ impl ShardStats {
     pub fn new() -> Self {
         ShardStats {
             grants: 0,
+            mis_steers: 0,
             grant_lat: Histogram::new(),
         }
     }
 
     pub fn merge(&mut self, other: &ShardStats) {
         self.grants += other.grants;
+        self.mis_steers += other.mis_steers;
         self.grant_lat.merge(&other.grant_lat);
     }
 
@@ -106,18 +113,31 @@ struct State {
     busy: BTreeSet<(Micros, GpuId)>,
     /// Leased to a ModelThread, waiting for its GpuBusyUntil.
     leased: BTreeSet<GpuId>,
+    /// Draining (§3.5 retire protocol): out of the free set — so never
+    /// granted or advertised again — but still finishing an in-flight
+    /// batch (`busy`) or an outstanding lease. The ack fires when the
+    /// GPU becomes provably idle, at which point it moves to `detached`.
+    draining: HashMap<GpuId, Sender<GpuId>>,
+    /// Retired / not-yet-attached GPUs: owned ids that take no part in
+    /// matchmaking until an `Attach` re-activates them.
+    detached: BTreeSet<GpuId>,
 }
 
 impl State {
-    fn new(gpus: std::ops::Range<u32>) -> Self {
+    /// `active` is the sub-range of `gpus` that starts attached; the
+    /// rest of the owned ids begin detached (cluster capacity the
+    /// autoscaler may activate later).
+    fn new(gpus: std::ops::Range<u32>, active: std::ops::Range<u32>) -> Self {
         State {
-            free: gpus.clone().map(GpuId).collect(),
+            free: active.clone().map(GpuId).collect(),
+            detached: gpus.clone().filter(|g| !active.contains(g)).map(GpuId).collect(),
             gpus,
             cands: BTreeMap::new(),
             ready: BTreeSet::new(),
             pending: BTreeSet::new(),
             busy: BTreeSet::new(),
             leased: BTreeSet::new(),
+            draining: HashMap::new(),
         }
     }
 
@@ -128,9 +148,15 @@ impl State {
         }
     }
 
+    /// Retire `gpu` and tell the autoscaler it is now provably idle.
+    fn detach_and_ack(&mut self, gpu: GpuId, ack: Sender<GpuId>) {
+        self.detached.insert(gpu);
+        let _ = ack.send(gpu);
+    }
+
     /// The single message-application code path (shared by the drain
     /// loop and the `recv_timeout` arm).
-    fn apply(&mut self, msg: ToRank, now: Micros) -> Flow {
+    fn apply(&mut self, msg: ToRank, now: Micros, stats: &mut ShardStats) -> Flow {
         match msg {
             ToRank::Candidate {
                 model,
@@ -138,6 +164,20 @@ impl State {
                 seq,
                 hops,
             } => {
+                // Overflow-routed candidate landing on a shard with no
+                // free GPU: the steering hint was stale (ROADMAP's
+                // mis-steer measurement). Only the *arrival* of a
+                // steered candidate counts — its later in-place window
+                // updates carry the same `hops`, and an existing
+                // registration with those hops means this steering
+                // event was already scored.
+                if hops > 0
+                    && cand.is_some()
+                    && self.free.is_empty()
+                    && self.cands.get(&model).map(|c| c.hops) != Some(hops)
+                {
+                    stats.mis_steers += 1;
+                }
                 self.unregister(model);
                 if let Some(win) = cand {
                     self.cands.insert(model, CandState { win, seq, hops });
@@ -149,13 +189,57 @@ impl State {
                     debug_assert!(false, "misrouted GpuBusyUntil for {gpu:?}");
                     return Flow::Continue;
                 }
+                debug_assert!(
+                    !self.detached.contains(&gpu),
+                    "GpuBusyUntil for detached {gpu:?}"
+                );
                 self.leased.remove(&gpu);
                 self.free.remove(&gpu);
                 self.busy.retain(|&(_, g)| g != gpu);
                 if free_at <= now {
+                    // A draining GPU that just went idle retires instead
+                    // of rejoining the free set.
+                    if let Some(ack) = self.draining.remove(&gpu) {
+                        self.detach_and_ack(gpu, ack);
+                    } else {
+                        self.free.insert(gpu);
+                    }
+                } else {
+                    // Still mid-batch: the GPU-timer promotion path
+                    // completes the drain at free_at.
+                    self.busy.insert((free_at, gpu));
+                }
+            }
+            ToRank::Drain { gpu, ack } => {
+                if !self.gpus.contains(&gpu.0) {
+                    debug_assert!(false, "misrouted Drain for {gpu:?}");
+                    return Flow::Continue;
+                }
+                if self.detached.contains(&gpu) {
+                    // Idempotent: already retired.
+                    let _ = ack.send(gpu);
+                } else if self.free.remove(&gpu) {
+                    // Idle right now: retire immediately.
+                    self.detach_and_ack(gpu, ack);
+                } else {
+                    // Busy or leased: no new grants from this moment
+                    // (it is out of `free`); retire when the in-flight
+                    // batch or lease resolves.
+                    self.draining.insert(gpu, ack);
+                }
+            }
+            ToRank::Attach { gpu } => {
+                if !self.gpus.contains(&gpu.0) {
+                    debug_assert!(false, "misrouted Attach for {gpu:?}");
+                    return Flow::Continue;
+                }
+                if self.detached.remove(&gpu) {
                     self.free.insert(gpu);
                 } else {
-                    self.busy.insert((free_at, gpu));
+                    // Attaching a draining GPU cancels the drain (its
+                    // ack will never fire — callers attach only
+                    // detached ids); attaching an active GPU is a no-op.
+                    self.draining.remove(&gpu);
                 }
             }
             ToRank::Shutdown => return Flow::Shutdown,
@@ -190,6 +274,10 @@ impl State {
 struct InboxBatch {
     cands: HashMap<ModelId, (Option<CandWindow>, u64, u32)>,
     busy: HashMap<GpuId, Micros>,
+    /// Drain/Attach are control-rate, not request-rate: applied in
+    /// arrival order (a `Drain` followed by an `Attach` of the same GPU
+    /// must not collapse), after the busy updates they may depend on.
+    ctrl: Vec<ToRank>,
     shutdown: bool,
 }
 
@@ -207,11 +295,19 @@ impl InboxBatch {
             ToRank::GpuBusyUntil { gpu, free_at } => {
                 self.busy.insert(gpu, free_at);
             }
+            msg @ (ToRank::Drain { .. } | ToRank::Attach { .. }) => self.ctrl.push(msg),
             ToRank::Shutdown => self.shutdown = true,
         }
     }
 
-    fn flush(&mut self, st: &mut State, now: Micros) {
+    fn flush(&mut self, st: &mut State, now: Micros, stats: &mut ShardStats) {
+        // Busy updates first: they touch state disjoint from the
+        // candidate sets, but applying them before the candidates keeps
+        // the mis-steer check honest about free/busy transitions that
+        // arrived earlier in the same burst.
+        for (gpu, free_at) in self.busy.drain() {
+            let _ = st.apply(ToRank::GpuBusyUntil { gpu, free_at }, now, stats);
+        }
         for (model, (cand, seq, hops)) in self.cands.drain() {
             let _ = st.apply(
                 ToRank::Candidate {
@@ -221,10 +317,11 @@ impl InboxBatch {
                     hops,
                 },
                 now,
+                stats,
             );
         }
-        for (gpu, free_at) in self.busy.drain() {
-            let _ = st.apply(ToRank::GpuBusyUntil { gpu, free_at }, now);
+        for msg in self.ctrl.drain(..) {
+            let _ = st.apply(msg, now, stats);
         }
     }
 }
@@ -237,6 +334,9 @@ pub struct RankShard {
     pub model_txs: Vec<Sender<ToModel>>,
     /// Contiguous GPU id range this shard owns.
     pub gpus: std::ops::Range<u32>,
+    /// The sub-range of `gpus` attached at start; the rest begin
+    /// detached (autoscaler headroom).
+    pub active: std::ops::Range<u32>,
     /// Shared free-GPU counters for overflow steering.
     pub hints: FreeHints,
 }
@@ -249,10 +349,11 @@ impl RankShard {
             inbox,
             model_txs,
             gpus,
+            active,
             hints,
         } = self;
         let num_shards = hints.num_shards();
-        let mut st = State::new(gpus);
+        let mut st = State::new(gpus, active);
         let mut stats = ShardStats::new();
         let mut batch = InboxBatch::default();
         hints.publish(shard, st.free.len());
@@ -270,17 +371,23 @@ impl RankShard {
             if batch.shutdown {
                 break 'outer;
             }
-            batch.flush(&mut st, clock.now());
+            batch.flush(&mut st, clock.now(), &mut stats);
 
             let now = clock.now();
 
             // 2. GPU timers: promote GPUs whose free_at has passed.
+            //    A draining GPU's last batch just finished: retire it
+            //    instead of re-freeing it.
             while let Some(&(t, gpu)) = st.busy.iter().next() {
                 if t > now {
                     break;
                 }
                 st.busy.remove(&(t, gpu));
-                st.free.insert(gpu);
+                if let Some(ack) = st.draining.remove(&gpu) {
+                    st.detach_and_ack(gpu, ack);
+                } else {
+                    st.free.insert(gpu);
+                }
             }
 
             // 3. Model timers. Expiry is checked *at promotion*: a
@@ -429,6 +536,7 @@ mod tests {
             shard,
             inbox: rank_rx,
             model_txs,
+            active: gpus.clone(),
             gpus,
             hints,
         };
@@ -598,5 +706,200 @@ mod tests {
         rank_tx.send(ToRank::Shutdown).unwrap();
         let stats = h.join().unwrap();
         assert_eq!(stats.grants, 1);
+    }
+
+    /// Draining a free GPU retires and acks immediately; a later
+    /// candidate must be granted a *different* GPU.
+    #[test]
+    fn drain_free_gpu_acks_and_stops_granting() {
+        let hints = FreeHints::new(1);
+        let (clock, rank_tx, model_rxs, h) = spawn_shard(0, 0..2, hints, 1);
+        let (ack_tx, ack_rx) = channel();
+        rank_tx
+            .send(ToRank::Drain {
+                gpu: GpuId(0),
+                ack: ack_tx,
+            })
+            .unwrap();
+        let acked = ack_rx
+            .recv_timeout(Duration::from_millis(500))
+            .expect("idle GPU acks immediately");
+        assert_eq!(acked, GpuId(0));
+        let far = clock.now() + ms(500.0);
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        let msg = model_rxs[0]
+            .recv_timeout(Duration::from_millis(500))
+            .expect("granted");
+        assert!(
+            matches!(msg, ToModel::Granted { gpu: GpuId(1) }),
+            "drained GPU 0 must never be granted: {msg:?}"
+        );
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 1);
+    }
+
+    /// Draining a busy GPU defers the ack until its in-flight batch
+    /// completes, and the GPU never rejoins the free set.
+    #[test]
+    fn drain_busy_gpu_waits_for_inflight_batch() {
+        let hints = FreeHints::new(1);
+        let (clock, rank_tx, model_rxs, h) = spawn_shard(0, 0..1, hints, 1);
+        let soon = clock.now() + ms(40.0);
+        rank_tx
+            .send(ToRank::GpuBusyUntil {
+                gpu: GpuId(0),
+                free_at: soon,
+            })
+            .unwrap();
+        let (ack_tx, ack_rx) = channel();
+        rank_tx
+            .send(ToRank::Drain {
+                gpu: GpuId(0),
+                ack: ack_tx,
+            })
+            .unwrap();
+        // The ack must not arrive before the batch finishes.
+        assert!(
+            ack_rx.recv_timeout(Duration::from_millis(10)).is_err(),
+            "ack fired while the batch was still in flight"
+        );
+        let acked = ack_rx
+            .recv_timeout(Duration::from_millis(500))
+            .expect("ack after free_at");
+        assert_eq!(acked, GpuId(0));
+        // The shard's only GPU is retired: a live candidate parks
+        // un-granted until shutdown.
+        let far = clock.now() + ms(300.0);
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        assert!(
+            model_rxs[0].recv_timeout(Duration::from_millis(60)).is_err(),
+            "no grant may come from a retired GPU"
+        );
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 0);
+    }
+
+    /// The symmetric add path: a shard spawned with zero attached GPUs
+    /// grants nothing until an `Attach` activates one.
+    #[test]
+    fn attach_activates_detached_gpu() {
+        let clock = Clock::new();
+        let hints = FreeHints::new(1);
+        let (rank_tx, rank_rx) = channel();
+        let (model_tx, model_rx) = channel();
+        let rs = RankShard {
+            clock,
+            shard: 0,
+            inbox: rank_rx,
+            model_txs: vec![model_tx],
+            gpus: 0..2,
+            active: 0..0, // all capacity starts detached
+            hints,
+        };
+        let h = std::thread::spawn(move || rs.run());
+        let far = clock.now() + ms(500.0);
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        assert!(
+            model_rx.recv_timeout(Duration::from_millis(40)).is_err(),
+            "no grant before any GPU is attached"
+        );
+        rank_tx.send(ToRank::Attach { gpu: GpuId(1) }).unwrap();
+        let msg = model_rx
+            .recv_timeout(Duration::from_millis(500))
+            .expect("granted after attach");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(1) }), "{msg:?}");
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.grants, 1);
+    }
+
+    /// Regression (ROADMAP "measure mis-steer rates"): an
+    /// Overflow-routed candidate (`hops > 0`) arriving at a shard whose
+    /// free hint went stale — it has no free GPU — is counted.
+    #[test]
+    fn stale_hint_missteer_is_counted() {
+        let hints = FreeHints::new(2);
+        // This shard (index 1) advertised capacity, but its GPU is
+        // occupied by the time the steered candidate arrives.
+        let (clock, rank_tx, _model_rxs, h) = spawn_shard(1, 4..5, hints.clone(), 1);
+        let far = clock.now() + ms(500.0);
+        rank_tx
+            .send(ToRank::GpuBusyUntil {
+                gpu: GpuId(4),
+                free_at: far,
+            })
+            .unwrap();
+        // Keep the messages in separate inbox batches: in one batch
+        // the later home registration would latest-wins over the
+        // steered one before it is ever applied.
+        std::thread::sleep(Duration::from_millis(20));
+        // A candidate steered here by shard 0 (hops = 1) on the stale
+        // free hint.
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq: 3,
+                hops: 1,
+            })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // Home-shard registrations (hops = 0) never count as mis-steers.
+        rank_tx
+            .send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 2,
+                }),
+                seq: 4,
+                hops: 0,
+            })
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        rank_tx.send(ToRank::Shutdown).unwrap();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.mis_steers, 1, "exactly the steered arrival counts");
+        assert_eq!(stats.grants, 0);
     }
 }

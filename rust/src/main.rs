@@ -55,19 +55,23 @@ fn usage() {
          USAGE:\n  symphony fig <1|2|4|6a|6b|7|9|10|11|12|13|14|15|16|17|table2|all>\n  \
          symphony simulate [--system S] [--gpus N] [--models N] [--rate R] [--slo MS] [--secs S]\n  \
          symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--rate R] [--secs S]\n  \
+         symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
+                 [--epoch-ms E] [--rates R1,R2,..] [--assert-scale]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n\n\
          systems: symphony clockwork nexus shepherd eager"
     );
 }
 
-/// Parse `--key value` flags.
+/// Parse `--key value` flags. A `--key` directly followed by another
+/// `--flag` (or by nothing) is boolean `true` — so `--autoscale --gpus 8`
+/// parses as `autoscale=true, gpus=8` instead of swallowing `--gpus`.
 fn flags(rest: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < rest.len() {
         if let Some(k) = rest[i].strip_prefix("--") {
-            if i + 1 < rest.len() {
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                 out.insert(k.to_string(), rest[i + 1].clone());
                 i += 2;
                 continue;
@@ -240,24 +244,101 @@ fn cmd_serve(rest: &[String]) {
         },
         None => BackendKind::Sleep,
     };
+    let autoscale_on = f.contains_key("autoscale");
+    let initial_gpus = match f.get("initial-gpus").and_then(|v| v.parse().ok()) {
+        Some(n) => Some(n),
+        // Autoscale runs default to a quarter of capacity attached so
+        // both the allocate and the drain path get exercised.
+        None if autoscale_on => Some((gpus / 4).max(1)),
+        None => None,
+    };
+    let autoscale = autoscale_on.then(|| symphony::autoscale::AutoscaleConfig {
+        bad_rate_threshold: getf(&f, "bad-threshold", 0.05),
+        idle_threshold: getf(&f, "idle-threshold", 0.30),
+        min_gpus: getu(&f, "min-gpus", 1),
+        max_gpus: getu(&f, "max-gpus", gpus),
+        epoch: Micros::from_millis_f64(getf(&f, "epoch-ms", 500.0)),
+    });
+    // `--rates r1,r2,...` splits the duration into equal phases — the
+    // Fig 15-style changing workload (low→high→low exercises both the
+    // allocate and the drain path).
+    let rate_phases: Vec<(f64, f64)> = f
+        .get("rates")
+        .map(|spec| {
+            let rs: Vec<f64> = spec
+                .split(',')
+                .filter_map(|v| v.trim().parse().ok())
+                .collect();
+            let phase_secs = secs / rs.len().max(1) as f64;
+            rs.into_iter().map(|r| (phase_secs, r)).collect()
+        })
+        .unwrap_or_default();
+    // Model shape: ℓ(b) = alpha·b + beta (ms). The defaults are light;
+    // autoscale smokes pass heavier models so a small GPU count
+    // saturates at driveable rates.
+    let alpha = getf(&f, "alpha-ms", 0.2);
+    let beta = getf(&f, "beta-ms", 2.0);
+    let slo = getf(&f, "slo-ms", 50.0);
     let models = vec![
-        symphony::core::profile::ModelSpec::new("svc-a", 0.2, 2.0, 50.0),
-        symphony::core::profile::ModelSpec::new("svc-b", 0.2, 2.0, 50.0),
+        symphony::core::profile::ModelSpec::new("svc-a", alpha, beta, slo),
+        symphony::core::profile::ModelSpec::new("svc-b", alpha, beta, slo),
     ];
-    match serve(ServeConfig {
+    let report = match serve(ServeConfig {
         models,
         num_gpus: gpus,
+        initial_gpus,
         rank_shards,
         total_rate: rate,
+        rate_phases,
         duration: Duration::from_secs_f64(secs),
         backend,
+        autoscale,
         seed: 7,
     }) {
-        Ok(r) => println!("{r:#?}"),
+        Ok(r) => r,
         Err(e) => {
             eprintln!("serve failed: {e:#}");
             std::process::exit(1);
         }
+    };
+    println!("{report:#?}");
+    if !report.timeline.is_empty() {
+        let mut t = symphony::util::table::Table::new(vec![
+            "t_s", "offered_rps", "active_gpus", "bad_rate", "busy", "delta",
+        ]);
+        for p in &report.timeline {
+            t.row(vec![
+                format!("{:.1}", p.t_s),
+                format!("{:.0}", p.offered_rps),
+                p.active_gpus.to_string(),
+                format!("{:.3}", p.bad_rate),
+                format!("{:.2}", p.busy_fraction),
+                p.delta.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    // CI smoke assertion: the active-GPU count must rise under the high
+    // phase and fall back in the final trough (load-proportionality).
+    if f.contains_key("assert-scale") {
+        let Some((first, peak, last)) = symphony::metrics::timeline_extent(&report.timeline)
+        else {
+            eprintln!("assert-scale: no autoscale timeline (pass --autoscale)");
+            std::process::exit(1);
+        };
+        let initial = initial_gpus.unwrap_or(gpus);
+        if peak <= initial || last >= peak {
+            eprintln!(
+                "assert-scale FAILED: initial={initial} first={first} peak={peak} last={last} \
+                 — GPU count must go up then back down"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "assert-scale OK: initial={initial} peak={peak} last={last} \
+             (mis_steers={})",
+            report.mis_steers
+        );
     }
 }
 

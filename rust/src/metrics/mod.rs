@@ -27,6 +27,36 @@ impl Default for MetricsConfig {
     }
 }
 
+/// One epoch of the live-autoscale timeline (§3.5 / Fig 15): what the
+/// windowed stats pipeline observed and what the controller did about
+/// it. Produced by the serve-side autoscale loop; rendered by the
+/// `serve --autoscale` report and the Fig 15-style drivers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochPoint {
+    /// Epoch end, seconds since the run started.
+    pub t_s: f64,
+    /// Completions (good + bad) per second over the epoch — the
+    /// measured, not configured, offered load.
+    pub offered_rps: f64,
+    /// Attached GPUs after this epoch's scaling action.
+    pub active_gpus: usize,
+    /// Bad-rate `r` of the epoch window.
+    pub bad_rate: f64,
+    /// Mean busy fraction across active GPUs in the window.
+    pub busy_fraction: f64,
+    /// Net GPUs added (positive) or put into drain (negative).
+    pub delta: i64,
+}
+
+/// Summary of an autoscale timeline: the Fig 15 "load-proportional"
+/// shape in three numbers.
+pub fn timeline_extent(points: &[EpochPoint]) -> Option<(usize, usize, usize)> {
+    let first = points.first()?.active_gpus;
+    let peak = points.iter().map(|p| p.active_gpus).max()?;
+    let last = points.last()?.active_gpus;
+    Some((first, peak, last))
+}
+
 /// Counters + samples for one model.
 #[derive(Clone, Debug, Default)]
 pub struct ModelMetrics {
@@ -279,6 +309,17 @@ mod tests {
         assert!((m.goodput() - 49.0).abs() < 1e-9);
         assert!(!m.slo_satisfied(0.01));
         assert!(m.slo_satisfied(0.05));
+    }
+
+    #[test]
+    fn timeline_extent_reports_fig15_shape() {
+        assert_eq!(timeline_extent(&[]), None);
+        let mk = |g: usize| EpochPoint {
+            active_gpus: g,
+            ..Default::default()
+        };
+        let pts: Vec<EpochPoint> = [2, 3, 5, 6, 4, 2, 1].iter().map(|&g| mk(g)).collect();
+        assert_eq!(timeline_extent(&pts), Some((2, 6, 1)));
     }
 
     #[test]

@@ -9,17 +9,31 @@
 //!   Pallas artifacts. `PjRtClient` is `Rc`-based (not `Send`), so a
 //!   single executor thread owns the runtime and serializes executions —
 //!   on a CPU backend the "GPUs" share the same silicon anyway.
+//!
+//! With [`ServeConfig::autoscale`] set, a §3.5 epoch loop runs beside
+//! the load: a collector thread folds the completion stream into
+//! windowed counters, each epoch becomes a [`WindowStats`], the
+//! [`AutoscaleController`] advises, and a [`LiveAutoscaler`] acts on
+//! the running cluster — draining the highest GPU ids when idle
+//! (backend worker kept alive but never granted again) and attaching
+//! detached ids (spawning their backend worker on first attach) when
+//! the bad rate climbs. The per-epoch timeline lands in
+//! [`ServeReport::timeline`].
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::error::Result;
 
+use crate::autoscale::live::{GpuState, LiveAutoscaler};
+use crate::autoscale::{AutoscaleConfig, AutoscaleController, WindowStats};
 use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
-use crate::core::profile::ModelSpec;
+use crate::core::profile::{LatencyProfile, ModelSpec};
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
+use crate::metrics::EpochPoint;
 use crate::runtime::{ModelRuntime, IMAGE_CHANNELS, IMAGE_DIM};
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, Histogram};
@@ -37,14 +51,25 @@ pub enum BackendKind {
 /// Serving experiment configuration.
 pub struct ServeConfig {
     pub models: Vec<ModelSpec>,
+    /// Total GPU capacity (backend channels / shard slots).
     pub num_gpus: usize,
+    /// GPUs attached at start (`None` = all). The rest are autoscaler
+    /// headroom: detached until an `Allocate` epoch attaches them.
+    pub initial_gpus: Option<usize>,
     /// Rank shards in the coordinator (1 = the paper's single
     /// RankThread; clamped to `num_gpus`).
     pub rank_shards: usize,
-    /// Aggregate offered rate, requests/second.
+    /// Aggregate offered rate, requests/second (used when
+    /// `rate_phases` is empty).
     pub total_rate: f64,
+    /// Piecewise offered-rate schedule: `(seconds, requests/second)`
+    /// phases played in order — the Fig 15-style changing workload.
+    /// Empty = constant `total_rate` for the whole run.
+    pub rate_phases: Vec<(f64, f64)>,
     pub duration: Duration,
     pub backend: BackendKind,
+    /// Run the §3.5 epoch loop against the live cluster.
+    pub autoscale: Option<AutoscaleConfig>,
     pub seed: u64,
 }
 
@@ -62,6 +87,13 @@ pub struct ServeReport {
     pub mean_batch: f64,
     pub batches: u64,
     pub wall_secs: f64,
+    /// Rank-tier grants over the run.
+    pub grants: u64,
+    /// Overflow-routed candidates that landed on a shard with no free
+    /// GPU (stale steering hint) — the ROADMAP's mis-steer rate.
+    pub mis_steers: u64,
+    /// Per-epoch autoscale timeline (empty without `autoscale`).
+    pub timeline: Vec<EpochPoint>,
 }
 
 impl ServeReport {
@@ -75,34 +107,113 @@ impl ServeReport {
     }
 }
 
+/// Windowed counters shared between the completion collector and the
+/// autoscale epoch loop (the §3.5 stats pipeline: completion stream →
+/// `WindowStats` per epoch).
+#[derive(Default)]
+struct LiveCounts {
+    /// Requests completed within their SLO.
+    good: u64,
+    /// Requests completed late or dropped.
+    bad: u64,
+    /// Cumulative per-GPU execution busy time, µs.
+    busy_us: Vec<u64>,
+}
+
+/// Everything the collector accumulated for the final report.
+struct CollectorOut {
+    latencies: Vec<f64>,
+    batch_hist: Histogram,
+    completed: u64,
+    dropped: u64,
+    violations: u64,
+    batches: u64,
+    first: Micros,
+    last: Micros,
+}
+
+/// Per-GPU sleep workers with deferred spawn: workers for initially
+/// detached GPUs start only when the autoscaler first attaches them
+/// (the §3.5 add path: spawn the backend worker, then the shard-side
+/// `Attach` makes the GPU grantable).
+struct SleepWorkers {
+    rxs: Mutex<Vec<Option<Receiver<ToBackend>>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Held for deferred spawns; `close()` releases it so the
+    /// completion channel can disconnect once the spawned workers exit
+    /// (otherwise the collector only ever exits via its idle timeout).
+    comp: Mutex<Option<Sender<Completion>>>,
+    profiles: Vec<LatencyProfile>,
+}
+
+impl SleepWorkers {
+    /// Spawn the worker for `gpu` if it has not been spawned yet.
+    fn ensure_spawned(&self, gpu: GpuId) {
+        let rx = self.rxs.lock().unwrap()[gpu.0 as usize].take();
+        if let Some(rx) = rx {
+            let Some(comp) = self.comp.lock().unwrap().clone() else {
+                return; // shutting down; nothing left to serve
+            };
+            let profiles = self.profiles.clone();
+            let h = std::thread::spawn(move || sleep_worker(gpu, rx, comp, profiles));
+            self.handles.lock().unwrap().push(h);
+        }
+    }
+
+    /// Drop the retained completion sender (no more deferred spawns).
+    fn close(&self) {
+        self.comp.lock().unwrap().take();
+    }
+
+    fn join_all(&self) {
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // Receivers of never-spawned workers drop here, closing their
+        // channels.
+        self.rxs.lock().unwrap().clear();
+    }
+}
+
 /// Run a serving experiment end to end.
 pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
     let (comp_tx, comp_rx) = channel::<Completion>();
+    let initial_gpus = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus);
 
     // Backend channels (one per GPU).
     let mut backend_txs = Vec::new();
-    let mut worker_handles = Vec::new();
+    let mut pjrt_handles = Vec::new();
+    let mut sleep_workers: Option<Arc<SleepWorkers>> = None;
     match &cfg.backend {
         BackendKind::Sleep => {
-            for g in 0..cfg.num_gpus {
+            let mut rxs = Vec::new();
+            for _ in 0..cfg.num_gpus {
                 let (tx, rx) = channel::<ToBackend>();
                 backend_txs.push(tx);
-                let profiles: Vec<_> = cfg.models.iter().map(|m| m.profile).collect();
-                let comp = comp_tx.clone();
-                worker_handles.push(std::thread::spawn(move || {
-                    sleep_worker(GpuId(g as u32), rx, comp, profiles)
-                }));
+                rxs.push(Some(rx));
             }
+            let workers = Arc::new(SleepWorkers {
+                rxs: Mutex::new(rxs),
+                handles: Mutex::new(Vec::new()),
+                comp: Mutex::new(Some(comp_tx.clone())),
+                profiles: cfg.models.iter().map(|m| m.profile).collect(),
+            });
+            for g in 0..initial_gpus {
+                workers.ensure_spawned(GpuId(g as u32));
+            }
+            sleep_workers = Some(workers);
         }
         BackendKind::Pjrt { artifacts_dir } => {
             // One executor thread owns the (non-Send) PJRT runtime; all
-            // GPU channels funnel into it.
+            // GPU channels funnel into it (spawned upfront — the funnel
+            // threads are free, the runtime is shared anyway).
             let (job_tx, job_rx) = channel::<(GpuId, ToBackend)>();
             for g in 0..cfg.num_gpus {
                 let (tx, rx) = channel::<ToBackend>();
                 backend_txs.push(tx);
                 let jt = job_tx.clone();
-                worker_handles.push(std::thread::spawn(move || {
+                pjrt_handles.push(std::thread::spawn(move || {
                     for msg in rx {
                         let stop = matches!(msg, ToBackend::Shutdown);
                         let _ = jt.send((GpuId(g as u32), msg));
@@ -116,7 +227,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             let dir = artifacts_dir.clone();
             let comp = comp_tx.clone();
             let gpus = cfg.num_gpus;
-            worker_handles.push(std::thread::spawn(move || {
+            pjrt_handles.push(std::thread::spawn(move || {
                 pjrt_executor(dir, job_rx, comp, gpus)
             }));
         }
@@ -126,6 +237,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         CoordinatorConfig {
             profiles: cfg.models.iter().map(|m| m.profile).collect(),
             num_gpus: cfg.num_gpus,
+            initial_gpus: cfg.initial_gpus,
             rank_shards: cfg.rank_shards,
             // The paper budgets the RDMA p99.99 (33 µs) here; without a
             // kernel-bypass control plane we budget OS-thread wakeup +
@@ -137,17 +249,119 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         backend_txs.clone(),
         comp_tx.clone(),
     );
-    drop(comp_tx);
-
-    // Load generator: merged Poisson streams on the coordinator clock.
     let clock = coord.clock;
+
+    // Completion collector: final-report accumulation plus the shared
+    // windowed counters the autoscale loop reads.
+    let counts = Arc::new(Mutex::new(LiveCounts {
+        busy_us: vec![0; cfg.num_gpus],
+        ..Default::default()
+    }));
+    let collector = {
+        let counts = counts.clone();
+        std::thread::spawn(move || collect(comp_rx, counts))
+    };
+
+    // Autoscale epoch loop (§3.5 live wiring).
+    let (stop_tx, stop_rx) = channel::<()>();
+    let scaler_handle = cfg.autoscale.map(|as_cfg| {
+        let ctl = AutoscaleController::new(as_cfg);
+        let mut scaler = LiveAutoscaler::new(ctl, coord.cluster_ctl(), initial_gpus);
+        let counts = counts.clone();
+        let workers = sleep_workers.clone();
+        let epoch = Duration::from_micros(as_cfg.epoch.0.max(1));
+        std::thread::spawn(move || {
+            let mut log: Vec<EpochPoint> = Vec::new();
+            let mut last: (u64, u64, Vec<u64>) = (0, 0, Vec::new());
+            let mut last_t = clock.now();
+            loop {
+                // On stop, fold the final partial window into the
+                // timeline (no scaling action) so the last logged
+                // point reflects the cluster state at shutdown.
+                let stopping = match stop_rx.recv_timeout(epoch) {
+                    Err(RecvTimeoutError::Timeout) => false,
+                    Ok(()) | Err(RecvTimeoutError::Disconnected) => true,
+                };
+                let now = clock.now();
+                let (good, bad, busy) = {
+                    let c = counts.lock().unwrap();
+                    (c.good, c.bad, c.busy_us.clone())
+                };
+                let window_s = (now.saturating_sub(last_t)).as_secs_f64().max(1e-9);
+                let active = scaler.active_gpus();
+                let dgood = good - last.0;
+                let dbad = bad - last.1;
+                let dbusy_us: u64 = busy
+                    .iter()
+                    .enumerate()
+                    .map(|(g, &b)| b - last.2.get(g).copied().unwrap_or(0))
+                    .sum();
+                let w = WindowStats {
+                    good: dgood,
+                    bad: dbad,
+                    busy_fraction: if active > 0 {
+                        ((dbusy_us as f64 / 1e6) / (window_s * active as f64)).min(1.0)
+                    } else {
+                        0.0
+                    },
+                    active_gpus: active,
+                };
+                let before: Vec<GpuState> = scaler.gpu_states().to_vec();
+                let delta = if stopping { 0 } else { scaler.step(&w) };
+                // The add path spawns the backend worker for every GPU
+                // attached this epoch (sleep backend only; PJRT funnels
+                // exist upfront).
+                if let Some(workers) = &workers {
+                    for (g, prev) in before.iter().enumerate() {
+                        if *prev != GpuState::Attached
+                            && scaler.gpu_states()[g] == GpuState::Attached
+                        {
+                            workers.ensure_spawned(GpuId(g as u32));
+                        }
+                    }
+                }
+                log.push(EpochPoint {
+                    t_s: now.as_secs_f64(),
+                    offered_rps: (dgood + dbad) as f64 / window_s,
+                    active_gpus: scaler.active_gpus(),
+                    bad_rate: w.bad_rate(),
+                    busy_fraction: w.busy_fraction,
+                    delta,
+                });
+                last = (good, bad, busy);
+                last_t = now;
+                if stopping {
+                    break;
+                }
+            }
+            log
+        })
+    });
+
+    // Load generator: merged (piecewise-)Poisson streams on the
+    // coordinator clock.
     let mut rng = Rng::new(cfg.seed);
     let n_models = cfg.models.len();
+    let phases: Vec<(f64, f64)> = if cfg.rate_phases.is_empty() {
+        vec![(cfg.duration.as_secs_f64(), cfg.total_rate)]
+    } else {
+        cfg.rate_phases.clone()
+    };
+    let segments: Vec<(Micros, f64)> = {
+        let mut t = 0.0;
+        let mut segs = Vec::new();
+        for &(secs, rate) in &phases {
+            segs.push((Micros::from_secs_f64(t), rate / n_models as f64));
+            t += secs;
+        }
+        segs
+    };
     let mut streams: Vec<ArrivalStream> = (0..n_models)
         .map(|i| {
             ArrivalStream::new(
-                ArrivalKind::Poisson {
-                    rate: cfg.total_rate / n_models as f64,
+                ArrivalKind::PiecewiseRate {
+                    segments: segments.clone(),
+                    shape: 1.0,
                 },
                 rng.fork(i as u64),
             )
@@ -165,6 +379,10 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             .filter_map(|(i, t)| t.map(|t| (i, t)))
             .min_by_key(|&(_, t)| t)
         else {
+            // All streams exhausted (e.g. a trailing zero-rate phase):
+            // idle out the configured duration so the autoscale epoch
+            // loop keeps observing — and logging — the trough.
+            std::thread::sleep(clock.until(horizon));
             break;
         };
         if t > horizon {
@@ -184,69 +402,121 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         next[mi] = streams[mi].next_after(t);
     }
 
-    // Drain: let in-flight work land, then shut down.
+    // Drain: let in-flight work land, then stop the epoch loop and the
+    // coordinator.
     std::thread::sleep(Duration::from_millis(300));
-    let (_processed, _grants) = coord.shutdown();
+    let timeline = match scaler_handle {
+        Some(h) => {
+            let _ = stop_tx.send(());
+            h.join().unwrap_or_default()
+        }
+        None => Vec::new(),
+    };
+    let (_processed, shard_stats) = coord.shutdown_stats();
     for tx in &backend_txs {
         let _ = tx.send(ToBackend::Shutdown);
     }
 
-    // Collect completions.
-    let report = collect(comp_rx, &cfg, submitted);
-    for h in worker_handles {
+    // Collect completions. Every retained completion sender must go
+    // before the join: the epoch thread is down, `close()` drops the
+    // deferred-spawn sender, and the workers drop theirs as they
+    // process Shutdown — so the collector exits on disconnect instead
+    // of idling out.
+    drop(comp_tx);
+    if let Some(workers) = &sleep_workers {
+        workers.close();
+    }
+    let out = collector.join().expect("collector thread");
+    if let Some(workers) = &sleep_workers {
+        workers.join_all();
+    }
+    for h in pjrt_handles {
         let _ = h.join();
     }
-    Ok(report)
+
+    let wall_secs = (out.last.saturating_sub(out.first)).as_secs_f64().max(1e-9);
+    let good = out.completed - out.violations;
+    Ok(ServeReport {
+        submitted,
+        completed: out.completed,
+        dropped: out.dropped,
+        violations: out.violations,
+        goodput: good as f64 / wall_secs,
+        p50_latency_ms: percentile(&out.latencies, 50.0),
+        p99_latency_ms: percentile(&out.latencies, 99.0),
+        median_batch: out.batch_hist.median(),
+        mean_batch: out.batch_hist.mean(),
+        batches: out.batches,
+        wall_secs,
+        grants: shard_stats.grants,
+        mis_steers: shard_stats.mis_steers,
+        timeline,
+    }
+    .tap_duration(cfg.duration))
 }
 
-fn collect(comp_rx: Receiver<Completion>, cfg: &ServeConfig, submitted: u64) -> ServeReport {
-    let mut latencies = Vec::new();
-    let mut batch_hist = Histogram::new();
-    let mut completed = 0u64;
-    let mut dropped = 0u64;
-    let mut violations = 0u64;
-    let mut batches = 0u64;
-    let mut first = Micros::MAX;
-    let mut last = Micros::ZERO;
-    while let Ok(c) = comp_rx.recv_timeout(Duration::from_millis(500)) {
+fn collect(comp_rx: Receiver<Completion>, counts: Arc<Mutex<LiveCounts>>) -> CollectorOut {
+    let mut out = CollectorOut {
+        latencies: Vec::new(),
+        batch_hist: Histogram::new(),
+        completed: 0,
+        dropped: 0,
+        violations: 0,
+        batches: 0,
+        first: Micros::MAX,
+        last: Micros::ZERO,
+    };
+    loop {
+        // The collector runs for the whole serve call, so a quiet
+        // stretch (low offered rate, a zero-rate phase) must NOT end
+        // collection — only channel disconnect does. The shutdown path
+        // guarantees disconnect: `serve` drops its sender, the epoch
+        // thread holds none, `SleepWorkers::close()` releases the
+        // deferred-spawn clone, and workers/executors drop theirs as
+        // they process Shutdown.
+        let c = match comp_rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(c) => c,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
         match c {
             Completion::Batch {
+                gpu,
                 requests,
                 start,
                 end,
                 ..
             } => {
-                batches += 1;
-                batch_hist.add_n(requests.len(), requests.len() as u64);
-                first = first.min(start);
-                last = last.max(end);
-                for r in requests {
-                    completed += 1;
-                    latencies.push((end.saturating_sub(r.arrival)).as_millis_f64());
+                out.batches += 1;
+                out.batch_hist.add_n(requests.len(), requests.len() as u64);
+                out.first = out.first.min(start);
+                out.last = out.last.max(end);
+                let mut good = 0u64;
+                let mut bad = 0u64;
+                for r in &requests {
+                    out.completed += 1;
+                    out.latencies.push((end.saturating_sub(r.arrival)).as_millis_f64());
                     if end > r.deadline {
-                        violations += 1;
+                        out.violations += 1;
+                        bad += 1;
+                    } else {
+                        good += 1;
                     }
                 }
+                let mut c = counts.lock().unwrap();
+                c.good += good;
+                c.bad += bad;
+                if let Some(b) = c.busy_us.get_mut(gpu.0 as usize) {
+                    *b += end.saturating_sub(start).0;
+                }
             }
-            Completion::Dropped(rs) => dropped += rs.len() as u64,
+            Completion::Dropped(rs) => {
+                out.dropped += rs.len() as u64;
+                counts.lock().unwrap().bad += rs.len() as u64;
+            }
         }
     }
-    let wall_secs = (last.saturating_sub(first)).as_secs_f64().max(1e-9);
-    let good = completed - violations;
-    ServeReport {
-        submitted,
-        completed,
-        dropped,
-        violations,
-        goodput: good as f64 / wall_secs,
-        p50_latency_ms: percentile(&latencies, 50.0),
-        p99_latency_ms: percentile(&latencies, 99.0),
-        median_batch: batch_hist.median(),
-        mean_batch: batch_hist.mean(),
-        batches,
-        wall_secs,
-    }
-    .tap_duration(cfg.duration)
+    out
 }
 
 impl ServeReport {
@@ -367,10 +637,13 @@ mod tests {
         let report = serve(ServeConfig {
             models,
             num_gpus: 2,
+            initial_gpus: None,
             rank_shards: 2,
             total_rate: 200.0,
+            rate_phases: Vec::new(),
             duration: Duration::from_millis(500),
             backend: BackendKind::Sleep,
+            autoscale: None,
             seed: 5,
         })
         .unwrap();
@@ -388,5 +661,59 @@ mod tests {
             report.bad_fraction()
         );
         assert!(report.p99_latency_ms < 60.0, "p99 {}", report.p99_latency_ms);
+        assert!(report.grants > 0);
+        assert!(report.timeline.is_empty(), "no autoscale, no timeline");
+    }
+
+    /// The §3.5 live wiring end to end: a low→high→low offered-rate
+    /// schedule must make the attached-GPU count rise with the overload
+    /// and fall back in the final trough (Fig 15's load-proportional
+    /// shape), while every batch keeps landing on an attached GPU.
+    #[test]
+    fn autoscale_follows_offered_rate() {
+        // ℓ(b) = 1.0·b + 5.0 ms: one GPU sustains ~700 r/s at deep
+        // batches, so 2 GPUs saturate hard at 2600 r/s.
+        let models = vec![ModelSpec::new("svc", 1.0, 5.0, 60.0)];
+        let report = serve(ServeConfig {
+            models,
+            num_gpus: 6,
+            initial_gpus: Some(2),
+            rank_shards: 2,
+            total_rate: 0.0,
+            rate_phases: vec![(1.0, 150.0), (2.0, 2600.0), (2.0, 120.0)],
+            duration: Duration::from_secs_f64(5.0),
+            backend: BackendKind::Sleep,
+            autoscale: Some(AutoscaleConfig {
+                bad_rate_threshold: 0.05,
+                idle_threshold: 0.30,
+                min_gpus: 1,
+                max_gpus: 6,
+                epoch: Micros::from_millis_f64(400.0),
+            }),
+            seed: 11,
+        })
+        .unwrap();
+        let (first, peak, last) = crate::metrics::timeline_extent(&report.timeline)
+            .expect("autoscale run must log epochs");
+        assert!(
+            peak > 2,
+            "overload phase never grew the cluster: first={first} peak={peak} \
+             last={last} timeline={:?}",
+            report.timeline
+        );
+        assert!(
+            last < peak,
+            "final trough never shrank the cluster: peak={peak} last={last} \
+             timeline={:?}",
+            report.timeline
+        );
+        // The high phase must have actually been served by the grown
+        // cluster (not just dropped wholesale).
+        assert!(
+            report.completed > report.dropped,
+            "completed {} vs dropped {}",
+            report.completed,
+            report.dropped
+        );
     }
 }

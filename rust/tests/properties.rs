@@ -209,6 +209,7 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
         CoordinatorConfig {
             profiles: profiles.clone(),
             num_gpus,
+            initial_gpus: None,
             rank_shards,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
@@ -314,6 +315,204 @@ fn prop_coordinator_no_double_grant() {
                         w[1].at >= prev_busy_until,
                         "shards={rank_shards} gpu={g}: dispatch at {:?} overlaps \
                          previous batch busy until {:?}",
+                        w[1].at,
+                        prev_busy_until
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// One resize event observed during a drive: when the drain of `gpu`
+/// was acked (the GPU became provably idle and retired).
+struct DrainObs {
+    gpu: u32,
+    acked_at: Micros,
+}
+
+/// Like `drive_coordinator`, but resizes the cluster mid-run through
+/// the §3.5 drain/attach protocol: the run starts with only part of
+/// the capacity attached, attaches the rest under load, then drains
+/// from the top while submissions continue. Returns the per-GPU
+/// dispatch observations plus the drain acks.
+fn drive_coordinator_with_resize(
+    rng: &mut symphony::util::rng::Rng,
+    rank_shards: usize,
+) -> (Vec<Vec<ExecObs>>, Vec<DrainObs>) {
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+    use symphony::coordinator::{
+        Completion, Coordinator, CoordinatorConfig, ToBackend,
+    };
+    use symphony::core::profile::LatencyProfile;
+    use symphony::core::types::{GpuId, ModelId, Request, RequestId};
+
+    let n_models = 1 + rng.below(4) as usize;
+    let num_gpus = 2 + rng.below(4) as usize;
+    let initial = 1 + rng.below(num_gpus as u64 - 1) as usize;
+    let profiles: Vec<LatencyProfile> = (0..n_models)
+        .map(|_| LatencyProfile::new(rng.range_f64(0.1, 0.5), rng.range_f64(0.5, 2.0)))
+        .collect();
+    let slos: Vec<Micros> = (0..n_models)
+        .map(|_| Micros::from_millis_f64(rng.range_f64(15.0, 30.0)))
+        .collect();
+
+    let mut backend_txs = Vec::new();
+    let mut backend_rxs = Vec::new();
+    for _ in 0..num_gpus {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        backend_rxs.push(rx);
+    }
+    let (comp_tx, _comp_rx) = channel::<Completion>();
+    let coord = Coordinator::spawn(
+        CoordinatorConfig {
+            profiles: profiles.clone(),
+            num_gpus,
+            initial_gpus: Some(initial),
+            rank_shards,
+            net_bound: Micros::from_millis_f64(1.0),
+            exec_margin: Micros::ZERO,
+        },
+        backend_txs,
+        comp_tx,
+    );
+    let ctl = coord.cluster_ctl();
+    let (ack_tx, ack_rx) = channel::<GpuId>();
+
+    let mut id = 0u64;
+    let mut submit_burst = |rng: &mut symphony::util::rng::Rng| {
+        let burst = 1 + rng.below(8);
+        for _ in 0..burst {
+            let m = rng.below(n_models as u64) as usize;
+            let now = coord.clock.now();
+            coord.submit(Request {
+                id: RequestId(id),
+                model: ModelId(m as u32),
+                arrival: now,
+                deadline: now + slos[m],
+            });
+            id += 1;
+        }
+    };
+
+    // Phase 1: saturate the initially attached prefix.
+    for _ in 0..(6 + rng.below(6)) {
+        submit_burst(rng);
+        std::thread::sleep(Duration::from_millis(1 + rng.below(3)));
+    }
+    // Phase 2: attach the detached headroom under load (the add path).
+    for g in initial..num_gpus {
+        ctl.attach(GpuId(g as u32)).expect("attach");
+        submit_burst(rng);
+        std::thread::sleep(Duration::from_millis(1 + rng.below(3)));
+    }
+    // Phase 3: drain from the top — the consolidation retire order —
+    // while submissions continue (mid-window resizes).
+    let n_drain = 1 + rng.below(num_gpus as u64 - 1) as usize;
+    let mut pending = Vec::new();
+    for g in ((num_gpus - n_drain)..num_gpus).rev() {
+        ctl.drain(GpuId(g as u32), ack_tx.clone()).expect("drain");
+        pending.push(g as u32);
+        submit_burst(rng);
+        std::thread::sleep(Duration::from_millis(1 + rng.below(3)));
+    }
+    // Collect the acks; every drained GPU must eventually retire.
+    let mut drains = Vec::new();
+    for _ in 0..pending.len() {
+        let gpu = ack_rx
+            .recv_timeout(Duration::from_millis(2_000))
+            .expect("drain must ack once in-flight work completes");
+        drains.push(DrainObs {
+            gpu: gpu.0,
+            acked_at: coord.clock.now(),
+        });
+    }
+    // Phase 4: keep the load coming on the shrunken cluster.
+    for _ in 0..(6 + rng.below(6)) {
+        submit_burst(rng);
+        std::thread::sleep(Duration::from_millis(1 + rng.below(3)));
+    }
+    std::thread::sleep(Duration::from_millis(80));
+    coord.shutdown();
+
+    let per_gpu = backend_rxs
+        .into_iter()
+        .map(|rx| {
+            let mut v: Vec<ExecObs> = rx
+                .try_iter()
+                .filter_map(|msg| match msg {
+                    ToBackend::Execute {
+                        model,
+                        requests,
+                        dispatched_at,
+                    } => Some(ExecObs {
+                        n: requests.len() as u32,
+                        at: dispatched_at,
+                        min_deadline: requests
+                            .iter()
+                            .map(|r| r.deadline)
+                            .min()
+                            .unwrap_or(Micros::MAX),
+                        profile: profiles[model.0 as usize],
+                    }),
+                    _ => None,
+                })
+                .collect();
+            v.sort_by_key(|e| e.at);
+            v
+        })
+        .collect();
+    (per_gpu, drains)
+}
+
+/// The §3.5 drain/retire property: once a `Drain(gpu)` is acked the
+/// GPU is retired — no later dispatch may ever name it — and resizing
+/// mid-window never breaks the window invariant (no batch finishes
+/// past its head deadline) or double-books a GPU. Single-rank and
+/// sharded.
+#[test]
+fn prop_no_grant_after_drain_across_resize() {
+    check("drain_retire", 6, |rng| {
+        for rank_shards in [1usize, 3] {
+            let (per_gpu, drains) = drive_coordinator_with_resize(rng, rank_shards);
+            prop_assert!(!drains.is_empty(), "driver always drains something");
+            for d in &drains {
+                for e in &per_gpu[d.gpu as usize] {
+                    prop_assert!(
+                        e.at <= d.acked_at,
+                        "shards={rank_shards} gpu={}: dispatched at {:?}, after \
+                         its drain was acked at {:?}",
+                        d.gpu,
+                        e.at,
+                        d.acked_at
+                    );
+                }
+            }
+            // Resize events must not weaken the schedulability
+            // invariants that hold for a fixed cluster.
+            for (g, execs) in per_gpu.iter().enumerate() {
+                for e in execs {
+                    prop_assert!(e.n > 0, "empty batch dispatched on gpu {g}");
+                    let end = e.at + e.profile.latency(e.n);
+                    prop_assert!(
+                        end <= e.min_deadline,
+                        "shards={rank_shards} gpu={g}: batch of {} at {:?} ends \
+                         {:?} past head deadline {:?} across resize",
+                        e.n,
+                        e.at,
+                        end,
+                        e.min_deadline
+                    );
+                }
+                for w in execs.windows(2) {
+                    let prev_busy_until = w[0].at + w[0].profile.latency(w[0].n);
+                    prop_assert!(
+                        w[1].at >= prev_busy_until,
+                        "shards={rank_shards} gpu={g}: dispatch at {:?} overlaps \
+                         previous batch busy until {:?} across resize",
                         w[1].at,
                         prev_busy_until
                     );

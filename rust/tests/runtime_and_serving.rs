@@ -18,10 +18,13 @@ fn sleep_backend_meets_slo_at_moderate_load() {
     let report = serve(ServeConfig {
         models,
         num_gpus: 3,
+        initial_gpus: None,
         rank_shards: 1,
         total_rate: 300.0,
+        rate_phases: Vec::new(),
         duration: Duration::from_millis(800),
         backend: BackendKind::Sleep,
+        autoscale: None,
         seed: 11,
     })
     .unwrap();
@@ -37,10 +40,13 @@ fn sleep_backend_batches_under_pressure() {
     let report = serve(ServeConfig {
         models,
         num_gpus: 1,
+        initial_gpus: None,
         rank_shards: 1,
         total_rate: 400.0,
+        rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
         backend: BackendKind::Sleep,
+        autoscale: None,
         seed: 3,
     })
     .unwrap();
@@ -103,12 +109,15 @@ fn pjrt_end_to_end_serving() {
     let report = serve(ServeConfig {
         models: vec![model],
         num_gpus: 1,
+        initial_gpus: None,
         rank_shards: 1,
         total_rate: 150.0,
+        rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
         backend: BackendKind::Pjrt {
             artifacts_dir: dir,
         },
+        autoscale: None,
         seed: 9,
     })
     .unwrap();
