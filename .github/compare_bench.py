@@ -1,11 +1,16 @@
 #!/usr/bin/env python3
-"""Compare two BENCH_hotpath.json files and emit GitHub warnings (never
-fail) when a `*_per_sec` metric regresses more than 30% against the
-checked-in baseline. Usage: compare_bench.py <baseline.json> <new.json>.
-Missing or empty baselines are skipped silently (the trajectory starts
-with the first committed run)."""
+"""Compare two bench JSON files (BENCH_hotpath.json, BENCH_frontend.json,
+...) and emit GitHub warnings (never fail) when a `*_per_sec` metric
+regresses more than 30% against the checked-in baseline.
+Usage: compare_bench.py <baseline.json> <new.json>.
+
+An empty or missing baseline is announced explicitly (the trajectory is
+being seeded by this run); metrics present in the new results but absent
+from the baseline — a freshly added bench — are reported as
+informational rather than silently skipped."""
 
 import json
+import os
 import sys
 
 REGRESSION_FRACTION = 0.30
@@ -24,8 +29,12 @@ def main():
         print("usage: compare_bench.py <baseline.json> <new.json>")
         return 0
     base, new = load(sys.argv[1]), load(sys.argv[2])
+    name = os.path.basename(sys.argv[2])
     if not base:
-        print("no baseline bench results; skipping comparison")
+        print(
+            f"no baseline for {name} — seeding: this run's "
+            f"{len(new)} metrics become the comparison base once committed"
+        )
         return 0
     checked = regressed = 0
     for key, old in sorted(base.items()):
@@ -39,10 +48,17 @@ def main():
             regressed += 1
             drop = 100.0 * (1.0 - cur / old)
             print(
-                f"::warning title=bench_hotpath regression::"
+                f"::warning title={name} regression::"
                 f"{key}: {old:.0f} -> {cur:.0f} events/sec (-{drop:.0f}%)"
             )
-    print(f"bench comparison: {checked} metrics checked, {regressed} regressed >30%")
+    fresh = sorted(k for k in new if k.endswith("_per_sec") and k not in base)
+    if fresh:
+        shown = ", ".join(fresh[:8]) + (", ..." if len(fresh) > 8 else "")
+        print(
+            f"{len(fresh)} metrics not in the baseline (informational, "
+            f"no comparison until committed): {shown}"
+        )
+    print(f"bench comparison ({name}): {checked} metrics checked, {regressed} regressed >30%")
     return 0
 
 

@@ -66,12 +66,17 @@ fn main() {
     let report = serve(ServeConfig {
         models,
         num_gpus: gpus,
+        initial_gpus: None,
         rank_shards: 1,
+        ingest_shards: 1,
+        model_workers: None,
         total_rate: rate,
+        rate_phases: Vec::new(),
         duration: Duration::from_secs_f64(secs),
         backend: BackendKind::Pjrt {
             artifacts_dir: dir,
         },
+        autoscale: None,
         seed: 42,
     })
     .expect("serving run");

@@ -1,0 +1,264 @@
+//! `cargo bench --bench bench_frontend` — end-to-end frontend ingest
+//! throughput (§4.2 step ②, the Fig 13-left request-rate claim): how
+//! fast requests travel submit → ingest shard → model worker → rank
+//! shard → dispatch, swept over model count × producer threads × burst
+//! size, with an in-bench before/after probe comparing the seed's
+//! per-request `Coordinator::submit` path against the batched
+//! `IngestHandle::submit_batch` path.
+//!
+//! Two numbers per run:
+//! * `submit_per_sec` — producer-side ingest rate (how fast the
+//!   frontend tier *accepts* work; the number the sharded ingest +
+//!   worker-pool rebuild targets);
+//! * `e2e_per_sec` — submit → fully-accounted rate (every request
+//!   dispatched to a backend sink or dropped by the scheduler). This
+//!   includes the deferred-scheduling dwell (~SLO), so it is a floor,
+//!   not a scheduler ceiling.
+//!
+//! Results print as a table, mirror to `results/bench_frontend.tsv`,
+//! and are written machine-readable to `BENCH_frontend.json` at the
+//! repo root — consumed by CI's regression check
+//! (`.github/compare_bench.py`) next to `BENCH_hotpath.json`.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use symphony::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use symphony::core::profile::LatencyProfile;
+use symphony::core::time::Micros;
+use symphony::core::types::{ModelId, Request, RequestId};
+use symphony::util::table::{banner, Table};
+
+/// Submission mode for one run.
+#[derive(Clone, Copy)]
+enum Mode {
+    /// The seed path: one `Coordinator::submit` per request.
+    PerRequest,
+    /// The batched path: `IngestHandle::submit_batch` every `B`
+    /// requests.
+    Batched(usize),
+}
+
+impl Mode {
+    fn label(&self) -> String {
+        match self {
+            Mode::PerRequest => "per-request".to_string(),
+            Mode::Batched(b) => format!("batch{b}"),
+        }
+    }
+
+    fn key(&self) -> String {
+        match self {
+            Mode::PerRequest => "perreq".to_string(),
+            Mode::Batched(b) => format!("b{b}"),
+        }
+    }
+}
+
+struct RunOut {
+    submit_per_sec: f64,
+    e2e_per_sec: f64,
+}
+
+/// One frontend run: `producers` threads push `n_total` requests
+/// (round-robin over `n_models`) into a live coordinator backed by
+/// counting sinks; done when every request is dispatched or dropped.
+fn frontend_run(n_models: usize, producers: usize, mode: Mode, n_total: u64) -> RunOut {
+    let num_gpus = 32usize;
+    // Tiny ℓ(b) so execution windows never bottleneck the frontend.
+    let profile = LatencyProfile::new(0.02, 0.05);
+    let slo = Micros::from_millis_f64(25.0);
+
+    // Backend sinks: count dispatched requests, discard the batches.
+    let accounted = Arc::new(AtomicU64::new(0));
+    let mut backend_txs = Vec::new();
+    let mut sink_handles = Vec::new();
+    for _ in 0..num_gpus {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        let acc = accounted.clone();
+        sink_handles.push(std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ToBackend::Execute { requests, .. } => {
+                        acc.fetch_add(requests.len() as u64, Ordering::Relaxed);
+                    }
+                    ToBackend::Shutdown => break,
+                }
+            }
+        }));
+    }
+    // Drops also account (scheduler-shed requests are "done" too).
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let comp_handle = {
+        let acc = accounted.clone();
+        std::thread::spawn(move || {
+            while let Ok(c) = comp_rx.recv() {
+                if let Completion::Dropped(rs) = c {
+                    acc.fetch_add(rs.len() as u64, Ordering::Relaxed);
+                }
+            }
+        })
+    };
+
+    let coord = Coordinator::spawn(
+        CoordinatorConfig {
+            profiles: vec![profile; n_models],
+            num_gpus,
+            initial_gpus: None,
+            rank_shards: 4,
+            ingest_shards: producers.clamp(1, 8),
+            model_workers: None,
+            net_bound: Micros::ZERO,
+            exec_margin: Micros::ZERO,
+        },
+        backend_txs.clone(),
+        comp_tx,
+    );
+    let clock = coord.clock;
+    let coord = Arc::new(coord);
+
+    // Producers: each submits its share as fast as the channels accept.
+    let per = n_total / producers as u64;
+    let t0 = Instant::now();
+    let mut feeders = Vec::new();
+    for p in 0..producers as u64 {
+        let coord = coord.clone();
+        let handle = coord.ingest_handle();
+        feeders.push(std::thread::spawn(move || {
+            let mut buf: Vec<Request> = Vec::new();
+            for k in 0..per {
+                let i = p * per + k;
+                let now = clock.now();
+                let r = Request {
+                    id: RequestId(i),
+                    model: ModelId((i % n_models as u64) as u32),
+                    arrival: now,
+                    deadline: now + slo,
+                };
+                match mode {
+                    Mode::PerRequest => coord.submit(r),
+                    Mode::Batched(b) => {
+                        buf.push(r);
+                        if buf.len() >= b {
+                            handle.submit_batch(&buf);
+                            buf.clear();
+                        }
+                    }
+                }
+            }
+            if !buf.is_empty() {
+                handle.submit_batch(&buf);
+            }
+        }));
+    }
+    for f in feeders {
+        let _ = f.join();
+    }
+    let submitted = per * producers as u64;
+    let submit_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Wait until every submitted request is dispatched or dropped.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while accounted.load(Ordering::Relaxed) < submitted && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let e2e_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let got = accounted.load(Ordering::Relaxed);
+    if got < submitted {
+        eprintln!(
+            "warn: only {got}/{submitted} requests accounted before timeout \
+             (m={n_models} p={producers} {})",
+            mode.label()
+        );
+    }
+
+    let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
+    coord.shutdown();
+    for tx in &backend_txs {
+        let _ = tx.send(ToBackend::Shutdown);
+    }
+    for h in sink_handles {
+        let _ = h.join();
+    }
+    let _ = comp_handle.join();
+
+    RunOut {
+        submit_per_sec: submitted as f64 / submit_secs,
+        e2e_per_sec: got as f64 / e2e_secs,
+    }
+}
+
+fn main() {
+    banner("Frontend ingest throughput (submit → dispatch, §4.2)");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    println!("(host has {cores} cores; 32 in-process GPU sinks, 4 rank shards)");
+
+    let n_total = 32_768u64;
+    let mut table = Table::new(vec![
+        "models",
+        "producers",
+        "mode",
+        "submit_per_sec",
+        "e2e_per_sec",
+        "speedup_vs_perreq",
+    ]);
+    let mut json: Vec<(String, f64)> = Vec::new();
+    for &n_models in &[1usize, 16, 256] {
+        for &producers in &[1usize, 4, 16] {
+            // The seed's per-request path is the probe baseline for
+            // this (models × producers) point.
+            let base = frontend_run(n_models, producers, Mode::PerRequest, n_total);
+            let mut emit = |mode: Mode, out: &RunOut, base_submit: f64| {
+                let name = format!("frontend_m{n_models}_p{producers}_{}", mode.key());
+                table.row(vec![
+                    n_models.to_string(),
+                    producers.to_string(),
+                    mode.label(),
+                    format!("{:.0}", out.submit_per_sec),
+                    format!("{:.0}", out.e2e_per_sec),
+                    format!("{:.2}x", out.submit_per_sec / base_submit.max(1.0)),
+                ]);
+                json.push((format!("{name}_submit_per_sec"), out.submit_per_sec));
+                json.push((format!("{name}_e2e_per_sec"), out.e2e_per_sec));
+            };
+            emit(Mode::PerRequest, &base, base.submit_per_sec);
+            let mut best = 0.0f64;
+            for &b in &[1usize, 8, 64] {
+                let out = frontend_run(n_models, producers, Mode::Batched(b), n_total);
+                best = best.max(out.submit_per_sec);
+                emit(Mode::Batched(b), &out, base.submit_per_sec);
+            }
+            // The before/after probe: best batched ingest rate over the
+            // seed's per-request rate at the same sweep point.
+            json.push((
+                format!("frontend_m{n_models}_p{producers}_probe_speedup"),
+                best / base.submit_per_sec.max(1.0),
+            ));
+        }
+    }
+
+    table.emit("bench_frontend");
+    write_json(&json);
+}
+
+/// Hand-rolled JSON (zero registry deps): `{"bench": ..., "results":
+/// {name: value, ...}}` at the repo root, consumed by the CI regression
+/// check (`.github/compare_bench.py`).
+fn write_json(rows: &[(String, f64)]) {
+    let mut s = String::from("{\n  \"bench\": \"bench_frontend\",\n  \"schema\": 1,\n  \"results\": {\n");
+    for (i, (k, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(s, "    \"{k}\": {v:.1}{sep}");
+    }
+    s.push_str("  }\n}\n");
+    match std::fs::write("BENCH_frontend.json", &s) {
+        Ok(()) => println!("wrote BENCH_frontend.json"),
+        Err(e) => eprintln!("warn: could not write BENCH_frontend.json: {e}"),
+    }
+}

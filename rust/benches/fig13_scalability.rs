@@ -4,7 +4,7 @@
 //! and GPUs are in-process objects, backends are drain threads).
 //!
 //! The sweep runs 1/2/4/8 rank shards × offered request rate and
-//! reports requests/s through the ModelThreads, grants/s out of the
+//! reports requests/s through the model-worker pool, grants/s out of the
 //! rank tier, and the p99 grant latency (µs a candidate's window was
 //! open before a GPU was granted). On a multi-core host grants/s
 //! scales with the shard count once a single rank thread saturates;
@@ -32,7 +32,8 @@ struct SweepPoint {
     missteer_per_kgrant: f64,
 }
 
-/// Drive `n_models` ModelThreads for `dur` against a sharded rank tier.
+/// Drive `n_models` models (on the worker pool) for `dur` against a
+/// sharded rank tier.
 /// `rate` is the offered aggregate rate in requests/second; `None`
 /// submits at line rate (as fast as the channels accept).
 fn coordinator_sweep(
@@ -66,6 +67,8 @@ fn coordinator_sweep(
             num_gpus,
             initial_gpus: None,
             rank_shards,
+            ingest_shards: 1,
+            model_workers: None,
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
         },
@@ -119,7 +122,8 @@ fn coordinator_sweep(
     stop.store(true, Ordering::Relaxed);
     let submitted: u64 = feeders.into_iter().map(|f| f.join().unwrap()).sum();
     let coord = Arc::try_unwrap(coord).ok().expect("sole owner");
-    let (processed, stats) = coord.shutdown_stats();
+    let (front, stats) = coord.shutdown_stats();
+    let processed = front.processed;
     for tx in &backend_txs {
         let _ = tx.send(ToBackend::Shutdown);
     }

@@ -195,6 +195,8 @@ mod tests {
                 num_gpus,
                 initial_gpus: Some(2),
                 rank_shards: 2,
+                ingest_shards: 1,
+                model_workers: None,
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
             },
@@ -261,6 +263,8 @@ mod tests {
                 num_gpus: 1,
                 initial_gpus: None,
                 rank_shards: 1,
+                ingest_shards: 1,
+                model_workers: None,
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
             },

@@ -1,0 +1,365 @@
+//! Frontend ingest tier (§4.2 step ②, sharded): `F` ingest shards sit
+//! between the producers (RPC handlers, load generators) and the model
+//! workers. The paper calls request-rate work embarrassingly parallel;
+//! the seed's frontend was the opposite — one heap-allocating mpsc send
+//! per request into one channel per model. An ingest shard drains its
+//! producer inbox in bursts, bins the burst per model into reusable
+//! inline buffers, and forwards **one** [`ToModel::Requests`] message
+//! per model per drain — so a k-request burst costs one channel send
+//! and one candidate recompute per model downstream instead of k of
+//! each (LazyBatching-style amortization of per-request scheduling
+//! work).
+//!
+//! Producers hold an [`IngestHandle`]: a cheap clonable handle pinned
+//! to one shard (clones round-robin across shards, so a fleet of
+//! producer threads spreads the ingest load). Submissions that can no
+//! longer be delivered — the coordinator is shutting down, a shard or
+//! worker died — are **counted**, not silently swallowed; the counter
+//! surfaces through `Coordinator::shutdown_stats` and
+//! `ServeReport::dropped_submits`.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::messages::ToModel;
+use crate::coordinator::MAX_DRAIN;
+use crate::core::types::{ModelId, ReqBurst, Request};
+
+/// Producer → ingest shard.
+#[derive(Debug)]
+pub enum ToIngest {
+    /// A single request ([`IngestHandle::submit`]).
+    One(Request),
+    /// A producer-side batch, possibly mixed-model
+    /// ([`IngestHandle::submit_batch`]): one channel send for the whole
+    /// batch; the shard re-bins it per model. Boxed for the same
+    /// mpsc-node-size reason as `ToModel::Requests`.
+    Batch(Box<ReqBurst>),
+    Shutdown,
+}
+
+/// One ingest shard: drains producer submissions in bursts and
+/// forwards per-model `ToModel::Requests` bursts.
+pub(crate) struct IngestShard {
+    pub inbox: Receiver<ToIngest>,
+    /// One sender per model (clones of the owning worker's inbox).
+    pub model_txs: Vec<Sender<ToModel>>,
+    /// Shared dropped-submission counter (see module docs).
+    pub dropped: Arc<AtomicU64>,
+}
+
+impl IngestShard {
+    /// Run until `Shutdown` / disconnect. Returns requests forwarded
+    /// plus the inbox, so [`IngestTier::shutdown_join`] can count any
+    /// submission accepted after the final drain instead of letting it
+    /// vanish with the receiver.
+    pub fn run(self) -> (u64, Receiver<ToIngest>) {
+        let IngestShard {
+            inbox,
+            model_txs,
+            dropped,
+        } = self;
+        let n_models = model_txs.len();
+        // Per-model bins, reused across drains: `mem::take` replaces a
+        // shipped bin with a fresh inline (stack-only) burst, so a
+        // steady-state drain with bursts ≤ REQBURST_INLINE per model
+        // never allocates.
+        let mut bins: Vec<ReqBurst> = (0..n_models).map(|_| ReqBurst::new()).collect();
+        let mut touched: Vec<usize> = Vec::new();
+        let mut forwarded = 0u64;
+        let absorb = |r: Request, bins: &mut Vec<ReqBurst>, touched: &mut Vec<usize>| {
+            let mi = r.model.0 as usize;
+            if mi >= n_models {
+                debug_assert!(false, "submission for unknown {:?}", r.model);
+                dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if bins[mi].is_empty() {
+                touched.push(mi);
+            }
+            bins[mi].push(r);
+        };
+        // Absorb one producer message; returns true when it was the
+        // shutdown marker (one code path for the bounded drain and the
+        // post-shutdown sweep).
+        let absorb_msg = |msg: ToIngest, bins: &mut Vec<ReqBurst>, touched: &mut Vec<usize>| {
+            match msg {
+                ToIngest::One(r) => absorb(r, bins, touched),
+                ToIngest::Batch(b) => {
+                    for &r in b.iter() {
+                        absorb(r, bins, touched);
+                    }
+                }
+                ToIngest::Shutdown => return true,
+            }
+            false
+        };
+        let mut stop = false;
+        loop {
+            let Ok(first) = inbox.recv() else { break };
+            // Drain the burst this message heads (bounded by
+            // `MAX_DRAIN` so a sustained backlog cannot starve the
+            // flush)...
+            let mut next = Some(first);
+            let mut absorbed = 0usize;
+            while let Some(msg) = next.take() {
+                if absorb_msg(msg, &mut bins, &mut touched) {
+                    stop = true;
+                    break;
+                }
+                absorbed += 1;
+                if absorbed >= MAX_DRAIN {
+                    break;
+                }
+                match inbox.try_recv() {
+                    Ok(m) => next = Some(m),
+                    Err(TryRecvError::Empty) => {}
+                    Err(TryRecvError::Disconnected) => {
+                        stop = true;
+                        break;
+                    }
+                }
+            }
+            if stop {
+                // Submissions enqueued behind the shutdown marker were
+                // accepted (their send succeeded): drain and forward
+                // them too — the workers shut down strictly after the
+                // ingest tier; anything accepted after this sweep is
+                // recovered and counted by `IngestTier::shutdown_join`.
+                while let Ok(msg) = inbox.try_recv() {
+                    let _ = absorb_msg(msg, &mut bins, &mut touched);
+                }
+            }
+            // ...then forward one burst per touched model.
+            for mi in touched.drain(..) {
+                let burst = std::mem::take(&mut bins[mi]);
+                let n = burst.len() as u64;
+                let msg = ToModel::Requests {
+                    model: ModelId(mi as u32),
+                    burst: Box::new(burst),
+                };
+                if model_txs[mi].send(msg).is_err() {
+                    dropped.fetch_add(n, Ordering::Relaxed);
+                } else {
+                    forwarded += n;
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+        (forwarded, inbox)
+    }
+}
+
+/// Coordinator-side ownership of the spawned ingest shards.
+pub(crate) struct IngestTier {
+    pub txs: Vec<Sender<ToIngest>>,
+    pub handles: Vec<JoinHandle<(u64, Receiver<ToIngest>)>>,
+    /// Round-robin allocator for handing shards to new handles.
+    pub next: Arc<AtomicUsize>,
+    pub dropped: Arc<AtomicU64>,
+}
+
+impl IngestTier {
+    pub fn spawn(
+        shards: usize,
+        model_txs: Vec<Sender<ToModel>>,
+        dropped: Arc<AtomicU64>,
+    ) -> Self {
+        let shards = shards.max(1);
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = std::sync::mpsc::channel::<ToIngest>();
+            txs.push(tx);
+            let shard = IngestShard {
+                inbox: rx,
+                model_txs: model_txs.clone(),
+                dropped: dropped.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ingest-shard-{s}"))
+                    .spawn(move || shard.run())
+                    .expect("spawn ingest shard"),
+            );
+        }
+        IngestTier {
+            txs,
+            handles,
+            next: Arc::new(AtomicUsize::new(0)),
+            dropped,
+        }
+    }
+
+    pub fn handle(&self) -> IngestHandle {
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        IngestHandle {
+            txs: self.txs.clone(),
+            shard,
+            next: self.next.clone(),
+            dropped: self.dropped.clone(),
+        }
+    }
+
+    /// Stop the shards (flushing absorbed submissions) and wait for
+    /// them, so no burst is in flight toward the workers afterwards.
+    /// Submissions that were accepted after a shard's final drain are
+    /// recovered from its returned receiver and counted as dropped —
+    /// the accounting contract survives a shutdown race. Returns the
+    /// total requests the tier forwarded over its lifetime.
+    pub fn shutdown_join(&mut self) -> u64 {
+        for tx in &self.txs {
+            let _ = tx.send(ToIngest::Shutdown);
+        }
+        let mut forwarded = 0u64;
+        for h in self.handles.drain(..) {
+            let Ok((fwd, rx)) = h.join() else { continue };
+            forwarded += fwd;
+            while let Ok(msg) = rx.try_recv() {
+                let n = match msg {
+                    ToIngest::One(_) => 1,
+                    ToIngest::Batch(b) => b.len() as u64,
+                    ToIngest::Shutdown => 0,
+                };
+                self.dropped.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        forwarded
+    }
+}
+
+/// Cheap clonable per-producer submission handle, pinned to one ingest
+/// shard. Cloning assigns the clone the next shard round-robin, so a
+/// pool of producer threads that clones one handle per thread spreads
+/// evenly across the `F` shards.
+pub struct IngestHandle {
+    txs: Vec<Sender<ToIngest>>,
+    shard: usize,
+    next: Arc<AtomicUsize>,
+    dropped: Arc<AtomicU64>,
+}
+
+impl Clone for IngestHandle {
+    fn clone(&self) -> Self {
+        let shard = self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        IngestHandle {
+            txs: self.txs.clone(),
+            shard,
+            next: self.next.clone(),
+            dropped: self.dropped.clone(),
+        }
+    }
+}
+
+impl IngestHandle {
+    /// The ingest shard this handle submits to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Submit one request. Undeliverable submissions are counted (see
+    /// module docs), never silently lost.
+    pub fn submit(&self, r: Request) {
+        if self.txs[self.shard].send(ToIngest::One(r)).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Submit a batch (possibly mixed-model) as **one** channel send;
+    /// the shard re-bins it per model and forwards one burst per model.
+    pub fn submit_batch(&self, reqs: &[Request]) {
+        if reqs.is_empty() {
+            return;
+        }
+        let n = reqs.len() as u64;
+        let msg = ToIngest::Batch(Box::new(ReqBurst::from_slice(reqs)));
+        if self.txs[self.shard].send(msg).is_err() {
+            self.dropped.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::Micros;
+    use crate::core::types::RequestId;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn req(id: u64, model: u32) -> Request {
+        Request {
+            id: RequestId(id),
+            model: ModelId(model),
+            arrival: Micros(0),
+            deadline: Micros(1_000_000),
+        }
+    }
+
+    /// A mixed-model batch is re-binned into one `Requests` burst per
+    /// model, preserving per-model submission order.
+    #[test]
+    fn shard_bins_batch_per_model() {
+        let dropped = Arc::new(AtomicU64::new(0));
+        let (m0_tx, m0_rx) = channel();
+        let (m1_tx, m1_rx) = channel();
+        let tier = IngestTier::spawn(1, vec![m0_tx, m1_tx], dropped.clone());
+        let h = tier.handle();
+        h.submit_batch(&[req(0, 0), req(1, 1), req(2, 0), req(3, 1), req(4, 0)]);
+        let msg = m0_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        match msg {
+            ToModel::Requests { model, burst } => {
+                assert_eq!(model, ModelId(0));
+                let ids: Vec<u64> = burst.iter().map(|r| r.id.0).collect();
+                assert_eq!(ids, vec![0, 2, 4]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let msg = m1_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        match msg {
+            ToModel::Requests { model, burst } => {
+                assert_eq!(model, ModelId(1));
+                assert_eq!(burst.len(), 2);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(dropped.load(Ordering::Relaxed), 0);
+        let mut tier = tier;
+        tier.shutdown_join();
+    }
+
+    /// Submissions toward a dead worker are counted, not swallowed.
+    #[test]
+    fn dead_worker_submissions_are_counted() {
+        let dropped = Arc::new(AtomicU64::new(0));
+        let (m0_tx, m0_rx) = channel::<ToModel>();
+        drop(m0_rx); // the worker died
+        let mut tier = IngestTier::spawn(1, vec![m0_tx], dropped.clone());
+        let h = tier.handle();
+        h.submit(req(0, 0));
+        h.submit_batch(&[req(1, 0), req(2, 0)]);
+        // Give the shard a beat to drain + attempt the forward.
+        std::thread::sleep(Duration::from_millis(50));
+        tier.shutdown_join();
+        assert_eq!(dropped.load(Ordering::Relaxed), 3);
+    }
+
+    /// Handle clones round-robin across shards.
+    #[test]
+    fn handle_clones_spread_across_shards() {
+        let dropped = Arc::new(AtomicU64::new(0));
+        let (m0_tx, _m0_rx) = channel();
+        let mut tier = IngestTier::spawn(3, vec![m0_tx], dropped);
+        let h0 = tier.handle();
+        let h1 = h0.clone();
+        let h2 = h1.clone();
+        let shards: std::collections::BTreeSet<usize> =
+            [h0.shard(), h1.shard(), h2.shard()].into_iter().collect();
+        assert_eq!(shards.len(), 3, "three clones cover three shards");
+        tier.shutdown_join();
+    }
+}

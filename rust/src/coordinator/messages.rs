@@ -1,11 +1,17 @@
 //! Message vocabulary between the coordinator's threads (Figure 18):
-//! ModelThread ⇄ rank shards ⇄ (timers), ModelThread → backend workers,
-//! backend workers → completion collector.
+//! ingest shards → model workers, model workers ⇄ rank shards,
+//! model workers → backend workers, backend workers → completion
+//! collector.
+//!
+//! With the [`crate::coordinator::model_thread::ModelWorkerPool`], one
+//! worker thread multiplexes the state of many models, so every
+//! worker-bound message is addressed with its `ModelId` (the per-model
+//! channel that used to imply it is gone).
 
 use std::sync::mpsc::Sender;
 
 use crate::core::time::Micros;
-use crate::core::types::{GpuId, ModelId, Request};
+use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
 
 /// A candidate's schedulable window as registered with a rank shard
 /// (`inform_candidate`). `PartialEq` lets the [`crate::coordinator::router::RankRouter`]
@@ -17,31 +23,49 @@ pub struct CandWindow {
     pub size: u32,
 }
 
-/// Rank shard / frontend → ModelThread.
+/// Rank shard / frontend → model worker.
+///
+/// `Requests` carries its burst **boxed**: an mpsc node is sized for
+/// the whole enum, so an inline burst (~0.5 kB) would tax every
+/// per-request `Request` and every batch-rate `Granted`/`Revalidate`/
+/// `Overflow` send with a 13× node — the exact hot path this tier
+/// optimizes. The box costs one allocation per burst, amortized over
+/// its k requests.
 #[derive(Debug)]
 pub enum ToModel {
-    /// A new inference request for this model (frontend → MT, step ②).
+    /// A single new inference request (frontend → worker, step ②);
+    /// routed by `Request::model`.
     Request(Request),
-    /// "GPU Granted" (rank shard → MT): finalize the batch and dispatch
-    /// it to `gpu` immediately (§4.2).
-    Granted { gpu: GpuId },
-    /// The rank shard discarded this model's candidate (its window
-    /// expired un-granted); recompute and re-register.
-    Revalidate,
+    /// A coalesced burst of requests, all for `model` (ingest shard or
+    /// `submit_batch` → worker): one channel send per burst per model
+    /// instead of one heap-node send per request, and the worker's
+    /// latest-wins drain pays one candidate recompute for the whole
+    /// burst.
+    Requests { model: ModelId, burst: Box<ReqBurst> },
+    /// "GPU Granted" (rank shard → worker): finalize `model`'s batch
+    /// and dispatch it to `gpu` immediately (§4.2).
+    Granted { model: ModelId, gpu: GpuId },
+    /// The rank shard discarded `model`'s candidate (its window expired
+    /// un-granted); recompute and re-register.
+    Revalidate { model: ModelId },
     /// The registered shard has no free GPU, but shard `to_shard`
-    /// advertises spare capacity: re-register the candidate there.
-    /// `seq` echoes the registration this verdict applies to; the
-    /// ModelThread ignores it if the candidate has been replaced since.
-    Overflow { to_shard: usize, seq: u64 },
+    /// advertises spare capacity: re-register `model`'s candidate
+    /// there. `seq` echoes the registration this verdict applies to;
+    /// the worker ignores it if the candidate has been replaced since.
+    Overflow {
+        model: ModelId,
+        to_shard: usize,
+        seq: u64,
+    },
     Shutdown,
 }
 
-/// ModelThread → rank shard.
+/// Model worker → rank shard.
 #[derive(Debug)]
 pub enum ToRank {
     /// Register / replace / clear this model's candidate.
     ///
-    /// `seq` is the ModelThread's monotone registration counter (echoed
+    /// `seq` is the model worker's monotone registration counter (echoed
     /// back in [`ToModel::Overflow`] so stale verdicts are detectable);
     /// `hops` counts overflow re-registrations of this logical
     /// candidate — a shard parks rather than re-steers once `hops`
@@ -73,28 +97,36 @@ pub enum ToRank {
     Shutdown,
 }
 
-/// ModelThread → backend worker (step ④: batch metadata to the backend,
-/// which in the paper then RDMA-reads inputs from frontends ⑤).
+/// Model worker → backend worker (step ④: batch metadata to the
+/// backend, which in the paper then RDMA-reads inputs from frontends
+/// ⑤). The batch rides a [`ReqBurst`], popped straight off the worker's
+/// queue — allocation-free for batches ≤ `REQBURST_INLINE`.
+/// Unlike `ToModel`, every non-`Shutdown` message here carries a batch
+/// and the channel is batch-rate, so the burst stays inline
+/// (allocation-free ≤ `REQBURST_INLINE`) — hence the deliberate
+/// variant-size asymmetry.
+#[allow(clippy::large_enum_variant)]
 #[derive(Debug)]
 pub enum ToBackend {
     Execute {
         model: ModelId,
-        requests: Vec<Request>,
+        requests: ReqBurst,
         dispatched_at: Micros,
     },
     Shutdown,
 }
 
-/// Backend / ModelThread → metrics collector.
+/// Backend / model worker → metrics collector.
+#[allow(clippy::large_enum_variant)] // batch-rate channel, inline by design — see ToBackend
 #[derive(Debug)]
 pub enum Completion {
     Batch {
         gpu: GpuId,
         model: ModelId,
-        requests: Vec<Request>,
+        requests: ReqBurst,
         dispatched_at: Micros,
         start: Micros,
         end: Micros,
     },
-    Dropped(Vec<Request>),
+    Dropped(ReqBurst),
 }

@@ -1,32 +1,65 @@
-//! The multithreaded centralized scheduler (§4.2, Fig 18): independent
-//! **ModelThreads** (request-rate work, embarrassingly parallel) and
-//! `R` **rank shards** (batch-rate matchmaking, each owning a
-//! contiguous GPU id range) — the architecture that lets Symphony's
-//! scheduler process millions of requests per second and coordinate
-//! thousands of GPUs (Fig 13 left). `rank_shards = 1` is exactly the
-//! paper's single-RankThread configuration.
+//! The multithreaded centralized scheduler (§4.2, Fig 18): a sharded
+//! frontend ingest tier, a **ModelWorkerPool** doing the request-rate
+//! work (embarrassingly parallel), and `R` **rank shards** (batch-rate
+//! matchmaking, each owning a contiguous GPU id range) — the
+//! architecture that lets Symphony's scheduler process millions of
+//! requests per second and coordinate thousands of GPUs (Fig 13 left).
+//! `rank_shards = 1` is exactly the paper's single-RankThread
+//! configuration.
+//!
+//! Topology (`F` ingest shards, `W` model workers, `R` rank shards):
+//!
+//! ```text
+//!  producers ─ IngestHandle ──▶ ingest shard 0..F     (submit_batch:
+//!     (submit / submit_batch)   │  burst drain,        one send per
+//!                               │  bin per model       producer batch)
+//!                               ▼  ToModel::Requests (1 send/model/drain)
+//!  ┌─────────────── ModelWorkerPool: W threads ────────────────┐
+//!  │ worker w owns models {m : m % W == w}: queue, candidate,  │
+//!  │ RankRouter; latest-wins drain ⇒ 1 recompute + 1 shard     │
+//!  │ registration per model per drain                          │
+//!  └──┬────────────────────────────────────────────▲───────────┘
+//!     │ ToRank::{Candidate, GpuBusyUntil}          │ ToModel::{Granted,
+//!     ▼                                            │ Revalidate, Overflow}
+//!  rank shard 0..R  (GPU range  [R·g/num_gpus], free/busy timers,
+//!     │              matchmaking, FreeHints overflow steering)
+//!     ▼ (via worker on Granted)
+//!  backend worker per GPU  ── Completion ──▶ collector
+//! ```
 //!
 //! The coordinator is backend-agnostic: callers supply one `ToBackend`
 //! channel per GPU (real PJRT executors in [`crate::serve`], sleep
 //! emulators, or sinks for scheduler-only benchmarks).
 
 pub mod clock;
+pub mod ingest;
 pub mod messages;
 pub mod model_thread;
 pub mod rank_shard;
 pub mod router;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, SendError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
-use crate::core::types::{GpuId, ModelId, Request};
+use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
 pub use clock::Clock;
+pub use ingest::IngestHandle;
+use ingest::IngestTier;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
-use model_thread::ModelThread;
+pub use model_thread::{ModelWorkerPool, WorkerStats};
 pub use rank_shard::{RankShard, ShardStats};
 pub use router::{FreeHints, RankRouter, ShardTopology};
+
+/// Messages a worker or ingest shard absorbs per inbox drain before
+/// its flush runs. Without a cap, producers that keep an inbox
+/// non-empty (line-rate feeders) would defer the flush — and with it
+/// candidate registration / burst forwarding — indefinitely. 256 keeps
+/// the per-burst amortization while bounding that latency.
+pub(crate) const MAX_DRAIN: usize = 256;
 
 /// Configuration of a running coordinator.
 #[derive(Clone, Debug)]
@@ -43,20 +76,49 @@ pub struct CoordinatorConfig {
     /// Rank shards (clamped to `1..=num_gpus`); 1 = the paper's single
     /// RankThread.
     pub rank_shards: usize,
+    /// Frontend ingest shards (clamped to ≥ 1): producer-side
+    /// submission fan-in, drained in bursts and forwarded per model.
+    pub ingest_shards: usize,
+    /// Model-worker threads multiplexing the per-model scheduling state
+    /// (`None` = `min(models, available_parallelism)`). The pool keeps
+    /// the OS thread count at `W` regardless of the model count.
+    pub model_workers: Option<usize>,
     /// Network-delay budget subtracted from candidate windows (§5.6).
     pub net_bound: Micros,
     /// Safety margin added to busy estimates sent to the rank shards.
     pub exec_margin: Micros,
 }
 
-/// A live coordinator: rank shards + one ModelThread per model.
+/// What the frontend/worker tier did over a run, returned by
+/// [`Coordinator::shutdown_stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontendStats {
+    /// Requests that entered a model queue.
+    pub processed: u64,
+    /// End-of-drain candidate recomputes across the worker pool: the
+    /// burst-amortization counter (a k-request burst for one model
+    /// costs exactly one).
+    pub flush_recomputes: u64,
+    /// Requests forwarded by the ingest tier (cross-check against
+    /// `processed` − direct-submit traffic, and against
+    /// `dropped_submits`).
+    pub ingest_forwarded: u64,
+    /// Submissions that could not be delivered (a worker or ingest
+    /// shard was already down). The seed silently swallowed these.
+    pub dropped_submits: u64,
+}
+
+/// A live coordinator: ingest shards + model-worker pool + rank shards.
 pub struct Coordinator {
     pub clock: Clock,
     topo: ShardTopology,
+    /// One sender per model (clones of the owning worker's inbox).
     model_txs: Vec<Sender<ToModel>>,
+    pool: Option<ModelWorkerPool>,
+    ingest: IngestTier,
     shard_txs: Vec<Sender<ToRank>>,
-    model_handles: Vec<JoinHandle<u64>>,
     shard_handles: Vec<JoinHandle<ShardStats>>,
+    dropped_submits: Arc<AtomicU64>,
 }
 
 /// Cheap clonable handle for runtime cluster resizing (§3.5 live
@@ -93,7 +155,7 @@ impl ClusterCtl {
 impl Coordinator {
     /// Spawn the scheduler threads. `backends[g]` receives the batches
     /// dispatched to GPU `g`; `completions` receives drop notices from
-    /// ModelThreads (backends send their own batch completions).
+    /// the model workers (backends send their own batch completions).
     pub fn spawn(
         cfg: CoordinatorConfig,
         backends: Vec<Sender<ToBackend>>,
@@ -107,19 +169,35 @@ impl Coordinator {
         // The attached set is always the id prefix `0..active_end`.
         let active_end = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus) as u32;
 
-        let mut model_txs = Vec::new();
-        let mut model_rx_store = Vec::new();
-        for _ in 0..cfg.profiles.len() {
-            let (tx, rx) = channel::<ToModel>();
-            model_txs.push(tx);
-            model_rx_store.push(rx);
-        }
-
+        // Rank-shard channels exist before the worker pool spawns (the
+        // workers hold the senders); the shard threads start after the
+        // pool so they can hold the per-model worker senders.
         let mut shard_txs = Vec::new();
-        let mut shard_handles = Vec::new();
-        for s in 0..shards {
+        let mut shard_rx_store = Vec::new();
+        for _ in 0..shards {
             let (tx, rx) = channel::<ToRank>();
             shard_txs.push(tx);
+            shard_rx_store.push(rx);
+        }
+
+        let workers = cfg
+            .model_workers
+            .unwrap_or_else(|| ModelWorkerPool::default_workers(cfg.profiles.len()));
+        let pool = ModelWorkerPool::spawn(
+            &cfg.profiles,
+            workers,
+            clock,
+            &topo,
+            &shard_txs,
+            &backends,
+            &completions,
+            cfg.net_bound,
+            cfg.exec_margin,
+        );
+        let model_txs = pool.model_txs();
+
+        let mut shard_handles = Vec::new();
+        for (s, rx) in shard_rx_store.into_iter().enumerate() {
             let range = topo.range(s);
             let shard = RankShard {
                 clock,
@@ -138,34 +216,22 @@ impl Coordinator {
             );
         }
 
-        let mut model_handles = Vec::new();
-        for (i, rx) in model_rx_store.into_iter().enumerate() {
-            let mt = ModelThread {
-                model: ModelId(i as u32),
-                profile: cfg.profiles[i],
-                clock,
-                inbox: rx,
-                router: RankRouter::new(topo.clone(), shard_txs.clone(), ModelId(i as u32)),
-                backends: backends.clone(),
-                completions: completions.clone(),
-                net_bound: cfg.net_bound,
-                exec_margin: cfg.exec_margin,
-            };
-            model_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("model-thread-{i}"))
-                    .spawn(move || mt.run())
-                    .expect("spawn model thread"),
-            );
-        }
+        let dropped_submits = Arc::new(AtomicU64::new(0));
+        let ingest = IngestTier::spawn(
+            cfg.ingest_shards,
+            model_txs.clone(),
+            dropped_submits.clone(),
+        );
 
         Coordinator {
             clock,
             topo,
             model_txs,
+            pool: Some(pool),
+            ingest,
             shard_txs,
-            model_handles,
             shard_handles,
+            dropped_submits,
         }
     }
 
@@ -178,10 +244,58 @@ impl Coordinator {
         }
     }
 
+    /// A producer-side submission handle routed through the ingest
+    /// shards (each call / clone round-robins to the next shard).
+    pub fn ingest_handle(&self) -> IngestHandle {
+        self.ingest.handle()
+    }
+
+    /// Model-worker threads the pool runs on.
+    pub fn num_model_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.num_workers())
+    }
+
+    /// Submissions dropped so far (undeliverable — see
+    /// [`FrontendStats::dropped_submits`]).
+    pub fn dropped_submits(&self) -> u64 {
+        self.dropped_submits.load(Ordering::Relaxed)
+    }
+
     /// Submit a request (frontend step ②). Arrival/deadline must be on
     /// this coordinator's clock.
     pub fn submit(&self, r: Request) {
-        let _ = self.model_txs[r.model.0 as usize].send(ToModel::Request(r));
+        if self.model_txs[r.model.0 as usize]
+            .send(ToModel::Request(r))
+            .is_err()
+        {
+            self.dropped_submits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Submit a batch: sorted by model in place (stable, so per-model
+    /// submission order is preserved), then forwarded as **one**
+    /// [`ToModel::Requests`] burst per model — one channel send and one
+    /// downstream candidate recompute per model instead of one per
+    /// request.
+    pub fn submit_batch(&self, reqs: &mut [Request]) {
+        reqs.sort_by_key(|r| r.model);
+        let mut i = 0;
+        while i < reqs.len() {
+            let model = reqs[i].model;
+            let mut j = i + 1;
+            while j < reqs.len() && reqs[j].model == model {
+                j += 1;
+            }
+            let burst = Box::new(ReqBurst::from_slice(&reqs[i..j]));
+            if self.model_txs[model.0 as usize]
+                .send(ToModel::Requests { model, burst })
+                .is_err()
+            {
+                self.dropped_submits
+                    .fetch_add((j - i) as u64, Ordering::Relaxed);
+            }
+            i = j;
+        }
     }
 
     /// Convenience: stamp arrival = now, deadline = now + slo.
@@ -197,21 +311,21 @@ impl Coordinator {
 
     /// Stop all threads; returns (requests processed, grants issued).
     pub fn shutdown(self) -> (u64, u64) {
-        let (processed, stats) = self.shutdown_stats();
-        (processed, stats.grants)
+        let (front, stats) = self.shutdown_stats();
+        (front.processed, stats.grants)
     }
 
-    /// Stop all threads; returns requests processed plus the merged
-    /// per-shard grant statistics (Fig 13 left reporting).
-    pub fn shutdown_stats(mut self) -> (u64, ShardStats) {
-        for tx in &self.model_txs {
-            let _ = tx.send(ToModel::Shutdown);
-        }
-        let processed: u64 = self
-            .model_handles
-            .drain(..)
-            .map(|h| h.join().unwrap_or(0))
-            .sum();
+    /// Stop all threads; returns the frontend/worker statistics plus
+    /// the merged per-shard grant statistics (Fig 13 left reporting).
+    pub fn shutdown_stats(mut self) -> (FrontendStats, ShardStats) {
+        // Ingest first and joined: any burst they absorbed is in a
+        // worker inbox before the workers see Shutdown.
+        let ingest_forwarded = self.ingest.shutdown_join();
+        let worker_stats = self
+            .pool
+            .take()
+            .map(ModelWorkerPool::shutdown_join)
+            .unwrap_or_default();
         for tx in &self.shard_txs {
             let _ = tx.send(ToRank::Shutdown);
         }
@@ -221,7 +335,13 @@ impl Coordinator {
                 stats.merge(&s);
             }
         }
-        (processed, stats)
+        let front = FrontendStats {
+            processed: worker_stats.processed,
+            flush_recomputes: worker_stats.flush_recomputes,
+            ingest_forwarded,
+            dropped_submits: self.dropped_submits.load(Ordering::Relaxed),
+        };
+        (front, stats)
     }
 }
 
@@ -230,6 +350,19 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
     use std::time::Duration;
+
+    fn cfg(profiles: Vec<LatencyProfile>, num_gpus: usize, rank_shards: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            profiles,
+            num_gpus,
+            initial_gpus: None,
+            rank_shards,
+            ingest_shards: 1,
+            model_workers: None,
+            net_bound: Micros::from_millis_f64(2.0),
+            exec_margin: Micros::from_millis_f64(0.5),
+        }
+    }
 
     /// End-to-end through real threads: submit a burst, expect the
     /// deferred window to group it into one large batch. ℓ is ms-scale
@@ -240,18 +373,7 @@ mod tests {
         let profile = LatencyProfile::new(1.0, 5.0);
         let (backend_tx, backend_rx) = channel::<ToBackend>();
         let (comp_tx, _comp_rx) = channel::<Completion>();
-        let coord = Coordinator::spawn(
-            CoordinatorConfig {
-                profiles: vec![profile],
-                num_gpus: 1,
-                initial_gpus: None,
-                rank_shards: 1,
-                net_bound: Micros::from_millis_f64(2.0),
-                exec_margin: Micros::from_millis_f64(0.5),
-            },
-            vec![backend_tx],
-            comp_tx,
-        );
+        let coord = Coordinator::spawn(cfg(vec![profile], 1, 1), vec![backend_tx], comp_tx);
         for i in 0..8 {
             coord.submit_now(i, ModelId(0), Micros::from_millis_f64(100.0));
         }
@@ -273,6 +395,39 @@ mod tests {
         assert!(grants >= 1);
     }
 
+    /// Same burst submitted through `submit_batch`: one channel send,
+    /// one downstream recompute, same batching outcome.
+    #[test]
+    fn coordinator_batches_a_submit_batch() {
+        let profile = LatencyProfile::new(1.0, 5.0);
+        let (backend_tx, backend_rx) = channel::<ToBackend>();
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(cfg(vec![profile], 1, 1), vec![backend_tx], comp_tx);
+        let now = coord.clock.now();
+        let mut batch: Vec<Request> = (0..8)
+            .map(|i| Request {
+                id: crate::core::types::RequestId(i),
+                model: ModelId(0),
+                arrival: now,
+                deadline: now + Micros::from_millis_f64(100.0),
+            })
+            .collect();
+        coord.submit_batch(&mut batch);
+        let msg = backend_rx
+            .recv_timeout(Duration::from_millis(1_000))
+            .expect("batch dispatched");
+        match msg {
+            ToBackend::Execute { requests, .. } => {
+                assert!(requests.len() >= 6, "got {}", requests.len());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let (front, stats) = coord.shutdown_stats();
+        assert_eq!(front.processed, 8);
+        assert_eq!(front.dropped_submits, 0);
+        assert!(stats.grants >= 1);
+    }
+
     /// Two models, one GPU: both get served. The second model's looser
     /// SLO leaves room for its deferred batch after the first model's
     /// batch finishes.
@@ -281,18 +436,7 @@ mod tests {
         let profile = LatencyProfile::new(1.0, 5.0);
         let (backend_tx, backend_rx) = channel::<ToBackend>();
         let (comp_tx, _comp_rx) = channel::<Completion>();
-        let coord = Coordinator::spawn(
-            CoordinatorConfig {
-                profiles: vec![profile, profile],
-                num_gpus: 1,
-                initial_gpus: None,
-                rank_shards: 1,
-                net_bound: Micros::from_millis_f64(2.0),
-                exec_margin: Micros::from_millis_f64(0.5),
-            },
-            vec![backend_tx],
-            comp_tx,
-        );
+        let coord = Coordinator::spawn(cfg(vec![profile, profile], 1, 1), vec![backend_tx], comp_tx);
         for i in 0..4 {
             coord.submit_now(i, ModelId(0), Micros::from_millis_f64(40.0));
             coord.submit_now(100 + i, ModelId(1), Micros::from_millis_f64(100.0));
@@ -312,6 +456,7 @@ mod tests {
 
     /// Sharded coordinator: four models across two shards, all served,
     /// every request dispatched exactly once across the GPU channels.
+    /// With `model_workers = 2` the four models share two pool threads.
     #[test]
     fn sharded_coordinator_serves_all_models() {
         let profile = LatencyProfile::new(0.5, 2.0);
@@ -323,18 +468,10 @@ mod tests {
             backend_rxs.push(rx);
         }
         let (comp_tx, _comp_rx) = channel::<Completion>();
-        let coord = Coordinator::spawn(
-            CoordinatorConfig {
-                profiles: vec![profile; 4],
-                num_gpus: 4,
-                initial_gpus: None,
-                rank_shards: 2,
-                net_bound: Micros::from_millis_f64(2.0),
-                exec_margin: Micros::from_millis_f64(0.5),
-            },
-            backend_txs,
-            comp_tx,
-        );
+        let mut c = cfg(vec![profile; 4], 4, 2);
+        c.model_workers = Some(2);
+        let coord = Coordinator::spawn(c, backend_txs, comp_tx);
+        assert_eq!(coord.num_model_workers(), 2);
         for m in 0..4u32 {
             for i in 0..6 {
                 coord.submit_now(

@@ -1,172 +1,409 @@
-//! ModelThread (§4.2, Fig 18): one thread per model. "It accesses only
-//! model-local information and updates the candidate. The candidate is
-//! then sent to the RankThread." On "GPU Granted" it finalizes the batch
-//! and sends it to the backend immediately.
+//! ModelWorkerPool (§4.2, Fig 18, multiplexed): `W` worker threads run
+//! the request-rate half of the scheduler. The paper spawns one
+//! ModelThread per model — "it accesses only model-local information
+//! and updates the candidate" — which is correct but does not survive
+//! contact with 256 models on a 16-core host (256 OS threads thrashing
+//! the run queue). The pool keeps the paper's *isolation* (model state
+//! is still touched by exactly one thread: model `m` lives on worker
+//! `m % W`) while capping the thread count at `W`.
 //!
-//! With the sharded coordinator the ModelThread talks to the rank
-//! shards through a [`RankRouter`]: candidate updates go to whichever
-//! shard currently holds the registration, `Overflow` verdicts migrate
-//! the candidate to a shard with free capacity, and a grant or
-//! revalidation resets the registration to the home shard.
+//! Each worker drains its inbox in bursts, latest-wins style like
+//! `RankShard`'s `InboxBatch`: request arrivals only push the queue and
+//! mark the model dirty; the end-of-drain flush performs **one**
+//! candidate recompute and **one** router registration per dirty model,
+//! so a k-request burst costs 1 recompute instead of k
+//! ([`WorkerStats::flush_recomputes`] counts exactly these). Grant /
+//! revalidate / overflow messages are batch-rate and handled inline at
+//! their position in the stream — on "GPU Granted" the worker finalizes
+//! the batch and sends it to the backend immediately, as in the paper.
+//!
+//! Like the single-model thread before it, a worker talks to the rank
+//! shards through one [`RankRouter`] per owned model: candidate updates
+//! go to whichever shard currently holds the registration, `Overflow`
+//! verdicts migrate the candidate to a shard with free capacity, and a
+//! grant or revalidation resets the registration to the home shard.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::coordinator::MAX_DRAIN;
 
 use crate::coordinator::clock::Clock;
-use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel};
-use crate::coordinator::router::RankRouter;
+use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
+use crate::coordinator::router::{RankRouter, ShardTopology};
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
-use crate::core::types::{ModelId, Request};
+use crate::core::types::{ModelId, ReqBurst, Request};
 
-pub struct ModelThread {
-    pub model: ModelId,
-    pub profile: LatencyProfile,
-    pub clock: Clock,
-    pub inbox: Receiver<ToModel>,
-    /// Routing handle to the rank shards.
-    pub router: RankRouter,
-    /// One channel per GPU backend worker.
-    pub backends: Vec<Sender<ToBackend>>,
-    pub completions: Sender<Completion>,
-    /// Network-delay budget (§5.6).
-    pub net_bound: Micros,
-    /// Dispatch-overhead margin added to the busy estimate sent to the
-    /// rank shard (keeps real execution from overrunning its slot).
-    pub exec_margin: Micros,
+/// What one worker did over its lifetime; merged at shutdown into
+/// [`crate::coordinator::FrontendStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    /// Requests that entered a model queue.
+    pub processed: u64,
+    /// Candidate recomputes performed by the end-of-drain flush — the
+    /// burst-amortization counter: a k-request burst for one model adds
+    /// exactly 1 (the grant/revalidate/overflow paths recompute inline
+    /// and are not counted here).
+    pub flush_recomputes: u64,
 }
 
-impl ModelThread {
-    /// Run until `Shutdown`. Returns the number of requests processed.
-    pub fn run(self) -> u64 {
-        let ModelThread {
-            model,
-            profile,
-            clock,
-            inbox,
-            mut router,
-            backends,
-            completions,
-            net_bound,
-            exec_margin,
-        } = self;
-        // Track requests by id so drops can report full `Request`s.
-        let mut queue = TrackingQueue::new();
-        let mut processed = 0u64;
-        // Overflow migrations of the current logical candidate.
-        let mut hops = 0u32;
+impl WorkerStats {
+    pub fn merge(&mut self, other: &WorkerStats) {
+        self.processed += other.processed;
+        self.flush_recomputes += other.flush_recomputes;
+    }
+}
 
-        let compute = |queue: &mut TrackingQueue,
-                       completions: &Sender<Completion>,
-                       now: Micros|
-         -> Option<CandWindow> {
-            let (cand, dropped) = queue.candidate(&profile, now, net_bound);
-            if !dropped.is_empty() {
-                let _ = completions.send(Completion::Dropped(dropped));
+/// Per-model scheduling state, owned by exactly one worker.
+struct ModelSlot {
+    model: ModelId,
+    profile: LatencyProfile,
+    queue: TrackingQueue,
+    router: RankRouter,
+    /// Overflow migrations of the current logical candidate.
+    hops: u32,
+    /// Queued work changed since the last registration; the flush will
+    /// recompute + register once.
+    dirty: bool,
+}
+
+enum Flow {
+    Go,
+    Stop,
+}
+
+/// One of the `W` pool threads: multiplexes the slots of models
+/// `worker, worker + W, worker + 2W, ...`.
+pub struct ModelWorker {
+    worker: usize,
+    num_workers: usize,
+    clock: Clock,
+    inbox: Receiver<ToModel>,
+    slots: Vec<ModelSlot>,
+    backends: Vec<Sender<ToBackend>>,
+    completions: Sender<Completion>,
+    net_bound: Micros,
+    exec_margin: Micros,
+}
+
+impl ModelWorker {
+    #[inline]
+    fn slot_of(&self, m: ModelId) -> usize {
+        debug_assert_eq!(m.0 as usize % self.num_workers, self.worker, "misrouted {m:?}");
+        m.0 as usize / self.num_workers
+    }
+
+    /// Run until `Shutdown` / disconnect. Returns the worker's stats.
+    pub fn run(mut self) -> WorkerStats {
+        let mut stats = WorkerStats::default();
+        // Slot indices touched by the current drain (flag-deduped).
+        let mut dirty: Vec<usize> = Vec::new();
+        // Reusable drop scratch: `candidate` pushes expired heads here,
+        // `mem::take` ships them allocation-free when non-empty.
+        let mut dropped = ReqBurst::new();
+        'outer: loop {
+            let Ok(first) = self.inbox.recv() else { break };
+            // Drain the burst this message heads (bounded by
+            // `MAX_DRAIN` so a sustained backlog cannot starve the
+            // flush), then flush once.
+            let mut next = Some(first);
+            let mut absorbed = 0usize;
+            while let Some(msg) = next.take() {
+                if let Flow::Stop = self.handle(msg, &mut dirty, &mut dropped, &mut stats) {
+                    break 'outer;
+                }
+                absorbed += 1;
+                if absorbed >= MAX_DRAIN {
+                    break;
+                }
+                match self.inbox.try_recv() {
+                    Ok(m) => next = Some(m),
+                    Err(TryRecvError::Empty) => {}
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
             }
-            cand
-        };
-
-        while let Ok(msg) = inbox.recv() {
-            match msg {
-                ToModel::Request(r) => {
-                    processed += 1;
-                    queue.push(r);
-                    let cand = compute(&mut queue, &completions, clock.now());
-                    // An emptied queue ends the logical candidate: reset
-                    // the migration budget so the next one starts fresh
-                    // at the home shard instead of inheriting exhausted
-                    // hops on a stale overflow shard.
-                    if cand.is_none() {
-                        hops = 0;
-                        if router.register_home(None).is_err() {
-                            break;
-                        }
-                        continue;
+            // Flush: one candidate recompute + one registration per
+            // model with new work, no matter how many requests the
+            // drain absorbed for it.
+            for si in dirty.drain(..) {
+                if !self.slots[si].dirty {
+                    // A grant/revalidate/overflow later in the drain
+                    // already registered the post-recompute state.
+                    continue;
+                }
+                self.slots[si].dirty = false;
+                stats.flush_recomputes += 1;
+                let now = self.clock.now();
+                let cand = self.compute(si, now, &mut dropped);
+                let slot = &mut self.slots[si];
+                if cand.is_none() {
+                    // An emptied queue ends the logical candidate:
+                    // reset the migration budget so the next one starts
+                    // fresh at the home shard.
+                    slot.hops = 0;
+                    if slot.router.register_home(None).is_err() {
+                        break 'outer;
                     }
-                    // Replace in place: a steered candidate stays at its
-                    // current shard (re-homing on every request would
+                } else if slot.router.register_current(cand, slot.hops).is_err() {
+                    // Replace in place: a steered candidate stays at
+                    // its current shard (re-homing on every burst would
                     // thrash under sustained overflow).
-                    if router.register_current(cand, hops).is_err() {
-                        break;
-                    }
+                    break 'outer;
                 }
-                ToModel::Granted { gpu } => {
-                    // The shard consumed the registration at grant time:
-                    // the router must not coalesce the next one away.
-                    router.invalidate_last_sent();
-                    let now = clock.now();
-                    let cand = compute(&mut queue, &completions, now);
-                    if let Some(c) = cand {
-                        let batch = queue.take(c.size as usize);
-                        let busy_until = now + profile.latency(c.size) + exec_margin;
-                        let _ = backends[gpu.0 as usize].send(ToBackend::Execute {
-                            model,
-                            requests: batch,
-                            dispatched_at: now,
-                        });
-                        let _ = router.gpu_busy_until(gpu, busy_until);
-                    } else {
-                        // Nothing left to run; hand the GPU back as free.
-                        let _ = router.gpu_busy_until(gpu, now);
-                    }
-                    // Register the next candidate — a fresh logical
-                    // candidate, so it starts back at the home shard.
-                    hops = 0;
-                    let cand = compute(&mut queue, &completions, clock.now());
-                    if router.register_home(cand).is_err() {
-                        break;
-                    }
-                }
-                ToModel::Revalidate => {
-                    // Expiry revalidation: the shard dropped the
-                    // registration before sending this.
-                    router.invalidate_last_sent();
-                    hops = 0;
-                    let cand = compute(&mut queue, &completions, clock.now());
-                    if router.register_home(cand).is_err() {
-                        break;
-                    }
-                }
-                ToModel::Overflow { to_shard, seq } => {
-                    // Stale verdicts (the candidate was replaced since
-                    // that registration) are ignored.
-                    if !router.overflow_is_current(seq) {
-                        continue;
-                    }
-                    // The steering shard unregistered the candidate
-                    // before sending the verdict.
-                    router.invalidate_last_sent();
-                    let cand = compute(&mut queue, &completions, clock.now());
-                    // The recompute can empty the queue: that ends the
-                    // logical candidate, so reset the migration budget
-                    // and re-home (same invariant as the Request arm).
-                    if cand.is_none() {
-                        hops = 0;
-                        if router.register_home(None).is_err() {
-                            break;
-                        }
-                        continue;
-                    }
-                    hops += 1;
-                    if router.register_overflow(to_shard, cand, hops).is_err() {
-                        break;
-                    }
-                }
-                ToModel::Shutdown => break,
             }
         }
-        processed
+        stats
+    }
+
+    /// Drop hopeless heads and compute `slots[si]`'s candidate window,
+    /// reporting drops through the completion channel.
+    fn compute(&mut self, si: usize, now: Micros, dropped: &mut ReqBurst) -> Option<CandWindow> {
+        let slot = &mut self.slots[si];
+        let cand = slot
+            .queue
+            .candidate(&slot.profile, now, self.net_bound, dropped);
+        if !dropped.is_empty() {
+            let _ = self
+                .completions
+                .send(Completion::Dropped(std::mem::take(dropped)));
+        }
+        cand
+    }
+
+    fn mark_dirty(&mut self, si: usize, dirty: &mut Vec<usize>) {
+        if !self.slots[si].dirty {
+            self.slots[si].dirty = true;
+            dirty.push(si);
+        }
+    }
+
+    fn handle(
+        &mut self,
+        msg: ToModel,
+        dirty: &mut Vec<usize>,
+        dropped: &mut ReqBurst,
+        stats: &mut WorkerStats,
+    ) -> Flow {
+        match msg {
+            ToModel::Request(r) => {
+                stats.processed += 1;
+                let si = self.slot_of(r.model);
+                debug_assert_eq!(self.slots[si].model, r.model, "slot layout broken");
+                self.slots[si].queue.push(r);
+                self.mark_dirty(si, dirty);
+            }
+            ToModel::Requests { model, burst } => {
+                stats.processed += burst.len() as u64;
+                let si = self.slot_of(model);
+                for &r in burst.iter() {
+                    debug_assert_eq!(r.model, model, "mixed-model burst");
+                    self.slots[si].queue.push(r);
+                }
+                if !burst.is_empty() {
+                    self.mark_dirty(si, dirty);
+                }
+            }
+            ToModel::Granted { model, gpu } => {
+                let si = self.slot_of(model);
+                // The shard consumed the registration at grant time:
+                // the router must not coalesce the next one away.
+                self.slots[si].router.invalidate_last_sent();
+                let now = self.clock.now();
+                let cand = self.compute(si, now, dropped);
+                if let Some(c) = cand {
+                    let slot = &mut self.slots[si];
+                    let batch = slot.queue.take_burst(c.size as usize);
+                    let busy_until = now + slot.profile.latency(c.size) + self.exec_margin;
+                    let _ = self.backends[gpu.0 as usize].send(ToBackend::Execute {
+                        model,
+                        requests: batch,
+                        dispatched_at: now,
+                    });
+                    let _ = slot.router.gpu_busy_until(gpu, busy_until);
+                } else {
+                    // Nothing left to run; hand the GPU back as free.
+                    let _ = self.slots[si].router.gpu_busy_until(gpu, now);
+                }
+                // Register the next candidate — a fresh logical
+                // candidate, so it starts back at the home shard. This
+                // also covers any requests absorbed earlier in this
+                // drain: clear the dirty flag so the flush does not
+                // redundantly re-register.
+                let cand = self.compute(si, self.clock.now(), dropped);
+                let slot = &mut self.slots[si];
+                slot.hops = 0;
+                slot.dirty = false;
+                if slot.router.register_home(cand).is_err() {
+                    return Flow::Stop;
+                }
+            }
+            ToModel::Revalidate { model } => {
+                let si = self.slot_of(model);
+                // Expiry revalidation: the shard dropped the
+                // registration before sending this.
+                self.slots[si].router.invalidate_last_sent();
+                let cand = self.compute(si, self.clock.now(), dropped);
+                let slot = &mut self.slots[si];
+                slot.hops = 0;
+                slot.dirty = false;
+                if slot.router.register_home(cand).is_err() {
+                    return Flow::Stop;
+                }
+            }
+            ToModel::Overflow { model, to_shard, seq } => {
+                let si = self.slot_of(model);
+                // Stale verdicts (the candidate was replaced since that
+                // registration) are ignored.
+                if !self.slots[si].router.overflow_is_current(seq) {
+                    return Flow::Go;
+                }
+                // The steering shard unregistered the candidate before
+                // sending the verdict.
+                self.slots[si].router.invalidate_last_sent();
+                let cand = self.compute(si, self.clock.now(), dropped);
+                let slot = &mut self.slots[si];
+                slot.dirty = false;
+                // The recompute can empty the queue: that ends the
+                // logical candidate, so reset the migration budget and
+                // re-home (same invariant as the request arm).
+                if cand.is_none() {
+                    slot.hops = 0;
+                    if slot.router.register_home(None).is_err() {
+                        return Flow::Stop;
+                    }
+                    return Flow::Go;
+                }
+                slot.hops += 1;
+                let hops = slot.hops;
+                if slot.router.register_overflow(to_shard, cand, hops).is_err() {
+                    return Flow::Stop;
+                }
+            }
+            ToModel::Shutdown => return Flow::Stop,
+        }
+        Flow::Go
+    }
+}
+
+/// The spawned pool: `W` [`ModelWorker`] threads plus their inboxes.
+/// Rank shards and frontends address model `m` through
+/// [`ModelWorkerPool::model_txs`] (clones of worker `m % W`'s sender).
+pub struct ModelWorkerPool {
+    worker_txs: Vec<Sender<ToModel>>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    n_models: usize,
+}
+
+impl ModelWorkerPool {
+    /// Default worker count: `min(models, available_parallelism)` — the
+    /// request-rate work is embarrassingly parallel but gains nothing
+    /// past the core count.
+    pub fn default_workers(n_models: usize) -> usize {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(8);
+        n_models.clamp(1, cores.max(1))
+    }
+
+    /// Spawn the pool. `shard_txs` must be the live rank-shard inboxes
+    /// (the shard *threads* may start later; the channels must exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        profiles: &[LatencyProfile],
+        workers: usize,
+        clock: Clock,
+        topo: &ShardTopology,
+        shard_txs: &[Sender<ToRank>],
+        backends: &[Sender<ToBackend>],
+        completions: &Sender<Completion>,
+        net_bound: Micros,
+        exec_margin: Micros,
+    ) -> Self {
+        let n_models = profiles.len();
+        let workers = workers.clamp(1, n_models.max(1));
+        let mut worker_txs = Vec::with_capacity(workers);
+        let mut rx_store = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = std::sync::mpsc::channel::<ToModel>();
+            worker_txs.push(tx);
+            rx_store.push(rx);
+        }
+        let mut handles = Vec::with_capacity(workers);
+        for (w, rx) in rx_store.into_iter().enumerate() {
+            let slots: Vec<ModelSlot> = (w..n_models)
+                .step_by(workers)
+                .map(|m| ModelSlot {
+                    model: ModelId(m as u32),
+                    profile: profiles[m],
+                    queue: TrackingQueue::new(),
+                    router: RankRouter::new(topo.clone(), shard_txs.to_vec(), ModelId(m as u32)),
+                    hops: 0,
+                    dirty: false,
+                })
+                .collect();
+            let worker = ModelWorker {
+                worker: w,
+                num_workers: workers,
+                clock,
+                inbox: rx,
+                slots,
+                backends: backends.to_vec(),
+                completions: completions.clone(),
+                net_bound,
+                exec_margin,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("model-worker-{w}"))
+                    .spawn(move || worker.run())
+                    .expect("spawn model worker"),
+            );
+        }
+        ModelWorkerPool {
+            worker_txs,
+            handles,
+            n_models,
+        }
+    }
+
+    /// OS threads the pool runs on.
+    pub fn num_workers(&self) -> usize {
+        self.worker_txs.len()
+    }
+
+    /// One sender per model (clones of the owning worker's inbox) for
+    /// the rank shards' `model_txs` routing and the frontend submit
+    /// path.
+    pub fn model_txs(&self) -> Vec<Sender<ToModel>> {
+        (0..self.n_models)
+            .map(|m| self.worker_txs[m % self.worker_txs.len()].clone())
+            .collect()
+    }
+
+    /// Stop every worker and merge their stats.
+    pub fn shutdown_join(mut self) -> WorkerStats {
+        for tx in &self.worker_txs {
+            let _ = tx.send(ToModel::Shutdown);
+        }
+        let mut stats = WorkerStats::default();
+        for h in self.handles.drain(..) {
+            if let Ok(s) = h.join() {
+                stats.merge(&s);
+            }
+        }
+        stats
     }
 }
 
 /// A deadline-ordered queue that returns full `Request`s for drops (the
 /// sim-side `ModelQueue` only tracks ids).
-struct TrackingQueue {
+pub(crate) struct TrackingQueue {
     q: std::collections::VecDeque<Request>,
 }
 
 impl TrackingQueue {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         TrackingQueue {
             q: std::collections::VecDeque::new(),
         }
@@ -178,7 +415,7 @@ impl TrackingQueue {
     /// clock skew, a per-request SLO override — must insert-sort, not
     /// silently hide an earlier deadline behind the head. In-order
     /// arrival stays O(1).
-    fn push(&mut self, r: Request) {
+    pub(crate) fn push(&mut self, r: Request) {
         let mut i = self.q.len();
         while i > 0 && self.q[i - 1].deadline > r.deadline {
             i -= 1;
@@ -190,20 +427,29 @@ impl TrackingQueue {
         }
     }
 
-    fn take(&mut self, n: usize) -> Vec<Request> {
-        (0..n.min(self.q.len()))
-            .map(|_| self.q.pop_front().unwrap())
-            .collect()
+    /// Pop the first `n` requests straight into an inline [`ReqBurst`]
+    /// — the live-side mirror of the sim's allocation-free
+    /// `ModelQueue::take_list`: dispatching a batch ≤ `REQBURST_INLINE`
+    /// touches no allocator (the seed built a fresh `Vec` per
+    /// dispatch).
+    pub(crate) fn take_burst(&mut self, n: usize) -> ReqBurst {
+        let n = n.min(self.q.len());
+        let mut out = ReqBurst::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.q.pop_front().unwrap());
+        }
+        out
     }
 
-    /// Drop hopeless heads, then compute the candidate window.
-    fn candidate(
+    /// Drop hopeless heads into the caller's reusable scratch, then
+    /// compute the candidate window.
+    pub(crate) fn candidate(
         &mut self,
         profile: &LatencyProfile,
         now: Micros,
         net_bound: Micros,
-    ) -> (Option<CandWindow>, Vec<Request>) {
-        let mut dropped = Vec::new();
+        dropped: &mut ReqBurst,
+    ) -> Option<CandWindow> {
         while let Some(front) = self.q.front() {
             let budget = front.deadline.saturating_sub(now + net_bound);
             if profile.max_batch_within(budget) == 0 {
@@ -212,22 +458,17 @@ impl TrackingQueue {
                 break;
             }
         }
-        let Some(front) = self.q.front() else {
-            return (None, dropped);
-        };
+        let front = self.q.front()?;
         let budget = front.deadline.saturating_sub(now + net_bound);
         let b = (profile.max_batch_within(budget) as usize).min(self.q.len()) as u32;
         let d = front.deadline;
         let frontrun = d.saturating_sub(profile.latency(b + 1) + net_bound);
         let latest = d.saturating_sub(profile.latency(b) + net_bound);
-        (
-            Some(CandWindow {
-                exec: frontrun.max(now),
-                latest,
-                size: b,
-            }),
-            dropped,
-        )
+        Some(CandWindow {
+            exec: frontrun.max(now),
+            latest,
+            size: b,
+        })
     }
 }
 
@@ -256,7 +497,8 @@ mod tests {
                 Micros::from_millis_f64(12.0 + 0.75 * i as f64),
             ));
         }
-        let (cand, dropped) = q.candidate(&p, Micros::from_millis_f64(2.25), Micros::ZERO);
+        let mut dropped = ReqBurst::new();
+        let cand = q.candidate(&p, Micros::from_millis_f64(2.25), Micros::ZERO, &mut dropped);
         assert!(dropped.is_empty());
         let c = cand.unwrap();
         assert_eq!(c.size, 4);
@@ -273,12 +515,13 @@ mod tests {
         let mut q = TrackingQueue::new();
         q.push(req(0, Micros::ZERO, Micros::from_millis_f64(50.0)));
         q.push(req(1, Micros::ZERO, Micros::from_millis_f64(20.0)));
-        let (cand, dropped) = q.candidate(&p, Micros::ZERO, Micros::ZERO);
+        let mut dropped = ReqBurst::new();
+        let cand = q.candidate(&p, Micros::ZERO, Micros::ZERO, &mut dropped);
         assert!(dropped.is_empty());
         let c = cand.unwrap();
         // Window budgeted against the 20 ms head, not the 50 ms one.
         assert_eq!(c.latest, Micros::from_millis_f64(20.0 - 7.0));
-        let taken = q.take(2);
+        let taken = q.take_burst(2);
         assert_eq!(taken[0].id, RequestId(1));
         assert_eq!(taken[1].id, RequestId(0));
     }
@@ -289,9 +532,23 @@ mod tests {
         let mut q = TrackingQueue::new();
         q.push(req(0, Micros::ZERO, Micros::from_millis_f64(5.0)));
         q.push(req(1, Micros::ZERO, Micros::from_millis_f64(50.0)));
-        let (cand, dropped) = q.candidate(&p, Micros::from_millis_f64(1.0), Micros::ZERO);
+        let mut dropped = ReqBurst::new();
+        let cand = q.candidate(&p, Micros::from_millis_f64(1.0), Micros::ZERO, &mut dropped);
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].id, RequestId(0));
         assert_eq!(cand.unwrap().size, 1);
+    }
+
+    /// `take_burst` caps at the queue length and drains front-first.
+    #[test]
+    fn take_burst_pops_prefix() {
+        let mut q = TrackingQueue::new();
+        for i in 0..3 {
+            q.push(req(i, Micros::ZERO, Micros(1_000 + i)));
+        }
+        let b = q.take_burst(10);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].id, RequestId(0));
+        assert!(q.take_burst(1).is_empty());
     }
 }

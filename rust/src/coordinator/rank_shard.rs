@@ -420,7 +420,10 @@ impl RankShard {
                 revalidate.push(m);
             }
             for m in revalidate {
-                if model_txs[m.0 as usize].send(ToModel::Revalidate).is_err() {
+                if model_txs[m.0 as usize]
+                    .send(ToModel::Revalidate { model: m })
+                    .is_err()
+                {
                     break 'outer;
                 }
             }
@@ -443,7 +446,10 @@ impl RankShard {
                 stats
                     .grant_lat
                     .add((waited.0.min(LAT_CAP_US) / LAT_BUCKET_US) as usize);
-                if model_txs[m.0 as usize].send(ToModel::Granted { gpu }).is_err() {
+                if model_txs[m.0 as usize]
+                    .send(ToModel::Granted { model: m, gpu })
+                    .is_err()
+                {
                     break 'outer;
                 }
             }
@@ -473,7 +479,11 @@ impl RankShard {
                 }
                 for (m, to_shard, seq) in steer {
                     st.unregister(m);
-                    let msg = ToModel::Overflow { to_shard, seq };
+                    let msg = ToModel::Overflow {
+                        model: m,
+                        to_shard,
+                        seq,
+                    };
                     if model_txs[m.0 as usize].send(msg).is_err() {
                         break 'outer;
                     }
@@ -571,7 +581,7 @@ mod tests {
         let msg = model_rxs[0]
             .recv_timeout(Duration::from_millis(500))
             .expect("revalidate sent");
-        assert!(matches!(msg, ToModel::Revalidate), "{msg:?}");
+        assert!(matches!(msg, ToModel::Revalidate { .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
         let stats = h.join().unwrap();
         assert_eq!(stats.grants, 0, "expired candidate must not be granted");
@@ -600,7 +610,7 @@ mod tests {
             .recv_timeout(Duration::from_millis(500))
             .expect("granted");
         assert!(
-            matches!(msg, ToModel::Granted { gpu: GpuId(4) }),
+            matches!(msg, ToModel::Granted { gpu: GpuId(4), .. }),
             "lowest owned id: {msg:?}"
         );
         // Occupy the granted GPU, register a second model: it must get
@@ -626,7 +636,7 @@ mod tests {
         let msg = model_rxs[1]
             .recv_timeout(Duration::from_millis(500))
             .expect("granted second gpu");
-        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(5) }), "{msg:?}");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(5), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
         let stats = h.join().unwrap();
         assert_eq!(stats.grants, 2);
@@ -664,7 +674,7 @@ mod tests {
             .recv_timeout(Duration::from_millis(500))
             .expect("overflow verdict");
         assert!(
-            matches!(msg, ToModel::Overflow { to_shard: 1, seq: 7 }),
+            matches!(msg, ToModel::Overflow { to_shard: 1, seq: 7, .. }),
             "{msg:?}"
         );
         rank_tx.send(ToRank::Shutdown).unwrap();
@@ -702,7 +712,7 @@ mod tests {
         let msg = model_rxs[0]
             .recv_timeout(Duration::from_millis(500))
             .expect("grant after local GPU frees");
-        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(0) }), "{msg:?}");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(0), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
         let stats = h.join().unwrap();
         assert_eq!(stats.grants, 1);
@@ -742,7 +752,7 @@ mod tests {
             .recv_timeout(Duration::from_millis(500))
             .expect("granted");
         assert!(
-            matches!(msg, ToModel::Granted { gpu: GpuId(1) }),
+            matches!(msg, ToModel::Granted { gpu: GpuId(1), .. }),
             "drained GPU 0 must never be granted: {msg:?}"
         );
         rank_tx.send(ToRank::Shutdown).unwrap();
@@ -842,7 +852,7 @@ mod tests {
         let msg = model_rx
             .recv_timeout(Duration::from_millis(500))
             .expect("granted after attach");
-        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(1) }), "{msg:?}");
+        assert!(matches!(msg, ToModel::Granted { gpu: GpuId(1), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
         let stats = h.join().unwrap();
         assert_eq!(stats.grants, 1);

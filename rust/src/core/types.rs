@@ -179,6 +179,143 @@ pub struct Request {
     pub deadline: Micros,
 }
 
+/// Inline capacity of [`ReqBurst`]: coalesced frontend bursts and
+/// dispatched batches up to this size live on the stack, so the
+/// steady-state ingest → dispatch path touches no allocator (the same
+/// sizing rationale as [`REQLIST_INLINE`]).
+pub const REQBURST_INLINE: usize = 16;
+
+const EMPTY_REQUEST: Request = Request {
+    id: RequestId(0),
+    model: ModelId(0),
+    arrival: Micros(0),
+    deadline: Micros(0),
+};
+
+#[derive(Clone, Debug)]
+enum ReqBurstRepr {
+    Inline {
+        len: u8,
+        buf: [Request; REQBURST_INLINE],
+    },
+    Heap(Vec<Request>),
+}
+
+/// [`ReqList`]'s sibling for full `Request` records: the inline
+/// small-vec carried by the coordinator's burst messages
+/// (`ToModel::Requests`, `ToBackend::Execute`, `Completion`). `ReqList`
+/// stays id-only for the sim-side schedulers; the live coordinator
+/// moves whole requests between threads, so it needs the records
+/// themselves. Bursts ≤ [`REQBURST_INLINE`] never allocate; larger ones
+/// spill to a heap `Vec` transparently.
+#[derive(Clone, Debug)]
+pub struct ReqBurst(ReqBurstRepr);
+
+impl ReqBurst {
+    pub fn new() -> Self {
+        ReqBurst(ReqBurstRepr::Inline {
+            len: 0,
+            buf: [EMPTY_REQUEST; REQBURST_INLINE],
+        })
+    }
+
+    /// Inline when `n` fits, pre-sized heap otherwise.
+    pub fn with_capacity(n: usize) -> Self {
+        if n <= REQBURST_INLINE {
+            ReqBurst::new()
+        } else {
+            ReqBurst(ReqBurstRepr::Heap(Vec::with_capacity(n)))
+        }
+    }
+
+    pub fn from_slice(reqs: &[Request]) -> Self {
+        let mut out = ReqBurst::with_capacity(reqs.len());
+        for &r in reqs {
+            out.push(r);
+        }
+        out
+    }
+
+    pub fn push(&mut self, r: Request) {
+        match &mut self.0 {
+            ReqBurstRepr::Inline { len, buf } => {
+                if (*len as usize) < REQBURST_INLINE {
+                    buf[*len as usize] = r;
+                    *len += 1;
+                } else {
+                    let mut v = Vec::with_capacity(REQBURST_INLINE * 2);
+                    v.extend_from_slice(&buf[..]);
+                    v.push(r);
+                    self.0 = ReqBurstRepr::Heap(v);
+                }
+            }
+            ReqBurstRepr::Heap(v) => v.push(r),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Request] {
+        match &self.0 {
+            ReqBurstRepr::Inline { len, buf } => &buf[..*len as usize],
+            ReqBurstRepr::Heap(v) => v.as_slice(),
+        }
+    }
+
+    #[inline]
+    pub fn iter(&self) -> std::slice::Iter<'_, Request> {
+        self.as_slice().iter()
+    }
+
+    pub fn into_vec(self) -> Vec<Request> {
+        match self.0 {
+            ReqBurstRepr::Inline { len, buf } => buf[..len as usize].to_vec(),
+            ReqBurstRepr::Heap(v) => v,
+        }
+    }
+}
+
+impl Default for ReqBurst {
+    fn default() -> Self {
+        ReqBurst::new()
+    }
+}
+
+impl std::ops::Deref for ReqBurst {
+    type Target = [Request];
+    #[inline]
+    fn deref(&self) -> &[Request] {
+        self.as_slice()
+    }
+}
+
+impl FromIterator<Request> for ReqBurst {
+    fn from_iter<I: IntoIterator<Item = Request>>(iter: I) -> Self {
+        let mut out = ReqBurst::new();
+        for r in iter {
+            out.push(r);
+        }
+        out
+    }
+}
+
+impl<'a> IntoIterator for &'a ReqBurst {
+    type Item = &'a Request;
+    type IntoIter = std::slice::Iter<'a, Request>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
 impl Request {
     pub fn slo(&self) -> Micros {
         self.deadline - self.arrival
@@ -275,6 +412,36 @@ mod tests {
             .collect();
         assert_eq!(l, expect);
         assert_eq!(l.clone().into_vec(), expect);
+    }
+
+    #[test]
+    fn reqburst_inline_then_spills() {
+        let req = |i: u64| Request {
+            id: RequestId(i),
+            model: ModelId(0),
+            arrival: Micros(i),
+            deadline: Micros(i + 1_000),
+        };
+        let mut b = ReqBurst::new();
+        assert!(b.is_empty());
+        for i in 0..REQBURST_INLINE as u64 {
+            b.push(req(i));
+        }
+        assert_eq!(b.len(), REQBURST_INLINE);
+        // One past the inline capacity spills to the heap, preserving
+        // contents and order.
+        b.push(req(99));
+        assert_eq!(b.len(), REQBURST_INLINE + 1);
+        let ids: Vec<u64> = b.iter().map(|r| r.id.0).collect();
+        let expect: Vec<u64> = (0..REQBURST_INLINE as u64).chain([99]).collect();
+        assert_eq!(ids, expect);
+        // Round trips.
+        let v = b.clone().into_vec();
+        let b2 = ReqBurst::from_slice(&v);
+        assert_eq!(b2.len(), v.len());
+        let collected: ReqBurst = v.iter().copied().collect();
+        assert_eq!(collected[0].id, RequestId(0));
+        assert_eq!((&collected).into_iter().count(), REQBURST_INLINE + 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   batch scheduler ([`scheduler::deferred`]), four baselines
 //!   (Clockwork / Nexus / Shepherd / timeout-eager), the discrete-event
 //!   cluster emulator ([`sim`]), the multithreaded
-//!   ModelThread/rank-shard coordinator ([`coordinator`]), the
+//!   ingest-shard/model-worker/rank-shard coordinator ([`coordinator`]), the
 //!   autoscaling controller ([`autoscale`]), and the sub-cluster
 //!   partitioner ([`partition`]).
 //! * **Layer 2 (JAX, build-time)** — `python/compile/model.py`, lowered

@@ -54,7 +54,8 @@ fn usage() {
         "symphony — deferred batch scheduling (paper reproduction)\n\n\
          USAGE:\n  symphony fig <1|2|4|6a|6b|7|9|10|11|12|13|14|15|16|17|table2|all>\n  \
          symphony simulate [--system S] [--gpus N] [--models N] [--rate R] [--slo MS] [--secs S]\n  \
-         symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--rate R] [--secs S]\n  \
+         symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--ingest-shards F]\n  \
+                 [--model-workers W] [--rate R] [--secs S]\n  \
          symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
                  [--epoch-ms E] [--rates R1,R2,..] [--assert-scale]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
@@ -236,6 +237,9 @@ fn cmd_serve(rest: &[String]) {
     let f = flags(rest);
     let gpus = getu(&f, "gpus", 2);
     let rank_shards = getu(&f, "rank-shards", 1);
+    let ingest_shards = getu(&f, "ingest-shards", 1);
+    // `None` = min(models, cores) — the ModelWorkerPool default.
+    let model_workers: Option<usize> = f.get("model-workers").and_then(|v| v.parse().ok());
     let rate = getf(&f, "rate", 300.0);
     let secs = getf(&f, "secs", 3.0);
     let backend = match f.get("pjrt") {
@@ -288,6 +292,8 @@ fn cmd_serve(rest: &[String]) {
         num_gpus: gpus,
         initial_gpus,
         rank_shards,
+        ingest_shards,
+        model_workers,
         total_rate: rate,
         rate_phases,
         duration: Duration::from_secs_f64(secs),

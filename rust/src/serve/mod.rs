@@ -1,6 +1,7 @@
-//! Real-time serving: the coordinator (ModelThreads + rank shards) driving
-//! actual backend execution under wall-clock time — the end-to-end (e)
-//! configuration of §5.1, with Python entirely out of the request path.
+//! Real-time serving: the coordinator (ingest shards + model-worker
+//! pool + rank shards) driving actual backend execution under
+//! wall-clock time — the end-to-end (e) configuration of §5.1, with
+//! Python entirely out of the request path.
 //!
 //! Two backend kinds:
 //! * **Sleep** — delay-injection from ℓ(b), the paper's own emulation
@@ -59,6 +60,13 @@ pub struct ServeConfig {
     /// Rank shards in the coordinator (1 = the paper's single
     /// RankThread; clamped to `num_gpus`).
     pub rank_shards: usize,
+    /// Frontend ingest shards (clamped to ≥ 1): the open-loop generator
+    /// submits through an `IngestHandle`, batching arrivals that are
+    /// due together into one producer-side send.
+    pub ingest_shards: usize,
+    /// Model-worker threads multiplexing per-model scheduling state
+    /// (`None` = `min(models, available_parallelism)`).
+    pub model_workers: Option<usize>,
     /// Aggregate offered rate, requests/second (used when
     /// `rate_phases` is empty).
     pub total_rate: f64,
@@ -92,6 +100,9 @@ pub struct ServeReport {
     /// Overflow-routed candidates that landed on a shard with no free
     /// GPU (stale steering hint) — the ROADMAP's mis-steer rate.
     pub mis_steers: u64,
+    /// Submissions that could not be delivered to a model worker (the
+    /// seed silently swallowed these `SendError`s).
+    pub dropped_submits: u64,
     /// Per-epoch autoscale timeline (empty without `autoscale`).
     pub timeline: Vec<EpochPoint>,
 }
@@ -239,6 +250,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             num_gpus: cfg.num_gpus,
             initial_gpus: cfg.initial_gpus,
             rank_shards: cfg.rank_shards,
+            ingest_shards: cfg.ingest_shards,
+            model_workers: cfg.model_workers,
             // The paper budgets the RDMA p99.99 (33 µs) here; without a
             // kernel-bypass control plane we budget OS-thread wakeup +
             // channel jitter instead (§4.3's predictability argument,
@@ -371,14 +384,22 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         streams.iter_mut().map(|s| s.next_after(Micros::ZERO)).collect();
     let horizon = Micros(cfg.duration.as_micros() as u64);
     let mut submitted = 0u64;
-    loop {
-        // Earliest pending arrival across models.
-        let Some((mi, t)) = next
-            .iter()
+    // Earliest pending arrival across models.
+    let earliest = |next: &[Option<Micros>]| -> Option<(usize, Micros)> {
+        next.iter()
             .enumerate()
             .filter_map(|(i, t)| t.map(|t| (i, t)))
             .min_by_key(|&(_, t)| t)
-        else {
+    };
+    // The generator submits through an ingest handle: arrivals that are
+    // due together (the generator woke late, or the offered rate
+    // outruns one wakeup per request) leave as ONE producer-side batch
+    // instead of one channel send each — under overload the open loop
+    // no longer serializes on per-request submission.
+    let ingest = coord.ingest_handle();
+    let mut pending: Vec<crate::core::types::Request> = Vec::new();
+    loop {
+        let Some((mi, t)) = earliest(&next) else {
             // All streams exhausted (e.g. a trailing zero-rate phase):
             // idle out the configured duration so the autoscale epoch
             // loop keeps observing — and logging — the trough.
@@ -392,14 +413,29 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         if !wait.is_zero() {
             std::thread::sleep(wait);
         }
-        coord.submit(crate::core::types::Request {
-            id: crate::core::types::RequestId(submitted),
-            model: crate::core::types::ModelId(mi as u32),
-            arrival: clock.now(),
-            deadline: t + cfg.models[mi].slo,
-        });
-        submitted += 1;
-        next[mi] = streams[mi].next_after(t);
+        let now = clock.now();
+        pending.clear();
+        let (mut mi, mut t) = (mi, t);
+        loop {
+            pending.push(crate::core::types::Request {
+                id: crate::core::types::RequestId(submitted),
+                model: crate::core::types::ModelId(mi as u32),
+                arrival: now,
+                deadline: t + cfg.models[mi].slo,
+            });
+            submitted += 1;
+            next[mi] = streams[mi].next_after(t);
+            match earliest(&next) {
+                // Gather everything already due; future arrivals wait
+                // for their own wakeup.
+                Some((m2, t2)) if t2 <= now && t2 <= horizon => {
+                    mi = m2;
+                    t = t2;
+                }
+                _ => break,
+            }
+        }
+        ingest.submit_batch(&pending);
     }
 
     // Drain: let in-flight work land, then stop the epoch loop and the
@@ -412,7 +448,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         }
         None => Vec::new(),
     };
-    let (_processed, shard_stats) = coord.shutdown_stats();
+    let (front_stats, shard_stats) = coord.shutdown_stats();
     for tx in &backend_txs {
         let _ = tx.send(ToBackend::Shutdown);
     }
@@ -450,6 +486,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         wall_secs,
         grants: shard_stats.grants,
         mis_steers: shard_stats.mis_steers,
+        dropped_submits: front_stats.dropped_submits,
         timeline,
     }
     .tap_duration(cfg.duration))
@@ -639,6 +676,8 @@ mod tests {
             num_gpus: 2,
             initial_gpus: None,
             rank_shards: 2,
+            ingest_shards: 2,
+            model_workers: None,
             total_rate: 200.0,
             rate_phases: Vec::new(),
             duration: Duration::from_millis(500),
@@ -662,6 +701,7 @@ mod tests {
         );
         assert!(report.p99_latency_ms < 60.0, "p99 {}", report.p99_latency_ms);
         assert!(report.grants > 0);
+        assert_eq!(report.dropped_submits, 0, "no submission may be lost");
         assert!(report.timeline.is_empty(), "no autoscale, no timeline");
     }
 
@@ -679,6 +719,8 @@ mod tests {
             num_gpus: 6,
             initial_gpus: Some(2),
             rank_shards: 2,
+            ingest_shards: 1,
+            model_workers: None,
             total_rate: 0.0,
             rate_phases: vec![(1.0, 150.0), (2.0, 2600.0), (2.0, 120.0)],
             duration: Duration::from_secs_f64(5.0),

@@ -1,0 +1,302 @@
+//! Frontend ingest tier + ModelWorkerPool integration tests: the
+//! sharded submit path must lose nothing, duplicate nothing, preserve
+//! per-model deadline order, dispatch the same work as per-request
+//! submission, amortize a k-request burst to one candidate recompute
+//! per model, and keep the OS thread count at `W` regardless of the
+//! model count.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use symphony::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use symphony::core::profile::LatencyProfile;
+use symphony::core::time::Micros;
+use symphony::core::types::{ModelId, Request, RequestId};
+
+struct SinkCluster {
+    coord: Coordinator,
+    backend_rxs: Vec<Receiver<ToBackend>>,
+    comp_rx: Receiver<Completion>,
+}
+
+fn spawn_cluster(
+    n_models: usize,
+    num_gpus: usize,
+    initial_gpus: Option<usize>,
+    rank_shards: usize,
+    ingest_shards: usize,
+    model_workers: Option<usize>,
+    profile: LatencyProfile,
+) -> SinkCluster {
+    let mut backend_txs = Vec::new();
+    let mut backend_rxs = Vec::new();
+    for _ in 0..num_gpus {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        backend_rxs.push(rx);
+    }
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let coord = Coordinator::spawn(
+        CoordinatorConfig {
+            profiles: vec![profile; n_models],
+            num_gpus,
+            initial_gpus,
+            rank_shards,
+            ingest_shards,
+            model_workers,
+            net_bound: Micros::from_millis_f64(1.0),
+            exec_margin: Micros::ZERO,
+        },
+        backend_txs,
+        comp_tx,
+    );
+    SinkCluster {
+        coord,
+        backend_rxs,
+        comp_rx,
+    }
+}
+
+/// Drain the sinks until `expected` requests are dispatched or dropped
+/// (or timeout). Returns (dispatched batches, dropped requests).
+fn collect_accounted(
+    cluster: &SinkCluster,
+    expected: usize,
+    timeout: Duration,
+) -> (Vec<(ModelId, Vec<Request>)>, Vec<Request>) {
+    let mut batches: Vec<(ModelId, Vec<Request>)> = Vec::new();
+    let mut dropped: Vec<Request> = Vec::new();
+    let deadline = Instant::now() + timeout;
+    let mut accounted = 0usize;
+    while accounted < expected && Instant::now() < deadline {
+        for rx in &cluster.backend_rxs {
+            while let Ok(ToBackend::Execute { model, requests, .. }) = rx.try_recv() {
+                accounted += requests.len();
+                batches.push((model, requests.iter().copied().collect()));
+            }
+        }
+        while let Ok(c) = cluster.comp_rx.try_recv() {
+            if let Completion::Dropped(rs) = c {
+                accounted += rs.len();
+                dropped.extend(rs.iter().copied());
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    (batches, dropped)
+}
+
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+/// Acceptance: 256 models on a 4-worker pool spawn 4 model threads,
+/// not 256 — and the pool still serves models across the whole id
+/// range.
+#[test]
+fn worker_pool_caps_os_threads_at_w() {
+    let before = os_thread_count();
+    let cluster = spawn_cluster(256, 8, None, 1, 2, Some(4), LatencyProfile::new(0.5, 2.0));
+    assert_eq!(cluster.coord.num_model_workers(), 4);
+    if let (Some(b), Some(a)) = (before, os_thread_count()) {
+        // 4 workers + 1 rank shard + 2 ingest shards (+ slack for
+        // concurrently running tests). The seed spawned one thread per
+        // model: 256.
+        let delta = a.saturating_sub(b);
+        assert!(
+            delta <= 64,
+            "spawning a 256-model coordinator grew the process by {delta} \
+             threads — the worker pool must cap this at W"
+        );
+    }
+    // Liveness across the model id range (first/middle/last worker
+    // slots).
+    for (i, m) in [0u32, 127, 255].into_iter().enumerate() {
+        cluster
+            .coord
+            .submit_now(i as u64, ModelId(m), Micros::from_millis_f64(120.0));
+    }
+    let (batches, dropped) = collect_accounted(&cluster, 3, Duration::from_secs(5));
+    assert!(dropped.is_empty(), "nothing may drop: {dropped:?}");
+    let models: std::collections::BTreeSet<u32> =
+        batches.iter().map(|(m, _)| m.0).collect();
+    assert_eq!(models, [0u32, 127, 255].into_iter().collect());
+    let (front, _stats) = cluster.coord.shutdown_stats();
+    assert_eq!(front.processed, 3);
+    assert_eq!(front.dropped_submits, 0);
+}
+
+/// Acceptance: a k-request `submit_batch` burst costs exactly one
+/// end-of-drain candidate recompute (and thus one shard registration)
+/// per model. Zero attached GPUs keep grants/revalidations out of the
+/// counter; far deadlines keep the candidates parked.
+#[test]
+fn burst_costs_one_flush_recompute_per_model() {
+    let cluster = spawn_cluster(2, 1, Some(0), 1, 1, Some(1), LatencyProfile::new(0.5, 2.0));
+    let now = cluster.coord.clock.now();
+    let far = now + Micros::from_secs_f64(30.0);
+    let mut batch: Vec<Request> = (0..24)
+        .map(|i| Request {
+            id: RequestId(i),
+            model: ModelId((i % 2) as u32),
+            arrival: now,
+            deadline: far + Micros(i),
+        })
+        .collect();
+    cluster.coord.submit_batch(&mut batch);
+    // Let the worker drain + flush.
+    std::thread::sleep(Duration::from_millis(100));
+    let (front, stats) = cluster.coord.shutdown_stats();
+    assert_eq!(front.processed, 24);
+    assert_eq!(
+        front.flush_recomputes, 2,
+        "a 24-request burst over 2 models must recompute exactly twice"
+    );
+    assert_eq!(stats.grants, 0, "no GPU attached, no grant");
+}
+
+/// Multi-producer stress through `IngestHandle::submit_batch`: no
+/// request lost, none duplicated, per-model deadline order preserved
+/// within every dispatched batch.
+#[test]
+fn multi_producer_stress_no_loss_no_dup_ordered() {
+    let n_models = 4usize;
+    let producers = 6usize;
+    let bursts_per_producer = 30usize;
+    let cluster = spawn_cluster(n_models, 4, None, 2, 3, Some(2), LatencyProfile::new(0.05, 0.2));
+    let clock = cluster.coord.clock;
+    let slo = Micros::from_millis_f64(400.0);
+    let mut feeders = Vec::new();
+    for p in 0..producers as u64 {
+        let handle = cluster.coord.ingest_handle();
+        feeders.push(std::thread::spawn(move || {
+            let mut sent = 0u64;
+            let mut batch: Vec<Request> = Vec::new();
+            for b in 0..bursts_per_producer as u64 {
+                batch.clear();
+                let size = 1 + ((p * 7 + b * 5) % 12);
+                for k in 0..size {
+                    let seq = b * 64 + k;
+                    let now = clock.now();
+                    batch.push(Request {
+                        id: RequestId((p << 32) | seq),
+                        model: ModelId(((p + k) % n_models as u64) as u32),
+                        arrival: now,
+                        // Distinct deadlines so the order assertion is
+                        // meaningful.
+                        deadline: now + slo + Micros(seq),
+                    });
+                    sent += 1;
+                }
+                handle.submit_batch(&batch);
+                if b % 8 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            sent
+        }));
+    }
+    let total: u64 = feeders.into_iter().map(|f| f.join().unwrap()).sum();
+    let (batches, dropped) =
+        collect_accounted(&cluster, total as usize, Duration::from_secs(15));
+
+    // No loss, no duplication: the dispatched ∪ dropped multiset is
+    // exactly the submitted set.
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    for (_, reqs) in &batches {
+        for r in reqs {
+            *seen.entry(r.id.0).or_default() += 1;
+        }
+    }
+    for r in &dropped {
+        *seen.entry(r.id.0).or_default() += 1;
+    }
+    assert_eq!(
+        seen.len() as u64,
+        total,
+        "every submitted request must surface exactly once"
+    );
+    let dups: Vec<u64> = seen
+        .iter()
+        .filter(|(_, &c)| c != 1)
+        .map(|(&id, _)| id)
+        .collect();
+    assert!(dups.is_empty(), "duplicated requests: {dups:?}");
+
+    // Per-model deadline order inside every dispatched batch.
+    for (m, reqs) in &batches {
+        for w in reqs.windows(2) {
+            assert!(
+                w[0].deadline <= w[1].deadline,
+                "model {m:?}: batch violates deadline order: {:?} > {:?}",
+                w[0].deadline,
+                w[1].deadline
+            );
+        }
+    }
+    let (front, _stats) = cluster.coord.shutdown_stats();
+    assert_eq!(front.processed, total);
+    assert_eq!(front.ingest_forwarded, total, "all traffic went through handles");
+    assert_eq!(front.dropped_submits, 0);
+}
+
+/// Trace equivalence: on an identical workload, batched ingestion
+/// dispatches the same request multiset as per-request submission
+/// (here: everything, with zero scheduler drops on either path).
+#[test]
+fn batched_ingestion_matches_per_request_multiset() {
+    let n = 480u64;
+    let run = |batched: bool| -> Vec<u64> {
+        let cluster = spawn_cluster(3, 4, None, 1, 2, Some(2), LatencyProfile::new(0.05, 0.2));
+        let now = cluster.coord.clock.now();
+        let slo = Micros::from_millis_f64(500.0);
+        let mut reqs: Vec<Request> = (0..n)
+            .map(|i| Request {
+                id: RequestId(i),
+                model: ModelId((i % 3) as u32),
+                arrival: now,
+                deadline: now + slo + Micros(i),
+            })
+            .collect();
+        if batched {
+            for chunk in reqs.chunks_mut(32) {
+                cluster.coord.submit_batch(chunk);
+            }
+        } else {
+            for &r in &reqs {
+                cluster.coord.submit(r);
+            }
+        }
+        let (batches, dropped) =
+            collect_accounted(&cluster, n as usize, Duration::from_secs(15));
+        assert!(
+            dropped.is_empty(),
+            "light load must not drop (batched={batched}): {} dropped",
+            dropped.len()
+        );
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|(_, reqs)| reqs.iter().map(|r| r.id.0))
+            .collect();
+        ids.sort_unstable();
+        let (front, _stats) = cluster.coord.shutdown_stats();
+        assert_eq!(front.processed, n);
+        assert_eq!(front.dropped_submits, 0);
+        ids
+    };
+    let per_request = run(false);
+    let batched = run(true);
+    assert_eq!(
+        per_request, batched,
+        "batched and per-request ingestion must dispatch the same multiset"
+    );
+    assert_eq!(per_request.len() as u64, n);
+}

@@ -211,6 +211,8 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
             num_gpus,
             initial_gpus: None,
             rank_shards,
+            ingest_shards: 1,
+            model_workers: None,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
         },
@@ -373,6 +375,8 @@ fn drive_coordinator_with_resize(
             num_gpus,
             initial_gpus: Some(initial),
             rank_shards,
+            ingest_shards: 1,
+            model_workers: None,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
         },

@@ -20,6 +20,8 @@ fn sleep_backend_meets_slo_at_moderate_load() {
         num_gpus: 3,
         initial_gpus: None,
         rank_shards: 1,
+        ingest_shards: 1,
+        model_workers: None,
         total_rate: 300.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(800),
@@ -42,6 +44,8 @@ fn sleep_backend_batches_under_pressure() {
         num_gpus: 1,
         initial_gpus: None,
         rank_shards: 1,
+        ingest_shards: 1,
+        model_workers: None,
         total_rate: 400.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
@@ -111,6 +115,8 @@ fn pjrt_end_to_end_serving() {
         num_gpus: 1,
         initial_gpus: None,
         rank_shards: 1,
+        ingest_shards: 1,
+        model_workers: None,
         total_rate: 150.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
