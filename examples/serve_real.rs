@@ -70,6 +70,7 @@ fn main() {
         rank_shards: 1,
         ingest_shards: 1,
         model_workers: None,
+        remote_ranks: Vec::new(),
         total_rate: rate,
         rate_phases: Vec::new(),
         duration: Duration::from_secs_f64(secs),

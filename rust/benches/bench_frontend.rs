@@ -114,6 +114,7 @@ fn frontend_run(n_models: usize, producers: usize, mode: Mode, n_total: u64) -> 
             model_workers: None,
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
+            remote_ranks: Vec::new(),
         },
         backend_txs.clone(),
         comp_tx,

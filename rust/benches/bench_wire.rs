@@ -1,0 +1,211 @@
+//! `cargo bench --bench bench_wire` — wire-rate microbenchmarks for
+//! the `net/` rank-coordination tier, the numbers behind the "scalable,
+//! low-latency, fine-grained coordination" claim once the rank tier
+//! leaves the process:
+//!
+//! * `wire_codec_roundtrips_per_sec` — pure encode→decode of a
+//!   `GpuBusyUntil` up-frame (no socket): the codec's ceiling.
+//! * `wire_frames_per_sec` / `wire_frames_per_write` — loopback framed
+//!   TCP throughput through the coalescing writer: how many control
+//!   frames per second one connection moves, and how many frames each
+//!   `write` syscall carried (the `InboxBatch` analogue on the wire).
+//! * `wire_rtt_*` — loopback submit→grant round trip against a real
+//!   `rank-server` session: candidate registration frame up, `Granted`
+//!   frame down, measured at the client. p50/p99 in µs plus a
+//!   round-trips/sec rate for the CI regression check (which only
+//!   compares `*_per_sec` metrics).
+//!
+//! Results print as a table and land machine-readable in
+//! `BENCH_wire.json` at the repo root (consumed by
+//! `.github/compare_bench.py`, artifact-uploaded by CI). Loopback
+//! numbers are the lower bound on wire cost; the EXPERIMENTS.md §Wire
+//! coordination table adds host-pair rows once run on real hardware.
+
+use std::fmt::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use symphony::coordinator::messages::{CandWindow, ToModel};
+use symphony::coordinator::Clock;
+use symphony::core::time::Micros;
+use symphony::core::types::{GpuId, ModelId};
+use symphony::net::client::RemoteRank;
+use symphony::net::codec::{self, WireToRank};
+use symphony::net::server::{RankServer, RankServerConfig};
+use symphony::net::transport::{spawn_writer, FrameReader};
+use symphony::util::stats::percentile;
+use symphony::util::table::{banner, Table};
+
+/// Pure codec throughput: encode + decode round trips per second.
+fn bench_codec(iters: u64) -> f64 {
+    let msg = WireToRank::GpuBusyUntil {
+        gpu: GpuId(7),
+        free_at: Micros(123_456_789),
+    };
+    let mut buf = Vec::with_capacity(32);
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for i in 0..iters {
+        buf.clear();
+        codec::encode_up((i % 8) as u16, &msg, &mut buf);
+        let (shard, decoded) = codec::decode_up(&buf).expect("roundtrip");
+        if let WireToRank::GpuBusyUntil { gpu, .. } = decoded {
+            sink = sink.wrapping_add(shard as u64 + gpu.0 as u64);
+        }
+    }
+    assert!(sink > 0, "keep the loop alive");
+    iters as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Loopback frames/s through the coalescing writer, plus the observed
+/// frames-per-syscall coalescing factor.
+fn bench_frames(n: u64) -> (f64, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    let reader_h = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        stream.set_nodelay(true).unwrap();
+        let mut reader = FrameReader::new(stream);
+        let mut got = 0u64;
+        while let Ok(Some(frame)) = reader.next_frame() {
+            // Decode to keep the measurement honest end to end.
+            let _ = codec::decode_up(frame).expect("valid frame");
+            got += 1;
+        }
+        got
+    });
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    let (tx, writer_h) = spawn_writer(stream);
+    let msg = WireToRank::GpuBusyUntil {
+        gpu: GpuId(3),
+        free_at: Micros(1),
+    };
+    let t0 = Instant::now();
+    let mut buf = Vec::with_capacity(32);
+    for i in 0..n {
+        buf.clear();
+        codec::encode_up((i % 4) as u16, &msg, &mut buf);
+        tx.send(buf.clone()).expect("enqueue frame");
+    }
+    drop(tx);
+    let stats = writer_h.join().unwrap().expect("writer io");
+    let got = reader_h.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(got, n, "every frame must arrive");
+    let per_write = stats.frames as f64 / stats.writes.max(1) as f64;
+    (n as f64 / secs, per_write)
+}
+
+/// Submit→grant round trips against a real rank-server session: one
+/// immediately-grantable candidate registration up, one `Granted`
+/// frame down, then a `GpuBusyUntil(now)` to free the GPU again.
+fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
+    let server = RankServer::bind(RankServerConfig {
+        listen: "127.0.0.1:0".into(),
+        shards: 1,
+        gpus: 0..1,
+        max_sessions: Some(1),
+    })
+    .expect("bind rank server");
+    let addr = server.local_addr().to_string();
+    let server_h = std::thread::spawn(move || server.run().expect("server run"));
+
+    let clock = Clock::new();
+    let conn = Arc::new(
+        RemoteRank::connect(&addr, 1, clock, Duration::from_secs(5)).expect("connect"),
+    );
+    let (model_tx, model_rx) = channel::<ToModel>();
+    conn.start_reader(vec![model_tx], 0, Arc::new(AtomicU64::new(0)));
+
+    let mut rtts_us: Vec<f64> = Vec::with_capacity(rounds);
+    for seq in 0..rounds as u64 {
+        let far = clock.now() + Micros::from_millis_f64(5_000.0);
+        let t0 = Instant::now();
+        conn.send(
+            0,
+            &WireToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(CandWindow {
+                    exec: Micros(0),
+                    latest: far,
+                    size: 1,
+                }),
+                seq,
+                hops: 0,
+            },
+        )
+        .expect("send candidate");
+        match model_rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(ToModel::Granted { gpu, .. }) => {
+                rtts_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                // Free the GPU for the next round (free_at in the past
+                // puts it straight back in the free set).
+                conn.send(
+                    0,
+                    &WireToRank::GpuBusyUntil {
+                        gpu,
+                        free_at: clock.now(),
+                    },
+                )
+                .expect("send busy-until");
+            }
+            other => panic!("expected a grant, got {other:?}"),
+        }
+    }
+    conn.close();
+    conn.join();
+    let _ = server_h.join();
+    let total_s: f64 = rtts_us.iter().sum::<f64>() / 1e6;
+    (
+        percentile(&rtts_us, 50.0),
+        percentile(&rtts_us, 99.0),
+        rounds as f64 / total_s.max(1e-9),
+    )
+}
+
+fn main() {
+    banner("Wire coordination microbench (net/: codec, transport, rank-server RTT)");
+    let mut table = Table::new(vec!["metric", "value"]);
+    let mut json: Vec<(String, f64)> = Vec::new();
+
+    let codec_rate = bench_codec(1_000_000);
+    table.row(vec!["codec roundtrips/s".into(), format!("{codec_rate:.0}")]);
+    json.push(("wire_codec_roundtrips_per_sec".into(), codec_rate));
+
+    let (frames_rate, per_write) = bench_frames(200_000);
+    table.row(vec!["frames/s (loopback)".into(), format!("{frames_rate:.0}")]);
+    table.row(vec!["frames per write syscall".into(), format!("{per_write:.1}")]);
+    json.push(("wire_frames_per_sec".into(), frames_rate));
+    json.push(("wire_frames_per_write".into(), per_write));
+
+    let (p50, p99, rtt_rate) = bench_rtt(2_000);
+    table.row(vec!["submit→grant RTT p50 (µs)".into(), format!("{p50:.0}")]);
+    table.row(vec!["submit→grant RTT p99 (µs)".into(), format!("{p99:.0}")]);
+    table.row(vec!["submit→grant round trips/s".into(), format!("{rtt_rate:.0}")]);
+    json.push(("wire_rtt_p50_us".into(), p50));
+    json.push(("wire_rtt_p99_us".into(), p99));
+    json.push(("wire_rtt_round_trips_per_sec".into(), rtt_rate));
+
+    table.emit("bench_wire");
+    write_json(&json);
+}
+
+/// Hand-rolled JSON (zero registry deps), same shape as
+/// `BENCH_hotpath.json` / `BENCH_frontend.json`.
+fn write_json(rows: &[(String, f64)]) {
+    let mut s =
+        String::from("{\n  \"bench\": \"bench_wire\",\n  \"schema\": 1,\n  \"results\": {\n");
+    for (i, (k, v)) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(s, "    \"{k}\": {v:.1}{sep}");
+    }
+    s.push_str("  }\n}\n");
+    match std::fs::write("BENCH_wire.json", &s) {
+        Ok(()) => println!("wrote BENCH_wire.json"),
+        Err(e) => eprintln!("warn: could not write BENCH_wire.json: {e}"),
+    }
+}

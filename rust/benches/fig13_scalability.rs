@@ -71,6 +71,7 @@ fn coordinator_sweep(
             model_workers: None,
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
+            remote_ranks: Vec::new(),
         },
         backend_txs.clone(),
         comp_tx,

@@ -16,6 +16,13 @@
 //! batch finished (LazyBatching's lesson — act on measured windows, and
 //! retire only provably-idle accelerators). Only acked GPUs return to
 //! the attachable pool.
+//!
+//! The autoscaler is transport-agnostic: `ClusterCtl` routes through
+//! [`crate::coordinator::RankPort`]s, so against `serve
+//! --remote-ranks` the same `Drain` becomes a wire frame to the
+//! owning `rank-server` and the ack returns as a `DrainAck` frame —
+//! this actor neither knows nor cares which side of the process
+//! boundary the shard lives on.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -162,6 +169,7 @@ mod tests {
             bad: 90,
             busy_fraction: 1.0,
             active_gpus: 0, // filled per test
+            queue_depth: 0,
         }
     }
 
@@ -171,6 +179,7 @@ mod tests {
             bad: 0,
             busy_fraction: 0.02,
             active_gpus: 0,
+            queue_depth: 0,
         }
     }
 
@@ -199,6 +208,7 @@ mod tests {
                 model_workers: None,
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
+                remote_ranks: Vec::new(),
             },
             backend_txs,
             comp_tx,
@@ -267,6 +277,7 @@ mod tests {
                 model_workers: None,
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
+                remote_ranks: Vec::new(),
             },
             vec![backend_tx],
             comp_tx,

@@ -21,6 +21,15 @@ pub struct WindowStats {
     /// Mean busy fraction across active GPUs in the window, 0..1.
     pub busy_fraction: f64,
     pub active_gpus: usize,
+    /// Requests sitting in the model workers' queues at the end of the
+    /// window (the live wiring reads
+    /// [`crate::coordinator::QueueDepthProbe`]; sim-side producers
+    /// leave it 0). Completion counts alone can read a *stalling*
+    /// epoch — few completions, low measured busy — as an idle one;
+    /// the backlog disambiguates, vetoing deallocation when work is
+    /// piling up (the ROADMAP's "feed shard-level queue depth into
+    /// `WindowStats`" item).
+    pub queue_depth: u64,
 }
 
 impl WindowStats {
@@ -71,6 +80,11 @@ pub struct AutoscaleConfig {
     pub max_gpus: usize,
     /// Decision epoch.
     pub epoch: Micros,
+    /// Deallocation veto threshold: an idle-looking window with more
+    /// than `backlog_per_gpu × active_gpus` requests still queued holds
+    /// instead of shrinking (the backlog will surface as bad rate
+    /// within an epoch; shrinking first would whipsaw).
+    pub backlog_per_gpu: f64,
 }
 
 impl Default for AutoscaleConfig {
@@ -81,6 +95,7 @@ impl Default for AutoscaleConfig {
             min_gpus: 1,
             max_gpus: 4096,
             epoch: Micros::from_secs_f64(10.0),
+            backlog_per_gpu: 4.0,
         }
     }
 }
@@ -129,6 +144,14 @@ impl AutoscaleController {
         }
         let f = w.idle_fraction();
         if f > self.cfg.idle_threshold {
+            // Deep-backlog veto: completions and busy time are
+            // *trailing* signals — an epoch in which the queues exploded
+            // can finish few requests and measure low busy exactly
+            // because everything is still waiting. Such an epoch must
+            // not read as scale-down.
+            if w.queue_depth as f64 > self.cfg.backlog_per_gpu * n.max(1) as f64 {
+                return Advice::Hold;
+            }
             // Deallocate N·f, keeping min_gpus.
             let want = (n as f64 * f).floor() as usize;
             let room = n.saturating_sub(self.cfg.min_gpus);
@@ -159,6 +182,7 @@ mod tests {
             bad: 100,
             busy_fraction: 1.0,
             active_gpus: 24,
+            queue_depth: 0,
         };
         assert_eq!(ctl().advise(&w), Advice::Allocate(3));
     }
@@ -171,6 +195,7 @@ mod tests {
             bad: 0,
             busy_fraction: 0.5,
             active_gpus: 24,
+            queue_depth: 0,
         };
         assert_eq!(ctl().advise(&w), Advice::Deallocate(12));
     }
@@ -182,6 +207,7 @@ mod tests {
             bad: 2,
             busy_fraction: 0.95,
             active_gpus: 24,
+            queue_depth: 0,
         };
         assert_eq!(ctl().advise(&w), Advice::Hold);
     }
@@ -198,6 +224,7 @@ mod tests {
             bad: 0,
             busy_fraction: 0.0,
             active_gpus: 4,
+            queue_depth: 0,
         };
         assert_eq!(c.advise(&idle), Advice::Hold, "won't shrink below min");
         let over = WindowStats {
@@ -205,6 +232,7 @@ mod tests {
             bad: 100,
             busy_fraction: 1.0,
             active_gpus: 8,
+            queue_depth: 0,
         };
         assert_eq!(c.advise(&over), Advice::Hold, "won't grow past max");
     }
@@ -238,6 +266,7 @@ mod tests {
             bad: 500,
             busy_fraction: 1.0,
             active_gpus: 8,
+            queue_depth: 0,
         };
         // r clamps to 0.95: 8·0.95/0.05 = 152.
         assert_eq!(c.advise(&w), Advice::Allocate(152));
@@ -248,6 +277,7 @@ mod tests {
             bad: 999,
             busy_fraction: 1.0,
             active_gpus: 8,
+            queue_depth: 0,
         };
         assert_eq!(c.advise(&w), Advice::Allocate(152));
         // Unclamped rates keep the exact proportional formula.
@@ -256,7 +286,52 @@ mod tests {
             bad: 500,
             busy_fraction: 1.0,
             active_gpus: 8,
+            queue_depth: 0,
         };
         assert_eq!(c.advise(&w), Advice::Allocate(8));
+    }
+
+    /// The queue-depth satellite: an epoch whose completions look idle
+    /// but whose worker queues are deep must hold, not shrink — the
+    /// backlog is load the trailing completion counters haven't seen
+    /// yet. A genuinely idle epoch (same counters, empty queues) still
+    /// deallocates.
+    #[test]
+    fn deep_backlog_vetoes_deallocation() {
+        let c = ctl(); // backlog_per_gpu = 4.0
+        let stalled = WindowStats {
+            good: 50,
+            bad: 0,
+            busy_fraction: 0.05,
+            active_gpus: 8,
+            queue_depth: 1_000, // ≫ 4 × 8
+        };
+        assert_eq!(c.advise(&stalled), Advice::Hold, "backlog vetoes shrink");
+        let idle = WindowStats {
+            queue_depth: 0,
+            ..stalled
+        };
+        assert!(
+            matches!(c.advise(&idle), Advice::Deallocate(_)),
+            "{:?}",
+            c.advise(&idle)
+        );
+        // The veto scales with the cluster: the same backlog on enough
+        // GPUs is just normal queueing, not a stall.
+        let shallow = WindowStats {
+            queue_depth: 30, // < 4 × 8
+            ..stalled
+        };
+        assert!(matches!(c.advise(&shallow), Advice::Deallocate(_)));
+        // The veto never blocks the overload path: bad rate still
+        // allocates regardless of depth.
+        let over = WindowStats {
+            good: 10,
+            bad: 90,
+            busy_fraction: 1.0,
+            active_gpus: 8,
+            queue_depth: 1_000,
+        };
+        assert!(matches!(c.advise(&over), Advice::Allocate(_)));
     }
 }

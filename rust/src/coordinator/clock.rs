@@ -6,22 +6,40 @@ use std::time::Instant;
 
 use crate::core::time::Micros;
 
-/// Monotonic clock with a fixed origin.
+/// Monotonic clock with a fixed origin. `base` shifts the origin so a
+/// remote rank server can run its shards in the *client's* clock
+/// domain: the client puts its current `now` in the wire handshake and
+/// the server builds `Clock::starting_at(that)`, after which both
+/// sides' timestamps (candidate windows, `GpuBusyUntil`) compare on the
+/// same axis to within the handshake's one-way latency (budgeted by
+/// `net_bound`, like the paper budgets the RDMA p99.99 in §5.6).
 #[derive(Clone, Copy, Debug)]
 pub struct Clock {
     origin: Instant,
+    base: Micros,
 }
 
 impl Clock {
     pub fn new() -> Self {
         Clock {
             origin: Instant::now(),
+            base: Micros::ZERO,
+        }
+    }
+
+    /// A clock that reads `base` right now — the remote rank server's
+    /// approximation of the connecting client's clock.
+    pub fn starting_at(base: Micros) -> Self {
+        Clock {
+            origin: Instant::now(),
+            base,
         }
     }
 
     #[inline]
     pub fn now(&self) -> Micros {
-        Micros(self.origin.elapsed().as_micros() as u64)
+        self.base
+            .saturating_add(Micros(self.origin.elapsed().as_micros() as u64))
     }
 
     /// Duration from now until `t` (zero if already past).
@@ -49,6 +67,16 @@ mod tests {
         let b = c.now();
         assert!(b > a);
         assert!(b.0 - a.0 >= 1_500, "elapsed {}", b.0 - a.0);
+    }
+
+    #[test]
+    fn starting_at_offsets_now() {
+        let c = Clock::starting_at(Micros(5_000_000));
+        let a = c.now();
+        assert!(a >= Micros(5_000_000), "{a:?}");
+        assert!(a < Micros(5_500_000), "{a:?}");
+        // `until` works on the shifted axis too.
+        assert!(c.until(Micros(6_000_000)).as_millis() > 400);
     }
 
     #[test]

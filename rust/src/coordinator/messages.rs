@@ -7,6 +7,14 @@
 //! worker thread multiplexes the state of many models, so every
 //! worker-bound message is addressed with its `ModelId` (the per-model
 //! channel that used to imply it is gone).
+//!
+//! The worker ⇄ rank-shard half of this vocabulary also exists as a
+//! wire protocol ([`crate::net::codec`]): `ToRank` minus `Shutdown`
+//! maps onto `WireToRank` (a remote shutdown is a connection close),
+//! and the shard-originated `ToModel` verdicts map onto
+//! `WireFromRank` — plus an explicit `DrainAck` frame standing in for
+//! `Drain`'s in-process `Sender<GpuId>` ack. Keep the two in sync when
+//! evolving either.
 
 use std::sync::mpsc::Sender;
 

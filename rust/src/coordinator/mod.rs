@@ -20,12 +20,24 @@
 //!  │ registration per model per drain                          │
 //!  └──┬────────────────────────────────────────────▲───────────┘
 //!     │ ToRank::{Candidate, GpuBusyUntil}          │ ToModel::{Granted,
-//!     ▼                                            │ Revalidate, Overflow}
+//!     ▼  via RankPort                              │ Revalidate, Overflow}
+//!  ╔══ process boundary (only with --remote-ranks) ═════════════╗
+//!  ║ framed TCP (net/): WireToRank ▼ frames  ▲ WireFromRank    ║
+//!  ║ one `symphony rank-server` process per GPU-range slice    ║
+//!  ╚════════════════════════════════════════════════════════════╝
+//!     ▼                                            ▲
 //!  rank shard 0..R  (GPU range  [R·g/num_gpus], free/busy timers,
 //!     │              matchmaking, FreeHints overflow steering)
 //!     ▼ (via worker on Granted)
 //!  backend worker per GPU  ── Completion ──▶ collector
 //! ```
+//!
+//! The rank tier is addressed through [`RankPort`]s, so it can live
+//! in-process (mpsc, the default) or behind [`crate::net`]'s framed
+//! TCP in separate `symphony rank-server` processes
+//! ([`CoordinatorConfig::remote_ranks`]) — the workers, the overflow
+//! steering, and the drain/attach autoscaler protocol don't know the
+//! difference. Backends always stay in this process.
 //!
 //! The coordinator is backend-agnostic: callers supply one `ToBackend`
 //! channel per GPU (real PJRT executors in [`crate::serve`], sleep
@@ -39,20 +51,27 @@ pub mod rank_shard;
 pub mod router;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, SendError, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
+use crate::net::client::RemoteRank;
+use crate::util::error::Result;
 pub use clock::Clock;
 pub use ingest::IngestHandle;
 use ingest::IngestTier;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
-pub use model_thread::{ModelWorkerPool, WorkerStats};
+pub use model_thread::{ModelWorkerPool, QueueDepthProbe, WorkerStats};
 pub use rank_shard::{RankShard, ShardStats};
-pub use router::{FreeHints, RankRouter, ShardTopology};
+pub use router::{FreeHints, PortClosed, RankPort, RankRouter, ShardTopology};
+
+/// How long `--remote-ranks` keeps retrying a rank server that is not
+/// accepting yet (CI spawns the server and the client back to back).
+const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Messages a worker or ingest shard absorbs per inbox drain before
 /// its flush runs. Without a cap, producers that keep an inbox
@@ -87,6 +106,13 @@ pub struct CoordinatorConfig {
     pub net_bound: Micros,
     /// Safety margin added to busy estimates sent to the rank shards.
     pub exec_margin: Micros,
+    /// Remote rank tier: addresses of running `symphony rank-server`
+    /// processes whose advertised GPU ranges must tile `0..num_gpus`
+    /// contiguously in list order. Empty (the default) hosts the rank
+    /// shards in-process per `rank_shards`; non-empty replaces the
+    /// in-process tier entirely (`rank_shards` is ignored — each
+    /// server brings its own shard count).
+    pub remote_ranks: Vec<String>,
 }
 
 /// What the frontend/worker tier did over a run, returned by
@@ -106,29 +132,45 @@ pub struct FrontendStats {
     /// Submissions that could not be delivered (a worker or ingest
     /// shard was already down). The seed silently swallowed these.
     pub dropped_submits: u64,
+    /// Remote rank-server connections that ended without this
+    /// coordinator asking (EOF, IO error, protocol violation). Always
+    /// 0 for an in-process rank tier. Non-zero means part of the rank
+    /// tier vanished mid-run: its workers failed fast and later
+    /// submissions count into `dropped_submits` — surfaced, not a
+    /// silent wedge.
+    pub rank_disconnects: u64,
 }
 
-/// A live coordinator: ingest shards + model-worker pool + rank shards.
+/// A live coordinator: ingest shards + model-worker pool + rank shards
+/// (in-process threads, or remote `rank-server` processes).
 pub struct Coordinator {
     pub clock: Clock,
     topo: ShardTopology,
     /// One sender per model (clones of the owning worker's inbox).
     model_txs: Vec<Sender<ToModel>>,
     pool: Option<ModelWorkerPool>,
+    depth: QueueDepthProbe,
     ingest: IngestTier,
-    shard_txs: Vec<Sender<ToRank>>,
+    /// One transport-agnostic port per rank shard.
+    ports: Vec<RankPort>,
+    /// In-process shard threads (empty with a remote rank tier).
     shard_handles: Vec<JoinHandle<ShardStats>>,
+    /// Remote rank-server connections (empty with an in-process tier).
+    remote: Vec<Arc<RemoteRank>>,
     dropped_submits: Arc<AtomicU64>,
+    rank_disconnects: Arc<AtomicU64>,
 }
 
 /// Cheap clonable handle for runtime cluster resizing (§3.5 live
-/// autoscaling): routes `Drain`/`Attach` to the shard owning the GPU.
+/// autoscaling): routes `Drain`/`Attach` to the shard owning the GPU —
+/// over the wire when the shard is remote (the ack comes back as a
+/// `DrainAck` frame; callers see the same `Sender<GpuId>` contract).
 /// Obtained from [`Coordinator::cluster_ctl`]; safe to hand to an
 /// autoscaler thread while the coordinator keeps serving.
 #[derive(Clone)]
 pub struct ClusterCtl {
     topo: ShardTopology,
-    shard_txs: Vec<Sender<ToRank>>,
+    ports: Vec<RankPort>,
     num_gpus: usize,
 }
 
@@ -141,14 +183,14 @@ impl ClusterCtl {
     /// Begin retiring `gpu`: its shard stops granting/advertising it
     /// immediately on receipt, lets any in-flight batch finish, then
     /// sends `gpu` on `ack` once it is provably idle.
-    pub fn drain(&self, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), SendError<ToRank>> {
-        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::Drain { gpu, ack })
+    pub fn drain(&self, gpu: GpuId, ack: Sender<GpuId>) -> std::result::Result<(), PortClosed> {
+        self.ports[self.topo.shard_of(gpu)].send(ToRank::Drain { gpu, ack })
     }
 
     /// Activate a detached GPU: it joins its shard's free set and is
     /// grantable from the next matchmaking pass.
-    pub fn attach(&self, gpu: GpuId) -> Result<(), SendError<ToRank>> {
-        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::Attach { gpu })
+    pub fn attach(&self, gpu: GpuId) -> std::result::Result<(), PortClosed> {
+        self.ports[self.topo.shard_of(gpu)].send(ToRank::Attach { gpu })
     }
 }
 
@@ -156,29 +198,97 @@ impl Coordinator {
     /// Spawn the scheduler threads. `backends[g]` receives the batches
     /// dispatched to GPU `g`; `completions` receives drop notices from
     /// the model workers (backends send their own batch completions).
+    /// Panics on failure — use [`Coordinator::try_spawn`] where a
+    /// remote rank tier makes failure (connection refused, topology
+    /// mismatch) an expected runtime condition.
     pub fn spawn(
         cfg: CoordinatorConfig,
         backends: Vec<Sender<ToBackend>>,
         completions: Sender<Completion>,
     ) -> Self {
+        Self::try_spawn(cfg, backends, completions).expect("spawn coordinator")
+    }
+
+    /// Fallible spawn: connects to `remote_ranks` (when configured)
+    /// before any thread starts, so a dead or misconfigured rank tier
+    /// fails the call instead of the first registration.
+    pub fn try_spawn(
+        cfg: CoordinatorConfig,
+        backends: Vec<Sender<ToBackend>>,
+        completions: Sender<Completion>,
+    ) -> Result<Self> {
         assert_eq!(backends.len(), cfg.num_gpus, "one backend per GPU");
         let clock = Clock::new();
-        let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
-        let shards = topo.num_shards();
-        let hints = FreeHints::new(shards);
         // The attached set is always the id prefix `0..active_end`.
         let active_end = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus) as u32;
 
-        // Rank-shard channels exist before the worker pool spawns (the
-        // workers hold the senders); the shard threads start after the
-        // pool so they can hold the per-model worker senders.
-        let mut shard_txs = Vec::new();
+        // Resolve the rank tier: in-process shard channels, or one
+        // connection (hosting several shards) per remote rank server.
+        let mut ports: Vec<RankPort> = Vec::new();
+        let mut remote: Vec<Arc<RemoteRank>> = Vec::new();
+        let mut shard_offsets: Vec<usize> = Vec::new();
         let mut shard_rx_store = Vec::new();
-        for _ in 0..shards {
-            let (tx, rx) = channel::<ToRank>();
-            shard_txs.push(tx);
-            shard_rx_store.push(rx);
-        }
+        let topo = if cfg.remote_ranks.is_empty() {
+            let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
+            for _ in 0..topo.num_shards() {
+                let (tx, rx) = channel::<ToRank>();
+                ports.push(RankPort::Local(tx));
+                shard_rx_store.push(rx);
+            }
+            topo
+        } else {
+            // Each server's advertised range must continue the tiling
+            // exactly where the previous one stopped.
+            let mut bounds: Vec<u32> = vec![0];
+            for addr in &cfg.remote_ranks {
+                let conn = Arc::new(RemoteRank::connect(
+                    addr,
+                    cfg.profiles.len(),
+                    clock,
+                    REMOTE_CONNECT_TIMEOUT,
+                )?);
+                let info = conn.info;
+                if info.gpu_lo != *bounds.last().unwrap() {
+                    crate::bail!(
+                        "rank-server {addr} owns GPUs {}..{} but the tiling is at {} — \
+                         pass servers in GPU-range order",
+                        info.gpu_lo,
+                        info.gpu_hi,
+                        bounds.last().unwrap()
+                    );
+                }
+                shard_offsets.push(ports.len());
+                let span = (info.gpu_hi - info.gpu_lo) as u64;
+                let r = info.shards as usize;
+                if r as u64 > span {
+                    crate::bail!(
+                        "rank-server {addr} advertises {r} shards over {span} GPUs \
+                         (empty shard ranges)"
+                    );
+                }
+                // Reconstruct the server's shard layout with the ONE
+                // shared split formula (`ShardTopology::split`) its
+                // session shards are laid out with — GPU routing
+                // depends on both sides agreeing exactly.
+                let server_range = info.gpu_lo..info.gpu_hi;
+                for s in 0..info.shards {
+                    ports.push(RankPort::Remote {
+                        conn: conn.clone(),
+                        shard: s,
+                    });
+                    bounds.push(ShardTopology::split(&server_range, r, s as usize + 1));
+                }
+                remote.push(conn);
+            }
+            if *bounds.last().unwrap() != cfg.num_gpus as u32 {
+                crate::bail!(
+                    "remote rank servers cover GPUs 0..{} but the cluster has {}",
+                    bounds.last().unwrap(),
+                    cfg.num_gpus
+                );
+            }
+            ShardTopology::from_bounds(bounds)
+        };
 
         let workers = cfg
             .model_workers
@@ -188,32 +298,53 @@ impl Coordinator {
             workers,
             clock,
             &topo,
-            &shard_txs,
+            &ports,
             &backends,
             &completions,
             cfg.net_bound,
             cfg.exec_margin,
         );
         let model_txs = pool.model_txs();
+        let depth = pool.queue_depth_probe();
+        let rank_disconnects = Arc::new(AtomicU64::new(0));
 
         let mut shard_handles = Vec::new();
-        for (s, rx) in shard_rx_store.into_iter().enumerate() {
-            let range = topo.range(s);
-            let shard = RankShard {
-                clock,
-                shard: s,
-                inbox: rx,
-                model_txs: model_txs.clone(),
-                active: range.start.min(active_end)..range.end.min(active_end),
-                gpus: range,
-                hints: hints.clone(),
-            };
-            shard_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("rank-shard-{s}"))
-                    .spawn(move || shard.run())
-                    .expect("spawn rank shard"),
-            );
+        if cfg.remote_ranks.is_empty() {
+            // Free hints exist only for in-process shards; a remote
+            // tier's hints live server-side, per session.
+            let hints = FreeHints::new(topo.num_shards());
+            for (s, rx) in shard_rx_store.into_iter().enumerate() {
+                let range = topo.range(s);
+                let shard = RankShard {
+                    clock,
+                    shard: s,
+                    inbox: rx,
+                    model_txs: model_txs.clone(),
+                    active: range.start.min(active_end)..range.end.min(active_end),
+                    gpus: range,
+                    hints: hints.clone(),
+                };
+                shard_handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("rank-shard-{s}"))
+                        .spawn(move || shard.run())
+                        .expect("spawn rank shard"),
+                );
+            }
+        } else {
+            for (conn, offset) in remote.iter().zip(&shard_offsets) {
+                conn.start_reader(model_txs.clone(), *offset, rank_disconnects.clone());
+            }
+            // Remote sessions spawn fully attached; detach the
+            // headroom the way the autoscaler would — a drain of a
+            // free GPU retires it immediately, and the per-connection
+            // frame order guarantees the drains land before any
+            // candidate traffic.
+            for g in active_end..cfg.num_gpus as u32 {
+                let (ack_tx, _ack_rx) = channel::<GpuId>();
+                let gpu = GpuId(g);
+                let _ = ports[topo.shard_of(gpu)].send(ToRank::Drain { gpu, ack: ack_tx });
+            }
         }
 
         let dropped_submits = Arc::new(AtomicU64::new(0));
@@ -223,25 +354,40 @@ impl Coordinator {
             dropped_submits.clone(),
         );
 
-        Coordinator {
+        Ok(Coordinator {
             clock,
             topo,
             model_txs,
             pool: Some(pool),
+            depth,
             ingest,
-            shard_txs,
+            ports,
             shard_handles,
+            remote,
             dropped_submits,
-        }
+            rank_disconnects,
+        })
     }
 
     /// Handle for runtime GPU drain/attach (live autoscaling).
     pub fn cluster_ctl(&self) -> ClusterCtl {
         ClusterCtl {
             topo: self.topo.clone(),
-            shard_txs: self.shard_txs.clone(),
+            ports: self.ports.clone(),
             num_gpus: self.topo.range(self.topo.num_shards() - 1).end as usize,
         }
+    }
+
+    /// Live backlog across the model workers (the autoscaler's
+    /// queue-depth signal).
+    pub fn queue_depth_probe(&self) -> QueueDepthProbe {
+        self.depth.clone()
+    }
+
+    /// Remote rank-server sessions that ended without this coordinator
+    /// asking (see [`FrontendStats::rank_disconnects`]).
+    pub fn rank_disconnects(&self) -> u64 {
+        self.rank_disconnects.load(Ordering::Relaxed)
     }
 
     /// A producer-side submission handle routed through the ingest
@@ -317,6 +463,10 @@ impl Coordinator {
 
     /// Stop all threads; returns the frontend/worker statistics plus
     /// the merged per-shard grant statistics (Fig 13 left reporting).
+    /// With a remote rank tier the servers keep the authoritative
+    /// per-shard stats (logged there per session); the client-side
+    /// count of delivered `Granted` frames is merged here so `grants`
+    /// stays meaningful either way.
     pub fn shutdown_stats(mut self) -> (FrontendStats, ShardStats) {
         // Ingest first and joined: any burst they absorbed is in a
         // worker inbox before the workers see Shutdown.
@@ -326,8 +476,8 @@ impl Coordinator {
             .take()
             .map(ModelWorkerPool::shutdown_join)
             .unwrap_or_default();
-        for tx in &self.shard_txs {
-            let _ = tx.send(ToRank::Shutdown);
+        for port in &self.ports {
+            let _ = port.send(ToRank::Shutdown);
         }
         let mut stats = ShardStats::new();
         for h in self.shard_handles.drain(..) {
@@ -335,11 +485,16 @@ impl Coordinator {
                 stats.merge(&s);
             }
         }
+        for conn in &self.remote {
+            conn.join();
+            stats.grants += conn.grants();
+        }
         let front = FrontendStats {
             processed: worker_stats.processed,
             flush_recomputes: worker_stats.flush_recomputes,
             ingest_forwarded,
             dropped_submits: self.dropped_submits.load(Ordering::Relaxed),
+            rank_disconnects: self.rank_disconnects.load(Ordering::Relaxed),
         };
         (front, stats)
     }
@@ -349,7 +504,6 @@ impl Coordinator {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
-    use std::time::Duration;
 
     fn cfg(profiles: Vec<LatencyProfile>, num_gpus: usize, rank_shards: usize) -> CoordinatorConfig {
         CoordinatorConfig {
@@ -361,6 +515,7 @@ mod tests {
             model_workers: None,
             net_bound: Micros::from_millis_f64(2.0),
             exec_margin: Micros::from_millis_f64(0.5),
+            remote_ranks: Vec::new(),
         }
     }
 

@@ -23,14 +23,16 @@
 //! verdicts migrate the candidate to a shard with free capacity, and a
 //! grant or revalidation resets the registration to the home shard.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::MAX_DRAIN;
 
 use crate::coordinator::clock::Clock;
-use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
-use crate::coordinator::router::{RankRouter, ShardTopology};
+use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel};
+use crate::coordinator::router::{RankPort, RankRouter, ShardTopology};
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{ModelId, ReqBurst, Request};
@@ -85,6 +87,12 @@ pub struct ModelWorker {
     completions: Sender<Completion>,
     net_bound: Micros,
     exec_margin: Micros,
+    /// Requests sitting in this worker's model queues right now
+    /// (delta-maintained: +arrivals, −dispatches, −sheds), published to
+    /// `depth[worker]` once per drain — the autoscaler's backlog
+    /// signal (`WindowStats::queue_depth`).
+    queued: u64,
+    depth: Arc<Vec<AtomicU64>>,
 }
 
 impl ModelWorker {
@@ -152,7 +160,14 @@ impl ModelWorker {
                     break 'outer;
                 }
             }
+            // Publish this worker's backlog once per drain (the
+            // flush-rate queue-depth signal; see `QueueDepthProbe`).
+            self.depth[self.worker].store(self.queued, Ordering::Relaxed);
         }
+        // A dying worker's residual backlog stays published: requests
+        // stranded behind a dead rank port still read as backlog, not
+        // as an idle tier.
+        self.depth[self.worker].store(self.queued, Ordering::Relaxed);
         stats
     }
 
@@ -164,6 +179,7 @@ impl ModelWorker {
             .queue
             .candidate(&slot.profile, now, self.net_bound, dropped);
         if !dropped.is_empty() {
+            self.queued = self.queued.saturating_sub(dropped.len() as u64);
             let _ = self
                 .completions
                 .send(Completion::Dropped(std::mem::take(dropped)));
@@ -188,6 +204,7 @@ impl ModelWorker {
         match msg {
             ToModel::Request(r) => {
                 stats.processed += 1;
+                self.queued += 1;
                 let si = self.slot_of(r.model);
                 debug_assert_eq!(self.slots[si].model, r.model, "slot layout broken");
                 self.slots[si].queue.push(r);
@@ -195,6 +212,7 @@ impl ModelWorker {
             }
             ToModel::Requests { model, burst } => {
                 stats.processed += burst.len() as u64;
+                self.queued += burst.len() as u64;
                 let si = self.slot_of(model);
                 for &r in burst.iter() {
                     debug_assert_eq!(r.model, model, "mixed-model burst");
@@ -215,12 +233,14 @@ impl ModelWorker {
                     let slot = &mut self.slots[si];
                     let batch = slot.queue.take_burst(c.size as usize);
                     let busy_until = now + slot.profile.latency(c.size) + self.exec_margin;
+                    let dispatched = batch.len() as u64;
                     let _ = self.backends[gpu.0 as usize].send(ToBackend::Execute {
                         model,
                         requests: batch,
                         dispatched_at: now,
                     });
                     let _ = slot.router.gpu_busy_until(gpu, busy_until);
+                    self.queued = self.queued.saturating_sub(dispatched);
                 } else {
                     // Nothing left to run; hand the GPU back as free.
                     let _ = self.slots[si].router.gpu_busy_until(gpu, now);
@@ -286,6 +306,20 @@ impl ModelWorker {
     }
 }
 
+/// Live view of the worker pool's backlog: one published counter per
+/// worker, summed on read. Cheap to clone and hand to the autoscale
+/// epoch loop — see [`crate::autoscale::WindowStats::queue_depth`].
+#[derive(Clone)]
+pub struct QueueDepthProbe(Arc<Vec<AtomicU64>>);
+
+impl QueueDepthProbe {
+    /// Requests queued across all model workers, as of each worker's
+    /// last flush.
+    pub fn total(&self) -> u64 {
+        self.0.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+}
+
 /// The spawned pool: `W` [`ModelWorker`] threads plus their inboxes.
 /// Rank shards and frontends address model `m` through
 /// [`ModelWorkerPool::model_txs`] (clones of worker `m % W`'s sender).
@@ -293,6 +327,7 @@ pub struct ModelWorkerPool {
     worker_txs: Vec<Sender<ToModel>>,
     handles: Vec<JoinHandle<WorkerStats>>,
     n_models: usize,
+    depth: Arc<Vec<AtomicU64>>,
 }
 
 impl ModelWorkerPool {
@@ -306,15 +341,16 @@ impl ModelWorkerPool {
         n_models.clamp(1, cores.max(1))
     }
 
-    /// Spawn the pool. `shard_txs` must be the live rank-shard inboxes
-    /// (the shard *threads* may start later; the channels must exist).
+    /// Spawn the pool. `ports` must address the live rank shards —
+    /// in-process inboxes (whose threads may start later; the channels
+    /// must exist) or remote rank-server connections.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         profiles: &[LatencyProfile],
         workers: usize,
         clock: Clock,
         topo: &ShardTopology,
-        shard_txs: &[Sender<ToRank>],
+        ports: &[RankPort],
         backends: &[Sender<ToBackend>],
         completions: &Sender<Completion>,
         net_bound: Micros,
@@ -322,6 +358,8 @@ impl ModelWorkerPool {
     ) -> Self {
         let n_models = profiles.len();
         let workers = workers.clamp(1, n_models.max(1));
+        let depth: Arc<Vec<AtomicU64>> =
+            Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect());
         let mut worker_txs = Vec::with_capacity(workers);
         let mut rx_store = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -337,7 +375,7 @@ impl ModelWorkerPool {
                     model: ModelId(m as u32),
                     profile: profiles[m],
                     queue: TrackingQueue::new(),
-                    router: RankRouter::new(topo.clone(), shard_txs.to_vec(), ModelId(m as u32)),
+                    router: RankRouter::new(topo.clone(), ports.to_vec(), ModelId(m as u32)),
                     hops: 0,
                     dirty: false,
                 })
@@ -352,6 +390,8 @@ impl ModelWorkerPool {
                 completions: completions.clone(),
                 net_bound,
                 exec_margin,
+                queued: 0,
+                depth: depth.clone(),
             };
             handles.push(
                 std::thread::Builder::new()
@@ -364,12 +404,18 @@ impl ModelWorkerPool {
             worker_txs,
             handles,
             n_models,
+            depth,
         }
     }
 
     /// OS threads the pool runs on.
     pub fn num_workers(&self) -> usize {
         self.worker_txs.len()
+    }
+
+    /// Clonable live backlog view (see [`QueueDepthProbe`]).
+    pub fn queue_depth_probe(&self) -> QueueDepthProbe {
+        QueueDepthProbe(self.depth.clone())
     }
 
     /// One sender per model (clones of the owning worker's inbox) for

@@ -460,21 +460,23 @@ impl RankShard {
             //    the lowest sibling shard advertising free capacity
             //    (consolidation order — shard 0 fills first). A
             //    candidate that has already migrated `num_shards` times
-            //    parks here until it is granted or expires.
+            //    parks here until it is granted or expires. Targets are
+            //    *reserved*, not merely read: `FreeHints::reserve`
+            //    atomically decrements the advertised count, so two
+            //    starved shards steering concurrently cannot both aim
+            //    a candidate at the same free GPU — the reservation
+            //    satellite that cuts the mis-steer rate the fig13
+            //    table measures.
             if st.free.is_empty() && !st.ready.is_empty() && num_shards > 1 {
-                let mut budgets: Vec<usize> = (0..num_shards)
-                    .map(|s| if s == shard { 0 } else { hints.free_of(s) })
-                    .collect();
                 let mut steer: Vec<(ModelId, usize, u64)> = Vec::new();
                 for &(_, m) in st.ready.iter() {
                     let cs = &st.cands[&m];
                     if cs.hops as usize >= num_shards {
                         continue;
                     }
-                    let Some(t) = budgets.iter().position(|&b| b > 0) else {
+                    let Some(t) = (0..num_shards).find(|&s| s != shard && hints.reserve(s)) else {
                         break;
                     };
-                    budgets[t] -= 1;
                     steer.push((m, t, cs.seq));
                 }
                 for (m, to_shard, seq) in steer {
@@ -911,5 +913,61 @@ mod tests {
         let stats = h.join().unwrap();
         assert_eq!(stats.mis_steers, 1, "exactly the steered arrival counts");
         assert_eq!(stats.grants, 0);
+    }
+
+    /// The reservation satellite, extending the mis-steer scenario to
+    /// *concurrent* steering: two starved shards race for one
+    /// advertised slot on a third. With the old read-only hints both
+    /// could steer — the loser's candidate arrives at a full shard, a
+    /// guaranteed mis-steer. `FreeHints::reserve` lets exactly one
+    /// claim the slot; the other's candidate parks, so the would-be
+    /// mis-steer never leaves its shard.
+    #[test]
+    fn concurrent_steering_reserves_one_slot() {
+        let hints = FreeHints::new(3);
+        // Shard 2 (not spawned: its hint never republishes, keeping the
+        // race window open for the whole test) advertises ONE slot.
+        hints.publish(2, 1);
+        // Two real, permanently GPU-starved shards with one ready
+        // candidate each.
+        let (clock0, tx0, rx0, h0) = spawn_shard(0, 0..0, hints.clone(), 1);
+        let (_clock1, tx1, rx1, h1) = spawn_shard(1, 0..0, hints.clone(), 1);
+        let far = clock0.now() + ms(500.0);
+        let cand = CandWindow {
+            exec: Micros(0),
+            latest: far,
+            size: 1,
+        };
+        for tx in [&tx0, &tx1] {
+            tx.send(ToRank::Candidate {
+                model: ModelId(0),
+                cand: Some(cand),
+                seq: 1,
+                hops: 0,
+            })
+            .unwrap();
+        }
+        // Both shards retry steering on their starved poll for the
+        // whole window; only one may ever emit an Overflow verdict.
+        std::thread::sleep(Duration::from_millis(120));
+        tx0.send(ToRank::Shutdown).unwrap();
+        tx1.send(ToRank::Shutdown).unwrap();
+        let _ = h0.join().unwrap();
+        let _ = h1.join().unwrap();
+        let verdicts: Vec<ToModel> = rx0[0]
+            .try_iter()
+            .chain(rx1[0].try_iter())
+            .filter(|m| matches!(m, ToModel::Overflow { .. }))
+            .collect();
+        assert_eq!(
+            verdicts.len(),
+            1,
+            "one advertised slot must yield exactly one steer: {verdicts:?}"
+        );
+        assert!(
+            matches!(verdicts[0], ToModel::Overflow { to_shard: 2, .. }),
+            "{verdicts:?}"
+        );
+        assert_eq!(hints.free_of(2), 0, "the slot was claimed");
     }
 }

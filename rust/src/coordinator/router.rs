@@ -8,14 +8,85 @@
 //! candidate updates there, clears the old registration when the
 //! candidate migrates on overflow, and routes `GpuBusyUntil` to the
 //! shard owning the GPU.
+//!
+//! The router addresses shards through [`RankPort`]s: an in-process
+//! mpsc sender, or one shard of a [`crate::net`] rank-server
+//! connection. Everything above this layer — the router's coalescing,
+//! overflow steering, the drain/attach autoscaler protocol — is
+//! transport-agnostic; `serve --remote-ranks` swaps the port kind and
+//! nothing else.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{SendError, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::coordinator::messages::{CandWindow, ToRank};
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId};
+use crate::net::client::RemoteRank;
+use crate::net::codec::WireToRank;
+
+/// The rank shard behind a [`RankPort`] is unreachable: its thread
+/// exited (in-process) or its connection closed (remote). The message
+/// is gone either way — senders treat this like a disconnected channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PortClosed;
+
+impl std::fmt::Display for PortClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank port closed")
+    }
+}
+
+impl std::error::Error for PortClosed {}
+
+/// Transport-agnostic handle to one rank shard.
+#[derive(Clone)]
+pub enum RankPort {
+    /// In-process shard thread (the pre-wire configuration).
+    Local(Sender<ToRank>),
+    /// One shard of a remote `symphony rank-server` connection; the
+    /// shard index rides in every up-frame's header.
+    Remote { conn: Arc<RemoteRank>, shard: u16 },
+}
+
+impl RankPort {
+    /// Deliver `msg` to the shard. For a remote port the in-process
+    /// vocabulary maps onto the wire: `Drain`'s ack sender is parked in
+    /// the connection's ack table until the matching `DrainAck` frame
+    /// returns, and `Shutdown` becomes a connection close (the server
+    /// shuts its session shards down on EOF).
+    pub fn send(&self, msg: ToRank) -> Result<(), PortClosed> {
+        match self {
+            RankPort::Local(tx) => tx.send(msg).map_err(|_| PortClosed),
+            RankPort::Remote { conn, shard } => match msg {
+                ToRank::Candidate {
+                    model,
+                    cand,
+                    seq,
+                    hops,
+                } => conn.send(
+                    *shard,
+                    &WireToRank::Candidate {
+                        model,
+                        cand,
+                        seq,
+                        hops,
+                    },
+                ),
+                ToRank::GpuBusyUntil { gpu, free_at } => {
+                    conn.send(*shard, &WireToRank::GpuBusyUntil { gpu, free_at })
+                }
+                ToRank::Drain { gpu, ack } => conn.drain(*shard, gpu, ack),
+                ToRank::Attach { gpu } => conn.attach(*shard, gpu),
+                ToRank::Shutdown => {
+                    conn.close();
+                    Ok(())
+                }
+            },
+        }
+    }
+}
 
 /// Contiguous partition of `num_gpus` GPU ids across `shards` ranges.
 #[derive(Clone, Debug)]
@@ -29,8 +100,34 @@ impl ShardTopology {
         let shards = shards.clamp(1, num_gpus.max(1));
         let mut bounds = Vec::with_capacity(shards + 1);
         for s in 0..=shards {
-            bounds.push((num_gpus * s / shards) as u32);
+            bounds.push(Self::split(&(0..num_gpus as u32), shards, s));
         }
+        ShardTopology { bounds }
+    }
+
+    /// The one contiguous-split formula both ends of the wire derive
+    /// from: splitting `range` into `shards` sub-ranges, sub-range `s`
+    /// is `split(range, shards, s)..split(range, shards, s + 1)`.
+    /// Used by `new` (in-process), by the rank server laying out its
+    /// session shards, and by the client rebuilding the topology from
+    /// server preambles — GPU routing depends on all three agreeing,
+    /// so none of them may hand-roll the arithmetic.
+    pub fn split(range: &std::ops::Range<u32>, shards: usize, s: usize) -> u32 {
+        let len = (range.end - range.start) as u64;
+        range.start + (len * s as u64 / shards.max(1) as u64) as u32
+    }
+
+    /// Topology from explicit shard bounds (`bounds[s]..bounds[s+1]`
+    /// per shard) — how a remote rank tier's topology is assembled from
+    /// the per-server preambles. Bounds must start at 0 and be strictly
+    /// ascending (no empty shard ranges).
+    pub fn from_bounds(bounds: Vec<u32>) -> Self {
+        assert!(bounds.len() >= 2, "need at least one shard range");
+        assert_eq!(bounds[0], 0, "shard 0 must start at GPU id 0");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "shard bounds must be strictly ascending: {bounds:?}"
+        );
         ShardTopology { bounds }
     }
 
@@ -87,6 +184,21 @@ impl FreeHints {
     pub fn free_of(&self, shard: usize) -> usize {
         self.counts[shard].load(Ordering::Relaxed)
     }
+
+    /// Atomically claim one advertised free slot on `shard`: decrement
+    /// its published count if still positive, returning whether a slot
+    /// was claimed. Steering shards reserve instead of merely reading,
+    /// so two GPU-starved shards racing on the same advertisement
+    /// cannot both steer a candidate at one free GPU (the ROADMAP's
+    /// "per-shard reserved count"). The owning shard's next `publish`
+    /// overwrites outstanding reservations — the hint stays a hint, not
+    /// a ledger; the reservation narrows the mis-steer window rather
+    /// than closing it.
+    pub fn reserve(&self, shard: usize) -> bool {
+        self.counts[shard]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| c.checked_sub(1))
+            .is_ok()
+    }
 }
 
 /// ModelThread-side routing handle. Owns the single-authority invariant:
@@ -94,7 +206,7 @@ impl FreeHints {
 /// messages in flight, which the `seq` echo makes detectable).
 pub struct RankRouter {
     topo: ShardTopology,
-    shard_txs: Vec<Sender<ToRank>>,
+    ports: Vec<RankPort>,
     model: ModelId,
     home: usize,
     /// Shard currently holding the registration.
@@ -109,12 +221,12 @@ pub struct RankRouter {
 }
 
 impl RankRouter {
-    pub fn new(topo: ShardTopology, shard_txs: Vec<Sender<ToRank>>, model: ModelId) -> Self {
-        assert_eq!(topo.num_shards(), shard_txs.len(), "one inbox per shard");
+    pub fn new(topo: ShardTopology, ports: Vec<RankPort>, model: ModelId) -> Self {
+        assert_eq!(topo.num_shards(), ports.len(), "one port per shard");
         let home = topo.home_of(model);
         RankRouter {
             topo,
-            shard_txs,
+            ports,
             model,
             home,
             reg_shard: home,
@@ -126,7 +238,7 @@ impl RankRouter {
     }
 
     pub fn num_shards(&self) -> usize {
-        self.shard_txs.len()
+        self.ports.len()
     }
 
     /// The registration sequence the router most recently sent.
@@ -142,7 +254,7 @@ impl RankRouter {
     /// Register / replace / clear the candidate at its *home* shard
     /// (post-grant re-registration, revalidation — a fresh logical
     /// candidate).
-    pub fn register_home(&mut self, cand: Option<CandWindow>) -> Result<(), SendError<ToRank>> {
+    pub fn register_home(&mut self, cand: Option<CandWindow>) -> Result<(), PortClosed> {
         self.register_at(self.home, cand, 0)
     }
 
@@ -165,7 +277,7 @@ impl RankRouter {
         &mut self,
         cand: Option<CandWindow>,
         hops: u32,
-    ) -> Result<(), SendError<ToRank>> {
+    ) -> Result<(), PortClosed> {
         if let (Some(new), Some(Some(prev))) = (cand.as_ref(), self.last_sent.as_ref()) {
             if new.size == prev.size && new.latest == prev.latest && new.exec >= prev.exec {
                 return Ok(());
@@ -188,7 +300,7 @@ impl RankRouter {
         shard: usize,
         cand: Option<CandWindow>,
         hops: u32,
-    ) -> Result<(), SendError<ToRank>> {
+    ) -> Result<(), PortClosed> {
         self.register_at(shard.min(self.num_shards() - 1), cand, hops)
     }
 
@@ -197,13 +309,13 @@ impl RankRouter {
         shard: usize,
         cand: Option<CandWindow>,
         hops: u32,
-    ) -> Result<(), SendError<ToRank>> {
+    ) -> Result<(), PortClosed> {
         if shard != self.reg_shard {
             // Clear the old registration first so at most one shard can
             // grant for this model (a grant already in flight is handled
             // by the ModelThread returning the GPU unused).
             self.seq += 1;
-            let _ = self.shard_txs[self.reg_shard].send(ToRank::Candidate {
+            let _ = self.ports[self.reg_shard].send(ToRank::Candidate {
                 model: self.model,
                 cand: None,
                 seq: self.seq,
@@ -212,7 +324,7 @@ impl RankRouter {
             self.reg_shard = shard;
         }
         self.seq += 1;
-        let res = self.shard_txs[shard].send(ToRank::Candidate {
+        let res = self.ports[shard].send(ToRank::Candidate {
             model: self.model,
             cand,
             seq: self.seq,
@@ -223,8 +335,8 @@ impl RankRouter {
     }
 
     /// `inform_gpu`: routed to the shard that owns the GPU.
-    pub fn gpu_busy_until(&self, gpu: GpuId, free_at: Micros) -> Result<(), SendError<ToRank>> {
-        self.shard_txs[self.topo.shard_of(gpu)].send(ToRank::GpuBusyUntil { gpu, free_at })
+    pub fn gpu_busy_until(&self, gpu: GpuId, free_at: Micros) -> Result<(), PortClosed> {
+        self.ports[self.topo.shard_of(gpu)].send(ToRank::GpuBusyUntil { gpu, free_at })
     }
 }
 
@@ -267,6 +379,47 @@ mod tests {
     }
 
     #[test]
+    fn topology_from_explicit_bounds() {
+        let t = ShardTopology::from_bounds(vec![0, 2, 3, 7]);
+        assert_eq!(t.num_shards(), 3);
+        assert_eq!(t.range(0), 0..2);
+        assert_eq!(t.range(2), 3..7);
+        assert_eq!(t.shard_of(GpuId(2)), 1);
+        assert_eq!(t.shard_of(GpuId(6)), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn topology_from_bounds_rejects_empty_ranges() {
+        let _ = ShardTopology::from_bounds(vec![0, 2, 2, 4]);
+    }
+
+    /// Both ends of the wire derive shard layouts from
+    /// `ShardTopology::split`; pin that `new` agrees with it and that
+    /// an offset range tiles contiguously with no empty sub-range
+    /// (what the rank server and the client reconstruction rely on).
+    #[test]
+    fn split_is_the_single_layout_formula() {
+        let t = ShardTopology::new(10, 4);
+        for s in 0..4 {
+            let lo = ShardTopology::split(&(0..10), 4, s);
+            let hi = ShardTopology::split(&(0..10), 4, s + 1);
+            assert_eq!(t.range(s), lo..hi, "shard {s}");
+        }
+        // Offset range (a rank server owning 3..11, 3 shards).
+        let r = 3..11u32;
+        let mut expect = 3u32;
+        for s in 0..3 {
+            let lo = ShardTopology::split(&r, 3, s);
+            let hi = ShardTopology::split(&r, 3, s + 1);
+            assert_eq!(lo, expect, "contiguous tiling");
+            assert!(hi > lo, "no empty sub-range");
+            expect = hi;
+        }
+        assert_eq!(expect, 11);
+    }
+
+    #[test]
     fn hints_publish_and_read_per_shard() {
         let h = FreeHints::new(3);
         assert_eq!(h.num_shards(), 3);
@@ -278,6 +431,39 @@ mod tests {
         assert_eq!(h.free_of(2), 0);
     }
 
+    /// The reservation satellite: `k` advertised slots yield at most
+    /// `k` successful reservations no matter how many threads race on
+    /// them — concurrent steerers can no longer all claim the same
+    /// free GPU off a shared hint.
+    #[test]
+    fn reserve_caps_concurrent_claims_at_advertised() {
+        use std::sync::atomic::AtomicUsize;
+        let h = FreeHints::new(2);
+        h.publish(1, 3);
+        let wins = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let h = h.clone();
+            let wins = wins.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..4 {
+                    if h.reserve(1) {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(wins.load(Ordering::Relaxed), 3, "3 slots, 3 winners");
+        assert_eq!(h.free_of(1), 0);
+        assert!(!h.reserve(1), "an empty hint is never claimable");
+        // The owning shard republishing resets the claimable budget.
+        h.publish(1, 1);
+        assert!(h.reserve(1));
+    }
+
     /// Unchanged-window re-registrations coalesce to a single send; an
     /// invalidation (grant/revalidate/overflow) forces the next send.
     #[test]
@@ -285,7 +471,7 @@ mod tests {
         use std::sync::mpsc::channel;
         let topo = ShardTopology::new(2, 1);
         let (tx, rx) = channel();
-        let mut r = RankRouter::new(topo, vec![tx], ModelId(0));
+        let mut r = RankRouter::new(topo, vec![RankPort::Local(tx)], ModelId(0));
         let w = CandWindow {
             exec: Micros(10),
             latest: Micros(20),
@@ -322,7 +508,11 @@ mod tests {
         let (tx0, rx0) = channel();
         let (tx1, rx1) = channel();
         // ModelId(0) homes on shard 0.
-        let mut r = RankRouter::new(topo, vec![tx0, tx1], ModelId(0));
+        let mut r = RankRouter::new(
+            topo,
+            vec![RankPort::Local(tx0), RankPort::Local(tx1)],
+            ModelId(0),
+        );
         let cand = CandWindow {
             exec: Micros(10),
             latest: Micros(20),

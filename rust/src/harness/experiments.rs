@@ -791,6 +791,9 @@ impl EngineDriver for AutoscaleDriver {
             bad: dbad,
             busy_fraction: if active > 0 { busy_sum / active as f64 } else { 0.0 },
             active_gpus: active,
+            // The sim-side driver has no worker-pool probe; the busy
+            // fraction is exact here, so the backlog veto is moot.
+            queue_depth: 0,
         };
         let advice = self.ctl.advise(&stats);
         let mut delta: i64 = 0;

@@ -8,9 +8,10 @@
 //!   batch scheduler ([`scheduler::deferred`]), four baselines
 //!   (Clockwork / Nexus / Shepherd / timeout-eager), the discrete-event
 //!   cluster emulator ([`sim`]), the multithreaded
-//!   ingest-shard/model-worker/rank-shard coordinator ([`coordinator`]), the
-//!   autoscaling controller ([`autoscale`]), and the sub-cluster
-//!   partitioner ([`partition`]).
+//!   ingest-shard/model-worker/rank-shard coordinator ([`coordinator`]),
+//!   the wire-level distributed rank tier ([`net`]: `symphony
+//!   rank-server` / `serve --remote-ranks`), the autoscaling controller
+//!   ([`autoscale`]), and the sub-cluster partitioner ([`partition`]).
 //! * **Layer 2 (JAX, build-time)** — `python/compile/model.py`, lowered
 //!   to HLO text once per batch size.
 //! * **Layer 1 (Pallas, build-time)** — the fused dense kernels in
@@ -28,6 +29,7 @@ pub mod coordinator;
 pub mod core;
 pub mod harness;
 pub mod metrics;
+pub mod net;
 pub mod partition;
 pub mod runtime;
 pub mod scheduler;

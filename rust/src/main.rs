@@ -4,6 +4,7 @@
 //! symphony fig <id>              regenerate a paper figure/table
 //! symphony simulate [opts]       one simulation run, printed summary
 //! symphony serve [opts]          real-time serving (sleep or PJRT backend)
+//! symphony rank-server [opts]    host rank shards for a remote serve
 //! symphony zoo [1080ti|a100]     print the model zoo
 //! symphony analytic <model> <slo_ms> <gpus>
 //! symphony partition [models] [parts] [budget_ms]
@@ -37,6 +38,7 @@ fn main() {
         "fig" => cmd_fig(&rest),
         "simulate" => cmd_simulate(&rest),
         "serve" => cmd_serve(&rest),
+        "rank-server" => cmd_rank_server(&rest),
         "zoo" => cmd_zoo(&rest),
         "analytic" => cmd_analytic(&rest),
         "partition" => cmd_partition(&rest),
@@ -56,8 +58,11 @@ fn usage() {
          symphony simulate [--system S] [--gpus N] [--models N] [--rate R] [--slo MS] [--secs S]\n  \
          symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--ingest-shards F]\n  \
                  [--model-workers W] [--rate R] [--secs S]\n  \
+                 [--remote-ranks host:port,..] [--assert-grants]\n  \
          symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
-                 [--epoch-ms E] [--rates R1,R2,..] [--assert-scale]\n  \
+                 [--epoch-ms E] [--backlog-per-gpu B] [--rates R1,R2,..] [--assert-scale]\n  \
+         symphony rank-server [--listen ADDR] [--shards R] [--gpu-range LO..HI]\n  \
+                 [--max-sessions N]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n\n\
          systems: symphony clockwork nexus shepherd eager"
@@ -262,7 +267,20 @@ fn cmd_serve(rest: &[String]) {
         min_gpus: getu(&f, "min-gpus", 1),
         max_gpus: getu(&f, "max-gpus", gpus),
         epoch: Micros::from_millis_f64(getf(&f, "epoch-ms", 500.0)),
+        backlog_per_gpu: getf(&f, "backlog-per-gpu", 4.0),
     });
+    // `--remote-ranks host:port,..`: replace the in-process rank tier
+    // with running `symphony rank-server` processes (their GPU ranges
+    // must tile 0..gpus in list order).
+    let remote_ranks: Vec<String> = f
+        .get("remote-ranks")
+        .map(|spec| {
+            spec.split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
     // `--rates r1,r2,...` splits the duration into equal phases — the
     // Fig 15-style changing workload (low→high→low exercises both the
     // allocate and the drain path).
@@ -294,6 +312,7 @@ fn cmd_serve(rest: &[String]) {
         rank_shards,
         ingest_shards,
         model_workers,
+        remote_ranks,
         total_rate: rate,
         rate_phases,
         duration: Duration::from_secs_f64(secs),
@@ -345,6 +364,70 @@ fn cmd_serve(rest: &[String]) {
              (mis_steers={})",
             report.mis_steers
         );
+    }
+    // CI smoke assertion for the wire path: the run must have been
+    // scheduled (grants flowed back over the rank tier) and no rank
+    // server may have dropped the session.
+    if f.contains_key("assert-grants") {
+        if report.grants == 0 || report.rank_disconnects > 0 {
+            eprintln!(
+                "assert-grants FAILED: grants={} rank_disconnects={}",
+                report.grants, report.rank_disconnects
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "assert-grants OK: grants={} completed={} rank_disconnects=0",
+            report.grants, report.completed
+        );
+    }
+}
+
+/// `symphony rank-server --listen ADDR --shards R --gpu-range LO..HI`:
+/// host real rank shards for a `serve --remote-ranks` coordinator in
+/// another process (see `net/server.rs`).
+fn cmd_rank_server(rest: &[String]) {
+    let f = flags(rest);
+    let listen = f
+        .get("listen")
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7811".to_string());
+    let shards = getu(&f, "shards", 1);
+    let gpus = match f.get("gpu-range") {
+        Some(spec) => {
+            let parts: Vec<&str> = spec.split("..").collect();
+            let parsed = match parts[..] {
+                [lo, hi] => lo.trim().parse::<u32>().ok().zip(hi.trim().parse::<u32>().ok()),
+                _ => None,
+            };
+            match parsed {
+                Some((lo, hi)) if lo < hi => lo..hi,
+                _ => {
+                    eprintln!("--gpu-range wants LO..HI with LO < HI, got {spec:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        None => 0..2,
+    };
+    let max_sessions = f.get("max-sessions").and_then(|v| v.parse().ok());
+    let server = match symphony::net::server::RankServer::bind(
+        symphony::net::server::RankServerConfig {
+            listen,
+            shards,
+            gpus,
+            max_sessions,
+        },
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("rank-server failed to bind: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    if let Err(e) = server.run() {
+        eprintln!("rank-server failed: {e:#}");
+        std::process::exit(1);
     }
 }
 

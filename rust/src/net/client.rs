@@ -1,0 +1,312 @@
+//! Client side of the rank-coordination wire: one [`RemoteRank`] per
+//! `symphony rank-server` connection.
+//!
+//! A connection multiplexes every shard the server hosts. The write
+//! side goes through the coalescing [`crate::net::transport`] writer
+//! (one syscall per queued burst); a single reader thread decodes the
+//! down-traffic and fans it out exactly like an in-process rank shard
+//! would:
+//!
+//! * `Granted` / `Revalidate` / `Overflow` → the owning model worker's
+//!   inbox (`Overflow::to_shard` is re-based from the server-local
+//!   shard index into the client's global topology);
+//! * `DrainAck` → the `Sender<GpuId>` parked in the ack table when the
+//!   matching `Drain` was issued — the wire form of the in-process
+//!   `ToRank::Drain { ack }` contract, so `ClusterCtl` and the live
+//!   autoscaler work unchanged over the wire.
+//!
+//! A disconnect that the client did not initiate is **surfaced, never
+//! swallowed**: the shared disconnect counter increments, the event is
+//! logged, and the send queue closes so every subsequent
+//! [`RemoteRank::send`] fails fast with [`PortClosed`] — model workers
+//! observe a dead rank tier exactly like a dead in-process shard
+//! thread, instead of wedging on a silent black hole. There is no
+//! transparent reconnect: candidate registrations are ephemeral state,
+//! so a reconnect needs a fresh session (tracked in the ROADMAP).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::messages::ToModel;
+use crate::coordinator::router::PortClosed;
+use crate::coordinator::Clock;
+use crate::core::types::GpuId;
+use crate::net::codec::{self, ClientHello, ServerPreamble, WireFromRank, WireToRank, PREAMBLE_LEN};
+use crate::net::transport::{connect_retry, spawn_writer, FrameReader, FrameSender, WriterStats};
+use crate::util::error::{Context, Result};
+
+/// How long the handshake may block before the peer is declared broken.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One live connection to a rank server, shared (via `Arc`) by every
+/// [`crate::coordinator::router::RankPort`] that addresses one of its
+/// shards, by the cluster controller, and by the reader thread.
+pub struct RemoteRank {
+    /// What the server advertised in its preamble.
+    pub info: ServerPreamble,
+    /// The address we dialed (for log lines).
+    pub peer: String,
+    stream: TcpStream,
+    sender: FrameSender,
+    writer: Mutex<Option<JoinHandle<std::io::Result<WriterStats>>>>,
+    reader: Mutex<Option<JoinHandle<()>>>,
+    /// Outstanding drain acks by GPU id: parked at `Drain` issue time,
+    /// released by the matching `DrainAck` frame. A second drain of the
+    /// same GPU before the first acks replaces (and thereby cancels)
+    /// the parked sender.
+    acks: Mutex<HashMap<u32, Sender<GpuId>>>,
+    /// `Granted` frames delivered — the client-side grant count merged
+    /// into `ShardStats` at shutdown (the server keeps the
+    /// authoritative per-shard stats and logs them per session).
+    grants: AtomicU64,
+    /// Set by [`RemoteRank::close`]: a subsequent EOF is the expected
+    /// end of session, not a failure.
+    closing: AtomicBool,
+}
+
+impl RemoteRank {
+    /// Dial `addr` (retrying until `timeout` — the server may still be
+    /// binding) and run the handshake: read the server preamble,
+    /// answer with the model count and our clock reading so the server
+    /// can host this session's shards in our clock domain.
+    pub fn connect(addr: &str, n_models: usize, clock: Clock, timeout: Duration) -> Result<Self> {
+        let stream = connect_retry(addr, timeout)
+            .with_context(|| format!("connecting to rank-server {addr}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut pre = [0u8; PREAMBLE_LEN];
+        (&stream)
+            .read_exact(&mut pre)
+            .with_context(|| format!("reading preamble from rank-server {addr}"))?;
+        let info = codec::decode_preamble(&pre)
+            .with_context(|| format!("handshake with rank-server {addr}"))?;
+        if info.shards == 0 || info.gpu_hi <= info.gpu_lo {
+            crate::bail!(
+                "rank-server {addr} advertises nothing: {} shards over GPUs {}..{}",
+                info.shards,
+                info.gpu_lo,
+                info.gpu_hi
+            );
+        }
+        let hello = codec::encode_hello(&ClientHello {
+            n_models: n_models as u32,
+            now_us: clock.now().0,
+        });
+        (&stream).write_all(&hello)?;
+        stream.set_read_timeout(None)?;
+        let (sender, writer) = spawn_writer(stream.try_clone()?);
+        Ok(RemoteRank {
+            info,
+            peer: addr.to_string(),
+            stream,
+            sender,
+            writer: Mutex::new(Some(writer)),
+            reader: Mutex::new(None),
+            acks: Mutex::new(HashMap::new()),
+            grants: AtomicU64::new(0),
+            closing: AtomicBool::new(false),
+        })
+    }
+
+    /// Start the down-traffic reader. `model_txs` are the model-worker
+    /// inboxes (global model id order); `shard_offset` is this server's
+    /// first shard index in the client's global topology (re-bases
+    /// `Overflow::to_shard`); `disconnects` is the shared counter an
+    /// unexpected EOF/IO error increments. Frames naming a model or GPU
+    /// outside what this server may address fail the session as a
+    /// counted disconnect (a worker must never index `backends` off a
+    /// wire value, and a silently dropped grant would wedge capacity).
+    pub fn start_reader(
+        self: &Arc<Self>,
+        model_txs: Vec<Sender<ToModel>>,
+        shard_offset: usize,
+        disconnects: Arc<AtomicU64>,
+    ) {
+        let conn = Arc::clone(self);
+        let stream = self.stream.try_clone().expect("clone rank stream");
+        let h = std::thread::Builder::new()
+            .name("rank-wire-reader".into())
+            .spawn(move || {
+                let unexpected = conn.read_loop(stream, &model_txs, shard_offset);
+                if unexpected {
+                    disconnects.fetch_add(1, Ordering::Relaxed);
+                    // Fail the ports fast: a send into a dead rank tier
+                    // must error like a dead in-process shard, not
+                    // queue forever. Parked drain-ack senders drop too,
+                    // so a blocking `recv()` on a pending drain sees
+                    // Disconnected — exactly what a dead in-process
+                    // shard (dropping the ack sender with its state)
+                    // would produce.
+                    conn.sender.close();
+                    conn.acks.lock().unwrap().clear();
+                    eprintln!(
+                        "rank-server {} disconnected; rank ports closed \
+                         (candidates in flight are lost)",
+                        conn.peer
+                    );
+                }
+            })
+            .expect("spawn rank wire reader");
+        *self.reader.lock().unwrap() = Some(h);
+    }
+
+    /// Returns whether the session ended *unexpectedly*.
+    fn read_loop(
+        &self,
+        stream: TcpStream,
+        model_txs: &[Sender<ToModel>],
+        shard_offset: usize,
+    ) -> bool {
+        let mut reader = FrameReader::new(stream);
+        loop {
+            match reader.next_frame() {
+                Ok(Some(frame)) => match codec::decode_down(frame) {
+                    Ok(msg) => {
+                        if let Err(why) = self.dispatch(msg, model_txs, shard_offset) {
+                            eprintln!(
+                                "rank-server {}: protocol violation: {why}",
+                                self.peer
+                            );
+                            return true;
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("rank-server {}: protocol error: {e}", self.peer);
+                        return true;
+                    }
+                },
+                Ok(None) => return !self.closing.load(Ordering::SeqCst),
+                Err(e) => {
+                    if self.closing.load(Ordering::SeqCst) {
+                        return false;
+                    }
+                    eprintln!("rank-server {}: read error: {e}", self.peer);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Apply one down-frame. A frame naming a GPU outside this server's
+    /// advertised range or an unknown model is a protocol violation and
+    /// fails the session (mirroring the server's treatment of bad
+    /// up-frames): silently dropping e.g. a foreign grant would leave
+    /// the granting shard's GPU leased forever — a quiet capacity
+    /// wedge — whereas a surfaced disconnect is visible and counted.
+    fn dispatch(
+        &self,
+        msg: WireFromRank,
+        model_txs: &[Sender<ToModel>],
+        shard_offset: usize,
+    ) -> Result<(), String> {
+        match msg {
+            WireFromRank::Granted { model, gpu } => {
+                if !self.info.owns(gpu) {
+                    return Err(format!("grant for foreign GPU {}", gpu.0));
+                }
+                let Some(tx) = model_txs.get(model.0 as usize) else {
+                    return Err(format!("grant for unknown model {}", model.0));
+                };
+                self.grants.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(ToModel::Granted { model, gpu });
+            }
+            WireFromRank::Revalidate { model } => {
+                let Some(tx) = model_txs.get(model.0 as usize) else {
+                    return Err(format!("revalidate for unknown model {}", model.0));
+                };
+                let _ = tx.send(ToModel::Revalidate { model });
+            }
+            WireFromRank::Overflow {
+                model,
+                to_shard,
+                seq,
+            } => {
+                if to_shard >= self.info.shards {
+                    return Err(format!(
+                        "overflow verdict for local shard {to_shard} of {}",
+                        self.info.shards
+                    ));
+                }
+                let Some(tx) = model_txs.get(model.0 as usize) else {
+                    return Err(format!("overflow for unknown model {}", model.0));
+                };
+                let _ = tx.send(ToModel::Overflow {
+                    model,
+                    to_shard: shard_offset + to_shard as usize,
+                    seq,
+                });
+            }
+            WireFromRank::DrainAck { gpu } => {
+                if !self.info.owns(gpu) {
+                    return Err(format!("drain ack for foreign GPU {}", gpu.0));
+                }
+                // No parked sender is benign: an `Attach` may have
+                // canceled the drain while this ack was in flight.
+                if let Some(ack) = self.acks.lock().unwrap().remove(&gpu.0) {
+                    let _ = ack.send(gpu);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode and enqueue one up-message for `shard` (server-local
+    /// index). One small allocation per frame; the writer thread
+    /// coalesces the queue into one syscall per drain.
+    pub fn send(&self, shard: u16, msg: &WireToRank) -> Result<(), PortClosed> {
+        let mut buf = Vec::with_capacity(48);
+        codec::encode_up(shard, msg, &mut buf);
+        self.sender.send(buf).map_err(|_| PortClosed)
+    }
+
+    /// The wire form of `ToRank::Drain`: park the ack sender, ship the
+    /// frame; the reader releases the sender on the matching
+    /// `DrainAck`.
+    pub fn drain(&self, shard: u16, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), PortClosed> {
+        self.acks.lock().unwrap().insert(gpu.0, ack);
+        let res = self.send(shard, &WireToRank::Drain { gpu });
+        if res.is_err() {
+            self.acks.lock().unwrap().remove(&gpu.0);
+        }
+        res
+    }
+
+    /// The wire form of `ToRank::Attach`. Attaching a still-draining
+    /// GPU cancels the drain server-side and its ack never fires (the
+    /// in-process shard drops its ack sender on cancel), so the parked
+    /// sender is dropped here too — a waiter blocked on the ack sees
+    /// `Disconnected` promptly instead of hanging on a canceled drain.
+    pub fn attach(&self, shard: u16, gpu: GpuId) -> Result<(), PortClosed> {
+        self.acks.lock().unwrap().remove(&gpu.0);
+        self.send(shard, &WireToRank::Attach { gpu })
+    }
+
+    /// `Granted` frames delivered so far.
+    pub fn grants(&self) -> u64 {
+        self.grants.load(Ordering::Relaxed)
+    }
+
+    /// Begin a clean shutdown: queued frames flush, the write half
+    /// closes (the server ends the session on EOF), and the reader's
+    /// subsequent EOF is not counted as a disconnect. Idempotent.
+    pub fn close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+        self.sender.close();
+    }
+
+    /// Join the writer and reader threads (after [`RemoteRank::close`]).
+    pub fn join(&self) {
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}

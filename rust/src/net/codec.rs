@@ -1,0 +1,590 @@
+//! Fixed-layout binary codec for the rank-coordination wire protocol.
+//!
+//! The wire vocabulary mirrors the in-process control traffic between
+//! model workers and rank shards ([`crate::coordinator::messages`]):
+//! [`WireToRank`] carries the up direction (`Candidate`, `GpuBusyUntil`,
+//! `Drain`, `Attach` — `ToRank` minus `Shutdown`, which on the wire is
+//! simply closing the connection), and [`WireFromRank`] the down
+//! direction (`Granted`, `Revalidate`, `Overflow`, `DrainAck` — the
+//! shard-originated `ToModel` verdicts, plus the drain ack that an
+//! in-process shard delivers on a `Sender<GpuId>` and a remote shard
+//! must deliver as an explicit frame routed back over the connection).
+//!
+//! Everything is hand-rolled little-endian with one tag byte per
+//! message — the offline registry has no serde, the same constraint
+//! that produced [`crate::util::error`]. Layouts are *fixed*: every
+//! field is always present (a cleared candidate writes zeros behind its
+//! `has` flag), so a frame's length is a function of its tag alone and
+//! a decoder can reject truncated, oversized, or trailing input without
+//! ever reading past the buffer.
+//!
+//! Up frames are prefixed with the target shard index (`u16`): one
+//! connection multiplexes every shard a rank server hosts, so the
+//! header — not a per-shard socket — does the routing.
+
+use std::fmt;
+
+use crate::coordinator::messages::CandWindow;
+use crate::core::time::Micros;
+use crate::core::types::{GpuId, ModelId};
+
+/// Why a buffer failed to decode. Every failure is a clean `Err` — no
+/// panic, no over-read — so a malformed or malicious peer can at worst
+/// get its session dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Payload shorter than its tag's fixed layout.
+    Truncated,
+    /// Bytes left over after the fixed layout (length lied).
+    Trailing(usize),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// A boolean flag byte that was neither 0 nor 1.
+    BadFlag(u8),
+    /// Handshake magic mismatch (not a symphony peer).
+    BadMagic(u32),
+    /// Handshake protocol version mismatch.
+    BadVersion(u16),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "truncated frame"),
+            CodecError::Trailing(n) => write!(f, "{n} trailing bytes after fixed layout"),
+            CodecError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            CodecError::BadFlag(b) => write!(f, "flag byte {b} is not 0/1"),
+            CodecError::BadMagic(m) => write!(f, "bad handshake magic {m:#010x}"),
+            CodecError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Model worker / autoscaler → rank server. Mirrors
+/// [`crate::coordinator::messages::ToRank`]; `Drain` drops the ack
+/// sender — the ack comes back as [`WireFromRank::DrainAck`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireToRank {
+    Candidate {
+        model: ModelId,
+        cand: Option<CandWindow>,
+        seq: u64,
+        hops: u32,
+    },
+    GpuBusyUntil { gpu: GpuId, free_at: Micros },
+    Drain { gpu: GpuId },
+    Attach { gpu: GpuId },
+}
+
+/// Rank server → model worker / autoscaler. Mirrors the
+/// shard-originated half of [`crate::coordinator::messages::ToModel`];
+/// `Overflow::to_shard` is the *server-local* shard index (the client
+/// re-bases it into its global topology).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFromRank {
+    Granted { model: ModelId, gpu: GpuId },
+    Revalidate { model: ModelId },
+    Overflow {
+        model: ModelId,
+        to_shard: u16,
+        seq: u64,
+    },
+    DrainAck { gpu: GpuId },
+}
+
+const TAG_CANDIDATE: u8 = 1;
+const TAG_GPU_BUSY: u8 = 2;
+const TAG_DRAIN: u8 = 3;
+const TAG_ATTACH: u8 = 4;
+
+const TAG_GRANTED: u8 = 1;
+const TAG_REVALIDATE: u8 = 2;
+const TAG_OVERFLOW: u8 = 3;
+const TAG_DRAIN_ACK: u8 = 4;
+
+/// Bounded cursor: every read checks the remaining length, so a decoder
+/// can never index past the buffer, and `done` rejects trailing bytes.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, off: 0 }
+    }
+
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], CodecError> {
+        let end = self.off.checked_add(N).ok_or(CodecError::Truncated)?;
+        if end > self.b.len() {
+            return Err(CodecError::Truncated);
+        }
+        let mut out = [0u8; N];
+        out.copy_from_slice(&self.b[self.off..end]);
+        self.off = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take::<1>()?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        Ok(u16::from_le_bytes(self.take::<2>()?))
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take::<4>()?))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take::<8>()?))
+    }
+
+    fn done(&self) -> Result<(), CodecError> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(CodecError::Trailing(self.b.len() - self.off))
+        }
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append the up-frame payload `[shard u16][tag u8][fields]` to `out`.
+pub fn encode_up(shard: u16, msg: &WireToRank, out: &mut Vec<u8>) {
+    put_u16(out, shard);
+    match msg {
+        WireToRank::Candidate {
+            model,
+            cand,
+            seq,
+            hops,
+        } => {
+            out.push(TAG_CANDIDATE);
+            put_u32(out, model.0);
+            put_u64(out, *seq);
+            put_u32(out, *hops);
+            // Fixed layout: the window fields are always present; a
+            // cleared candidate writes zeros behind `has = 0`.
+            let w = cand.unwrap_or(CandWindow {
+                exec: Micros::ZERO,
+                latest: Micros::ZERO,
+                size: 0,
+            });
+            out.push(u8::from(cand.is_some()));
+            put_u64(out, w.exec.0);
+            put_u64(out, w.latest.0);
+            put_u32(out, w.size);
+        }
+        WireToRank::GpuBusyUntil { gpu, free_at } => {
+            out.push(TAG_GPU_BUSY);
+            put_u32(out, gpu.0);
+            put_u64(out, free_at.0);
+        }
+        WireToRank::Drain { gpu } => {
+            out.push(TAG_DRAIN);
+            put_u32(out, gpu.0);
+        }
+        WireToRank::Attach { gpu } => {
+            out.push(TAG_ATTACH);
+            put_u32(out, gpu.0);
+        }
+    }
+}
+
+/// Decode one up-frame payload into its target shard and message.
+pub fn decode_up(buf: &[u8]) -> Result<(u16, WireToRank), CodecError> {
+    let mut c = Cur::new(buf);
+    let shard = c.u16()?;
+    let tag = c.u8()?;
+    let msg = match tag {
+        TAG_CANDIDATE => {
+            let model = ModelId(c.u32()?);
+            let seq = c.u64()?;
+            let hops = c.u32()?;
+            let has = c.u8()?;
+            let exec = Micros(c.u64()?);
+            let latest = Micros(c.u64()?);
+            let size = c.u32()?;
+            let cand = match has {
+                0 => None,
+                1 => Some(CandWindow { exec, latest, size }),
+                other => return Err(CodecError::BadFlag(other)),
+            };
+            WireToRank::Candidate {
+                model,
+                cand,
+                seq,
+                hops,
+            }
+        }
+        TAG_GPU_BUSY => WireToRank::GpuBusyUntil {
+            gpu: GpuId(c.u32()?),
+            free_at: Micros(c.u64()?),
+        },
+        TAG_DRAIN => WireToRank::Drain { gpu: GpuId(c.u32()?) },
+        TAG_ATTACH => WireToRank::Attach { gpu: GpuId(c.u32()?) },
+        other => return Err(CodecError::BadTag(other)),
+    };
+    c.done()?;
+    Ok((shard, msg))
+}
+
+/// Append the down-frame payload `[tag u8][fields]` to `out`.
+pub fn encode_down(msg: &WireFromRank, out: &mut Vec<u8>) {
+    match msg {
+        WireFromRank::Granted { model, gpu } => {
+            out.push(TAG_GRANTED);
+            put_u32(out, model.0);
+            put_u32(out, gpu.0);
+        }
+        WireFromRank::Revalidate { model } => {
+            out.push(TAG_REVALIDATE);
+            put_u32(out, model.0);
+        }
+        WireFromRank::Overflow {
+            model,
+            to_shard,
+            seq,
+        } => {
+            out.push(TAG_OVERFLOW);
+            put_u32(out, model.0);
+            put_u16(out, *to_shard);
+            put_u64(out, *seq);
+        }
+        WireFromRank::DrainAck { gpu } => {
+            out.push(TAG_DRAIN_ACK);
+            put_u32(out, gpu.0);
+        }
+    }
+}
+
+/// Decode one down-frame payload.
+pub fn decode_down(buf: &[u8]) -> Result<WireFromRank, CodecError> {
+    let mut c = Cur::new(buf);
+    let tag = c.u8()?;
+    let msg = match tag {
+        TAG_GRANTED => WireFromRank::Granted {
+            model: ModelId(c.u32()?),
+            gpu: GpuId(c.u32()?),
+        },
+        TAG_REVALIDATE => WireFromRank::Revalidate {
+            model: ModelId(c.u32()?),
+        },
+        TAG_OVERFLOW => WireFromRank::Overflow {
+            model: ModelId(c.u32()?),
+            to_shard: c.u16()?,
+            seq: c.u64()?,
+        },
+        TAG_DRAIN_ACK => WireFromRank::DrainAck { gpu: GpuId(c.u32()?) },
+        other => return Err(CodecError::BadTag(other)),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+const PREAMBLE_MAGIC: u32 = 0x4B52_5953; // "SYRK"
+const HELLO_MAGIC: u32 = 0x4843_5953; // "SYCH"
+const WIRE_VERSION: u16 = 1;
+
+/// Fixed length of the server preamble on the wire.
+pub const PREAMBLE_LEN: usize = 16;
+/// Fixed length of the client hello on the wire.
+pub const HELLO_LEN: usize = 16;
+
+/// First bytes a rank server writes on every accepted connection: what
+/// it hosts, so the client can build its side of the shard topology
+/// before any traffic flows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerPreamble {
+    /// Rank shards this server hosts.
+    pub shards: u16,
+    /// First GPU id this server owns (inclusive).
+    pub gpu_lo: u32,
+    /// One past the last GPU id this server owns.
+    pub gpu_hi: u32,
+}
+
+impl ServerPreamble {
+    /// Is `gpu` inside this server's advertised range? Down-frames
+    /// naming foreign GPUs are dropped by the client reader.
+    pub fn owns(&self, gpu: GpuId) -> bool {
+        (self.gpu_lo..self.gpu_hi).contains(&gpu.0)
+    }
+}
+
+pub fn encode_preamble(p: &ServerPreamble) -> [u8; PREAMBLE_LEN] {
+    let mut out = [0u8; PREAMBLE_LEN];
+    out[0..4].copy_from_slice(&PREAMBLE_MAGIC.to_le_bytes());
+    out[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    out[6..8].copy_from_slice(&p.shards.to_le_bytes());
+    out[8..12].copy_from_slice(&p.gpu_lo.to_le_bytes());
+    out[12..16].copy_from_slice(&p.gpu_hi.to_le_bytes());
+    out
+}
+
+pub fn decode_preamble(buf: &[u8; PREAMBLE_LEN]) -> Result<ServerPreamble, CodecError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != PREAMBLE_MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = c.u16()?;
+    if version != WIRE_VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    Ok(ServerPreamble {
+        shards: c.u16()?,
+        gpu_lo: c.u32()?,
+        gpu_hi: c.u32()?,
+    })
+}
+
+/// The client's reply to the preamble: how many models it will address
+/// (sizes the server's down-path routing) and its clock reading at send
+/// time (the server runs its session shards on the client's clock —
+/// see [`crate::coordinator::Clock::starting_at`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClientHello {
+    pub n_models: u32,
+    pub now_us: u64,
+}
+
+pub fn encode_hello(h: &ClientHello) -> [u8; HELLO_LEN] {
+    let mut out = [0u8; HELLO_LEN];
+    out[0..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+    out[4..8].copy_from_slice(&h.n_models.to_le_bytes());
+    out[8..16].copy_from_slice(&h.now_us.to_le_bytes());
+    out
+}
+
+pub fn decode_hello(buf: &[u8; HELLO_LEN]) -> Result<ClientHello, CodecError> {
+    let mut c = Cur::new(buf);
+    let magic = c.u32()?;
+    if magic != HELLO_MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    Ok(ClientHello {
+        n_models: c.u32()?,
+        now_us: c.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, default_cases};
+    use crate::util::rng::Rng;
+
+    fn random_window(rng: &mut Rng) -> CandWindow {
+        CandWindow {
+            exec: Micros(rng.next_u64()),
+            latest: Micros(rng.next_u64()),
+            size: rng.next_u64() as u32,
+        }
+    }
+
+    fn random_up(rng: &mut Rng) -> WireToRank {
+        match rng.below(4) {
+            0 => WireToRank::Candidate {
+                model: ModelId(rng.next_u64() as u32),
+                cand: if rng.f64() < 0.25 {
+                    None
+                } else {
+                    Some(random_window(rng))
+                },
+                seq: rng.next_u64(),
+                hops: rng.next_u64() as u32,
+            },
+            1 => WireToRank::GpuBusyUntil {
+                gpu: GpuId(rng.next_u64() as u32),
+                free_at: Micros(rng.next_u64()),
+            },
+            2 => WireToRank::Drain {
+                gpu: GpuId(rng.next_u64() as u32),
+            },
+            _ => WireToRank::Attach {
+                gpu: GpuId(rng.next_u64() as u32),
+            },
+        }
+    }
+
+    fn random_down(rng: &mut Rng) -> WireFromRank {
+        match rng.below(4) {
+            0 => WireFromRank::Granted {
+                model: ModelId(rng.next_u64() as u32),
+                gpu: GpuId(rng.next_u64() as u32),
+            },
+            1 => WireFromRank::Revalidate {
+                model: ModelId(rng.next_u64() as u32),
+            },
+            2 => WireFromRank::Overflow {
+                model: ModelId(rng.next_u64() as u32),
+                to_shard: rng.next_u64() as u16,
+                seq: rng.next_u64(),
+            },
+            _ => WireFromRank::DrainAck {
+                gpu: GpuId(rng.next_u64() as u32),
+            },
+        }
+    }
+
+    /// Encode → decode is the identity over randomized messages in both
+    /// directions (the codec-robustness satellite's positive half).
+    #[test]
+    fn prop_roundtrip_identity() {
+        check("codec_roundtrip", default_cases(), |rng| {
+            let mut buf = Vec::new();
+            for _ in 0..32 {
+                let shard = rng.next_u64() as u16;
+                let up = random_up(rng);
+                buf.clear();
+                encode_up(shard, &up, &mut buf);
+                let (s2, up2) = decode_up(&buf).map_err(|e| format!("{up:?}: {e}"))?;
+                if s2 != shard || up2 != up {
+                    return Err(format!("up roundtrip {up:?} -> {up2:?}"));
+                }
+                let down = random_down(rng);
+                buf.clear();
+                encode_down(&down, &mut buf);
+                let down2 = decode_down(&buf).map_err(|e| format!("{down:?}: {e}"))?;
+                if down2 != down {
+                    return Err(format!("down roundtrip {down:?} -> {down2:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Every strict prefix of a valid frame decodes to `Err` — never a
+    /// panic, never a wrong message (the truncated-frame satellite).
+    #[test]
+    fn prop_truncation_is_an_error() {
+        check("codec_truncation", default_cases(), |rng| {
+            let mut buf = Vec::new();
+            let up = random_up(rng);
+            encode_up(rng.next_u64() as u16, &up, &mut buf);
+            for cut in 0..buf.len() {
+                if decode_up(&buf[..cut]).is_ok() {
+                    return Err(format!("{up:?} decoded from a {cut}-byte prefix"));
+                }
+            }
+            buf.clear();
+            let down = random_down(rng);
+            encode_down(&down, &mut buf);
+            for cut in 0..buf.len() {
+                if decode_down(&buf[..cut]).is_ok() {
+                    return Err(format!("{down:?} decoded from a {cut}-byte prefix"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Trailing bytes after the fixed layout are rejected: a frame's
+    /// length must match its tag exactly.
+    #[test]
+    fn prop_trailing_bytes_are_an_error() {
+        check("codec_trailing", default_cases(), |rng| {
+            let mut buf = Vec::new();
+            encode_up(0, &random_up(rng), &mut buf);
+            buf.push(rng.next_u64() as u8);
+            if !matches!(decode_up(&buf), Err(CodecError::Trailing(1))) {
+                return Err(format!("trailing byte accepted: {:?}", decode_up(&buf)));
+            }
+            buf.clear();
+            encode_down(&random_down(rng), &mut buf);
+            buf.push(rng.next_u64() as u8);
+            if !matches!(decode_down(&buf), Err(CodecError::Trailing(1))) {
+                return Err(format!("trailing byte accepted: {:?}", decode_down(&buf)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corrupt_tag_is_an_error() {
+        let mut buf = Vec::new();
+        encode_up(3, &WireToRank::Drain { gpu: GpuId(7) }, &mut buf);
+        for bad in [0u8, 5, 99, 255] {
+            buf[2] = bad; // tag byte sits after the u16 shard prefix
+            assert_eq!(decode_up(&buf), Err(CodecError::BadTag(bad)));
+        }
+        let mut buf = Vec::new();
+        encode_down(&WireFromRank::DrainAck { gpu: GpuId(7) }, &mut buf);
+        for bad in [0u8, 5, 99, 255] {
+            buf[0] = bad;
+            assert_eq!(decode_down(&buf), Err(CodecError::BadTag(bad)));
+        }
+    }
+
+    #[test]
+    fn corrupt_candidate_flag_is_an_error() {
+        let mut buf = Vec::new();
+        encode_up(
+            0,
+            &WireToRank::Candidate {
+                model: ModelId(1),
+                cand: Some(CandWindow {
+                    exec: Micros(10),
+                    latest: Micros(20),
+                    size: 4,
+                }),
+                seq: 9,
+                hops: 1,
+            },
+            &mut buf,
+        );
+        // The `has` flag sits after shard(2) + tag(1) + model(4) +
+        // seq(8) + hops(4).
+        buf[19] = 2;
+        assert_eq!(decode_up(&buf), Err(CodecError::BadFlag(2)));
+    }
+
+    #[test]
+    fn empty_input_is_truncated() {
+        assert_eq!(decode_up(&[]), Err(CodecError::Truncated));
+        assert_eq!(decode_down(&[]), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_validation() {
+        let p = ServerPreamble {
+            shards: 4,
+            gpu_lo: 8,
+            gpu_hi: 16,
+        };
+        let bytes = encode_preamble(&p);
+        assert_eq!(decode_preamble(&bytes).unwrap(), p);
+        let mut bad = bytes;
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_preamble(&bad), Err(CodecError::BadMagic(_))));
+        let mut bad = bytes;
+        bad[4] = 0xFF;
+        assert!(matches!(decode_preamble(&bad), Err(CodecError::BadVersion(_))));
+
+        let h = ClientHello {
+            n_models: 12,
+            now_us: 55_555,
+        };
+        let bytes = encode_hello(&h);
+        assert_eq!(decode_hello(&bytes).unwrap(), h);
+        let mut bad = bytes;
+        bad[1] ^= 0xFF;
+        assert!(matches!(decode_hello(&bad), Err(CodecError::BadMagic(_))));
+    }
+}

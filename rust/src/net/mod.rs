@@ -1,0 +1,34 @@
+//! Distributed rank coordination over a real wire.
+//!
+//! Everything below `net/` exists so the rank tier — the batch-rate
+//! matchmaking half of the coordinator — can leave the process: the
+//! paper's scheduler coordinates *thousands of GPUs*, and a reproduction
+//! whose tiers are all `std::sync::mpsc` channels can never leave one
+//! machine. The stack, bottom up:
+//!
+//! * [`codec`] — fixed-layout binary messages ([`codec::WireToRank`] /
+//!   [`codec::WireFromRank`]) mirroring the in-process `ToRank` /
+//!   `ToModel` control traffic, plus the connect handshake
+//!   (preamble/hello). Hand-rolled little-endian: the offline registry
+//!   has no serde, the same constraint behind `util::error`.
+//! * [`transport`] — length-prefixed framed TCP with `TCP_NODELAY`, a
+//!   bounded-length reader, and a write side that coalesces the queued
+//!   backlog into one syscall per drain (the wire analogue of
+//!   `RankShard::InboxBatch`).
+//! * [`server`] — `symphony rank-server`: hosts real
+//!   [`crate::coordinator::RankShard`]s in their own process, one shard
+//!   set per client session, in the client's clock domain.
+//! * [`client`] — [`client::RemoteRank`]: the coordinator side of a
+//!   connection, plugged into the model workers through
+//!   [`crate::coordinator::router::RankPort`] so routing, overflow
+//!   steering, and the drain/attach autoscaler protocol are
+//!   transport-agnostic (`serve --remote-ranks host:port,...`).
+//!
+//! `benches/bench_wire.rs` sweeps frames/s and loopback submit→grant
+//! round-trip latency into `BENCH_wire.json`; EXPERIMENTS.md §Wire
+//! coordination has the run instructions.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+pub mod transport;

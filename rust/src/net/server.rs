@@ -1,0 +1,389 @@
+//! `symphony rank-server` — real [`crate::coordinator::RankShard`]s in
+//! their own process, behind the framed wire.
+//!
+//! The server owns a contiguous GPU id range and hosts `R` rank shards
+//! over it. Shard state is **per session**: when a client connects (a
+//! `serve --remote-ranks` coordinator), the handshake tells the server
+//! how many models the client addresses and what the client's clock
+//! reads, and the server spawns `R` fresh shard threads in that clock
+//! domain; when the connection ends — the client's clean shutdown or
+//! any disconnect — the shards are shut down, joined, and their stats
+//! logged. That matches the deployment model: the backends executing
+//! the batches live in the *client* process, so GPU busy/free state is
+//! meaningful only within one serving session. Concurrent sessions get
+//! independent shard sets (useful for tests; a production deployment
+//! runs one serving tier per server).
+//!
+//! Per session, the plumbing mirrors the in-process coordinator:
+//!
+//! * the session reader decodes up-frames and forwards them to the
+//!   owning shard's mpsc inbox (per-connection ordering ⇒ per-shard
+//!   ordering, same as an in-process sender);
+//! * the shards' `model_txs` are clones of one proxy channel whose
+//!   converter thread encodes `Granted`/`Revalidate`/`Overflow` into
+//!   down-frames (every `ToModel` verdict is model-addressed, so one
+//!   channel serves all models);
+//! * `Drain` frames get a session-local ack channel whose converter
+//!   thread turns each ack into an explicit `DrainAck` frame — the
+//!   in-process `Sender<GpuId>` contract, routed back over the wire.
+//!
+//! Overflow steering stays server-local: the session's `FreeHints`
+//! cover only this server's shards, so a verdict's `to_shard` is a
+//! server-local index the client re-bases (cross-server hint gossip is
+//! future work, tracked in the ROADMAP).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use crate::coordinator::messages::{ToModel, ToRank};
+use crate::coordinator::router::FreeHints;
+use crate::coordinator::{Clock, RankShard, ShardStats, ShardTopology};
+use crate::core::time::Micros;
+use crate::core::types::GpuId;
+use crate::net::codec::{self, ServerPreamble, WireFromRank, WireToRank, HELLO_LEN};
+use crate::net::transport::{spawn_writer, FrameReader, FrameSender};
+use crate::util::error::{Context, Result};
+
+/// Most models one session may address (the hello's `n_models` sizes
+/// per-shard sender tables, so this wire-supplied number must be
+/// bounded; ~16 MB of senders per shard at the cap — far beyond any
+/// real model zoo, far below an OOM).
+pub const MAX_SESSION_MODELS: usize = 1 << 20;
+
+/// What one rank server hosts.
+#[derive(Clone, Debug)]
+pub struct RankServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7811` (`:0` for an ephemeral
+    /// port — see [`RankServer::local_addr`]).
+    pub listen: String,
+    /// Rank shards over the owned GPU range (clamped to the range
+    /// length).
+    pub shards: usize,
+    /// Owned GPU id range; a multi-server tier partitions the id space
+    /// across servers the way shards partition it within one.
+    pub gpus: std::ops::Range<u32>,
+    /// Exit after this many sessions (CI smoke / tests); `None` serves
+    /// forever.
+    pub max_sessions: Option<u64>,
+}
+
+/// A bound rank server (bind and accept are split so callers can learn
+/// an ephemeral port before blocking in [`RankServer::run`]).
+pub struct RankServer {
+    listener: TcpListener,
+    cfg: RankServerConfig,
+}
+
+impl RankServer {
+    pub fn bind(cfg: RankServerConfig) -> Result<Self> {
+        if cfg.gpus.is_empty() {
+            crate::bail!("rank-server owns an empty GPU range {:?}", cfg.gpus);
+        }
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding rank-server on {}", cfg.listen))?;
+        Ok(RankServer { listener, cfg })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Shards actually hosted (config clamped to the GPU range).
+    pub fn num_shards(&self) -> usize {
+        self.cfg.shards.clamp(1, self.cfg.gpus.len())
+    }
+
+    /// Accept sessions until `max_sessions` (or forever). Each session
+    /// runs on its own thread; a session failure is logged, never
+    /// fatal to the server.
+    pub fn run(self) -> Result<()> {
+        let shards = self.num_shards();
+        println!(
+            "rank-server: {} shards over GPUs {}..{} listening on {}",
+            shards,
+            self.cfg.gpus.start,
+            self.cfg.gpus.end,
+            self.local_addr()
+        );
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut accepted = 0u64;
+        for stream in self.listener.incoming() {
+            // Per-connection accept errors (ECONNABORTED — the peer
+            // RST before accept —, fd pressure) must not take down a
+            // forever-serving process and its healthy sessions: log
+            // and keep accepting.
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("rank-server: accept failed: {e}");
+                    continue;
+                }
+            };
+            // Reap finished sessions as we go: a forever-serving
+            // process (`max_sessions: None`) must not accumulate one
+            // handle per connection it ever saw.
+            handles.retain(|h| !h.is_finished());
+            accepted += 1;
+            let gpus = self.cfg.gpus.clone();
+            handles.push(std::thread::Builder::new().name("rank-session".into()).spawn(
+                move || {
+                    if let Err(e) = serve_session(stream, shards, gpus) {
+                        eprintln!("rank-server: session failed: {e:#}");
+                    }
+                },
+            )?);
+            if Some(accepted) == self.cfg.max_sessions {
+                break;
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Server-local shard bounds over `gpus` — delegates to the one shared
+/// split formula ([`ShardTopology::split`]) the client reconstructs
+/// the topology with; the two must agree byte for byte or GPU routing
+/// silently lands on the wrong shard.
+fn shard_range(gpus: &std::ops::Range<u32>, shards: usize, s: usize) -> std::ops::Range<u32> {
+    ShardTopology::split(gpus, shards, s)..ShardTopology::split(gpus, shards, s + 1)
+}
+
+fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into());
+
+    // Handshake: advertise what we host, learn the client's model
+    // count and clock. A peer that stalls mid-handshake is dropped
+    // after the timeout instead of pinning the session thread.
+    (&stream).write_all(&codec::encode_preamble(&ServerPreamble {
+        shards: shards as u16,
+        gpu_lo: gpus.start,
+        gpu_hi: gpus.end,
+    }))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut hello = [0u8; HELLO_LEN];
+    (&stream)
+        .read_exact(&mut hello)
+        .with_context(|| format!("reading hello from {peer}"))?;
+    let hello = codec::decode_hello(&hello).with_context(|| format!("handshake with {peer}"))?;
+    stream.set_read_timeout(None)?;
+    let n_models = hello.n_models as usize;
+    // The hello is wire data: cap it before it sizes any allocation
+    // (n_models senders per shard), so a corrupt or hostile hello
+    // fails this session instead of OOMing the whole server.
+    if n_models > MAX_SESSION_MODELS {
+        crate::bail!(
+            "{peer}: hello claims {n_models} models (cap {MAX_SESSION_MODELS})"
+        );
+    }
+    // Session shards run in the client's clock domain (offset by the
+    // hello's one-way latency — budgeted by the client's net_bound).
+    let clock = Clock::starting_at(Micros(hello.now_us));
+
+    // Down path: coalescing writer + converter threads turning shard
+    // verdicts and drain acks into frames.
+    let (sender, writer_h) = spawn_writer(stream.try_clone()?);
+    let (model_tx, model_rx) = channel::<ToModel>();
+    let model_conv = {
+        let sender = sender.clone();
+        std::thread::spawn(move || down_pump(model_rx, sender))
+    };
+    let (gack_tx, gack_rx) = channel::<GpuId>();
+    let ack_conv = {
+        let sender = sender.clone();
+        std::thread::spawn(move || ack_pump(gack_rx, sender))
+    };
+
+    // The session's rank shards: real `RankShard`s, fully attached
+    // (a client that wants headroom drains it — a drain of a free GPU
+    // retires it immediately, exactly `initial_gpus` semantics).
+    let hints = FreeHints::new(shards);
+    let mut shard_txs = Vec::with_capacity(shards);
+    let mut shard_handles = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let (tx, rx) = channel::<ToRank>();
+        shard_txs.push(tx);
+        let range = shard_range(&gpus, shards, s);
+        let shard = RankShard {
+            clock,
+            shard: s,
+            inbox: rx,
+            model_txs: vec![model_tx.clone(); n_models],
+            active: range.clone(),
+            gpus: range,
+            hints: hints.clone(),
+        };
+        shard_handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-srv-shard-{s}"))
+                .spawn(move || shard.run())?,
+        );
+    }
+
+    // Up path: this thread is the session reader. A protocol violation
+    // (bad frame, out-of-range shard/model/GPU) kills the session — a
+    // confused client must not corrupt shard state.
+    let mut frames_in = 0u64;
+    let mut reader = FrameReader::new(stream.try_clone()?);
+    let end: Result<()> = loop {
+        let frame = match reader.next_frame() {
+            Ok(Some(f)) => f,
+            Ok(None) => break Ok(()), // client closed: normal end of session
+            Err(e) => break Err(e.into()),
+        };
+        frames_in += 1;
+        match codec::decode_up(frame) {
+            Ok((shard, msg)) => {
+                let shard = shard as usize;
+                if shard >= shard_txs.len() {
+                    break Err(crate::util::error::Error::msg(format!(
+                        "{peer}: frame for shard {shard} of {}",
+                        shard_txs.len()
+                    )));
+                }
+                match validate(&msg, n_models, &gpus) {
+                    Ok(()) => {
+                        let to_rank = lift(msg, &gack_tx);
+                        if shard_txs[shard].send(to_rank).is_err() {
+                            break Err(crate::util::error::Error::msg(format!(
+                                "shard {shard} exited mid-session"
+                            )));
+                        }
+                    }
+                    Err(why) => {
+                        break Err(crate::util::error::Error::msg(format!("{peer}: {why}")))
+                    }
+                }
+            }
+            Err(e) => {
+                break Err(crate::util::error::Error::msg(format!(
+                    "{peer}: bad frame: {e}"
+                )))
+            }
+        }
+    };
+
+    // Teardown in dependency order: shards first (they hold model_tx
+    // clones), then the converters' inbound channels disconnect, then
+    // the writer flushes and closes.
+    for tx in &shard_txs {
+        let _ = tx.send(ToRank::Shutdown);
+    }
+    let mut stats = ShardStats::new();
+    for h in shard_handles {
+        if let Ok(s) = h.join() {
+            stats.merge(&s);
+        }
+    }
+    drop(model_tx);
+    drop(gack_tx);
+    let _ = model_conv.join();
+    let _ = ack_conv.join();
+    drop(sender);
+    let _ = writer_h.join();
+    println!(
+        "rank-server: session {peer} closed: frames_in={frames_in} grants={} \
+         mis_steers={} p99_grant_latency_us={}",
+        stats.grants,
+        stats.mis_steers,
+        stats.p99_grant_latency_us()
+    );
+    end
+}
+
+/// Bounds-check an up-message against what this session hosts.
+fn validate(msg: &WireToRank, n_models: usize, gpus: &std::ops::Range<u32>) -> Result<(), String> {
+    match msg {
+        WireToRank::Candidate { model, .. } => {
+            if model.0 as usize >= n_models {
+                return Err(format!("candidate for model {} of {n_models}", model.0));
+            }
+        }
+        WireToRank::GpuBusyUntil { gpu, .. }
+        | WireToRank::Drain { gpu }
+        | WireToRank::Attach { gpu } => {
+            if !gpus.contains(&gpu.0) {
+                return Err(format!("message for GPU {} outside {gpus:?}", gpu.0));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Wire message → in-process message (a `Drain` borrows the session's
+/// ack channel; its ack returns as a `DrainAck` frame).
+fn lift(msg: WireToRank, gack_tx: &Sender<GpuId>) -> ToRank {
+    match msg {
+        WireToRank::Candidate {
+            model,
+            cand,
+            seq,
+            hops,
+        } => ToRank::Candidate {
+            model,
+            cand,
+            seq,
+            hops,
+        },
+        WireToRank::GpuBusyUntil { gpu, free_at } => ToRank::GpuBusyUntil { gpu, free_at },
+        WireToRank::Drain { gpu } => ToRank::Drain {
+            gpu,
+            ack: gack_tx.clone(),
+        },
+        WireToRank::Attach { gpu } => ToRank::Attach { gpu },
+    }
+}
+
+/// Shard verdicts → down-frames. Only the shard-originated `ToModel`
+/// variants can appear here; anything else is a wiring bug. One
+/// exactly-sized allocation per frame, moved straight into the writer
+/// queue (the queue owns its frames, so a reused scratch would pay the
+/// same allocation again on clone).
+fn down_pump(rx: Receiver<ToModel>, sender: FrameSender) {
+    for msg in rx {
+        let down = match msg {
+            ToModel::Granted { model, gpu } => WireFromRank::Granted { model, gpu },
+            ToModel::Revalidate { model } => WireFromRank::Revalidate { model },
+            ToModel::Overflow {
+                model,
+                to_shard,
+                seq,
+            } => {
+                debug_assert!(to_shard <= u16::MAX as usize, "local shard index fits u16");
+                WireFromRank::Overflow {
+                    model,
+                    to_shard: to_shard as u16,
+                    seq,
+                }
+            }
+            other => {
+                debug_assert!(false, "non-verdict {other:?} on the server down path");
+                continue;
+            }
+        };
+        let mut buf = Vec::with_capacity(16);
+        codec::encode_down(&down, &mut buf);
+        if sender.send(buf).is_err() {
+            break;
+        }
+    }
+}
+
+/// Drain acks → `DrainAck` frames.
+fn ack_pump(rx: Receiver<GpuId>, sender: FrameSender) {
+    for gpu in rx {
+        let mut buf = Vec::with_capacity(8);
+        codec::encode_down(&WireFromRank::DrainAck { gpu }, &mut buf);
+        if sender.send(buf).is_err() {
+            break;
+        }
+    }
+}

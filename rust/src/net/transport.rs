@@ -1,0 +1,374 @@
+//! Length-prefixed framed TCP transport for the rank-coordination wire.
+//!
+//! A frame on the wire is `[len: u32 LE][payload]` where the payload is
+//! one [`crate::net::codec`] message. Two pieces:
+//!
+//! * [`FrameReader`] — a blocking per-connection reader: reads one
+//!   frame at a time into a reused buffer, distinguishes clean EOF (at
+//!   a frame boundary) from a torn frame, and rejects zero-length or
+//!   oversized lengths **before** allocating or reading the payload, so
+//!   a corrupt length prefix cannot make the reader balloon or stall.
+//! * [`spawn_writer`] — the write side, the wire analogue of
+//!   `RankShard::InboxBatch`: senders enqueue encoded payloads into a
+//!   shared queue; the writer thread swaps the *entire* backlog out
+//!   under one lock, prefixes every frame into one contiguous buffer,
+//!   and ships the batch with a single `write_all` — one syscall per
+//!   drain no matter how many frames queued behind it. `TCP_NODELAY`
+//!   is set by both peers, so latency when the queue is shallow comes
+//!   from the wire, not from Nagle.
+//!
+//! Like everything under `net/`, std-only by construction.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Maximum accepted frame payload length. Codec frames are tens of
+/// bytes; anything near this bound is a corrupt prefix or a foreign
+/// protocol, rejected without reading the claimed payload.
+pub const MAX_FRAME: usize = 4096;
+
+/// The peer (or the writer thread) is gone; the frame was not sent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireClosed;
+
+impl std::fmt::Display for WireClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire connection closed")
+    }
+}
+
+impl std::error::Error for WireClosed {}
+
+/// Blocking frame reader over any `Read` (a `TcpStream` in production,
+/// a `Cursor` in tests). The payload buffer is reused across frames.
+pub struct FrameReader<R: Read> {
+    src: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(src: R) -> Self {
+        FrameReader {
+            src,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Read the next frame payload. `Ok(None)` is a clean EOF exactly
+    /// at a frame boundary; EOF mid-prefix or mid-payload, a zero
+    /// length, and a length beyond [`MAX_FRAME`] are all errors.
+    pub fn next_frame(&mut self) -> io::Result<Option<&[u8]>> {
+        let mut prefix = [0u8; 4];
+        if !read_exact_or_eof(&mut self.src, &mut prefix)? {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(prefix) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame length {len} outside 1..={MAX_FRAME}"),
+            ));
+        }
+        self.buf.resize(len, 0);
+        self.src.read_exact(&mut self.buf)?;
+        Ok(Some(&self.buf))
+    }
+}
+
+/// `read_exact`, except a clean EOF before the *first* byte returns
+/// `Ok(false)` instead of an error (EOF after partial data stays an
+/// `UnexpectedEof` error — a torn frame).
+fn read_exact_or_eof<R: Read>(src: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match src.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+struct QueueInner {
+    frames: Vec<Vec<u8>>,
+    senders: usize,
+    closed: bool,
+}
+
+/// The shared send queue behind [`FrameSender`] / the writer thread.
+struct FrameQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+/// Clonable handle that enqueues encoded frame payloads for the writer
+/// thread. Dropping the last sender (or calling [`FrameSender::close`])
+/// lets the writer flush what is queued and close the write half.
+pub struct FrameSender {
+    q: Arc<FrameQueue>,
+}
+
+impl Clone for FrameSender {
+    fn clone(&self) -> Self {
+        self.q.inner.lock().unwrap().senders += 1;
+        FrameSender { q: self.q.clone() }
+    }
+}
+
+impl Drop for FrameSender {
+    fn drop(&mut self) {
+        let mut g = self.q.inner.lock().unwrap();
+        g.senders -= 1;
+        if g.senders == 0 {
+            g.closed = true;
+            self.q.cv.notify_all();
+        }
+    }
+}
+
+impl FrameSender {
+    /// Enqueue one encoded payload (length prefix added by the writer).
+    pub fn send(&self, frame: Vec<u8>) -> Result<(), WireClosed> {
+        assert!(
+            !frame.is_empty() && frame.len() <= MAX_FRAME,
+            "frame payload of {} bytes outside 1..={MAX_FRAME}",
+            frame.len()
+        );
+        let mut g = self.q.inner.lock().unwrap();
+        if g.closed {
+            return Err(WireClosed);
+        }
+        g.frames.push(frame);
+        self.q.cv.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: queued frames still flush, further sends fail.
+    pub fn close(&self) {
+        let mut g = self.q.inner.lock().unwrap();
+        g.closed = true;
+        self.q.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.q.inner.lock().unwrap().closed
+    }
+}
+
+/// What the writer thread did over its lifetime — `writes` vs `frames`
+/// is the coalescing factor `bench_wire` reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WriterStats {
+    pub frames: u64,
+    pub writes: u64,
+    pub bytes: u64,
+}
+
+/// Spawn the coalescing writer thread owning `stream`'s write half.
+/// The thread exits — flushing the remaining queue and shutting the write half
+/// down — when every sender is dropped or `close` is called; a write
+/// error also closes the queue so senders fail fast instead of piling
+/// frames onto a dead connection.
+pub fn spawn_writer(stream: TcpStream) -> (FrameSender, JoinHandle<io::Result<WriterStats>>) {
+    let q = Arc::new(FrameQueue {
+        inner: Mutex::new(QueueInner {
+            frames: Vec::new(),
+            senders: 1,
+            closed: false,
+        }),
+        cv: Condvar::new(),
+    });
+    let sender = FrameSender { q: q.clone() };
+    let handle = std::thread::Builder::new()
+        .name("wire-writer".into())
+        .spawn(move || write_loop(q, stream))
+        .expect("spawn wire writer");
+    (sender, handle)
+}
+
+fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterStats> {
+    let mut stats = WriterStats::default();
+    let mut batch: Vec<Vec<u8>> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        {
+            let mut g = q.inner.lock().unwrap();
+            while g.frames.is_empty() && !g.closed {
+                g = q.cv.wait(g).unwrap();
+            }
+            std::mem::swap(&mut g.frames, &mut batch);
+            if batch.is_empty() && g.closed {
+                break;
+            }
+        }
+        // One contiguous buffer, one syscall, however deep the backlog.
+        out.clear();
+        for f in batch.drain(..) {
+            out.extend_from_slice(&(f.len() as u32).to_le_bytes());
+            out.extend_from_slice(&f);
+            stats.frames += 1;
+        }
+        if let Err(e) = stream.write_all(&out) {
+            let mut g = q.inner.lock().unwrap();
+            g.closed = true;
+            g.frames.clear();
+            drop(g);
+            q.cv.notify_all();
+            let _ = stream.shutdown(Shutdown::Write);
+            return Err(e);
+        }
+        stats.writes += 1;
+        stats.bytes += out.len() as u64;
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+    Ok(stats)
+}
+
+/// `TcpStream::connect` with retry until `timeout` — the peer may still
+/// be binding (CI spawns `rank-server` and `serve` back to back). Only
+/// plausibly-transient failures retry; a permanent error (bad hostname,
+/// unreachable network) surfaces immediately instead of stalling the
+/// spawn for the whole timeout.
+pub fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let transient = matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::ConnectionAborted
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::AddrNotAvailable
+                );
+                if !transient || Instant::now() >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+    use std::net::TcpListener;
+
+    fn frame(len: usize, fill: u8) -> Vec<u8> {
+        let mut out = (len as u32).to_le_bytes().to_vec();
+        out.resize(4 + len, fill);
+        out
+    }
+
+    #[test]
+    fn reader_parses_back_to_back_frames() {
+        let mut bytes = frame(3, 0xAB);
+        bytes.extend(frame(1, 0xCD));
+        let mut r = FrameReader::new(Cursor::new(bytes));
+        assert_eq!(r.next_frame().unwrap().unwrap(), &[0xAB, 0xAB, 0xAB]);
+        assert_eq!(r.next_frame().unwrap().unwrap(), &[0xCD]);
+        assert!(r.next_frame().unwrap().is_none(), "clean EOF");
+    }
+
+    /// Oversized / zero lengths are rejected before any payload read —
+    /// the transport half of the codec-robustness satellite.
+    #[test]
+    fn reader_rejects_bad_lengths() {
+        let bytes = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        let mut r = FrameReader::new(Cursor::new(bytes));
+        let err = r.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+
+        let bytes = 0u32.to_le_bytes().to_vec();
+        let mut r = FrameReader::new(Cursor::new(bytes));
+        let err = r.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+    }
+
+    #[test]
+    fn reader_torn_frame_is_unexpected_eof() {
+        // Prefix promises 8 bytes, only 2 follow.
+        let mut bytes = 8u32.to_le_bytes().to_vec();
+        bytes.extend([1, 2]);
+        let mut r = FrameReader::new(Cursor::new(bytes));
+        let err = r.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+
+        // EOF inside the prefix itself is torn too.
+        let mut r = FrameReader::new(Cursor::new(vec![1u8, 0]));
+        let err = r.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    /// End-to-end over loopback: frames enqueued from several senders
+    /// arrive intact, and the writer coalesces a queued backlog into
+    /// fewer syscalls than frames.
+    #[test]
+    fn writer_coalesces_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader_h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = FrameReader::new(stream);
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            while let Some(f) = r.next_frame().unwrap() {
+                got.push(f.to_vec());
+            }
+            got
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let (tx, writer_h) = spawn_writer(stream);
+        let n = 512u32;
+        let tx2 = tx.clone();
+        for i in 0..n {
+            let who = if i % 2 == 0 { &tx } else { &tx2 };
+            who.send(i.to_le_bytes().to_vec()).unwrap();
+        }
+        drop(tx);
+        drop(tx2);
+        let stats = writer_h.join().unwrap().unwrap();
+        let got = reader_h.join().unwrap();
+        assert_eq!(got.len(), n as usize);
+        for (i, f) in got.iter().enumerate() {
+            assert_eq!(f, &(i as u32).to_le_bytes().to_vec(), "frame {i} in order");
+        }
+        assert_eq!(stats.frames, n as u64);
+        assert!(
+            stats.writes <= stats.frames,
+            "coalescing can never add syscalls: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn send_after_close_fails() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept_h = std::thread::spawn(move || listener.accept().unwrap());
+        let stream = TcpStream::connect(addr).unwrap();
+        let (tx, writer_h) = spawn_writer(stream);
+        tx.send(vec![1]).unwrap();
+        tx.close();
+        assert!(tx.is_closed());
+        assert_eq!(tx.send(vec![2]), Err(WireClosed));
+        drop(tx);
+        let stats = writer_h.join().unwrap().unwrap();
+        assert_eq!(stats.frames, 1, "queued frame still flushed");
+        drop(accept_h.join().unwrap());
+    }
+}

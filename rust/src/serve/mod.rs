@@ -67,6 +67,12 @@ pub struct ServeConfig {
     /// Model-worker threads multiplexing per-model scheduling state
     /// (`None` = `min(models, available_parallelism)`).
     pub model_workers: Option<usize>,
+    /// Remote rank tier: `symphony rank-server` addresses whose GPU
+    /// ranges tile `0..num_gpus` in order (empty = in-process rank
+    /// shards per `rank_shards`, which is then the only configuration
+    /// that reads `rank_shards`). Backends stay in this process either
+    /// way — only the batch-rate matchmaking crosses the wire.
+    pub remote_ranks: Vec<String>,
     /// Aggregate offered rate, requests/second (used when
     /// `rate_phases` is empty).
     pub total_rate: f64,
@@ -103,6 +109,10 @@ pub struct ServeReport {
     /// Submissions that could not be delivered to a model worker (the
     /// seed silently swallowed these `SendError`s).
     pub dropped_submits: u64,
+    /// Remote rank-server sessions that ended without this process
+    /// asking (always 0 with an in-process rank tier) — a disconnect
+    /// is counted and logged, never silently wedged through.
+    pub rank_disconnects: u64,
     /// Per-epoch autoscale timeline (empty without `autoscale`).
     pub timeline: Vec<EpochPoint>,
 }
@@ -244,7 +254,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         }
     }
 
-    let coord = Coordinator::spawn(
+    let coord = Coordinator::try_spawn(
         CoordinatorConfig {
             profiles: cfg.models.iter().map(|m| m.profile).collect(),
             num_gpus: cfg.num_gpus,
@@ -255,14 +265,17 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             // The paper budgets the RDMA p99.99 (33 µs) here; without a
             // kernel-bypass control plane we budget OS-thread wakeup +
             // channel jitter instead (§4.3's predictability argument,
-            // measured in EXPERIMENTS.md).
+            // measured in EXPERIMENTS.md). The same budget absorbs the
+            // wire's handshake clock-sync error under --remote-ranks.
             net_bound: Micros::from_millis_f64(2.0),
             exec_margin: Micros::from_millis_f64(0.5),
+            remote_ranks: cfg.remote_ranks.clone(),
         },
         backend_txs.clone(),
         comp_tx.clone(),
-    );
+    )?;
     let clock = coord.clock;
+    let depth_probe = coord.queue_depth_probe();
 
     // Completion collector: final-report accumulation plus the shared
     // windowed counters the autoscale loop reads.
@@ -282,6 +295,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let mut scaler = LiveAutoscaler::new(ctl, coord.cluster_ctl(), initial_gpus);
         let counts = counts.clone();
         let workers = sleep_workers.clone();
+        let depth_probe = depth_probe.clone();
         let epoch = Duration::from_micros(as_cfg.epoch.0.max(1));
         std::thread::spawn(move || {
             let mut log: Vec<EpochPoint> = Vec::new();
@@ -318,6 +332,10 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                         0.0
                     },
                     active_gpus: active,
+                    // Live backlog at epoch end: lets the controller
+                    // distinguish "idle" from "stalling" (few
+                    // completions because everything is still queued).
+                    queue_depth: depth_probe.total(),
                 };
                 let before: Vec<GpuState> = scaler.gpu_states().to_vec();
                 let delta = if stopping { 0 } else { scaler.step(&w) };
@@ -487,6 +505,7 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         grants: shard_stats.grants,
         mis_steers: shard_stats.mis_steers,
         dropped_submits: front_stats.dropped_submits,
+        rank_disconnects: front_stats.rank_disconnects,
         timeline,
     }
     .tap_duration(cfg.duration))
@@ -678,6 +697,7 @@ mod tests {
             rank_shards: 2,
             ingest_shards: 2,
             model_workers: None,
+            remote_ranks: Vec::new(),
             total_rate: 200.0,
             rate_phases: Vec::new(),
             duration: Duration::from_millis(500),
@@ -702,6 +722,7 @@ mod tests {
         assert!(report.p99_latency_ms < 60.0, "p99 {}", report.p99_latency_ms);
         assert!(report.grants > 0);
         assert_eq!(report.dropped_submits, 0, "no submission may be lost");
+        assert_eq!(report.rank_disconnects, 0, "in-process tier never disconnects");
         assert!(report.timeline.is_empty(), "no autoscale, no timeline");
     }
 
@@ -721,6 +742,7 @@ mod tests {
             rank_shards: 2,
             ingest_shards: 1,
             model_workers: None,
+            remote_ranks: Vec::new(),
             total_rate: 0.0,
             rate_phases: vec![(1.0, 150.0), (2.0, 2600.0), (2.0, 120.0)],
             duration: Duration::from_secs_f64(5.0),
@@ -731,6 +753,7 @@ mod tests {
                 min_gpus: 1,
                 max_gpus: 6,
                 epoch: Micros::from_millis_f64(400.0),
+                backlog_per_gpu: 4.0,
             }),
             seed: 11,
         })

@@ -47,6 +47,7 @@ fn spawn_cluster(
             model_workers,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
+            remote_ranks: Vec::new(),
         },
         backend_txs,
         comp_tx,
@@ -299,4 +300,36 @@ fn batched_ingestion_matches_per_request_multiset() {
         "batched and per-request ingestion must dispatch the same multiset"
     );
     assert_eq!(per_request.len() as u64, n);
+}
+
+/// The queue-depth satellite's plumbing: with zero GPUs attached
+/// nothing can dispatch, so after the workers flush, the probe must
+/// read exactly the submitted backlog — the signal the autoscaler's
+/// deep-backlog veto consumes (`WindowStats::queue_depth`).
+#[test]
+fn queue_depth_probe_reports_backlog() {
+    let profile = LatencyProfile::new(0.2, 1.0);
+    let cluster = spawn_cluster(2, 2, Some(0), 1, 1, Some(2), profile);
+    let probe = cluster.coord.queue_depth_probe();
+    assert_eq!(probe.total(), 0, "fresh pool has no backlog");
+    let now = cluster.coord.clock.now();
+    let slo = Micros::from_millis_f64(10_000.0); // nothing sheds in-test
+    let n = 37u64;
+    for i in 0..n {
+        cluster.coord.submit(Request {
+            id: RequestId(i),
+            model: ModelId((i % 2) as u32),
+            arrival: now,
+            deadline: now + slo,
+        });
+    }
+    // Wait for the workers' end-of-drain flush to publish.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while probe.total() != n && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(probe.total(), n, "backlog visible once flushed");
+    let (front, stats) = cluster.coord.shutdown_stats();
+    assert_eq!(front.processed, n);
+    assert_eq!(stats.grants, 0, "no GPU attached, nothing granted");
 }

@@ -1,0 +1,307 @@
+//! Wire-transport semantics: `serve --remote-ranks`-equivalent
+//! coordinators against a loopback `rank-server` must dispatch the
+//! same work as in-process shards, the drain/attach autoscaler
+//! protocol must round-trip as frames, and a rank-server disconnect
+//! must be surfaced (counted + logged) rather than silently wedging
+//! the model workers.
+
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use symphony::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use symphony::core::profile::LatencyProfile;
+use symphony::core::time::Micros;
+use symphony::core::types::{GpuId, ModelId, Request, RequestId};
+use symphony::net::codec::{self, ServerPreamble, HELLO_LEN};
+use symphony::net::server::{RankServer, RankServerConfig};
+
+const N_MODELS: usize = 2;
+const NUM_GPUS: usize = 2;
+
+fn config(remote_ranks: Vec<String>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        profiles: vec![LatencyProfile::new(0.2, 1.0); N_MODELS],
+        num_gpus: NUM_GPUS,
+        initial_gpus: None,
+        rank_shards: 2,
+        ingest_shards: 1,
+        model_workers: Some(2),
+        net_bound: Micros::from_millis_f64(1.0),
+        exec_margin: Micros::ZERO,
+        remote_ranks,
+    }
+}
+
+fn spawn_server(shards: usize) -> (String, std::thread::JoinHandle<()>) {
+    let server = RankServer::bind(RankServerConfig {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        gpus: 0..NUM_GPUS as u32,
+        max_sessions: Some(1),
+    })
+    .expect("bind rank server");
+    let addr = server.local_addr().to_string();
+    let h = std::thread::spawn(move || server.run().expect("rank server run"));
+    (addr, h)
+}
+
+/// Run one seeded workload through a coordinator and return
+/// (dispatched ids, dropped ids, rank_disconnects). Deterministic
+/// workload; generous SLO so nothing sheds.
+fn run_workload(remote: bool, n: u64) -> (Vec<u64>, Vec<u64>, u64) {
+    let (remote_ranks, server) = if remote {
+        let (addr, h) = spawn_server(2);
+        (vec![addr], Some(h))
+    } else {
+        (Vec::new(), None)
+    };
+    let mut backend_txs = Vec::new();
+    let mut backend_rxs = Vec::new();
+    for _ in 0..NUM_GPUS {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        backend_rxs.push(rx);
+    }
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    let coord = Coordinator::spawn(config(remote_ranks), backend_txs, comp_tx);
+    let slo = Micros::from_millis_f64(2_000.0);
+    for i in 0..n {
+        let now = coord.clock.now();
+        coord.submit(Request {
+            id: RequestId(i),
+            model: ModelId((i % N_MODELS as u64) as u32),
+            arrival: now,
+            deadline: now + slo,
+        });
+        if i % 16 == 15 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Wait until every request is dispatched or dropped.
+    let mut dispatched: Vec<u64> = Vec::new();
+    let mut dropped: Vec<u64> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while (dispatched.len() + dropped.len()) < n as usize && Instant::now() < deadline {
+        for rx in &backend_rxs {
+            for msg in rx.try_iter() {
+                if let ToBackend::Execute { requests, .. } = msg {
+                    dispatched.extend(requests.iter().map(|r| r.id.0));
+                }
+            }
+        }
+        for c in comp_rx.try_iter() {
+            if let Completion::Dropped(rs) = c {
+                dropped.extend(rs.iter().map(|r| r.id.0));
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let disconnects = coord.rank_disconnects();
+    coord.shutdown();
+    if let Some(h) = server {
+        let _ = h.join();
+    }
+    dispatched.sort_unstable();
+    dropped.sort_unstable();
+    (dispatched, dropped, disconnects)
+}
+
+/// The acceptance criterion: on an identical seeded workload the
+/// remote-rank coordinator produces the same dispatch multiset as the
+/// in-process one — every submitted request dispatched exactly once,
+/// none dropped, none duplicated, on either side of the wire.
+#[test]
+fn remote_ranks_match_inprocess_dispatch_multiset() {
+    let n = 400u64;
+    let (local_disp, local_drop, local_disc) = run_workload(false, n);
+    let (remote_disp, remote_drop, remote_disc) = run_workload(true, n);
+    assert_eq!(local_disc, 0);
+    assert_eq!(remote_disc, 0, "clean run must not count a disconnect");
+    assert!(local_drop.is_empty(), "in-process dropped {:?}", local_drop.len());
+    assert!(remote_drop.is_empty(), "remote dropped {:?}", remote_drop.len());
+    let expect: Vec<u64> = (0..n).collect();
+    assert_eq!(local_disp, expect, "in-process: every id exactly once");
+    assert_eq!(
+        remote_disp, expect,
+        "remote: same dispatch multiset as in-process"
+    );
+}
+
+/// Drain/attach over the wire: `ClusterCtl::drain` against a remote
+/// shard must come back as a `DrainAck` frame feeding the caller's
+/// `Sender<GpuId>`, the drained GPU must stop being granted, and a
+/// subsequent `Attach` frame must revive it.
+#[test]
+fn drain_ack_and_attach_round_trip_the_wire() {
+    let (addr, server) = spawn_server(1);
+    let mut backend_txs = Vec::new();
+    let mut backend_rxs: Vec<Receiver<ToBackend>> = Vec::new();
+    for _ in 0..NUM_GPUS {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        backend_rxs.push(rx);
+    }
+    let (comp_tx, _comp_rx) = channel::<Completion>();
+    let coord = Coordinator::spawn(config(vec![addr]), backend_txs, comp_tx);
+    let ctl = coord.cluster_ctl();
+
+    // Drain the high GPU while idle: the ack must round-trip promptly.
+    let (ack_tx, ack_rx) = channel::<GpuId>();
+    ctl.drain(GpuId(1), ack_tx).expect("drain over the wire");
+    let acked = ack_rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("DrainAck frame must come back");
+    assert_eq!(acked, GpuId(1));
+
+    // With GPU 1 retired, all work lands on GPU 0.
+    let slo = Micros::from_millis_f64(2_000.0);
+    for i in 0..40u64 {
+        let now = coord.clock.now();
+        coord.submit(Request {
+            id: RequestId(i),
+            model: ModelId((i % 2) as u32),
+            arrival: now,
+            deadline: now + slo,
+        });
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut on_gpu0 = 0usize;
+    while on_gpu0 < 40 && Instant::now() < deadline {
+        for msg in backend_rxs[0].try_iter() {
+            if let ToBackend::Execute { requests, .. } = msg {
+                on_gpu0 += requests.len();
+            }
+        }
+        assert!(
+            backend_rxs[1].try_iter().next().is_none(),
+            "drained GPU 1 must never be granted"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(on_gpu0, 40, "all work on the surviving GPU");
+
+    // Attach revives it: eventually GPU 1 executes again.
+    ctl.attach(GpuId(1)).expect("attach over the wire");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut gpu1_used = false;
+    let mut i = 1_000u64;
+    while !gpu1_used && Instant::now() < deadline {
+        let now = coord.clock.now();
+        for _ in 0..8 {
+            coord.submit(Request {
+                id: RequestId(i),
+                model: ModelId((i % 2) as u32),
+                arrival: now,
+                deadline: now + slo,
+            });
+            i += 1;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        gpu1_used = backend_rxs[1].try_iter().next().is_some();
+    }
+    assert!(gpu1_used, "attached GPU must serve again");
+    assert_eq!(coord.rank_disconnects(), 0);
+    coord.shutdown();
+    let _ = server.join();
+}
+
+/// A rank server that vanishes mid-session is *surfaced*: the
+/// disconnect counter increments (and the event is logged), sends into
+/// the dead tier fail fast, and shutdown completes instead of wedging.
+/// The stub here handshakes like a real server, then drops the socket.
+#[test]
+fn server_disconnect_is_counted_not_wedged() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stub = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        (&stream)
+            .write_all(&codec::encode_preamble(&ServerPreamble {
+                shards: 2,
+                gpu_lo: 0,
+                gpu_hi: NUM_GPUS as u32,
+            }))
+            .unwrap();
+        let mut hello = [0u8; HELLO_LEN];
+        (&stream).read_exact(&mut hello).unwrap();
+        // Handshake complete — now vanish.
+        drop(stream);
+    });
+    let mut backend_txs = Vec::new();
+    for _ in 0..NUM_GPUS {
+        let (tx, _rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+    }
+    let (comp_tx, _comp_rx) = channel::<Completion>();
+    let coord = Coordinator::spawn(config(vec![addr]), backend_txs, comp_tx);
+    stub.join().unwrap();
+
+    // The reader notices the EOF and counts it.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while coord.rank_disconnects() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.rank_disconnects(), 1, "disconnect must be counted");
+
+    // A drain against the dead tier must fail fast, not hang: either
+    // the port rejects the send outright, or the parked ack sender was
+    // dropped by the disconnect path — a blocking recv sees
+    // Disconnected immediately, like a dead in-process shard.
+    let ctl = coord.cluster_ctl();
+    let (ack_tx, ack_rx) = channel::<GpuId>();
+    let _ = ctl.drain(GpuId(0), ack_tx);
+    assert_eq!(
+        ack_rx.recv_timeout(Duration::from_millis(200)),
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected),
+        "pending drain ack must disconnect, not wedge"
+    );
+
+    // Submissions into the dead tier do not wedge anything: workers
+    // fail fast on their next registration and later submissions are
+    // counted as dropped, all within a bounded shutdown.
+    let now = coord.clock.now();
+    for i in 0..32u64 {
+        coord.submit(Request {
+            id: RequestId(i),
+            model: ModelId((i % 2) as u32),
+            arrival: now,
+            deadline: now + Micros::from_millis_f64(50.0),
+        });
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let (front, stats) = coord.shutdown_stats();
+    assert_eq!(front.rank_disconnects, 1);
+    assert_eq!(stats.grants, 0, "nothing can be granted by a dead tier");
+}
+
+/// Misconfiguration fails the spawn, not the first registration: a
+/// remote tier that does not cover the cluster's GPU range is an
+/// error from `try_spawn`.
+#[test]
+fn topology_mismatch_fails_spawn() {
+    let (addr, server) = spawn_server(1); // covers 0..NUM_GPUS
+    let mut cfg = config(vec![addr]);
+    cfg.num_gpus = NUM_GPUS + 3; // cluster claims more GPUs than served
+    let mut backend_txs = Vec::new();
+    for _ in 0..cfg.num_gpus {
+        let (tx, _rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+    }
+    let (comp_tx, _comp_rx) = channel::<Completion>();
+    let err = Coordinator::try_spawn(cfg, backend_txs, comp_tx);
+    assert!(err.is_err(), "range mismatch must fail spawn");
+    // The server saw one (aborted) session; let it exit.
+    let _ = server.join();
+}
+
+/// Ids used in sets above stay unique across helper runs.
+#[test]
+fn workload_ids_are_a_set() {
+    let n = 64;
+    let (disp, drop, _) = run_workload(false, n);
+    let uniq: BTreeSet<u64> = disp.iter().chain(drop.iter()).copied().collect();
+    assert_eq!(uniq.len() as u64, n);
+}

@@ -177,9 +177,30 @@ struct ExecObs {
     profile: symphony::core::profile::LatencyProfile,
 }
 
+/// Spawn a loopback `rank-server` (one session, ephemeral port) for a
+/// remote-tier drive; returns the address and the server thread.
+fn spawn_loopback_rank_server(
+    shards: usize,
+    num_gpus: usize,
+) -> (String, std::thread::JoinHandle<()>) {
+    use symphony::net::server::{RankServer, RankServerConfig};
+    let server = RankServer::bind(RankServerConfig {
+        listen: "127.0.0.1:0".into(),
+        shards,
+        gpus: 0..num_gpus as u32,
+        max_sessions: Some(1),
+    })
+    .expect("bind loopback rank server");
+    let addr = server.local_addr().to_string();
+    let h = std::thread::spawn(move || server.run().expect("rank server run"));
+    (addr, h)
+}
+
 /// Drive a real (wall-clock) coordinator with a random bursty workload
-/// and collect every dispatched batch per GPU channel.
-fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
+/// and collect every dispatched batch per GPU channel. With `remote`,
+/// the rank tier runs behind a loopback `rank-server` process boundary
+/// (real framed TCP) instead of in-process channels.
+fn drive_coordinator(rng: &mut Rng, rank_shards: usize, remote: bool) -> Vec<Vec<ExecObs>> {
     use std::sync::mpsc::channel;
     use std::time::Duration;
     use symphony::coordinator::{
@@ -204,6 +225,12 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
         backend_txs.push(tx);
         backend_rxs.push(rx);
     }
+    let (remote_ranks, server) = if remote {
+        let (addr, h) = spawn_loopback_rank_server(rank_shards, num_gpus);
+        (vec![addr], Some(h))
+    } else {
+        (Vec::new(), None)
+    };
     let (comp_tx, _comp_rx) = channel::<Completion>();
     let coord = Coordinator::spawn(
         CoordinatorConfig {
@@ -215,6 +242,7 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
             model_workers: None,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
+            remote_ranks,
         },
         backend_txs,
         comp_tx,
@@ -241,6 +269,9 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
     // Drain: longest SLO plus margin so deferred windows fire.
     std::thread::sleep(Duration::from_millis(80));
     coord.shutdown();
+    if let Some(h) = server {
+        let _ = h.join();
+    }
 
     backend_rxs
         .into_iter()
@@ -280,7 +311,7 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize) -> Vec<Vec<ExecObs>> {
 fn prop_coordinator_window_invariant() {
     check("coordinator_window", 6, |rng| {
         for rank_shards in [1usize, 4] {
-            let per_gpu = drive_coordinator(rng, rank_shards);
+            let per_gpu = drive_coordinator(rng, rank_shards, false);
             for (g, execs) in per_gpu.iter().enumerate() {
                 for e in execs {
                     prop_assert!(e.n > 0, "empty batch dispatched on gpu {g}");
@@ -309,7 +340,7 @@ fn prop_coordinator_window_invariant() {
 fn prop_coordinator_no_double_grant() {
     check("coordinator_no_double_grant", 6, |rng| {
         for rank_shards in [1usize, 4] {
-            let per_gpu = drive_coordinator(rng, rank_shards);
+            let per_gpu = drive_coordinator(rng, rank_shards, false);
             for (g, execs) in per_gpu.iter().enumerate() {
                 for w in execs.windows(2) {
                     let prev_busy_until = w[0].at + w[0].profile.latency(w[0].n);
@@ -317,6 +348,49 @@ fn prop_coordinator_no_double_grant() {
                         w[1].at >= prev_busy_until,
                         "shards={rank_shards} gpu={g}: dispatch at {:?} overlaps \
                          previous batch busy until {:?}",
+                        w[1].at,
+                        prev_busy_until
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The schedulability invariants must survive the process boundary:
+/// with the rank tier behind a loopback `rank-server` (real framed
+/// TCP, `--remote-ranks` configuration), no dispatched batch may
+/// finish past the head deadline of its requests, and each GPU's
+/// dispatches stay strictly serialized. Safety is enforced client-side
+/// (the worker re-plans the batch at grant time on its own clock), so
+/// wire latency and handshake clock skew may cost batching quality but
+/// never correctness — exactly what this property pins down.
+#[test]
+fn prop_remote_coordinator_window_and_serialization() {
+    check("remote_coordinator_invariants", 4, |rng| {
+        for rank_shards in [1usize, 3] {
+            let per_gpu = drive_coordinator(rng, rank_shards, true);
+            for (g, execs) in per_gpu.iter().enumerate() {
+                for e in execs {
+                    prop_assert!(e.n > 0, "remote: empty batch dispatched on gpu {g}");
+                    let end = e.at + e.profile.latency(e.n);
+                    prop_assert!(
+                        end <= e.min_deadline,
+                        "remote shards={rank_shards} gpu={g}: batch of {} at {:?} \
+                         ends {:?} past head deadline {:?}",
+                        e.n,
+                        e.at,
+                        end,
+                        e.min_deadline
+                    );
+                }
+                for w in execs.windows(2) {
+                    let prev_busy_until = w[0].at + w[0].profile.latency(w[0].n);
+                    prop_assert!(
+                        w[1].at >= prev_busy_until,
+                        "remote shards={rank_shards} gpu={g}: dispatch at {:?} \
+                         overlaps previous batch busy until {:?}",
                         w[1].at,
                         prev_busy_until
                     );
@@ -379,6 +453,7 @@ fn drive_coordinator_with_resize(
             model_workers: None,
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
+            remote_ranks: Vec::new(),
         },
         backend_txs,
         comp_tx,

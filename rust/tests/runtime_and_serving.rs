@@ -22,6 +22,7 @@ fn sleep_backend_meets_slo_at_moderate_load() {
         rank_shards: 1,
         ingest_shards: 1,
         model_workers: None,
+        remote_ranks: Vec::new(),
         total_rate: 300.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(800),
@@ -46,6 +47,7 @@ fn sleep_backend_batches_under_pressure() {
         rank_shards: 1,
         ingest_shards: 1,
         model_workers: None,
+        remote_ranks: Vec::new(),
         total_rate: 400.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
@@ -117,6 +119,7 @@ fn pjrt_end_to_end_serving() {
         rank_shards: 1,
         ingest_shards: 1,
         model_workers: None,
+        remote_ranks: Vec::new(),
         total_rate: 150.0,
         rate_phases: Vec::new(),
         duration: Duration::from_millis(700),
