@@ -79,7 +79,7 @@ fn bench_frames(n: u64) -> (f64, f64) {
     });
     let stream = TcpStream::connect(addr).expect("connect");
     stream.set_nodelay(true).unwrap();
-    let (tx, writer_h) = spawn_writer(stream);
+    let (tx, writer_h) = spawn_writer(stream).expect("spawn writer");
     let msg = WireToRank::GpuBusyUntil {
         gpu: GpuId(3),
         free_at: Micros(1),

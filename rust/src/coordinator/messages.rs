@@ -13,8 +13,12 @@
 //! maps onto `WireToRank` (a remote shutdown is a connection close),
 //! and the shard-originated `ToModel` verdicts map onto
 //! `WireFromRank` — plus an explicit `DrainAck` frame standing in for
-//! `Drain`'s in-process `Sender<GpuId>` ack. Keep the two in sync when
-//! evolving either.
+//! `Drain`'s in-process `Sender<GpuId>` ack. The sync is machine
+//! checked: `symphony lint`'s `wire-schema-drift` rule compares the
+//! variant sets and field names of both sides (modulo the documented
+//! local-only/wire-only exceptions) and verifies every wire variant has
+//! an encode and a decode arm, so evolving one side without the other
+//! fails CI instead of surfacing as a runtime `BadTag`.
 
 use std::sync::mpsc::Sender;
 

@@ -451,7 +451,7 @@ impl Coordinator {
             id: crate::core::types::RequestId(id),
             model,
             arrival: now,
-            deadline: now + slo,
+            deadline: now.saturating_add(slo),
         });
     }
 

@@ -232,7 +232,9 @@ impl ModelWorker {
                 if let Some(c) = cand {
                     let slot = &mut self.slots[si];
                     let batch = slot.queue.take_burst(c.size as usize);
-                    let busy_until = now + slot.profile.latency(c.size) + self.exec_margin;
+                    let busy_until = now
+                        .saturating_add(slot.profile.latency(c.size))
+                        .saturating_add(self.exec_margin);
                     let dispatched = batch.len() as u64;
                     let _ = self.backends[gpu.0 as usize].send(ToBackend::Execute {
                         model,
@@ -497,7 +499,7 @@ impl TrackingQueue {
         dropped: &mut ReqBurst,
     ) -> Option<CandWindow> {
         while let Some(front) = self.q.front() {
-            let budget = front.deadline.saturating_sub(now + net_bound);
+            let budget = front.deadline.saturating_sub(now.saturating_add(net_bound));
             if profile.max_batch_within(budget) == 0 {
                 dropped.push(self.q.pop_front().unwrap());
             } else {
@@ -505,11 +507,11 @@ impl TrackingQueue {
             }
         }
         let front = self.q.front()?;
-        let budget = front.deadline.saturating_sub(now + net_bound);
+        let budget = front.deadline.saturating_sub(now.saturating_add(net_bound));
         let b = (profile.max_batch_within(budget) as usize).min(self.q.len()) as u32;
         let d = front.deadline;
-        let frontrun = d.saturating_sub(profile.latency(b + 1) + net_bound);
-        let latest = d.saturating_sub(profile.latency(b) + net_bound);
+        let frontrun = d.saturating_sub(profile.latency(b + 1).saturating_add(net_bound));
+        let latest = d.saturating_sub(profile.latency(b).saturating_add(net_bound));
         Some(CandWindow {
             exec: frontrun.max(now),
             latest,

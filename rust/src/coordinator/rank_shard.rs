@@ -72,6 +72,8 @@ impl ShardStats {
 
     /// p99 grant latency in µs, at bucket granularity (0 when no grants).
     pub fn p99_grant_latency_us(&self) -> usize {
+        // lint:allow(float-free-hot-path): end-of-session stats reporting,
+        // not the per-candidate serving path.
         self.grant_lat.quantile(0.99) * LAT_BUCKET_US as usize
     }
 }
@@ -300,7 +302,14 @@ impl InboxBatch {
         }
     }
 
-    fn flush(&mut self, st: &mut State, now: Micros, stats: &mut ShardStats) {
+    fn flush(
+        &mut self,
+        st: &mut State,
+        now: Micros,
+        stats: &mut ShardStats,
+        hints: &FreeHints,
+        shard: usize,
+    ) {
         // Busy updates first: they touch state disjoint from the
         // candidate sets, but applying them before the candidates keeps
         // the mis-steer check honest about free/busy transitions that
@@ -309,6 +318,17 @@ impl InboxBatch {
             let _ = st.apply(ToRank::GpuBusyUntil { gpu, free_at }, now, stats);
         }
         for (model, (cand, seq, hops)) in self.cands.drain() {
+            // A steered candidate's arrival consumes the reservation its
+            // steering shard took against this shard's hint (same
+            // arrival test as the mis-steer counter in `State::apply`:
+            // in-place updates of an already-arrived migrant carry the
+            // same `hops` and must not redeem again).
+            if hops > 0
+                && cand.is_some()
+                && st.cands.get(&model).map(|c| c.hops) != Some(hops)
+            {
+                hints.redeem(shard);
+            }
             let _ = st.apply(
                 ToRank::Candidate {
                     model,
@@ -371,7 +391,7 @@ impl RankShard {
             if batch.shutdown {
                 break 'outer;
             }
-            batch.flush(&mut st, clock.now(), &mut stats);
+            batch.flush(&mut st, clock.now(), &mut stats, &hints, shard);
 
             let now = clock.now();
 
@@ -466,7 +486,11 @@ impl RankShard {
             //    starved shards steering concurrently cannot both aim
             //    a candidate at the same free GPU — the reservation
             //    satellite that cuts the mis-steer rate the fig13
-            //    table measures.
+            //    table measures. The target's own republish *merges*
+            //    with outstanding reservations (and the migrant's
+            //    arrival redeems them in `InboxBatch::flush`), so a
+            //    publish interval can no longer resurrect a slot whose
+            //    candidate is still in flight.
             if st.free.is_empty() && !st.ready.is_empty() && num_shards > 1 {
                 let mut steer: Vec<(ModelId, usize, u64)> = Vec::new();
                 for &(_, m) in st.ready.iter() {

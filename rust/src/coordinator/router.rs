@@ -158,18 +158,31 @@ impl ShardTopology {
     }
 }
 
-/// Free-GPU hints: one counter per shard, written only by the owning
-/// shard, read racily by siblings to pick overflow targets. Staleness is
-/// benign — a mis-steered candidate is re-steered or revalidated.
+/// One shard's advertisement: the free count the owner last published,
+/// and the reservations steering shards have taken against it since.
+#[derive(Default)]
+struct ShardHint {
+    free: AtomicUsize,
+    reserved: AtomicUsize,
+}
+
+/// Free-GPU hints: one `{free, reserved}` pair per shard. `free` is
+/// written by the owning shard and decremented by racing steerers
+/// (reservations); `reserved` remembers those claims so the owner's
+/// next `publish` *merges* with them instead of overwriting them.
+/// Staleness is benign — a mis-steered candidate is re-steered or
+/// revalidated — but a republish must not resurrect slots that were
+/// just claimed, or every starved sibling re-steers at the same GPU
+/// each publish interval.
 #[derive(Clone)]
 pub struct FreeHints {
-    counts: Arc<Vec<AtomicUsize>>,
+    counts: Arc<Vec<ShardHint>>,
 }
 
 impl FreeHints {
     pub fn new(shards: usize) -> Self {
         FreeHints {
-            counts: Arc::new((0..shards).map(|_| AtomicUsize::new(0)).collect()),
+            counts: Arc::new((0..shards).map(|_| ShardHint::default()).collect()),
         }
     }
 
@@ -177,12 +190,23 @@ impl FreeHints {
         self.counts.len()
     }
 
+    /// The owning shard republishes its current free count. Outstanding
+    /// reservations discount the advertisement exactly once: a steered
+    /// candidate is still in flight when its target republishes (the
+    /// owner cannot see it yet), so the claimed slot must stay claimed
+    /// for one more publish interval. A reservation whose candidate
+    /// arrives is consumed by [`FreeHints::redeem`] before that; one
+    /// whose candidate never arrives (steering shard died mid-send) is
+    /// dropped here after discounting once — a leaked claim self-heals
+    /// instead of permanently shrinking the advertisement.
     pub fn publish(&self, shard: usize, free: usize) {
-        self.counts[shard].store(free, Ordering::Relaxed);
+        let h = &self.counts[shard];
+        let carried = h.reserved.swap(0, Ordering::Relaxed);
+        h.free.store(free.saturating_sub(carried), Ordering::Relaxed);
     }
 
     pub fn free_of(&self, shard: usize) -> usize {
-        self.counts[shard].load(Ordering::Relaxed)
+        self.counts[shard].free.load(Ordering::Relaxed)
     }
 
     /// Atomically claim one advertised free slot on `shard`: decrement
@@ -190,14 +214,34 @@ impl FreeHints {
     /// was claimed. Steering shards reserve instead of merely reading,
     /// so two GPU-starved shards racing on the same advertisement
     /// cannot both steer a candidate at one free GPU (the ROADMAP's
-    /// "per-shard reserved count"). The owning shard's next `publish`
-    /// overwrites outstanding reservations — the hint stays a hint, not
-    /// a ledger; the reservation narrows the mis-steer window rather
-    /// than closing it.
+    /// "per-shard reserved count"). The claim also registers in
+    /// `reserved` so the owner's next `publish` merges with it — the
+    /// hint stays a hint, not a ledger, but a republish no longer hands
+    /// the same GPU out again while the steered candidate is in flight.
     pub fn reserve(&self, shard: usize) -> bool {
-        self.counts[shard]
+        let h = &self.counts[shard];
+        if h.free
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| c.checked_sub(1))
             .is_ok()
+        {
+            h.reserved.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A steered candidate reached `shard`: the reservation its steerer
+    /// took is now visible to the owner as a registered candidate, so it
+    /// stops discounting future publishes. Called by the owning shard on
+    /// arrival; redeeming with no outstanding reservation is a no-op
+    /// (the reservation may already have been dropped by a publish).
+    pub fn redeem(&self, shard: usize) {
+        let _ = self.counts[shard].reserved.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |c| c.checked_sub(1),
+        );
     }
 }
 
@@ -459,9 +503,88 @@ mod tests {
         assert_eq!(wins.load(Ordering::Relaxed), 3, "3 slots, 3 winners");
         assert_eq!(h.free_of(1), 0);
         assert!(!h.reserve(1), "an empty hint is never claimable");
-        // The owning shard republishing resets the claimable budget.
+        // A republish while the 3 steered candidates are still in
+        // flight must not resurrect their slots (merge-publish).
+        h.publish(1, 3);
+        assert_eq!(h.free_of(1), 0, "outstanding reservations discount the republish");
+        assert!(!h.reserve(1));
+        // The un-redeemed reservations are dropped after discounting
+        // once, so the publish after that advertises freely again.
         h.publish(1, 1);
         assert!(h.reserve(1));
+    }
+
+    /// The merge-publish regression (this PR's motivating bug): the old
+    /// `publish` stored the owner's free count over the counter,
+    /// erasing reservations and letting every publish interval hand the
+    /// same free GPU to another steerer.
+    #[test]
+    fn republish_does_not_resurrect_reserved_slots() {
+        let h = FreeHints::new(2);
+        h.publish(1, 2);
+        assert!(h.reserve(1) && h.reserve(1), "both advertised slots claimable");
+        // Owner still sees 2 free GPUs (the steered candidates are in
+        // flight) and republishes: the claims must survive.
+        h.publish(1, 2);
+        assert_eq!(h.free_of(1), 0);
+        assert!(!h.reserve(1));
+    }
+
+    /// `redeem` consumes a reservation when its steered candidate
+    /// arrives: the owner now *sees* the candidate, so the next publish
+    /// (whose free count already reflects any grant to it) is no longer
+    /// discounted.
+    #[test]
+    fn redeemed_reservations_stop_discounting() {
+        let h = FreeHints::new(2);
+        h.publish(1, 2);
+        assert!(h.reserve(1) && h.reserve(1));
+        h.redeem(1);
+        h.redeem(1);
+        // Redeeming more than was reserved stays a no-op.
+        h.redeem(1);
+        h.publish(1, 2);
+        assert_eq!(h.free_of(1), 2, "arrived candidates no longer discount");
+    }
+
+    /// Concurrent merge-publish regression: with ONE free GPU and an
+    /// owner republishing `1` over and over (never seeing an arrival),
+    /// a racing steerer must win at most ~half the publish intervals —
+    /// each win's reservation blanks at least the following publish.
+    /// The pre-merge counter handed the slot out on almost every
+    /// publish (wins ≈ publishes).
+    #[test]
+    fn concurrent_republish_caps_claim_rate() {
+        use std::sync::atomic::AtomicBool;
+        const PUBLISHES: usize = 200;
+        let h = FreeHints::new(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let wins = {
+            let h = h.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut wins = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if h.reserve(1) {
+                        wins += 1;
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                wins
+            })
+        };
+        for _ in 0..PUBLISHES {
+            h.publish(1, 1);
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let wins = wins.join().unwrap();
+        assert!(
+            wins <= PUBLISHES / 2 + 2,
+            "a reservation must discount the next republish: {wins} wins \
+             over {PUBLISHES} publishes"
+        );
     }
 
     /// Unchanged-window re-registrations coalesce to a single send; an

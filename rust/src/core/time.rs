@@ -61,16 +61,25 @@ impl Micros {
 
 impl Add for Micros {
     type Output = Micros;
+    /// Panics on overflow in **all** build profiles, mirroring `Sub`'s
+    /// contract: a plain `u64` add wraps silently in release, and a
+    /// wire peer can supply times near `u64::MAX` (e.g. `free_at`), so
+    /// a wrapping deadline is a scheduling corruption, not a rounding
+    /// error. Paths where saturation is the intended edge-case behavior
+    /// must say so with [`Micros::saturating_add`].
     #[inline]
     fn add(self, rhs: Micros) -> Micros {
-        Micros(self.0 + rhs.0)
+        match self.0.checked_add(rhs.0) {
+            Some(v) => Micros(v),
+            None => panic!("time overflow {} + {}", self.0, rhs.0),
+        }
     }
 }
 
 impl AddAssign for Micros {
     #[inline]
     fn add_assign(&mut self, rhs: Micros) {
-        self.0 += rhs.0;
+        *self = *self + rhs;
     }
 }
 
@@ -132,6 +141,21 @@ mod tests {
     #[should_panic(expected = "time underflow")]
     fn sub_underflow_panics_in_all_profiles() {
         let _ = Micros(1) - Micros(2);
+    }
+
+    /// Regression: `Add` must panic (not wrap) in release builds too —
+    /// the other half of the PR 1 wrap class.
+    #[test]
+    #[should_panic(expected = "time overflow")]
+    fn add_overflow_panics_in_all_profiles() {
+        let _ = Micros(u64::MAX) + Micros(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "time overflow")]
+    fn add_assign_overflow_panics_in_all_profiles() {
+        let mut t = Micros(u64::MAX);
+        t += Micros(1);
     }
 
     #[test]

@@ -318,7 +318,9 @@ impl<'a> IntoIterator for &'a ReqBurst {
 
 impl Request {
     pub fn slo(&self) -> Micros {
-        self.deadline - self.arrival
+        // A wire peer may hand us deadline < arrival; a zero SLO sheds
+        // the request instead of panicking the worker.
+        self.deadline.saturating_sub(self.arrival)
     }
 }
 

@@ -28,6 +28,7 @@ pub mod autoscale;
 pub mod coordinator;
 pub mod core;
 pub mod harness;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod partition;

@@ -1,0 +1,581 @@
+//! A lightweight Rust tokenizer for the lint pass.
+//!
+//! This is deliberately *not* a full lexer: it only needs to be precise
+//! about the things the rules care about — where comments and string
+//! literals begin and end (so nothing inside them is mistaken for code),
+//! whether a numeric literal is a float, brace nesting depth, and line
+//! numbers. It is std-only; no `syn`, no `regex`.
+//!
+//! Known simplifications (all safe for linting this repo):
+//! - Keywords are emitted as `Ident` tokens; rules match on the text.
+//! - Token text is stored as a byte range into the original source.
+//! - Shebang lines and `b'..'` byte literals are handled; frontmatter,
+//!   macros 2.0 and exotic literal suffixes are not special-cased.
+
+/// Token kinds the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `Micros`, `unwrap`, ...).
+    Ident,
+    /// Integer literal (`42`, `0xFF`, `1_000u64`).
+    Int,
+    /// Float literal (`1.0`, `2.`, `1e9`, `3f64`).
+    Float,
+    /// String / raw-string / byte-string literal (content opaque).
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`) or loop label.
+    Lifetime,
+    /// Line comment, text includes the leading `//`.
+    LineComment,
+    /// Block comment (possibly nested), text includes delimiters.
+    BlockComment,
+    /// Operator / punctuation, longest-match (`->`, `::`, `+=`, `+`, ...).
+    Punct,
+    /// `(` `[` `{`
+    Open,
+    /// `)` `]` `}`
+    Close,
+}
+
+/// One token: kind, byte span into the source, 1-based line, and the
+/// brace-nesting depth (`{}` only) *at the position of this token*.
+#[derive(Debug, Clone, Copy)]
+pub struct Token {
+    pub kind: TokKind,
+    pub start: usize,
+    pub end: usize,
+    pub line: usize,
+    pub brace_depth: usize,
+}
+
+impl Token {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        src.get(self.start..self.end).unwrap_or("")
+    }
+}
+
+/// Tokenize `src`. Never panics on malformed input: unterminated
+/// literals/comments simply extend to end-of-file.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let mut toks = Vec::with_capacity(src.len() / 6 + 16);
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut depth = 0usize;
+
+    // Count newlines in b[from..to) into `line`.
+    fn advance_lines(b: &[u8], from: usize, to: usize, line: &mut usize) {
+        let mut k = from;
+        while k < to {
+            if b[k] == b'\n' {
+                *line += 1;
+            }
+            k += 1;
+        }
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        // Whitespace.
+        if c.is_ascii_whitespace() {
+            if c == b'\n' {
+                line += 1;
+            }
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let tok_line = line;
+
+        // Comments.
+        if c == b'/' && i + 1 < b.len() {
+            if b[i + 1] == b'/' {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::LineComment,
+                    start,
+                    end: i,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                continue;
+            }
+            if b[i + 1] == b'*' {
+                let mut nest = 1usize;
+                i += 2;
+                while i < b.len() && nest > 0 {
+                    if i + 1 < b.len() && b[i] == b'/' && b[i + 1] == b'*' {
+                        nest += 1;
+                        i += 2;
+                    } else if i + 1 < b.len() && b[i] == b'*' && b[i + 1] == b'/' {
+                        nest -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                toks.push(Token {
+                    kind: TokKind::BlockComment,
+                    start,
+                    end: i,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                continue;
+            }
+        }
+
+        // Raw strings and byte strings: r"..", r#".."#, br".."; b"..".
+        if c == b'r' || c == b'b' {
+            if let Some(end) = scan_raw_or_byte_string(b, i) {
+                advance_lines(b, i, end, &mut line);
+                toks.push(Token {
+                    kind: TokKind::Str,
+                    start,
+                    end,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i = end;
+                continue;
+            }
+            // b'x' byte char.
+            if c == b'b' && i + 1 < b.len() && b[i + 1] == b'\'' {
+                let end = scan_char_literal(b, i + 1);
+                toks.push(Token {
+                    kind: TokKind::Char,
+                    start,
+                    end,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i = end;
+                continue;
+            }
+        }
+
+        // Plain string.
+        if c == b'"' {
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' {
+                    i = (i + 2).min(b.len());
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Str,
+                start,
+                end: i,
+                line: tok_line,
+                brace_depth: depth,
+            });
+            continue;
+        }
+
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if is_char_literal(b, i) {
+                let end = scan_char_literal(b, i);
+                toks.push(Token {
+                    kind: TokKind::Char,
+                    start,
+                    end,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i = end;
+            } else {
+                i += 1;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Lifetime,
+                    start,
+                    end: i,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+            }
+            continue;
+        }
+
+        // Identifier / keyword.
+        if c == b'_' || c.is_ascii_alphabetic() {
+            i += 1;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                start,
+                end: i,
+                line: tok_line,
+                brace_depth: depth,
+            });
+            continue;
+        }
+
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let (end, is_float) = scan_number(b, i);
+            toks.push(Token {
+                kind: if is_float { TokKind::Float } else { TokKind::Int },
+                start,
+                end,
+                line: tok_line,
+                brace_depth: depth,
+            });
+            i = end;
+            continue;
+        }
+
+        // Brackets.
+        match c {
+            b'{' => {
+                toks.push(Token {
+                    kind: TokKind::Open,
+                    start,
+                    end: i + 1,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                depth += 1;
+                i += 1;
+                continue;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                toks.push(Token {
+                    kind: TokKind::Close,
+                    start,
+                    end: i + 1,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i += 1;
+                continue;
+            }
+            b'(' | b'[' => {
+                toks.push(Token {
+                    kind: TokKind::Open,
+                    start,
+                    end: i + 1,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i += 1;
+                continue;
+            }
+            b')' | b']' => {
+                toks.push(Token {
+                    kind: TokKind::Close,
+                    start,
+                    end: i + 1,
+                    line: tok_line,
+                    brace_depth: depth,
+                });
+                i += 1;
+                continue;
+            }
+            _ => {}
+        }
+
+        // Punctuation, longest match first.
+        let rest = &src[i..];
+        const PUNCTS: &[&str] = &[
+            "<<=", ">>=", "..=", "...", "->", "=>", "::", "..", "<<", ">>", "<=", ">=", "==",
+            "!=", "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+        ];
+        let mut matched = 1usize;
+        for p in PUNCTS {
+            if rest.starts_with(p) {
+                matched = p.len();
+                break;
+            }
+        }
+        toks.push(Token {
+            kind: TokKind::Punct,
+            start,
+            end: i + matched,
+            line: tok_line,
+            brace_depth: depth,
+        });
+        i += matched;
+    }
+    toks
+}
+
+/// Does the `'` at `b[i]` open a char literal (vs a lifetime)?
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    // 'x' / '\n' / '\'' — a closing quote within a few bytes, or an
+    // escape right after the opening quote.
+    if i + 1 >= b.len() {
+        return false;
+    }
+    if b[i + 1] == b'\\' {
+        return true;
+    }
+    // 'a' -> char only if followed by closing quote; 'a  -> lifetime.
+    i + 2 < b.len() && b[i + 1] != b'\'' && b[i + 2] == b'\''
+}
+
+/// Scan a char literal starting at the `'` in `b[i]`; returns end index.
+fn scan_char_literal(b: &[u8], i: usize) -> usize {
+    let mut k = i + 1;
+    if k < b.len() && b[k] == b'\\' {
+        k += 2;
+        // \u{...}
+        while k < b.len() && b[k] != b'\'' {
+            k += 1;
+        }
+    } else if k < b.len() {
+        k += 1;
+    }
+    if k < b.len() && b[k] == b'\'' {
+        k += 1;
+    }
+    k
+}
+
+/// Scan r"..", r#"..."#, br#"..."#, b".." starting at `b[i]` (which is
+/// `r` or `b`). Returns `Some(end)` if this really is such a literal.
+fn scan_raw_or_byte_string(b: &[u8], i: usize) -> Option<usize> {
+    let mut k = i;
+    if b[k] == b'b' {
+        k += 1;
+        if k >= b.len() {
+            return None;
+        }
+        if b[k] == b'"' {
+            // b"..": plain byte string with escapes.
+            k += 1;
+            while k < b.len() {
+                if b[k] == b'\\' {
+                    k = (k + 2).min(b.len());
+                } else if b[k] == b'"' {
+                    return Some(k + 1);
+                } else {
+                    k += 1;
+                }
+            }
+            return Some(k);
+        }
+        if b[k] != b'r' {
+            return None;
+        }
+    }
+    // Now at `r`.
+    if b[k] != b'r' {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0usize;
+    while k < b.len() && b[k] == b'#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'"' {
+        return None;
+    }
+    k += 1;
+    // Scan for `"` followed by `hashes` hash marks.
+    while k < b.len() {
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && k + 1 + h < b.len() && b[k + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(k + 1 + hashes);
+            }
+        }
+        k += 1;
+    }
+    Some(k)
+}
+
+/// Scan a numeric literal starting at digit `b[i]`.
+/// Returns (end, is_float). Careful cases:
+/// - `0..2` is two ints and a range, not a float
+/// - `slo.0` / `x.1` tuple access never reaches here (starts at ident)
+/// - `1.max(2)` is an int then a method call
+/// - `1.0`, `2.`, `1e9`, `1_000.5e-3`, `3f64` are floats
+fn scan_number(b: &[u8], i: usize) -> (usize, bool) {
+    let mut k = i;
+    let hex = k + 1 < b.len() && b[k] == b'0' && (b[k + 1] == b'x' || b[k + 1] == b'X');
+    let bin_oct =
+        k + 1 < b.len() && b[k] == b'0' && matches!(b[k + 1], b'b' | b'B' | b'o' | b'O');
+    // Integer part (also consumes type suffixes and hex digits).
+    let mut saw_exp = false;
+    let mut float_suffix = false;
+    while k < b.len() && (b[k] == b'_' || b[k].is_ascii_alphanumeric()) {
+        if !hex && !bin_oct && (b[k] == b'e' || b[k] == b'E') {
+            // Exponent only if followed by digit or sign+digit.
+            let n1 = k + 1;
+            if n1 < b.len()
+                && (b[n1].is_ascii_digit()
+                    || ((b[n1] == b'+' || b[n1] == b'-')
+                        && n1 + 1 < b.len()
+                        && b[n1 + 1].is_ascii_digit()))
+            {
+                saw_exp = true;
+                k = if b[n1].is_ascii_digit() { n1 } else { n1 + 1 };
+                continue;
+            }
+        }
+        k += 1;
+    }
+    // f32/f64 suffix on the integer run (`3f64`).
+    if !hex {
+        let run = &b[i..k];
+        if run.ends_with(b"f32") || run.ends_with(b"f64") {
+            float_suffix = true;
+        }
+    }
+    // Fractional part.
+    let mut is_float = (saw_exp && !hex) || float_suffix;
+    if k < b.len() && b[k] == b'.' && !hex && !bin_oct {
+        let n1 = k + 1;
+        let next_is_digit = n1 < b.len() && b[n1].is_ascii_digit();
+        let next_is_range_or_field = n1 < b.len()
+            && (b[n1] == b'.' || b[n1] == b'_' || b[n1].is_ascii_alphabetic());
+        if next_is_digit {
+            is_float = true;
+            k = n1;
+            while k < b.len() && (b[k] == b'_' || b[k].is_ascii_alphanumeric()) {
+                if b[k] == b'e' || b[k] == b'E' {
+                    let m = k + 1;
+                    if m < b.len()
+                        && ((b[m] == b'+' || b[m] == b'-') && m + 1 < b.len()
+                            && b[m + 1].is_ascii_digit())
+                    {
+                        k = m + 1;
+                        continue;
+                    }
+                }
+                k += 1;
+            }
+        } else if !next_is_range_or_field {
+            // `2.` trailing-dot float (followed by `)` `,` `;` etc).
+            is_float = true;
+            k = n1;
+        }
+    }
+    (k, is_float)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src)
+            .iter()
+            .map(|t| (t.kind, t.text(src).to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn floats_vs_ints_vs_ranges() {
+        let ks = kinds("let a = 1.0; let b = 0..2; let c = slo.0; let d = 1e9; let e = 3f64;");
+        let floats: Vec<&str> = ks
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Float)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(floats, vec!["1.0", "1e9", "3f64"]);
+        // `0..2` produced two Ints and a `..` punct.
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Punct && s == ".."));
+        // `slo.0` tuple access: ident, dot, int.
+        assert!(ks.iter().any(|(k, s)| *k == TokKind::Int && s == "0"));
+    }
+
+    #[test]
+    fn int_method_call_is_not_float() {
+        let ks = kinds("let x = 1.max(2);");
+        assert!(!ks.iter().any(|(k, _)| *k == TokKind::Float));
+    }
+
+    #[test]
+    fn comments_and_strings_are_opaque() {
+        let src = r##"
+            // a float 1.0 in a comment
+            /* nested /* 2.0 */ still comment */
+            let s = "3.0 + unwrap()";
+            let r = r#"4.0 "quoted" .unwrap()"#;
+        "##;
+        let ks = kinds(src);
+        assert!(!ks.iter().any(|(k, _)| *k == TokKind::Float));
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::Str).count(),
+            2
+        );
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::LineComment).count(),
+            1
+        );
+        assert_eq!(
+            ks.iter()
+                .filter(|(k, _)| *k == TokKind::BlockComment)
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::Char).count(),
+            2
+        );
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn brace_depth_tracks() {
+        let src = "fn f() { if x { y(); } }";
+        let toks = tokenize(src);
+        let y = toks
+            .iter()
+            .find(|t| t.text(src) == "y")
+            .expect("y token");
+        assert_eq!(y.brace_depth, 2);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let src = "a\nb\n  c";
+        let toks = tokenize(src);
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let src = "let s = \"one\ntwo\";\nnext";
+        let toks = tokenize(src);
+        let next = toks.iter().find(|t| t.text(src) == "next").unwrap();
+        assert_eq!(next.line, 3);
+    }
+}

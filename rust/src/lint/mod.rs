@@ -1,0 +1,148 @@
+//! `symphony lint` — a std-only invariant checker for this repo.
+//!
+//! Five PRs of desk-checked review discipline, turned into machine
+//! rules (see `LINTS.md` at the repo root for the full catalogue and
+//! the past bug motivating each rule):
+//!
+//! - `wire-schema-drift` — `coordinator/messages.rs` ⇄ `net/codec.rs`
+//!   must stay a bijection modulo the documented exceptions.
+//! - `float-free-hot-path` — integer-signature functions in the
+//!   scheduling hot path must not grow float arithmetic.
+//! - `unchecked-micros-arith` — no bare `+`/`-` on [`crate::core::time::Micros`]
+//!   in wall-clock/wire-facing modules.
+//! - `panic-free-wire-surface` — hostile input may kill a session,
+//!   never the process.
+//! - `lock-across-send` — no `Mutex`/`RwLock` guard live across a
+//!   blocking channel/thread operation.
+//!
+//! Findings can be silenced inline with
+//! `// lint:allow(rule-name): reason` — on the offending line, or on a
+//! line of its own directly above it. A suppression without a reason
+//! does not suppress and is itself reported (rule `suppression`).
+//!
+//! Constraint inherited from the build environment: the registry is
+//! offline, so there is no `syn`, no `regex`, no `clippy` — the lexer
+//! and the structural scans are hand-rolled on `std` alone.
+
+pub mod lexer;
+pub mod rules;
+pub mod source;
+
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+use source::SourceTree;
+
+/// One diagnostic: `file:line rule-name: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{} {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// The meta-rule name under which bad suppressions are reported.
+pub const SUPPRESSION_RULE: &str = "suppression";
+
+/// Every rule name the checker knows, including the suppression
+/// meta-rule (valid as a `--rule` filter and in `lint:allow(..)`).
+pub fn rule_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = rules::all().iter().map(|r| r.name()).collect();
+    names.push(SUPPRESSION_RULE);
+    names
+}
+
+/// Lint an already-loaded tree. `only` restricts to a single rule name.
+pub fn lint_tree(tree: &SourceTree, only: Option<&str>) -> Vec<Finding> {
+    let mut raw = Vec::new();
+    for rule in rules::all() {
+        if let Some(o) = only {
+            if o != rule.name() {
+                continue;
+            }
+        }
+        rule.check(tree, &mut raw);
+    }
+
+    // Suppression hygiene: a `lint:allow` with no reason or an unknown
+    // rule name is itself a finding — and never suppresses anything.
+    let known = rule_names();
+    let mut out = Vec::new();
+    if only.is_none() || only == Some(SUPPRESSION_RULE) {
+        for f in &tree.files {
+            for a in &f.allows {
+                if a.rule.is_empty() {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: a.line,
+                        rule: SUPPRESSION_RULE,
+                        message: "malformed lint:allow — expected lint:allow(rule-name): reason"
+                            .to_string(),
+                    });
+                } else if !known.contains(&a.rule.as_str()) {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: a.line,
+                        rule: SUPPRESSION_RULE,
+                        message: format!(
+                            "lint:allow names unknown rule `{}` (known: {})",
+                            a.rule,
+                            known.join(", ")
+                        ),
+                    });
+                } else if !a.has_reason {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: a.line,
+                        rule: SUPPRESSION_RULE,
+                        message: format!(
+                            "lint:allow({}) has no reason — write lint:allow({}): why it is safe",
+                            a.rule, a.rule
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Apply (reasoned) suppressions to the rule findings.
+    raw.retain(|fd| {
+        let Some(file) = tree.file(&fd.file) else {
+            return true;
+        };
+        !file.allows.iter().any(|a| {
+            a.has_reason
+                && a.rule == fd.rule
+                && fd.line >= a.covers.0
+                && fd.line <= a.covers.1
+        })
+    });
+    out.extend(raw);
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}
+
+/// Load `.rs` files under `root` and lint them.
+pub fn run(root: &Path, only: Option<&str>) -> io::Result<Vec<Finding>> {
+    let tree = SourceTree::load(root)?;
+    Ok(lint_tree(&tree, only))
+}
+
+/// Lint in-memory `(path, source)` pairs — the fixture-test entry point.
+pub fn lint_sources(sources: &[(&str, &str)], only: Option<&str>) -> Vec<Finding> {
+    lint_tree(&SourceTree::from_memory(sources), only)
+}

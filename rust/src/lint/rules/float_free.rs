@@ -1,0 +1,91 @@
+//! `float-free-hot-path` — integer-signature functions in the
+//! scheduling hot path must not grow float arithmetic.
+//!
+//! PR 2 rebuilt the deferred scheduler's per-event path on integer
+//! `Micros` math (floats live only in `core::profile::reference`, the
+//! readable float mirror that property tests pin the integer path
+//! against). The bug class this guards: a future change "fixes" an
+//! integer rounding discrepancy by sneaking an `as f64` round-trip into
+//! `latency()` or a matchmaking loop, silently reintroducing
+//! per-event float cost and cross-platform rounding drift.
+//!
+//! Mechanics: inside the target files, any float literal or `f32`/`f64`
+//! token is a finding when it appears in the body of a function whose
+//! signature is float-free. Functions that declare floats in their
+//! signature (`throughput(..) -> f64`) are visibly float and exempt, as
+//! are item-level declarations (struct fields), `#[cfg(test)]` modules,
+//! and the `reference` submodule.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::{path_matches, Rule};
+
+pub struct FloatFreeHotPath;
+
+const RULE: &str = "float-free-hot-path";
+
+/// The hot-path files PR 2's invariant covers.
+const TARGETS: &[&str] = &[
+    "scheduler/deferred.rs",
+    "scheduler/batch_policy.rs",
+    "coordinator/rank_shard.rs",
+    "core/profile.rs",
+];
+
+impl Rule for FloatFreeHotPath {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            if !TARGETS.iter().any(|t| path_matches(&f.path, t)) {
+                continue;
+            }
+            check_file(f, out);
+        }
+    }
+}
+
+fn is_float_tok(f: &SourceFile, ci: usize) -> bool {
+    match f.ckind(ci) {
+        Some(TokKind::Float) => true,
+        Some(TokKind::Ident) => {
+            let t = f.ctext(ci);
+            t == "f32" || t == "f64"
+        }
+        _ => false,
+    }
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        if !is_float_tok(f, ci) || f.in_test(ci) || f.in_mod("reference", ci) {
+            continue;
+        }
+        let Some(func) = f.enclosing_fn(ci) else {
+            // Item-level float declarations (struct fields, consts) are
+            // visible API, not hot-path creep.
+            continue;
+        };
+        // A function that declares floats in its signature is visibly
+        // float — the rule only guards integer-by-signature functions.
+        let sig_has_float = (func.sig_start..func.body_open).any(|si| is_float_tok(f, si));
+        if sig_has_float {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: f.cline(ci),
+            rule: RULE,
+            message: format!(
+                "float `{}` in integer-signature hot-path fn `{}` — keep the per-event path \
+                 integer-only (PR 2); float math belongs in core::profile::reference or a \
+                 float-signature helper",
+                f.ctext(ci),
+                func.name
+            ),
+        });
+    }
+}

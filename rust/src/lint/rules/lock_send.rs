@@ -1,0 +1,325 @@
+//! `lock-across-send` — no `Mutex`/`RwLock` guard live across a
+//! blocking channel/thread operation.
+//!
+//! PR 3's `SleepWorkers` deadlock: shutdown took the worker-handle
+//! mutex and called `.join()` while still holding it; a worker draining
+//! its queue hit the same mutex and neither side could make progress.
+//! The subtle variant this rule exists for is edition-2021 temporary
+//! lifetime extension: in
+//!
+//! ```text
+//! if let Some(h) = self.h.lock().unwrap().take() { h.join(); }
+//! ```
+//!
+//! the guard temporary lives through the *whole* `if let` body, so the
+//! join happens with the mutex held even though no guard is named.
+//! (`let .. else` does NOT extend — scrutinee temporaries drop at the
+//! end of the statement — so the rule leaves it alone.)
+//!
+//! What counts as acquiring a guard: `.lock()`, zero-argument
+//! `.read()`/`.write()` (RwLock — io `read`/`write` always take a
+//! buffer), and the poison-recovering [`crate::util::sync::relock`]
+//! helper. What counts as blocking: `.send(`/`.recv(`/`.join(` (plus
+//! the `_timeout` forms) while a guard binding is in scope or inside an
+//! `if let`/`while let`/`match`/`for` whose scrutinee acquired the
+//! guard. `Condvar::wait` is exempt — it releases the mutex it is
+//! handed. A `drop(guard)` ends the guarded region.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::Rule;
+
+pub struct LockAcrossSend;
+
+const RULE: &str = "lock-across-send";
+
+/// Blocking while holding a guard *binding* (scoped to end of block).
+const BLOCKING: &[&str] = &["send", "recv", "join", "send_timeout", "recv_timeout"];
+/// Blocking long enough to matter within a single statement's
+/// temporary (`m.lock().unwrap().recv()`): `send` on std mpsc never
+/// blocks, so only these are statement-local findings.
+const BLOCKING_STMT: &[&str] = &["recv", "join", "recv_timeout"];
+
+impl Rule for LockAcrossSend {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            check_file(f, out);
+        }
+    }
+}
+
+/// Brace depth of code token `ci`.
+fn cdepth(f: &SourceFile, ci: usize) -> usize {
+    match f.code.get(ci) {
+        Some(&ti) => f.toks[ti].brace_depth,
+        None => 0,
+    }
+}
+
+/// If code token `ci` begins a guard-acquiring call, return the code
+/// index of its closing `)`.
+fn guard_call_end(f: &SourceFile, ci: usize) -> Option<usize> {
+    if f.ckind(ci) != Some(TokKind::Ident) {
+        return None;
+    }
+    let t = f.ctext(ci);
+    let method = ci > 0 && f.ctext(ci - 1) == ".";
+    if (t == "lock" || t == "read" || t == "write")
+        && method
+        && f.ctext(ci + 1) == "("
+        && f.ctext(ci + 2) == ")"
+    {
+        return Some(ci + 2);
+    }
+    if t == "relock" && !method && f.ctext(ci + 1) == "(" {
+        return Some(f.matching_close(ci + 1));
+    }
+    None
+}
+
+/// Scan backwards from `ci` to the start of the enclosing statement.
+fn stmt_start(f: &SourceFile, ci: usize) -> usize {
+    let mut depth = 0usize;
+    let mut k = ci;
+    while k > 0 {
+        let prev = k - 1;
+        match f.ckind(prev) {
+            Some(TokKind::Close) if f.ctext(prev) != "}" => depth += 1,
+            Some(TokKind::Open) if f.ctext(prev) != "{" => {
+                if depth == 0 {
+                    return k;
+                }
+                depth -= 1;
+            }
+            _ => {
+                if depth == 0 {
+                    let t = f.ctext(prev);
+                    if t == ";" || t == "{" || t == "}" || t == "=>" || t == "," {
+                        return k;
+                    }
+                }
+            }
+        }
+        k = prev;
+    }
+    0
+}
+
+/// Scan forward from `from` for the end of the statement (`;`/`,` at
+/// relative depth 0, or the token that closes the enclosing group).
+fn stmt_end(f: &SourceFile, from: usize) -> usize {
+    let mut depth = 0isize;
+    let mut k = from;
+    while k < f.clen() {
+        match f.ckind(k) {
+            Some(TokKind::Open) => depth += 1,
+            Some(TokKind::Close) => {
+                depth -= 1;
+                if depth < 0 {
+                    return k;
+                }
+            }
+            _ => {
+                if depth == 0 {
+                    let t = f.ctext(k);
+                    if t == ";" || t == "," {
+                        return k;
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    f.clen().saturating_sub(1)
+}
+
+/// First blocking call in `[a, b]` drawn from `ops`.
+fn blocking_in(f: &SourceFile, a: usize, b: usize, ops: &[&str]) -> Option<usize> {
+    for ci in a..=b.min(f.clen().saturating_sub(1)) {
+        if f.ckind(ci) == Some(TokKind::Ident)
+            && ops.contains(&f.ctext(ci))
+            && ci > 0
+            && f.ctext(ci - 1) == "."
+            && f.ctext(ci + 1) == "("
+        {
+            return Some(ci);
+        }
+    }
+    None
+}
+
+fn finding(f: &SourceFile, guard_ci: usize, op_ci: usize, ctx: &str) -> Finding {
+    Finding {
+        file: f.path.clone(),
+        line: f.cline(guard_ci),
+        rule: RULE,
+        message: format!(
+            "guard acquired here is live across `.{}(` on line {} ({ctx}) — hoist the \
+             locked access into its own statement so the guard drops first (PR 3 \
+             SleepWorkers deadlock class)",
+            f.ctext(op_ci),
+            f.cline(op_ci),
+        ),
+    }
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        let Some(call_end) = guard_call_end(f, ci) else {
+            continue;
+        };
+        if f.in_test(ci) {
+            continue;
+        }
+        let start = stmt_start(f, ci);
+        let t0 = f.ctext(start);
+        let t1 = f.ctext(start + 1);
+        let is_scrutinee = matches!(t0, "match" | "for")
+            || ((t0 == "if" || t0 == "while") && t1 == "let");
+
+        if is_scrutinee {
+            // Edition-2021: the scrutinee's guard temporary lives
+            // through the whole body (and any else-chain).
+            let Some(open) = body_open_after(f, call_end) else {
+                continue;
+            };
+            let mut close = f.matching_close(open);
+            if let Some(op) = blocking_in(f, open, close, BLOCKING) {
+                out.push(finding(f, ci, op, "scrutinee temporary lives through the body"));
+                continue;
+            }
+            // else-chain extension.
+            while f.ctext(close + 1) == "else" {
+                let Some(next_open) = body_open_after(f, close + 1) else {
+                    break;
+                };
+                close = f.matching_close(next_open);
+                if let Some(op) = blocking_in(f, next_open, close, BLOCKING) {
+                    out.push(finding(
+                        f,
+                        ci,
+                        op,
+                        "scrutinee temporary lives through the else branch",
+                    ));
+                    break;
+                }
+            }
+            continue;
+        }
+
+        if t0 == "let" {
+            // `let .. else` drops scrutinee temporaries at statement
+            // end — never an extended guard.
+            let end = stmt_end(f, start);
+            let mut has_else = false;
+            let mut d = 0isize;
+            for k in start..end {
+                match f.ckind(k) {
+                    Some(TokKind::Open) => d += 1,
+                    Some(TokKind::Close) => d -= 1,
+                    _ => {
+                        if d == 0 && f.ctext(k) == "else" {
+                            has_else = true;
+                        }
+                    }
+                }
+            }
+            if has_else {
+                continue;
+            }
+            if let Some(bind_end) = guard_tail_end(f, call_end) {
+                // The binding IS a guard: live until end of block,
+                // `drop(name)`, or end of file.
+                let name = if f.ctext(start + 1) == "mut" {
+                    f.ctext(start + 2).to_string()
+                } else {
+                    f.ctext(start + 1).to_string()
+                };
+                let depth = cdepth(f, start);
+                let mut scope_end = f.clen().saturating_sub(1);
+                for k in bind_end..f.clen() {
+                    if f.ckind(k) == Some(TokKind::Close)
+                        && f.ctext(k) == "}"
+                        && cdepth(f, k) + 1 == depth
+                    {
+                        scope_end = k;
+                        break;
+                    }
+                    if f.ctext(k) == "drop"
+                        && f.ctext(k + 1) == "("
+                        && f.ctext(k + 2) == name
+                        && f.ctext(k + 3) == ")"
+                    {
+                        scope_end = k;
+                        break;
+                    }
+                }
+                if let Some(op) = blocking_in(f, bind_end, scope_end, BLOCKING) {
+                    out.push(finding(f, ci, op, "guard binding still in scope"));
+                }
+            } else {
+                // Temporary guard inside a larger let statement: only
+                // blocking calls before the `;` run under it.
+                let end = stmt_end(f, call_end);
+                if let Some(op) = blocking_in(f, call_end + 1, end, BLOCKING_STMT) {
+                    out.push(finding(f, ci, op, "temporary guard within this statement"));
+                }
+            }
+            continue;
+        }
+
+        // Expression statement (or plain `if`/`while` condition): the
+        // temporary dies at the statement/condition boundary.
+        let end = stmt_end(f, call_end);
+        if let Some(op) = blocking_in(f, call_end + 1, end, BLOCKING_STMT) {
+            out.push(finding(f, ci, op, "temporary guard within this statement"));
+        }
+    }
+}
+
+/// First `{` after `from` with intervening parens balanced.
+fn body_open_after(f: &SourceFile, from: usize) -> Option<usize> {
+    let mut depth = 0isize;
+    let mut k = from + 1;
+    while k < f.clen() {
+        match f.ckind(k) {
+            Some(TokKind::Open) => {
+                if f.ctext(k) == "{" && depth == 0 {
+                    return Some(k);
+                }
+                depth += 1;
+            }
+            Some(TokKind::Close) => depth -= 1,
+            _ => {}
+        }
+        k += 1;
+    }
+    None
+}
+
+/// If the call chain after a guard call keeps returning the guard
+/// (`.unwrap()`, `.expect("..")`, `?`, `.unwrap_or_else(..)`) all the
+/// way to a `;`, return the code index just past the `;`.
+fn guard_tail_end(f: &SourceFile, call_end: usize) -> Option<usize> {
+    let mut j = call_end + 1;
+    loop {
+        match f.ctext(j) {
+            ";" => return Some(j + 1),
+            "?" => j += 1,
+            "." => {
+                let m = f.ctext(j + 1);
+                if matches!(m, "unwrap" | "expect" | "unwrap_or_else") && f.ctext(j + 2) == "(" {
+                    j = f.matching_close(j + 2) + 1;
+                } else {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+}

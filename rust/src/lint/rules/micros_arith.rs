@@ -1,0 +1,224 @@
+//! `unchecked-micros-arith` — no bare `+`/`-` on `Micros` in
+//! wall-clock/wire-facing modules.
+//!
+//! PR 1's bug class: `Micros` wraps `u64`, and `Debug`-profile overflow
+//! checks vanish in release, so `deadline - now` on a past deadline
+//! silently wrapped to ~584 000 years of slack and a request that
+//! should have shed was scheduled. `Sub` now panics in every profile
+//! and `Add` is overflow-checked, but a panic on the serving path is
+//! still an outage — code handling wall-clock or wire-supplied times
+//! must use `saturating_sub`/`saturating_add` (or `checked_*`) and
+//! decide the edge case explicitly.
+//!
+//! Scope: the serving-path modules where times come from a real clock
+//! or a (possibly hostile) wire peer. Simulation/harness/baseline
+//! files, where virtual time starts at zero and is bounded by the
+//! experiment horizon, are deliberately outside the target list —
+//! that is the rule's allowlist, documented in `LINTS.md`.
+//!
+//! Operand typing is heuristic (std-only lint, no type checker): an
+//! operand is `Micros` if it is an identifier ascribed `: Micros`
+//! anywhere in the file, one of the well-known time names below, a
+//! `Micros(..)`/`Micros::..` constructor, or a call to a known
+//! `Micros`-returning method. Either operand matching flags the op.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::{matching_open, path_matches, Rule};
+
+pub struct UncheckedMicrosArith;
+
+const RULE: &str = "unchecked-micros-arith";
+
+/// Directories (trailing `/`) and files on the serving path.
+const TARGET_DIRS: &[&str] = &["coordinator/", "net/", "serve/", "autoscale/"];
+const TARGET_FILES: &[&str] = &[
+    "scheduler/deferred.rs",
+    "scheduler/timeout.rs",
+    "core/types.rs",
+];
+/// The operator/helper definition site — `impl Add for Micros` et al.
+/// live here by design.
+const EXEMPT_FILES: &[&str] = &["core/time.rs"];
+
+/// Names that are always `Micros` in this codebase, covering
+/// pattern-destructured and wire-decoded bindings that carry no `:
+/// Micros` ascription in the file using them.
+const BUILTIN_MICROS_NAMES: &[&str] = &[
+    "now",
+    "deadline",
+    "arrival",
+    "free_at",
+    "exec",
+    "latest",
+    "slack",
+    "net_bound",
+    "budget",
+    "slo",
+    "frontrun",
+    "busy_until",
+];
+
+/// Methods known to return `Micros`.
+const MICROS_METHODS: &[&str] = &["latency", "now", "saturating_add", "saturating_sub"];
+
+impl Rule for UncheckedMicrosArith {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            let targeted = TARGET_DIRS
+                .iter()
+                .any(|d| f.path.contains(d) || f.path.starts_with(d.trim_end_matches('/')))
+                || TARGET_FILES.iter().any(|t| path_matches(&f.path, t));
+            let exempt = EXEMPT_FILES.iter().any(|t| path_matches(&f.path, t));
+            if !targeted || exempt {
+                continue;
+            }
+            check_file(f, out);
+        }
+    }
+}
+
+/// `std::time` types whose arithmetic is not ours to police.
+fn is_std_time(name: &str) -> bool {
+    matches!(name, "Instant" | "Duration" | "SystemTime")
+}
+
+fn in_set(f: &SourceFile, name: &str) -> bool {
+    BUILTIN_MICROS_NAMES.contains(&name) || f.micros_idents.iter().any(|m| m == name)
+}
+
+/// Is the expression *ending* at code index `ci` (exclusive of the
+/// operator) a `Micros` value?
+fn left_is_micros(f: &SourceFile, op_ci: usize) -> bool {
+    if op_ci == 0 {
+        return false;
+    }
+    let p = op_ci - 1;
+    match f.ckind(p) {
+        Some(TokKind::Ident) => in_set(f, f.ctext(p)),
+        Some(TokKind::Close) if f.ctext(p) == ")" => {
+            // `callee(..) + x` — find the callee just before `(`.
+            let open = matching_open(f, p);
+            if open == 0 || open == p {
+                return false;
+            }
+            let callee = open - 1;
+            if f.ckind(callee) != Some(TokKind::Ident) {
+                return false;
+            }
+            let name = f.ctext(callee);
+            // `Instant::now() + timeout` is std time, not ours.
+            if callee >= 2 && f.ctext(callee - 1) == "::" && is_std_time(f.ctext(callee - 2)) {
+                return false;
+            }
+            name == "Micros" || MICROS_METHODS.contains(&name)
+        }
+        _ => false,
+    }
+}
+
+/// Is the expression *starting* right after the operator a `Micros`
+/// value? Walks a `a.b.c(..)`/`Micros::..` chain.
+fn right_is_micros(f: &SourceFile, op_ci: usize) -> bool {
+    let mut j = op_ci + 1;
+    while matches!(f.ctext(j), "&" | "*" | "mut") {
+        j += 1;
+    }
+    loop {
+        if f.ckind(j) != Some(TokKind::Ident) {
+            return false;
+        }
+        let t = f.ctext(j);
+        if t == "Micros" {
+            return true;
+        }
+        if is_std_time(t) {
+            // `x + Duration::from_secs(..)` / `y - Instant::now()` are
+            // std-time expressions with their own checked semantics.
+            return false;
+        }
+        let next = f.ctext(j + 1);
+        if next == "(" {
+            if MICROS_METHODS.contains(&t) {
+                return true;
+            }
+            // Skip the call, keep walking the chain.
+            let close = f.matching_close(j + 1);
+            if f.ctext(close + 1) == "." {
+                j = close + 2;
+                continue;
+            }
+            return false;
+        }
+        // A set ident decides the type only when it *ends* the chain:
+        // `x + deadline` is Micros, but `x + last.0` is the u64 inside,
+        // so a `.` continuation must be walked, not short-circuited.
+        if in_set(f, t) && next != "::" && next != "." {
+            return true;
+        }
+        if next == "." {
+            j += 2;
+            continue;
+        }
+        if next == "::" {
+            j += 2;
+            continue;
+        }
+        return false;
+    }
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        if f.ckind(ci) != Some(TokKind::Punct) {
+            continue;
+        }
+        let op = f.ctext(ci);
+        let assign = matches!(op, "+=" | "-=");
+        if !matches!(op, "+" | "-") && !assign {
+            continue;
+        }
+        if f.in_test(ci) {
+            continue;
+        }
+        // Binary use only: `-x` and `&-` etc. are unary contexts.
+        let prev_kind = if ci > 0 { f.ckind(ci - 1) } else { None };
+        let binary = matches!(
+            prev_kind,
+            Some(TokKind::Ident) | Some(TokKind::Int) | Some(TokKind::Float) | Some(TokKind::Close)
+        );
+        if !binary {
+            continue;
+        }
+        let micros = if assign {
+            // `x += dur` — only the left side identifies the type.
+            ci > 0
+                && f.ckind(ci - 1) == Some(TokKind::Ident)
+                && in_set(f, f.ctext(ci - 1))
+        } else {
+            left_is_micros(f, ci) || right_is_micros(f, ci)
+        };
+        if !micros {
+            continue;
+        }
+        let (fix, why) = if op.starts_with('+') {
+            ("saturating_add", "wraps on overflow in release")
+        } else {
+            ("saturating_sub", "panics on underflow")
+        };
+        out.push(Finding {
+            file: f.path.clone(),
+            line: f.cline(ci),
+            rule: RULE,
+            message: format!(
+                "bare `{op}` on Micros ({why}) — use {fix}/checked_* and decide the edge \
+                 case explicitly (PR 1 wrap class)"
+            ),
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! Rule registry and the shared token-query helpers rules lean on.
+
+pub mod float_free;
+pub mod lock_send;
+pub mod micros_arith;
+pub mod panic_free;
+pub mod wire_drift;
+
+use super::source::{SourceFile, SourceTree};
+use super::Finding;
+
+pub trait Rule {
+    fn name(&self) -> &'static str;
+    /// Append findings for `tree` to `out`. Rules see the whole tree so
+    /// cross-file rules (wire-schema-drift) fit the same shape.
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>);
+}
+
+/// All rules, in reporting-name order.
+pub fn all() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(wire_drift::WireSchemaDrift),
+        Box::new(float_free::FloatFreeHotPath),
+        Box::new(micros_arith::UncheckedMicrosArith),
+        Box::new(panic_free::PanicFreeWireSurface),
+        Box::new(lock_send::LockAcrossSend),
+    ]
+}
+
+/// Does `path` end with `suffix` on a path-component boundary?
+/// (`net/codec.rs` matches `rust/src/net/codec.rs` but not
+/// `mynet/codec.rs`.)
+pub(crate) fn path_matches(path: &str, suffix: &str) -> bool {
+    if path == suffix {
+        return true;
+    }
+    path.ends_with(suffix)
+        && path[..path.len() - suffix.len()].ends_with('/')
+}
+
+/// Is the code token at `ci` a method call `.name(`?
+pub(crate) fn is_method_call(f: &SourceFile, ci: usize) -> bool {
+    ci > 0 && f.ctext(ci - 1) == "." && f.ctext(ci + 1) == "("
+}
+
+/// For a `Close` token at code index `ci`, find its matching `Open`
+/// going backwards. Returns `ci` itself on unbalanced input.
+pub(crate) fn matching_open(f: &SourceFile, close_ci: usize) -> usize {
+    use super::lexer::TokKind;
+    let mut depth = 0usize;
+    let mut ci = close_ci;
+    loop {
+        match f.ckind(ci) {
+            Some(TokKind::Close) => depth += 1,
+            Some(TokKind::Open) => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return ci;
+                }
+            }
+            _ => {}
+        }
+        if ci == 0 {
+            return close_ci;
+        }
+        ci -= 1;
+    }
+}

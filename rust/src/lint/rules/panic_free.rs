@@ -1,0 +1,124 @@
+//! `panic-free-wire-surface` — hostile input may kill a session, never
+//! the process.
+//!
+//! PR 5's discipline: a rank server and its client talk over TCP to a
+//! peer that may be malformed or malicious, and every decode failure
+//! must surface as a clean `Err`/drop of that one session. A stray
+//! `unwrap`, an `assert!`, or a direct slice index on these paths turns
+//! a bad frame into a dead process — the difference between one
+//! misbehaving peer and a fleet-wide outage.
+//!
+//! Scope: `net/server.rs`, `net/client.rs`, `net/transport.rs`, and
+//! the decode half of `net/codec.rs` (functions named `encode_*` take
+//! process-local input and are exempt by design). `debug_assert!` is
+//! allowed — it compiles out of release builds. Setup-time failures
+//! that cannot be driven by a peer (spawning the writer thread,
+//! reading the bound listener's address) are annotated in place with
+//! `lint:allow`.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::{is_method_call, path_matches, Rule};
+
+pub struct PanicFreeWireSurface;
+
+const RULE: &str = "panic-free-wire-surface";
+
+const TARGETS: &[&str] = &[
+    "net/server.rs",
+    "net/client.rs",
+    "net/codec.rs",
+    "net/transport.rs",
+];
+
+/// Macros that panic in release builds.
+const PANIC_MACROS: &[&str] = &[
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+];
+
+impl Rule for PanicFreeWireSurface {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            if !TARGETS.iter().any(|t| path_matches(&f.path, t)) {
+                continue;
+            }
+            let codec = path_matches(&f.path, "net/codec.rs");
+            check_file(f, codec, out);
+        }
+    }
+}
+
+fn finding(f: &SourceFile, ci: usize, message: String) -> Finding {
+    Finding {
+        file: f.path.clone(),
+        line: f.cline(ci),
+        rule: RULE,
+        message,
+    }
+}
+
+fn check_file(f: &SourceFile, codec: bool, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        if f.in_test(ci) {
+            continue;
+        }
+        // In codec.rs only the decode half faces the wire.
+        if codec {
+            match f.enclosing_fn(ci) {
+                Some(func) if func.name.starts_with("encode_") => continue,
+                _ => {}
+            }
+        }
+        match f.ckind(ci) {
+            Some(TokKind::Ident) => {
+                let t = f.ctext(ci);
+                if (t == "unwrap" || t == "expect") && is_method_call(f, ci) {
+                    out.push(finding(
+                        f,
+                        ci,
+                        format!(
+                            ".{t}() on the wire surface — a hostile frame must kill the \
+                             session, not the process; handle the Err/None (PR 5)"
+                        ),
+                    ));
+                } else if PANIC_MACROS.contains(&t) && f.ctext(ci + 1) == "!" {
+                    out.push(finding(
+                        f,
+                        ci,
+                        format!(
+                            "{t}! on the wire surface — panics in release; return an error \
+                             or drop the session (debug_assert! is allowed)"
+                        ),
+                    ));
+                }
+            }
+            Some(TokKind::Open) if f.ctext(ci) == "[" => {
+                // Indexing: `expr[..]` — the token before `[` ends an
+                // expression. `#[attr]`, `&[u8]`, `vec![..]` etc. do not.
+                let prev = if ci > 0 { f.ckind(ci - 1) } else { None };
+                let indexing = matches!(prev, Some(TokKind::Ident) | Some(TokKind::Close));
+                if indexing {
+                    out.push(finding(
+                        f,
+                        ci,
+                        "direct slice index on the wire surface — panics on out-of-bounds; \
+                         use .get()/.get_mut() and handle None"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}

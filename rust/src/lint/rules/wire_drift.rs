@@ -1,0 +1,248 @@
+//! `wire-schema-drift` — the wire codec must mirror the in-process
+//! control enums.
+//!
+//! PR 5 put the rank tier behind a real wire and left the two
+//! vocabularies synchronized by a comment ("keep the two in sync").
+//! This rule replaces that discipline. It extracts `ToRank`/`ToModel`
+//! from `coordinator/messages.rs` and `WireToRank`/`WireFromRank` from
+//! `net/codec.rs` and verifies the bijection, modulo the exceptions the
+//! design documents:
+//!
+//! - `ToRank::Shutdown` never crosses the wire (a remote shutdown is a
+//!   connection close).
+//! - `ToRank::Drain` drops its in-process `ack: Sender<GpuId>` field;
+//!   the ack returns as the extra `WireFromRank::DrainAck` frame.
+//! - `ToModel::{Request, Requests, Shutdown}` are frontend-originated
+//!   and never shard-originated, so they have no down-frame.
+//!
+//! It also checks that every wire variant appears in all four
+//! encode/decode bodies. The decode half is the valuable one: decode
+//! dispatches on an integer tag, so a forgotten decode arm is *not* a
+//! compile error — it is a runtime `BadTag` on a perfectly valid frame.
+
+use super::super::source::{EnumDecl, SourceFile, SourceTree};
+use super::super::Finding;
+use super::{path_matches, Rule};
+
+pub struct WireSchemaDrift;
+
+const RULE: &str = "wire-schema-drift";
+const MESSAGES_PATH: &str = "coordinator/messages.rs";
+const CODEC_PATH: &str = "net/codec.rs";
+
+/// `ToRank` variants that never cross the wire.
+const TO_RANK_LOCAL_ONLY: &[&str] = &["Shutdown"];
+/// `ToModel` variants originated by the frontend/ingest side, not by a
+/// rank shard — they have no down-frame.
+const TO_MODEL_FRONTEND_ONLY: &[&str] = &["Request", "Requests", "Shutdown"];
+/// Wire-only down variants (in-process delivery uses another channel).
+const FROM_RANK_WIRE_ONLY: &[&str] = &["DrainAck"];
+/// Per-variant fields dropped on the wire: (variant, field, why).
+const DROPPED_FIELDS: &[(&str, &str)] = &[("Drain", "ack")];
+
+impl Rule for WireSchemaDrift {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        let msgs = tree.files.iter().find(|f| path_matches(&f.path, MESSAGES_PATH));
+        let codec = tree.files.iter().find(|f| path_matches(&f.path, CODEC_PATH));
+        let (Some(msgs), Some(codec)) = (msgs, codec) else {
+            // Nothing to cross-check in this tree (e.g. rule fixtures
+            // for other rules).
+            return;
+        };
+        let Some(to_rank) = find_enum(msgs, "ToRank", out) else {
+            return;
+        };
+        let Some(to_model) = find_enum(msgs, "ToModel", out) else {
+            return;
+        };
+        let Some(wire_up) = find_enum(codec, "WireToRank", out) else {
+            return;
+        };
+        let Some(wire_down) = find_enum(codec, "WireFromRank", out) else {
+            return;
+        };
+
+        // Up direction: ToRank minus local-only == WireToRank.
+        for (v, fields) in &to_rank.variants {
+            if TO_RANK_LOCAL_ONLY.contains(&v.as_str()) {
+                continue;
+            }
+            match variant(wire_up, v) {
+                None => out.push(finding(
+                    codec,
+                    wire_up.line,
+                    format!(
+                        "WireToRank is missing `{v}` — ToRank::{v} cannot reach a remote shard \
+                         (add the wire variant + tag + encode/decode arms, or document it in \
+                         the drift rule's exception table)"
+                    ),
+                )),
+                Some(wf) => {
+                    let mut expect = fields.clone();
+                    expect.retain(|fname| {
+                        !DROPPED_FIELDS
+                            .iter()
+                            .any(|(dv, df)| dv == v && df == fname)
+                    });
+                    check_fields(codec, wire_up.line, "WireToRank", v, wf, &expect, out);
+                }
+            }
+        }
+        for (v, _) in &wire_up.variants {
+            if variant(to_rank, v).is_none() {
+                out.push(finding(
+                    msgs,
+                    to_rank.line,
+                    format!("WireToRank::{v} has no ToRank counterpart — dead wire vocabulary"),
+                ));
+            }
+        }
+
+        // Down direction: shard-originated ToModel verdicts ==
+        // WireFromRank minus wire-only.
+        for (v, fields) in &to_model.variants {
+            if TO_MODEL_FRONTEND_ONLY.contains(&v.as_str()) {
+                continue;
+            }
+            match variant(wire_down, v) {
+                None => out.push(finding(
+                    codec,
+                    wire_down.line,
+                    format!(
+                        "WireFromRank is missing shard-originated verdict `{v}` — a remote \
+                         shard cannot deliver ToModel::{v} (add the wire variant, or add {v} \
+                         to the frontend-originated allowlist in the drift rule)"
+                    ),
+                )),
+                Some(wf) => {
+                    check_fields(codec, wire_down.line, "WireFromRank", v, wf, fields, out)
+                }
+            }
+        }
+        for (v, _) in &wire_down.variants {
+            if FROM_RANK_WIRE_ONLY.contains(&v.as_str()) {
+                continue;
+            }
+            if variant(to_model, v).is_none() {
+                out.push(finding(
+                    msgs,
+                    to_model.line,
+                    format!("WireFromRank::{v} has no ToModel counterpart — dead wire vocabulary"),
+                ));
+            }
+        }
+
+        // Encode/decode arm presence for every wire variant.
+        check_arms(codec, "encode_up", "WireToRank", wire_up, out);
+        check_arms(codec, "decode_up", "WireToRank", wire_up, out);
+        check_arms(codec, "encode_down", "WireFromRank", wire_down, out);
+        check_arms(codec, "decode_down", "WireFromRank", wire_down, out);
+    }
+}
+
+fn finding(f: &SourceFile, line: usize, message: String) -> Finding {
+    Finding {
+        file: f.path.clone(),
+        line,
+        rule: RULE,
+        message,
+    }
+}
+
+fn find_enum<'a>(f: &'a SourceFile, name: &str, out: &mut Vec<Finding>) -> Option<&'a EnumDecl> {
+    let e = f.enums.iter().find(|e| e.name == name);
+    if e.is_none() {
+        out.push(finding(
+            f,
+            1,
+            format!("expected enum `{name}` not found — the drift rule tracks it"),
+        ));
+    }
+    e
+}
+
+fn variant<'a>(e: &'a EnumDecl, name: &str) -> Option<&'a Vec<String>> {
+    e.variants
+        .iter()
+        .find(|(v, _)| v == name)
+        .map(|(_, fields)| fields)
+}
+
+fn check_fields(
+    codec: &SourceFile,
+    line: usize,
+    enum_name: &str,
+    variant: &str,
+    wire_fields: &[String],
+    expect: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let mut a: Vec<&str> = wire_fields.iter().map(|s| s.as_str()).collect();
+    let mut b: Vec<&str> = expect.iter().map(|s| s.as_str()).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    if a != b {
+        out.push(finding(
+            codec,
+            line,
+            format!(
+                "{enum_name}::{variant} fields {{{}}} drift from the in-process message's \
+                 {{{}}} (modulo documented dropped fields)",
+                a.join(", "),
+                b.join(", "),
+            ),
+        ));
+    }
+}
+
+/// Every wire variant must be named (as `Enum::Variant`) inside the
+/// body of `fn_name`.
+fn check_arms(
+    codec: &SourceFile,
+    fn_name: &str,
+    enum_name: &str,
+    e: &EnumDecl,
+    out: &mut Vec<Finding>,
+) {
+    let Some(f) = codec.fns.iter().find(|f| f.name == fn_name) else {
+        out.push(finding(
+            codec,
+            1,
+            format!("expected `fn {fn_name}` not found — the drift rule checks its arms"),
+        ));
+        return;
+    };
+    for (v, _) in &e.variants {
+        let mut present = false;
+        for ci in f.body_open..=f.body_close {
+            if codec.ctext(ci) == v
+                && ci >= 2
+                && codec.ctext(ci - 1) == "::"
+                && codec.ctext(ci - 2) == enum_name
+            {
+                present = true;
+                break;
+            }
+        }
+        if !present {
+            out.push(finding(
+                codec,
+                f.line,
+                format!(
+                    "`{fn_name}` has no arm for {enum_name}::{v}\
+                     {}",
+                    if fn_name.starts_with("decode") {
+                        " — a forgotten decode arm is not a compile error, it is a runtime \
+                         BadTag on a valid frame"
+                    } else {
+                        ""
+                    }
+                ),
+            ));
+        }
+    }
+}

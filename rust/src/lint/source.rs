@@ -1,0 +1,606 @@
+//! Source model for the lint pass: a parsed file (token stream plus the
+//! structural facts rules need) and a tree of them.
+//!
+//! "Parsed" is generous — we extract only what the rules consume:
+//! - inline module spans (`mod name { .. }`), used for `#[cfg(test)]`
+//!   exclusion and the `core::profile::reference` carve-out,
+//! - function spans (name, signature token range, body token range),
+//! - enum declarations (variant names + field names), for the
+//!   wire-schema-drift rule,
+//! - identifiers ascribed `: Micros`, for the arithmetic rule,
+//! - `// lint:allow(rule): reason` suppressions.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::lexer::{tokenize, TokKind, Token};
+
+/// A `// lint:allow(rule): reason` comment.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    /// Line the comment sits on.
+    pub line: usize,
+    /// Line(s) the suppression covers: its own line, and — when the
+    /// comment stands alone — the next line holding code.
+    pub covers: (usize, usize),
+    /// Rule name inside the parentheses.
+    pub rule: String,
+    /// Whether a non-empty `: reason` followed the closing paren.
+    pub has_reason: bool,
+}
+
+/// An inline `mod name { .. }` item.
+#[derive(Debug, Clone)]
+pub struct ModSpan {
+    pub name: String,
+    /// `true` if the mod carries a `#[cfg(test)]` attribute.
+    pub cfg_test: bool,
+    /// Code-token index range of the body, inclusive of both braces.
+    pub body: (usize, usize),
+}
+
+/// A `fn` item (or nested fn).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: usize,
+    /// Code-token index of the `fn` keyword.
+    pub sig_start: usize,
+    /// Code-token index of the body `{` (== sig end + 1).
+    pub body_open: usize,
+    /// Code-token index of the matching `}`.
+    pub body_close: usize,
+}
+
+/// An enum declaration: name plus (variant, field-names) pairs. Tuple
+/// variants get synthesized positional names `"0"`, `"1"`, ...
+#[derive(Debug, Clone)]
+pub struct EnumDecl {
+    pub name: String,
+    pub line: usize,
+    pub variants: Vec<(String, Vec<String>)>,
+}
+
+pub struct SourceFile {
+    /// Path as shown in diagnostics (relative to the lint root).
+    pub path: String,
+    pub text: String,
+    /// Full token stream including comments.
+    pub toks: Vec<Token>,
+    /// Indices into `toks` of code tokens (comments stripped).
+    pub code: Vec<usize>,
+    pub mods: Vec<ModSpan>,
+    pub fns: Vec<FnSpan>,
+    pub enums: Vec<EnumDecl>,
+    pub allows: Vec<Suppression>,
+    /// Identifiers ascribed `: Micros` anywhere in the file (params,
+    /// lets, struct fields) — the arithmetic rule's local type facts.
+    pub micros_idents: Vec<String>,
+}
+
+impl SourceFile {
+    pub fn parse(path: String, text: String) -> SourceFile {
+        let toks = tokenize(&text);
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let mut f = SourceFile {
+            path,
+            text,
+            toks,
+            code,
+            mods: Vec::new(),
+            fns: Vec::new(),
+            enums: Vec::new(),
+            allows: Vec::new(),
+            micros_idents: Vec::new(),
+        };
+        f.scan_mods();
+        f.scan_fns();
+        f.scan_enums();
+        f.scan_allows();
+        f.scan_micros_idents();
+        f
+    }
+
+    /// Text of the code token at code-index `ci` ("" past the end).
+    pub fn ctext(&self, ci: usize) -> &str {
+        match self.code.get(ci) {
+            Some(&ti) => self.toks[ti].text(&self.text),
+            None => "",
+        }
+    }
+
+    /// Kind of the code token at code-index `ci`.
+    pub fn ckind(&self, ci: usize) -> Option<TokKind> {
+        self.code.get(ci).map(|&ti| self.toks[ti].kind)
+    }
+
+    /// Line of the code token at code-index `ci`.
+    pub fn cline(&self, ci: usize) -> usize {
+        match self.code.get(ci) {
+            Some(&ti) => self.toks[ti].line,
+            None => 0,
+        }
+    }
+
+    /// Number of code tokens.
+    pub fn clen(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Is code token `ci` inside a `#[cfg(test)]` mod body?
+    pub fn in_test(&self, ci: usize) -> bool {
+        self.mods
+            .iter()
+            .any(|m| m.cfg_test && ci >= m.body.0 && ci <= m.body.1)
+    }
+
+    /// Is code token `ci` inside a mod named `name`?
+    pub fn in_mod(&self, name: &str, ci: usize) -> bool {
+        self.mods
+            .iter()
+            .any(|m| m.name == name && ci >= m.body.0 && ci <= m.body.1)
+    }
+
+    /// The innermost fn whose body contains code token `ci`.
+    pub fn enclosing_fn(&self, ci: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| ci > f.body_open && ci < f.body_close)
+            .min_by_key(|f| f.body_close - f.body_open)
+    }
+
+    /// Given the code index of an `Open` token, find its matching
+    /// `Close` (same bracket family by nesting count). Returns the last
+    /// code index on unbalanced input rather than panicking.
+    pub fn matching_close(&self, open_ci: usize) -> usize {
+        let mut depth = 0usize;
+        let mut ci = open_ci;
+        while ci < self.code.len() {
+            match self.ckind(ci) {
+                Some(TokKind::Open) => depth += 1,
+                Some(TokKind::Close) => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return ci;
+                    }
+                }
+                _ => {}
+            }
+            ci += 1;
+        }
+        self.code.len().saturating_sub(1)
+    }
+
+    fn scan_mods(&mut self) {
+        let mut found = Vec::new();
+        for ci in 0..self.code.len() {
+            if self.ctext(ci) != "mod" {
+                continue;
+            }
+            // `mod name {` — skip `mod name;` declarations.
+            if self.ckind(ci + 1) != Some(TokKind::Ident) || self.ctext(ci + 2) != "{" {
+                continue;
+            }
+            let name = self.ctext(ci + 1).to_string();
+            // Look back for a `#[cfg(test)]` attribute: `#` `[` `cfg`
+            // `(` `test` `)` `]` possibly with other attributes between
+            // it and the mod keyword.
+            let cfg_test = self.has_cfg_test_attr(ci);
+            let close = self.matching_close(ci + 2);
+            found.push(ModSpan {
+                name,
+                cfg_test,
+                body: (ci + 2, close),
+            });
+        }
+        self.mods = found;
+    }
+
+    /// Walk attributes immediately preceding code index `item_ci`
+    /// looking for `#[cfg(test)]`.
+    fn has_cfg_test_attr(&self, item_ci: usize) -> bool {
+        let mut ci = item_ci;
+        // Skip leading visibility / keywords back to the attrs:
+        // attributes end with `]`, so walk back over `pub`, `(crate)` etc.
+        while ci > 0 {
+            let prev = self.ctext(ci - 1);
+            if prev == "pub" || prev == "crate" || prev == ")" || prev == "(" {
+                ci -= 1;
+                continue;
+            }
+            break;
+        }
+        // Now repeatedly match a trailing `... ]` attribute.
+        while ci >= 2 && self.ctext(ci - 1) == "]" {
+            // Find the matching `[` going backwards.
+            let mut depth = 0usize;
+            let mut k = ci - 1;
+            loop {
+                match self.ctext(k) {
+                    "]" => depth += 1,
+                    "[" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                if k == 0 {
+                    return false;
+                }
+                k -= 1;
+            }
+            if k == 0 || self.ctext(k - 1) != "#" {
+                return false;
+            }
+            // Attribute tokens are code[k..ci-1]; check for cfg(test).
+            let mut j = k + 1;
+            let mut is_cfg = false;
+            while j < ci - 1 {
+                if self.ctext(j) == "cfg" && self.ctext(j + 1) == "(" {
+                    is_cfg = true;
+                }
+                if is_cfg && self.ctext(j) == "test" {
+                    return true;
+                }
+                j += 1;
+            }
+            ci = k - 1; // step over this attribute, try the one before
+        }
+        false
+    }
+
+    fn scan_fns(&mut self) {
+        let mut found = Vec::new();
+        for ci in 0..self.code.len() {
+            if self.ctext(ci) != "fn" {
+                continue;
+            }
+            // `fn` in fn-pointer types (`fn(u32) -> u32`) has no name.
+            if self.ckind(ci + 1) != Some(TokKind::Ident) {
+                continue;
+            }
+            let name = self.ctext(ci + 1).to_string();
+            let line = self.cline(ci);
+            // Scan forward for the body `{` with all parens closed.
+            // A `;` at paren depth 0 means a bodyless declaration.
+            let mut paren = 0isize;
+            let mut k = ci + 2;
+            let mut body_open = None;
+            while k < self.code.len() {
+                match self.ctext(k) {
+                    "(" | "[" => paren += 1,
+                    ")" | "]" => paren -= 1,
+                    "{" if paren == 0 => {
+                        body_open = Some(k);
+                        break;
+                    }
+                    ";" if paren == 0 => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let Some(open) = body_open else { continue };
+            let close = self.matching_close(open);
+            found.push(FnSpan {
+                name,
+                line,
+                sig_start: ci,
+                body_open: open,
+                body_close: close,
+            });
+        }
+        self.fns = found;
+    }
+
+    fn scan_enums(&mut self) {
+        let mut found = Vec::new();
+        for ci in 0..self.code.len() {
+            if self.ctext(ci) != "enum" || self.ckind(ci + 1) != Some(TokKind::Ident) {
+                continue;
+            }
+            let name = self.ctext(ci + 1).to_string();
+            let line = self.cline(ci);
+            // Generics between name and `{` are not used in this repo's
+            // message enums; scan to the first `{`.
+            let mut k = ci + 2;
+            while k < self.code.len() && self.ctext(k) != "{" {
+                if self.ctext(k) == ";" {
+                    break;
+                }
+                k += 1;
+            }
+            if self.ctext(k) != "{" {
+                continue;
+            }
+            let close = self.matching_close(k);
+            let mut variants = Vec::new();
+            let mut j = k + 1;
+            while j < close {
+                // Skip attributes on variants.
+                while self.ctext(j) == "#" && self.ctext(j + 1) == "[" {
+                    j = self.matching_close(j + 1) + 1;
+                }
+                if j >= close || self.ckind(j) != Some(TokKind::Ident) {
+                    j += 1;
+                    continue;
+                }
+                let vname = self.ctext(j).to_string();
+                let mut fields = Vec::new();
+                j += 1;
+                match self.ctext(j) {
+                    "{" => {
+                        let vclose = self.matching_close(j);
+                        // Field names: idents directly followed by `:`
+                        // at this brace level.
+                        let mut d = 0usize;
+                        let mut m = j + 1;
+                        while m < vclose {
+                            match self.ckind(m) {
+                                Some(TokKind::Open) => d += 1,
+                                Some(TokKind::Close) => d = d.saturating_sub(1),
+                                Some(TokKind::Ident)
+                                    if d == 0
+                                        && self.ctext(m + 1) == ":"
+                                        && self.ctext(m + 2) != ":" =>
+                                {
+                                    fields.push(self.ctext(m).to_string());
+                                }
+                                _ => {}
+                            }
+                            m += 1;
+                        }
+                        j = vclose + 1;
+                    }
+                    "(" => {
+                        let vclose = self.matching_close(j);
+                        // Count top-level commas for positional arity.
+                        let mut d = 0usize;
+                        let mut arity = 1usize;
+                        let mut m = j + 1;
+                        let mut any = false;
+                        while m < vclose {
+                            match self.ckind(m) {
+                                Some(TokKind::Open) => d += 1,
+                                Some(TokKind::Close) => d = d.saturating_sub(1),
+                                _ => {
+                                    any = true;
+                                    if d == 0 && self.ctext(m) == "," {
+                                        arity += 1;
+                                    }
+                                }
+                            }
+                            m += 1;
+                        }
+                        if any {
+                            for p in 0..arity {
+                                fields.push(p.to_string());
+                            }
+                        }
+                        j = vclose + 1;
+                    }
+                    _ => {}
+                }
+                // Skip to past the separating comma.
+                while j < close && self.ctext(j) != "," {
+                    j += 1;
+                }
+                j += 1;
+                variants.push((vname, fields));
+            }
+            found.push(EnumDecl {
+                name,
+                line,
+                variants,
+            });
+        }
+        self.enums = found;
+    }
+
+    fn scan_allows(&mut self) {
+        let mut found = Vec::new();
+        for (ti, t) in self.toks.iter().enumerate() {
+            if t.kind != TokKind::LineComment {
+                continue;
+            }
+            let body = t.text(&self.text);
+            let Some(pos) = body.find("lint:allow") else {
+                continue;
+            };
+            let after = &body[pos + "lint:allow".len()..];
+            let (rule, has_reason) = match after.strip_prefix('(') {
+                Some(rest) => match rest.find(')') {
+                    Some(close) => {
+                        let rule = rest[..close].trim().to_string();
+                        let tail = rest[close + 1..].trim_start();
+                        let has_reason = tail
+                            .strip_prefix(':')
+                            .map(|r| !r.trim().is_empty())
+                            .unwrap_or(false);
+                        (rule, has_reason)
+                    }
+                    None => (String::new(), false),
+                },
+                None => (String::new(), false),
+            };
+            // Own-line comment (nothing but whitespace before it on the
+            // line) covers the next code line; trailing comment covers
+            // its own line.
+            let line_start = self.text[..t.start].rfind('\n').map(|p| p + 1).unwrap_or(0);
+            let own_line = self.text[line_start..t.start].trim().is_empty();
+            let next_code_line = if own_line {
+                self.toks[ti + 1..]
+                    .iter()
+                    .find(|n| {
+                        !matches!(n.kind, TokKind::LineComment | TokKind::BlockComment)
+                    })
+                    .map(|n| n.line)
+                    .unwrap_or(t.line)
+            } else {
+                t.line
+            };
+            found.push(Suppression {
+                line: t.line,
+                covers: (t.line, next_code_line),
+                rule,
+                has_reason,
+            });
+        }
+        self.allows = found;
+    }
+
+    fn scan_micros_idents(&mut self) {
+        let mut set = Vec::new();
+        for ci in 0..self.code.len() {
+            if self.ckind(ci) != Some(TokKind::Ident) || self.ctext(ci + 1) != ":" {
+                continue;
+            }
+            // `x: Micros` / `x: &Micros` / `x: &mut Micros`.
+            let mut k = ci + 2;
+            while self.ctext(k) == "&" || self.ctext(k) == "mut" {
+                k += 1;
+            }
+            if self.ctext(k) == "Micros" && self.ctext(k + 1) != ":" {
+                let name = self.ctext(ci).to_string();
+                if !set.contains(&name) {
+                    set.push(name);
+                }
+            }
+        }
+        self.micros_idents = set;
+    }
+}
+
+pub struct SourceTree {
+    pub files: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    /// Load every `.rs` file under `root` (recursively), paths sorted
+    /// for deterministic output.
+    pub fn load(root: &Path) -> io::Result<SourceTree> {
+        let mut paths = Vec::new();
+        collect_rs(root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        for p in paths {
+            let text = fs::read_to_string(&p)?;
+            let display = p
+                .strip_prefix(root)
+                .map(|r| r.to_string_lossy().into_owned())
+                .unwrap_or_else(|_| p.to_string_lossy().into_owned());
+            files.push(SourceFile::parse(display, text));
+        }
+        Ok(SourceTree { files })
+    }
+
+    /// Build a tree from in-memory (path, source) pairs — fixture tests.
+    pub fn from_memory(sources: &[(&str, &str)]) -> SourceTree {
+        SourceTree {
+            files: sources
+                .iter()
+                .map(|(p, s)| SourceFile::parse(p.to_string(), s.to_string()))
+                .collect(),
+        }
+    }
+
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_cfg_test_mod_span() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { bad(); }\n}\n";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.mods.len(), 1);
+        assert!(f.mods[0].cfg_test);
+        // The `bad` call is inside the test span.
+        let bad_ci = (0..f.clen()).find(|&ci| f.ctext(ci) == "bad").unwrap();
+        assert!(f.in_test(bad_ci));
+        let live_ci = (0..f.clen()).find(|&ci| f.ctext(ci) == "live").unwrap();
+        assert!(!f.in_test(live_ci));
+    }
+
+    #[test]
+    fn extracts_enum_variants_and_fields() {
+        let src = "pub enum E { A, B { x: u32, y: Micros }, C(u8, u16), }";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.enums.len(), 1);
+        let e = &f.enums[0];
+        assert_eq!(e.name, "E");
+        assert_eq!(e.variants[0], ("A".into(), vec![]));
+        assert_eq!(e.variants[1], ("B".into(), vec!["x".into(), "y".into()]));
+        assert_eq!(e.variants[2], ("C".into(), vec!["0".into(), "1".into()]));
+    }
+
+    #[test]
+    fn suppression_parsing() {
+        let src = "\
+// lint:allow(some-rule): standalone with reason
+let a = 1;
+let b = 2; // lint:allow(other-rule): trailing
+// lint:allow(bare-rule)
+let c = 3;
+";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.allows.len(), 3);
+        assert_eq!(f.allows[0].rule, "some-rule");
+        assert!(f.allows[0].has_reason);
+        assert_eq!(f.allows[0].covers, (1, 2));
+        assert_eq!(f.allows[1].rule, "other-rule");
+        assert_eq!(f.allows[1].covers, (3, 3));
+        assert_eq!(f.allows[2].rule, "bare-rule");
+        assert!(!f.allows[2].has_reason);
+        assert_eq!(f.allows[2].covers, (4, 5));
+    }
+
+    #[test]
+    fn micros_ident_ascriptions() {
+        let src = "fn f(now: Micros, n: usize) { let slack: Micros = now; let r: &Micros = &slack; }";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert!(f.micros_idents.contains(&"now".to_string()));
+        assert!(f.micros_idents.contains(&"slack".to_string()));
+        assert!(f.micros_idents.contains(&"r".to_string()));
+        assert!(!f.micros_idents.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn fn_spans_and_enclosing() {
+        let src = "fn outer() { inner_call(); fn inner() { deep(); } }";
+        let f = SourceFile::parse("x.rs".into(), src.into());
+        assert_eq!(f.fns.len(), 2);
+        let deep_ci = (0..f.clen()).find(|&ci| f.ctext(ci) == "deep").unwrap();
+        assert_eq!(f.enclosing_fn(deep_ci).unwrap().name, "inner");
+        let call_ci = (0..f.clen())
+            .find(|&ci| f.ctext(ci) == "inner_call")
+            .unwrap();
+        assert_eq!(f.enclosing_fn(call_ci).unwrap().name, "outer");
+    }
+}

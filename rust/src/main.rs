@@ -8,6 +8,7 @@
 //! symphony zoo [1080ti|a100]     print the model zoo
 //! symphony analytic <model> <slo_ms> <gpus>
 //! symphony partition [models] [parts] [budget_ms]
+//! symphony lint [--root rust/src] [--rule NAME]
 //! ```
 //!
 //! (The offline registry has no clap; this is a deliberate, small,
@@ -42,6 +43,7 @@ fn main() {
         "zoo" => cmd_zoo(&rest),
         "analytic" => cmd_analytic(&rest),
         "partition" => cmd_partition(&rest),
+        "lint" => cmd_lint(&rest),
         "-h" | "--help" | "help" => usage(),
         other => {
             eprintln!("unknown command {other:?}\n");
@@ -64,7 +66,8 @@ fn usage() {
          symphony rank-server [--listen ADDR] [--shards R] [--gpu-range LO..HI]\n  \
                  [--max-sessions N]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
-         symphony partition [n_models] [parts] [budget_ms]\n\n\
+         symphony partition [n_models] [parts] [budget_ms]\n  \
+         symphony lint [--root rust/src] [--rule NAME]\n\n\
          systems: symphony clockwork nexus shepherd eager"
     );
 }
@@ -491,5 +494,41 @@ fn cmd_partition(rest: &[String]) {
             );
         }
         _ => println!("no feasible assignment found within budget"),
+    }
+}
+
+/// `symphony lint [--root rust/src] [--rule NAME]` — run the std-only
+/// invariant checker (see LINTS.md) and exit nonzero on findings.
+fn cmd_lint(rest: &[String]) {
+    let f = flags(rest);
+    let root = f
+        .get("root")
+        .cloned()
+        .unwrap_or_else(|| "rust/src".to_string());
+    let only = f.get("rule").map(|s| s.as_str());
+    if let Some(o) = only {
+        if !symphony::lint::rule_names().contains(&o) {
+            eprintln!(
+                "unknown rule {o:?} (known: {})",
+                symphony::lint::rule_names().join(", ")
+            );
+            std::process::exit(2);
+        }
+    }
+    let findings = match symphony::lint::run(std::path::Path::new(&root), only) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: cannot read {root}: {e}");
+            std::process::exit(2);
+        }
+    };
+    for fd in &findings {
+        println!("{fd}");
+    }
+    if findings.is_empty() {
+        println!("lint: clean ({root})");
+    } else {
+        eprintln!("lint: {} finding(s)", findings.len());
+        std::process::exit(1);
     }
 }

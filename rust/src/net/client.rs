@@ -40,6 +40,7 @@ use crate::core::types::GpuId;
 use crate::net::codec::{self, ClientHello, ServerPreamble, WireFromRank, WireToRank, PREAMBLE_LEN};
 use crate::net::transport::{connect_retry, spawn_writer, FrameReader, FrameSender, WriterStats};
 use crate::util::error::{Context, Result};
+use crate::util::sync::relock;
 
 /// How long the handshake may block before the peer is declared broken.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
@@ -100,7 +101,7 @@ impl RemoteRank {
         });
         (&stream).write_all(&hello)?;
         stream.set_read_timeout(None)?;
-        let (sender, writer) = spawn_writer(stream.try_clone()?);
+        let (sender, writer) = spawn_writer(stream.try_clone()?)?;
         Ok(RemoteRank {
             info,
             peer: addr.to_string(),
@@ -129,13 +130,23 @@ impl RemoteRank {
         disconnects: Arc<AtomicU64>,
     ) {
         let conn = Arc::clone(self);
-        let stream = self.stream.try_clone().expect("clone rank stream");
+        // fd exhaustion / thread-spawn failure below are resource
+        // errors, not bugs: surface them exactly like an immediate
+        // unexpected disconnect instead of panicking the caller.
+        let stream = match self.stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                self.fail_session(&disconnects, &format!("cloning stream: {e}"));
+                return;
+            }
+        };
+        let spawn_disconnects = Arc::clone(&disconnects);
         let h = std::thread::Builder::new()
             .name("rank-wire-reader".into())
             .spawn(move || {
                 let unexpected = conn.read_loop(stream, &model_txs, shard_offset);
                 if unexpected {
-                    disconnects.fetch_add(1, Ordering::Relaxed);
+                    spawn_disconnects.fetch_add(1, Ordering::Relaxed);
                     // Fail the ports fast: a send into a dead rank tier
                     // must error like a dead in-process shard, not
                     // queue forever. Parked drain-ack senders drop too,
@@ -144,16 +155,30 @@ impl RemoteRank {
                     // shard (dropping the ack sender with its state)
                     // would produce.
                     conn.sender.close();
-                    conn.acks.lock().unwrap().clear();
+                    relock(&conn.acks).clear();
                     eprintln!(
                         "rank-server {} disconnected; rank ports closed \
                          (candidates in flight are lost)",
                         conn.peer
                     );
                 }
-            })
-            .expect("spawn rank wire reader");
-        *self.reader.lock().unwrap() = Some(h);
+            });
+        match h {
+            Ok(h) => *relock(&self.reader) = Some(h),
+            Err(e) => self.fail_session(&disconnects, &format!("spawning reader: {e}")),
+        }
+    }
+
+    /// Close the session as an unexpected disconnect before the reader
+    /// ever ran (stream clone or thread spawn failed).
+    fn fail_session(&self, disconnects: &AtomicU64, why: &str) {
+        disconnects.fetch_add(1, Ordering::Relaxed);
+        self.sender.close();
+        relock(&self.acks).clear();
+        eprintln!(
+            "rank-server {}: reader startup failed ({why}); rank ports closed",
+            self.peer
+        );
     }
 
     /// Returns whether the session ended *unexpectedly*.
@@ -248,7 +273,10 @@ impl RemoteRank {
                 }
                 // No parked sender is benign: an `Attach` may have
                 // canceled the drain while this ack was in flight.
-                if let Some(ack) = self.acks.lock().unwrap().remove(&gpu.0) {
+                // Take the sender out first — an `if let` scrutinee
+                // guard would live across the `.send(` below.
+                let parked = relock(&self.acks).remove(&gpu.0);
+                if let Some(ack) = parked {
                     let _ = ack.send(gpu);
                 }
             }
@@ -269,10 +297,10 @@ impl RemoteRank {
     /// frame; the reader releases the sender on the matching
     /// `DrainAck`.
     pub fn drain(&self, shard: u16, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), PortClosed> {
-        self.acks.lock().unwrap().insert(gpu.0, ack);
+        relock(&self.acks).insert(gpu.0, ack);
         let res = self.send(shard, &WireToRank::Drain { gpu });
         if res.is_err() {
-            self.acks.lock().unwrap().remove(&gpu.0);
+            relock(&self.acks).remove(&gpu.0);
         }
         res
     }
@@ -283,7 +311,7 @@ impl RemoteRank {
     /// sender is dropped here too — a waiter blocked on the ack sees
     /// `Disconnected` promptly instead of hanging on a canceled drain.
     pub fn attach(&self, shard: u16, gpu: GpuId) -> Result<(), PortClosed> {
-        self.acks.lock().unwrap().remove(&gpu.0);
+        relock(&self.acks).remove(&gpu.0);
         self.send(shard, &WireToRank::Attach { gpu })
     }
 
@@ -301,11 +329,16 @@ impl RemoteRank {
     }
 
     /// Join the writer and reader threads (after [`RemoteRank::close`]).
+    /// The handles are taken out before joining: holding either mutex
+    /// across `.join()` would block any concurrent `start_reader` (or a
+    /// second `join`) for the whole thread lifetime.
     pub fn join(&self) {
-        if let Some(h) = self.writer.lock().unwrap().take() {
+        let writer = relock(&self.writer).take();
+        if let Some(h) = writer {
             let _ = h.join();
         }
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        let reader = relock(&self.reader).take();
+        if let Some(h) = reader {
             let _ = h.join();
         }
     }

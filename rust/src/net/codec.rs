@@ -21,6 +21,12 @@
 //! Up frames are prefixed with the target shard index (`u16`): one
 //! connection multiplexes every shard a rank server hosts, so the
 //! header — not a per-shard socket — does the routing.
+//!
+//! The mirror relationship with `coordinator::messages` is enforced by
+//! `symphony lint` (the `wire-schema-drift` rule): variant sets, field
+//! names, and the presence of an encode *and decode* arm per variant
+//! are checked on every CI run, so a variant added on one side cannot
+//! silently become a runtime `BadTag` on the other.
 
 use std::fmt;
 
@@ -118,11 +124,11 @@ impl<'a> Cur<'a> {
 
     fn take<const N: usize>(&mut self) -> Result<[u8; N], CodecError> {
         let end = self.off.checked_add(N).ok_or(CodecError::Truncated)?;
-        if end > self.b.len() {
-            return Err(CodecError::Truncated);
-        }
+        // `.get`, not a slice index: the decode path must return
+        // `Truncated`, never panic, on short input.
+        let src = self.b.get(self.off..end).ok_or(CodecError::Truncated)?;
         let mut out = [0u8; N];
-        out.copy_from_slice(&self.b[self.off..end]);
+        out.copy_from_slice(src);
         self.off = end;
         Ok(out)
     }

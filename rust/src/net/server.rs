@@ -87,6 +87,8 @@ impl RankServer {
     }
 
     pub fn local_addr(&self) -> SocketAddr {
+        // lint:allow(panic-free-wire-surface): queries our own bound
+        // listener, not peer input; failure here is an OS-level fault.
         self.listener.local_addr().expect("bound listener has an address")
     }
 
@@ -190,7 +192,7 @@ fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -
 
     // Down path: coalescing writer + converter threads turning shard
     // verdicts and drain acks into frames.
-    let (sender, writer_h) = spawn_writer(stream.try_clone()?);
+    let (sender, writer_h) = spawn_writer(stream.try_clone()?)?;
     let (model_tx, model_rx) = channel::<ToModel>();
     let model_conv = {
         let sender = sender.clone();
@@ -243,16 +245,17 @@ fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -
         match codec::decode_up(frame) {
             Ok((shard, msg)) => {
                 let shard = shard as usize;
-                if shard >= shard_txs.len() {
+                // `shard` is wire data: `.get`, never index.
+                let Some(shard_tx) = shard_txs.get(shard) else {
                     break Err(crate::util::error::Error::msg(format!(
                         "{peer}: frame for shard {shard} of {}",
                         shard_txs.len()
                     )));
-                }
+                };
                 match validate(&msg, n_models, &gpus) {
                     Ok(()) => {
                         let to_rank = lift(msg, &gack_tx);
-                        if shard_txs[shard].send(to_rank).is_err() {
+                        if shard_tx.send(to_rank).is_err() {
                             break Err(crate::util::error::Error::msg(format!(
                                 "shard {shard} exited mid-session"
                             )));

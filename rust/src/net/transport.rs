@@ -21,9 +21,11 @@
 
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::relock;
 
 /// Maximum accepted frame payload length. Codec frames are tens of
 /// bytes; anything near this bound is a corrupt prefix or a foreign
@@ -84,6 +86,8 @@ impl<R: Read> FrameReader<R> {
 fn read_exact_or_eof<R: Read>(src: &mut R, buf: &mut [u8]) -> io::Result<bool> {
     let mut got = 0;
     while got < buf.len() {
+        // lint:allow(panic-free-wire-surface): `got < buf.len()` is the loop
+        // condition, so the range is in bounds by construction.
         match src.read(&mut buf[got..]) {
             Ok(0) if got == 0 => return Ok(false),
             Ok(0) => {
@@ -121,14 +125,14 @@ pub struct FrameSender {
 
 impl Clone for FrameSender {
     fn clone(&self) -> Self {
-        self.q.inner.lock().unwrap().senders += 1;
+        relock(&self.q.inner).senders += 1;
         FrameSender { q: self.q.clone() }
     }
 }
 
 impl Drop for FrameSender {
     fn drop(&mut self) {
-        let mut g = self.q.inner.lock().unwrap();
+        let mut g = relock(&self.q.inner);
         g.senders -= 1;
         if g.senders == 0 {
             g.closed = true;
@@ -139,13 +143,20 @@ impl Drop for FrameSender {
 
 impl FrameSender {
     /// Enqueue one encoded payload (length prefix added by the writer).
+    ///
+    /// The size assertion guards the *local* encoder's contract — every
+    /// payload here comes from `codec::encode_*`, never from the peer —
+    /// so a violation is a codec bug worth a loud stop, not a
+    /// wire-reachable panic.
     pub fn send(&self, frame: Vec<u8>) -> Result<(), WireClosed> {
+        // lint:allow(panic-free-wire-surface): asserts on locally encoded
+        // payloads (codec bug), not on peer-supplied input.
         assert!(
             !frame.is_empty() && frame.len() <= MAX_FRAME,
             "frame payload of {} bytes outside 1..={MAX_FRAME}",
             frame.len()
         );
-        let mut g = self.q.inner.lock().unwrap();
+        let mut g = relock(&self.q.inner);
         if g.closed {
             return Err(WireClosed);
         }
@@ -156,13 +167,13 @@ impl FrameSender {
 
     /// Close the queue: queued frames still flush, further sends fail.
     pub fn close(&self) {
-        let mut g = self.q.inner.lock().unwrap();
+        let mut g = relock(&self.q.inner);
         g.closed = true;
         self.q.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.q.inner.lock().unwrap().closed
+        relock(&self.q.inner).closed
     }
 }
 
@@ -179,8 +190,12 @@ pub struct WriterStats {
 /// The thread exits — flushing the remaining queue and shutting the write half
 /// down — when every sender is dropped or `close` is called; a write
 /// error also closes the queue so senders fail fast instead of piling
-/// frames onto a dead connection.
-pub fn spawn_writer(stream: TcpStream) -> (FrameSender, JoinHandle<io::Result<WriterStats>>) {
+/// frames onto a dead connection. Spawn failure (thread-resource
+/// exhaustion) is surfaced as an `io::Error`, like any other failure to
+/// set up a session.
+pub fn spawn_writer(
+    stream: TcpStream,
+) -> io::Result<(FrameSender, JoinHandle<io::Result<WriterStats>>)> {
     let q = Arc::new(FrameQueue {
         inner: Mutex::new(QueueInner {
             frames: Vec::new(),
@@ -192,9 +207,8 @@ pub fn spawn_writer(stream: TcpStream) -> (FrameSender, JoinHandle<io::Result<Wr
     let sender = FrameSender { q: q.clone() };
     let handle = std::thread::Builder::new()
         .name("wire-writer".into())
-        .spawn(move || write_loop(q, stream))
-        .expect("spawn wire writer");
-    (sender, handle)
+        .spawn(move || write_loop(q, stream))?;
+    Ok((sender, handle))
 }
 
 fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterStats> {
@@ -203,9 +217,9 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
     let mut out: Vec<u8> = Vec::new();
     loop {
         {
-            let mut g = q.inner.lock().unwrap();
+            let mut g = relock(&q.inner);
             while g.frames.is_empty() && !g.closed {
-                g = q.cv.wait(g).unwrap();
+                g = q.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
             }
             std::mem::swap(&mut g.frames, &mut batch);
             if batch.is_empty() && g.closed {
@@ -220,7 +234,7 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
             stats.frames += 1;
         }
         if let Err(e) = stream.write_all(&out) {
-            let mut g = q.inner.lock().unwrap();
+            let mut g = relock(&q.inner);
             g.closed = true;
             g.frames.clear();
             drop(g);
@@ -333,7 +347,7 @@ mod tests {
         });
         let stream = TcpStream::connect(addr).unwrap();
         stream.set_nodelay(true).unwrap();
-        let (tx, writer_h) = spawn_writer(stream);
+        let (tx, writer_h) = spawn_writer(stream).unwrap();
         let n = 512u32;
         let tx2 = tx.clone();
         for i in 0..n {
@@ -361,7 +375,7 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         let accept_h = std::thread::spawn(move || listener.accept().unwrap());
         let stream = TcpStream::connect(addr).unwrap();
-        let (tx, writer_h) = spawn_writer(stream);
+        let (tx, writer_h) = spawn_writer(stream).unwrap();
         tx.send(vec![1]).unwrap();
         tx.close();
         assert!(tx.is_closed());

@@ -145,6 +145,9 @@ impl DeferredScheduler {
     /// (Exposed `pub` for the float/int equivalence property tests; the
     /// hot path reaches it only through the per-model memo.)
     pub fn target_batch(profile: &LatencyProfile, slo: Micros, n: usize, max_batch: u32) -> u32 {
+        // lint:allow(float-free-hot-path): cold path — computed once per
+        // model and memoized; pinned against the integer reference by the
+        // float/int equivalence property tests.
         let budget = Micros((slo.0 as f64 / (1.0 + 1.0 / n.max(1) as f64)) as u64);
         let mut b_star = profile.max_batch_within(budget);
         if max_batch > 0 {
@@ -155,6 +158,7 @@ impl DeferredScheduler {
         if b_star <= 1 {
             return b_star;
         }
+        // lint:allow(float-free-hot-path): same memoized cold path as above.
         let goal = 0.9 * profile.throughput(b_star);
         for b in 1..b_star {
             if profile.throughput(b) >= goal {
@@ -207,8 +211,8 @@ impl DeferredScheduler {
             return;
         }
         let b = b as u32;
-        let frontrun = d.saturating_sub(profile.latency(b + 1) + slack);
-        let latest = d.saturating_sub(profile.latency(b) + slack);
+        let frontrun = d.saturating_sub(profile.latency(b + 1).saturating_add(slack));
+        let latest = d.saturating_sub(profile.latency(b).saturating_add(slack));
         let exec = frontrun.max(now);
         debug_assert!(exec <= latest, "window inverted: exec {exec:?} > latest {latest:?}");
 

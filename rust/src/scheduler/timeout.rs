@@ -110,7 +110,7 @@ impl TimeoutScheduler {
         }
         let b = plan.batch.len() as u32;
         let d = plan.deadline;
-        let latest = d.saturating_sub(st.profile.latency(b) + slack);
+        let latest = d.saturating_sub(st.profile.latency(b).saturating_add(slack));
         let a = st.queue.head_arrival().unwrap();
         // Timeout semantics: wait until `a + k` unless the batch already
         // hit its cap (TF-Serving's second trigger).
@@ -118,12 +118,12 @@ impl TimeoutScheduler {
             self.cfg.max_batch
         } else {
             st.profile
-                .max_batch_within(d.saturating_sub(now + slack))
+                .max_batch_within(d.saturating_sub(now.saturating_add(slack)))
         };
         let exec = if b >= cap {
             now
         } else {
-            (a + self.cfg.timeout).max(now)
+            a.saturating_add(self.cfg.timeout).max(now)
         };
         let cand = Candidate {
             exec,

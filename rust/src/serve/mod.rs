@@ -654,7 +654,7 @@ fn pjrt_executor(
                 let inputs = vec![0.5f32; n as usize * input_len];
                 let t0 = clock.now();
                 let ok = rt.execute(n, &inputs).is_ok();
-                let elapsed = clock.now() - t0;
+                let elapsed = clock.now().saturating_sub(t0);
                 if ok {
                     let _ = comp.send(Completion::Batch {
                         gpu,

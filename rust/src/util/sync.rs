@@ -1,0 +1,35 @@
+//! Small synchronization helpers.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if the mutex is poisoned.
+///
+/// Poisoning means some other thread panicked while holding the guard.
+/// For the state these mutexes protect (wire writer handles, ack
+/// routing tables, pending-frame queues) the data is still structurally
+/// valid after a panic, and propagating the poison would turn one dead
+/// session thread into a process-wide cascade — the exact failure mode
+/// the wire surface is designed to contain. Recovering is therefore the
+/// deliberate policy, not a convenience.
+pub fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn relock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*relock(&m), 7);
+    }
+}

@@ -1,0 +1,603 @@
+//! Fixture self-tests for every `symphony lint` rule.
+//!
+//! Each rule gets three kinds of coverage:
+//! - a **bad** snippet that must be flagged, with the expected line
+//!   asserted (found by content, so fixtures can be edited without
+//!   recounting lines);
+//! - a **near-miss** that exercises the rule's documented exemptions
+//!   and must stay silent;
+//! - a **suppression round-trip**: a reasoned `lint:allow` silences
+//!   the finding, a bare one does not — and is itself reported.
+//!
+//! The final test, `lint_tree_is_clean`, is the tier-1 guard: the
+//! checked-in `rust/src` tree must lint clean, which is exactly what
+//! the CI gate (`symphony lint`) enforces.
+
+use symphony::lint::{lint_sources, Finding};
+
+/// 1-based line of the first fixture line containing `needle`.
+fn line_of(src: &str, needle: &str) -> usize {
+    src.lines()
+        .position(|l| l.contains(needle))
+        .unwrap_or_else(|| panic!("fixture needle not found: {needle}"))
+        + 1
+}
+
+fn only(path: &str, src: &str, rule: &str) -> Vec<Finding> {
+    lint_sources(&[(path, src)], Some(rule))
+}
+
+fn assert_flagged(findings: &[Finding], rule: &str, line: usize) {
+    assert!(
+        findings.iter().any(|f| f.rule == rule && f.line == line),
+        "expected a `{rule}` finding on line {line}, got:\n{}",
+        render(findings)
+    );
+}
+
+fn render(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| f.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+// ---------------------------------------------------------------- micros
+
+const MICROS_RULE: &str = "unchecked-micros-arith";
+
+const MICROS_BAD: &str = r#"
+use crate::core::time::Micros;
+
+pub fn slack(deadline: Micros, now: Micros) -> Micros {
+    deadline - now
+}
+
+pub fn advance(busy_until: &mut Micros, exec: Micros) {
+    *busy_until += exec;
+}
+"#;
+
+#[test]
+fn micros_arith_flags_bare_ops() {
+    let f = only("coordinator/hotpath.rs", MICROS_BAD, MICROS_RULE);
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, MICROS_RULE, line_of(MICROS_BAD, "deadline - now"));
+    assert_flagged(&f, MICROS_RULE, line_of(MICROS_BAD, "busy_until += exec"));
+    assert!(f[0].message.contains("saturating_sub"), "{}", f[0]);
+    assert!(f[1].message.contains("saturating_add"), "{}", f[1]);
+}
+
+#[test]
+fn micros_arith_is_scoped_to_serving_path_files() {
+    // Same source under a sim/harness path: outside the target list.
+    let f = only("sim/workload.rs", MICROS_BAD, MICROS_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const MICROS_NEAR: &str = r#"
+use std::time::{Duration, Instant};
+
+pub struct Window { pub last: Micros }
+
+pub fn wake(timeout: Duration) -> Instant {
+    Instant::now() + timeout
+}
+
+pub fn seen_since(w: &Window, good: u64) -> u64 {
+    good - w.last.0
+}
+
+pub fn width(total: u64, done: u64) -> u64 {
+    total - done
+}
+"#;
+
+#[test]
+fn micros_arith_ignores_std_time_and_tuple_payloads() {
+    // `Instant::now() + timeout` is std-time arithmetic; `w.last.0` is
+    // the u64 *inside* a Micros field, not a Micros; `total - done`
+    // involves no time names at all.
+    let f = only("coordinator/hotpath.rs", MICROS_NEAR, MICROS_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const MICROS_ALLOW_OK: &str = r#"
+use crate::core::time::Micros;
+
+pub fn lag(now: Micros, arrival: Micros) -> Micros {
+    // lint:allow(unchecked-micros-arith): fixture: the caller pins arrival <= now
+    now - arrival
+}
+"#;
+
+const MICROS_ALLOW_BARE: &str = r#"
+use crate::core::time::Micros;
+
+pub fn lag(now: Micros, arrival: Micros) -> Micros {
+    // lint:allow(unchecked-micros-arith)
+    now - arrival
+}
+"#;
+
+#[test]
+fn micros_arith_suppression_round_trip() {
+    let ok = lint_sources(&[("coordinator/hotpath.rs", MICROS_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("coordinator/hotpath.rs", MICROS_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(MICROS_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, MICROS_RULE, line_of(MICROS_ALLOW_BARE, "now - arrival"));
+}
+
+// ----------------------------------------------------------------- float
+
+const FLOAT_RULE: &str = "float-free-hot-path";
+
+const FLOAT_BAD: &str = r#"
+pub fn target_batch(slo_us: u64) -> u64 {
+    let goal = 0.9 * slo_us as f64;
+    goal as u64
+}
+"#;
+
+#[test]
+fn float_free_flags_integer_signature_fn() {
+    let f = only("scheduler/deferred.rs", FLOAT_BAD, FLOAT_RULE);
+    // Both the `0.9` literal and the `f64` cast token are findings.
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    let line = line_of(FLOAT_BAD, "let goal");
+    assert!(f.iter().all(|x| x.rule == FLOAT_RULE && x.line == line));
+    assert!(f[0].message.contains("target_batch"), "{}", f[0]);
+}
+
+const FLOAT_NEAR: &str = r#"
+pub const ALPHA: f64 = 0.2;
+
+pub fn throughput(batch: u64, window_s: f64) -> f64 {
+    batch as f64 / window_s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn floats_fine_here() {
+        let x = 1.5_f64;
+        assert!(x > 1.0);
+    }
+}
+"#;
+
+#[test]
+fn float_free_ignores_float_signatures_items_and_tests() {
+    let f = only("scheduler/deferred.rs", FLOAT_NEAR, FLOAT_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const FLOAT_ALLOW_OK: &str = r#"
+pub fn target_batch(slo_us: u64) -> u64 {
+    // lint:allow(float-free-hot-path): fixture: memoized cold path pinned by property tests
+    let goal = 0.9 * slo_us as f64;
+    goal as u64
+}
+"#;
+
+const FLOAT_ALLOW_BARE: &str = r#"
+pub fn target_batch(slo_us: u64) -> u64 {
+    // lint:allow(float-free-hot-path)
+    let goal = 0.9 * slo_us as f64;
+    goal as u64
+}
+"#;
+
+#[test]
+fn float_free_suppression_round_trip() {
+    let ok = lint_sources(&[("scheduler/deferred.rs", FLOAT_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("scheduler/deferred.rs", FLOAT_ALLOW_BARE)], None);
+    // One suppression finding; the two float findings survive unsuppressed.
+    assert_eq!(bare.len(), 3, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(FLOAT_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, FLOAT_RULE, line_of(FLOAT_ALLOW_BARE, "let goal"));
+}
+
+// ----------------------------------------------------------------- drift
+
+const DRIFT_RULE: &str = "wire-schema-drift";
+
+const DRIFT_MESSAGES: &str = r#"
+use std::sync::mpsc::Sender;
+
+pub enum ToModel {
+    Request(Request),
+    Requests { model: ModelId },
+    Granted { model: ModelId, gpu: GpuId },
+    Revalidate { model: ModelId },
+    Shutdown,
+}
+
+pub enum ToRank {
+    Candidate { model: ModelId, seq: u64 },
+    Drain { gpu: GpuId, ack: Sender<GpuId> },
+    Shutdown,
+}
+"#;
+
+const DRIFT_CODEC_OK: &str = r#"
+pub enum WireToRank {
+    Candidate { model: ModelId, seq: u64 },
+    Drain { gpu: GpuId },
+}
+
+pub enum WireFromRank {
+    Granted { model: ModelId, gpu: GpuId },
+    Revalidate { model: ModelId },
+    DrainAck { gpu: GpuId },
+}
+
+pub fn encode_up(m: &WireToRank, out: &mut Vec<u8>) {
+    match m {
+        WireToRank::Candidate { .. } => out.push(1),
+        WireToRank::Drain { .. } => out.push(2),
+    }
+}
+
+pub fn decode_up(tag: u8) -> Option<WireToRank> {
+    match tag {
+        1 => Some(WireToRank::Candidate { model: 0, seq: 0 }),
+        2 => Some(WireToRank::Drain { gpu: 0 }),
+        _ => None,
+    }
+}
+
+pub fn encode_down(m: &WireFromRank, out: &mut Vec<u8>) {
+    match m {
+        WireFromRank::Granted { .. } => out.push(1),
+        WireFromRank::Revalidate { .. } => out.push(2),
+        WireFromRank::DrainAck { .. } => out.push(3),
+    }
+}
+
+pub fn decode_down(tag: u8) -> Option<WireFromRank> {
+    match tag {
+        1 => Some(WireFromRank::Granted { model: 0, gpu: 0 }),
+        2 => Some(WireFromRank::Revalidate { model: 0 }),
+        3 => Some(WireFromRank::DrainAck { gpu: 0 }),
+        _ => None,
+    }
+}
+"#;
+
+fn drift(codec: &str) -> Vec<Finding> {
+    lint_sources(
+        &[
+            ("coordinator/messages.rs", DRIFT_MESSAGES),
+            ("net/codec.rs", codec),
+        ],
+        Some(DRIFT_RULE),
+    )
+}
+
+#[test]
+fn wire_drift_clean_pair_is_silent() {
+    let f = drift(DRIFT_CODEC_OK);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+#[test]
+fn wire_drift_flags_missing_wire_variant() {
+    let bad = DRIFT_CODEC_OK.replace("    Drain { gpu: GpuId },\n", "");
+    assert_ne!(bad, DRIFT_CODEC_OK);
+    let f = drift(&bad);
+    assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
+    assert_flagged(&f, DRIFT_RULE, line_of(&bad, "pub enum WireToRank"));
+    assert!(f[0].message.contains("missing `Drain`"), "{}", f[0]);
+}
+
+#[test]
+fn wire_drift_flags_missing_decode_arm() {
+    let bad = DRIFT_CODEC_OK
+        .replace("        2 => Some(WireFromRank::Revalidate { model: 0 }),\n", "");
+    assert_ne!(bad, DRIFT_CODEC_OK);
+    let f = drift(&bad);
+    assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
+    assert_flagged(&f, DRIFT_RULE, line_of(&bad, "pub fn decode_down"));
+    assert!(
+        f[0].message.contains("decode_down") && f[0].message.contains("Revalidate"),
+        "{}",
+        f[0]
+    );
+}
+
+#[test]
+fn wire_drift_flags_field_drift() {
+    let bad = DRIFT_CODEC_OK.replace(
+        "Candidate { model: ModelId, seq: u64 },",
+        "Candidate { model: ModelId, sequence: u64 },",
+    );
+    assert_ne!(bad, DRIFT_CODEC_OK);
+    let f = drift(&bad);
+    assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
+    assert_flagged(&f, DRIFT_RULE, line_of(&bad, "pub enum WireToRank"));
+    assert!(f[0].message.contains("drift from"), "{}", f[0]);
+}
+
+#[test]
+fn wire_drift_suppression_round_trip() {
+    let missing = DRIFT_CODEC_OK.replace("    Drain { gpu: GpuId },\n", "");
+    let ok = missing.replace(
+        "pub enum WireToRank {",
+        "// lint:allow(wire-schema-drift): fixture: variant staged for the next frame-format bump\n\
+         pub enum WireToRank {",
+    );
+    let f = drift(&ok);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+
+    let bare = missing.replace(
+        "pub enum WireToRank {",
+        "// lint:allow(wire-schema-drift)\npub enum WireToRank {",
+    );
+    let f = lint_sources(
+        &[
+            ("coordinator/messages.rs", DRIFT_MESSAGES),
+            ("net/codec.rs", bare.as_str()),
+        ],
+        None,
+    );
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, "suppression", line_of(&bare, "lint:allow"));
+    assert_flagged(&f, DRIFT_RULE, line_of(&bare, "pub enum WireToRank"));
+}
+
+// ----------------------------------------------------------------- panic
+
+const PANIC_RULE: &str = "panic-free-wire-surface";
+
+const PANIC_BAD: &str = r#"
+pub fn parse(frame: &[u8]) -> u32 {
+    let tag = frame[0];
+    let len = frame.last().unwrap();
+    u32::from(tag) * u32::from(*len)
+}
+"#;
+
+#[test]
+fn panic_free_flags_unwrap_and_index() {
+    let f = only("net/server.rs", PANIC_BAD, PANIC_RULE);
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, PANIC_RULE, line_of(PANIC_BAD, "frame[0]"));
+    assert_flagged(&f, PANIC_RULE, line_of(PANIC_BAD, ".unwrap()"));
+}
+
+const PANIC_NEAR_SERVER: &str = r#"
+pub fn read_tag(buf: &[u8]) -> Option<u8> {
+    debug_assert!(!buf.is_empty());
+    let _scratch = [0u8; 4];
+    buf.get(0).copied()
+}
+"#;
+
+const PANIC_NEAR_CODEC: &str = r#"
+pub fn encode_hello(out: &mut Vec<u8>) {
+    out[0] = 7;
+}
+"#;
+
+#[test]
+fn panic_free_ignores_debug_assert_arrays_and_encode_half() {
+    // debug_assert! compiles out of release; `[0u8; 4]` is an array
+    // literal, not an index; `.get()` is the sanctioned access; and the
+    // encode half of codec.rs takes process-local input.
+    let f = lint_sources(
+        &[
+            ("net/server.rs", PANIC_NEAR_SERVER),
+            ("net/codec.rs", PANIC_NEAR_CODEC),
+        ],
+        Some(PANIC_RULE),
+    );
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const PANIC_ALLOW_OK: &str = r#"
+pub fn read_tag(buf: &[u8]) -> u8 {
+    buf[0] // lint:allow(panic-free-wire-surface): fixture: caller verified len >= 1
+}
+"#;
+
+const PANIC_ALLOW_BARE: &str = r#"
+pub fn read_tag(buf: &[u8]) -> u8 {
+    buf[0] // lint:allow(panic-free-wire-surface)
+}
+"#;
+
+#[test]
+fn panic_free_suppression_round_trip() {
+    // Trailing form: the allow shares the offending line.
+    let ok = lint_sources(&[("net/server.rs", PANIC_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("net/server.rs", PANIC_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    let line = line_of(PANIC_ALLOW_BARE, "buf[0]");
+    assert_flagged(&bare, "suppression", line);
+    assert_flagged(&bare, PANIC_RULE, line);
+}
+
+// ------------------------------------------------------------------ lock
+
+const LOCK_RULE: &str = "lock-across-send";
+
+const LOCK_BAD: &str = r#"
+use std::sync::{mpsc::Receiver, Mutex};
+use std::thread::JoinHandle;
+
+pub struct Pool {
+    handle: Mutex<Option<JoinHandle<()>>>,
+    depth: Mutex<u64>,
+}
+
+impl Pool {
+    pub fn shutdown(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn drain(&self, rx: &Receiver<u64>) -> u64 {
+        let g = self.depth.lock().unwrap();
+        let seed = *g;
+        rx.recv().unwrap_or(seed)
+    }
+
+    pub fn publish(&self, tx: &std::sync::mpsc::Sender<u64>) {
+        let g = relock(&self.depth);
+        let v = *g;
+        let _ = tx.send(v);
+    }
+}
+"#;
+
+#[test]
+fn lock_send_flags_scrutinee_binding_and_relock_guards() {
+    let f = only("coordinator/pool.rs", LOCK_BAD, LOCK_RULE);
+    assert_eq!(f.len(), 3, "findings:\n{}", render(&f));
+    // Edition-2021 scrutinee temporary: the guard lives through the
+    // whole `if let` body, so the join runs with the mutex held.
+    assert_flagged(&f, LOCK_RULE, line_of(LOCK_BAD, "self.handle.lock()"));
+    // Named guard binding still in scope across `.recv()`.
+    assert_flagged(&f, LOCK_RULE, line_of(LOCK_BAD, "self.depth.lock()"));
+    // The relock() helper produces a guard too.
+    assert_flagged(&f, LOCK_RULE, line_of(LOCK_BAD, "relock(&self.depth)"));
+}
+
+const LOCK_NEAR: &str = r#"
+impl Pool {
+    pub fn shutdown_hoisted(&self) {
+        let joiner = self.handle.lock().unwrap().take();
+        if let Some(h) = joiner {
+            let _ = h.join();
+        }
+    }
+
+    pub fn publish(&self, tx: &std::sync::mpsc::Sender<u64>) {
+        let g = self.depth.lock().unwrap();
+        let v = *g;
+        drop(g);
+        let _ = tx.send(v);
+    }
+
+    pub fn peek(&self) -> u64 {
+        let Ok(g) = self.depth.lock() else { return 0 };
+        *g
+    }
+}
+"#;
+
+#[test]
+fn lock_send_ignores_hoisted_dropped_and_let_else_guards() {
+    // Hoisting `.take()` into its own statement, `drop(g)` before the
+    // send, and `let .. else` (whose scrutinee temporaries drop at the
+    // statement end) are all the sanctioned shapes.
+    let f = only("coordinator/pool.rs", LOCK_NEAR, LOCK_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const LOCK_ALLOW_OK: &str = r#"
+impl Pool {
+    pub fn shutdown(&self) {
+        // lint:allow(lock-across-send): fixture: the joined thread never takes this mutex
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+"#;
+
+const LOCK_ALLOW_BARE: &str = r#"
+impl Pool {
+    pub fn shutdown(&self) {
+        // lint:allow(lock-across-send)
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+"#;
+
+#[test]
+fn lock_send_suppression_round_trip() {
+    let ok = lint_sources(&[("coordinator/pool.rs", LOCK_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("coordinator/pool.rs", LOCK_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(LOCK_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, LOCK_RULE, line_of(LOCK_ALLOW_BARE, "self.handle.lock()"));
+}
+
+// ---------------------------------------------------------- suppressions
+
+const HYGIENE: &str = r#"
+// lint:allow(not-a-rule): confidently wrong
+pub fn a() {}
+
+// lint:allow missing the parenthesized rule entirely
+pub fn b() {}
+"#;
+
+#[test]
+fn suppression_hygiene_unknown_and_malformed() {
+    let f = lint_sources(&[("util/misc.rs", HYGIENE)], None);
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, "suppression", line_of(HYGIENE, "not-a-rule"));
+    assert!(f[0].message.contains("unknown rule"), "{}", f[0]);
+    assert_flagged(&f, "suppression", line_of(HYGIENE, "missing the parenthesized"));
+    assert!(f[1].message.contains("malformed"), "{}", f[1]);
+}
+
+const WRONG_RULE: &str = r#"
+pub fn parse(frame: &[u8]) -> u8 {
+    frame[0] // lint:allow(unchecked-micros-arith): names the wrong rule on purpose
+}
+"#;
+
+#[test]
+fn suppression_for_another_rule_does_not_suppress() {
+    let f = lint_sources(&[("net/server.rs", WRONG_RULE)], None);
+    assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
+    assert_flagged(&f, PANIC_RULE, line_of(WRONG_RULE, "frame[0]"));
+}
+
+#[test]
+fn rule_registry_is_complete() {
+    let names = symphony::lint::rule_names();
+    for expected in [
+        DRIFT_RULE,
+        FLOAT_RULE,
+        MICROS_RULE,
+        PANIC_RULE,
+        LOCK_RULE,
+        "suppression",
+    ] {
+        assert!(names.contains(&expected), "missing rule `{expected}` in {names:?}");
+    }
+}
+
+// ----------------------------------------------------------- tier-1 gate
+
+/// The checked-in tree must lint clean — the in-process mirror of the
+/// CI `symphony lint` gate, so a regression fails `cargo test` locally
+/// before it ever reaches CI.
+#[test]
+fn lint_tree_is_clean() {
+    let root = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    let findings = symphony::lint::run(root, None).expect("walk rust/src");
+    assert!(
+        findings.is_empty(),
+        "lint findings on the checked-in tree:\n{}",
+        render(&findings)
+    );
+}
