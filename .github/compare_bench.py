@@ -1,13 +1,14 @@
 #!/usr/bin/env python3
 """Compare two bench JSON files (BENCH_hotpath.json, BENCH_frontend.json,
-...) and emit GitHub warnings (never fail) when a `*_per_sec` metric
-regresses more than 30% against the checked-in baseline.
+...) and FAIL (exit nonzero, `::error` annotations) when a `*_per_sec`
+metric regresses more than 30% against a non-empty checked-in baseline.
 Usage: compare_bench.py <baseline.json> <new.json>.
 
-An empty or missing baseline is announced explicitly (the trajectory is
-being seeded by this run); metrics present in the new results but absent
-from the baseline — a freshly added bench — are reported as
-informational rather than silently skipped."""
+An empty or missing baseline is announced explicitly and stays
+informational (the trajectory is being seeded by this run); metrics
+present in the new results but absent from the baseline — a freshly
+added bench — are reported as informational rather than silently
+skipped."""
 
 import json
 import os
@@ -48,7 +49,7 @@ def main():
             regressed += 1
             drop = 100.0 * (1.0 - cur / old)
             print(
-                f"::warning title={name} regression::"
+                f"::error title={name} regression::"
                 f"{key}: {old:.0f} -> {cur:.0f} events/sec (-{drop:.0f}%)"
             )
     fresh = sorted(k for k in new if k.endswith("_per_sec") and k not in base)
@@ -59,7 +60,9 @@ def main():
             f"no comparison until committed): {shown}"
         )
     print(f"bench comparison ({name}): {checked} metrics checked, {regressed} regressed >30%")
-    return 0
+    # A populated baseline is a contract: regressing past the threshold
+    # fails the job (seeding runs above return 0 before reaching here).
+    return 1 if regressed else 0
 
 
 if __name__ == "__main__":

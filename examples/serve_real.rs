@@ -78,6 +78,8 @@ fn main() {
             artifacts_dir: dir,
         },
         autoscale: None,
+        busy_poll: false,
+        pin_cores: false,
         seed: 42,
     })
     .expect("serving run");

@@ -1,7 +1,9 @@
 //! `cargo bench --bench bench_hotpath` — microbenchmarks of the hot
 //! paths (§Perf): a scheduler-only throughput sweep (models × arrival
 //! gaps), discrete-event engine event rate, integer vs seed-float
-//! candidate-window math, and the RNG. Results print as a table, mirror
+//! candidate-window math, the RNG, and a `ring_vs_mpsc` inter-thread
+//! hop probe (the lock-free fabric's before/after). Results print as a
+//! table, mirror
 //! to `results/bench_hotpath.tsv`, and are written machine-readable to
 //! `BENCH_hotpath.json` at the repo root — the perf trajectory the
 //! EXPERIMENTS.md §Perf iteration log and the CI regression check track.
@@ -16,6 +18,7 @@ use symphony::core::types::{GpuId, ModelId, Request, RequestId};
 use symphony::harness::{GoodputExperiment, SystemKind};
 use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
 use symphony::scheduler::Scheduler;
+use symphony::util::ring::ring;
 use symphony::util::rng::Rng;
 use symphony::util::table::{banner, Table};
 
@@ -182,8 +185,77 @@ fn main() {
         json.push(("rng_exp_samples_per_sec".to_string(), ops));
     }
 
+    // 5. Inter-thread hop rate — the `ring_vs_mpsc` probe: one producer
+    //    thread pushing u64s through the seed's `std::sync::mpsc`
+    //    channel vs the bounded lock-free ring (parking drain, then
+    //    busy-polling). This is the per-hop cost every submit → grant
+    //    message pays on the fabric, recorded with every run as the
+    //    tentpole's before/after evidence.
+    {
+        let n = 4_000_000u64;
+        let hop_mpsc = {
+            let (tx, rx) = std::sync::mpsc::channel::<u64>();
+            hop_run(n, move |i| tx.send(i).is_ok(), move || rx.recv().ok())
+        };
+        let hop_ring = |busy_poll: bool| {
+            let (tx, rx) = ring::<u64>(4096);
+            rx.set_busy_poll(busy_poll);
+            hop_run(n, move |i| tx.send(i).is_ok(), move || rx.recv().ok())
+        };
+        let hop_park = hop_ring(false);
+        let hop_spin = hop_ring(true);
+        let speedup = hop_park.max(hop_spin) / hop_mpsc.max(1.0);
+        for (name, v) in [
+            ("hop_mpsc", hop_mpsc),
+            ("hop_ring_park", hop_park),
+            ("hop_ring_spin", hop_spin),
+        ] {
+            table.row(vec![
+                name.to_string(),
+                "msgs_per_sec".to_string(),
+                format!("{v:.0}"),
+            ]);
+            json.push((format!("{name}_per_sec"), v));
+        }
+        table.row(vec![
+            "ring_vs_mpsc".to_string(),
+            "speedup".to_string(),
+            format!("{speedup:.2}"),
+        ]);
+        json.push(("ring_vs_mpsc_speedup".to_string(), speedup));
+    }
+
     table.emit("bench_hotpath");
     write_json(&json);
+}
+
+/// One producer thread pushing `0..n` through `send` while this thread
+/// drains with `recv`; returns messages/second over the whole hop.
+fn hop_run(
+    n: u64,
+    send: impl Fn(u64) -> bool + Send + 'static,
+    recv: impl FnMut() -> Option<u64>,
+) -> f64 {
+    let t0 = Instant::now();
+    let producer = std::thread::spawn(move || {
+        for i in 0..n {
+            if !send(i) {
+                break;
+            }
+        }
+    });
+    let mut recv = recv;
+    let mut acc = 0u64;
+    for _ in 0..n {
+        match recv() {
+            Some(v) => acc = acc.wrapping_add(v),
+            None => break,
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    producer.join().expect("hop producer");
+    assert!(acc > 0, "hop bench must move data");
+    n as f64 / secs
 }
 
 /// Hand-rolled JSON (zero registry deps): `{"bench": ..., "results":

@@ -24,7 +24,6 @@
 use std::fmt::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::AtomicU64;
-use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -36,6 +35,7 @@ use symphony::net::client::RemoteRank;
 use symphony::net::codec::{self, WireToRank};
 use symphony::net::server::{RankServer, RankServerConfig};
 use symphony::net::transport::{spawn_writer, FrameReader};
+use symphony::util::ring::ring;
 use symphony::util::stats::percentile;
 use symphony::util::table::{banner, Table};
 
@@ -109,6 +109,8 @@ fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
         shards: 1,
         gpus: 0..1,
         max_sessions: Some(1),
+        busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
+        pin_cores: false,
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();
@@ -118,7 +120,7 @@ fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
     let conn = Arc::new(
         RemoteRank::connect(&addr, 1, clock, Duration::from_secs(5)).expect("connect"),
     );
-    let (model_tx, model_rx) = channel::<ToModel>();
+    let (model_tx, model_rx) = ring::<ToModel>(1024);
     conn.start_reader(vec![model_tx], 0, Arc::new(AtomicU64::new(0)));
 
     let mut rtts_us: Vec<f64> = Vec::with_capacity(rounds);

@@ -72,6 +72,8 @@ fn coordinator_sweep(
             net_bound: Micros::ZERO,
             exec_margin: Micros::ZERO,
             remote_ranks: Vec::new(),
+            busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
+            pin_cores: std::env::var_os("SYMPHONY_PIN_CORES").is_some(),
         },
         backend_txs.clone(),
         comp_tx,

@@ -209,6 +209,8 @@ mod tests {
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
                 remote_ranks: Vec::new(),
+                busy_poll: false,
+                pin_cores: false,
             },
             backend_txs,
             comp_tx,
@@ -278,6 +280,8 @@ mod tests {
                 net_bound: Micros::ZERO,
                 exec_margin: Micros::ZERO,
                 remote_ranks: Vec::new(),
+                busy_poll: false,
+                pin_cores: false,
             },
             vec![backend_tx],
             comp_tx,

@@ -19,13 +19,14 @@
 //! `ServeReport::dropped_submits`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::messages::ToModel;
-use crate::coordinator::MAX_DRAIN;
+use crate::coordinator::{INGEST_RING_DEPTH, MAX_DRAIN};
 use crate::core::types::{ModelId, ReqBurst, Request};
+use crate::util::affinity::{self, CorePlan};
+use crate::util::ring::{ring, RingReceiver, RingSender, TryRecvError};
 
 /// Producer → ingest shard.
 #[derive(Debug)]
@@ -43,9 +44,9 @@ pub enum ToIngest {
 /// One ingest shard: drains producer submissions in bursts and
 /// forwards per-model `ToModel::Requests` bursts.
 pub(crate) struct IngestShard {
-    pub inbox: Receiver<ToIngest>,
+    pub inbox: RingReceiver<ToIngest>,
     /// One sender per model (clones of the owning worker's inbox).
-    pub model_txs: Vec<Sender<ToModel>>,
+    pub model_txs: Vec<RingSender<ToModel>>,
     /// Shared dropped-submission counter (see module docs).
     pub dropped: Arc<AtomicU64>,
 }
@@ -55,7 +56,7 @@ impl IngestShard {
     /// plus the inbox, so [`IngestTier::shutdown_join`] can count any
     /// submission accepted after the final drain instead of letting it
     /// vanish with the receiver.
-    pub fn run(self) -> (u64, Receiver<ToIngest>) {
+    pub fn run(self) -> (u64, RingReceiver<ToIngest>) {
         let IngestShard {
             inbox,
             model_txs,
@@ -140,7 +141,11 @@ impl IngestShard {
                     model: ModelId(mi as u32),
                     burst: Box::new(burst),
                 };
-                if model_txs[mi].send(msg).is_err() {
+                // Full-queue policy (request-rate traffic): a worker
+                // inbox with no room sheds the burst into the dropped
+                // count — under overload the bounded ring is the shed
+                // point, never a silent loss.
+                if model_txs[mi].try_send(msg).is_err() {
                     dropped.fetch_add(n, Ordering::Relaxed);
                 } else {
                     forwarded += n;
@@ -156,8 +161,8 @@ impl IngestShard {
 
 /// Coordinator-side ownership of the spawned ingest shards.
 pub(crate) struct IngestTier {
-    pub txs: Vec<Sender<ToIngest>>,
-    pub handles: Vec<JoinHandle<(u64, Receiver<ToIngest>)>>,
+    pub txs: Vec<RingSender<ToIngest>>,
+    pub handles: Vec<JoinHandle<(u64, RingReceiver<ToIngest>)>>,
     /// Round-robin allocator for handing shards to new handles.
     pub next: Arc<AtomicUsize>,
     pub dropped: Arc<AtomicU64>,
@@ -166,24 +171,31 @@ pub(crate) struct IngestTier {
 impl IngestTier {
     pub fn spawn(
         shards: usize,
-        model_txs: Vec<Sender<ToModel>>,
+        model_txs: Vec<RingSender<ToModel>>,
         dropped: Arc<AtomicU64>,
+        busy_poll: bool,
+        cores: &mut CorePlan,
     ) -> Self {
         let shards = shards.max(1);
         let mut txs = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for s in 0..shards {
-            let (tx, rx) = std::sync::mpsc::channel::<ToIngest>();
+            let (tx, rx) = ring::<ToIngest>(INGEST_RING_DEPTH);
+            rx.set_busy_poll(busy_poll);
             txs.push(tx);
             let shard = IngestShard {
                 inbox: rx,
                 model_txs: model_txs.clone(),
                 dropped: dropped.clone(),
             };
+            let core = cores.assign();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("ingest-shard-{s}"))
-                    .spawn(move || shard.run())
+                    .spawn(move || {
+                        affinity::pin(core);
+                        shard.run()
+                    })
                     .expect("spawn ingest shard"),
             );
         }
@@ -237,7 +249,7 @@ impl IngestTier {
 /// pool of producer threads that clones one handle per thread spreads
 /// evenly across the `F` shards.
 pub struct IngestHandle {
-    txs: Vec<Sender<ToIngest>>,
+    txs: Vec<RingSender<ToIngest>>,
     shard: usize,
     next: Arc<AtomicUsize>,
     dropped: Arc<AtomicU64>,
@@ -261,23 +273,26 @@ impl IngestHandle {
         self.shard
     }
 
-    /// Submit one request. Undeliverable submissions are counted (see
-    /// module docs), never silently lost.
+    /// Submit one request. Full-queue policy (request-rate traffic): an
+    /// ingest ring with no room — or a dead shard — counts the
+    /// submission into `dropped_submits`, never a silent loss.
     pub fn submit(&self, r: Request) {
-        if self.txs[self.shard].send(ToIngest::One(r)).is_err() {
+        if self.txs[self.shard].try_send(ToIngest::One(r)).is_err() {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Submit a batch (possibly mixed-model) as **one** channel send;
-    /// the shard re-bins it per model and forwards one burst per model.
+    /// Submit a batch (possibly mixed-model) as **one** ring send; the
+    /// shard re-bins it per model and forwards one burst per model.
+    /// Same full-queue policy as [`IngestHandle::submit`]: a full ring
+    /// sheds the whole batch into the dropped count.
     pub fn submit_batch(&self, reqs: &[Request]) {
         if reqs.is_empty() {
             return;
         }
         let n = reqs.len() as u64;
         let msg = ToIngest::Batch(Box::new(ReqBurst::from_slice(reqs)));
-        if self.txs[self.shard].send(msg).is_err() {
+        if self.txs[self.shard].try_send(msg).is_err() {
             self.dropped.fetch_add(n, Ordering::Relaxed);
         }
     }
@@ -286,9 +301,9 @@ impl IngestHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::IDLE_RECV_TIMEOUT;
     use crate::core::time::Micros;
     use crate::core::types::RequestId;
-    use std::sync::mpsc::channel;
     use std::time::Duration;
 
     fn req(id: u64, model: u32) -> Request {
@@ -305,12 +320,18 @@ mod tests {
     #[test]
     fn shard_bins_batch_per_model() {
         let dropped = Arc::new(AtomicU64::new(0));
-        let (m0_tx, m0_rx) = channel();
-        let (m1_tx, m1_rx) = channel();
-        let tier = IngestTier::spawn(1, vec![m0_tx, m1_tx], dropped.clone());
+        let (m0_tx, m0_rx) = ring::<ToModel>(64);
+        let (m1_tx, m1_rx) = ring::<ToModel>(64);
+        let tier = IngestTier::spawn(
+            1,
+            vec![m0_tx, m1_tx],
+            dropped.clone(),
+            false,
+            &mut CorePlan::disabled(),
+        );
         let h = tier.handle();
         h.submit_batch(&[req(0, 0), req(1, 1), req(2, 0), req(3, 1), req(4, 0)]);
-        let msg = m0_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        let msg = m0_rx.recv_timeout(IDLE_RECV_TIMEOUT).unwrap();
         match msg {
             ToModel::Requests { model, burst } => {
                 assert_eq!(model, ModelId(0));
@@ -319,7 +340,7 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        let msg = m1_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        let msg = m1_rx.recv_timeout(IDLE_RECV_TIMEOUT).unwrap();
         match msg {
             ToModel::Requests { model, burst } => {
                 assert_eq!(model, ModelId(1));
@@ -336,9 +357,15 @@ mod tests {
     #[test]
     fn dead_worker_submissions_are_counted() {
         let dropped = Arc::new(AtomicU64::new(0));
-        let (m0_tx, m0_rx) = channel::<ToModel>();
+        let (m0_tx, m0_rx) = ring::<ToModel>(64);
         drop(m0_rx); // the worker died
-        let mut tier = IngestTier::spawn(1, vec![m0_tx], dropped.clone());
+        let mut tier = IngestTier::spawn(
+            1,
+            vec![m0_tx],
+            dropped.clone(),
+            false,
+            &mut CorePlan::disabled(),
+        );
         let h = tier.handle();
         h.submit(req(0, 0));
         h.submit_batch(&[req(1, 0), req(2, 0)]);
@@ -352,8 +379,8 @@ mod tests {
     #[test]
     fn handle_clones_spread_across_shards() {
         let dropped = Arc::new(AtomicU64::new(0));
-        let (m0_tx, _m0_rx) = channel();
-        let mut tier = IngestTier::spawn(3, vec![m0_tx], dropped);
+        let (m0_tx, _m0_rx) = ring::<ToModel>(64);
+        let mut tier = IngestTier::spawn(3, vec![m0_tx], dropped, false, &mut CorePlan::disabled());
         let h0 = tier.handle();
         let h1 = h0.clone();
         let h2 = h1.clone();

@@ -8,6 +8,14 @@
 //! worker-bound message is addressed with its `ModelId` (the per-model
 //! channel that used to imply it is gone).
 //!
+//! Transport: the steady-state hops ([`ToModel`], [`ToRank`]) ride the
+//! bounded lock-free rings of [`crate::util::ring`] — full-queue
+//! policy documented at each send site, and the `hot-path-channel`
+//! lint keeps `std::sync::mpsc` from creeping back into
+//! `coordinator/`. Batch-rate and one-shot edges ([`ToBackend`],
+//! [`Completion`], `Drain`'s ack) stay on plain mpsc channels, where
+//! unboundedness is the right policy.
+//!
 //! The worker ⇄ rank-shard half of this vocabulary also exists as a
 //! wire protocol ([`crate::net::codec`]): `ToRank` minus `Shutdown`
 //! maps onto `WireToRank` (a remote shutdown is a connection close),
@@ -37,12 +45,13 @@ pub struct CandWindow {
 
 /// Rank shard / frontend → model worker.
 ///
-/// `Requests` carries its burst **boxed**: an mpsc node is sized for
-/// the whole enum, so an inline burst (~0.5 kB) would tax every
-/// per-request `Request` and every batch-rate `Granted`/`Revalidate`/
-/// `Overflow` send with a 13× node — the exact hot path this tier
-/// optimizes. The box costs one allocation per burst, amortized over
-/// its k requests.
+/// `Requests` carries its burst **boxed**: every ring slot (and,
+/// before PR 7, every mpsc node) is sized for the whole enum, so an
+/// inline burst (~0.5 kB) would inflate the preallocated ring by 13×
+/// and tax every per-request `Request` and every batch-rate
+/// `Granted`/`Revalidate`/`Overflow` send with a 13× copy — the exact
+/// hot path this tier optimizes. The box costs one allocation per
+/// burst, amortized over its k requests.
 #[derive(Debug)]
 pub enum ToModel {
     /// A single new inference request (frontend → worker, step ②);

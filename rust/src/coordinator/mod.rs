@@ -33,8 +33,9 @@
 //! ```
 //!
 //! The rank tier is addressed through [`RankPort`]s, so it can live
-//! in-process (mpsc, the default) or behind [`crate::net`]'s framed
-//! TCP in separate `symphony rank-server` processes
+//! in-process (bounded lock-free rings, [`crate::util::ring`] — the
+//! default) or behind [`crate::net`]'s framed TCP in separate
+//! `symphony rank-server` processes
 //! ([`CoordinatorConfig::remote_ranks`]) — the workers, the overflow
 //! steering, and the drain/attach autoscaler protocol don't know the
 //! difference. Backends always stay in this process.
@@ -60,7 +61,9 @@ use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
 use crate::net::client::RemoteRank;
+use crate::util::affinity::{self, CorePlan};
 use crate::util::error::Result;
+use crate::util::ring::{ring, RingSender};
 pub use clock::Clock;
 pub use ingest::IngestHandle;
 use ingest::IngestTier;
@@ -79,6 +82,37 @@ const REMOTE_CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
 /// candidate registration / burst forwarding — indefinitely. 256 keeps
 /// the per-burst amortization while bounding that latency.
 pub(crate) const MAX_DRAIN: usize = 256;
+
+/// How long an idle drain loop (or a test waiting on a message that
+/// should already be in flight) blocks before giving up one wait
+/// round. Bounds how stale a blocked thread's view of shutdown /
+/// disconnect can get; also the conventional "this message must arrive
+/// promptly" test timeout.
+pub const IDLE_RECV_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Generous end-to-end settle bound: how long a test waits for a
+/// multi-hop outcome (submit → worker → shard → grant → backend)
+/// before declaring the pipeline wedged.
+pub const SETTLE_RECV_TIMEOUT: Duration = Duration::from_millis(1_000);
+
+/// Ingest-shard inbox depth. Submission traffic is request-rate and
+/// sheddable: a full ring counts into `dropped_submits` (the same
+/// policy the paper's frontend applies under overload), so the depth
+/// bounds memory, not correctness. 4096 absorbs multi-ms producer
+/// bursts at millions/s before shedding starts.
+pub const INGEST_RING_DEPTH: usize = 4096;
+
+/// Model-worker inbox depth. Carries both sheddable request traffic
+/// (`Request`/`Requests` — full ring counts as drops at the sender)
+/// and control traffic (`Granted`/`Revalidate`/`Overflow` — bounded
+/// blocking retry; must not drop).
+pub const MODEL_RING_DEPTH: usize = 4096;
+
+/// Rank-shard inbox depth. All traffic here is batch-rate control
+/// (candidate registrations, busy-until, drain/attach), sent with the
+/// bounded blocking retry — the ring only needs to cover a drain
+/// interval's burst.
+pub const RANK_RING_DEPTH: usize = 2048;
 
 /// Configuration of a running coordinator.
 #[derive(Clone, Debug)]
@@ -113,6 +147,15 @@ pub struct CoordinatorConfig {
     /// in-process tier entirely (`rank_shards` is ignored — each
     /// server brings its own shard count).
     pub remote_ranks: Vec<String>,
+    /// Keep drain threads spinning instead of parking when their inbox
+    /// runs dry (`--busy-poll`): trades a core per thread for the
+    /// lowest hop latency. Off, the rings' adaptive spin→yield→park
+    /// waiter applies.
+    pub busy_poll: bool,
+    /// Pin ingest shards, model workers, and rank shards round-robin
+    /// onto the host's cores in NUMA-node order (`--pin-cores`). No-op
+    /// when topology discovery fails or off Linux.
+    pub pin_cores: bool,
 }
 
 /// What the frontend/worker tier did over a run, returned by
@@ -147,7 +190,7 @@ pub struct Coordinator {
     pub clock: Clock,
     topo: ShardTopology,
     /// One sender per model (clones of the owning worker's inbox).
-    model_txs: Vec<Sender<ToModel>>,
+    model_txs: Vec<RingSender<ToModel>>,
     pool: Option<ModelWorkerPool>,
     depth: QueueDepthProbe,
     ingest: IngestTier,
@@ -221,8 +264,16 @@ impl Coordinator {
         let clock = Clock::new();
         // The attached set is always the id prefix `0..active_end`.
         let active_end = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus) as u32;
+        // One shared placement plan across the three tiers: cores are
+        // handed out in NUMA-node order, so one coordinator's threads
+        // fill a socket before spilling to the next.
+        let mut cores = if cfg.pin_cores {
+            CorePlan::detect()
+        } else {
+            CorePlan::disabled()
+        };
 
-        // Resolve the rank tier: in-process shard channels, or one
+        // Resolve the rank tier: in-process shard rings, or one
         // connection (hosting several shards) per remote rank server.
         let mut ports: Vec<RankPort> = Vec::new();
         let mut remote: Vec<Arc<RemoteRank>> = Vec::new();
@@ -231,7 +282,8 @@ impl Coordinator {
         let topo = if cfg.remote_ranks.is_empty() {
             let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
             for _ in 0..topo.num_shards() {
-                let (tx, rx) = channel::<ToRank>();
+                let (tx, rx) = ring::<ToRank>(RANK_RING_DEPTH);
+                rx.set_busy_poll(cfg.busy_poll);
                 ports.push(RankPort::Local(tx));
                 shard_rx_store.push(rx);
             }
@@ -303,6 +355,8 @@ impl Coordinator {
             &completions,
             cfg.net_bound,
             cfg.exec_margin,
+            cfg.busy_poll,
+            &mut cores,
         );
         let model_txs = pool.model_txs();
         let depth = pool.queue_depth_probe();
@@ -324,10 +378,14 @@ impl Coordinator {
                     gpus: range,
                     hints: hints.clone(),
                 };
+                let core = cores.assign();
                 shard_handles.push(
                     std::thread::Builder::new()
                         .name(format!("rank-shard-{s}"))
-                        .spawn(move || shard.run())
+                        .spawn(move || {
+                            affinity::pin(core);
+                            shard.run()
+                        })
                         .expect("spawn rank shard"),
                 );
             }
@@ -341,6 +399,9 @@ impl Coordinator {
             // frame order guarantees the drains land before any
             // candidate traffic.
             for g in active_end..cfg.num_gpus as u32 {
+                // lint:allow(hot-path-channel): drain acks are one-shot
+                // control-rate traffic, and the wire ack table holds an
+                // mpsc sender — not a hot hop.
                 let (ack_tx, _ack_rx) = channel::<GpuId>();
                 let gpu = GpuId(g);
                 let _ = ports[topo.shard_of(gpu)].send(ToRank::Drain { gpu, ack: ack_tx });
@@ -352,6 +413,8 @@ impl Coordinator {
             cfg.ingest_shards,
             model_txs.clone(),
             dropped_submits.clone(),
+            cfg.busy_poll,
+            &mut cores,
         );
 
         Ok(Coordinator {
@@ -408,10 +471,13 @@ impl Coordinator {
     }
 
     /// Submit a request (frontend step ②). Arrival/deadline must be on
-    /// this coordinator's clock.
+    /// this coordinator's clock. Full-queue policy: submissions are
+    /// request-rate and sheddable — a full (or dead) worker ring counts
+    /// the request into `dropped_submits` instead of blocking the
+    /// producer.
     pub fn submit(&self, r: Request) {
         if self.model_txs[r.model.0 as usize]
-            .send(ToModel::Request(r))
+            .try_send(ToModel::Request(r))
             .is_err()
         {
             self.dropped_submits.fetch_add(1, Ordering::Relaxed);
@@ -420,9 +486,10 @@ impl Coordinator {
 
     /// Submit a batch: sorted by model in place (stable, so per-model
     /// submission order is preserved), then forwarded as **one**
-    /// [`ToModel::Requests`] burst per model — one channel send and one
+    /// [`ToModel::Requests`] burst per model — one ring send and one
     /// downstream candidate recompute per model instead of one per
-    /// request.
+    /// request. Same full-queue shed policy as [`Coordinator::submit`],
+    /// counting the whole burst.
     pub fn submit_batch(&self, reqs: &mut [Request]) {
         reqs.sort_by_key(|r| r.model);
         let mut i = 0;
@@ -434,7 +501,7 @@ impl Coordinator {
             }
             let burst = Box::new(ReqBurst::from_slice(&reqs[i..j]));
             if self.model_txs[model.0 as usize]
-                .send(ToModel::Requests { model, burst })
+                .try_send(ToModel::Requests { model, burst })
                 .is_err()
             {
                 self.dropped_submits
@@ -516,6 +583,8 @@ mod tests {
             net_bound: Micros::from_millis_f64(2.0),
             exec_margin: Micros::from_millis_f64(0.5),
             remote_ranks: Vec::new(),
+            busy_poll: false,
+            pin_cores: false,
         }
     }
 
@@ -533,7 +602,7 @@ mod tests {
             coord.submit_now(i, ModelId(0), Micros::from_millis_f64(100.0));
         }
         let msg = backend_rx
-            .recv_timeout(Duration::from_millis(1_000))
+            .recv_timeout(SETTLE_RECV_TIMEOUT)
             .expect("batch dispatched");
         match msg {
             ToBackend::Execute { requests, .. } => {
@@ -569,7 +638,7 @@ mod tests {
             .collect();
         coord.submit_batch(&mut batch);
         let msg = backend_rx
-            .recv_timeout(Duration::from_millis(1_000))
+            .recv_timeout(SETTLE_RECV_TIMEOUT)
             .expect("batch dispatched");
         match msg {
             ToBackend::Execute { requests, .. } => {

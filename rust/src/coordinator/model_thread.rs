@@ -24,11 +24,11 @@
 //! grant or revalidation resets the registration to the home shard.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::coordinator::MAX_DRAIN;
+use crate::coordinator::{MAX_DRAIN, MODEL_RING_DEPTH};
 
 use crate::coordinator::clock::Clock;
 use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel};
@@ -36,6 +36,8 @@ use crate::coordinator::router::{RankPort, RankRouter, ShardTopology};
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{ModelId, ReqBurst, Request};
+use crate::util::affinity::{self, CorePlan};
+use crate::util::ring::{ring, RingReceiver, RingSender, TryRecvError};
 
 /// What one worker did over its lifetime; merged at shutdown into
 /// [`crate::coordinator::FrontendStats`].
@@ -81,7 +83,7 @@ pub struct ModelWorker {
     worker: usize,
     num_workers: usize,
     clock: Clock,
-    inbox: Receiver<ToModel>,
+    inbox: RingReceiver<ToModel>,
     slots: Vec<ModelSlot>,
     backends: Vec<Sender<ToBackend>>,
     completions: Sender<Completion>,
@@ -326,7 +328,7 @@ impl QueueDepthProbe {
 /// Rank shards and frontends address model `m` through
 /// [`ModelWorkerPool::model_txs`] (clones of worker `m % W`'s sender).
 pub struct ModelWorkerPool {
-    worker_txs: Vec<Sender<ToModel>>,
+    worker_txs: Vec<RingSender<ToModel>>,
     handles: Vec<JoinHandle<WorkerStats>>,
     n_models: usize,
     depth: Arc<Vec<AtomicU64>>,
@@ -344,8 +346,11 @@ impl ModelWorkerPool {
     }
 
     /// Spawn the pool. `ports` must address the live rank shards —
-    /// in-process inboxes (whose threads may start later; the channels
-    /// must exist) or remote rank-server connections.
+    /// in-process inboxes (whose threads may start later; the rings
+    /// must exist) or remote rank-server connections. `busy_poll`
+    /// keeps the workers' drain loops spinning instead of parking;
+    /// `cores` pins each worker to its assigned core (pass
+    /// [`CorePlan::disabled`] to skip pinning).
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         profiles: &[LatencyProfile],
@@ -357,6 +362,8 @@ impl ModelWorkerPool {
         completions: &Sender<Completion>,
         net_bound: Micros,
         exec_margin: Micros,
+        busy_poll: bool,
+        cores: &mut CorePlan,
     ) -> Self {
         let n_models = profiles.len();
         let workers = workers.clamp(1, n_models.max(1));
@@ -365,7 +372,8 @@ impl ModelWorkerPool {
         let mut worker_txs = Vec::with_capacity(workers);
         let mut rx_store = Vec::with_capacity(workers);
         for _ in 0..workers {
-            let (tx, rx) = std::sync::mpsc::channel::<ToModel>();
+            let (tx, rx) = ring::<ToModel>(MODEL_RING_DEPTH);
+            rx.set_busy_poll(busy_poll);
             worker_txs.push(tx);
             rx_store.push(rx);
         }
@@ -395,10 +403,14 @@ impl ModelWorkerPool {
                 queued: 0,
                 depth: depth.clone(),
             };
+            let core = cores.assign();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("model-worker-{w}"))
-                    .spawn(move || worker.run())
+                    .spawn(move || {
+                        affinity::pin(core);
+                        worker.run()
+                    })
                     .expect("spawn model worker"),
             );
         }
@@ -423,7 +435,7 @@ impl ModelWorkerPool {
     /// One sender per model (clones of the owning worker's inbox) for
     /// the rank shards' `model_txs` routing and the frontend submit
     /// path.
-    pub fn model_txs(&self) -> Vec<Sender<ToModel>> {
+    pub fn model_txs(&self) -> Vec<RingSender<ToModel>> {
         (0..self.n_models)
             .map(|m| self.worker_txs[m % self.worker_txs.len()].clone())
             .collect()

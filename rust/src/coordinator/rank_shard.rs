@@ -17,7 +17,7 @@
 //! GPUs from the top of the id space.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::Sender;
 use std::time::Duration;
 
 use crate::coordinator::clock::Clock;
@@ -25,6 +25,7 @@ use crate::coordinator::messages::{CandWindow, ToModel, ToRank};
 use crate::coordinator::router::FreeHints;
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId};
+use crate::util::ring::{RecvTimeoutError, RingReceiver, RingSender, TryRecvError};
 use crate::util::stats::Histogram;
 
 /// Idle wake-up cap: bounds staleness of cross-shard free hints when no
@@ -350,8 +351,8 @@ pub struct RankShard {
     pub clock: Clock,
     /// This shard's index in the topology.
     pub shard: usize,
-    pub inbox: Receiver<ToRank>,
-    pub model_txs: Vec<Sender<ToModel>>,
+    pub inbox: RingReceiver<ToRank>,
+    pub model_txs: Vec<RingSender<ToModel>>,
     /// Contiguous GPU id range this shard owns.
     pub gpus: std::ops::Range<u32>,
     /// The sub-range of `gpus` attached at start; the rest begin
@@ -516,8 +517,10 @@ impl RankShard {
                 }
             }
 
-            // 6. Sleep until the next timer or message. The fast
-            //    starved-poll exists only to re-read sibling free
+            // 6. Sleep until the next timer or message. The ring's
+            //    `recv_timeout` is the shared adaptive drain: spin →
+            //    yield → park (or pure spin under `--busy-poll`). The
+            //    fast starved-poll exists only to re-read sibling free
             //    hints, so a single-shard tier never uses it.
             let idle_cap = if num_shards > 1 && st.free.is_empty() && !st.ready.is_empty() {
                 STARVED_IDLE
@@ -545,6 +548,8 @@ impl RankShard {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::IDLE_RECV_TIMEOUT;
+    use crate::util::ring::ring;
     use std::sync::mpsc::channel;
 
     fn spawn_shard(
@@ -554,16 +559,16 @@ mod tests {
         n_models: usize,
     ) -> (
         Clock,
-        Sender<ToRank>,
-        Vec<Receiver<ToModel>>,
+        RingSender<ToRank>,
+        Vec<RingReceiver<ToModel>>,
         std::thread::JoinHandle<ShardStats>,
     ) {
         let clock = Clock::new();
-        let (rank_tx, rank_rx) = channel();
+        let (rank_tx, rank_rx) = ring::<ToRank>(64);
         let mut model_txs = Vec::new();
         let mut model_rxs = Vec::new();
         for _ in 0..n_models {
-            let (tx, rx) = channel();
+            let (tx, rx) = ring::<ToModel>(64);
             model_txs.push(tx);
             model_rxs.push(rx);
         }
@@ -605,7 +610,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[0]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("revalidate sent");
         assert!(matches!(msg, ToModel::Revalidate { .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
@@ -633,7 +638,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[0]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("granted");
         assert!(
             matches!(msg, ToModel::Granted { gpu: GpuId(4), .. }),
@@ -660,7 +665,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[1]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("granted second gpu");
         assert!(matches!(msg, ToModel::Granted { gpu: GpuId(5), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
@@ -697,7 +702,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[0]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("overflow verdict");
         assert!(
             matches!(msg, ToModel::Overflow { to_shard: 1, seq: 7, .. }),
@@ -736,7 +741,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[0]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("grant after local GPU frees");
         assert!(matches!(msg, ToModel::Granted { gpu: GpuId(0), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();
@@ -758,7 +763,7 @@ mod tests {
             })
             .unwrap();
         let acked = ack_rx
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("idle GPU acks immediately");
         assert_eq!(acked, GpuId(0));
         let far = clock.now() + ms(500.0);
@@ -775,7 +780,7 @@ mod tests {
             })
             .unwrap();
         let msg = model_rxs[0]
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("granted");
         assert!(
             matches!(msg, ToModel::Granted { gpu: GpuId(1), .. }),
@@ -812,7 +817,7 @@ mod tests {
             "ack fired while the batch was still in flight"
         );
         let acked = ack_rx
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("ack after free_at");
         assert_eq!(acked, GpuId(0));
         // The shard's only GPU is retired: a live candidate parks
@@ -845,8 +850,8 @@ mod tests {
     fn attach_activates_detached_gpu() {
         let clock = Clock::new();
         let hints = FreeHints::new(1);
-        let (rank_tx, rank_rx) = channel();
-        let (model_tx, model_rx) = channel();
+        let (rank_tx, rank_rx) = ring::<ToRank>(64);
+        let (model_tx, model_rx) = ring::<ToModel>(64);
         let rs = RankShard {
             clock,
             shard: 0,
@@ -876,7 +881,7 @@ mod tests {
         );
         rank_tx.send(ToRank::Attach { gpu: GpuId(1) }).unwrap();
         let msg = model_rx
-            .recv_timeout(Duration::from_millis(500))
+            .recv_timeout(IDLE_RECV_TIMEOUT)
             .expect("granted after attach");
         assert!(matches!(msg, ToModel::Granted { gpu: GpuId(1), .. }), "{msg:?}");
         rank_tx.send(ToRank::Shutdown).unwrap();

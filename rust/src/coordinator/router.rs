@@ -10,14 +10,13 @@
 //! shard owning the GPU.
 //!
 //! The router addresses shards through [`RankPort`]s: an in-process
-//! mpsc sender, or one shard of a [`crate::net`] rank-server
-//! connection. Everything above this layer — the router's coalescing,
+//! ring sender ([`crate::util::ring`]), or one shard of a
+//! [`crate::net`] rank-server connection. Everything above this layer — the router's coalescing,
 //! overflow steering, the drain/attach autoscaler protocol — is
 //! transport-agnostic; `serve --remote-ranks` swaps the port kind and
 //! nothing else.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::coordinator::messages::{CandWindow, ToRank};
@@ -25,6 +24,7 @@ use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId};
 use crate::net::client::RemoteRank;
 use crate::net::codec::WireToRank;
+use crate::util::ring::RingSender;
 
 /// The rank shard behind a [`RankPort`] is unreachable: its thread
 /// exited (in-process) or its connection closed (remote). The message
@@ -43,8 +43,11 @@ impl std::error::Error for PortClosed {}
 /// Transport-agnostic handle to one rank shard.
 #[derive(Clone)]
 pub enum RankPort {
-    /// In-process shard thread (the pre-wire configuration).
-    Local(Sender<ToRank>),
+    /// In-process shard thread (the pre-wire configuration). Candidate
+    /// registrations, busy-until updates, and drain/attach control all
+    /// ride the bounded ring; the blocking `send` retries on a
+    /// transiently full ring — control traffic must not drop.
+    Local(RingSender<ToRank>),
     /// One shard of a remote `symphony rank-server` connection; the
     /// shard index rides in every up-frame's header.
     Remote { conn: Arc<RemoteRank>, shard: u16 },
@@ -591,9 +594,9 @@ mod tests {
     /// invalidation (grant/revalidate/overflow) forces the next send.
     #[test]
     fn router_coalesces_unchanged_registrations() {
-        use std::sync::mpsc::channel;
+        use crate::util::ring::ring;
         let topo = ShardTopology::new(2, 1);
-        let (tx, rx) = channel();
+        let (tx, rx) = ring::<ToRank>(64);
         let mut r = RankRouter::new(topo, vec![RankPort::Local(tx)], ModelId(0));
         let w = CandWindow {
             exec: Micros(10),
@@ -626,10 +629,10 @@ mod tests {
 
     #[test]
     fn router_clears_old_shard_on_migration() {
-        use std::sync::mpsc::channel;
+        use crate::util::ring::ring;
         let topo = ShardTopology::new(4, 2);
-        let (tx0, rx0) = channel();
-        let (tx1, rx1) = channel();
+        let (tx0, rx0) = ring::<ToRank>(64);
+        let (tx1, rx1) = ring::<ToRank>(64);
         // ModelId(0) homes on shard 0.
         let mut r = RankRouter::new(
             topo,

@@ -1,6 +1,6 @@
 //! `symphony lint` — a std-only invariant checker for this repo.
 //!
-//! Five PRs of desk-checked review discipline, turned into machine
+//! Six PRs of desk-checked review discipline, turned into machine
 //! rules (see `LINTS.md` at the repo root for the full catalogue and
 //! the past bug motivating each rule):
 //!
@@ -14,6 +14,8 @@
 //!   never the process.
 //! - `lock-across-send` — no `Mutex`/`RwLock` guard live across a
 //!   blocking channel/thread operation.
+//! - `hot-path-channel` — no `std::sync::mpsc` channel construction
+//!   inside `coordinator/` (hot hops ride `util::ring`).
 //!
 //! Findings can be silenced inline with
 //! `// lint:allow(rule-name): reason` — on the offending line, or on a

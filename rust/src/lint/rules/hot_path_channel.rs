@@ -1,0 +1,87 @@
+//! `hot-path-channel` — no `std::sync::mpsc` channel construction
+//! inside `coordinator/`.
+//!
+//! PR 7 moved every steady-state inter-thread hop (ingest inbox, model
+//! worker inbox, rank-shard inbox) onto the bounded lock-free rings in
+//! [`crate::util::ring`]: cache-padded Vyukov slots, adaptive
+//! spin→yield→park drains, a documented full-queue policy per call
+//! site. The bug class this guards: a later change quietly rebuilds a
+//! coordinator queue on `std::sync::mpsc` — unbounded, mutex-backed on
+//! contention, invisible to the `--busy-poll` and `--pin-cores`
+//! machinery — and the fabric's latency and backpressure guarantees
+//! silently regress.
+//!
+//! Mechanics: a call to `channel(..)` or `sync_channel(..)` (free or
+//! path-qualified, including turbofish) in any file under
+//! `coordinator/` is a finding, except in `#[cfg(test)]` code. The few
+//! legitimate survivors — one-shot control-rate traffic like drain
+//! acks — carry a named `// lint:allow(hot-path-channel): reason`
+//! suppression.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::{is_method_call, Rule};
+
+pub struct HotPathChannel;
+
+const RULE: &str = "hot-path-channel";
+
+impl Rule for HotPathChannel {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            if !in_coordinator(&f.path) {
+                continue;
+            }
+            check_file(f, out);
+        }
+    }
+}
+
+/// Is `path` inside a `coordinator/` directory component?
+fn in_coordinator(path: &str) -> bool {
+    path.starts_with("coordinator/") || path.contains("/coordinator/")
+}
+
+/// Is the ident at `ci` a *construction* call — `channel(`,
+/// `channel::<T>(`, `sync_channel(` — rather than an import, a method
+/// of the same name, or a definition?
+fn is_construction(f: &SourceFile, ci: usize) -> bool {
+    if is_method_call(f, ci) {
+        return false;
+    }
+    if ci > 0 && f.ctext(ci - 1) == "fn" {
+        return false;
+    }
+    f.ctext(ci + 1) == "(" || (f.ctext(ci + 1) == "::" && f.ctext(ci + 2) == "<")
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        if f.ckind(ci) != Some(TokKind::Ident) {
+            continue;
+        }
+        let t = f.ctext(ci);
+        if t != "channel" && t != "sync_channel" {
+            continue;
+        }
+        if f.in_test(ci) || !is_construction(f, ci) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: f.cline(ci),
+            rule: RULE,
+            message: format!(
+                "`{t}(..)` constructs a std::sync::mpsc channel inside coordinator/ — \
+                 hot inter-thread hops ride the bounded lock-free rings \
+                 (util::ring, PR 7); if this queue really is one-shot \
+                 control-rate traffic, say so with a named lint:allow"
+            ),
+        });
+    }
+}

@@ -1,6 +1,7 @@
 //! Rule registry and the shared token-query helpers rules lean on.
 
 pub mod float_free;
+pub mod hot_path_channel;
 pub mod lock_send;
 pub mod micros_arith;
 pub mod panic_free;
@@ -24,6 +25,7 @@ pub fn all() -> Vec<Box<dyn Rule>> {
         Box::new(micros_arith::UncheckedMicrosArith),
         Box::new(panic_free::PanicFreeWireSurface),
         Box::new(lock_send::LockAcrossSend),
+        Box::new(hot_path_channel::HotPathChannel),
     ]
 }
 

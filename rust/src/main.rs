@@ -61,10 +61,11 @@ fn usage() {
          symphony serve [--pjrt DIR] [--gpus N] [--rank-shards R] [--ingest-shards F]\n  \
                  [--model-workers W] [--rate R] [--secs S]\n  \
                  [--remote-ranks host:port,..] [--assert-grants]\n  \
+                 [--busy-poll] [--pin-cores]\n  \
          symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
                  [--epoch-ms E] [--backlog-per-gpu B] [--rates R1,R2,..] [--assert-scale]\n  \
          symphony rank-server [--listen ADDR] [--shards R] [--gpu-range LO..HI]\n  \
-                 [--max-sessions N]\n  \
+                 [--max-sessions N] [--busy-poll] [--pin-cores]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n  \
          symphony lint [--root rust/src] [--rule NAME]\n\n\
@@ -321,6 +322,8 @@ fn cmd_serve(rest: &[String]) {
         duration: Duration::from_secs_f64(secs),
         backend,
         autoscale,
+        busy_poll: f.contains_key("busy-poll"),
+        pin_cores: f.contains_key("pin-cores"),
         seed: 7,
     }) {
         Ok(r) => r,
@@ -420,6 +423,8 @@ fn cmd_rank_server(rest: &[String]) {
             shards,
             gpus,
             max_sessions,
+            busy_poll: f.contains_key("busy-poll"),
+            pin_cores: f.contains_key("pin-cores"),
         },
     ) {
         Ok(s) => s,

@@ -40,6 +40,7 @@ use crate::core::types::GpuId;
 use crate::net::codec::{self, ClientHello, ServerPreamble, WireFromRank, WireToRank, PREAMBLE_LEN};
 use crate::net::transport::{connect_retry, spawn_writer, FrameReader, FrameSender, WriterStats};
 use crate::util::error::{Context, Result};
+use crate::util::ring::RingSender;
 use crate::util::sync::relock;
 
 /// How long the handshake may block before the peer is declared broken.
@@ -125,7 +126,7 @@ impl RemoteRank {
     /// wire value, and a silently dropped grant would wedge capacity).
     pub fn start_reader(
         self: &Arc<Self>,
-        model_txs: Vec<Sender<ToModel>>,
+        model_txs: Vec<RingSender<ToModel>>,
         shard_offset: usize,
         disconnects: Arc<AtomicU64>,
     ) {
@@ -185,7 +186,7 @@ impl RemoteRank {
     fn read_loop(
         &self,
         stream: TcpStream,
-        model_txs: &[Sender<ToModel>],
+        model_txs: &[RingSender<ToModel>],
         shard_offset: usize,
     ) -> bool {
         let mut reader = FrameReader::new(stream);
@@ -227,7 +228,7 @@ impl RemoteRank {
     fn dispatch(
         &self,
         msg: WireFromRank,
-        model_txs: &[Sender<ToModel>],
+        model_txs: &[RingSender<ToModel>],
         shard_offset: usize,
     ) -> Result<(), String> {
         match msg {

@@ -17,12 +17,12 @@
 //! Per session, the plumbing mirrors the in-process coordinator:
 //!
 //! * the session reader decodes up-frames and forwards them to the
-//!   owning shard's mpsc inbox (per-connection ordering ⇒ per-shard
+//!   owning shard's ring inbox (per-connection ordering ⇒ per-shard
 //!   ordering, same as an in-process sender);
-//! * the shards' `model_txs` are clones of one proxy channel whose
+//! * the shards' `model_txs` are clones of one proxy ring whose
 //!   converter thread encodes `Granted`/`Revalidate`/`Overflow` into
 //!   down-frames (every `ToModel` verdict is model-addressed, so one
-//!   channel serves all models);
+//!   ring serves all models);
 //! * `Drain` frames get a session-local ack channel whose converter
 //!   thread turns each ack into an explicit `DrainAck` frame — the
 //!   in-process `Sender<GpuId>` contract, routed back over the wire.
@@ -39,12 +39,16 @@ use std::time::Duration;
 
 use crate::coordinator::messages::{ToModel, ToRank};
 use crate::coordinator::router::FreeHints;
-use crate::coordinator::{Clock, RankShard, ShardStats, ShardTopology};
+use crate::coordinator::{
+    Clock, RankShard, ShardStats, ShardTopology, MODEL_RING_DEPTH, RANK_RING_DEPTH,
+};
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
 use crate::net::codec::{self, ServerPreamble, WireFromRank, WireToRank, HELLO_LEN};
 use crate::net::transport::{spawn_writer, FrameReader, FrameSender};
+use crate::util::affinity::{self, CorePlan};
 use crate::util::error::{Context, Result};
+use crate::util::ring::{ring, RingReceiver};
 
 /// Most models one session may address (the hello's `n_models` sizes
 /// per-shard sender tables, so this wire-supplied number must be
@@ -67,6 +71,12 @@ pub struct RankServerConfig {
     /// Exit after this many sessions (CI smoke / tests); `None` serves
     /// forever.
     pub max_sessions: Option<u64>,
+    /// Keep session shard drains spinning instead of parking
+    /// (`--busy-poll`); see [`crate::coordinator::CoordinatorConfig`].
+    pub busy_poll: bool,
+    /// Pin session shard threads round-robin onto the host's cores in
+    /// NUMA order (`--pin-cores`); no-op off Linux.
+    pub pin_cores: bool,
 }
 
 /// A bound rank server (bind and accept are split so callers can learn
@@ -129,9 +139,10 @@ impl RankServer {
             handles.retain(|h| !h.is_finished());
             accepted += 1;
             let gpus = self.cfg.gpus.clone();
+            let (busy_poll, pin_cores) = (self.cfg.busy_poll, self.cfg.pin_cores);
             handles.push(std::thread::Builder::new().name("rank-session".into()).spawn(
                 move || {
-                    if let Err(e) = serve_session(stream, shards, gpus) {
+                    if let Err(e) = serve_session(stream, shards, gpus, busy_poll, pin_cores) {
                         eprintln!("rank-server: session failed: {e:#}");
                     }
                 },
@@ -155,7 +166,13 @@ fn shard_range(gpus: &std::ops::Range<u32>, shards: usize, s: usize) -> std::ops
     ShardTopology::split(gpus, shards, s)..ShardTopology::split(gpus, shards, s + 1)
 }
 
-fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -> Result<()> {
+fn serve_session(
+    stream: TcpStream,
+    shards: usize,
+    gpus: std::ops::Range<u32>,
+    busy_poll: bool,
+    pin_cores: bool,
+) -> Result<()> {
     stream.set_nodelay(true)?;
     let peer = stream
         .peer_addr()
@@ -191,9 +208,13 @@ fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -
     let clock = Clock::starting_at(Micros(hello.now_us));
 
     // Down path: coalescing writer + converter threads turning shard
-    // verdicts and drain acks into frames.
+    // verdicts and drain acks into frames. The verdict proxy is a ring
+    // (it sits on the grant hot path); the drain-ack channel stays
+    // mpsc — one-shot control-rate traffic behind the Sender<GpuId>
+    // ack contract.
     let (sender, writer_h) = spawn_writer(stream.try_clone()?)?;
-    let (model_tx, model_rx) = channel::<ToModel>();
+    let (model_tx, model_rx) = ring::<ToModel>(MODEL_RING_DEPTH);
+    model_rx.set_busy_poll(busy_poll);
     let model_conv = {
         let sender = sender.clone();
         std::thread::spawn(move || down_pump(model_rx, sender))
@@ -208,10 +229,16 @@ fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -
     // (a client that wants headroom drains it — a drain of a free GPU
     // retires it immediately, exactly `initial_gpus` semantics).
     let hints = FreeHints::new(shards);
+    let mut cores = if pin_cores {
+        CorePlan::detect()
+    } else {
+        CorePlan::disabled()
+    };
     let mut shard_txs = Vec::with_capacity(shards);
     let mut shard_handles = Vec::with_capacity(shards);
     for s in 0..shards {
-        let (tx, rx) = channel::<ToRank>();
+        let (tx, rx) = ring::<ToRank>(RANK_RING_DEPTH);
+        rx.set_busy_poll(busy_poll);
         shard_txs.push(tx);
         let range = shard_range(&gpus, shards, s);
         let shard = RankShard {
@@ -223,10 +250,14 @@ fn serve_session(stream: TcpStream, shards: usize, gpus: std::ops::Range<u32>) -
             gpus: range,
             hints: hints.clone(),
         };
+        let core = cores.assign();
         shard_handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-srv-shard-{s}"))
-                .spawn(move || shard.run())?,
+                .spawn(move || {
+                    affinity::pin(core);
+                    shard.run()
+                })?,
         );
     }
 
@@ -350,8 +381,8 @@ fn lift(msg: WireToRank, gack_tx: &Sender<GpuId>) -> ToRank {
 /// exactly-sized allocation per frame, moved straight into the writer
 /// queue (the queue owns its frames, so a reused scratch would pay the
 /// same allocation again on clone).
-fn down_pump(rx: Receiver<ToModel>, sender: FrameSender) {
-    for msg in rx {
+fn down_pump(rx: RingReceiver<ToModel>, sender: FrameSender) {
+    while let Ok(msg) = rx.recv() {
         let down = match msg {
             ToModel::Granted { model, gpu } => WireFromRank::Granted { model, gpu },
             ToModel::Revalidate { model } => WireFromRank::Revalidate { model },

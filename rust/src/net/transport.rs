@@ -25,6 +25,7 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::util::ring::Waiter;
 use crate::util::sync::relock;
 
 /// Maximum accepted frame payload length. Codec frames are tens of
@@ -215,17 +216,37 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
     let mut stats = WriterStats::default();
     let mut batch: Vec<Vec<u8>> = Vec::new();
     let mut out: Vec<u8> = Vec::new();
-    loop {
-        {
+    // The shared adaptive drain policy (`util::ring::Waiter`): spin →
+    // yield before each Condvar block — a line-rate sender usually
+    // refills the queue within the spin budget, skipping the futex
+    // round trip per drain. `SYMPHONY_BUSY_POLL=1` keeps the writer
+    // spinning outright. (The *read* side stays a blocking socket
+    // read: the kernel already wakes it exactly when bytes arrive.)
+    let mut waiter = Waiter::from_env(false);
+    'outer: loop {
+        loop {
             let mut g = relock(&q.inner);
-            while g.frames.is_empty() && !g.closed {
-                g = q.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
-            }
-            std::mem::swap(&mut g.frames, &mut batch);
-            if batch.is_empty() && g.closed {
+            if !g.frames.is_empty() {
+                std::mem::swap(&mut g.frames, &mut batch);
                 break;
             }
+            if g.closed {
+                break 'outer;
+            }
+            if waiter.should_block() {
+                while g.frames.is_empty() && !g.closed {
+                    g = q.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+                std::mem::swap(&mut g.frames, &mut batch);
+                if batch.is_empty() && g.closed {
+                    break 'outer;
+                }
+                break;
+            }
+            drop(g);
+            waiter.idle();
         }
+        waiter.reset();
         // One contiguous buffer, one syscall, however deep the backlog.
         out.clear();
         for f in batch.drain(..) {

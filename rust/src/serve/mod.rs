@@ -84,6 +84,13 @@ pub struct ServeConfig {
     pub backend: BackendKind,
     /// Run the §3.5 epoch loop against the live cluster.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Busy-poll the coordinator's ring inboxes (spin instead of
+    /// parking when idle) — trades a core per consumer for the lowest
+    /// hop latency. See `--busy-poll`.
+    pub busy_poll: bool,
+    /// Pin ingest shards, model workers, and rank shards to distinct
+    /// cores (NUMA-node order). See `--pin-cores`; no-op off Linux.
+    pub pin_cores: bool,
     pub seed: u64,
 }
 
@@ -270,6 +277,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             net_bound: Micros::from_millis_f64(2.0),
             exec_margin: Micros::from_millis_f64(0.5),
             remote_ranks: cfg.remote_ranks.clone(),
+            busy_poll: cfg.busy_poll,
+            pin_cores: cfg.pin_cores,
         },
         backend_txs.clone(),
         comp_tx.clone(),
@@ -530,7 +539,7 @@ fn collect(comp_rx: Receiver<Completion>, counts: Arc<Mutex<LiveCounts>>) -> Col
         // thread holds none, `SleepWorkers::close()` releases the
         // deferred-spawn clone, and workers/executors drop theirs as
         // they process Shutdown.
-        let c = match comp_rx.recv_timeout(Duration::from_millis(500)) {
+        let c = match comp_rx.recv_timeout(crate::coordinator::IDLE_RECV_TIMEOUT) {
             Ok(c) => c,
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
@@ -703,6 +712,8 @@ mod tests {
             duration: Duration::from_millis(500),
             backend: BackendKind::Sleep,
             autoscale: None,
+            busy_poll: false,
+            pin_cores: false,
             seed: 5,
         })
         .unwrap();
@@ -755,6 +766,8 @@ mod tests {
                 epoch: Micros::from_millis_f64(400.0),
                 backlog_per_gpu: 4.0,
             }),
+            busy_poll: false,
+            pin_cores: false,
             seed: 11,
         })
         .unwrap();

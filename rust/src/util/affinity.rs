@@ -1,0 +1,211 @@
+//! Core/NUMA-aware thread placement for the shard tiers (`--pin-cores`).
+//!
+//! Std-only (the offline registry has no `libc` crate, but the platform
+//! already links libc): pinning is a direct `extern "C"`
+//! `sched_setaffinity` declaration, and topology discovery parses the
+//! kernel's own text interfaces —
+//!
+//! * `/sys/devices/system/node/node*/cpulist` — cores grouped by NUMA
+//!   node, so a [`CorePlan`] hands out cores node-by-node and the three
+//!   shard tiers of one coordinator land on the same socket before
+//!   spilling to the next;
+//! * `/sys/devices/system/cpu/online` — fallback when there is no NUMA
+//!   sysfs (single-node hosts, some containers);
+//! * `/proc/self/status` `Cpus_allowed_list` — the cgroup/taskset mask,
+//!   intersected in so a containerized run never asks for a core it
+//!   cannot have.
+//!
+//! On non-Linux everything degrades to a no-op: [`CorePlan::detect`]
+//! comes back empty and [`pin_to`] returns false, so `--pin-cores` is
+//! safe to pass anywhere.
+
+/// Pin the **calling thread** to `cpu`. Returns whether the kernel
+/// accepted the mask. No-op (false) on non-Linux.
+#[cfg(target_os = "linux")]
+pub fn pin_to(cpu: usize) -> bool {
+    extern "C" {
+        // pid 0 = the calling thread (Linux sched_setaffinity(2)).
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    const WORDS: usize = 16; // 1024 CPUs
+    if cpu >= WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    unsafe { sched_setaffinity(0, std::mem::size_of::<[u64; WORDS]>(), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to(_cpu: usize) -> bool {
+    false
+}
+
+/// Convenience for spawned threads: pin if the plan assigned a core.
+pub fn pin(core: Option<usize>) -> bool {
+    core.map(pin_to).unwrap_or(false)
+}
+
+/// Parse a kernel cpulist (`"0-3,5,8-9"`) into explicit core ids.
+/// Malformed pieces are skipped, not fatal — these files are trusted
+/// but the parser must never panic the serving path.
+pub fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi && hi - lo < 4096 {
+                    out.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+fn read_cpu_list(path: &str) -> Vec<usize> {
+    std::fs::read_to_string(path)
+        .map(|s| parse_cpu_list(&s))
+        .unwrap_or_default()
+}
+
+/// The cgroup/taskset-allowed cores of this process, if discoverable.
+fn allowed_cpus() -> Vec<usize> {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return Vec::new();
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Cpus_allowed_list:"))
+        .map(|list| parse_cpu_list(list))
+        .unwrap_or_default()
+}
+
+/// Cores in NUMA-node order (`node0`'s cores, then `node1`'s, …), or
+/// empty when the node sysfs is absent.
+fn numa_ordered_cpus() -> Vec<usize> {
+    let Ok(dir) = std::fs::read_dir("/sys/devices/system/node") else {
+        return Vec::new();
+    };
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    for entry in dir.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let cpus = std::fs::read_to_string(entry.path().join("cpulist"))
+            .map(|s| parse_cpu_list(&s))
+            .unwrap_or_default();
+        if !cpus.is_empty() {
+            nodes.push((idx, cpus));
+        }
+    }
+    nodes.sort_by_key(|&(idx, _)| idx);
+    let mut seen = std::collections::HashSet::new();
+    nodes
+        .into_iter()
+        .flat_map(|(_, cpus)| cpus)
+        .filter(|c| seen.insert(*c))
+        .collect()
+}
+
+/// A round-robin core assigner for thread placement. Built once at
+/// spawn time; each tier's spawn loop calls [`CorePlan::assign`] and
+/// the spawned thread pins itself via [`pin`].
+#[derive(Debug, Default)]
+pub struct CorePlan {
+    cores: Vec<usize>,
+    next: usize,
+}
+
+impl CorePlan {
+    /// A plan that assigns nothing — `--pin-cores` off, tests, benches.
+    pub fn disabled() -> Self {
+        CorePlan::default()
+    }
+
+    /// Discover the host topology: NUMA-ordered cores (or the online
+    /// list), intersected with the allowed mask. Empty on non-Linux or
+    /// when discovery fails — callers then simply don't pin.
+    pub fn detect() -> Self {
+        let mut cores = numa_ordered_cpus();
+        if cores.is_empty() {
+            cores = read_cpu_list("/sys/devices/system/cpu/online");
+        }
+        if cores.is_empty() {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+            cores = (0..n).collect();
+        }
+        let allowed = allowed_cpus();
+        if !allowed.is_empty() {
+            let allowed: std::collections::HashSet<usize> = allowed.into_iter().collect();
+            cores.retain(|c| allowed.contains(c));
+        }
+        CorePlan { cores, next: 0 }
+    }
+
+    /// From an explicit core list (tests; future `--pin-cores 0-7`).
+    pub fn from_cores(cores: Vec<usize>) -> Self {
+        CorePlan { cores, next: 0 }
+    }
+
+    /// Next core, round-robin. `None` when the plan is disabled/empty.
+    pub fn assign(&mut self) -> Option<usize> {
+        if self.cores.is_empty() {
+            return None;
+        }
+        let c = self.cores[self.next % self.cores.len()];
+        self.next += 1;
+        Some(c)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cores.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_ranges_singles_and_garbage() {
+        assert_eq!(parse_cpu_list("0-3,5,8-9\n"), vec![0, 1, 2, 3, 5, 8, 9]);
+        assert_eq!(parse_cpu_list("7"), vec![7]);
+        assert_eq!(parse_cpu_list(""), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list("x,3-,,-2,4"), vec![4]);
+        // Descending / absurd ranges are skipped, not panics.
+        assert_eq!(parse_cpu_list("9-3"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_round_robins_and_disabled_assigns_nothing() {
+        let mut p = CorePlan::from_cores(vec![2, 4, 6]);
+        assert_eq!(p.len(), 3);
+        let got: Vec<_> = (0..5).map(|_| p.assign().unwrap()).collect();
+        assert_eq!(got, vec![2, 4, 6, 2, 4]);
+        assert_eq!(CorePlan::disabled().assign(), None);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn detect_and_pin_on_linux() {
+        // Detection must find at least the core we are running on, and
+        // pinning to a detected core must be accepted by the kernel.
+        let mut plan = CorePlan::detect();
+        if let Some(core) = plan.assign() {
+            assert!(pin_to(core), "sched_setaffinity rejected core {core}");
+        }
+    }
+}

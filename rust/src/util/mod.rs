@@ -1,10 +1,12 @@
 //! Shared infrastructure: deterministic RNG + distributions, statistics,
 //! table/TSV output, and the mini property-test runner.
 
+pub mod affinity;
 pub mod bitset;
 pub mod error;
 pub mod par;
 pub mod proptest;
+pub mod ring;
 pub mod rng;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,653 @@
+//! Bounded lock-free MPSC ring — the coordinator's inter-thread fabric.
+//!
+//! Every steady-state hop of the submit→grant path (producer → ingest
+//! shard, ingest shard → model worker, model worker ⇄ rank shard) used
+//! to ride `std::sync::mpsc`: one heap-allocated node per send and a
+//! futex wake per `recv_timeout`. This module replaces those hops with
+//! a hand-rolled bounded ring (the registry is offline, so no
+//! crossbeam — same discipline as `util/error.rs` and `net/codec.rs`):
+//!
+//! * **Vyukov-style slots**: each slot carries its own sequence atomic,
+//!   so producers claim positions with one CAS on the tail and publish
+//!   with one release store — no producer ever touches another
+//!   producer's slot, and the (single) consumer never contends with
+//!   producers except on the slot being handed over.
+//! * **Cache-padded cursors**: head and tail live on their own cache
+//!   lines so producer claims don't false-share with consumer advances.
+//! * **Power-of-two capacity**: slot lookup is a mask, not a modulo.
+//! * **Adaptive blocking edge**: receivers spin → yield ([`Waiter`])
+//!   and only then park on a Condvar [`Parker`]; an opt-in busy-poll
+//!   mode (`--busy-poll`) keeps drain threads spinning for
+//!   latency-critical deployments.
+//!
+//! **Full-queue policy is the call site's contract**, documented there:
+//! request-rate traffic (frontend submissions, ingest→worker bursts)
+//! uses [`RingSender::try_send`] and counts a full ring into
+//! `dropped_submits` — under overload the ring is the shed point, same
+//! as the seed's behavior of losing to an unbounded queue's latency.
+//! Control traffic (grants, revalidations, drains — messages that must
+//! not drop) uses [`RingSender::send`], a bounded spin-then-sleep retry:
+//! it gives up only after [`SEND_RETRY_BOUND`], turning a wedged peer
+//! into a counted error instead of a deadlock (bounded rings can form
+//! a cycle worker ⇄ shard that unbounded mpsc could not).
+//!
+//! Error types mirror `std::sync::mpsc`'s names so call sites port
+//! with an import swap.
+
+use std::cell::{Cell, UnsafeCell};
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a blocking [`RingSender::send`] retries against a full ring
+/// before reporting failure. Control messages must not drop; this bound
+/// only exists so a wedged (or deadlocked-by-cycle) peer surfaces as an
+/// error instead of hanging shutdown forever.
+pub const SEND_RETRY_BOUND: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------- errors
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// The ring is full. Shed or retry per the call site's policy.
+    Full(T),
+    /// The receiver is gone; the value comes back to the caller.
+    Disconnected(T),
+}
+
+/// The receiver is gone (or [`SEND_RETRY_BOUND`] elapsed on a full
+/// ring); the value comes back to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+// ---------------------------------------------------------------- waiter
+
+/// Spin budget before a [`Waiter`] starts yielding.
+const SPIN_ROUNDS: u32 = 64;
+/// Yield budget before a [`Waiter`] reports it is time to block.
+const YIELD_ROUNDS: u32 = 32;
+
+/// The shared idle policy for drain loops: spin (with escalating
+/// `spin_loop` hints) → `yield_now` → block. The ring's receivers use
+/// it internally before parking; the wire writer uses it before its
+/// Condvar wait. Under busy-poll, [`Waiter::should_block`] never turns
+/// true, so the loop spins/yields forever — the opt-in latency mode.
+#[derive(Debug)]
+pub struct Waiter {
+    rounds: u32,
+    busy_poll: bool,
+}
+
+impl Waiter {
+    pub fn new(busy_poll: bool) -> Self {
+        Waiter { rounds: 0, busy_poll }
+    }
+
+    /// Like [`Waiter::new`], but the `SYMPHONY_BUSY_POLL` environment
+    /// variable also turns busy-poll on — the hook the bench smoke
+    /// steps use to exercise the spin mode without new bench flags.
+    pub fn from_env(busy_poll: bool) -> Self {
+        Self::new(busy_poll || std::env::var_os("SYMPHONY_BUSY_POLL").is_some())
+    }
+
+    /// Call after making progress so the ladder restarts at spinning.
+    pub fn reset(&mut self) {
+        self.rounds = 0;
+    }
+
+    /// Spin+yield budget exhausted — time to truly block (park /
+    /// Condvar-wait). Never under busy-poll.
+    pub fn should_block(&self) -> bool {
+        !self.busy_poll && self.rounds >= SPIN_ROUNDS + YIELD_ROUNDS
+    }
+
+    /// One step of the spin→yield ladder.
+    pub fn idle(&mut self) {
+        if self.rounds < SPIN_ROUNDS {
+            for _ in 0..(1u32 << (self.rounds / 8).min(6)) {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::yield_now();
+        }
+        self.rounds = self.rounds.saturating_add(1);
+    }
+
+    pub fn busy_poll(&self) -> bool {
+        self.busy_poll
+    }
+}
+
+// ---------------------------------------------------------------- parker
+
+const EMPTY: usize = 0;
+const PARKED: usize = 1;
+const NOTIFIED: usize = 2;
+
+/// Condvar-based blocking edge for the ring's consumer. The state
+/// machine (EMPTY → PARKED → NOTIFIED/EMPTY) keeps the producer side
+/// cheap: a send only touches the Mutex when the consumer has actually
+/// announced it is parked.
+///
+/// Wake-not-lost protocol (Dekker): the consumer stores `PARKED`
+/// (SeqCst) and only then re-checks the ring; the producer publishes
+/// its slot and only then (behind a SeqCst fence in [`Parker::wake`])
+/// loads the state. Whatever the interleaving, at least one side sees
+/// the other: either the consumer's re-check finds the message, or the
+/// producer finds `PARKED` and notifies under the Mutex.
+#[derive(Debug)]
+pub struct Parker {
+    state: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for Parker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Parker {
+    pub fn new() -> Self {
+        Parker {
+            state: AtomicUsize::new(EMPTY),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Announce intent to park. The caller MUST re-check its wake
+    /// condition after this call and either [`Parker::cancel`] or
+    /// [`Parker::park`].
+    pub fn prepare(&self) {
+        self.state.store(PARKED, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+    }
+
+    /// Withdraw a [`Parker::prepare`] (the re-check found work).
+    pub fn cancel(&self) {
+        self.state.store(EMPTY, Ordering::SeqCst);
+    }
+
+    /// Block until notified or `deadline` (`None` = forever). Returns
+    /// true if a wake was observed.
+    pub fn park(&self, deadline: Option<Instant>) -> bool {
+        let mut g = match self.lock.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while self.state.load(Ordering::SeqCst) == PARKED {
+            match deadline {
+                None => {
+                    g = match self.cv.wait(g) {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    g = match self.cv.wait_timeout(g, d - now) {
+                        Ok((g, _)) => g,
+                        Err(p) => p.into_inner().0,
+                    };
+                }
+            }
+        }
+        drop(g);
+        self.state.swap(EMPTY, Ordering::SeqCst) == NOTIFIED
+    }
+
+    /// Wake a parked consumer. Cheap when nobody is parked (one fenced
+    /// load); takes the Mutex only to close the race with a concurrent
+    /// `wait` entry.
+    pub fn wake(&self) {
+        fence(Ordering::SeqCst);
+        if self.state.load(Ordering::SeqCst) == PARKED {
+            let _g = match self.lock.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            if self
+                .state
+                .compare_exchange(PARKED, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.cv.notify_one();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ ring
+
+/// Head/tail cursors on their own cache lines.
+#[repr(align(64))]
+struct Padded(AtomicUsize);
+
+struct Slot<T> {
+    /// Vyukov sequence: `== pos` → empty, claimable by the producer
+    /// that wins the tail CAS at `pos`; `== pos + 1` → published,
+    /// readable by the consumer; `== pos + capacity` → consumed,
+    /// claimable again on the next lap.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+struct Inner<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    /// Producer claim cursor (CAS).
+    tail: Padded,
+    /// Consumer cursor — only the receiver advances it.
+    head: Padded,
+    senders: AtomicUsize,
+    /// 1 while the receiver handle is alive.
+    rx_alive: AtomicUsize,
+    parker: Parker,
+}
+
+// SAFETY: the UnsafeCell slots are handed between threads under the
+// Vyukov sequence protocol — a slot's value is only written by the
+// producer that won the CAS for that position and only read by the
+// single consumer after observing the producer's release store, so
+// `T: Send` suffices.
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Runs only once every handle is gone: drain whatever was
+        // published but never consumed.
+        let mut pos = self.head.0.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            if slot.seq.load(Ordering::Relaxed) == pos.wrapping_add(1) {
+                unsafe { (*slot.val.get()).assume_init_drop() };
+                pos = pos.wrapping_add(1);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl<T> Inner<T> {
+    fn enqueue(&self, v: T) -> Result<(), T> {
+        let mut pos = self.tail.0.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq.wrapping_sub(pos) as isize;
+            if dif == 0 {
+                match self.tail.0.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if dif < 0 {
+                return Err(v); // full lap: consumer hasn't freed this slot
+            } else {
+                pos = self.tail.0.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Single-consumer dequeue (no CAS on head — only the receiver
+    /// calls this).
+    fn dequeue(&self) -> Option<T> {
+        let pos = self.head.0.load(Ordering::Relaxed);
+        let slot = &self.buf[pos & self.mask];
+        if slot.seq.load(Ordering::Acquire) == pos.wrapping_add(1) {
+            let v = unsafe { (*slot.val.get()).assume_init_read() };
+            slot.seq
+                .store(pos.wrapping_add(self.buf.len()), Ordering::Release);
+            self.head.0.store(pos.wrapping_add(1), Ordering::Release);
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    /// Consumer-side peek: is a message published at head?
+    fn has_next(&self) -> bool {
+        let pos = self.head.0.load(Ordering::Relaxed);
+        self.buf[pos & self.mask].seq.load(Ordering::Acquire) == pos.wrapping_add(1)
+    }
+
+    fn rx_alive(&self) -> bool {
+        self.rx_alive.load(Ordering::Acquire) == 1
+    }
+}
+
+/// Create a bounded MPSC ring. `capacity` is rounded up to the next
+/// power of two (min 2).
+pub fn ring<T>(capacity: usize) -> (RingSender<T>, RingReceiver<T>) {
+    let cap = capacity.max(2).next_power_of_two();
+    let buf: Box<[Slot<T>]> = (0..cap)
+        .map(|i| Slot {
+            seq: AtomicUsize::new(i),
+            val: UnsafeCell::new(MaybeUninit::uninit()),
+        })
+        .collect();
+    let inner = Arc::new(Inner {
+        buf,
+        mask: cap - 1,
+        tail: Padded(AtomicUsize::new(0)),
+        head: Padded(AtomicUsize::new(0)),
+        senders: AtomicUsize::new(1),
+        rx_alive: AtomicUsize::new(1),
+        parker: Parker::new(),
+    });
+    (
+        RingSender {
+            inner: inner.clone(),
+        },
+        RingReceiver {
+            inner,
+            busy_poll: Cell::new(false),
+        },
+    )
+}
+
+// ---------------------------------------------------------------- sender
+
+pub struct RingSender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for RingSender<T> {
+    fn clone(&self) -> Self {
+        self.inner.senders.fetch_add(1, Ordering::Relaxed);
+        RingSender {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Drop for RingSender<T> {
+    fn drop(&mut self) {
+        if self.inner.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last producer gone: a blocked receiver must observe the
+            // disconnect rather than sleep forever.
+            self.inner.parker.wake();
+        }
+    }
+}
+
+impl<T> RingSender<T> {
+    /// Non-blocking send. `Full` is the caller's shed point (the
+    /// documented ingest policy: count into `dropped_submits`).
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        if !self.inner.rx_alive() {
+            return Err(TrySendError::Disconnected(v));
+        }
+        match self.inner.enqueue(v) {
+            Ok(()) => {
+                self.inner.parker.wake();
+                Ok(())
+            }
+            Err(v) => {
+                if self.inner.rx_alive() {
+                    Err(TrySendError::Full(v))
+                } else {
+                    Err(TrySendError::Disconnected(v))
+                }
+            }
+        }
+    }
+
+    /// Blocking send with bounded retry — the control-traffic policy
+    /// (grants, revalidations, drains, shutdowns must not drop). Spins,
+    /// yields, then sleeps in 100 µs steps; gives up only after
+    /// [`SEND_RETRY_BOUND`] so a wedged peer surfaces as an error
+    /// instead of a deadlock.
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut v = v;
+        let mut waiter = Waiter::new(false);
+        let mut deadline: Option<Instant> = None;
+        loop {
+            match self.try_send(v) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Disconnected(x)) => return Err(SendError(x)),
+                Err(TrySendError::Full(x)) => {
+                    v = x;
+                    let now = Instant::now();
+                    let d = *deadline.get_or_insert(now + SEND_RETRY_BOUND);
+                    if now >= d {
+                        return Err(SendError(v));
+                    }
+                    if waiter.should_block() {
+                        std::thread::sleep(Duration::from_micros(100));
+                    } else {
+                        waiter.idle();
+                    }
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- receiver
+
+/// The single consumer. `Send` but not `Sync` (the `Cell` sees to
+/// that): exactly one thread may drain.
+pub struct RingReceiver<T> {
+    inner: Arc<Inner<T>>,
+    busy_poll: Cell<bool>,
+}
+
+impl<T> Drop for RingReceiver<T> {
+    fn drop(&mut self) {
+        self.inner.rx_alive.store(0, Ordering::Release);
+        // Unconsumed values are dropped by Inner::drop once the last
+        // sender handle goes too.
+    }
+}
+
+impl<T> RingReceiver<T> {
+    /// Opt this receiver's blocking waits into busy-poll: spin/yield
+    /// until the deadline instead of parking (`--busy-poll`).
+    pub fn set_busy_poll(&self, on: bool) {
+        self.busy_poll.set(on);
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        if let Some(v) = self.inner.dequeue() {
+            return Ok(v);
+        }
+        if self.inner.senders.load(Ordering::Acquire) == 0 {
+            // The last send and the handle-count decrement race; the
+            // count reaching zero happens-after every publish, so one
+            // more dequeue settles it.
+            match self.inner.dequeue() {
+                Some(v) => Ok(v),
+                None => Err(TryRecvError::Disconnected),
+            }
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+
+    fn recv_deadline(&self, deadline: Option<Instant>) -> Result<T, RecvTimeoutError> {
+        let mut waiter = Waiter::new(self.busy_poll.get());
+        loop {
+            match self.try_recv() {
+                Ok(v) => return Ok(v),
+                Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+                Err(TryRecvError::Empty) => {}
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(RecvTimeoutError::Timeout);
+                }
+            }
+            if waiter.should_block() {
+                self.inner.parker.prepare();
+                // Dekker re-check: a producer may have published (and
+                // skipped the wake) between try_recv and the PARKED
+                // store above.
+                if self.inner.has_next() || self.inner.senders.load(Ordering::SeqCst) == 0 {
+                    self.inner.parker.cancel();
+                    continue;
+                }
+                self.inner.parker.park(deadline);
+                waiter.reset();
+            } else {
+                waiter.idle();
+            }
+        }
+    }
+
+    /// Blocking receive (spin → yield → park).
+    pub fn recv(&self) -> Result<T, RecvError> {
+        self.recv_deadline(None).map_err(|_| RecvError)
+    }
+
+    /// Blocking receive with a timeout; under busy-poll the wait
+    /// spins/yields to the deadline instead of parking.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+        match self.try_recv() {
+            Ok(v) => return Ok(v),
+            Err(TryRecvError::Disconnected) => return Err(RecvTimeoutError::Disconnected),
+            Err(TryRecvError::Empty) => {}
+        }
+        self.recv_deadline(Some(Instant::now() + timeout))
+    }
+
+    /// Pop up to `max` messages into `out`; returns how many.
+    pub fn drain_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.inner.dequeue() {
+                Some(v) => {
+                    out.push(v);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Iterator over currently-available messages (stops at Empty or
+    /// Disconnected, like `std::sync::mpsc::Receiver::try_iter`).
+    pub fn try_iter(&self) -> TryIter<'_, T> {
+        TryIter { rx: self }
+    }
+
+    /// Ring capacity after power-of-two rounding.
+    pub fn capacity(&self) -> usize {
+        self.inner.buf.len()
+    }
+}
+
+pub struct TryIter<'a, T> {
+    rx: &'a RingReceiver<T>,
+}
+
+impl<T> Iterator for TryIter<'_, T> {
+    type Item = T;
+    fn next(&mut self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_and_capacity_rounding() {
+        let (tx, rx) = ring::<u32>(3); // rounds to 4
+        assert_eq!(rx.capacity(), 4);
+        for i in 0..4 {
+            tx.try_send(i).unwrap();
+        }
+        assert!(matches!(tx.try_send(4), Err(TrySendError::Full(4))));
+        for i in 0..4 {
+            assert_eq!(rx.try_recv(), Ok(i));
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+
+    #[test]
+    fn disconnects_both_ways() {
+        let (tx, rx) = ring::<u8>(4);
+        tx.try_send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.try_recv(), Ok(7)); // buffered survives sender drop
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+
+        let (tx, rx) = ring::<u8>(4);
+        drop(rx);
+        assert!(matches!(tx.try_send(1), Err(TrySendError::Disconnected(1))));
+        assert!(matches!(tx.send(2), Err(SendError(2))));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_empty() {
+        let (_tx, rx) = ring::<u8>(4);
+        let t0 = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(20)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_send() {
+        let (tx, rx) = ring::<u64>(8);
+        let h = std::thread::spawn(move || rx.recv().unwrap());
+        std::thread::sleep(Duration::from_millis(30)); // let it park
+        tx.try_send(99).unwrap();
+        assert_eq!(h.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn unconsumed_values_are_dropped_once() {
+        struct Counted(Arc<AtomicUsize>);
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = ring::<Counted>(8);
+        for _ in 0..5 {
+            tx.try_send(Counted(drops.clone())).unwrap();
+        }
+        drop(rx.try_recv()); // one consumed (and dropped)
+        drop(rx);
+        drop(tx);
+        assert_eq!(drops.load(Ordering::SeqCst), 5);
+    }
+}

@@ -48,6 +48,8 @@ fn spawn_cluster(
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
             remote_ranks: Vec::new(),
+            busy_poll: false,
+            pin_cores: false,
         },
         backend_txs,
         comp_tx,

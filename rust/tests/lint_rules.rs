@@ -538,6 +538,94 @@ fn lock_send_suppression_round_trip() {
     assert_flagged(&bare, LOCK_RULE, line_of(LOCK_ALLOW_BARE, "self.handle.lock()"));
 }
 
+// --------------------------------------------------------------- channel
+
+const CHANNEL_RULE: &str = "hot-path-channel";
+
+const CHANNEL_BAD: &str = r#"
+use std::sync::mpsc::{channel, sync_channel};
+
+pub fn spawn_inbox() {
+    let (tx, rx) = channel::<u64>();
+    let (btx, brx) = sync_channel(8);
+    let _ = (tx, rx, btx, brx);
+}
+"#;
+
+#[test]
+fn hot_path_channel_flags_construction_in_coordinator() {
+    let f = only("coordinator/inbox.rs", CHANNEL_BAD, CHANNEL_RULE);
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, CHANNEL_RULE, line_of(CHANNEL_BAD, "channel::<u64>()"));
+    assert_flagged(&f, CHANNEL_RULE, line_of(CHANNEL_BAD, "sync_channel(8)"));
+    assert!(f[0].message.contains("util::ring"), "{}", f[0]);
+}
+
+#[test]
+fn hot_path_channel_is_scoped_to_coordinator() {
+    // The same construction outside coordinator/ is not this rule's
+    // business (serve/, net/, and the benches keep their mpsc edges).
+    let f = only("net/client.rs", CHANNEL_BAD, CHANNEL_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const CHANNEL_NEAR: &str = r#"
+pub fn wire(conn: &Conn) -> u32 {
+    let c = conn.channel();
+    c.id()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn harness_channels_are_fine() {
+        let (tx, rx) = channel::<u8>();
+        let _ = (tx, rx);
+    }
+}
+"#;
+
+#[test]
+fn hot_path_channel_ignores_methods_imports_and_tests() {
+    // `.channel()` is a method of the same name, the `use` line is an
+    // import not a construction, and #[cfg(test)] code is exempt.
+    let f = only("coordinator/inbox.rs", CHANNEL_NEAR, CHANNEL_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const CHANNEL_ALLOW_OK: &str = r#"
+pub fn drain_ack() {
+    // lint:allow(hot-path-channel): fixture: one-shot control-rate ack, not a hot hop
+    let (tx, rx) = std::sync::mpsc::channel::<u32>();
+    let _ = (tx, rx);
+}
+"#;
+
+const CHANNEL_ALLOW_BARE: &str = r#"
+pub fn drain_ack() {
+    // lint:allow(hot-path-channel)
+    let (tx, rx) = std::sync::mpsc::channel::<u32>();
+    let _ = (tx, rx);
+}
+"#;
+
+#[test]
+fn hot_path_channel_suppression_round_trip() {
+    let ok = lint_sources(&[("coordinator/inbox.rs", CHANNEL_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("coordinator/inbox.rs", CHANNEL_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(CHANNEL_ALLOW_BARE, "lint:allow"));
+    assert_flagged(
+        &bare,
+        CHANNEL_RULE,
+        line_of(CHANNEL_ALLOW_BARE, "mpsc::channel::<u32>()"),
+    );
+}
+
 // ---------------------------------------------------------- suppressions
 
 const HYGIENE: &str = r#"
@@ -580,6 +668,7 @@ fn rule_registry_is_complete() {
         MICROS_RULE,
         PANIC_RULE,
         LOCK_RULE,
+        CHANNEL_RULE,
         "suppression",
     ] {
         assert!(names.contains(&expected), "missing rule `{expected}` in {names:?}");

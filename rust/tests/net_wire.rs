@@ -32,6 +32,8 @@ fn config(remote_ranks: Vec<String>) -> CoordinatorConfig {
         net_bound: Micros::from_millis_f64(1.0),
         exec_margin: Micros::ZERO,
         remote_ranks,
+        busy_poll: false,
+        pin_cores: false,
     }
 }
 
@@ -41,6 +43,8 @@ fn spawn_server(shards: usize) -> (String, std::thread::JoinHandle<()>) {
         shards,
         gpus: 0..NUM_GPUS as u32,
         max_sessions: Some(1),
+        busy_poll: false,
+        pin_cores: false,
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();

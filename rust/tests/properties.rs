@@ -189,6 +189,8 @@ fn spawn_loopback_rank_server(
         shards,
         gpus: 0..num_gpus as u32,
         max_sessions: Some(1),
+        busy_poll: false,
+        pin_cores: false,
     })
     .expect("bind loopback rank server");
     let addr = server.local_addr().to_string();
@@ -243,6 +245,8 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize, remote: bool) -> Vec<Vec
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
             remote_ranks,
+            busy_poll: false,
+            pin_cores: false,
         },
         backend_txs,
         comp_tx,
@@ -454,6 +458,8 @@ fn drive_coordinator_with_resize(
             net_bound: Micros::from_millis_f64(1.0),
             exec_margin: Micros::ZERO,
             remote_ranks: Vec::new(),
+            busy_poll: false,
+            pin_cores: false,
         },
         backend_txs,
         comp_tx,

@@ -1,0 +1,378 @@
+//! Stress tests for the lock-free shard fabric (`util::ring`): the
+//! MPSC ring the coordinator's submit→grant hops ride after PR 7.
+//!
+//! These run in the nightly TSan/ASan matrix (see ci.yml) — the point
+//! is to give the sanitizers real producer/consumer interleavings to
+//! chew on, not just the single-threaded unit tests in `ring.rs`:
+//!
+//! * no loss, no duplication — every tagged message arrives exactly
+//!   once (multiset equality against what producers sent);
+//! * FIFO per producer — a consumer never sees producer P's message k
+//!   after its message k+1;
+//! * both documented full-queue policies — `try_send` sheds (and the
+//!   shed count balances the books), blocking `send` never drops;
+//! * wrap-around — slot sequence-lap arithmetic stays correct across
+//!   many laps of a tiny ring;
+//! * `Parker` wake-not-lost — the Dekker prepare/re-check/park
+//!   protocol never strands the consumer when the producer publishes
+//!   between the re-check and the park.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use symphony::util::ring::{ring, Parker, TryRecvError, TrySendError};
+
+/// Tag a message with its producer and per-producer sequence number so
+/// the consumer can check ordering and uniqueness.
+fn tag(producer: u64, seq: u64) -> u64 {
+    (producer << 32) | seq
+}
+
+fn untag(v: u64) -> (u64, u64) {
+    (v >> 32, v & 0xffff_ffff)
+}
+
+/// N producers blast tagged messages through a ring smaller than the
+/// total volume, using the control-traffic policy (blocking `send`,
+/// must not drop). The consumer asserts exactly-once delivery and
+/// per-producer FIFO.
+#[test]
+fn mpsc_stress_no_loss_no_dup_fifo_per_producer() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 20_000;
+
+    let (tx, rx) = ring::<u64>(256);
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            for seq in 0..PER_PRODUCER {
+                tx.send(tag(p, seq)).expect("consumer alive for whole run");
+            }
+        }));
+    }
+    drop(tx); // consumer sees Disconnected once all producers finish
+
+    let consumer = std::thread::spawn(move || {
+        let mut next_seq = [0u64; PRODUCERS as usize];
+        let mut total = 0u64;
+        while let Ok(v) = rx.recv() {
+            let (p, seq) = untag(v);
+            assert_eq!(
+                seq, next_seq[p as usize],
+                "producer {p} out of order: got seq {seq}, expected {}",
+                next_seq[p as usize]
+            );
+            next_seq[p as usize] = seq + 1;
+            total += 1;
+        }
+        (total, next_seq)
+    });
+
+    for h in handles {
+        h.join().expect("producer");
+    }
+    let (total, next_seq) = consumer.join().expect("consumer");
+    assert_eq!(total, PRODUCERS * PER_PRODUCER, "no loss, no duplication");
+    for (p, n) in next_seq.iter().enumerate() {
+        assert_eq!(*n, PER_PRODUCER, "producer {p} fully delivered");
+    }
+}
+
+/// The request-traffic policy: `try_send` against a full ring sheds,
+/// and the books balance — delivered + shed == sent, with delivered
+/// messages still unique and FIFO per producer (shedding drops
+/// messages, it never reorders or duplicates them).
+#[test]
+fn try_send_shed_policy_balances_and_keeps_order() {
+    const PRODUCERS: u64 = 3;
+    const PER_PRODUCER: u64 = 30_000;
+
+    let (tx, rx) = ring::<u64>(64);
+    let shed = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let tx = tx.clone();
+        let shed = shed.clone();
+        handles.push(std::thread::spawn(move || {
+            for seq in 0..PER_PRODUCER {
+                match tx.try_send(tag(p, seq)) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // The ingest shed point: count and move on.
+                        shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        panic!("consumer alive for whole run")
+                    }
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    let consumer = std::thread::spawn(move || {
+        let mut last_seq = [None::<u64>; PRODUCERS as usize];
+        let mut delivered = 0u64;
+        while let Ok(v) = rx.recv() {
+            let (p, seq) = untag(v);
+            if let Some(prev) = last_seq[p as usize] {
+                assert!(
+                    seq > prev,
+                    "producer {p}: seq {seq} after {prev} — duplicate or reorder"
+                );
+            }
+            last_seq[p as usize] = Some(seq);
+            delivered += 1;
+        }
+        delivered
+    });
+
+    for h in handles {
+        h.join().expect("producer");
+    }
+    let delivered = consumer.join().expect("consumer");
+    assert_eq!(
+        delivered + shed.load(Ordering::Relaxed),
+        PRODUCERS * PER_PRODUCER,
+        "every message either delivered or counted as shed"
+    );
+}
+
+/// Sequence-lap arithmetic across many wrap-arounds of a tiny ring:
+/// fill to capacity, observe `Full`, drain, refill — hundreds of laps.
+#[test]
+fn wrap_around_at_capacity_boundary() {
+    let (tx, rx) = ring::<u64>(4);
+    assert_eq!(rx.capacity(), 4);
+
+    let mut next = 0u64;
+    for lap in 0..300u64 {
+        // Fill to the brim, confirm the ring reports Full (not a lost
+        // message, not an overwrite).
+        for _ in 0..4 {
+            tx.try_send(next).expect("room below capacity");
+            next += 1;
+        }
+        match tx.try_send(u64::MAX) {
+            Err(TrySendError::Full(v)) => assert_eq!(v, u64::MAX, "shed value comes back"),
+            other => panic!("lap {lap}: expected Full, got {other:?}"),
+        }
+        // Partial drain + refill so head/tail cross the boundary at
+        // every alignment, not just multiples of the capacity.
+        for _ in 0..2 {
+            let got = rx.try_recv().expect("published value");
+            assert_eq!(got, next - 4, "FIFO across wrap");
+            tx.try_send(next).expect("slot just freed");
+            next += 1;
+        }
+        // Drain the remaining window back to empty.
+        let mut expect = next - 4;
+        for _ in 0..4 {
+            assert_eq!(rx.try_recv(), Ok(expect));
+            expect += 1;
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+}
+
+/// Blocking `send` (control traffic) parks against a full ring and
+/// completes once the consumer frees a slot — it must not drop and
+/// must not error while the consumer is merely slow.
+#[test]
+fn blocking_send_waits_out_a_full_ring() {
+    let (tx, rx) = ring::<u64>(2);
+    tx.try_send(1).unwrap();
+    tx.try_send(2).unwrap();
+
+    let sender = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        tx.send(3).expect("consumer drains before SEND_RETRY_BOUND");
+        t0.elapsed()
+    });
+
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(rx.try_recv(), Ok(1));
+    let waited = sender.join().expect("sender");
+    assert!(
+        waited >= Duration::from_millis(40),
+        "send should have blocked on the full ring, returned after {waited:?}"
+    );
+    assert_eq!(rx.recv_timeout(Duration::from_secs(1)), Ok(2));
+    assert_eq!(rx.recv_timeout(Duration::from_secs(1)), Ok(3));
+}
+
+/// `drain_into` honors its `max` and preserves FIFO across calls.
+#[test]
+fn drain_into_bounded_batches_stay_fifo() {
+    let (tx, rx) = ring::<u64>(16);
+    for i in 0..10 {
+        tx.try_send(i).unwrap();
+    }
+    let mut out = Vec::new();
+    assert_eq!(rx.drain_into(&mut out, 4), 4);
+    assert_eq!(rx.drain_into(&mut out, 4), 4);
+    assert_eq!(rx.drain_into(&mut out, 4), 2);
+    assert_eq!(rx.drain_into(&mut out, 4), 0);
+    assert_eq!(out, (0..10).collect::<Vec<_>>());
+}
+
+/// The Dekker wake-not-lost protocol, hammered directly: the producer
+/// publishes (atomic store) then `wake()`s; the consumer `prepare()`s,
+/// re-checks, and only parks if the publish is not yet visible. If a
+/// wake were ever lost, an iteration would stall until its park
+/// deadline — the generous per-iteration deadline converts "lost
+/// wakeup" into a loud assertion instead of a hang.
+#[test]
+fn parker_wake_is_never_lost() {
+    const ITERS: u64 = 20_000;
+    let parker = Arc::new(Parker::new());
+    let turn = Arc::new(AtomicU64::new(0));
+
+    let producer = {
+        let parker = parker.clone();
+        let turn = turn.clone();
+        std::thread::spawn(move || {
+            for i in 1..=ITERS {
+                turn.store(i, Ordering::SeqCst);
+                parker.wake();
+                // Vary the interleaving: sometimes race straight into
+                // the next publish, sometimes let the consumer park.
+                if i % 64 == 0 {
+                    std::thread::sleep(Duration::from_micros(50));
+                } else if i % 7 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        })
+    };
+
+    let t0 = Instant::now();
+    for i in 1..=ITERS {
+        loop {
+            parker.prepare();
+            if turn.load(Ordering::SeqCst) >= i {
+                parker.cancel();
+                break;
+            }
+            // A lost wake would burn the full deadline here; the outer
+            // assertion below catches systematic loss without making a
+            // single spurious timeout fatal.
+            parker.park(Some(Instant::now() + Duration::from_millis(100)));
+        }
+    }
+    producer.join().expect("producer");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "consumer progress stalled — wakeups are being lost"
+    );
+}
+
+/// The ring's own park edge under a bursty producer: the consumer uses
+/// blocking `recv` (spin → yield → park) and a producer that
+/// alternates bursts with idle gaps long enough to force real parking.
+/// Everything sent must arrive, in order.
+#[test]
+fn ring_recv_parks_and_never_misses_a_burst() {
+    const BURSTS: u64 = 40;
+    const PER_BURST: u64 = 100;
+
+    let (tx, rx) = ring::<u64>(512);
+    let producer = std::thread::spawn(move || {
+        let mut v = 0u64;
+        for _ in 0..BURSTS {
+            for _ in 0..PER_BURST {
+                tx.send(v).expect("consumer alive");
+                v += 1;
+            }
+            // Long enough for the consumer's Waiter ladder to exhaust
+            // its spin+yield budget and genuinely park.
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+
+    let mut expect = 0u64;
+    while let Ok(v) = rx.recv() {
+        assert_eq!(v, expect);
+        expect += 1;
+    }
+    producer.join().expect("producer");
+    assert_eq!(expect, BURSTS * PER_BURST);
+}
+
+/// Busy-poll and parked receivers are observationally identical: the
+/// same tagged multi-producer workload delivers the same per-producer
+/// sequences either way (the `--busy-poll` flag trades CPU for
+/// latency, never correctness).
+#[test]
+fn busy_poll_and_parked_drains_deliver_identically() {
+    fn run(busy_poll: bool) -> Vec<u64> {
+        const PRODUCERS: u64 = 3;
+        const PER_PRODUCER: u64 = 5_000;
+        let (tx, rx) = ring::<u64>(256);
+        rx.set_busy_poll(busy_poll);
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for seq in 0..PER_PRODUCER {
+                    tx.send(tag(p, seq)).expect("consumer alive");
+                }
+            }));
+        }
+        drop(tx);
+        // Per-producer delivery orders (global interleaving is
+        // scheduler-dependent; per-producer sequences are the contract).
+        let mut seqs: Vec<Vec<u64>> = vec![Vec::new(); PRODUCERS as usize];
+        while let Ok(v) = rx.recv() {
+            let (p, seq) = untag(v);
+            seqs[p as usize].push(seq);
+        }
+        for h in handles {
+            h.join().expect("producer");
+        }
+        seqs.into_iter().flatten().collect()
+    }
+
+    let parked = run(false);
+    let spinning = run(true);
+    assert_eq!(parked, spinning, "drain mode must not change delivery");
+}
+
+/// Dropping the receiver turns both send flavors into immediate
+/// `Disconnected`/`SendError` under concurrency — producers must not
+/// spin out the full retry bound against a dead consumer.
+#[test]
+fn producers_observe_receiver_death_promptly() {
+    let (tx, rx) = ring::<u64>(8);
+    let gate = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let tx = tx.clone();
+        let gate = gate.clone();
+        handles.push(std::thread::spawn(move || {
+            while gate.load(Ordering::Acquire) == 0 {
+                std::hint::spin_loop();
+            }
+            let t0 = Instant::now();
+            let mut saw_disconnect = false;
+            for i in 0..1_000u64 {
+                if tx.send(i).is_err() {
+                    saw_disconnect = true;
+                    break;
+                }
+            }
+            assert!(saw_disconnect, "send kept succeeding with no receiver");
+            assert!(
+                t0.elapsed() < Duration::from_secs(4),
+                "disconnect must surface well before SEND_RETRY_BOUND"
+            );
+        }));
+    }
+    drop(rx);
+    gate.store(1, Ordering::Release);
+    for h in handles {
+        h.join().expect("producer");
+    }
+}

@@ -28,6 +28,8 @@ fn sleep_backend_meets_slo_at_moderate_load() {
         duration: Duration::from_millis(800),
         backend: BackendKind::Sleep,
         autoscale: None,
+        busy_poll: false,
+        pin_cores: false,
         seed: 11,
     })
     .unwrap();
@@ -53,6 +55,8 @@ fn sleep_backend_batches_under_pressure() {
         duration: Duration::from_millis(700),
         backend: BackendKind::Sleep,
         autoscale: None,
+        busy_poll: false,
+        pin_cores: false,
         seed: 3,
     })
     .unwrap();
@@ -127,6 +131,8 @@ fn pjrt_end_to_end_serving() {
             artifacts_dir: dir,
         },
         autoscale: None,
+        busy_poll: false,
+        pin_cores: false,
         seed: 9,
     })
     .unwrap();
