@@ -1,0 +1,204 @@
+//! Schedule exploration: bounded-preemption DFS with state-fingerprint
+//! pruning, plus a seeded random-walk mode for budgets beyond the
+//! exhaustive bound.
+//!
+//! Exploration is stateless-replay: each run spawns fresh model
+//! threads and replays a recorded choice prefix, then explores new
+//! choices depth-first (always picking index 0 and backtracking the
+//! deepest point that still has an unexplored sibling). Fingerprints
+//! are consulted only *beyond* the replay prefix — states on the
+//! prefix were necessarily seen by earlier runs and must not prune
+//! their own replay.
+
+use std::collections::HashSet;
+use std::panic;
+use std::sync::{Mutex, Once, PoisonError};
+use std::time::Instant;
+
+use super::sched::{self, CheckAbort, Sched};
+use crate::util::rng::Rng;
+
+/// Serializes explorations across `cargo test` threads: the scheduler
+/// slot (`sched::CURRENT`) and the virtual memory are process-global.
+static RUN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Silence the panic reports of `CheckAbort` unwinds (they are control
+/// flow, thousands per exploration). Installed once, wraps whatever
+/// hook was active, delegates everything else — so real model
+/// assertion failures still print their diagnostics.
+fn install_panic_filter() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if !info.payload().is::<CheckAbort>() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreConfig {
+    /// Preemption budget per run (CHESS-style): context switches away
+    /// from a still-runnable thread. Most real concurrency bugs
+    /// manifest within 2.
+    pub preempt: u32,
+    /// Hard cap on runs for the exhaustive mode; hitting it reports
+    /// `exhausted: false` (CI keeps bounds that never hit this).
+    pub max_schedules: usize,
+    /// `Some((n, seed))`: run `n` uniformly random schedules instead
+    /// of DFS (nightly deep sweeps).
+    pub random: Option<(usize, u64)>,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            preempt: 2,
+            max_schedules: 200_000,
+            random: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ExploreReport {
+    /// Runs executed (including pruned ones).
+    pub schedules: usize,
+    /// Runs cut short because their state fingerprint was already
+    /// explored.
+    pub pruned: usize,
+    /// First failure found, if any — an assertion, a detected data
+    /// race / uninitialized read, or a deadlock.
+    pub failure: Option<String>,
+    /// DFS exhausted the tree (false = `max_schedules` cap hit;
+    /// always false in random mode).
+    pub exhausted: bool,
+    pub millis: u128,
+}
+
+enum RunOutcome {
+    Complete,
+    Failure(String),
+    Pruned,
+}
+
+/// One scheduled run of the model: replay `replay`, then continue
+/// depth-first (or randomly). Returns the choice trace as
+/// `(enabled_count, chosen_index)` pairs.
+fn run_once(
+    run: fn(),
+    budget: u32,
+    replay: &[(u32, u32)],
+    mut seen: Option<&mut HashSet<u64>>,
+    mut rng: Option<&mut Rng>,
+) -> (Vec<(u32, u32)>, RunOutcome) {
+    let sched = Sched::new(budget);
+    sched::install(&sched);
+    sched.spawn_root(run);
+    let mut trace: Vec<(u32, u32)> = Vec::new();
+    let outcome = loop {
+        let mut g = sched.wait_quiescent();
+        if let Some(msg) = g.failure.clone() {
+            drop(g);
+            break RunOutcome::Failure(msg);
+        }
+        let acts = g.enabled_actions();
+        if acts.is_empty() {
+            if g.all_finished() {
+                drop(g);
+                break RunOutcome::Complete;
+            }
+            let msg = g.describe_stuck();
+            drop(g);
+            break RunOutcome::Failure(msg);
+        }
+        let d = trace.len();
+        let idx = if d < replay.len() {
+            debug_assert_eq!(
+                replay[d].0 as usize,
+                acts.len(),
+                "nondeterministic model: replay diverged at depth {d}"
+            );
+            (replay[d].1 as usize).min(acts.len() - 1)
+        } else if let Some(r) = rng.as_deref_mut() {
+            (r.next_u64() % acts.len() as u64) as usize
+        } else {
+            if let Some(s) = seen.as_deref_mut() {
+                if !s.insert(g.fingerprint()) {
+                    drop(g);
+                    break RunOutcome::Pruned;
+                }
+            }
+            0
+        };
+        trace.push((acts.len() as u32, idx as u32));
+        g.apply_action(acts[idx]);
+        drop(g);
+        sched.notify();
+    };
+    // Abandon whatever is still alive (no-op when all finished), wait
+    // for the real threads, clear the scheduler slot.
+    sched.abort();
+    sched.join_all();
+    sched::uninstall();
+    (trace, outcome)
+}
+
+/// Explore `run` under `cfg`. Takes the process-wide run lock; safe to
+/// call from concurrent tests.
+pub fn explore(run: fn(), cfg: ExploreConfig) -> ExploreReport {
+    let _guard = RUN_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    install_panic_filter();
+    let t0 = Instant::now();
+    let mut report = ExploreReport {
+        schedules: 0,
+        pruned: 0,
+        failure: None,
+        exhausted: false,
+        millis: 0,
+    };
+
+    if let Some((n, seed)) = cfg.random {
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let (_, outcome) = run_once(run, cfg.preempt, &[], None, Some(&mut rng));
+            report.schedules += 1;
+            if let RunOutcome::Failure(msg) = outcome {
+                report.failure = Some(msg);
+                break;
+            }
+        }
+        report.millis = t0.elapsed().as_millis();
+        return report;
+    }
+
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut prefix: Vec<(u32, u32)> = Vec::new();
+    loop {
+        let (trace, outcome) = run_once(run, cfg.preempt, &prefix, Some(&mut seen), None);
+        report.schedules += 1;
+        match outcome {
+            RunOutcome::Failure(msg) => {
+                report.failure = Some(msg);
+                break;
+            }
+            RunOutcome::Pruned => report.pruned += 1,
+            RunOutcome::Complete => {}
+        }
+        if report.schedules >= cfg.max_schedules {
+            break; // cap hit: exhausted stays false
+        }
+        // Backtrack: deepest choice point with an unexplored sibling.
+        let Some(i) = (0..trace.len()).rfind(|&i| trace[i].1 + 1 < trace[i].0) else {
+            report.exhausted = true;
+            break;
+        };
+        prefix.clear();
+        prefix.extend_from_slice(&trace[..i]);
+        prefix.push((trace[i].0, trace[i].1 + 1));
+    }
+    report.millis = t0.elapsed().as_millis();
+    report
+}

@@ -1,0 +1,63 @@
+//! `symphony check` — a CHESS/loom-style deterministic concurrency
+//! model checker for the lock-free fabric (offline registry: no loom,
+//! no syn; std-only, like `util/error.rs` and the lint tokenizer).
+//!
+//! PR 7 hand-rolled the fabric — the Vyukov MPSC ring, the Dekker
+//! `Parker`, `FreeHints` merge-publish — and its wake-not-lost and
+//! exactly-once invariants were desk-checked prose plus whatever
+//! schedules nightly TSan happened to sample. This subsystem makes
+//! them machine-checked: the protocol code (generic over
+//! `util::shim::Fabric`) is instantiated on a virtual fabric whose
+//! every atomic/fence/blocking edge traps into a cooperative
+//! scheduler, and a DFS explorer enumerates every distinct
+//! interleaving up to a preemption bound, under a TSO memory model
+//! with store buffers and vector-clock race detection.
+//!
+//! Layout: [`sched`] (scheduler + virtual memory), [`virt`] (the
+//! instrumented `Fabric`), [`explore`] (DFS + pruning + random walk),
+//! [`models`] (the closed model set, incl. two seeded bugs that the
+//! checker must fail). CLI: `symphony check --all`, gated in CI; the
+//! tier-1 mirror is `rust/tests/check_explorer.rs`.
+
+pub mod explore;
+pub mod models;
+pub mod sched;
+pub mod virt;
+
+pub use explore::{explore, ExploreConfig, ExploreReport};
+pub use models::{all_models, find_model, Model};
+pub use sched::vspawn;
+
+/// Verdict for one model under one exploration config.
+pub struct ModelReport {
+    pub name: &'static str,
+    pub expect_fail: bool,
+    pub report: ExploreReport,
+    /// Passed its contract: failure-free for real models, at least
+    /// one failing schedule found for seeded (`expect_fail`) ones.
+    pub ok: bool,
+}
+
+/// Explore one model and judge it against its contract.
+pub fn check_model(m: &Model, cfg: ExploreConfig) -> ModelReport {
+    let report = explore(m.run, cfg);
+    let ok = if m.expect_fail {
+        report.failure.is_some()
+    } else {
+        report.failure.is_none()
+    };
+    ModelReport {
+        name: m.name,
+        expect_fail: m.expect_fail,
+        report,
+        ok,
+    }
+}
+
+/// Explore every registered model. Returns the per-model reports and
+/// whether all met their contracts.
+pub fn check_all(cfg: ExploreConfig) -> (Vec<ModelReport>, bool) {
+    let reports: Vec<ModelReport> = all_models().iter().map(|m| check_model(m, cfg)).collect();
+    let all_ok = reports.iter().all(|r| r.ok);
+    (reports, all_ok)
+}

@@ -1,0 +1,373 @@
+//! The closed model set `symphony check` explores: small, terminating
+//! concurrent programs built from the *production* fabric code
+//! instantiated at [`VirtFabric`], plus two deliberately broken
+//! replicas (`expect_fail`) that prove the checker actually detects
+//! the bug classes it exists for.
+//!
+//! Model-authoring rules (the explorer depends on them):
+//!
+//! * Deterministic apart from scheduling: no clocks, no OS entropy —
+//!   `recv()`/`try_send` only (never `send`/`recv_timeout`, which read
+//!   `Instant::now`), no unbounded retry loops (every loop must be
+//!   bounded by a delivery the schedule guarantees).
+//! * All shared objects created in the single-threaded setup section,
+//!   so scheduler ids — and therefore state fingerprints — are
+//!   schedule-independent.
+//! * At most [`crate::check::sched::MAX_THREADS`] threads, spawned via
+//!   [`vspawn`], all joined or provably finished at model exit.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::sched::vspawn;
+use super::virt::{VirtAtomic, VirtBlocker, VirtCellToken, VirtFabric};
+use crate::coordinator::router::GenericFreeHints;
+use crate::util::ring::{ring_in, GenericParker};
+use crate::util::shim::{Fabric, ShimAtomic, ShimBlocker};
+
+/// One checkable model. `expect_fail` inverts the verdict: the
+/// explorer must find at least one failing schedule (these are the
+/// seeded-bug meta-models that keep the checker honest).
+pub struct Model {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub expect_fail: bool,
+    pub run: fn(),
+}
+
+pub fn all_models() -> &'static [Model] {
+    &MODELS
+}
+
+pub fn find_model(name: &str) -> Option<&'static Model> {
+    MODELS.iter().find(|m| m.name == name)
+}
+
+static MODELS: [Model; 9] = [
+    Model {
+        name: "parker-wake",
+        about: "Dekker wake-not-lost: a parking consumer never misses the producer's wake",
+        expect_fail: false,
+        run: parker_wake,
+    },
+    Model {
+        name: "parker-cancel",
+        about: "prepare/cancel racing a wake leaves the parker reusable",
+        expect_fail: false,
+        run: parker_cancel,
+    },
+    Model {
+        name: "ring-spsc-wrap",
+        about: "capacity-2 ring: FIFO exactly-once through two full wrap laps",
+        expect_fail: false,
+        run: ring_spsc_wrap,
+    },
+    Model {
+        name: "ring-mpsc",
+        about: "two producers, one consumer: exactly-once delivery as a multiset",
+        expect_fail: false,
+        run: ring_mpsc,
+    },
+    Model {
+        name: "ring-disconnect",
+        about: "sender-drop disconnect wakes a blocked receiver; buffered values survive",
+        expect_fail: false,
+        run: ring_disconnect,
+    },
+    Model {
+        name: "hints-reserve",
+        about: "one advertised slot, two racing steerers: exactly one reservation wins",
+        expect_fail: false,
+        run: hints_reserve,
+    },
+    Model {
+        name: "hints-republish",
+        about: "owner republish racing reserve+redeem never resurrects a claimed slot",
+        expect_fail: false,
+        run: hints_republish,
+    },
+    Model {
+        name: "seeded-parker-nofence",
+        about: "SEEDED BUG (must fail): Dekker fence removed from the parker — lost wake",
+        expect_fail: true,
+        run: seeded_parker_nofence,
+    },
+    Model {
+        name: "seeded-ring-relaxed-publish",
+        about: "SEEDED BUG (must fail): slot publish downgraded to Relaxed — data race",
+        expect_fail: true,
+        run: seeded_ring_relaxed_publish,
+    },
+];
+
+// ---------------------------------------------------------------- parker
+
+/// The production wake-not-lost protocol, verbatim
+/// (`GenericParker<VirtFabric>` *is* `util::ring::Parker`'s code): a
+/// consumer that announces PARKED and re-checks must either see the
+/// producer's flag or be notified — every schedule, even with both
+/// sides' stores sitting in TSO buffers.
+fn parker_wake() {
+    let p = Arc::new(GenericParker::<VirtFabric>::new());
+    let flag = Arc::new(VirtFabric::atomic(0));
+    let (p2, f2) = (p.clone(), flag.clone());
+    let producer = vspawn(move || {
+        f2.store(1, Ordering::Release);
+        p2.wake();
+    });
+    loop {
+        if flag.load(Ordering::Acquire) == 1 {
+            break;
+        }
+        p.prepare();
+        if flag.load(Ordering::Acquire) == 1 {
+            p.cancel();
+            break;
+        }
+        // A lost wake deadlocks right here — the explorer reports it.
+        p.park(None);
+    }
+    producer.join();
+}
+
+/// The cancel path: a consumer that withdraws its park announcement
+/// (re-check found the flag) must leave the parker in a state where a
+/// later prepare/cancel cycle still terminates, even when the
+/// withdrawal raced the producer's CAS to NOTIFIED.
+fn parker_cancel() {
+    let p = Arc::new(GenericParker::<VirtFabric>::new());
+    let flag = Arc::new(VirtFabric::atomic(0));
+    let (p2, f2) = (p.clone(), flag.clone());
+    let producer = vspawn(move || {
+        f2.store(1, Ordering::Release);
+        p2.wake();
+    });
+    p.prepare();
+    if flag.load(Ordering::Acquire) == 1 {
+        p.cancel();
+    } else {
+        p.park(None);
+    }
+    producer.join();
+    assert_eq!(flag.load(Ordering::Acquire), 1, "join orders the flag store");
+    // Reusability after a possibly-raced cancel: the state machine
+    // must not wedge a later cycle (a leaked NOTIFIED is consumed by
+    // park's swap; a leaked PARKED would hang the next wake-less
+    // cancel — which this exercises).
+    p.prepare();
+    p.cancel();
+}
+
+// ------------------------------------------------------------------ ring
+
+/// SPSC through the smallest ring: two concurrent sends into a
+/// capacity-2 ring (never full by construction), consumed blocking;
+/// then a sequential lap crossing the wrap boundary twice, exercising
+/// the Vyukov `seq == pos + capacity` recycle arithmetic.
+fn ring_spsc_wrap() {
+    let (tx, rx) = ring_in::<usize, VirtFabric>(2);
+    let producer = vspawn(move || {
+        tx.try_send(1).expect("cap-2 ring holds a 1st value");
+        tx.try_send(2).expect("cap-2 ring holds a 2nd value");
+        tx
+    });
+    let a = rx.recv().expect("producer alive");
+    let b = rx.recv().expect("producer alive");
+    assert_eq!((a, b), (1, 2), "FIFO exactly-once");
+    let tx = producer.join();
+    for lap in 3..7usize {
+        tx.try_send(lap).expect("empty ring accepts");
+        assert_eq!(rx.recv(), Ok(lap), "wrap lap delivers in order");
+    }
+    drop(tx);
+    assert!(rx.recv().is_err(), "last sender gone: disconnect, not hang");
+}
+
+/// MPSC exactly-once: two producers race their tail-CAS claims; the
+/// consumer must see each value exactly once, in some order, and then
+/// a clean disconnect once both sender handles dropped.
+fn ring_mpsc() {
+    let (tx, rx) = ring_in::<usize, VirtFabric>(4);
+    let t1 = tx.clone();
+    let p1 = vspawn(move || t1.try_send(10).expect("cap 4, 2 sends total"));
+    let p2 = vspawn(move || tx.try_send(20).expect("cap 4, 2 sends total"));
+    let a = rx.recv().expect("senders alive");
+    let b = rx.recv().expect("senders alive");
+    assert!(
+        (a == 10 && b == 20) || (a == 20 && b == 10),
+        "exactly-once multiset, got ({a}, {b})"
+    );
+    p1.join();
+    p2.join();
+    assert!(rx.recv().is_err(), "both senders dropped: disconnect");
+}
+
+/// The sender-drop disconnect edge: the last sender's drop must wake a
+/// receiver that parked between the send and the drop, and buffered
+/// values must survive the disconnect.
+fn ring_disconnect() {
+    let (tx, rx) = ring_in::<usize, VirtFabric>(2);
+    let producer = vspawn(move || {
+        tx.try_send(7).expect("empty ring accepts");
+        // tx drops here: senders hits 0, the drop wakes the receiver.
+    });
+    let mut got = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(v) => got.push(v),
+            Err(_) => break,
+        }
+    }
+    assert_eq!(got, vec![7], "value delivered once, then disconnect");
+    producer.join();
+}
+
+// ----------------------------------------------------------------- hints
+
+/// The PR-6 invariant, now schedule-exhaustive: one advertised slot,
+/// two racing `reserve` calls — exactly one may claim it.
+fn hints_reserve() {
+    let h = GenericFreeHints::<VirtFabric>::new(1);
+    h.publish(0, 1);
+    let (h1, h2) = (h.clone(), h.clone());
+    let a = vspawn(move || h1.reserve(0));
+    let b = vspawn(move || h2.reserve(0));
+    let (ra, rb) = (a.join(), b.join());
+    assert!(ra != rb, "exactly one steerer claims the single slot");
+    assert_eq!(h.free_of(0), 0, "the advertisement is spent");
+    assert!(!h.reserve(0), "an empty hint is never claimable");
+}
+
+/// Merge-publish racing a reserve+redeem: wherever the owner's
+/// republish lands in the steerer's sequence, the claim is discounted
+/// at most once and at least the un-redeemed window — the advertised
+/// count ends in [1, 2], never 0 (lost slot) or 3 (resurrected claim).
+fn hints_republish() {
+    let h = GenericFreeHints::<VirtFabric>::new(1);
+    h.publish(0, 2);
+    let h1 = h.clone();
+    let steerer = vspawn(move || {
+        let got = h1.reserve(0);
+        if got {
+            h1.redeem(0);
+        }
+        got
+    });
+    h.publish(0, 2); // the racing republish (owner still sees 2 free)
+    assert!(steerer.join(), "two advertised slots: reserve cannot fail");
+    let free = h.free_of(0);
+    assert!(
+        (1..=2).contains(&free),
+        "republish must neither lose nor resurrect the claim: free = {free}"
+    );
+}
+
+// ---------------------------------------------------------- seeded bugs
+
+/// A Parker replica with the Dekker edge removed: `prepare` publishes
+/// PARKED with a plain Release store (no SeqCst, no fence) and `wake`
+/// drops its fence. On TSO both announcements can sit in store
+/// buffers while both re-checks read stale memory — the classic
+/// store-buffering litmus — and the consumer parks forever. The
+/// explorer MUST report the deadlock (within 1 preemption).
+fn seeded_parker_nofence() {
+    const EMPTY: usize = 0;
+    const PARKED: usize = 1;
+    const NOTIFIED: usize = 2;
+    struct NoFenceParker {
+        state: VirtAtomic,
+        blocker: VirtBlocker,
+    }
+    impl NoFenceParker {
+        fn prepare(&self) {
+            // SEEDED BUG: should be a SeqCst store + SeqCst fence.
+            self.state.store(PARKED, Ordering::Release);
+        }
+        fn cancel(&self) {
+            self.state.store(EMPTY, Ordering::SeqCst);
+        }
+        fn park(&self) {
+            self.blocker
+                .block_while(&mut || self.state.load(Ordering::SeqCst) == PARKED, None);
+            let _ = self.state.swap(EMPTY, Ordering::SeqCst) == NOTIFIED;
+        }
+        fn wake(&self) {
+            // SEEDED BUG: the SeqCst fence before this load is removed.
+            if self.state.load(Ordering::Acquire) == PARKED {
+                self.blocker.update_and_notify(&mut || {
+                    self.state
+                        .compare_exchange(PARKED, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                });
+            }
+        }
+    }
+    let p = Arc::new(NoFenceParker {
+        state: VirtFabric::atomic(EMPTY),
+        blocker: VirtFabric::blocker(),
+    });
+    let flag = Arc::new(VirtFabric::atomic(0));
+    let (p2, f2) = (p.clone(), flag.clone());
+    let producer = vspawn(move || {
+        f2.store(1, Ordering::Release);
+        p2.wake();
+    });
+    loop {
+        if flag.load(Ordering::Acquire) == 1 {
+            break;
+        }
+        p.prepare();
+        if flag.load(Ordering::Acquire) == 1 {
+            p.cancel();
+            break;
+        }
+        p.park();
+    }
+    producer.join();
+}
+
+/// A single-slot ring replica with the publish downgraded from
+/// Release to Relaxed. The consumer's Acquire load can see the
+/// sequence flip without acquiring a happens-before edge to the
+/// payload write (a Relaxed store drains with an empty clock), so the
+/// payload read races the write. The explorer MUST report the race.
+fn seeded_ring_relaxed_publish() {
+    struct BrokenSlot {
+        seq: VirtAtomic,
+        val: UnsafeCell<MaybeUninit<u64>>,
+        tok: VirtCellToken,
+    }
+    // SAFETY: the payload cell is handed between exactly two threads
+    // under the seq protocol this model exists to break; the checker's
+    // cell race detector (keyed by `tok`) is the real guard — a
+    // schedule where the handoff is unsound is *reported*, not relied
+    // on to be absent.
+    unsafe impl Send for BrokenSlot {}
+    // SAFETY: same protocol argument as the Send impl above.
+    unsafe impl Sync for BrokenSlot {}
+    let s = Arc::new(BrokenSlot {
+        seq: VirtFabric::atomic(0),
+        val: UnsafeCell::new(MaybeUninit::uninit()),
+        tok: VirtFabric::cell_token(),
+    });
+    let s2 = s.clone();
+    let producer = vspawn(move || {
+        VirtFabric::cell_write(&s2.tok);
+        // SAFETY: slot unpublished (seq still 0), single producer —
+        // exclusive write access by construction of this model.
+        unsafe { (*s2.val.get()).write(42) };
+        // SEEDED BUG: the publish should be Ordering::Release.
+        s2.seq.store(1, Ordering::Relaxed);
+    });
+    if s.seq.load(Ordering::Acquire) == 1 {
+        VirtFabric::cell_read(&s.tok);
+        // SAFETY: guarded by the seq Acquire load — exactly the claim
+        // the seeded Relaxed publish breaks; the checker must object
+        // via the race detector before this read is trusted.
+        let v = unsafe { (*s.val.get()).assume_init_read() };
+        assert_eq!(v, 42);
+    }
+    producer.join();
+}

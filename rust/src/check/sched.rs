@@ -1,0 +1,877 @@
+//! The cooperative scheduler behind `symphony check`: virtual threads,
+//! a TSO memory model with per-thread store buffers, vector-clock
+//! happens-before tracking, and a virtual Mutex/Condvar blocker.
+//!
+//! Model code runs on real OS threads, but every shim operation
+//! (`check::virt::VirtFabric`) traps here and parks until the
+//! controller (the explorer's `run_once` loop) grants it the baton —
+//! so exactly one model thread makes exactly one memory step at a
+//! time, and the controller chooses which. The schedule is the
+//! sequence of those choices.
+//!
+//! Memory model — TSO, the strongest model our targets (x86) actually
+//! give and weak enough to catch the fabric's real bug classes:
+//!
+//! * A `Relaxed`/`Release` store goes into the storing thread's FIFO
+//!   buffer; it reaches shared memory either when the controller picks
+//!   a *drain* action (an un-counted hardware step) or when the thread
+//!   flushes — `SeqCst` stores, RMWs, SeqCst fences, blocking, and
+//!   finishing all flush. Loads forward from the own buffer first.
+//!   This is what detects a missing Dekker fence: both sides' stores
+//!   sit buffered while both sides' loads read stale memory.
+//! * Release stores carry a vector-clock snapshot; an Acquire load
+//!   that reads memory joins the clock the last store published.
+//!   A `Relaxed` store drains with an *empty* clock — it breaks the
+//!   release chain, which is what detects a publish downgraded to
+//!   `Relaxed`: the consumer sees the flag but acquires no
+//!   happens-before edge to the payload write.
+//! * Slot payloads (`UnsafeCell` accesses) are tracked per cell:
+//!   a read must happen-after the last write, a write must
+//!   happen-after every prior access, and a read before any write is
+//!   a use of an uninitialized slot. Violations are reported as data
+//!   races, not relied upon to crash.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Panic payload used to unwind model threads when a run is abandoned
+/// (failure found, schedule pruned, or deadlock detected). The thread
+/// wrapper swallows it; any other payload is a real model failure.
+pub(crate) struct CheckAbort;
+
+/// Upper bound on virtual threads per model (vector clocks are
+/// fixed-width).
+pub(crate) const MAX_THREADS: usize = 8;
+
+type Vc = [u32; MAX_THREADS];
+
+fn vc_join(a: &mut Vc, b: &Vc) {
+    for i in 0..MAX_THREADS {
+        a[i] = a[i].max(b[i]);
+    }
+}
+
+fn vc_leq(a: &Vc, b: &Vc) -> bool {
+    (0..MAX_THREADS).all(|i| a[i] <= b[i])
+}
+
+fn is_acquire(o: Ordering) -> bool {
+    matches!(o, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn is_release(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// What a thread parked at a scheduling point wants to do next. The
+/// controller needs this for enabledness (locks, joins) and for the
+/// state fingerprint; the operation itself is applied by the thread.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Desc {
+    /// Synthetic first point of every thread.
+    Start,
+    /// Any always-enabled atomic op on atomic `id`.
+    Atomic(usize),
+    /// SeqCst fence.
+    Fence,
+    /// Instrumented cell (slot payload) access.
+    Cell(usize),
+    /// Blocker lock acquire — enabled only while the lock is free.
+    Lock(usize),
+    /// Condvar wait (atomically releases the lock and sleeps).
+    CvWait(usize),
+    CvNotify(usize),
+    Unlock(usize),
+    /// Join on a virtual thread — enabled once the target finished.
+    Join(usize),
+}
+
+impl Desc {
+    fn tag(self) -> u64 {
+        match self {
+            Desc::Start => 1,
+            Desc::Atomic(i) => 2 + ((i as u64) << 4),
+            Desc::Fence => 3,
+            Desc::Cell(i) => 4 + ((i as u64) << 4),
+            Desc::Lock(i) => 5 + ((i as u64) << 4),
+            Desc::CvWait(i) => 6 + ((i as u64) << 4),
+            Desc::CvNotify(i) => 7 + ((i as u64) << 4),
+            Desc::Unlock(i) => 8 + ((i as u64) << 4),
+            Desc::Join(i) => 9 + ((i as u64) << 4),
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Status {
+    /// Executing model code between scheduling points.
+    Running,
+    /// Parked at a point, waiting for the baton.
+    AtPoint(Desc),
+    /// Asleep inside a virtual Condvar wait on lock `id`.
+    BlockedCv(usize),
+    Finished,
+}
+
+struct BufEntry {
+    atom: usize,
+    val: usize,
+    /// Release stores carry the storer's clock; `None` for Relaxed —
+    /// the drained store then *erases* the cell's sync clock, breaking
+    /// the release chain (what makes a downgraded publish detectable).
+    sync: Option<Vc>,
+}
+
+struct ThreadState {
+    status: Status,
+    vc: Vc,
+    buffer: VecDeque<BufEntry>,
+    /// FNV fold of (op kind, observed value) — makes the thread's
+    /// local execution state a deterministic function of the
+    /// fingerprint (the code is deterministic given its observations).
+    obs: u64,
+    /// Set by a notifier/unlocker handing this CvWait-blocked thread
+    /// the lock back; the sleeping thread resumes when it sees it.
+    resume: bool,
+}
+
+impl ThreadState {
+    fn new(vc: Vc) -> Self {
+        ThreadState {
+            status: Status::Running,
+            vc,
+            buffer: VecDeque::new(),
+            obs: 0xcbf2_9ce4_8422_2325,
+            resume: false,
+        }
+    }
+}
+
+struct MemCell {
+    val: usize,
+    sync: Vc,
+}
+
+#[derive(Default)]
+struct LockState {
+    held_by: Option<usize>,
+    /// CvWait-woken threads queued for the lock; unlock hands off
+    /// FIFO. (Deterministic refinement of std's unspecified order.)
+    reacquirers: VecDeque<usize>,
+    cv_waiters: VecDeque<usize>,
+    /// Release clock of the last holder — acquiring joins it.
+    sync: Vc,
+}
+
+struct CellState {
+    written: bool,
+    last_write: Vc,
+    /// Join of all reader clocks since the last write.
+    reads: Vc,
+}
+
+pub(crate) struct State {
+    threads: Vec<ThreadState>,
+    mem: Vec<MemCell>,
+    locks: Vec<LockState>,
+    cells: Vec<CellState>,
+    granted: Option<usize>,
+    last_go: Option<usize>,
+    /// Remaining preemption budget for this run.
+    pub(crate) budget: u32,
+    pub(crate) failure: Option<String>,
+    pub(crate) aborting: bool,
+}
+
+impl State {
+    fn new(budget: u32) -> Self {
+        State {
+            threads: vec![ThreadState::new([0; MAX_THREADS])],
+            mem: Vec::new(),
+            locks: Vec::new(),
+            cells: Vec::new(),
+            granted: None,
+            last_go: None,
+            budget,
+            failure: None,
+            aborting: false,
+        }
+    }
+
+    fn tick(&mut self, t: usize) {
+        self.threads[t].vc[t] += 1;
+    }
+
+    fn obs(&mut self, t: usize, tag: u64, val: u64) {
+        let th = &mut self.threads[t];
+        for x in [tag, val] {
+            th.obs = (th.obs ^ x).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        self.aborting = true;
+    }
+
+    /// Write-through to shared memory (a drain, flush, or SeqCst/RMW
+    /// store). A `None` sync clock (Relaxed store) erases the cell's —
+    /// a Relaxed store heads a release sequence that synchronizes with
+    /// nothing.
+    fn mem_write(&mut self, atom: usize, val: usize, sync: Option<Vc>) {
+        let c = &mut self.mem[atom];
+        c.val = val;
+        c.sync = sync.unwrap_or([0; MAX_THREADS]);
+    }
+
+    fn flush(&mut self, t: usize) {
+        while let Some(e) = self.threads[t].buffer.pop_front() {
+            self.mem_write(e.atom, e.val, e.sync);
+        }
+    }
+
+    fn drain_one(&mut self, t: usize) {
+        if let Some(e) = self.threads[t].buffer.pop_front() {
+            self.mem_write(e.atom, e.val, e.sync);
+        }
+    }
+
+    /// Release the blocker lock `id` on behalf of `t`: publish `t`'s
+    /// clock into the lock and hand off FIFO to a CvWait reacquirer if
+    /// one is queued (their clock joins the lock's at handoff).
+    fn lock_release(&mut self, id: usize, t: usize) {
+        let vc = self.threads[t].vc;
+        let l = &mut self.locks[id];
+        vc_join(&mut l.sync, &vc);
+        if let Some(w) = l.reacquirers.pop_front() {
+            l.held_by = Some(w);
+            let sync = l.sync;
+            vc_join(&mut self.threads[w].vc, &sync);
+            self.threads[w].resume = true;
+            self.threads[w].status = Status::Running;
+        } else {
+            l.held_by = None;
+        }
+    }
+
+    fn is_enabled(&self, t: usize) -> bool {
+        match self.threads[t].status {
+            Status::AtPoint(Desc::Lock(id)) => self.locks[id].held_by.is_none(),
+            Status::AtPoint(Desc::Join(target)) => {
+                matches!(self.threads[target].status, Status::Finished)
+            }
+            Status::AtPoint(_) => true,
+            _ => false,
+        }
+    }
+
+    fn all_finished(&self) -> bool {
+        self.threads
+            .iter()
+            .all(|t| matches!(t.status, Status::Finished))
+    }
+
+    /// No model thread is mid-step: everyone is parked at a point,
+    /// asleep in a CvWait, or finished, and no baton is outstanding.
+    fn quiescent(&self) -> bool {
+        self.granted.is_none()
+            && self
+                .threads
+                .iter()
+                .all(|t| !matches!(t.status, Status::Running))
+    }
+
+    /// The deterministic enabled-action list the controller chooses
+    /// from: runnable threads (restricted to the incumbent once the
+    /// preemption budget is spent) plus one drain action per non-empty
+    /// store buffer (drains are hardware, never preemptions).
+    pub(crate) fn enabled_actions(&self) -> Vec<Action> {
+        let restrict = self.budget == 0 && self.last_go.map_or(false, |t| self.is_enabled(t));
+        let mut acts = Vec::new();
+        for t in 0..self.threads.len() {
+            if self.is_enabled(t) && (!restrict || self.last_go == Some(t)) {
+                acts.push(Action::Go(t));
+            }
+        }
+        for t in 0..self.threads.len() {
+            if !self.threads[t].buffer.is_empty() {
+                acts.push(Action::Drain(t));
+            }
+        }
+        acts
+    }
+
+    pub(crate) fn describe_stuck(&self) -> String {
+        let mut parts = Vec::new();
+        for (i, t) in self.threads.iter().enumerate() {
+            parts.push(match t.status {
+                Status::Finished => format!("t{i}: finished"),
+                Status::BlockedCv(l) => format!("t{i}: blocked in condvar wait (lock {l})"),
+                Status::AtPoint(d) => format!("t{i}: stuck at {d:?}"),
+                Status::Running => format!("t{i}: running"),
+            });
+        }
+        format!("deadlock: no enabled action [{}]", parts.join(", "))
+    }
+
+    /// Canonical state hash for pruning. Everything schedule-visible
+    /// goes in: per-thread status/observation hashes, shared memory
+    /// values and sync clocks, store buffers, cell race-detector
+    /// state, locks, the remaining preemption budget, and the
+    /// incumbent thread. Ids are assigned at *creation* (model setup
+    /// runs single-threaded), so they are schedule-independent and
+    /// equal hashes mean equal states.
+    pub(crate) fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut f = |x: u64| {
+            h = (h ^ x).wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for t in &self.threads {
+            f(match t.status {
+                Status::Running => 1,
+                Status::AtPoint(d) => 2 ^ (d.tag() << 8),
+                Status::BlockedCv(l) => 3 ^ ((l as u64) << 8),
+                Status::Finished => 4,
+            });
+            f(t.obs);
+            f(t.buffer.len() as u64);
+            for e in &t.buffer {
+                f(e.atom as u64);
+                f(e.val as u64);
+                match &e.sync {
+                    None => f(0),
+                    Some(vc) => vc.iter().for_each(|&c| f(1 + c as u64)),
+                }
+            }
+            t.vc.iter().for_each(|&c| f(c as u64));
+        }
+        for m in &self.mem {
+            f(m.val as u64);
+            m.sync.iter().for_each(|&c| f(c as u64));
+        }
+        for l in &self.locks {
+            f(l.held_by.map_or(0, |t| 1 + t as u64));
+            f(l.reacquirers.iter().fold(7, |a, &t| a * 31 + t as u64));
+            f(l.cv_waiters.iter().fold(7, |a, &t| a * 31 + t as u64));
+            l.sync.iter().for_each(|&c| f(c as u64));
+        }
+        for c in &self.cells {
+            f(c.written as u64);
+            c.last_write.iter().for_each(|&x| f(x as u64));
+            c.reads.iter().for_each(|&x| f(x as u64));
+        }
+        f(self.budget as u64);
+        f(self.last_go.map_or(0, |t| 1 + t as u64));
+        h
+    }
+
+    /// Grant the baton for `a` (controller side). Switching away from
+    /// a still-enabled incumbent costs one preemption; drains cost
+    /// nothing.
+    pub(crate) fn apply_action(&mut self, a: Action) {
+        match a {
+            Action::Go(t) => {
+                if let Some(prev) = self.last_go {
+                    if prev != t && self.is_enabled(prev) {
+                        self.budget = self.budget.saturating_sub(1);
+                    }
+                }
+                self.last_go = Some(t);
+                self.granted = Some(t);
+            }
+            Action::Drain(t) => self.drain_one(t),
+        }
+    }
+}
+
+/// One controller choice: hand the baton to a thread, or drain the
+/// oldest buffered store of a thread (a hardware step — uncounted).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Action {
+    Go(usize),
+    Drain(usize),
+}
+
+// ------------------------------------------------------------ scheduler
+
+pub(crate) struct Sched {
+    state: Mutex<State>,
+    cv: Condvar,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// The exploration currently running in this process. `RUN_LOCK` (in
+/// `explore.rs`) serializes explorations, so one slot suffices; model
+/// threads find their scheduler here.
+static CURRENT: Mutex<Option<Arc<Sched>>> = Mutex::new(None);
+
+thread_local! {
+    static TID: Cell<Option<usize>> = Cell::new(None);
+}
+
+fn cur_tid() -> usize {
+    TID.with(|t| t.get())
+        .expect("virtual fabric op outside a symphony check thread")
+}
+
+pub(crate) fn with_sched() -> Arc<Sched> {
+    CURRENT
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone()
+        .expect("virtual fabric op outside a symphony check run")
+}
+
+pub(crate) fn install(sched: &Arc<Sched>) {
+    *CURRENT.lock().unwrap_or_else(PoisonError::into_inner) = Some(sched.clone());
+}
+
+pub(crate) fn uninstall() {
+    *CURRENT.lock().unwrap_or_else(PoisonError::into_inner) = None;
+}
+
+impl Sched {
+    pub(crate) fn new(budget: u32) -> Arc<Sched> {
+        Arc::new(Sched {
+            state: Mutex::new(State::new(budget)),
+            cv: Condvar::new(),
+            handles: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub(crate) fn lockst(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn cvwait<'a>(&'a self, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        self.cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Controller side: block until the model is quiescent (or a
+    /// failure was recorded), so `enabled_actions` is meaningful.
+    pub(crate) fn wait_quiescent(&self) -> MutexGuard<'_, State> {
+        let mut g = self.lockst();
+        while !(g.quiescent() || g.failure.is_some()) {
+            g = self.cvwait(g);
+        }
+        g
+    }
+
+    pub(crate) fn notify(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Abandon the run: unwind every model thread (blocked waits wake
+    /// and panic `CheckAbort`; threads mid-unwind fall into the
+    /// apply-immediately fast path so drops never double-panic).
+    pub(crate) fn abort(&self) {
+        self.lockst().aborting = true;
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn join_all(&self) {
+        let handles: Vec<_> = self
+            .handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// The heart of the trap: park at a scheduling point, wait for the
+    /// baton, apply the operation under the state lock, hand control
+    /// back. While the run is aborting this degrades to an
+    /// apply-immediately fast path (never blocks), and threads that
+    /// are *not* already unwinding are unwound via `CheckAbort`.
+    fn act<R>(&self, desc: Desc, apply: impl FnOnce(&mut State, usize) -> R) -> R {
+        let me = cur_tid();
+        let mut g = self.lockst();
+        if !g.aborting {
+            g.threads[me].status = Status::AtPoint(desc);
+            self.cv.notify_all();
+            while !g.aborting && g.granted != Some(me) {
+                g = self.cvwait(g);
+            }
+            if g.granted == Some(me) {
+                g.granted = None;
+            }
+            g.threads[me].status = Status::Running;
+            g.tick(me);
+        }
+        let abort = g.aborting;
+        let r = apply(&mut g, me);
+        drop(g);
+        self.cv.notify_all();
+        if abort && !std::thread::panicking() {
+            panic::panic_any(CheckAbort);
+        }
+        r
+    }
+
+    // ---------------------------------------------- object registration
+
+    /// Ids are handed out at object *creation* (not first access), so
+    /// they depend only on the model's deterministic setup code, never
+    /// on the schedule — a requirement for fingerprint comparability
+    /// across schedules. Registration is not a scheduling point.
+    pub(crate) fn alloc_atomic(&self, init: usize) -> usize {
+        let mut g = self.lockst();
+        g.mem.push(MemCell {
+            val: init,
+            sync: [0; MAX_THREADS],
+        });
+        g.mem.len() - 1
+    }
+
+    pub(crate) fn alloc_lock(&self) -> usize {
+        let mut g = self.lockst();
+        g.locks.push(LockState::default());
+        g.locks.len() - 1
+    }
+
+    pub(crate) fn alloc_cell(&self) -> usize {
+        let mut g = self.lockst();
+        g.cells.push(CellState {
+            written: false,
+            last_write: [0; MAX_THREADS],
+            reads: [0; MAX_THREADS],
+        });
+        g.cells.len() - 1
+    }
+
+    // ----------------------------------------------------- atomic ops
+
+    pub(crate) fn atomic_load(&self, id: usize, order: Ordering) -> usize {
+        self.act(Desc::Atomic(id), |g, me| {
+            // TSO store forwarding: a thread always sees its own
+            // buffered stores, newest first.
+            let forwarded = g.threads[me]
+                .buffer
+                .iter()
+                .rev()
+                .find(|e| e.atom == id)
+                .map(|e| e.val);
+            let v = match forwarded {
+                Some(v) => v,
+                None => {
+                    let (val, sync) = {
+                        let c = &g.mem[id];
+                        (c.val, c.sync)
+                    };
+                    if is_acquire(order) {
+                        vc_join(&mut g.threads[me].vc, &sync);
+                    }
+                    val
+                }
+            };
+            g.obs(me, 10 + id as u64, v as u64);
+            v
+        })
+    }
+
+    pub(crate) fn atomic_store(&self, id: usize, val: usize, order: Ordering) {
+        self.act(Desc::Atomic(id), |g, me| {
+            if order == Ordering::SeqCst {
+                // SeqCst stores flush (the x86 mapping: store + mfence).
+                g.flush(me);
+                let vc = g.threads[me].vc;
+                g.mem_write(id, val, Some(vc));
+            } else {
+                let sync = is_release(order).then(|| g.threads[me].vc);
+                g.threads[me].buffer.push_back(BufEntry {
+                    atom: id,
+                    val,
+                    sync,
+                });
+            }
+            g.obs(me, 20 + id as u64, val as u64);
+        })
+    }
+
+    /// All RMWs (swap, fetch_add/sub, compare_exchange, fetch_update)
+    /// funnel here: flush (LOCK-prefixed ops drain the buffer), read
+    /// memory, maybe write. A successful relaxed RMW *preserves* the
+    /// cell's sync clock (RMWs continue a release sequence); a
+    /// release-ish one joins its own clock in.
+    pub(crate) fn atomic_rmw(
+        &self,
+        id: usize,
+        success: Ordering,
+        failure: Ordering,
+        f: &mut dyn FnMut(usize) -> Option<usize>,
+    ) -> Result<usize, usize> {
+        self.act(Desc::Atomic(id), |g, me| {
+            g.flush(me);
+            let old = g.mem[id].val;
+            let r = match f(old) {
+                Some(new) => {
+                    let sync = g.mem[id].sync;
+                    if is_acquire(success) {
+                        vc_join(&mut g.threads[me].vc, &sync);
+                    }
+                    if is_release(success) {
+                        let vc = g.threads[me].vc;
+                        vc_join(&mut g.mem[id].sync, &vc);
+                    }
+                    g.mem[id].val = new;
+                    Ok(old)
+                }
+                None => {
+                    let sync = g.mem[id].sync;
+                    if is_acquire(failure) {
+                        vc_join(&mut g.threads[me].vc, &sync);
+                    }
+                    Err(old)
+                }
+            };
+            g.obs(me, 30 + id as u64, (old as u64) << 1 | r.is_ok() as u64);
+            r
+        })
+    }
+
+    pub(crate) fn fence_seqcst(&self) {
+        self.act(Desc::Fence, |g, me| {
+            g.flush(me);
+            g.obs(me, 40, 0);
+        });
+    }
+
+    // ------------------------------------------------------- cell ops
+
+    pub(crate) fn cell_read(&self, id: usize) {
+        self.act(Desc::Cell(id), |g, me| {
+            let my = g.threads[me].vc;
+            let (written, last_write) = (g.cells[id].written, g.cells[id].last_write);
+            if !written {
+                g.fail(format!("cell {id}: read of uninitialized slot"));
+            } else if !vc_leq(&last_write, &my) {
+                g.fail(format!(
+                    "cell {id}: data race — read does not happen-after last write \
+                     (missing release/acquire edge on the publishing atomic)"
+                ));
+            } else {
+                vc_join(&mut g.cells[id].reads, &my);
+            }
+            g.obs(me, 50 + id as u64, 0);
+        });
+    }
+
+    pub(crate) fn cell_write(&self, id: usize) {
+        self.act(Desc::Cell(id), |g, me| {
+            let my = g.threads[me].vc;
+            let (written, last_write, reads) = {
+                let c = &g.cells[id];
+                (c.written, c.last_write, c.reads)
+            };
+            if written && !vc_leq(&last_write, &my) {
+                g.fail(format!("cell {id}: data race — concurrent writes"));
+            } else if !vc_leq(&reads, &my) {
+                g.fail(format!(
+                    "cell {id}: data race — write concurrent with a prior read"
+                ));
+            } else {
+                let c = &mut g.cells[id];
+                c.written = true;
+                c.last_write = my;
+                c.reads = [0; MAX_THREADS];
+            }
+            g.obs(me, 60 + id as u64, 0);
+        });
+    }
+
+    // ---------------------------------------------------- blocker ops
+
+    pub(crate) fn blocker_lock(&self, id: usize) {
+        self.act(Desc::Lock(id), |g, me| {
+            if g.aborting {
+                return; // lock discipline is moot on an abandoned run
+            }
+            debug_assert!(g.locks[id].held_by.is_none(), "granted a held lock");
+            g.locks[id].held_by = Some(me);
+            let sync = g.locks[id].sync;
+            vc_join(&mut g.threads[me].vc, &sync);
+            g.obs(me, 70 + id as u64, 0);
+        });
+    }
+
+    pub(crate) fn blocker_unlock(&self, id: usize) {
+        self.act(Desc::Unlock(id), |g, me| {
+            if g.aborting {
+                return;
+            }
+            g.lock_release(id, me);
+            g.obs(me, 80 + id as u64, 0);
+        });
+    }
+
+    pub(crate) fn blocker_notify(&self, id: usize) {
+        self.act(Desc::CvNotify(id), |g, me| {
+            if g.aborting {
+                return;
+            }
+            if let Some(w) = g.locks[id].cv_waiters.pop_front() {
+                if g.locks[id].held_by.is_none() {
+                    g.locks[id].held_by = Some(w);
+                    let sync = g.locks[id].sync;
+                    vc_join(&mut g.threads[w].vc, &sync);
+                    g.threads[w].resume = true;
+                    g.threads[w].status = Status::Running;
+                } else {
+                    // Notifier holds the lock (the Parker's
+                    // update_and_notify discipline): the waiter queues
+                    // for the unlock handoff.
+                    g.locks[id].reacquirers.push_back(w);
+                }
+            }
+            g.obs(me, 90 + id as u64, 0);
+        });
+    }
+
+    /// Condvar wait: atomically release the lock and sleep; wake
+    /// holding the lock again (handed off by the notifier/unlocker).
+    /// Cannot use `act` — the sleep happens *inside* the operation.
+    pub(crate) fn blocker_cv_wait(&self, id: usize) {
+        let me = cur_tid();
+        let mut g = self.lockst();
+        if !g.aborting {
+            g.threads[me].status = Status::AtPoint(Desc::CvWait(id));
+            self.cv.notify_all();
+            while !g.aborting && g.granted != Some(me) {
+                g = self.cvwait(g);
+            }
+            if g.granted == Some(me) {
+                g.granted = None;
+            }
+            g.tick(me);
+            if !g.aborting {
+                // Blocking flushes the store buffer (kernel entry).
+                g.flush(me);
+                g.lock_release(id, me);
+                g.threads[me].status = Status::BlockedCv(id);
+                g.threads[me].resume = false;
+                g.locks[id].cv_waiters.push_back(me);
+                g.obs(me, 100 + id as u64, 0);
+                self.cv.notify_all();
+                while !g.threads[me].resume && !g.aborting {
+                    g = self.cvwait(g);
+                }
+                g.threads[me].resume = false;
+                g.threads[me].status = Status::Running;
+            }
+        }
+        let abort = g.aborting;
+        drop(g);
+        self.cv.notify_all();
+        if abort && !std::thread::panicking() {
+            panic::panic_any(CheckAbort);
+        }
+    }
+
+    // --------------------------------------------------- thread model
+
+    fn register_thread(&self, parent: usize) -> usize {
+        let mut g = self.lockst();
+        g.tick(parent);
+        let vc = g.threads[parent].vc;
+        let tid = g.threads.len();
+        assert!(tid < MAX_THREADS, "model exceeds {MAX_THREADS} threads");
+        g.threads.push(ThreadState::new(vc));
+        tid
+    }
+
+    fn thread_finished(&self, tid: usize, panic_payload: Option<Box<dyn std::any::Any + Send>>) {
+        let mut g = self.lockst();
+        g.flush(tid);
+        g.threads[tid].status = Status::Finished;
+        if let Some(p) = panic_payload {
+            if !p.is::<CheckAbort>() {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "model panicked".to_string());
+                g.fail(format!("t{tid}: {msg}"));
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn spawn_thread<T: Send + 'static>(
+        self: &Arc<Self>,
+        tid: usize,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> VirtHandle<T> {
+        let slot = Arc::new(Mutex::new(None));
+        let sched = self.clone();
+        let slot2 = slot.clone();
+        let h = std::thread::spawn(move || {
+            TID.with(|t| t.set(Some(tid)));
+            let r = panic::catch_unwind(AssertUnwindSafe(|| {
+                // Synthetic first point: a freshly spawned thread is
+                // schedulable before its first real operation.
+                sched.act(Desc::Start, |g, me| g.obs(me, 5, 0));
+                f()
+            }));
+            match r {
+                Ok(v) => {
+                    *slot2.lock().unwrap_or_else(PoisonError::into_inner) = Some(v);
+                    sched.thread_finished(tid, None);
+                }
+                Err(p) => sched.thread_finished(tid, Some(p)),
+            }
+        });
+        self.handles
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(h);
+        VirtHandle { tid, slot }
+    }
+
+    /// Start the model's root thread (tid 0) — called by the runner.
+    pub(crate) fn spawn_root(self: &Arc<Self>, f: impl FnOnce() + Send + 'static) {
+        self.spawn_thread(0, f);
+    }
+}
+
+/// Handle to a virtual thread. `join` is a scheduling point (enabled
+/// once the target finishes) and joins the target's vector clock.
+pub struct VirtHandle<T> {
+    tid: usize,
+    slot: Arc<Mutex<Option<T>>>,
+}
+
+impl<T> VirtHandle<T> {
+    pub fn join(self) -> T {
+        let sched = with_sched();
+        let tid = self.tid;
+        sched.act(Desc::Join(tid), |g, me| {
+            if !g.aborting {
+                let tvc = g.threads[tid].vc;
+                vc_join(&mut g.threads[me].vc, &tvc);
+                g.obs(me, 110, tid as u64);
+            }
+        });
+        self.slot
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take()
+            .expect("joined virtual thread left no result")
+    }
+}
+
+/// Spawn a model thread under the active scheduler. Model code only —
+/// panics outside a `symphony check` run.
+pub fn vspawn<T: Send + 'static>(f: impl FnOnce() -> T + Send + 'static) -> VirtHandle<T> {
+    let sched = with_sched();
+    let tid = sched.register_thread(cur_tid());
+    sched.spawn_thread(tid, f)
+}

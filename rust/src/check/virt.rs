@@ -1,0 +1,170 @@
+//! The instrumented fabric: `util::shim::Fabric` implemented by
+//! trapping every operation into the cooperative scheduler
+//! (`check::sched`). Instantiating the *production* protocol code —
+//! `GenericParker<VirtFabric>`, `ring_in::<T, VirtFabric>`,
+//! `GenericFreeHints<VirtFabric>` — at this fabric is what lets
+//! `symphony check` enumerate its interleavings without a second copy
+//! of the protocols existing anywhere.
+//!
+//! Objects register with the scheduler at **creation** (not first
+//! access), so their ids depend only on the model's single-threaded
+//! setup code and state fingerprints are comparable across schedules.
+//! Consequently the virtual fabric is only usable inside a check run;
+//! constructing a `VirtAtomic` outside one panics.
+//!
+//! Semantics deviations from the real fabric, all safe-side:
+//!
+//! * `compare_exchange_weak` never fails spuriously (a deterministic
+//!   refinement — spurious failure adds schedules in which the caller
+//!   retries, which the surrounding loops make equivalent).
+//! * Blocker deadlines are ignored (waits are `None`-infinite): models
+//!   must not rely on timeouts, and none do — a lost wake must surface
+//!   as a detected deadlock, not be papered over by a timeout.
+//! * `spin_budget` is (0, 0): under exhaustive exploration a spin
+//!   ladder is pure state-space, and the park edge is the protocol
+//!   under test.
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use super::sched::with_sched;
+use crate::util::shim::{Fabric, ShimAtomic, ShimBlocker};
+
+pub struct VirtAtomic {
+    id: usize,
+}
+
+impl ShimAtomic for VirtAtomic {
+    fn load(&self, order: Ordering) -> usize {
+        with_sched().atomic_load(self.id, order)
+    }
+
+    fn store(&self, v: usize, order: Ordering) {
+        with_sched().atomic_store(self.id, v, order)
+    }
+
+    fn swap(&self, v: usize, order: Ordering) -> usize {
+        with_sched()
+            .atomic_rmw(self.id, order, order, &mut |_| Some(v))
+            .unwrap_or_else(|old| old)
+    }
+
+    fn compare_exchange(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize> {
+        with_sched().atomic_rmw(self.id, success, failure, &mut |c| {
+            (c == current).then_some(new)
+        })
+    }
+
+    fn compare_exchange_weak(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize> {
+        self.compare_exchange(current, new, success, failure)
+    }
+
+    fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+        with_sched()
+            .atomic_rmw(self.id, order, order, &mut |c| Some(c.wrapping_add(v)))
+            .unwrap_or_else(|old| old)
+    }
+
+    fn fetch_sub(&self, v: usize, order: Ordering) -> usize {
+        with_sched()
+            .atomic_rmw(self.id, order, order, &mut |c| Some(c.wrapping_sub(v)))
+            .unwrap_or_else(|old| old)
+    }
+
+    fn fetch_update(
+        &self,
+        set_order: Ordering,
+        fetch_order: Ordering,
+        f: &mut dyn FnMut(usize) -> Option<usize>,
+    ) -> Result<usize, usize> {
+        with_sched().atomic_rmw(self.id, set_order, fetch_order, f)
+    }
+}
+
+pub struct VirtBlocker {
+    id: usize,
+}
+
+impl ShimBlocker for VirtBlocker {
+    fn new() -> Self {
+        VirtBlocker {
+            id: with_sched().alloc_lock(),
+        }
+    }
+
+    fn block_while(&self, keep_waiting: &mut dyn FnMut() -> bool, _deadline: Option<Instant>) {
+        let s = with_sched();
+        s.blocker_lock(self.id);
+        while keep_waiting() {
+            s.blocker_cv_wait(self.id);
+        }
+        s.blocker_unlock(self.id);
+    }
+
+    fn update_and_notify(&self, update: &mut dyn FnMut() -> bool) {
+        let s = with_sched();
+        s.blocker_lock(self.id);
+        if update() {
+            s.blocker_notify(self.id);
+        }
+        s.blocker_unlock(self.id);
+    }
+}
+
+pub struct VirtCellToken {
+    id: usize,
+}
+
+/// The model checker's fabric. See the module docs for the deliberate
+/// semantic refinements versus [`crate::util::shim::RealFabric`].
+pub struct VirtFabric;
+
+impl Fabric for VirtFabric {
+    type Atomic = VirtAtomic;
+    type Blocker = VirtBlocker;
+    type CellToken = VirtCellToken;
+
+    fn atomic(v: usize) -> VirtAtomic {
+        VirtAtomic {
+            id: with_sched().alloc_atomic(v),
+        }
+    }
+
+    fn blocker() -> VirtBlocker {
+        VirtBlocker::new()
+    }
+
+    fn cell_token() -> VirtCellToken {
+        VirtCellToken {
+            id: with_sched().alloc_cell(),
+        }
+    }
+
+    fn cell_read(tok: &VirtCellToken) {
+        with_sched().cell_read(tok.id)
+    }
+
+    fn cell_write(tok: &VirtCellToken) {
+        with_sched().cell_write(tok.id)
+    }
+
+    fn fence_seqcst() {
+        with_sched().fence_seqcst()
+    }
+
+    fn spin_budget() -> (u32, u32) {
+        (0, 0)
+    }
+}

@@ -16,7 +16,7 @@
 //! transport-agnostic; `serve --remote-ranks` swaps the port kind and
 //! nothing else.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::coordinator::messages::{CandWindow, ToRank};
@@ -25,6 +25,7 @@ use crate::core::types::{GpuId, ModelId};
 use crate::net::client::RemoteRank;
 use crate::net::codec::WireToRank;
 use crate::util::ring::RingSender;
+use crate::util::shim::{Fabric, RealFabric, ShimAtomic};
 
 /// The rank shard behind a [`RankPort`] is unreachable: its thread
 /// exited (in-process) or its connection closed (remote). The message
@@ -163,10 +164,9 @@ impl ShardTopology {
 
 /// One shard's advertisement: the free count the owner last published,
 /// and the reservations steering shards have taken against it since.
-#[derive(Default)]
-struct ShardHint {
-    free: AtomicUsize,
-    reserved: AtomicUsize,
+struct ShardHint<F: Fabric> {
+    free: F::Atomic,
+    reserved: F::Atomic,
 }
 
 /// Free-GPU hints: one `{free, reserved}` pair per shard. `free` is
@@ -177,15 +177,37 @@ struct ShardHint {
 /// revalidated — but a republish must not resurrect slots that were
 /// just claimed, or every starved sibling re-steers at the same GPU
 /// each publish interval.
-#[derive(Clone)]
-pub struct FreeHints {
-    counts: Arc<Vec<ShardHint>>,
+///
+/// Generic over the [`Fabric`] so `symphony check` can enumerate the
+/// reserve/republish/redeem races on its virtual atomics (models
+/// `hints-reserve` / `hints-republish`); [`FreeHints`] is the
+/// production instantiation.
+pub struct GenericFreeHints<F: Fabric> {
+    counts: Arc<Vec<ShardHint<F>>>,
 }
 
-impl FreeHints {
+/// [`GenericFreeHints`] on the production fabric.
+pub type FreeHints = GenericFreeHints<RealFabric>;
+
+impl<F: Fabric> Clone for GenericFreeHints<F> {
+    fn clone(&self) -> Self {
+        GenericFreeHints {
+            counts: self.counts.clone(),
+        }
+    }
+}
+
+impl<F: Fabric> GenericFreeHints<F> {
     pub fn new(shards: usize) -> Self {
-        FreeHints {
-            counts: Arc::new((0..shards).map(|_| ShardHint::default()).collect()),
+        GenericFreeHints {
+            counts: Arc::new(
+                (0..shards)
+                    .map(|_| ShardHint {
+                        free: F::atomic(0),
+                        reserved: F::atomic(0),
+                    })
+                    .collect(),
+            ),
         }
     }
 
@@ -204,11 +226,19 @@ impl FreeHints {
     /// instead of permanently shrinking the advertisement.
     pub fn publish(&self, shard: usize, free: usize) {
         let h = &self.counts[shard];
+        // relaxed: hints are advisory counters, not a publication of
+        // other memory — no payload is handed over, so no acquire/
+        // release pairing is needed; atomicity of the swap alone keeps
+        // every carried reservation discounted exactly once.
         let carried = h.reserved.swap(0, Ordering::Relaxed);
+        // relaxed: same advisory-counter argument; a steerer reading a
+        // stale count mis-steers one candidate, which revalidation
+        // already handles.
         h.free.store(free.saturating_sub(carried), Ordering::Relaxed);
     }
 
     pub fn free_of(&self, shard: usize) -> usize {
+        // relaxed: advisory read for steering-order heuristics only.
         self.counts[shard].free.load(Ordering::Relaxed)
     }
 
@@ -223,10 +253,17 @@ impl FreeHints {
     /// the same GPU out again while the steered candidate is in flight.
     pub fn reserve(&self, shard: usize) -> bool {
         let h = &self.counts[shard];
+        // relaxed: the claim is the RMW's atomicity itself — two racing
+        // steerers cannot both take the last slot because fetch_update
+        // is a CAS loop on the single counter; no other memory rides on
+        // the edge, so no ordering is required.
         if h.free
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |c| c.checked_sub(1))
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, &mut |c| c.checked_sub(1))
             .is_ok()
         {
+            // relaxed: counter-only bookkeeping; the owner's `publish`
+            // swap observes any interleaving of this increment exactly
+            // once (atomicity), and no payload accompanies it.
             h.reserved.fetch_add(1, Ordering::Relaxed);
             true
         } else {
@@ -240,10 +277,13 @@ impl FreeHints {
     /// arrival; redeeming with no outstanding reservation is a no-op
     /// (the reservation may already have been dropped by a publish).
     pub fn redeem(&self, shard: usize) {
+        // relaxed: counter-only RMW, same argument as `reserve` — the
+        // checked_sub keeps the count from underflowing when the
+        // reservation was already dropped by a publish.
         let _ = self.counts[shard].reserved.fetch_update(
             Ordering::Relaxed,
             Ordering::Relaxed,
-            |c| c.checked_sub(1),
+            &mut |c| c.checked_sub(1),
         );
     }
 }

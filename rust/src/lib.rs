@@ -25,6 +25,7 @@
 //! paper regenerates via `cargo bench` (see DESIGN.md §5).
 
 pub mod autoscale;
+pub mod check;
 pub mod coordinator;
 pub mod core;
 pub mod harness;

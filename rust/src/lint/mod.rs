@@ -1,6 +1,6 @@
 //! `symphony lint` — a std-only invariant checker for this repo.
 //!
-//! Six PRs of desk-checked review discipline, turned into machine
+//! Seven PRs of desk-checked review discipline, turned into machine
 //! rules (see `LINTS.md` at the repo root for the full catalogue and
 //! the past bug motivating each rule):
 //!
@@ -16,6 +16,11 @@
 //!   blocking channel/thread operation.
 //! - `hot-path-channel` — no `std::sync::mpsc` channel construction
 //!   inside `coordinator/` (hot hops ride `util::ring`).
+//! - `unsafe-needs-safety` — every `unsafe` carries a `// SAFETY:`
+//!   comment stating the invariant that makes it sound.
+//! - `relaxed-ordering-reason` — every `Ordering::Relaxed` on the
+//!   lock-free fabric states inline why no happens-before edge is
+//!   needed (`// relaxed:` comment).
 //!
 //! Findings can be silenced inline with
 //! `// lint:allow(rule-name): reason` — on the offending line, or on a

@@ -5,6 +5,8 @@ pub mod hot_path_channel;
 pub mod lock_send;
 pub mod micros_arith;
 pub mod panic_free;
+pub mod relaxed_reason;
+pub mod unsafe_safety;
 pub mod wire_drift;
 
 use super::source::{SourceFile, SourceTree};
@@ -26,6 +28,8 @@ pub fn all() -> Vec<Box<dyn Rule>> {
         Box::new(panic_free::PanicFreeWireSurface),
         Box::new(lock_send::LockAcrossSend),
         Box::new(hot_path_channel::HotPathChannel),
+        Box::new(unsafe_safety::UnsafeNeedsSafety),
+        Box::new(relaxed_reason::RelaxedOrderingReason),
     ]
 }
 

@@ -1,0 +1,147 @@
+//! `relaxed-ordering-reason` — every `Ordering::Relaxed` on the
+//! lock-free fabric carries an inline justification.
+//!
+//! `Relaxed` is the ordering you reach for when a counter is advisory
+//! — and the ordering that silently breaks a publication protocol when
+//! a later edit starts handing payloads over the same atomic (exactly
+//! the seeded bug `symphony check` demonstrates: downgrade the ring's
+//! slot-publish to Relaxed and the consumer reads an unsynchronized
+//! payload). The fabric's desk-checks argued each Relaxed site by hand;
+//! this rule makes the argument load-bearing: each use states *why* no
+//! ordering is needed, so weakening a protocol edge requires deleting
+//! a written claim, not just editing an enum variant.
+//!
+//! Scope: the fabric files only — `util/ring.rs`, `util/shim.rs`,
+//! `coordinator/router.rs`. Plain statistics counters elsewhere
+//! (`coordinator/ingest.rs` drop counts etc.) are not protocol edges.
+//!
+//! Grammar: a comment containing `relaxed:` trailing any line of the
+//! statement, or an own-line comment run directly above the
+//! statement's first line (a multi-line `fetch_update` call is one
+//! statement — its orderings sit on continuation lines, covered by the
+//! comment above the statement). `#[cfg(test)]` modules are exempt;
+//! `// lint:allow(relaxed-ordering-reason): reason` also works.
+
+use std::collections::HashSet;
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::{path_matches, Rule};
+
+pub struct RelaxedOrderingReason;
+
+const RULE: &str = "relaxed-ordering-reason";
+
+const TARGETS: &[&str] = &["util/ring.rs", "util/shim.rs", "coordinator/router.rs"];
+
+impl Rule for RelaxedOrderingReason {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            if TARGETS.iter().any(|t| path_matches(&f.path, t)) {
+                check_file(f, out);
+            }
+        }
+    }
+}
+
+struct Lines {
+    code: HashSet<usize>,
+    comment: HashSet<usize>,
+    /// Lines bearing a comment that contains `relaxed:`.
+    reason: HashSet<usize>,
+}
+
+fn scan_lines(f: &SourceFile) -> Lines {
+    let mut l = Lines {
+        code: HashSet::new(),
+        comment: HashSet::new(),
+        reason: HashSet::new(),
+    };
+    for t in &f.toks {
+        let text = t.text(&f.text);
+        if matches!(t.kind, TokKind::LineComment | TokKind::BlockComment) {
+            let span = text.matches('\n').count();
+            for line in t.line..=t.line + span {
+                l.comment.insert(line);
+                if text.contains("relaxed:") {
+                    l.reason.insert(line);
+                }
+            }
+        } else {
+            l.code.insert(t.line);
+        }
+    }
+    l
+}
+
+/// First line of the statement containing code token `ci`: walk code
+/// tokens backwards to the nearest `;` / `{` / `}` (comments don't
+/// count — a justifying comment block may sit mid-walk).
+fn stmt_first_line(f: &SourceFile, ci: usize) -> usize {
+    let mut j = ci;
+    while j > 0 {
+        let t = f.ctext(j - 1);
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        j -= 1;
+    }
+    f.cline(j)
+}
+
+fn justified(l: &Lines, first_line: usize, use_line: usize) -> bool {
+    // Trailing comment on any line of the (possibly multi-line)
+    // statement.
+    if (first_line..=use_line).any(|ln| l.reason.contains(&ln)) {
+        return true;
+    }
+    // Own-line comment run directly above the statement.
+    let mut k = first_line;
+    while k > 1 {
+        k -= 1;
+        if l.code.contains(&k) {
+            return false;
+        }
+        if l.comment.contains(&k) {
+            if l.reason.contains(&k) {
+                return true;
+            }
+            continue;
+        }
+        return false; // blank line breaks adjacency
+    }
+    false
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    let lines = scan_lines(f);
+    let mut flagged: HashSet<usize> = HashSet::new();
+    for ci in 0..f.clen() {
+        if f.ckind(ci) != Some(TokKind::Ident) || f.ctext(ci) != "Relaxed" {
+            continue;
+        }
+        if f.in_test(ci) {
+            continue;
+        }
+        let use_line = f.cline(ci);
+        let first_line = stmt_first_line(f, ci);
+        if justified(&lines, first_line, use_line) || !flagged.insert(use_line) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: use_line,
+            rule: RULE,
+            message: "Ordering::Relaxed on a fabric atomic without a `// relaxed:` \
+                      justification — state why no happens-before edge is needed \
+                      here (see the seeded-ring-relaxed-publish model for what a \
+                      missing edge costs)"
+                .to_string(),
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! `unsafe-needs-safety` — every `unsafe` carries a `// SAFETY:`
+//! comment stating the invariant that makes it sound.
+//!
+//! PR 7's fabric concentrated all of this repo's `unsafe` into the
+//! ring's slot protocol, and the desk-check that landed it found one
+//! live gap: the `sched_setaffinity` FFI call in `util/affinity.rs`
+//! shipped with no written argument for why the raw pointer and byte
+//! size were right. The argument existed — in the PR discussion, not
+//! the file. This rule pins the discipline: the soundness argument
+//! lives next to the `unsafe` it justifies, where the next edit to
+//! that code must confront it.
+//!
+//! Grammar: a comment containing `SAFETY:` on the same line as the
+//! `unsafe` token, or an own-line comment run directly above it. A run
+//! of consecutive `unsafe impl` lines (Send + Sync pairs) may share
+//! one comment — the walk skips upward over code lines that contain
+//! another `unsafe`. `#[cfg(test)]` modules are exempt.
+
+use std::collections::HashSet;
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::Rule;
+
+pub struct UnsafeNeedsSafety;
+
+const RULE: &str = "unsafe-needs-safety";
+
+impl Rule for UnsafeNeedsSafety {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            check_file(f, out);
+        }
+    }
+}
+
+/// Per-line facts the justification walk consults.
+struct Lines {
+    code: HashSet<usize>,
+    comment: HashSet<usize>,
+    /// Lines bearing a comment that contains `SAFETY:`.
+    safety: HashSet<usize>,
+    /// Lines bearing an `unsafe` code token.
+    has_unsafe: HashSet<usize>,
+}
+
+fn scan_lines(f: &SourceFile) -> Lines {
+    let mut l = Lines {
+        code: HashSet::new(),
+        comment: HashSet::new(),
+        safety: HashSet::new(),
+        has_unsafe: HashSet::new(),
+    };
+    for t in &f.toks {
+        let text = t.text(&f.text);
+        if matches!(t.kind, TokKind::LineComment | TokKind::BlockComment) {
+            // A block comment spans lines; credit every line it covers.
+            let span = text.matches('\n').count();
+            for line in t.line..=t.line + span {
+                l.comment.insert(line);
+                if text.contains("SAFETY:") {
+                    l.safety.insert(line);
+                }
+            }
+        } else {
+            l.code.insert(t.line);
+            if t.kind == TokKind::Ident && text == "unsafe" {
+                l.has_unsafe.insert(t.line);
+            }
+        }
+    }
+    l
+}
+
+/// Does the `unsafe` on `line` have a SAFETY comment — same line, or
+/// an own-line comment run directly above (skipping over sibling
+/// `unsafe` code lines so a Send/Sync impl pair can share one)?
+fn justified(l: &Lines, line: usize) -> bool {
+    if l.safety.contains(&line) {
+        return true;
+    }
+    let mut k = line;
+    while k > 1 {
+        k -= 1;
+        if l.code.contains(&k) {
+            if l.safety.contains(&k) {
+                return true; // trailing SAFETY comment on the line above
+            }
+            if l.has_unsafe.contains(&k) {
+                continue; // sibling unsafe; the shared comment is higher up
+            }
+            return false;
+        }
+        if l.comment.contains(&k) {
+            if l.safety.contains(&k) {
+                return true;
+            }
+            continue; // earlier line of a multi-line comment run
+        }
+        return false; // blank line breaks adjacency
+    }
+    false
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    let lines = scan_lines(f);
+    let mut flagged: HashSet<usize> = HashSet::new();
+    for ci in 0..f.clen() {
+        if f.ckind(ci) != Some(TokKind::Ident) || f.ctext(ci) != "unsafe" {
+            continue;
+        }
+        if f.in_test(ci) {
+            continue;
+        }
+        let line = f.cline(ci);
+        if justified(&lines, line) || !flagged.insert(line) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line,
+            rule: RULE,
+            message: "`unsafe` without a `// SAFETY:` comment — state the invariant \
+                      that makes this sound, on the line above or at the end of this \
+                      line (PR 7's affinity FFI shipped without one)"
+                .to_string(),
+        });
+    }
+}

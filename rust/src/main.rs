@@ -9,6 +9,7 @@
 //! symphony analytic <model> <slo_ms> <gpus>
 //! symphony partition [models] [parts] [budget_ms]
 //! symphony lint [--root rust/src] [--rule NAME]
+//! symphony check [--all|--model NAME|--list] [--preempt N]
 //! ```
 //!
 //! (The offline registry has no clap; this is a deliberate, small,
@@ -44,6 +45,7 @@ fn main() {
         "analytic" => cmd_analytic(&rest),
         "partition" => cmd_partition(&rest),
         "lint" => cmd_lint(&rest),
+        "check" => cmd_check(&rest),
         "-h" | "--help" | "help" => usage(),
         other => {
             eprintln!("unknown command {other:?}\n");
@@ -68,7 +70,9 @@ fn usage() {
                  [--max-sessions N] [--busy-poll] [--pin-cores]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n  \
-         symphony lint [--root rust/src] [--rule NAME]\n\n\
+         symphony lint [--root rust/src] [--rule NAME]\n  \
+         symphony check [--all|--model NAME|--list] [--preempt N]\n  \
+                 [--schedules N --seed S] [--max-schedules M]\n\n\
          systems: symphony clockwork nexus shepherd eager"
     );
 }
@@ -500,6 +504,92 @@ fn cmd_partition(rest: &[String]) {
         }
         _ => println!("no feasible assignment found within budget"),
     }
+}
+
+/// `symphony check [--all|--model NAME|--list]` — run the deterministic
+/// concurrency model checker over the lock-free fabric (see
+/// `check::models` for the model set). Exit 1 when any model misses
+/// its contract: real models must be failure-free, seeded-bug models
+/// must produce at least one failing schedule.
+fn cmd_check(rest: &[String]) {
+    use symphony::check::{all_models, check_model, find_model, ExploreConfig};
+    let f = flags(rest);
+    if f.contains_key("list") {
+        for m in all_models() {
+            println!(
+                "{:28} {}{}",
+                m.name,
+                if m.expect_fail { "[seeded bug] " } else { "" },
+                m.about
+            );
+        }
+        return;
+    }
+    let defaults = ExploreConfig::default();
+    let cfg = ExploreConfig {
+        preempt: getu(&f, "preempt", defaults.preempt as usize) as u32,
+        max_schedules: getu(&f, "max-schedules", defaults.max_schedules),
+        // `--schedules N [--seed S]`: N random walks instead of DFS.
+        random: f
+            .get("schedules")
+            .and_then(|v| v.parse().ok())
+            .map(|n| (n, getu(&f, "seed", 1) as u64)),
+    };
+    let selected: Vec<&symphony::check::Model> = match f.get("model") {
+        Some(name) => match find_model(name) {
+            Some(m) => vec![m],
+            None => {
+                eprintln!(
+                    "unknown model {name:?} (known: {})",
+                    all_models()
+                        .iter()
+                        .map(|m| m.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                std::process::exit(2);
+            }
+        },
+        // `--all` (and no selector at all) means every model — except
+        // that a random sweep skips the seeded-bug models: a sample may
+        // legitimately miss a planted bug, and only the exhaustive DFS
+        // (and the tier-1 tests) hold the must-fail contract.
+        None => all_models()
+            .iter()
+            .filter(|m| !(cfg.random.is_some() && m.expect_fail))
+            .collect(),
+    };
+    let mut all_ok = true;
+    for m in selected {
+        let r = check_model(m, cfg);
+        all_ok &= r.ok;
+        let verdict = match (r.ok, r.expect_fail) {
+            (true, false) => "ok".to_string(),
+            (true, true) => "ok (seeded bug caught)".to_string(),
+            (false, false) => format!(
+                "FAIL: {}",
+                r.report.failure.as_deref().unwrap_or("(no failure message)")
+            ),
+            (false, true) => "FAIL: seeded bug NOT caught".to_string(),
+        };
+        // Random walks are a sample by construction; only the DFS mode
+        // distinguishes "finished the tree" from "hit the cap".
+        let capped = cfg.random.is_none() && !r.report.exhausted;
+        println!(
+            "{:28} schedules={:<6} pruned={:<6} {}ms{}  {}",
+            r.name,
+            r.report.schedules,
+            r.report.pruned,
+            r.report.millis,
+            if capped { " (capped)" } else { "" },
+            verdict
+        );
+    }
+    if !all_ok {
+        eprintln!("check: FAILED");
+        std::process::exit(1);
+    }
+    println!("check: all models met their contracts");
 }
 
 /// `symphony lint [--root rust/src] [--rule NAME]` — run the std-only

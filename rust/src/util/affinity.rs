@@ -33,6 +33,10 @@ pub fn pin_to(cpu: usize) -> bool {
     }
     let mut mask = [0u64; WORDS];
     mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: the declaration matches the Linux sched_setaffinity(2)
+    // ABI; `mask` is a live stack array whose exact byte size is passed
+    // as `cpusetsize`, and the kernel only reads the mask. pid 0 names
+    // the calling thread, so no other process is touched.
     unsafe { sched_setaffinity(0, std::mem::size_of::<[u64; WORDS]>(), mask.as_ptr()) == 0 }
 }
 

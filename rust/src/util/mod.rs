@@ -8,6 +8,7 @@ pub mod par;
 pub mod proptest;
 pub mod ring;
 pub mod rng;
+pub mod shim;
 pub mod stats;
 pub mod sync;
 pub mod table;

@@ -33,12 +33,24 @@
 //!
 //! Error types mirror `std::sync::mpsc`'s names so call sites port
 //! with an import swap.
+//!
+//! **Checked by `symphony check`**: every atomic, fence, blocking edge,
+//! and slot-payload access below goes through the [`Fabric`] shim
+//! (`util/shim.rs`). The public types are aliases instantiating the
+//! generic protocol code at [`RealFabric`] (zero-cost); the model
+//! checker instantiates the *same* code at `check::virt::VirtFabric`
+//! and enumerates its interleavings. Keep new synchronization on the
+//! shim, or the checker goes blind to it.
 
 use std::cell::{Cell, UnsafeCell};
+use std::fmt;
+use std::marker::PhantomData;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{fence, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
+
+use super::shim::{Fabric, RealFabric, ShimAtomic, ShimBlocker};
 
 /// How long a blocking [`RingSender::send`] retries against a full ring
 /// before reporting failure. Control messages must not drop; this bound
@@ -78,32 +90,66 @@ pub enum RecvTimeoutError {
 
 // ---------------------------------------------------------------- waiter
 
-/// Spin budget before a [`Waiter`] starts yielding.
-const SPIN_ROUNDS: u32 = 64;
-/// Yield budget before a [`Waiter`] reports it is time to block.
-const YIELD_ROUNDS: u32 = 32;
+/// Process-wide cache of the `SYMPHONY_BUSY_POLL` environment lookup.
+/// [`Waiter::from_env`] used to issue a `var_os` syscall per
+/// construction, and drain-restart paths construct a fresh `Waiter`
+/// every wakeup; the environment is fixed at process start for every
+/// deployment mode we ship, so one lookup serves the process lifetime.
+static BUSY_POLL_ENV: OnceLock<bool> = OnceLock::new();
+
+/// Whether `SYMPHONY_BUSY_POLL` was set when first consulted (cached).
+pub fn busy_poll_env() -> bool {
+    *BUSY_POLL_ENV.get_or_init(|| std::env::var_os("SYMPHONY_BUSY_POLL").is_some())
+}
 
 /// The shared idle policy for drain loops: spin (with escalating
 /// `spin_loop` hints) → `yield_now` → block. The ring's receivers use
 /// it internally before parking; the wire writer uses it before its
 /// Condvar wait. Under busy-poll, [`Waiter::should_block`] never turns
 /// true, so the loop spins/yields forever — the opt-in latency mode.
-#[derive(Debug)]
-pub struct Waiter {
+///
+/// The spin/yield budget comes from the fabric ([`Fabric::spin_budget`]):
+/// 64+32 rounds for [`RealFabric`], zero under the model checker (a
+/// spin ladder is pure state-space when schedules are enumerated, and
+/// the park edge is the protocol under test).
+pub struct GenericWaiter<F: Fabric = RealFabric> {
     rounds: u32,
+    spin_rounds: u32,
+    yield_rounds: u32,
     busy_poll: bool,
+    _fabric: PhantomData<fn() -> F>,
 }
 
-impl Waiter {
+/// [`GenericWaiter`] on the production fabric.
+pub type Waiter = GenericWaiter<RealFabric>;
+
+impl<F: Fabric> fmt::Debug for GenericWaiter<F> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Waiter")
+            .field("rounds", &self.rounds)
+            .field("busy_poll", &self.busy_poll)
+            .finish()
+    }
+}
+
+impl<F: Fabric> GenericWaiter<F> {
     pub fn new(busy_poll: bool) -> Self {
-        Waiter { rounds: 0, busy_poll }
+        let (spin_rounds, yield_rounds) = F::spin_budget();
+        GenericWaiter {
+            rounds: 0,
+            spin_rounds,
+            yield_rounds,
+            busy_poll,
+            _fabric: PhantomData,
+        }
     }
 
     /// Like [`Waiter::new`], but the `SYMPHONY_BUSY_POLL` environment
     /// variable also turns busy-poll on — the hook the bench smoke
     /// steps use to exercise the spin mode without new bench flags.
+    /// The lookup is cached process-wide ([`busy_poll_env`]).
     pub fn from_env(busy_poll: bool) -> Self {
-        Self::new(busy_poll || std::env::var_os("SYMPHONY_BUSY_POLL").is_some())
+        Self::new(busy_poll || busy_poll_env())
     }
 
     /// Call after making progress so the ladder restarts at spinning.
@@ -114,12 +160,12 @@ impl Waiter {
     /// Spin+yield budget exhausted — time to truly block (park /
     /// Condvar-wait). Never under busy-poll.
     pub fn should_block(&self) -> bool {
-        !self.busy_poll && self.rounds >= SPIN_ROUNDS + YIELD_ROUNDS
+        !self.busy_poll && self.rounds >= self.spin_rounds + self.yield_rounds
     }
 
     /// One step of the spin→yield ladder.
     pub fn idle(&mut self) {
-        if self.rounds < SPIN_ROUNDS {
+        if self.rounds < self.spin_rounds {
             for _ in 0..(1u32 << (self.rounds / 8).min(6)) {
                 std::hint::spin_loop();
             }
@@ -151,25 +197,30 @@ const NOTIFIED: usize = 2;
 /// loads the state. Whatever the interleaving, at least one side sees
 /// the other: either the consumer's re-check finds the message, or the
 /// producer finds `PARKED` and notifies under the Mutex.
-#[derive(Debug)]
-pub struct Parker {
-    state: AtomicUsize,
-    lock: Mutex<()>,
-    cv: Condvar,
+///
+/// `symphony check` explores this protocol exhaustively (models
+/// `parker-wake` / `parker-cancel`), including under TSO store
+/// buffering — remove either SeqCst edge and the `seeded-parker-nofence`
+/// variant shows the lost wake as a detected deadlock.
+pub struct GenericParker<F: Fabric = RealFabric> {
+    state: F::Atomic,
+    blocker: F::Blocker,
 }
 
-impl Default for Parker {
+/// [`GenericParker`] on the production fabric.
+pub type Parker = GenericParker<RealFabric>;
+
+impl<F: Fabric> Default for GenericParker<F> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Parker {
+impl<F: Fabric> GenericParker<F> {
     pub fn new() -> Self {
-        Parker {
-            state: AtomicUsize::new(EMPTY),
-            lock: Mutex::new(()),
-            cv: Condvar::new(),
+        GenericParker {
+            state: F::atomic(EMPTY),
+            blocker: F::blocker(),
         }
     }
 
@@ -178,7 +229,7 @@ impl Parker {
     /// [`Parker::park`].
     pub fn prepare(&self) {
         self.state.store(PARKED, Ordering::SeqCst);
-        fence(Ordering::SeqCst);
+        F::fence_seqcst();
     }
 
     /// Withdraw a [`Parker::prepare`] (the re-check found work).
@@ -189,51 +240,23 @@ impl Parker {
     /// Block until notified or `deadline` (`None` = forever). Returns
     /// true if a wake was observed.
     pub fn park(&self, deadline: Option<Instant>) -> bool {
-        let mut g = match self.lock.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
-        while self.state.load(Ordering::SeqCst) == PARKED {
-            match deadline {
-                None => {
-                    g = match self.cv.wait(g) {
-                        Ok(g) => g,
-                        Err(p) => p.into_inner(),
-                    };
-                }
-                Some(d) => {
-                    let now = Instant::now();
-                    if now >= d {
-                        break;
-                    }
-                    g = match self.cv.wait_timeout(g, d - now) {
-                        Ok((g, _)) => g,
-                        Err(p) => p.into_inner().0,
-                    };
-                }
-            }
-        }
-        drop(g);
+        self.blocker
+            .block_while(&mut || self.state.load(Ordering::SeqCst) == PARKED, deadline);
         self.state.swap(EMPTY, Ordering::SeqCst) == NOTIFIED
     }
 
     /// Wake a parked consumer. Cheap when nobody is parked (one fenced
     /// load); takes the Mutex only to close the race with a concurrent
-    /// `wait` entry.
+    /// `wait` entry — the CAS runs under the same lock the waiter
+    /// re-checks under ([`ShimBlocker::update_and_notify`]).
     pub fn wake(&self) {
-        fence(Ordering::SeqCst);
+        F::fence_seqcst();
         if self.state.load(Ordering::SeqCst) == PARKED {
-            let _g = match self.lock.lock() {
-                Ok(g) => g,
-                Err(p) => p.into_inner(),
-            };
-            if self
-                .state
-                .compare_exchange(PARKED, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
-                .is_ok()
-            {
-                self.cv.notify_one();
-            }
+            self.blocker.update_and_notify(&mut || {
+                self.state
+                    .compare_exchange(PARKED, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            });
         }
     }
 }
@@ -242,28 +265,31 @@ impl Parker {
 
 /// Head/tail cursors on their own cache lines.
 #[repr(align(64))]
-struct Padded(AtomicUsize);
+struct Padded<A>(A);
 
-struct Slot<T> {
+struct Slot<T, F: Fabric> {
     /// Vyukov sequence: `== pos` → empty, claimable by the producer
     /// that wins the tail CAS at `pos`; `== pos + 1` → published,
     /// readable by the consumer; `== pos + capacity` → consumed,
     /// claimable again on the next lap.
-    seq: AtomicUsize,
+    seq: F::Atomic,
     val: UnsafeCell<MaybeUninit<T>>,
+    /// Race-detector identity for `val` under the checker; `()` in
+    /// real builds.
+    tok: F::CellToken,
 }
 
-struct Inner<T> {
-    buf: Box<[Slot<T>]>,
+struct Inner<T, F: Fabric> {
+    buf: Box<[Slot<T, F>]>,
     mask: usize,
     /// Producer claim cursor (CAS).
-    tail: Padded,
+    tail: Padded<F::Atomic>,
     /// Consumer cursor — only the receiver advances it.
-    head: Padded,
-    senders: AtomicUsize,
+    head: Padded<F::Atomic>,
+    senders: F::Atomic,
     /// 1 while the receiver handle is alive.
-    rx_alive: AtomicUsize,
-    parker: Parker,
+    rx_alive: F::Atomic,
+    parker: GenericParker<F>,
 }
 
 // SAFETY: the UnsafeCell slots are handed between threads under the
@@ -271,17 +297,28 @@ struct Inner<T> {
 // producer that won the CAS for that position and only read by the
 // single consumer after observing the producer's release store, so
 // `T: Send` suffices.
-unsafe impl<T: Send> Send for Inner<T> {}
-unsafe impl<T: Send> Sync for Inner<T> {}
+unsafe impl<T: Send, F: Fabric> Send for Inner<T, F> {}
+// SAFETY: same protocol as the Send impl above — shared references to
+// `Inner` only ever touch a slot payload on the unique side of a
+// sequence handoff, so no `T: Sync` is needed.
+unsafe impl<T: Send, F: Fabric> Sync for Inner<T, F> {}
 
-impl<T> Drop for Inner<T> {
+impl<T, F: Fabric> Drop for Inner<T, F> {
     fn drop(&mut self) {
         // Runs only once every handle is gone: drain whatever was
         // published but never consumed.
+        // relaxed: this drop has `&mut self` — every handle is gone,
+        // so no other thread can race these cursor/sequence loads.
         let mut pos = self.head.0.load(Ordering::Relaxed);
         loop {
             let slot = &self.buf[pos & self.mask];
+            // relaxed: same single-threaded drop as the head load above.
             if slot.seq.load(Ordering::Relaxed) == pos.wrapping_add(1) {
+                F::cell_read(&slot.tok);
+                // SAFETY: seq == pos + 1 means this slot was published
+                // and never consumed; with all handles gone we hold the
+                // only reference, so reading and dropping it once is
+                // sound.
                 unsafe { (*slot.val.get()).assume_init_drop() };
                 pos = pos.wrapping_add(1);
             } else {
@@ -291,14 +328,19 @@ impl<T> Drop for Inner<T> {
     }
 }
 
-impl<T> Inner<T> {
+impl<T, F: Fabric> Inner<T, F> {
     fn enqueue(&self, v: T) -> Result<(), T> {
+        // relaxed: a stale tail is re-validated by the CAS below; the
+        // slot handoff itself orders via the seq Acquire/Release pair.
         let mut pos = self.tail.0.load(Ordering::Relaxed);
         loop {
             let slot = &self.buf[pos & self.mask];
             let seq = slot.seq.load(Ordering::Acquire);
             let dif = seq.wrapping_sub(pos) as isize;
             if dif == 0 {
+                // relaxed: the CAS only claims a position; publication
+                // ordering rides the slot's seq Release store below,
+                // never the tail cursor.
                 match self.tail.0.compare_exchange_weak(
                     pos,
                     pos.wrapping_add(1),
@@ -306,6 +348,12 @@ impl<T> Inner<T> {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
+                        F::cell_write(&slot.tok);
+                        // SAFETY: winning the tail CAS at `pos` grants
+                        // this producer exclusive write access to the
+                        // slot (seq == pos ruled out concurrent
+                        // owners); the consumer reads it only after
+                        // the Release store of pos + 1 below.
                         unsafe { (*slot.val.get()).write(v) };
                         slot.seq.store(pos.wrapping_add(1), Ordering::Release);
                         return Ok(());
@@ -315,6 +363,8 @@ impl<T> Inner<T> {
             } else if dif < 0 {
                 return Err(v); // full lap: consumer hasn't freed this slot
             } else {
+                // relaxed: lost the claim race; reload and re-validate
+                // through the same Acquire seq load next iteration.
                 pos = self.tail.0.load(Ordering::Relaxed);
             }
         }
@@ -323,9 +373,16 @@ impl<T> Inner<T> {
     /// Single-consumer dequeue (no CAS on head — only the receiver
     /// calls this).
     fn dequeue(&self) -> Option<T> {
+        // relaxed: only the single consumer writes head, and this *is*
+        // the consumer — it always sees its own last store.
         let pos = self.head.0.load(Ordering::Relaxed);
         let slot = &self.buf[pos & self.mask];
         if slot.seq.load(Ordering::Acquire) == pos.wrapping_add(1) {
+            F::cell_read(&slot.tok);
+            // SAFETY: the Acquire load saw seq == pos + 1, so the
+            // producer's Release publication happens-before this read;
+            // the single consumer takes the value exactly once and
+            // recycles the slot with the Release store below.
             let v = unsafe { (*slot.val.get()).assume_init_read() };
             slot.seq
                 .store(pos.wrapping_add(self.buf.len()), Ordering::Release);
@@ -338,6 +395,7 @@ impl<T> Inner<T> {
 
     /// Consumer-side peek: is a message published at head?
     fn has_next(&self) -> bool {
+        // relaxed: consumer-owned cursor, same as dequeue.
         let pos = self.head.0.load(Ordering::Relaxed);
         self.buf[pos & self.mask].seq.load(Ordering::Acquire) == pos.wrapping_add(1)
     }
@@ -347,24 +405,31 @@ impl<T> Inner<T> {
     }
 }
 
-/// Create a bounded MPSC ring. `capacity` is rounded up to the next
-/// power of two (min 2).
+/// Create a bounded MPSC ring on the production fabric. `capacity` is
+/// rounded up to the next power of two (min 2).
 pub fn ring<T>(capacity: usize) -> (RingSender<T>, RingReceiver<T>) {
+    ring_in::<T, RealFabric>(capacity)
+}
+
+/// [`ring`], generic over the [`Fabric`] — how `symphony check` builds
+/// the same ring on its instrumented virtual fabric.
+pub fn ring_in<T, F: Fabric>(capacity: usize) -> (RingSender<T, F>, RingReceiver<T, F>) {
     let cap = capacity.max(2).next_power_of_two();
-    let buf: Box<[Slot<T>]> = (0..cap)
+    let buf: Box<[Slot<T, F>]> = (0..cap)
         .map(|i| Slot {
-            seq: AtomicUsize::new(i),
+            seq: F::atomic(i),
             val: UnsafeCell::new(MaybeUninit::uninit()),
+            tok: F::cell_token(),
         })
         .collect();
     let inner = Arc::new(Inner {
         buf,
         mask: cap - 1,
-        tail: Padded(AtomicUsize::new(0)),
-        head: Padded(AtomicUsize::new(0)),
-        senders: AtomicUsize::new(1),
-        rx_alive: AtomicUsize::new(1),
-        parker: Parker::new(),
+        tail: Padded(F::atomic(0)),
+        head: Padded(F::atomic(0)),
+        senders: F::atomic(1),
+        rx_alive: F::atomic(1),
+        parker: GenericParker::new(),
     });
     (
         RingSender {
@@ -379,12 +444,16 @@ pub fn ring<T>(capacity: usize) -> (RingSender<T>, RingReceiver<T>) {
 
 // ---------------------------------------------------------------- sender
 
-pub struct RingSender<T> {
-    inner: Arc<Inner<T>>,
+pub struct RingSender<T, F: Fabric = RealFabric> {
+    inner: Arc<Inner<T, F>>,
 }
 
-impl<T> Clone for RingSender<T> {
+impl<T, F: Fabric> Clone for RingSender<T, F> {
     fn clone(&self) -> Self {
+        // relaxed: the counter only needs atomicity — a new handle is
+        // handed to another thread through some already-synchronizing
+        // channel (spawn, send), which orders the increment; the drop
+        // side's AcqRel decrement pairs the final-count edge.
         self.inner.senders.fetch_add(1, Ordering::Relaxed);
         RingSender {
             inner: self.inner.clone(),
@@ -392,7 +461,7 @@ impl<T> Clone for RingSender<T> {
     }
 }
 
-impl<T> Drop for RingSender<T> {
+impl<T, F: Fabric> Drop for RingSender<T, F> {
     fn drop(&mut self) {
         if self.inner.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
             // Last producer gone: a blocked receiver must observe the
@@ -402,7 +471,7 @@ impl<T> Drop for RingSender<T> {
     }
 }
 
-impl<T> RingSender<T> {
+impl<T, F: Fabric> RingSender<T, F> {
     /// Non-blocking send. `Full` is the caller's shed point (the
     /// documented ingest policy: count into `dropped_submits`).
     pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
@@ -431,7 +500,7 @@ impl<T> RingSender<T> {
     /// instead of a deadlock.
     pub fn send(&self, v: T) -> Result<(), SendError<T>> {
         let mut v = v;
-        let mut waiter = Waiter::new(false);
+        let mut waiter = GenericWaiter::<F>::new(false);
         let mut deadline: Option<Instant> = None;
         loop {
             match self.try_send(v) {
@@ -459,12 +528,12 @@ impl<T> RingSender<T> {
 
 /// The single consumer. `Send` but not `Sync` (the `Cell` sees to
 /// that): exactly one thread may drain.
-pub struct RingReceiver<T> {
-    inner: Arc<Inner<T>>,
+pub struct RingReceiver<T, F: Fabric = RealFabric> {
+    inner: Arc<Inner<T, F>>,
     busy_poll: Cell<bool>,
 }
 
-impl<T> Drop for RingReceiver<T> {
+impl<T, F: Fabric> Drop for RingReceiver<T, F> {
     fn drop(&mut self) {
         self.inner.rx_alive.store(0, Ordering::Release);
         // Unconsumed values are dropped by Inner::drop once the last
@@ -472,7 +541,7 @@ impl<T> Drop for RingReceiver<T> {
     }
 }
 
-impl<T> RingReceiver<T> {
+impl<T, F: Fabric> RingReceiver<T, F> {
     /// Opt this receiver's blocking waits into busy-poll: spin/yield
     /// until the deadline instead of parking (`--busy-poll`).
     pub fn set_busy_poll(&self, on: bool) {
@@ -497,7 +566,7 @@ impl<T> RingReceiver<T> {
     }
 
     fn recv_deadline(&self, deadline: Option<Instant>) -> Result<T, RecvTimeoutError> {
-        let mut waiter = Waiter::new(self.busy_poll.get());
+        let mut waiter = GenericWaiter::<F>::new(self.busy_poll.get());
         loop {
             match self.try_recv() {
                 Ok(v) => return Ok(v),
@@ -559,7 +628,7 @@ impl<T> RingReceiver<T> {
 
     /// Iterator over currently-available messages (stops at Empty or
     /// Disconnected, like `std::sync::mpsc::Receiver::try_iter`).
-    pub fn try_iter(&self) -> TryIter<'_, T> {
+    pub fn try_iter(&self) -> TryIter<'_, T, F> {
         TryIter { rx: self }
     }
 
@@ -569,11 +638,11 @@ impl<T> RingReceiver<T> {
     }
 }
 
-pub struct TryIter<'a, T> {
-    rx: &'a RingReceiver<T>,
+pub struct TryIter<'a, T, F: Fabric = RealFabric> {
+    rx: &'a RingReceiver<T, F>,
 }
 
-impl<T> Iterator for TryIter<'_, T> {
+impl<T, F: Fabric> Iterator for TryIter<'_, T, F> {
     type Item = T;
     fn next(&mut self) -> Option<T> {
         self.rx.try_recv().ok()
@@ -583,6 +652,7 @@ impl<T> Iterator for TryIter<'_, T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn fifo_and_capacity_rounding() {

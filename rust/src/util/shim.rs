@@ -1,0 +1,309 @@
+//! Sync shim the lock-free fabric is built on — the seam `symphony
+//! check` instruments.
+//!
+//! `util/ring.rs` (the Vyukov MPSC ring and the Dekker [`Parker`]
+//! protocol) and `coordinator/router.rs::FreeHints` do not touch
+//! `std::sync::atomic` directly any more: every atomic load/store/RMW,
+//! every SeqCst fence, every Mutex/Condvar edge, and every access to an
+//! `UnsafeCell` slot payload goes through a [`Fabric`]. Two fabrics
+//! exist:
+//!
+//! * [`RealFabric`] — the normal build. Every operation delegates
+//!   straight to `std::sync::atomic::AtomicUsize` / `Mutex` / `Condvar`
+//!   and the cell hooks are empty `()` tokens. All methods are
+//!   `#[inline]` one-liners over concrete types, so monomorphization
+//!   erases the shim completely: the compiled ring is the same code it
+//!   was before the seam existed.
+//! * `check::virt::VirtFabric` — the model checker. Every operation
+//!   traps into a cooperative scheduler that owns a virtual memory
+//!   (TSO store buffers + vector clocks), so `symphony check` can
+//!   enumerate every interleaving of the *real* protocol code up to a
+//!   preemption bound.
+//!
+//! Design note: the ISSUE sketch words this seam as a
+//! `cfg(symphony_check)` switch. A cfg switch cannot satisfy the
+//! tier-1 mirror test (`check_models_pass` must run under a plain
+//! `cargo test`, which never passes custom `--cfg` flags), so the seam
+//! is a generic parameter instead: `Parker` / `RingSender` /
+//! `FreeHints` are type aliases instantiating the generic protocol
+//! code at [`RealFabric`], and the checker instantiates the same code
+//! at `VirtFabric`. Same single copy of the protocol either way — the
+//! property the cfg switch was after.
+//!
+//! The shim is deliberately *narrow*: exactly the operations the
+//! fabric's protocols use, nothing speculative. `usize` atomics only
+//! (the fabric has no other kind), and the Mutex/Condvar pair is
+//! abstracted as a [`ShimBlocker`] — the two composite operations the
+//! `Parker` needs — rather than as raw guard-returning lock methods,
+//! which keeps the trait object-safe-simple and keeps the lock
+//! discipline (CAS under the lock, notify under the lock) inside one
+//! audited implementation per fabric.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::Instant;
+
+use super::sync::relock;
+
+/// The operations the fabric performs on a `usize` atomic. Implemented
+/// by `std::sync::atomic::AtomicUsize` (delegation) and by the
+/// checker's virtual atomic (trap into the scheduler).
+pub trait ShimAtomic: Send + Sync {
+    fn load(&self, order: Ordering) -> usize;
+    fn store(&self, v: usize, order: Ordering);
+    fn swap(&self, v: usize, order: Ordering) -> usize;
+    fn compare_exchange(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize>;
+    fn compare_exchange_weak(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize>;
+    fn fetch_add(&self, v: usize, order: Ordering) -> usize;
+    fn fetch_sub(&self, v: usize, order: Ordering) -> usize;
+    /// CAS-loop update, mirroring `AtomicUsize::fetch_update`. Takes
+    /// `&mut dyn FnMut` (not a generic) so the trait stays simple for
+    /// both implementations.
+    fn fetch_update(
+        &self,
+        set_order: Ordering,
+        fetch_order: Ordering,
+        f: &mut dyn FnMut(usize) -> Option<usize>,
+    ) -> Result<usize, usize>;
+}
+
+impl ShimAtomic for AtomicUsize {
+    #[inline]
+    fn load(&self, order: Ordering) -> usize {
+        AtomicUsize::load(self, order)
+    }
+    #[inline]
+    fn store(&self, v: usize, order: Ordering) {
+        AtomicUsize::store(self, v, order)
+    }
+    #[inline]
+    fn swap(&self, v: usize, order: Ordering) -> usize {
+        AtomicUsize::swap(self, v, order)
+    }
+    #[inline]
+    fn compare_exchange(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize> {
+        AtomicUsize::compare_exchange(self, current, new, success, failure)
+    }
+    #[inline]
+    fn compare_exchange_weak(
+        &self,
+        current: usize,
+        new: usize,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<usize, usize> {
+        AtomicUsize::compare_exchange_weak(self, current, new, success, failure)
+    }
+    #[inline]
+    fn fetch_add(&self, v: usize, order: Ordering) -> usize {
+        AtomicUsize::fetch_add(self, v, order)
+    }
+    #[inline]
+    fn fetch_sub(&self, v: usize, order: Ordering) -> usize {
+        AtomicUsize::fetch_sub(self, v, order)
+    }
+    #[inline]
+    fn fetch_update(
+        &self,
+        set_order: Ordering,
+        fetch_order: Ordering,
+        f: &mut dyn FnMut(usize) -> Option<usize>,
+    ) -> Result<usize, usize> {
+        AtomicUsize::fetch_update(self, set_order, fetch_order, f)
+    }
+}
+
+/// The Mutex+Condvar edge of the `Parker`, reduced to the two
+/// composite operations the wake-not-lost protocol needs. Keeping the
+/// lock inside the implementation (instead of exposing guards) means
+/// the protocol-critical discipline — the waiter re-checks its
+/// condition under the same lock the waker CASes under — cannot be
+/// violated by a call-site refactor.
+pub trait ShimBlocker: Send + Sync {
+    fn new() -> Self;
+    /// Lock; while `keep_waiting()` holds, wait on the condvar
+    /// (bounded by `deadline`; `None` = forever); unlock. Spurious
+    /// returns are allowed — callers re-check state afterwards.
+    fn block_while(&self, keep_waiting: &mut dyn FnMut() -> bool, deadline: Option<Instant>);
+    /// Run `update` under the lock; if it returns true, notify one
+    /// waiter (still determining the wake before the lock is
+    /// released).
+    fn update_and_notify(&self, update: &mut dyn FnMut() -> bool);
+}
+
+/// [`ShimBlocker`] over a real `Mutex<()>` + `Condvar`, with the same
+/// poison-recovery policy as `util::sync::relock`: a panicked peer
+/// must not cascade into the drain loops.
+pub struct RealBlocker {
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl ShimBlocker for RealBlocker {
+    fn new() -> Self {
+        RealBlocker {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn block_while(&self, keep_waiting: &mut dyn FnMut() -> bool, deadline: Option<Instant>) {
+        let mut g = relock(&self.lock);
+        while keep_waiting() {
+            match deadline {
+                None => {
+                    g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    g = match self.cv.wait_timeout(g, d - now) {
+                        Ok((g, _)) => g,
+                        Err(p) => p.into_inner().0,
+                    };
+                }
+            }
+        }
+    }
+
+    fn update_and_notify(&self, update: &mut dyn FnMut() -> bool) {
+        let _g = relock(&self.lock);
+        if update() {
+            self.cv.notify_one();
+        }
+    }
+}
+
+/// One fabric = one coherent implementation of everything the ring,
+/// the `Parker`, and `FreeHints` need from the platform.
+pub trait Fabric: Sized + Send + Sync + 'static {
+    type Atomic: ShimAtomic;
+    type Blocker: ShimBlocker;
+    /// Per-cell identity for instrumented `UnsafeCell` payload
+    /// accesses. `()` in real builds (zero cost); a unique-address
+    /// token under the checker, keying the happens-before race
+    /// detector.
+    type CellToken: Send + Sync;
+
+    fn atomic(v: usize) -> Self::Atomic;
+    fn blocker() -> Self::Blocker;
+    fn cell_token() -> Self::CellToken;
+    /// Record a read of the cell `tok` guards (the consumer side of a
+    /// slot handoff). No-op in real builds.
+    fn cell_read(tok: &Self::CellToken);
+    /// Record a write of the cell `tok` guards (the producer side).
+    /// No-op in real builds.
+    fn cell_write(tok: &Self::CellToken);
+    fn fence_seqcst();
+    /// `Waiter` budget as (spin rounds, yield rounds). The checker
+    /// returns (0, 0): under exhaustive schedule exploration a spin
+    /// ladder is pure state-space, so virtual receivers go straight to
+    /// the park edge — which is the protocol under test.
+    fn spin_budget() -> (u32, u32);
+}
+
+/// The production fabric: plain std primitives, no instrumentation.
+pub struct RealFabric;
+
+impl Fabric for RealFabric {
+    type Atomic = AtomicUsize;
+    type Blocker = RealBlocker;
+    type CellToken = ();
+
+    #[inline]
+    fn atomic(v: usize) -> AtomicUsize {
+        AtomicUsize::new(v)
+    }
+    #[inline]
+    fn blocker() -> RealBlocker {
+        RealBlocker::new()
+    }
+    #[inline]
+    fn cell_token() {}
+    #[inline]
+    fn cell_read(_tok: &()) {}
+    #[inline]
+    fn cell_write(_tok: &()) {}
+    #[inline]
+    fn fence_seqcst() {
+        std::sync::atomic::fence(Ordering::SeqCst);
+    }
+    #[inline]
+    fn spin_budget() -> (u32, u32) {
+        // The PR-7 numbers: 64 spin rounds (escalating `spin_loop`
+        // hints) then 32 yields before a receiver truly parks.
+        (64, 32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn real_atomic_delegates() {
+        let a = RealFabric::atomic(5);
+        assert_eq!(ShimAtomic::load(&a, Ordering::SeqCst), 5);
+        ShimAtomic::store(&a, 9, Ordering::SeqCst);
+        assert_eq!(ShimAtomic::swap(&a, 1, Ordering::SeqCst), 9);
+        assert_eq!(
+            ShimAtomic::compare_exchange(&a, 1, 2, Ordering::SeqCst, Ordering::SeqCst),
+            Ok(1)
+        );
+        assert_eq!(ShimAtomic::fetch_add(&a, 3, Ordering::SeqCst), 2);
+        assert_eq!(ShimAtomic::fetch_sub(&a, 1, Ordering::SeqCst), 5);
+        assert_eq!(
+            ShimAtomic::fetch_update(&a, Ordering::SeqCst, Ordering::SeqCst, &mut |c| c
+                .checked_sub(4)),
+            Ok(4)
+        );
+        assert_eq!(ShimAtomic::load(&a, Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn real_blocker_wakes_a_waiter() {
+        let b = Arc::new(RealFabric::blocker());
+        let flag = Arc::new(AtomicUsize::new(0));
+        let (b2, f2) = (b.clone(), flag.clone());
+        let h = std::thread::spawn(move || {
+            b2.block_while(&mut || f2.load(Ordering::SeqCst) == 0, None);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.update_and_notify(&mut || {
+            flag.store(1, Ordering::SeqCst);
+            true
+        });
+        h.join().unwrap();
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn real_blocker_deadline_expires() {
+        let b = RealFabric::blocker();
+        let t0 = Instant::now();
+        b.block_while(&mut || true, Some(Instant::now() + Duration::from_millis(15)));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

@@ -626,6 +626,201 @@ fn hot_path_channel_suppression_round_trip() {
     );
 }
 
+// ---------------------------------------------------------------- unsafe
+
+const UNSAFE_RULE: &str = "unsafe-needs-safety";
+
+const UNSAFE_BAD: &str = r#"
+pub fn poke(p: *mut u64) {
+    unsafe { *p = 1 };
+}
+
+// updates the counter in place (a what-comment, not a safety argument)
+pub unsafe fn bump(p: *mut u64) {
+    *p += 1;
+}
+"#;
+
+#[test]
+fn unsafe_safety_flags_missing_and_non_safety_comments() {
+    let f = only("util/slots.rs", UNSAFE_BAD, UNSAFE_RULE);
+    assert_eq!(f.len(), 2, "findings:\n{}", render(&f));
+    assert_flagged(&f, UNSAFE_RULE, line_of(UNSAFE_BAD, "unsafe { *p = 1 }"));
+    // A comment above that never says SAFETY: does not justify.
+    assert_flagged(&f, UNSAFE_RULE, line_of(UNSAFE_BAD, "pub unsafe fn bump"));
+    assert!(f[0].message.contains("SAFETY:"), "{}", f[0]);
+}
+
+const UNSAFE_NEAR: &str = r#"
+pub struct SharedSlots(*mut u64);
+
+// SAFETY: slots are owned per-index; two threads never alias an index.
+unsafe impl Send for SharedSlots {}
+unsafe impl Sync for SharedSlots {}
+
+pub fn read_above(s: &SharedSlots) -> u64 {
+    // SAFETY: index 0 is always initialized by the constructor.
+    unsafe { *s.0 }
+}
+
+pub fn read_trailing(s: &SharedSlots) -> u64 {
+    unsafe { *s.0 } // SAFETY: same invariant as read_above.
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_are_exempt() {
+        let mut x = 0u64;
+        unsafe { *(&mut x as *mut u64) = 7 };
+        assert_eq!(x, 7);
+    }
+}
+"#;
+
+#[test]
+fn unsafe_safety_accepts_above_trailing_shared_and_test_forms() {
+    // One SAFETY comment may cover a Send/Sync impl pair (the walk
+    // skips upward over sibling `unsafe` lines); trailing same-line
+    // comments count; #[cfg(test)] modules are exempt.
+    let f = only("util/slots.rs", UNSAFE_NEAR, UNSAFE_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const UNSAFE_ALLOW_OK: &str = r#"
+pub fn poke(p: *mut u64) {
+    // lint:allow(unsafe-needs-safety): fixture: invariant documented on the one caller
+    unsafe { *p = 1 };
+}
+"#;
+
+const UNSAFE_ALLOW_BARE: &str = r#"
+pub fn poke(p: *mut u64) {
+    // lint:allow(unsafe-needs-safety)
+    unsafe { *p = 1 };
+}
+"#;
+
+#[test]
+fn unsafe_safety_suppression_round_trip() {
+    let ok = lint_sources(&[("util/slots.rs", UNSAFE_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("util/slots.rs", UNSAFE_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(UNSAFE_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, UNSAFE_RULE, line_of(UNSAFE_ALLOW_BARE, "unsafe { *p = 1 }"));
+}
+
+// --------------------------------------------------------------- relaxed
+
+const RELAXED_RULE: &str = "relaxed-ordering-reason";
+
+const RELAXED_BAD: &str = r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn publish(seq: &AtomicUsize) {
+    seq.store(1, Ordering::Relaxed);
+}
+
+pub fn claim(count: &AtomicUsize) -> bool {
+    count
+        .fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |c| c.checked_sub(1),
+        )
+        .is_ok()
+}
+"#;
+
+#[test]
+fn relaxed_reason_flags_bare_uses_on_fabric_files() {
+    let f = only("util/ring.rs", RELAXED_BAD, RELAXED_RULE);
+    // The store, plus each continuation line of the fetch_update.
+    assert_eq!(f.len(), 3, "findings:\n{}", render(&f));
+    assert_flagged(&f, RELAXED_RULE, line_of(RELAXED_BAD, "seq.store"));
+    assert!(f[0].message.contains("relaxed:"), "{}", f[0]);
+}
+
+#[test]
+fn relaxed_reason_is_scoped_to_fabric_files() {
+    // Plain statistics counters outside the fabric (ingest drop counts
+    // and friends) are not protocol edges.
+    let f = only("coordinator/ingest.rs", RELAXED_BAD, RELAXED_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const RELAXED_NEAR: &str = r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn publish(seq: &AtomicUsize) {
+    seq.store(1, Ordering::Relaxed); // relaxed: advisory counter, no payload rides this edge
+}
+
+pub fn claim(count: &AtomicUsize) -> bool {
+    // relaxed: the CAS loop's atomicity is the whole claim; nothing
+    // else is published through this counter.
+    count
+        .fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |c| c.checked_sub(1),
+        )
+        .is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn tests_are_exempt() {
+        let n = AtomicUsize::new(0);
+        n.store(1, Ordering::Relaxed);
+        assert_eq!(n.load(Ordering::Relaxed), 1);
+    }
+}
+"#;
+
+#[test]
+fn relaxed_reason_accepts_trailing_statement_comment_and_tests() {
+    // A trailing `relaxed:` comment, a comment run above a multi-line
+    // statement (covering Relaxed tokens on its continuation lines),
+    // and #[cfg(test)] code are all fine.
+    let f = only("util/ring.rs", RELAXED_NEAR, RELAXED_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const RELAXED_ALLOW_OK: &str = r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn publish(seq: &AtomicUsize) {
+    // lint:allow(relaxed-ordering-reason): fixture: counter is advisory in this model
+    seq.store(1, Ordering::Relaxed);
+}
+"#;
+
+const RELAXED_ALLOW_BARE: &str = r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn publish(seq: &AtomicUsize) {
+    // lint:allow(relaxed-ordering-reason)
+    seq.store(1, Ordering::Relaxed);
+}
+"#;
+
+#[test]
+fn relaxed_reason_suppression_round_trip() {
+    let ok = lint_sources(&[("util/ring.rs", RELAXED_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("util/ring.rs", RELAXED_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(RELAXED_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, RELAXED_RULE, line_of(RELAXED_ALLOW_BARE, "seq.store"));
+}
+
 // ---------------------------------------------------------- suppressions
 
 const HYGIENE: &str = r#"
@@ -669,6 +864,8 @@ fn rule_registry_is_complete() {
         PANIC_RULE,
         LOCK_RULE,
         CHANNEL_RULE,
+        UNSAFE_RULE,
+        RELAXED_RULE,
         "suppression",
     ] {
         assert!(names.contains(&expected), "missing rule `{expected}` in {names:?}");
