@@ -120,6 +120,8 @@ fn frontend_run(n_models: usize, producers: usize, mode: Mode, n_total: u64) -> 
             // `--busy-poll` serve flag); default is the parking drain.
             busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
             pin_cores: std::env::var_os("SYMPHONY_PIN_CORES").is_some(),
+            reconnect: symphony::net::client::ReconnectPolicy::default(),
+            fault_plan: symphony::net::faults::FaultPlan::none(),
         },
         backend_txs.clone(),
         comp_tx,

@@ -23,16 +23,16 @@
 
 use std::fmt::Write as _;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use symphony::coordinator::messages::{CandWindow, ToModel};
-use symphony::coordinator::Clock;
+use symphony::coordinator::{Clock, ShardLiveness};
 use symphony::core::time::Micros;
 use symphony::core::types::{GpuId, ModelId};
-use symphony::net::client::RemoteRank;
+use symphony::net::client::{DisconnectCounts, ReconnectPolicy, RemoteRank};
 use symphony::net::codec::{self, WireToRank};
+use symphony::net::faults::FaultPlan;
 use symphony::net::server::{RankServer, RankServerConfig};
 use symphony::net::transport::{spawn_writer, FrameReader};
 use symphony::util::ring::ring;
@@ -111,6 +111,7 @@ fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
         max_sessions: Some(1),
         busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
         pin_cores: false,
+        fault_plan: FaultPlan::none(),
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();
@@ -118,10 +119,23 @@ fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
 
     let clock = Clock::new();
     let conn = Arc::new(
-        RemoteRank::connect(&addr, 1, clock, Duration::from_secs(5)).expect("connect"),
+        RemoteRank::connect(
+            &addr,
+            1,
+            clock,
+            Duration::from_secs(5),
+            ReconnectPolicy::disabled(),
+            FaultPlan::none(),
+        )
+        .expect("connect"),
     );
     let (model_tx, model_rx) = ring::<ToModel>(1024);
-    conn.start_reader(vec![model_tx], 0, Arc::new(AtomicU64::new(0)));
+    conn.start_reader(
+        vec![model_tx],
+        0,
+        Arc::new(DisconnectCounts::default()),
+        ShardLiveness::all_live(1),
+    );
 
     let mut rtts_us: Vec<f64> = Vec::with_capacity(rounds);
     for seq in 0..rounds as u64 {

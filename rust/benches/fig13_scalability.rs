@@ -74,6 +74,8 @@ fn coordinator_sweep(
             remote_ranks: Vec::new(),
             busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
             pin_cores: std::env::var_os("SYMPHONY_PIN_CORES").is_some(),
+            reconnect: symphony::net::client::ReconnectPolicy::default(),
+            fault_plan: symphony::net::faults::FaultPlan::none(),
         },
         backend_txs.clone(),
         comp_tx,

@@ -23,6 +23,18 @@
 //! owning `rank-server` and the ack returns as a `DrainAck` frame —
 //! this actor neither knows nor cares which side of the process
 //! boundary the shard lives on.
+//!
+//! It is, however, **failover-aware**: each step starts by reconciling
+//! against the cluster's shard-liveness map. GPUs on a server that has
+//! been unreachable past `ReconnectPolicy::dead_after` become
+//! [`GpuState::Lost`] — no longer counted active, never drained or
+//! attached — which drops the measured capacity and lets the ordinary
+//! `Allocate` path **re-tile the lost range onto survivors** (lowest
+//! detached live ids first, the same consolidation order as any other
+//! attach). When the server reconnects, its `Lost` GPUs are re-adopted:
+//! an idempotent `Attach` re-asserts intent against the fresh session
+//! (which spawned fully attached anyway) and the slot returns to
+//! `Attached`.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -39,6 +51,11 @@ pub enum GpuState {
     Draining,
     /// Retired (or never attached); available to attach.
     Detached,
+    /// Its shard's server has been unreachable past the reconnect
+    /// deadline: the capacity is gone until the server returns. Not
+    /// active, not attachable, not drainable — a pending drain's ack
+    /// died with the session and will never arrive.
+    Lost,
 }
 
 /// The actor that applies [`AutoscaleController`] advice to a live
@@ -98,9 +115,53 @@ impl LiveAutoscaler {
     pub fn reap_acks(&mut self) {
         while let Ok(gpu) = self.ack_rx.try_recv() {
             let s = &mut self.state[gpu.0 as usize];
-            debug_assert_eq!(*s, GpuState::Draining, "unexpected ack for {gpu:?}");
-            *s = GpuState::Detached;
+            // A `Lost` slot can still see its ack land if the shard
+            // acked just before the session died; the loss verdict
+            // stands (the GPU is unreachable either way).
+            if *s == GpuState::Draining {
+                *s = GpuState::Detached;
+            }
         }
+    }
+
+    /// Reconcile against shard liveness: GPUs on dead servers become
+    /// `Lost` (dropping out of the active count, making room for the
+    /// `Allocate` path to re-tile onto survivors); `Lost` GPUs whose
+    /// server returned are re-adopted with an idempotent `Attach`.
+    /// Returns `(lost, revived)` this pass.
+    pub fn reconcile_liveness(&mut self) -> (usize, usize) {
+        let mut lost = 0;
+        let mut revived = 0;
+        for g in 0..self.state.len() {
+            let gpu = GpuId(g as u32);
+            let live = self.cluster.gpu_is_live(gpu);
+            match self.state[g] {
+                GpuState::Attached | GpuState::Draining if !live => {
+                    self.state[g] = GpuState::Lost;
+                    lost += 1;
+                }
+                GpuState::Lost if live => {
+                    // The reconnected session spawned fully attached;
+                    // the explicit attach is an idempotent re-assert
+                    // (and catches a replayed drain racing this slot).
+                    if self.cluster.attach(gpu).is_ok() {
+                        self.state[g] = GpuState::Attached;
+                        revived += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if lost > 0 {
+            eprintln!(
+                "autoscaler: {lost} GPU(s) lost to a dead rank server; \
+                 re-tiling onto survivors"
+            );
+        }
+        if revived > 0 {
+            eprintln!("autoscaler: {revived} lost GPU(s) re-adopted after reconnect");
+        }
+        (lost, revived)
     }
 
     /// One epoch: feed the window through the controller and act on the
@@ -108,6 +169,7 @@ impl LiveAutoscaler {
     /// issued) actually applied.
     pub fn step(&mut self, w: &WindowStats) -> i64 {
         self.reap_acks();
+        self.reconcile_liveness();
         match self.ctl.advise(w) {
             Advice::Hold => 0,
             Advice::Allocate(n) => {
@@ -118,7 +180,11 @@ impl LiveAutoscaler {
                     if added == n as i64 {
                         break;
                     }
+                    // Live shards only: a detached GPU on a dead server
+                    // is not capacity — skipping it is what re-tiles a
+                    // lost range onto the surviving servers' headroom.
                     if self.state[g] == GpuState::Detached
+                        && self.cluster.gpu_is_live(GpuId(g as u32))
                         && self.cluster.attach(GpuId(g as u32)).is_ok()
                     {
                         self.state[g] = GpuState::Attached;
@@ -211,6 +277,8 @@ mod tests {
                 remote_ranks: Vec::new(),
                 busy_poll: false,
                 pin_cores: false,
+                reconnect: crate::net::client::ReconnectPolicy::default(),
+                fault_plan: crate::net::faults::FaultPlan::none(),
             },
             backend_txs,
             comp_tx,
@@ -262,6 +330,83 @@ mod tests {
         coord.shutdown();
     }
 
+    /// Failover re-tiling: a dead shard's GPUs become `Lost` (not
+    /// active, not attachable), overload allocation skips the dead
+    /// range and grows onto surviving shards' headroom, and revival
+    /// re-adopts the lost slots as `Attached`.
+    #[test]
+    fn live_autoscaler_retiles_around_dead_shard() {
+        let profile = LatencyProfile::new(0.5, 2.0);
+        // 3 shards over 6 GPUs: shard 0 owns 0..2, shard 1 owns 2..4,
+        // shard 2 owns 4..6. Start with 0..4 attached.
+        let num_gpus = 6;
+        let mut backend_txs = Vec::new();
+        let mut _backend_rxs = Vec::new();
+        for _ in 0..num_gpus {
+            let (tx, rx) = channel::<ToBackend>();
+            backend_txs.push(tx);
+            _backend_rxs.push(rx);
+        }
+        let (comp_tx, _comp_rx) = channel::<Completion>();
+        let coord = Coordinator::spawn(
+            CoordinatorConfig {
+                profiles: vec![profile],
+                num_gpus,
+                initial_gpus: Some(4),
+                rank_shards: 3,
+                ingest_shards: 1,
+                model_workers: None,
+                net_bound: Micros::ZERO,
+                exec_margin: Micros::ZERO,
+                remote_ranks: Vec::new(),
+                busy_poll: false,
+                pin_cores: false,
+                reconnect: crate::net::client::ReconnectPolicy::default(),
+                fault_plan: crate::net::faults::FaultPlan::none(),
+            },
+            backend_txs,
+            comp_tx,
+        );
+        let liveness = coord.shard_liveness();
+        let ctl = AutoscaleController::new(AutoscaleConfig {
+            min_gpus: 1,
+            max_gpus: num_gpus,
+            ..Default::default()
+        });
+        let mut scaler = LiveAutoscaler::new(ctl, coord.cluster_ctl(), 4);
+        assert_eq!(scaler.active_gpus(), 4);
+
+        // Shard 1's server goes dark past the deadline.
+        liveness.set_live(1, false);
+        let (lost, revived) = scaler.reconcile_liveness();
+        assert_eq!((lost, revived), (2, 0), "{:?}", scaler.gpu_states());
+        assert_eq!(scaler.gpu_states()[2], GpuState::Lost);
+        assert_eq!(scaler.gpu_states()[3], GpuState::Lost);
+        assert_eq!(scaler.active_gpus(), 2, "lost GPUs are not active");
+
+        // Overload: the grow path must skip the dead range and attach
+        // shard 2's headroom instead — the re-tile.
+        let mut w = overloaded();
+        w.active_gpus = scaler.active_gpus();
+        let delta = scaler.step(&w);
+        assert!(delta > 0, "overload must still allocate, got {delta}");
+        assert_eq!(
+            scaler.gpu_states()[4],
+            GpuState::Attached,
+            "lowest live detached id attaches first: {:?}",
+            scaler.gpu_states()
+        );
+        assert_eq!(scaler.gpu_states()[2], GpuState::Lost, "dead range untouched");
+
+        // The server returns: lost slots are re-adopted.
+        liveness.set_live(1, true);
+        let (lost, revived) = scaler.reconcile_liveness();
+        assert_eq!((lost, revived), (0, 2), "{:?}", scaler.gpu_states());
+        assert_eq!(scaler.gpu_states()[2], GpuState::Attached);
+        assert_eq!(scaler.gpu_states()[3], GpuState::Attached);
+        coord.shutdown();
+    }
+
     /// An empty window must not scale (the controller regression,
     /// exercised through the live actor).
     #[test]
@@ -282,6 +427,8 @@ mod tests {
                 remote_ranks: Vec::new(),
                 busy_poll: false,
                 pin_cores: false,
+                reconnect: crate::net::client::ReconnectPolicy::default(),
+                fault_plan: crate::net::faults::FaultPlan::none(),
             },
             vec![backend_tx],
             comp_tx,

@@ -26,7 +26,13 @@
 //! variant sets and field names of both sides (modulo the documented
 //! local-only/wire-only exceptions) and verifies every wire variant has
 //! an encode and a decode arm, so evolving one side without the other
-//! fails CI instead of surfacing as a runtime `BadTag`.
+//! fails CI instead of surfacing as a runtime `BadTag`. The handshake
+//! is covered too: every field of `ServerPreamble` / `ClientHello` —
+//! including the wire-v2 session/epoch pair that fences stale frames
+//! across reconnects — must appear in both its encode and its decode
+//! function, so a one-sided handshake edit is caught the same way.
+//! [`ToModel::Reregister`] is frontend-local by design: it is the wire
+//! *client's* post-reconnect nudge, so it never crosses the wire.
 
 use std::sync::mpsc::Sender;
 
@@ -78,6 +84,15 @@ pub enum ToModel {
         to_shard: usize,
         seq: u64,
     },
+    /// The wire client re-established a rank-server session (reconnect
+    /// epoch bump): the fresh session's shards spawned empty, so the
+    /// worker must drop its coalescing state and re-register `model`'s
+    /// current candidate from scratch. The worker is the single
+    /// authority for its candidate — recovery is a local re-register,
+    /// not a distributed handoff. Frontend-side only (never crosses the
+    /// wire); behaves like `Revalidate` but skips straight to
+    /// re-registration without discarding the computed candidate.
+    Reregister { model: ModelId },
     Shutdown,
 }
 

@@ -40,6 +40,31 @@
 //! steering, and the drain/attach autoscaler protocol don't know the
 //! difference. Backends always stay in this process.
 //!
+//! The wire configuration survives session death (wire v2). Handshake
+//! and reconnect state machine, per connection:
+//!
+//! ```text
+//!   connect ──▶ preamble{shards,gpu_lo..hi,session} ◀── rank-server
+//!          ──▶ hello{n_models,now_us,epoch} ──▶          (session++ per
+//!                                                        accepted client)
+//!   Live(epoch e) ──unexpected EOF / IO / protocol / backlog──▶
+//!   Reconnecting(e+1)   · first detector wins a CAS: one count, by
+//!        │                cause, into FrontendStats
+//!        │              · frames from session e are fenced (a stale
+//!        │                Granted never leases a GPU in session e+1)
+//!        │              · registrations drop (Ok), drain/attach fail
+//!        ├── backoff-dial (hello carries e+1) ──▶ Live(e+1):
+//!        │     replay desired-detached drains, mark shards live,
+//!        │     ToModel::Reregister to every worker (the worker is the
+//!        │     single authority for its candidate — recovery is a
+//!        │     local re-register)
+//!        └── past ReconnectPolicy::dead_after: mark the server's
+//!            shard range dead in ShardLiveness — RankRouters route
+//!            registrations to surviving shards, the live autoscaler
+//!            re-tiles the lost GPU range onto survivors; an eventual
+//!            reconnect re-adopts the range
+//! ```
+//!
 //! The coordinator is backend-agnostic: callers supply one `ToBackend`
 //! channel per GPU (real PJRT executors in [`crate::serve`], sleep
 //! emulators, or sinks for scheduler-only benchmarks).
@@ -60,7 +85,8 @@ use std::time::Duration;
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
-use crate::net::client::RemoteRank;
+use crate::net::client::{DisconnectBreakdown, DisconnectCounts, ReconnectPolicy, RemoteRank};
+use crate::net::faults::FaultPlan;
 use crate::util::affinity::{self, CorePlan};
 use crate::util::error::Result;
 use crate::util::ring::{ring, RingSender};
@@ -70,7 +96,7 @@ use ingest::IngestTier;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
 pub use model_thread::{ModelWorkerPool, QueueDepthProbe, WorkerStats};
 pub use rank_shard::{RankShard, ShardStats};
-pub use router::{FreeHints, PortClosed, RankPort, RankRouter, ShardTopology};
+pub use router::{FreeHints, PortClosed, RankPort, RankRouter, ShardLiveness, ShardTopology};
 
 /// How long `--remote-ranks` keeps retrying a rank server that is not
 /// accepting yet (CI spawns the server and the client back to back).
@@ -156,6 +182,14 @@ pub struct CoordinatorConfig {
     /// onto the host's cores in NUMA-node order (`--pin-cores`). No-op
     /// when topology discovery fails or off Linux.
     pub pin_cores: bool,
+    /// How remote connections behave when a session dies unexpectedly
+    /// (see [`ReconnectPolicy`]). Irrelevant for an in-process tier.
+    pub reconnect: ReconnectPolicy,
+    /// Deterministic wire fault injection for the *client* side of the
+    /// remote connections ([`FaultPlan::parse`] grammar;
+    /// `--fault-plan` on the CLI). [`FaultPlan::none`] — the default —
+    /// injects nothing.
+    pub fault_plan: std::sync::Arc<FaultPlan>,
 }
 
 /// What the frontend/worker tier did over a run, returned by
@@ -175,13 +209,23 @@ pub struct FrontendStats {
     /// Submissions that could not be delivered (a worker or ingest
     /// shard was already down). The seed silently swallowed these.
     pub dropped_submits: u64,
-    /// Remote rank-server connections that ended without this
-    /// coordinator asking (EOF, IO error, protocol violation). Always
-    /// 0 for an in-process rank tier. Non-zero means part of the rank
-    /// tier vanished mid-run: its workers failed fast and later
-    /// submissions count into `dropped_submits` — surfaced, not a
-    /// silent wedge.
+    /// Remote rank-server sessions that ended without this coordinator
+    /// asking (EOF, IO error, protocol violation, handshake failure,
+    /// writer-backlog overflow). Always 0 for an in-process rank tier.
+    /// With reconnect enabled (the default) a disconnect is a survived
+    /// incident, not a wedge: compare against `rank_reconnects`.
     pub rank_disconnects: u64,
+    /// The same count split by cause (io / protocol / handshake /
+    /// backlog-overflow) — which failure mode hit matters when reading
+    /// a chaos run.
+    pub rank_disconnect_causes: DisconnectBreakdown,
+    /// Sessions successfully re-established after an unexpected
+    /// disconnect (the reconnect state machine's recovery count).
+    pub rank_reconnects: u64,
+    /// Stale-session down-frames dropped by the epoch fence instead of
+    /// being dispatched (a stale `Granted` never leases a GPU in the
+    /// successor session).
+    pub rank_fenced_frames: u64,
 }
 
 /// A live coordinator: ingest shards + model-worker pool + rank shards
@@ -201,7 +245,10 @@ pub struct Coordinator {
     /// Remote rank-server connections (empty with an in-process tier).
     remote: Vec<Arc<RemoteRank>>,
     dropped_submits: Arc<AtomicU64>,
-    rank_disconnects: Arc<AtomicU64>,
+    disconnects: Arc<DisconnectCounts>,
+    /// Shared per-shard liveness: all-live for an in-process tier;
+    /// maintained by the `RemoteRank` reconnect machinery otherwise.
+    liveness: ShardLiveness,
 }
 
 /// Cheap clonable handle for runtime cluster resizing (§3.5 live
@@ -215,12 +262,22 @@ pub struct ClusterCtl {
     topo: ShardTopology,
     ports: Vec<RankPort>,
     num_gpus: usize,
+    liveness: ShardLiveness,
 }
 
 impl ClusterCtl {
     /// Total GPU capacity (attached or not).
     pub fn num_gpus(&self) -> usize {
         self.num_gpus
+    }
+
+    /// Is the shard owning `gpu` reachable right now? Always true for
+    /// an in-process tier; false while a remote server hosting it has
+    /// been unreachable past [`ReconnectPolicy::dead_after`]. The live
+    /// autoscaler treats a dead GPU as lost capacity and re-tiles onto
+    /// survivors.
+    pub fn gpu_is_live(&self, gpu: GpuId) -> bool {
+        self.liveness.is_live(self.topo.shard_of(gpu))
     }
 
     /// Begin retiring `gpu`: its shard stops granting/advertising it
@@ -298,6 +355,8 @@ impl Coordinator {
                     cfg.profiles.len(),
                     clock,
                     REMOTE_CONNECT_TIMEOUT,
+                    cfg.reconnect,
+                    cfg.fault_plan.clone(),
                 )?);
                 let info = conn.info;
                 if info.gpu_lo != *bounds.last().unwrap() {
@@ -345,12 +404,17 @@ impl Coordinator {
         let workers = cfg
             .model_workers
             .unwrap_or_else(|| ModelWorkerPool::default_workers(cfg.profiles.len()));
+        // One liveness slot per rank shard, shared by every router (to
+        // steer registrations off dead shards) and every connection's
+        // reconnect machinery (to flip its slice).
+        let liveness = ShardLiveness::all_live(topo.num_shards());
         let pool = ModelWorkerPool::spawn(
             &cfg.profiles,
             workers,
             clock,
             &topo,
             &ports,
+            liveness.clone(),
             &backends,
             &completions,
             cfg.net_bound,
@@ -360,7 +424,7 @@ impl Coordinator {
         );
         let model_txs = pool.model_txs();
         let depth = pool.queue_depth_probe();
-        let rank_disconnects = Arc::new(AtomicU64::new(0));
+        let disconnects = Arc::new(DisconnectCounts::default());
 
         let mut shard_handles = Vec::new();
         if cfg.remote_ranks.is_empty() {
@@ -391,7 +455,12 @@ impl Coordinator {
             }
         } else {
             for (conn, offset) in remote.iter().zip(&shard_offsets) {
-                conn.start_reader(model_txs.clone(), *offset, rank_disconnects.clone());
+                conn.start_reader(
+                    model_txs.clone(),
+                    *offset,
+                    disconnects.clone(),
+                    liveness.clone(),
+                );
             }
             // Remote sessions spawn fully attached; detach the
             // headroom the way the autoscaler would — a drain of a
@@ -428,8 +497,17 @@ impl Coordinator {
             shard_handles,
             remote,
             dropped_submits,
-            rank_disconnects,
+            disconnects,
+            liveness,
         })
+    }
+
+    /// Test-only: the shared shard-liveness map, normally maintained by
+    /// the wire connections' reconnect machinery. Lets unit tests
+    /// declare shards dead without standing up a rank server.
+    #[cfg(test)]
+    pub(crate) fn shard_liveness(&self) -> ShardLiveness {
+        self.liveness.clone()
     }
 
     /// Handle for runtime GPU drain/attach (live autoscaling).
@@ -438,6 +516,7 @@ impl Coordinator {
             topo: self.topo.clone(),
             ports: self.ports.clone(),
             num_gpus: self.topo.range(self.topo.num_shards() - 1).end as usize,
+            liveness: self.liveness.clone(),
         }
     }
 
@@ -450,7 +529,17 @@ impl Coordinator {
     /// Remote rank-server sessions that ended without this coordinator
     /// asking (see [`FrontendStats::rank_disconnects`]).
     pub fn rank_disconnects(&self) -> u64 {
-        self.rank_disconnects.load(Ordering::Relaxed)
+        self.disconnects.total()
+    }
+
+    /// The disconnect count split by cause.
+    pub fn rank_disconnect_causes(&self) -> DisconnectBreakdown {
+        self.disconnects.snapshot()
+    }
+
+    /// Sessions re-established so far across all remote connections.
+    pub fn rank_reconnects(&self) -> u64 {
+        self.remote.iter().map(|c| c.reconnects()).sum()
     }
 
     /// A producer-side submission handle routed through the ingest
@@ -552,16 +641,23 @@ impl Coordinator {
                 stats.merge(&s);
             }
         }
+        let mut rank_reconnects = 0;
+        let mut rank_fenced_frames = 0;
         for conn in &self.remote {
             conn.join();
             stats.grants += conn.grants();
+            rank_reconnects += conn.reconnects();
+            rank_fenced_frames += conn.fenced();
         }
         let front = FrontendStats {
             processed: worker_stats.processed,
             flush_recomputes: worker_stats.flush_recomputes,
             ingest_forwarded,
             dropped_submits: self.dropped_submits.load(Ordering::Relaxed),
-            rank_disconnects: self.rank_disconnects.load(Ordering::Relaxed),
+            rank_disconnects: self.disconnects.total(),
+            rank_disconnect_causes: self.disconnects.snapshot(),
+            rank_reconnects,
+            rank_fenced_frames,
         };
         (front, stats)
     }
@@ -585,6 +681,8 @@ mod tests {
             remote_ranks: Vec::new(),
             busy_poll: false,
             pin_cores: false,
+            reconnect: ReconnectPolicy::default(),
+            fault_plan: FaultPlan::none(),
         }
     }
 

@@ -32,7 +32,7 @@ use crate::coordinator::{MAX_DRAIN, MODEL_RING_DEPTH};
 
 use crate::coordinator::clock::Clock;
 use crate::coordinator::messages::{CandWindow, Completion, ToBackend, ToModel};
-use crate::coordinator::router::{RankPort, RankRouter, ShardTopology};
+use crate::coordinator::router::{RankPort, RankRouter, ShardLiveness, ShardTopology};
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{ModelId, ReqBurst, Request};
@@ -275,6 +275,25 @@ impl ModelWorker {
                     return Flow::Stop;
                 }
             }
+            ToModel::Reregister { model } => {
+                // Post-reconnect replay: the wire client re-established
+                // a rank-server session whose shards spawned empty. The
+                // router's coalescing memory describes the dead
+                // session, so drop it and re-register the current
+                // candidate from scratch — same shape as `Revalidate`,
+                // and the router's liveness-aware `register_current`
+                // routes around any shards still down. A fresh logical
+                // registration starts the migration budget over.
+                let si = self.slot_of(model);
+                self.slots[si].router.invalidate_last_sent();
+                let cand = self.compute(si, self.clock.now(), dropped);
+                let slot = &mut self.slots[si];
+                slot.hops = 0;
+                slot.dirty = false;
+                if slot.router.register_home(cand).is_err() {
+                    return Flow::Stop;
+                }
+            }
             ToModel::Overflow { model, to_shard, seq } => {
                 let si = self.slot_of(model);
                 // Stale verdicts (the candidate was replaced since that
@@ -350,7 +369,12 @@ impl ModelWorkerPool {
     /// must exist) or remote rank-server connections. `busy_poll`
     /// keeps the workers' drain loops spinning instead of parking;
     /// `cores` pins each worker to its assigned core (pass
-    /// [`CorePlan::disabled`] to skip pinning).
+    /// [`CorePlan::disabled`] to skip pinning). `liveness` is the
+    /// shared per-shard liveness map every router consults — pass
+    /// [`ShardLiveness::all_live`] for in-process shards (which cannot
+    /// die independently); the wire configuration hands in the map its
+    /// `RemoteRank` connections maintain, so registrations route around
+    /// dead servers.
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         profiles: &[LatencyProfile],
@@ -358,6 +382,7 @@ impl ModelWorkerPool {
         clock: Clock,
         topo: &ShardTopology,
         ports: &[RankPort],
+        liveness: ShardLiveness,
         backends: &[Sender<ToBackend>],
         completions: &Sender<Completion>,
         net_bound: Micros,
@@ -385,7 +410,12 @@ impl ModelWorkerPool {
                     model: ModelId(m as u32),
                     profile: profiles[m],
                     queue: TrackingQueue::new(),
-                    router: RankRouter::new(topo.clone(), ports.to_vec(), ModelId(m as u32)),
+                    router: RankRouter::with_liveness(
+                        topo.clone(),
+                        ports.to_vec(),
+                        ModelId(m as u32),
+                        liveness.clone(),
+                    ),
                     hops: 0,
                     dirty: false,
                 })

@@ -16,7 +16,7 @@
 //! transport-agnostic; `serve --remote-ranks` swaps the port kind and
 //! nothing else.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::messages::{CandWindow, ToRank};
@@ -88,6 +88,57 @@ impl RankPort {
                     Ok(())
                 }
             },
+        }
+    }
+}
+
+/// Per-shard liveness, shared between the wire clients (whose dialers
+/// mark a server's shards dead once it stays unreachable past the
+/// reconnect policy's deadline, and live again on re-handshake), the
+/// [`RankRouter`]s (which redirect registrations off dead shards), and
+/// the autoscaler (which re-tiles a dead range's capacity onto
+/// survivors). In-process shards never die, so the default
+/// all-live instance makes every redirect a no-op.
+#[derive(Clone)]
+pub struct ShardLiveness {
+    live: Arc<Vec<AtomicBool>>,
+}
+
+impl ShardLiveness {
+    pub fn all_live(shards: usize) -> Self {
+        ShardLiveness {
+            live: Arc::new((0..shards.max(1)).map(|_| AtomicBool::new(true)).collect()),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Is `shard` reachable? Out-of-range indices read as live so a
+    /// stale caller degrades to the pre-liveness behavior (send and let
+    /// the port fail) instead of inventing a dead shard.
+    pub fn is_live(&self, shard: usize) -> bool {
+        // relaxed: liveness is an advisory routing hint — a stale read
+        // sends one registration at a dead (or just-revived) shard,
+        // which the reconnect replay / overflow path already heals; no
+        // payload is published under this flag.
+        self.live.get(shard).map_or(true, |l| l.load(Ordering::Relaxed))
+    }
+
+    pub fn set_live(&self, shard: usize, live: bool) {
+        if let Some(l) = self.live.get(shard) {
+            // relaxed: see `is_live` — an advisory flag with no payload
+            // riding on it; markers and readers tolerate staleness.
+            l.store(live, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark a contiguous run of shards (one wire connection's slice of
+    /// the global topology) dead or live.
+    pub fn set_range_live(&self, shards: std::ops::Range<usize>, live: bool) {
+        for s in shards {
+            self.set_live(s, live);
         }
     }
 }
@@ -296,6 +347,9 @@ pub struct RankRouter {
     ports: Vec<RankPort>,
     model: ModelId,
     home: usize,
+    /// Which shards are currently reachable (dead-server failover
+    /// redirects registrations to the first live shard).
+    liveness: ShardLiveness,
     /// Shard currently holding the registration.
     reg_shard: usize,
     /// Monotone registration counter (echoed by `ToModel::Overflow`).
@@ -309,6 +363,19 @@ pub struct RankRouter {
 
 impl RankRouter {
     pub fn new(topo: ShardTopology, ports: Vec<RankPort>, model: ModelId) -> Self {
+        let liveness = ShardLiveness::all_live(topo.num_shards());
+        Self::with_liveness(topo, ports, model, liveness)
+    }
+
+    /// [`RankRouter::new`] with a shared liveness map (the wire
+    /// configuration: clients mark their slice dead/live, every router
+    /// reads it).
+    pub fn with_liveness(
+        topo: ShardTopology,
+        ports: Vec<RankPort>,
+        model: ModelId,
+        liveness: ShardLiveness,
+    ) -> Self {
         assert_eq!(topo.num_shards(), ports.len(), "one port per shard");
         let home = topo.home_of(model);
         RankRouter {
@@ -316,12 +383,25 @@ impl RankRouter {
             ports,
             model,
             home,
+            liveness,
             reg_shard: home,
             seq: 0,
             // A fresh shard holds no registration, which "cleared" (None)
             // describes exactly.
             last_sent: Some(None),
         }
+    }
+
+    /// Redirect a registration target off a dead shard: wrap-scan from
+    /// `shard` for the first live one. With everything dead (or nothing
+    /// marked), the original target stands — the send then fails or
+    /// drops exactly as it did before liveness existed.
+    fn pick_live(&self, shard: usize) -> usize {
+        let n = self.ports.len();
+        (0..n)
+            .map(|i| (shard + i) % n)
+            .find(|&s| self.liveness.is_live(s))
+            .unwrap_or(shard)
     }
 
     pub fn num_shards(&self) -> usize {
@@ -365,9 +445,15 @@ impl RankRouter {
         cand: Option<CandWindow>,
         hops: u32,
     ) -> Result<(), PortClosed> {
-        if let (Some(new), Some(Some(prev))) = (cand.as_ref(), self.last_sent.as_ref()) {
-            if new.size == prev.size && new.latest == prev.latest && new.exec >= prev.exec {
-                return Ok(());
+        // A dead registered shard defeats coalescing: whatever it held
+        // is unreachable, so the next recompute must actually send (and
+        // `register_at` will redirect it to a live shard) instead of
+        // leaving the candidate pinned to a corpse.
+        if self.liveness.is_live(self.reg_shard) {
+            if let (Some(new), Some(Some(prev))) = (cand.as_ref(), self.last_sent.as_ref()) {
+                if new.size == prev.size && new.latest == prev.latest && new.exec >= prev.exec {
+                    return Ok(());
+                }
             }
         }
         self.register_at(self.reg_shard, cand, hops)
@@ -397,6 +483,7 @@ impl RankRouter {
         cand: Option<CandWindow>,
         hops: u32,
     ) -> Result<(), PortClosed> {
+        let shard = self.pick_live(shard);
         if shard != self.reg_shard {
             // Clear the old registration first so at most one shard can
             // grant for this model (a grant already in flight is handled
@@ -665,6 +752,53 @@ mod tests {
             m,
             ToRank::Candidate { cand: Some(_), .. }
         )));
+    }
+
+    /// Dead-shard failover at the routing layer: registrations redirect
+    /// to the first live shard (wrap scan from the target), a dead
+    /// registered shard defeats coalescing, and revival routes the next
+    /// home registration back.
+    #[test]
+    fn router_redirects_off_dead_shards() {
+        use crate::util::ring::ring;
+        let topo = ShardTopology::new(4, 2);
+        let (tx0, rx0) = ring::<ToRank>(64);
+        let (tx1, rx1) = ring::<ToRank>(64);
+        let liveness = ShardLiveness::all_live(2);
+        // ModelId(0) homes on shard 0.
+        let mut r = RankRouter::with_liveness(
+            topo,
+            vec![RankPort::Local(tx0), RankPort::Local(tx1)],
+            ModelId(0),
+            liveness.clone(),
+        );
+        let w = CandWindow {
+            exec: Micros(10),
+            latest: Micros(20),
+            size: 3,
+        };
+        r.register_home(Some(w)).unwrap();
+        assert_eq!(rx0.try_iter().count(), 1, "home shard live: routed home");
+        // Shard 0 dies. The identical window would normally coalesce to
+        // zero sends; the dead shard must force a redirected send.
+        liveness.set_live(0, false);
+        r.register_current(Some(w), 0).unwrap();
+        let msgs1: Vec<ToRank> = rx1.try_iter().collect();
+        assert!(
+            matches!(&msgs1[..], [ToRank::Candidate { cand: Some(_), .. }]),
+            "registration must land on the survivor: {msgs1:?}"
+        );
+        // The clearing send at the dead shard is attempted (and may be
+        // dropped by a reconnecting port); nothing else lands there.
+        let cleared: Vec<ToRank> = rx0.try_iter().collect();
+        assert!(
+            matches!(&cleared[..], [ToRank::Candidate { cand: None, .. }]),
+            "{cleared:?}"
+        );
+        // Revival: the next home registration goes home again.
+        liveness.set_live(0, true);
+        r.register_home(Some(w)).unwrap();
+        assert_eq!(rx0.try_iter().count(), 1, "revived home shard reached");
     }
 
     #[test]

@@ -14,11 +14,22 @@
 //!   the ack returns as the extra `WireFromRank::DrainAck` frame.
 //! - `ToModel::{Request, Requests, Shutdown}` are frontend-originated
 //!   and never shard-originated, so they have no down-frame.
+//! - `ToModel::Reregister` is the client-side reconnect nudge — minted
+//!   by the wire client when a session heals, never by a shard, so it
+//!   too has no down-frame.
 //!
 //! It also checks that every wire variant appears in all four
 //! encode/decode bodies. The decode half is the valuable one: decode
 //! dispatches on an integer tag, so a forgotten decode arm is *not* a
 //! compile error — it is a runtime `BadTag` on a perfectly valid frame.
+//!
+//! Finally it mirrors the *handshake*: every field of `ServerPreamble`
+//! and `ClientHello` must be touched by both its encode and its decode
+//! function. The handshake is fixed-offset (no per-frame tags), so a
+//! field added to the struct and encoded but not decoded — or decoded
+//! but never written — silently skews every later offset (the reconnect
+//! epoch/session pair was added exactly this way; this check keeps the
+//! two sides honest).
 
 use super::super::source::{EnumDecl, SourceFile, SourceTree};
 use super::super::Finding;
@@ -32,9 +43,10 @@ const CODEC_PATH: &str = "net/codec.rs";
 
 /// `ToRank` variants that never cross the wire.
 const TO_RANK_LOCAL_ONLY: &[&str] = &["Shutdown"];
-/// `ToModel` variants originated by the frontend/ingest side, not by a
-/// rank shard — they have no down-frame.
-const TO_MODEL_FRONTEND_ONLY: &[&str] = &["Request", "Requests", "Shutdown"];
+/// `ToModel` variants originated by the frontend/ingest side (or by
+/// the wire client itself — `Reregister` is the reconnect nudge), not
+/// by a rank shard — they have no down-frame.
+const TO_MODEL_FRONTEND_ONLY: &[&str] = &["Request", "Requests", "Shutdown", "Reregister"];
 /// Wire-only down variants (in-process delivery uses another channel).
 const FROM_RANK_WIRE_ONLY: &[&str] = &["DrainAck"];
 /// Per-variant fields dropped on the wire: (variant, field, why).
@@ -141,7 +153,107 @@ impl Rule for WireSchemaDrift {
         check_arms(codec, "decode_up", "WireToRank", wire_up, out);
         check_arms(codec, "encode_down", "WireFromRank", wire_down, out);
         check_arms(codec, "decode_down", "WireFromRank", wire_down, out);
+
+        // Handshake mirroring: both sides of each fixed-offset struct.
+        for (sname, enc, dec) in HANDSHAKE_STRUCTS {
+            check_handshake(codec, sname, enc, dec, out);
+        }
     }
+}
+
+/// Fixed-offset handshake structs and their encode/decode pairs.
+const HANDSHAKE_STRUCTS: &[(&str, &str, &str)] = &[
+    ("ServerPreamble", "encode_preamble", "decode_preamble"),
+    ("ClientHello", "encode_hello", "decode_hello"),
+];
+
+/// Every field of handshake struct `sname` must be named inside both
+/// `enc`'s and `dec`'s body. Handshake frames carry no per-field tags,
+/// so a one-sided edit shifts every later byte offset at runtime
+/// without any compile-time complaint.
+fn check_handshake(
+    codec: &SourceFile,
+    sname: &str,
+    enc: &str,
+    dec: &str,
+    out: &mut Vec<Finding>,
+) {
+    let parsed = struct_fields(codec, sname);
+    let has_enc = codec.fns.iter().any(|f| f.name == enc);
+    let has_dec = codec.fns.iter().any(|f| f.name == dec);
+    if parsed.is_none() && !has_enc && !has_dec {
+        // A codec with no handshake at all (rule fixtures) is not
+        // drift; a *partial* rename below is.
+        return;
+    }
+    let Some((line, fields)) = parsed else {
+        out.push(finding(
+            codec,
+            1,
+            format!("expected handshake struct `{sname}` not found — the drift rule mirrors it"),
+        ));
+        return;
+    };
+    for fn_name in [enc, dec] {
+        let Some(f) = codec.fns.iter().find(|f| f.name == fn_name) else {
+            out.push(finding(
+                codec,
+                1,
+                format!("expected `fn {fn_name}` not found — the drift rule mirrors {sname}"),
+            ));
+            continue;
+        };
+        for field in &fields {
+            let present = (f.body_open..=f.body_close).any(|ci| codec.ctext(ci) == field);
+            if !present {
+                out.push(finding(
+                    codec,
+                    line,
+                    format!(
+                        "`{fn_name}` never touches {sname}::{field} — handshake frames are \
+                         fixed-offset, so a field {} on one side only silently skews every \
+                         later offset",
+                        if fn_name.starts_with("encode") {
+                            "decoded but never encoded"
+                        } else {
+                            "encoded but never decoded"
+                        }
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Field names of `struct name { .. }` in `f`, with the decl line.
+/// Same token discipline as the enum scanner: idents directly followed
+/// by a single `:` at the struct's own brace depth.
+fn struct_fields(f: &SourceFile, name: &str) -> Option<(usize, Vec<String>)> {
+    for ci in 0..f.clen() {
+        if f.ctext(ci) != "struct" || f.ctext(ci + 1) != name || f.ctext(ci + 2) != "{" {
+            continue;
+        }
+        let line = f.cline(ci);
+        let close = f.matching_close(ci + 2);
+        let mut fields = Vec::new();
+        let mut depth = 0usize;
+        let mut m = ci + 3;
+        while m < close {
+            match f.ckind(m) {
+                Some(super::super::lexer::TokKind::Open) => depth += 1,
+                Some(super::super::lexer::TokKind::Close) => depth = depth.saturating_sub(1),
+                Some(super::super::lexer::TokKind::Ident)
+                    if depth == 0 && f.ctext(m + 1) == ":" && f.ctext(m + 2) != ":" =>
+                {
+                    fields.push(f.ctext(m).to_string());
+                }
+                _ => {}
+            }
+            m += 1;
+        }
+        return Some((line, fields));
+    }
+    None
 }
 
 fn finding(f: &SourceFile, line: usize, message: String) -> Finding {

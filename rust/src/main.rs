@@ -64,10 +64,11 @@ fn usage() {
                  [--model-workers W] [--rate R] [--secs S]\n  \
                  [--remote-ranks host:port,..] [--assert-grants]\n  \
                  [--busy-poll] [--pin-cores]\n  \
+                 [--fault-plan SPEC] [--expect-disconnects N]\n  \
          symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
                  [--epoch-ms E] [--backlog-per-gpu B] [--rates R1,R2,..] [--assert-scale]\n  \
          symphony rank-server [--listen ADDR] [--shards R] [--gpu-range LO..HI]\n  \
-                 [--max-sessions N] [--busy-poll] [--pin-cores]\n  \
+                 [--max-sessions N] [--busy-poll] [--pin-cores] [--fault-plan SPEC]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n  \
          symphony lint [--root rust/src] [--rule NAME]\n  \
@@ -103,6 +104,23 @@ fn getf(f: &HashMap<String, String>, k: &str, d: f64) -> f64 {
 
 fn getu(f: &HashMap<String, String>, k: &str, d: usize) -> usize {
     f.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Parse `--fault-plan SPEC` (see `net::faults` for the grammar); an
+/// absent flag is the inert plan.
+fn parse_fault_plan(
+    f: &HashMap<String, String>,
+) -> std::sync::Arc<symphony::net::faults::FaultPlan> {
+    match f.get("fault-plan") {
+        Some(spec) => match symphony::net::faults::FaultPlan::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --fault-plan: {e:#}");
+                std::process::exit(2);
+            }
+        },
+        None => symphony::net::faults::FaultPlan::none(),
+    }
 }
 
 fn parse_system(name: &str) -> SystemKind {
@@ -329,6 +347,7 @@ fn cmd_serve(rest: &[String]) {
         busy_poll: f.contains_key("busy-poll"),
         pin_cores: f.contains_key("pin-cores"),
         seed: 7,
+        fault_plan: parse_fault_plan(&f),
     }) {
         Ok(r) => r,
         Err(e) => {
@@ -376,19 +395,34 @@ fn cmd_serve(rest: &[String]) {
         );
     }
     // CI smoke assertion for the wire path: the run must have been
-    // scheduled (grants flowed back over the rank tier) and no rank
-    // server may have dropped the session.
+    // scheduled (grants flowed back over the rank tier) and the
+    // session count must match expectations. Without
+    // `--expect-disconnects` no rank server may have dropped the
+    // session; with it (the fault-recovery smoke) at least N sessions
+    // must have died AND each death must have healed into a reconnect.
     if f.contains_key("assert-grants") {
-        if report.grants == 0 || report.rank_disconnects > 0 {
+        let expect = getu(&f, "expect-disconnects", 0) as u64;
+        let ok = report.grants > 0
+            && if expect == 0 {
+                report.rank_disconnects == 0
+            } else {
+                report.rank_disconnects >= expect && report.rank_reconnects >= expect
+            };
+        if !ok {
             eprintln!(
-                "assert-grants FAILED: grants={} rank_disconnects={}",
-                report.grants, report.rank_disconnects
+                "assert-grants FAILED: grants={} rank_disconnects={} rank_reconnects={} \
+                 (expected {} disconnect(s), causes {:?})",
+                report.grants,
+                report.rank_disconnects,
+                report.rank_reconnects,
+                expect,
+                report.rank_disconnect_causes
             );
             std::process::exit(1);
         }
         println!(
-            "assert-grants OK: grants={} completed={} rank_disconnects=0",
-            report.grants, report.completed
+            "assert-grants OK: grants={} completed={} rank_disconnects={} rank_reconnects={}",
+            report.grants, report.completed, report.rank_disconnects, report.rank_reconnects
         );
     }
 }
@@ -429,6 +463,7 @@ fn cmd_rank_server(rest: &[String]) {
             max_sessions,
             busy_poll: f.contains_key("busy-poll"),
             pin_cores: f.contains_key("pin-cores"),
+            fault_plan: parse_fault_plan(&f),
         },
     ) {
         Ok(s) => s,

@@ -15,30 +15,59 @@
 //!   `ToRank::Drain { ack }` contract, so `ClusterCtl` and the live
 //!   autoscaler work unchanged over the wire.
 //!
-//! A disconnect that the client did not initiate is **surfaced, never
-//! swallowed**: the shared disconnect counter increments, the event is
-//! logged, and the send queue closes so every subsequent
-//! [`RemoteRank::send`] fails fast with [`PortClosed`] — model workers
-//! observe a dead rank tier exactly like a dead in-process shard
-//! thread, instead of wedging on a silent black hole. There is no
-//! transparent reconnect: candidate registrations are ephemeral state,
-//! so a reconnect needs a fresh session (tracked in the ROADMAP).
+//! ## The reconnect state machine
+//!
+//! A connection is `Live → (Reconnecting ⇄ Live)* → Closed`. An
+//! unexpected disconnect is **surfaced, never swallowed** — counted by
+//! cause in the shared [`DisconnectCounts`] — but with the
+//! [`ReconnectPolicy`] enabled it no longer kills the rank tier:
+//!
+//! * the failing session's **epoch** is bumped (first detector wins a
+//!   CAS, so a read error, a send error, and a backlog overflow racing
+//!   on the same corpse count one disconnect, not three);
+//! * the old socket is shut down and parked drain acks drop (waiters
+//!   see `Disconnected`, like a dead in-process shard);
+//! * a background dialer re-handshakes with capped exponential
+//!   backoff, sending the bumped epoch in its [`ClientHello`];
+//! * frames still in flight from the dead session are **fenced**: the
+//!   reader thread captured its session epoch at spawn and drops (and
+//!   counts) anything it reads once the epoch has moved on — a stale
+//!   `Granted` can never lease a GPU in the new session;
+//! * on re-handshake the client replays its *desired-detached* GPU set
+//!   (fresh server sessions spawn fully attached) and nudges every
+//!   model worker with `ToModel::Reregister` — the ModelThread is the
+//!   single authority for its candidate, so recovery is a re-register,
+//!   not a distributed transaction.
+//!
+//! While `Reconnecting`, candidate registrations and busy-until hints
+//! are silently dropped (`Ok`): the post-reconnect replay re-derives
+//! them all, and failing them would kill model workers over a blip.
+//! Drain/attach return [`PortClosed`] instead — the autoscaler's
+//! GPU-state machine must know its command did not happen. Past the
+//! policy's `dead_after` deadline the dialer declares the server's
+//! shard range dead in the shared [`ShardLiveness`], which makes the
+//! routers migrate candidates to survivors and lets the autoscaler
+//! re-tile the lost capacity; an eventual reconnect marks the range
+//! live again and the `Reregister` nudge re-homes the models.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::io::{Read, Write};
-use std::net::TcpStream;
+use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::messages::ToModel;
-use crate::coordinator::router::PortClosed;
+use crate::coordinator::router::{PortClosed, ShardLiveness};
 use crate::coordinator::Clock;
-use crate::core::types::GpuId;
+use crate::core::types::{GpuId, ModelId};
 use crate::net::codec::{self, ClientHello, ServerPreamble, WireFromRank, WireToRank, PREAMBLE_LEN};
-use crate::net::transport::{connect_retry, spawn_writer, FrameReader, FrameSender, WriterStats};
+use crate::net::faults::FaultPlan;
+use crate::net::transport::{
+    connect_retry, spawn_writer_with, FrameReader, FrameSender, SendFail, WriterStats,
+};
 use crate::util::error::{Context, Result};
 use crate::util::ring::RingSender;
 use crate::util::sync::relock;
@@ -46,40 +75,272 @@ use crate::util::sync::relock;
 /// How long the handshake may block before the peer is declared broken.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// One live connection to a rank server, shared (via `Arc`) by every
+/// Per-attempt connect budget inside the reconnect dialer (kept short
+/// so the dialer notices `close()` promptly between attempts).
+const DIAL_ATTEMPT_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Why a rank-server session ended without this process asking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DisconnectCause {
+    /// Torn read, reset, unexpected EOF — the transport died.
+    Io,
+    /// The peer spoke, but wrongly: bad frame, foreign GPU, unknown
+    /// model.
+    Protocol,
+    /// A session died during (re-)handshake.
+    Handshake,
+    /// Our own writer backlog hit its cap against a stalled peer.
+    BacklogOverflow,
+}
+
+impl std::fmt::Display for DisconnectCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DisconnectCause::Io => write!(f, "io"),
+            DisconnectCause::Protocol => write!(f, "protocol"),
+            DisconnectCause::Handshake => write!(f, "handshake"),
+            DisconnectCause::BacklogOverflow => write!(f, "backlog-overflow"),
+        }
+    }
+}
+
+/// Per-cause disconnect counters, shared by every connection of a
+/// coordinator (the satellite replacing the old single opaque count).
+#[derive(Debug, Default)]
+pub struct DisconnectCounts {
+    io: AtomicU64,
+    protocol: AtomicU64,
+    handshake: AtomicU64,
+    backlog_overflow: AtomicU64,
+}
+
+impl DisconnectCounts {
+    pub fn count(&self, cause: DisconnectCause) {
+        let c = match cause {
+            DisconnectCause::Io => &self.io,
+            DisconnectCause::Protocol => &self.protocol,
+            DisconnectCause::Handshake => &self.handshake,
+            DisconnectCause::BacklogOverflow => &self.backlog_overflow,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn io(&self) -> u64 {
+        self.io.load(Ordering::Relaxed)
+    }
+
+    pub fn protocol(&self) -> u64 {
+        self.protocol.load(Ordering::Relaxed)
+    }
+
+    pub fn handshake(&self) -> u64 {
+        self.handshake.load(Ordering::Relaxed)
+    }
+
+    pub fn backlog_overflow(&self) -> u64 {
+        self.backlog_overflow.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.io() + self.protocol() + self.handshake() + self.backlog_overflow()
+    }
+
+    /// A plain-value copy for reports (`FrontendStats`, `ServeReport`).
+    pub fn snapshot(&self) -> DisconnectBreakdown {
+        DisconnectBreakdown {
+            io: self.io(),
+            protocol: self.protocol(),
+            handshake: self.handshake(),
+            backlog_overflow: self.backlog_overflow(),
+        }
+    }
+}
+
+/// Value snapshot of [`DisconnectCounts`] — what lands in run reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DisconnectBreakdown {
+    pub io: u64,
+    pub protocol: u64,
+    pub handshake: u64,
+    pub backlog_overflow: u64,
+}
+
+impl DisconnectBreakdown {
+    pub fn total(&self) -> u64 {
+        self.io + self.protocol + self.handshake + self.backlog_overflow
+    }
+}
+
+/// How a [`RemoteRank`] behaves when its session dies unexpectedly.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectPolicy {
+    /// Reconnect at all? Off = the pre-reconnect fail-fast behavior
+    /// (session death closes the ports for good).
+    pub enabled: bool,
+    /// First dialer backoff; doubles per failed attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// How long a server may stay unreachable before its shard range
+    /// is declared dead (routers migrate candidates off it, the
+    /// autoscaler re-tiles its capacity onto survivors).
+    pub dead_after: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            enabled: true,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(1),
+            dead_after: Duration::from_secs(3),
+        }
+    }
+}
+
+impl ReconnectPolicy {
+    /// The legacy fail-fast behavior (what tests of the *counting* path
+    /// want: one disconnect, ports closed, no background dialing).
+    pub fn disabled() -> Self {
+        ReconnectPolicy {
+            enabled: false,
+            ..ReconnectPolicy::default()
+        }
+    }
+}
+
+/// Everything the reader/dialer need to (re)wire a session into the
+/// coordinator; captured once by [`RemoteRank::start_reader`].
+struct Wiring {
+    /// Model-worker inboxes, global model id order.
+    model_txs: Vec<RingSender<ToModel>>,
+    /// This server's first shard index in the client's global topology.
+    shard_offset: usize,
+    /// Shared per-cause disconnect counters.
+    disconnects: Arc<DisconnectCounts>,
+    /// Shared per-shard liveness (global shard indices).
+    liveness: ShardLiveness,
+}
+
+impl Wiring {
+    /// The global shard indices this connection covers.
+    fn shard_range(&self, shards: u16) -> std::ops::Range<usize> {
+        self.shard_offset..self.shard_offset + shards as usize
+    }
+}
+
+/// The connection's lifecycle state (see the module docs).
+enum ConnState {
+    Live { sender: FrameSender, stream: TcpStream },
+    Reconnecting,
+    Closed,
+}
+
+/// One connection to a rank server, shared (via `Arc`) by every
 /// [`crate::coordinator::router::RankPort`] that addresses one of its
-/// shards, by the cluster controller, and by the reader thread.
+/// shards, by the cluster controller, and by the reader/dialer threads.
 pub struct RemoteRank {
-    /// What the server advertised in its preamble.
+    /// What the server advertised in its first preamble. Re-handshakes
+    /// must advertise the same topology (shards and GPU range); only
+    /// the per-session `session` counter may differ.
     pub info: ServerPreamble,
-    /// The address we dialed (for log lines).
+    /// The address we dialed (for log lines and re-dialing).
     pub peer: String,
-    stream: TcpStream,
-    sender: FrameSender,
+    n_models: usize,
+    clock: Clock,
+    policy: ReconnectPolicy,
+    faults: Arc<FaultPlan>,
+    state: Mutex<ConnState>,
+    /// Client-side session epoch: 0 for the first session, bumped by
+    /// the winning [`RemoteRank::fail_session`] CAS on every death.
+    /// Coherent with `state` — both only change under the state lock.
+    epoch: AtomicU64,
+    /// The server's session counter from the most recent preamble.
+    last_session: AtomicU64,
+    wiring: Mutex<Option<Arc<Wiring>>>,
+    /// The *current* session's writer handle.
     writer: Mutex<Option<JoinHandle<std::io::Result<WriterStats>>>>,
-    reader: Mutex<Option<JoinHandle<()>>>,
+    /// Reader and dialer threads across all sessions (joined at
+    /// shutdown; dead sessions' threads exit promptly on their own).
+    threads: Mutex<Vec<JoinHandle<()>>>,
     /// Outstanding drain acks by GPU id: parked at `Drain` issue time,
     /// released by the matching `DrainAck` frame. A second drain of the
     /// same GPU before the first acks replaces (and thereby cancels)
     /// the parked sender.
     acks: Mutex<HashMap<u32, Sender<GpuId>>>,
+    /// GPUs this client wants detached (drained minus re-attached).
+    /// Fresh server sessions spawn fully attached, so the dialer
+    /// replays this set as `Drain` frames before the new session goes
+    /// live — the server's grantable set matches client intent even
+    /// when no autoscaler is running.
+    desired_detached: Mutex<BTreeSet<u32>>,
     /// `Granted` frames delivered — the client-side grant count merged
-    /// into `ShardStats` at shutdown (the server keeps the
-    /// authoritative per-shard stats and logs them per session).
+    /// into `ShardStats` at shutdown.
     grants: AtomicU64,
+    /// Successful re-handshakes.
+    reconnects: AtomicU64,
+    /// Down-frames read from an already-dead session and dropped by the
+    /// epoch fence.
+    fenced: AtomicU64,
     /// Set by [`RemoteRank::close`]: a subsequent EOF is the expected
-    /// end of session, not a failure.
+    /// end of session, not a failure, and the dialer must stop.
     closing: AtomicBool,
 }
 
 impl RemoteRank {
     /// Dial `addr` (retrying until `timeout` — the server may still be
     /// binding) and run the handshake: read the server preamble,
-    /// answer with the model count and our clock reading so the server
-    /// can host this session's shards in our clock domain.
-    pub fn connect(addr: &str, n_models: usize, clock: Clock, timeout: Duration) -> Result<Self> {
+    /// answer with the model count, our clock reading (the server
+    /// hosts this session's shards in our clock domain), and session
+    /// epoch 0.
+    pub fn connect(
+        addr: &str,
+        n_models: usize,
+        clock: Clock,
+        timeout: Duration,
+        policy: ReconnectPolicy,
+        faults: Arc<FaultPlan>,
+    ) -> Result<Self> {
+        let (info, stream) = Self::handshake(addr, n_models, &clock, timeout, 0, &faults)?;
+        let _ = faults.spawn_timed_killer(&stream);
+        let (sender, writer) = spawn_writer_with(stream.try_clone()?, Some(faults.session()))?;
+        Ok(RemoteRank {
+            info,
+            peer: addr.to_string(),
+            n_models,
+            clock,
+            policy,
+            faults,
+            state: Mutex::new(ConnState::Live { sender, stream }),
+            epoch: AtomicU64::new(0),
+            last_session: AtomicU64::new(info.session),
+            wiring: Mutex::new(None),
+            writer: Mutex::new(Some(writer)),
+            threads: Mutex::new(Vec::new()),
+            acks: Mutex::new(HashMap::new()),
+            desired_detached: Mutex::new(BTreeSet::new()),
+            grants: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            fenced: AtomicU64::new(0),
+            closing: AtomicBool::new(false),
+        })
+    }
+
+    /// One TCP connect + preamble/hello exchange. Shared by the initial
+    /// [`RemoteRank::connect`] and every dialer re-attempt.
+    fn handshake(
+        addr: &str,
+        n_models: usize,
+        clock: &Clock,
+        timeout: Duration,
+        epoch: u64,
+        faults: &FaultPlan,
+    ) -> Result<(ServerPreamble, TcpStream)> {
         let stream = connect_retry(addr, timeout)
             .with_context(|| format!("connecting to rank-server {addr}"))?;
+        if faults.fail_this_handshake() {
+            crate::bail!("fault-plan: injected handshake failure dialing {addr}");
+        }
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
         let mut pre = [0u8; PREAMBLE_LEN];
@@ -99,121 +360,379 @@ impl RemoteRank {
         let hello = codec::encode_hello(&ClientHello {
             n_models: n_models as u32,
             now_us: clock.now().0,
+            epoch,
         });
         (&stream).write_all(&hello)?;
         stream.set_read_timeout(None)?;
-        let (sender, writer) = spawn_writer(stream.try_clone()?)?;
-        Ok(RemoteRank {
-            info,
-            peer: addr.to_string(),
-            stream,
-            sender,
-            writer: Mutex::new(Some(writer)),
-            reader: Mutex::new(None),
-            acks: Mutex::new(HashMap::new()),
-            grants: AtomicU64::new(0),
-            closing: AtomicBool::new(false),
-        })
+        Ok((info, stream))
     }
 
-    /// Start the down-traffic reader. `model_txs` are the model-worker
-    /// inboxes (global model id order); `shard_offset` is this server's
-    /// first shard index in the client's global topology (re-bases
-    /// `Overflow::to_shard`); `disconnects` is the shared counter an
-    /// unexpected EOF/IO error increments. Frames naming a model or GPU
-    /// outside what this server may address fail the session as a
-    /// counted disconnect (a worker must never index `backends` off a
-    /// wire value, and a silently dropped grant would wedge capacity).
+    /// Start the down-traffic reader and arm the reconnect machinery.
+    /// `model_txs` are the model-worker inboxes (global model id
+    /// order); `shard_offset` is this server's first shard index in the
+    /// client's global topology (re-bases `Overflow::to_shard`);
+    /// `disconnects`/`liveness` are the coordinator-wide shared maps.
+    /// Frames naming a model or GPU outside what this server may
+    /// address fail the session as a counted `Protocol` disconnect (a
+    /// worker must never index `backends` off a wire value, and a
+    /// silently dropped grant would wedge capacity).
     pub fn start_reader(
         self: &Arc<Self>,
         model_txs: Vec<RingSender<ToModel>>,
         shard_offset: usize,
-        disconnects: Arc<AtomicU64>,
+        disconnects: Arc<DisconnectCounts>,
+        liveness: ShardLiveness,
     ) {
-        let conn = Arc::clone(self);
+        let wiring = Arc::new(Wiring {
+            model_txs,
+            shard_offset,
+            disconnects,
+            liveness,
+        });
+        *relock(&self.wiring) = Some(Arc::clone(&wiring));
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        self.spawn_reader(wiring, epoch);
+    }
+
+    /// Spawn the reader thread for the current session. The thread
+    /// captures `session_epoch` and reports any unexpected end through
+    /// [`RemoteRank::fail_session`], whose CAS makes duplicate reports
+    /// from racing detectors benign.
+    fn spawn_reader(self: &Arc<Self>, wiring: Arc<Wiring>, session_epoch: u64) {
         // fd exhaustion / thread-spawn failure below are resource
         // errors, not bugs: surface them exactly like an immediate
         // unexpected disconnect instead of panicking the caller.
-        let stream = match self.stream.try_clone() {
+        let stream = {
+            let st = relock(&self.state);
+            match &*st {
+                ConnState::Live { stream, .. } => stream.try_clone(),
+                // The session died between adoption and here; the
+                // failing path already spawned the next dialer.
+                _ => return,
+            }
+        };
+        let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                self.fail_session(&disconnects, &format!("cloning stream: {e}"));
+                eprintln!("rank-server {}: cloning stream failed: {e}", self.peer);
+                self.fail_session(DisconnectCause::Io, session_epoch);
                 return;
             }
         };
-        let spawn_disconnects = Arc::clone(&disconnects);
+        let conn = Arc::clone(self);
         let h = std::thread::Builder::new()
             .name("rank-wire-reader".into())
             .spawn(move || {
-                let unexpected = conn.read_loop(stream, &model_txs, shard_offset);
-                if unexpected {
-                    spawn_disconnects.fetch_add(1, Ordering::Relaxed);
-                    // Fail the ports fast: a send into a dead rank tier
-                    // must error like a dead in-process shard, not
-                    // queue forever. Parked drain-ack senders drop too,
-                    // so a blocking `recv()` on a pending drain sees
-                    // Disconnected — exactly what a dead in-process
-                    // shard (dropping the ack sender with its state)
-                    // would produce.
-                    conn.sender.close();
-                    relock(&conn.acks).clear();
-                    eprintln!(
-                        "rank-server {} disconnected; rank ports closed \
-                         (candidates in flight are lost)",
-                        conn.peer
-                    );
+                if let Some(cause) = conn.read_loop(stream, &wiring, session_epoch) {
+                    conn.fail_session(cause, session_epoch);
                 }
             });
         match h {
-            Ok(h) => *relock(&self.reader) = Some(h),
-            Err(e) => self.fail_session(&disconnects, &format!("spawning reader: {e}")),
+            Ok(h) => relock(&self.threads).push(h),
+            Err(e) => {
+                eprintln!("rank-server {}: spawning reader failed: {e}", self.peer);
+                self.fail_session(DisconnectCause::Io, session_epoch);
+            }
         }
     }
 
-    /// Close the session as an unexpected disconnect before the reader
-    /// ever ran (stream clone or thread spawn failed).
-    fn fail_session(&self, disconnects: &AtomicU64, why: &str) {
-        disconnects.fetch_add(1, Ordering::Relaxed);
-        self.sender.close();
+    /// The first detector of a dead session wins the epoch CAS and runs
+    /// the teardown: count the cause, close the send queue, shut the
+    /// socket down (unblocking a reader mid-`read`), drop parked drain
+    /// acks, and either enter `Reconnecting` (spawning the dialer) or
+    /// `Closed` (policy disabled / shutting down). Losers return
+    /// immediately — a read error, a send error, and a backlog overflow
+    /// racing on the same corpse count one disconnect, not three.
+    fn fail_session(self: &Arc<Self>, cause: DisconnectCause, observed_epoch: u64) {
+        let wiring = relock(&self.wiring).clone();
+        let closing = self.closing.load(Ordering::SeqCst);
+        let reconnect = self.policy.enabled && !closing && wiring.is_some();
+        {
+            let mut st = relock(&self.state);
+            // Epoch and state change together under the state lock, so
+            // a send that saw (Live, e) can always report against e.
+            if self
+                .epoch
+                .compare_exchange(
+                    observed_epoch,
+                    observed_epoch + 1,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_err()
+            {
+                return;
+            }
+            if let ConnState::Live { sender, stream } = &*st {
+                sender.close();
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            *st = if reconnect {
+                ConnState::Reconnecting
+            } else {
+                ConnState::Closed
+            };
+        }
+        // Parked drain acks die with the session: a waiter blocked on
+        // the ack sees `Disconnected` promptly, exactly like a dead
+        // in-process shard dropping its ack sender.
         relock(&self.acks).clear();
-        eprintln!(
-            "rank-server {}: reader startup failed ({why}); rank ports closed",
-            self.peer
-        );
+        if !closing {
+            if let Some(w) = &wiring {
+                w.disconnects.count(cause);
+            }
+            eprintln!(
+                "rank-server {}: session epoch {observed_epoch} failed ({cause}); {}",
+                self.peer,
+                if reconnect {
+                    "reconnecting"
+                } else {
+                    "rank ports closed (candidates in flight are lost)"
+                }
+            );
+        }
+        if reconnect {
+            self.spawn_dialer(observed_epoch + 1);
+        }
     }
 
-    /// Returns whether the session ended *unexpectedly*.
+    fn spawn_dialer(self: &Arc<Self>, epoch: u64) {
+        let conn = Arc::clone(self);
+        let h = std::thread::Builder::new()
+            .name("rank-wire-dialer".into())
+            .spawn(move || conn.dial_loop(epoch));
+        match h {
+            Ok(h) => relock(&self.threads).push(h),
+            Err(e) => {
+                eprintln!(
+                    "rank-server {}: cannot spawn dialer ({e}); rank ports closed",
+                    self.peer
+                );
+                *relock(&self.state) = ConnState::Closed;
+            }
+        }
+    }
+
+    /// The background dialer: capped exponential backoff until the
+    /// server answers with the *same* topology, `close()` is called, or
+    /// — past `dead_after` — the shard range is declared dead (the
+    /// dialer keeps trying even then; an eventual reconnect re-adopts
+    /// the range).
+    fn dial_loop(self: Arc<Self>, epoch: u64) {
+        // The dead session's writer has exited (queue closed); reap its
+        // handle so `join()` never waits on a replaced writer.
+        let old_writer = relock(&self.writer).take();
+        if let Some(h) = old_writer {
+            let _ = h.join();
+        }
+        let Some(wiring) = relock(&self.wiring).clone() else {
+            *relock(&self.state) = ConnState::Closed;
+            return;
+        };
+        let shards = wiring.shard_range(self.info.shards);
+        let started = Instant::now();
+        let mut backoff = self.policy.backoff_base;
+        let mut declared_dead = false;
+        let mut attempts = 0u64;
+        loop {
+            if self.closing.load(Ordering::SeqCst) {
+                *relock(&self.state) = ConnState::Closed;
+                return;
+            }
+            if !declared_dead && started.elapsed() >= self.policy.dead_after {
+                declared_dead = true;
+                wiring.liveness.set_range_live(shards.clone(), false);
+                eprintln!(
+                    "rank-server {}: unreachable for {:?}; shards {}..{} declared dead \
+                     (candidates migrate to survivors; capacity re-tiles)",
+                    self.peer, self.policy.dead_after, shards.start, shards.end
+                );
+            }
+            attempts += 1;
+            match Self::handshake(
+                &self.peer,
+                self.n_models,
+                &self.clock,
+                DIAL_ATTEMPT_TIMEOUT,
+                epoch,
+                &self.faults,
+            ) {
+                Ok((info, stream)) => {
+                    if info.shards == self.info.shards
+                        && info.gpu_lo == self.info.gpu_lo
+                        && info.gpu_hi == self.info.gpu_hi
+                    {
+                        if self.adopt_session(info, stream, &wiring, epoch) {
+                            return;
+                        }
+                    } else {
+                        eprintln!(
+                            "rank-server {}: reconnected but topology changed \
+                             ({} shards over {}..{}, had {} over {}..{}); retrying",
+                            self.peer,
+                            info.shards,
+                            info.gpu_lo,
+                            info.gpu_hi,
+                            self.info.shards,
+                            self.info.gpu_lo,
+                            self.info.gpu_hi
+                        );
+                    }
+                }
+                Err(e) => {
+                    // First failure and every 16th after: enough to
+                    // trace a long outage without drowning the log.
+                    if attempts == 1 || attempts % 16 == 0 {
+                        eprintln!(
+                            "rank-server {}: reconnect attempt {attempts} failed: {e:#}",
+                            self.peer
+                        );
+                    }
+                }
+            }
+            // Sliced sleep so close() stops the dialer within ~10ms.
+            let mut slept = Duration::ZERO;
+            while slept < backoff {
+                if self.closing.load(Ordering::SeqCst) {
+                    *relock(&self.state) = ConnState::Closed;
+                    return;
+                }
+                let slice = Duration::from_millis(10).min(backoff - slept);
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+            backoff = (backoff * 2).min(self.policy.backoff_cap);
+        }
+    }
+
+    /// Wire a fresh handshake into the connection: new writer, replay
+    /// of the desired-detached set, state → `Live`, liveness back up,
+    /// new epoch-fenced reader, and the `Reregister` nudge that makes
+    /// every model replay its candidate into the fresh shard set.
+    /// Returns false if session setup failed (the dialer retries).
+    fn adopt_session(
+        self: &Arc<Self>,
+        info: ServerPreamble,
+        stream: TcpStream,
+        wiring: &Arc<Wiring>,
+        epoch: u64,
+    ) -> bool {
+        let _ = self.faults.spawn_timed_killer(&stream);
+        let writer_stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+        let (sender, writer) = match spawn_writer_with(writer_stream, Some(self.faults.session()))
+        {
+            Ok(x) => x,
+            Err(_) => return false,
+        };
+        // Replay desired-detached *before* going Live: a fresh session
+        // spawns fully attached, and these drains must precede anything
+        // the autoscaler sends once `Live` opens the ports — otherwise
+        // a GPU could be granted before its backend worker exists. The
+        // acks come back as DrainAck frames with no parked sender,
+        // which the dispatcher treats as benign.
+        for &g in relock(&self.desired_detached).iter() {
+            let mut buf = Vec::with_capacity(16);
+            codec::encode_up(self.local_shard_of(g), &WireToRank::Drain { gpu: GpuId(g) }, &mut buf);
+            let _ = sender.send(buf);
+        }
+        {
+            let mut st = relock(&self.state);
+            if matches!(&*st, ConnState::Closed) {
+                // close() raced the adoption; stay down.
+                sender.close();
+                return true;
+            }
+            *st = ConnState::Live { sender, stream };
+        }
+        *relock(&self.writer) = Some(writer);
+        self.last_session.store(info.session, Ordering::SeqCst);
+        self.reconnects.fetch_add(1, Ordering::SeqCst);
+        wiring
+            .liveness
+            .set_range_live(wiring.shard_range(self.info.shards), true);
+        self.spawn_reader(Arc::clone(wiring), epoch);
+        // The re-registration replay: every model worker invalidates
+        // its coalescing state and re-registers its current candidate —
+        // into its (revived) home shard or wherever liveness routes it.
+        for (m, tx) in wiring.model_txs.iter().enumerate() {
+            let _ = tx.send(ToModel::Reregister {
+                model: ModelId(m as u32),
+            });
+        }
+        eprintln!(
+            "rank-server {}: reconnected (client epoch {epoch}, server session {})",
+            self.peer, info.session
+        );
+        true
+    }
+
+    /// The server-local shard index owning GPU `g` (the session shards
+    /// split `gpu_lo..gpu_hi` with `ShardTopology::split`).
+    fn local_shard_of(&self, g: u32) -> u16 {
+        let range = self.info.gpu_lo..self.info.gpu_hi;
+        let shards = self.info.shards as usize;
+        for s in 0..shards {
+            if g < crate::coordinator::router::ShardTopology::split(&range, shards, s + 1) {
+                return s as u16;
+            }
+        }
+        self.info.shards.saturating_sub(1)
+    }
+
+    /// Returns the cause if the session ended *unexpectedly*. Every
+    /// frame is fenced against the session epoch captured at reader
+    /// spawn: once a newer epoch exists, buffered frames from this
+    /// (dead) session are dropped and counted, never dispatched.
     fn read_loop(
         &self,
         stream: TcpStream,
-        model_txs: &[RingSender<ToModel>],
-        shard_offset: usize,
-    ) -> bool {
+        wiring: &Wiring,
+        session_epoch: u64,
+    ) -> Option<DisconnectCause> {
         let mut reader = FrameReader::new(stream);
         loop {
             match reader.next_frame() {
-                Ok(Some(frame)) => match codec::decode_down(frame) {
-                    Ok(msg) => {
-                        if let Err(why) = self.dispatch(msg, model_txs, shard_offset) {
-                            eprintln!(
-                                "rank-server {}: protocol violation: {why}",
-                                self.peer
-                            );
-                            return true;
+                Ok(Some(frame)) => {
+                    if self.epoch.load(Ordering::SeqCst) != session_epoch {
+                        // The epoch fence: a stale Granted must never
+                        // lease a GPU in the new session.
+                        self.fenced.fetch_add(1, Ordering::Relaxed);
+                        return None;
+                    }
+                    match codec::decode_down(frame) {
+                        Ok(msg) => {
+                            if let Err(why) = self.dispatch(msg, wiring) {
+                                eprintln!(
+                                    "rank-server {}: protocol violation: {why}",
+                                    self.peer
+                                );
+                                return Some(DisconnectCause::Protocol);
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("rank-server {}: protocol error: {e}", self.peer);
+                            return Some(DisconnectCause::Protocol);
                         }
                     }
-                    Err(e) => {
-                        eprintln!("rank-server {}: protocol error: {e}", self.peer);
-                        return true;
+                }
+                Ok(None) => {
+                    return if self.closing.load(Ordering::SeqCst) {
+                        None
+                    } else {
+                        Some(DisconnectCause::Io)
                     }
-                },
-                Ok(None) => return !self.closing.load(Ordering::SeqCst),
+                }
                 Err(e) => {
-                    if self.closing.load(Ordering::SeqCst) {
-                        return false;
+                    if self.closing.load(Ordering::SeqCst)
+                        || self.epoch.load(Ordering::SeqCst) != session_epoch
+                    {
+                        return None;
                     }
                     eprintln!("rank-server {}: read error: {e}", self.peer);
-                    return true;
+                    return Some(DisconnectCause::Io);
                 }
             }
         }
@@ -225,25 +744,20 @@ impl RemoteRank {
     /// up-frames): silently dropping e.g. a foreign grant would leave
     /// the granting shard's GPU leased forever — a quiet capacity
     /// wedge — whereas a surfaced disconnect is visible and counted.
-    fn dispatch(
-        &self,
-        msg: WireFromRank,
-        model_txs: &[RingSender<ToModel>],
-        shard_offset: usize,
-    ) -> Result<(), String> {
+    fn dispatch(&self, msg: WireFromRank, wiring: &Wiring) -> Result<(), String> {
         match msg {
             WireFromRank::Granted { model, gpu } => {
                 if !self.info.owns(gpu) {
                     return Err(format!("grant for foreign GPU {}", gpu.0));
                 }
-                let Some(tx) = model_txs.get(model.0 as usize) else {
+                let Some(tx) = wiring.model_txs.get(model.0 as usize) else {
                     return Err(format!("grant for unknown model {}", model.0));
                 };
                 self.grants.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(ToModel::Granted { model, gpu });
             }
             WireFromRank::Revalidate { model } => {
-                let Some(tx) = model_txs.get(model.0 as usize) else {
+                let Some(tx) = wiring.model_txs.get(model.0 as usize) else {
                     return Err(format!("revalidate for unknown model {}", model.0));
                 };
                 let _ = tx.send(ToModel::Revalidate { model });
@@ -259,12 +773,12 @@ impl RemoteRank {
                         self.info.shards
                     ));
                 }
-                let Some(tx) = model_txs.get(model.0 as usize) else {
+                let Some(tx) = wiring.model_txs.get(model.0 as usize) else {
                     return Err(format!("overflow for unknown model {}", model.0));
                 };
                 let _ = tx.send(ToModel::Overflow {
                     model,
-                    to_shard: shard_offset + to_shard as usize,
+                    to_shard: wiring.shard_offset + to_shard as usize,
                     seq,
                 });
             }
@@ -273,7 +787,8 @@ impl RemoteRank {
                     return Err(format!("drain ack for foreign GPU {}", gpu.0));
                 }
                 // No parked sender is benign: an `Attach` may have
-                // canceled the drain while this ack was in flight.
+                // canceled the drain while this ack was in flight (or
+                // this is the ack of a reconnect-replay drain).
                 // Take the sender out first — an `if let` scrutinee
                 // guard would live across the `.send(` below.
                 let parked = relock(&self.acks).remove(&gpu.0);
@@ -288,19 +803,55 @@ impl RemoteRank {
     /// Encode and enqueue one up-message for `shard` (server-local
     /// index). One small allocation per frame; the writer thread
     /// coalesces the queue into one syscall per drain.
-    pub fn send(&self, shard: u16, msg: &WireToRank) -> Result<(), PortClosed> {
+    ///
+    /// State-dependent semantics: `Live` enqueues (a failed enqueue
+    /// fails the session — overflow and writer death are detected
+    /// here); `Reconnecting` silently drops registrations and
+    /// busy-until hints (`Ok` — the reconnect replay re-derives them)
+    /// but refuses drain/attach (`Err` — the autoscaler must know);
+    /// `Closed` refuses everything.
+    pub fn send(self: &Arc<Self>, shard: u16, msg: &WireToRank) -> Result<(), PortClosed> {
+        let (sender, epoch) = {
+            let st = relock(&self.state);
+            match &*st {
+                ConnState::Live { sender, .. } => {
+                    (sender.clone(), self.epoch.load(Ordering::SeqCst))
+                }
+                ConnState::Reconnecting => {
+                    return match msg {
+                        WireToRank::Candidate { .. } | WireToRank::GpuBusyUntil { .. } => Ok(()),
+                        WireToRank::Drain { .. } | WireToRank::Attach { .. } => Err(PortClosed),
+                    }
+                }
+                ConnState::Closed => return Err(PortClosed),
+            }
+        };
         let mut buf = Vec::with_capacity(48);
         codec::encode_up(shard, msg, &mut buf);
-        self.sender.send(buf).map_err(|_| PortClosed)
+        match sender.send(buf) {
+            Ok(()) => Ok(()),
+            Err(fail) => {
+                if !self.closing.load(Ordering::SeqCst) {
+                    let cause = match fail {
+                        SendFail::Overflow => DisconnectCause::BacklogOverflow,
+                        SendFail::Closed => DisconnectCause::Io,
+                    };
+                    self.fail_session(cause, epoch);
+                }
+                Err(PortClosed)
+            }
+        }
     }
 
     /// The wire form of `ToRank::Drain`: park the ack sender, ship the
-    /// frame; the reader releases the sender on the matching
-    /// `DrainAck`.
-    pub fn drain(&self, shard: u16, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), PortClosed> {
+    /// frame, record the detach intent for reconnect replay; the reader
+    /// releases the sender on the matching `DrainAck`.
+    pub fn drain(self: &Arc<Self>, shard: u16, gpu: GpuId, ack: Sender<GpuId>) -> Result<(), PortClosed> {
         relock(&self.acks).insert(gpu.0, ack);
         let res = self.send(shard, &WireToRank::Drain { gpu });
-        if res.is_err() {
+        if res.is_ok() {
+            relock(&self.desired_detached).insert(gpu.0);
+        } else {
             relock(&self.acks).remove(&gpu.0);
         }
         res
@@ -311,9 +862,13 @@ impl RemoteRank {
     /// in-process shard drops its ack sender on cancel), so the parked
     /// sender is dropped here too — a waiter blocked on the ack sees
     /// `Disconnected` promptly instead of hanging on a canceled drain.
-    pub fn attach(&self, shard: u16, gpu: GpuId) -> Result<(), PortClosed> {
+    pub fn attach(self: &Arc<Self>, shard: u16, gpu: GpuId) -> Result<(), PortClosed> {
         relock(&self.acks).remove(&gpu.0);
-        self.send(shard, &WireToRank::Attach { gpu })
+        let res = self.send(shard, &WireToRank::Attach { gpu });
+        if res.is_ok() {
+            relock(&self.desired_detached).remove(&gpu.0);
+        }
+        res
     }
 
     /// `Granted` frames delivered so far.
@@ -321,26 +876,292 @@ impl RemoteRank {
         self.grants.load(Ordering::Relaxed)
     }
 
-    /// Begin a clean shutdown: queued frames flush, the write half
-    /// closes (the server ends the session on EOF), and the reader's
-    /// subsequent EOF is not counted as a disconnect. Idempotent.
-    pub fn close(&self) {
-        self.closing.store(true, Ordering::SeqCst);
-        self.sender.close();
+    /// Successful re-handshakes so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::SeqCst)
     }
 
-    /// Join the writer and reader threads (after [`RemoteRank::close`]).
-    /// The handles are taken out before joining: holding either mutex
-    /// across `.join()` would block any concurrent `start_reader` (or a
-    /// second `join`) for the whole thread lifetime.
+    /// Stale-session down-frames dropped by the epoch fence.
+    pub fn fenced(&self) -> u64 {
+        self.fenced.load(Ordering::Relaxed)
+    }
+
+    /// Begin a clean shutdown: queued frames flush, the write half
+    /// closes (the server ends the session on EOF), the dialer (if
+    /// any) stops, and the reader's subsequent EOF is not counted as a
+    /// disconnect. Idempotent.
+    pub fn close(&self) {
+        self.closing.store(true, Ordering::SeqCst);
+        let mut st = relock(&self.state);
+        match &*st {
+            ConnState::Live { sender, .. } => sender.close(),
+            ConnState::Reconnecting => *st = ConnState::Closed,
+            ConnState::Closed => {}
+        }
+    }
+
+    /// Join the writer, reader, and dialer threads (after
+    /// [`RemoteRank::close`]). The handles are taken out before
+    /// joining: holding a mutex across `.join()` would block any
+    /// concurrent session transition for the whole thread lifetime.
     pub fn join(&self) {
         let writer = relock(&self.writer).take();
         if let Some(h) = writer {
             let _ = h.join();
         }
-        let reader = relock(&self.reader).take();
-        if let Some(h) = reader {
-            let _ = h.join();
+        loop {
+            // Threads can spawn threads (a failing reader spawns a
+            // dialer): drain until quiescent.
+            let batch: Vec<JoinHandle<()>> = relock(&self.threads).drain(..).collect();
+            if batch.is_empty() {
+                break;
+            }
+            for h in batch {
+                let _ = h.join();
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::codec::{encode_down, encode_hello, encode_preamble, HELLO_LEN};
+    use crate::util::ring::ring;
+    use std::net::TcpListener;
+
+    /// A one-session fake rank server: writes a preamble, reads the
+    /// hello, then writes `frames` down-frames and closes.
+    fn fake_server(
+        shards: u16,
+        frames: Vec<WireFromRank>,
+    ) -> (String, std::thread::JoinHandle<ClientHello>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("127.0.0.1:{}", listener.local_addr().unwrap().port());
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&encode_preamble(&ServerPreamble {
+                shards,
+                gpu_lo: 0,
+                gpu_hi: 2,
+                session: 1,
+            }))
+            .unwrap();
+            let mut hello = [0u8; HELLO_LEN];
+            s.read_exact(&mut hello).unwrap();
+            let hello = codec::decode_hello(&hello).unwrap();
+            let mut buf = Vec::new();
+            for f in &frames {
+                let mut payload = Vec::new();
+                encode_down(f, &mut payload);
+                buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                buf.extend_from_slice(&payload);
+            }
+            s.write_all(&buf).unwrap();
+            hello
+        });
+        (addr, h)
+    }
+
+    fn test_wiring(n_models: usize) -> (Arc<Wiring>, crate::util::ring::RingReceiver<ToModel>) {
+        let (tx, rx) = ring::<ToModel>(64);
+        let mut model_txs = Vec::new();
+        for _ in 0..n_models {
+            model_txs.push(tx.clone());
+        }
+        (
+            Arc::new(Wiring {
+                model_txs,
+                shard_offset: 0,
+                disconnects: Arc::new(DisconnectCounts::default()),
+                liveness: ShardLiveness::all_live(1),
+            }),
+            rx,
+        )
+    }
+
+    /// The epoch-fence regression test of the acceptance criteria: a
+    /// down-frame buffered from a session whose epoch has already been
+    /// superseded is dropped and counted, never dispatched — a stale
+    /// `Granted` cannot lease a GPU in the new session.
+    #[test]
+    fn stale_session_frames_are_fenced() {
+        let grant = WireFromRank::Granted {
+            model: ModelId(0),
+            gpu: GpuId(0),
+        };
+        let (addr, server) = fake_server(1, vec![grant, grant]);
+        let conn = Arc::new(
+            RemoteRank::connect(
+                &addr,
+                1,
+                Clock::new(),
+                Duration::from_secs(5),
+                ReconnectPolicy::disabled(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        assert_eq!(server.join().unwrap().epoch, 0, "first hello carries epoch 0");
+        let (wiring, rx) = test_wiring(1);
+        *relock(&conn.wiring) = Some(Arc::clone(&wiring));
+        // The session dies (epoch 0 → 1) before its buffered frames are
+        // read. Running the (old session's) read loop afterwards must
+        // deliver nothing.
+        conn.fail_session(DisconnectCause::Io, 0);
+        assert_eq!(wiring.disconnects.total(), 1);
+        assert_eq!(wiring.disconnects.io(), 1);
+        // fail_session shut the live stream down; hand the read loop a
+        // fresh connection to the same buffered bytes instead.
+        let (addr2, server2) = fake_server(1, vec![grant, grant]);
+        let stream = TcpStream::connect(&addr2).unwrap();
+        let mut pre = [0u8; PREAMBLE_LEN];
+        (&stream).read_exact(&mut pre).unwrap();
+        (&stream)
+            .write_all(&encode_hello(&ClientHello {
+                n_models: 1,
+                now_us: 0,
+                epoch: 0,
+            }))
+            .unwrap();
+        let ended = conn.read_loop(stream, &wiring, 0);
+        assert_eq!(ended, None, "a fenced exit is not a new disconnect");
+        assert!(conn.fenced() > 0, "fenced frames are counted");
+        assert_eq!(conn.grants(), 0, "no grant delivered");
+        assert!(rx.try_iter().next().is_none(), "nothing reached the worker");
+        let _ = server2.join();
+    }
+
+    /// With the session current, the same frames DO dispatch (the fence
+    /// only bites after an epoch bump) — and a duplicate fail_session
+    /// for the same epoch counts once.
+    #[test]
+    fn current_session_frames_dispatch_and_fail_is_idempotent() {
+        let grant = WireFromRank::Granted {
+            model: ModelId(0),
+            gpu: GpuId(1),
+        };
+        let (addr, server) = fake_server(1, vec![grant]);
+        let conn = Arc::new(
+            RemoteRank::connect(
+                &addr,
+                1,
+                Clock::new(),
+                Duration::from_secs(5),
+                ReconnectPolicy::disabled(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        let _ = server.join();
+        let (wiring, rx) = test_wiring(1);
+        *relock(&conn.wiring) = Some(Arc::clone(&wiring));
+        let stream = {
+            let st = relock(&conn.state);
+            match &*st {
+                ConnState::Live { stream, .. } => stream.try_clone().unwrap(),
+                _ => unreachable!("fresh connection is live"),
+            }
+        };
+        let ended = conn.read_loop(stream, &wiring, 0);
+        assert_eq!(
+            ended,
+            Some(DisconnectCause::Io),
+            "server closing mid-session is an unexpected EOF"
+        );
+        assert_eq!(conn.grants(), 1);
+        assert!(matches!(
+            rx.try_iter().next(),
+            Some(ToModel::Granted { gpu: GpuId(1), .. })
+        ));
+        conn.fail_session(DisconnectCause::Io, 0);
+        conn.fail_session(DisconnectCause::Protocol, 0);
+        assert_eq!(
+            wiring.disconnects.total(),
+            1,
+            "racing detectors count one disconnect"
+        );
+    }
+
+    /// Reconnecting-state send semantics: registrations drop as Ok,
+    /// drain/attach fail, and the drain records no detach intent.
+    #[test]
+    fn reconnecting_drops_registrations_and_refuses_control() {
+        let (addr, server) = fake_server(1, Vec::new());
+        let conn = Arc::new(
+            RemoteRank::connect(
+                &addr,
+                1,
+                Clock::new(),
+                Duration::from_secs(5),
+                ReconnectPolicy::disabled(),
+                FaultPlan::none(),
+            )
+            .unwrap(),
+        );
+        let _ = server.join();
+        *relock(&conn.state) = ConnState::Reconnecting;
+        assert_eq!(
+            conn.send(
+                0,
+                &WireToRank::Candidate {
+                    model: ModelId(0),
+                    cand: None,
+                    seq: 1,
+                    hops: 0,
+                }
+            ),
+            Ok(()),
+            "registrations drop silently (replay heals them)"
+        );
+        assert_eq!(
+            conn.send(
+                0,
+                &WireToRank::GpuBusyUntil {
+                    gpu: GpuId(0),
+                    free_at: crate::core::time::Micros(1),
+                }
+            ),
+            Ok(())
+        );
+        let (ack_tx, _ack_rx) = std::sync::mpsc::channel();
+        assert_eq!(conn.drain(0, GpuId(0), ack_tx), Err(PortClosed));
+        assert!(relock(&conn.desired_detached).is_empty());
+        assert_eq!(conn.attach(0, GpuId(0)), Err(PortClosed));
+        *relock(&conn.state) = ConnState::Closed;
+        assert_eq!(
+            conn.send(
+                0,
+                &WireToRank::Candidate {
+                    model: ModelId(0),
+                    cand: None,
+                    seq: 2,
+                    hops: 0,
+                }
+            ),
+            Err(PortClosed),
+            "Closed refuses everything"
+        );
+    }
+
+    /// The desired-detached replay maps GPUs onto server-local shards
+    /// with the shared split formula.
+    #[test]
+    fn local_shard_of_matches_split() {
+        let (addr, server) = fake_server(2, Vec::new());
+        let conn = RemoteRank::connect(
+            &addr,
+            1,
+            Clock::new(),
+            Duration::from_secs(5),
+            ReconnectPolicy::disabled(),
+            FaultPlan::none(),
+        )
+        .unwrap();
+        let _ = server.join();
+        // 2 shards over GPUs 0..2: shard 0 owns {0}, shard 1 owns {1}.
+        assert_eq!(conn.local_shard_of(0), 0);
+        assert_eq!(conn.local_shard_of(1), 1);
+        conn.close();
     }
 }

@@ -305,12 +305,15 @@ pub fn decode_down(buf: &[u8]) -> Result<WireFromRank, CodecError> {
 
 const PREAMBLE_MAGIC: u32 = 0x4B52_5953; // "SYRK"
 const HELLO_MAGIC: u32 = 0x4843_5953; // "SYCH"
-const WIRE_VERSION: u16 = 1;
+// Version 2 added the session-epoch pair (preamble `session`, hello
+// `epoch`) so a reconnecting client can fence frames from a dead
+// session — see the reconnect state machine in `net::client`.
+const WIRE_VERSION: u16 = 2;
 
 /// Fixed length of the server preamble on the wire.
-pub const PREAMBLE_LEN: usize = 16;
+pub const PREAMBLE_LEN: usize = 24;
 /// Fixed length of the client hello on the wire.
-pub const HELLO_LEN: usize = 16;
+pub const HELLO_LEN: usize = 24;
 
 /// First bytes a rank server writes on every accepted connection: what
 /// it hosts, so the client can build its side of the shard topology
@@ -323,6 +326,10 @@ pub struct ServerPreamble {
     pub gpu_lo: u32,
     /// One past the last GPU id this server owns.
     pub gpu_hi: u32,
+    /// Server-side session counter (1 on the first accepted session).
+    /// A reconnecting client logs the pair (its own epoch, this) so a
+    /// recovery can be traced end to end from both sides' output.
+    pub session: u64,
 }
 
 impl ServerPreamble {
@@ -340,6 +347,7 @@ pub fn encode_preamble(p: &ServerPreamble) -> [u8; PREAMBLE_LEN] {
     out[6..8].copy_from_slice(&p.shards.to_le_bytes());
     out[8..12].copy_from_slice(&p.gpu_lo.to_le_bytes());
     out[12..16].copy_from_slice(&p.gpu_hi.to_le_bytes());
+    out[16..24].copy_from_slice(&p.session.to_le_bytes());
     out
 }
 
@@ -357,17 +365,21 @@ pub fn decode_preamble(buf: &[u8; PREAMBLE_LEN]) -> Result<ServerPreamble, Codec
         shards: c.u16()?,
         gpu_lo: c.u32()?,
         gpu_hi: c.u32()?,
+        session: c.u64()?,
     })
 }
 
 /// The client's reply to the preamble: how many models it will address
-/// (sizes the server's down-path routing) and its clock reading at send
+/// (sizes the server's down-path routing), its clock reading at send
 /// time (the server runs its session shards on the client's clock —
-/// see [`crate::coordinator::Clock::starting_at`]).
+/// see [`crate::coordinator::Clock::starting_at`]), and the client-side
+/// session epoch — 0 on first connect, bumped on every reconnect, so
+/// down-frames buffered from a dead session can be fenced on delivery.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ClientHello {
     pub n_models: u32,
     pub now_us: u64,
+    pub epoch: u64,
 }
 
 pub fn encode_hello(h: &ClientHello) -> [u8; HELLO_LEN] {
@@ -375,6 +387,7 @@ pub fn encode_hello(h: &ClientHello) -> [u8; HELLO_LEN] {
     out[0..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
     out[4..8].copy_from_slice(&h.n_models.to_le_bytes());
     out[8..16].copy_from_slice(&h.now_us.to_le_bytes());
+    out[16..24].copy_from_slice(&h.epoch.to_le_bytes());
     out
 }
 
@@ -387,6 +400,7 @@ pub fn decode_hello(buf: &[u8; HELLO_LEN]) -> Result<ClientHello, CodecError> {
     Ok(ClientHello {
         n_models: c.u32()?,
         now_us: c.u64()?,
+        epoch: c.u64()?,
     })
 }
 
@@ -573,6 +587,7 @@ mod tests {
             shards: 4,
             gpu_lo: 8,
             gpu_hi: 16,
+            session: 3,
         };
         let bytes = encode_preamble(&p);
         assert_eq!(decode_preamble(&bytes).unwrap(), p);
@@ -586,11 +601,32 @@ mod tests {
         let h = ClientHello {
             n_models: 12,
             now_us: 55_555,
+            epoch: 7,
         };
         let bytes = encode_hello(&h);
         assert_eq!(decode_hello(&bytes).unwrap(), h);
         let mut bad = bytes;
         bad[1] ^= 0xFF;
         assert!(matches!(decode_hello(&bad), Err(CodecError::BadMagic(_))));
+    }
+
+    /// A version-1 (16-byte) handshake against the version-2 decoder:
+    /// the length mismatch alone would wedge a naive reader, but the
+    /// fixed-length read gets 24 bytes of *something* and the version
+    /// field must reject it before the epoch is ever trusted.
+    #[test]
+    fn old_version_preamble_is_rejected() {
+        let p = ServerPreamble {
+            shards: 2,
+            gpu_lo: 0,
+            gpu_hi: 4,
+            session: 1,
+        };
+        let mut bytes = encode_preamble(&p);
+        bytes[4..6].copy_from_slice(&1u16.to_le_bytes());
+        assert!(matches!(
+            decode_preamble(&bytes),
+            Err(CodecError::BadVersion(1))
+        ));
     }
 }

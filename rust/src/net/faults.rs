@@ -1,0 +1,398 @@
+//! Deterministic fault injection for the wire fabric.
+//!
+//! A [`FaultPlan`] is a seeded schedule of transport faults — kill the
+//! connection after N frames or T µs, tear the fatal frame, stall the
+//! writer, fail handshakes — parsed from the `--fault-plan` CLI spec
+//! and threaded into [`crate::net::transport::spawn_writer_with`] on
+//! either endpoint. The same spec (same seed) produces the same fault
+//! schedule on every run, so the chaos tests in `tests/net_wire.rs`
+//! and the CI fault-recovery smoke are reproducible, not flaky.
+//!
+//! Grammar (comma-separated `key=value`, order-insensitive):
+//!
+//! ```text
+//! seed=S                   draw seed (default 0)
+//! kill-after-frames=N      kill the session at outbound frame N
+//! kill-after-frames=LO..HI ... at a per-session draw from [LO, HI)
+//! kill-after-us=T          kill the session T µs after its writer spawns
+//! torn                     frame-count kills first write a torn
+//!                          (half-length) fatal frame
+//! stall-writer-us=T        sleep T µs before every write batch
+//!                          (models a saturated peer; fills the
+//!                          bounded backlog)
+//! fail-handshake=K         fail the first K connection attempts at
+//!                          handshake time
+//! times=K                  how many sessions the kill fires in
+//!                          (default 1; later sessions run clean)
+//! ```
+//!
+//! One plan instance is shared (`Arc`) across every session an endpoint
+//! opens; per-session state lives in the [`SessionFaults`] handed to
+//! that session's writer. Counters are monotonic and sessions are
+//! opened sequentially on both endpoints, so the per-session kill-frame
+//! draw is a pure function of (seed, session index).
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// A seeded, shareable schedule of transport faults. Inert by default:
+/// [`FaultPlan::none`] injects nothing and is what every non-chaos code
+/// path carries.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Kill at an outbound frame drawn from `[lo, hi)` per session.
+    kill_after_frames: Option<(u64, u64)>,
+    /// Kill the session this many µs after its writer spawns.
+    kill_after_us: Option<u64>,
+    /// Frame-count kills write half the fatal frame before dying.
+    torn: bool,
+    /// Sleep before every write batch, µs.
+    stall_writer_us: u64,
+    /// Fail this many handshake attempts before letting one through.
+    fail_handshake: u64,
+    /// Sessions the kill triggers fire in before the plan goes inert.
+    times: u64,
+    /// Sessions opened under this plan (drives the per-session draw).
+    sessions: AtomicU64,
+    /// Kill faults that have fired (bounded by `times`).
+    fired: AtomicU64,
+    /// Handshake attempts observed (drives `fail-handshake`).
+    handshakes: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing.
+    pub fn none() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed: 0,
+            kill_after_frames: None,
+            kill_after_us: None,
+            torn: false,
+            stall_writer_us: 0,
+            fail_handshake: 0,
+            times: 1,
+            sessions: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            handshakes: AtomicU64::new(0),
+        })
+    }
+
+    /// Parse the `--fault-plan` grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<Arc<FaultPlan>> {
+        let mut plan = FaultPlan {
+            seed: 0,
+            kill_after_frames: None,
+            kill_after_us: None,
+            torn: false,
+            stall_writer_us: 0,
+            fail_handshake: 0,
+            times: 1,
+            sessions: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            handshakes: AtomicU64::new(0),
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = match part.split_once('=') {
+                Some((k, v)) => (k, Some(v)),
+                None => (part, None),
+            };
+            let num = |what: &str| -> Result<u64> {
+                match val {
+                    Some(v) => v
+                        .parse::<u64>()
+                        .map_err(|_| err(format!("fault-plan: {what} wants a number, got `{v}`"))),
+                    None => Err(err(format!("fault-plan: {what} wants `{what}=N`"))),
+                }
+            };
+            match key {
+                "seed" => plan.seed = num("seed")?,
+                "kill-after-frames" => {
+                    let v = val
+                        .ok_or_else(|| err("fault-plan: kill-after-frames wants `=N` or `=LO..HI`"))?;
+                    plan.kill_after_frames = Some(parse_range(v)?);
+                }
+                "kill-after-us" => plan.kill_after_us = Some(num("kill-after-us")?),
+                "torn" => plan.torn = true,
+                "stall-writer-us" => plan.stall_writer_us = num("stall-writer-us")?,
+                "fail-handshake" => plan.fail_handshake = num("fail-handshake")?,
+                "times" => plan.times = num("times")?,
+                other => crate::bail!("fault-plan: unknown key `{other}`"),
+            }
+        }
+        if plan.torn && plan.kill_after_frames.is_none() {
+            crate::bail!("fault-plan: `torn` needs `kill-after-frames` as its trigger");
+        }
+        Ok(Arc::new(plan))
+    }
+
+    /// True when the plan can still inject something (lets callers skip
+    /// spawning killer threads for inert plans).
+    pub fn is_active(&self) -> bool {
+        self.kill_after_frames.is_some()
+            || self.kill_after_us.is_some()
+            || self.stall_writer_us > 0
+            || self.fail_handshake > 0
+    }
+
+    /// Should this handshake attempt be failed? Deterministic: the
+    /// first `fail-handshake=K` calls return true.
+    pub fn fail_this_handshake(&self) -> bool {
+        if self.fail_handshake == 0 {
+            return false;
+        }
+        // relaxed: a monotonic test-only counter; no data is published
+        // under it.
+        self.handshakes.fetch_add(1, Ordering::Relaxed) < self.fail_handshake
+    }
+
+    /// Open a session under this plan: draws the session's kill frame
+    /// (a pure function of seed and session index) and hands back the
+    /// per-session fault state for its writer.
+    pub fn session(self: &Arc<Self>) -> SessionFaults {
+        // relaxed: a monotonic session counter; the draw below only
+        // needs a unique index, not ordering against other memory.
+        let idx = self.sessions.fetch_add(1, Ordering::Relaxed);
+        let kill_at_frame = self.kill_after_frames.map(|(lo, hi)| {
+            if hi > lo.saturating_add(1) {
+                lo + Rng::new(self.seed).fork(idx).next_u64() % (hi - lo)
+            } else {
+                lo
+            }
+        });
+        SessionFaults {
+            plan: self.clone(),
+            kill_at_frame,
+            frames: 0,
+        }
+    }
+
+    /// Claim one of the `times` kill slots. The frame-count and timed
+    /// triggers share the budget, so `times=1` means exactly one kill
+    /// however it is delivered.
+    fn try_fire(&self) -> bool {
+        // relaxed: a bounded claim counter; the kill acts on the socket,
+        // not on memory this counter publishes.
+        self.fired
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                (f < self.times).then_some(f + 1)
+            })
+            .is_ok()
+    }
+
+    /// Spawn the timed killer for a session whose writer just started:
+    /// after `kill-after-us`, shut the stream down both ways (the peer
+    /// sees a hard drop; the local reader unblocks). No-op for plans
+    /// without a timed kill.
+    pub fn spawn_timed_killer(self: &Arc<Self>, stream: &TcpStream) -> Option<thread::JoinHandle<()>> {
+        let delay = self.kill_after_us?;
+        let Ok(stream) = stream.try_clone() else {
+            return None;
+        };
+        let plan = self.clone();
+        thread::Builder::new()
+            .name("fault-timed-kill".into())
+            .spawn(move || {
+                thread::sleep(Duration::from_micros(delay));
+                if plan.try_fire() {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            })
+            .ok()
+    }
+}
+
+fn err(msg: impl std::fmt::Display) -> crate::util::error::Error {
+    crate::util::error::Error::msg(msg)
+}
+
+fn parse_range(v: &str) -> Result<(u64, u64)> {
+    if let Some((lo, hi)) = v.split_once("..") {
+        let lo: u64 = lo
+            .parse()
+            .map_err(|_| err(format!("fault-plan: bad range start `{lo}`")))?;
+        let hi: u64 = hi
+            .parse()
+            .map_err(|_| err(format!("fault-plan: bad range end `{hi}`")))?;
+        if hi <= lo {
+            crate::bail!("fault-plan: empty range {lo}..{hi}");
+        }
+        Ok((lo, hi))
+    } else {
+        let n: u64 = v
+            .parse()
+            .map_err(|_| err(format!("fault-plan: bad frame count `{v}`")))?;
+        Ok((n, n + 1))
+    }
+}
+
+/// What the writer should do with the next batch of frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admit {
+    /// Frames of the batch that may go out whole.
+    pub allowed: usize,
+    /// Kill the session after writing the allowed prefix.
+    pub kill: bool,
+    /// On kill, also write half of the first disallowed frame (a torn
+    /// frame: the peer's reader must surface it as an error, not hang
+    /// or mis-parse).
+    pub torn: bool,
+}
+
+/// Per-session fault state, owned by the session's writer thread.
+#[derive(Debug)]
+pub struct SessionFaults {
+    plan: Arc<FaultPlan>,
+    kill_at_frame: Option<u64>,
+    frames: u64,
+}
+
+impl SessionFaults {
+    /// µs to stall before each write batch (0 = none).
+    pub fn stall_us(&self) -> u64 {
+        self.plan.stall_writer_us
+    }
+
+    /// Whether kills tear the fatal frame.
+    pub fn torn(&self) -> bool {
+        self.plan.torn
+    }
+
+    /// Account a batch of `n` outbound frames and decide how much of it
+    /// survives. Frame indices are 0-based and monotonic across the
+    /// session, so the same plan admits the same prefixes every run.
+    pub fn admit(&mut self, n: usize) -> Admit {
+        let clean = Admit {
+            allowed: n,
+            kill: false,
+            torn: false,
+        };
+        let Some(kill_at) = self.kill_at_frame else {
+            self.frames += n as u64;
+            return clean;
+        };
+        let start = self.frames;
+        self.frames += n as u64;
+        if start + n as u64 <= kill_at {
+            return clean;
+        }
+        // The trigger frame falls inside this batch; the kill budget
+        // decides whether it actually fires (`times=` sessions).
+        if !self.plan.try_fire() {
+            self.kill_at_frame = None;
+            return clean;
+        }
+        Admit {
+            allowed: kill_at.saturating_sub(start) as usize,
+            kill: true,
+            torn: self.plan.torn,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "seed=7,kill-after-frames=100..200,torn,stall-writer-us=50,fail-handshake=2,times=3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.kill_after_frames, Some((100, 200)));
+        assert!(p.torn);
+        assert_eq!(p.stall_writer_us, 50);
+        assert_eq!(p.fail_handshake, 2);
+        assert_eq!(p.times, 3);
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("bogus-key=1").is_err());
+        assert!(FaultPlan::parse("kill-after-frames=abc").is_err());
+        assert!(FaultPlan::parse("kill-after-frames=9..3").is_err());
+        assert!(FaultPlan::parse("torn").is_err(), "torn without a trigger");
+        assert!(FaultPlan::parse("seed").is_err(), "seed without a value");
+    }
+
+    #[test]
+    fn empty_spec_is_inert() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(!p.is_active());
+        assert_eq!(p.session().admit(1_000_000).allowed, 1_000_000);
+    }
+
+    /// Same seed ⇒ same per-session kill frames (the determinism
+    /// acceptance criterion, at the unit level).
+    #[test]
+    fn kill_frame_draw_is_deterministic() {
+        let draws = |spec: &str| -> Vec<Option<u64>> {
+            let p = FaultPlan::parse(spec).unwrap();
+            (0..4).map(|_| p.session().kill_at_frame).collect()
+        };
+        let a = draws("seed=42,kill-after-frames=10..1000,times=4");
+        let b = draws("seed=42,kill-after-frames=10..1000,times=4");
+        assert_eq!(a, b);
+        for d in &a {
+            let d = d.unwrap();
+            assert!((10..1000).contains(&d), "draw {d} outside range");
+        }
+        let c = draws("seed=43,kill-after-frames=10..1000,times=4");
+        assert_ne!(a, c, "different seeds should differ somewhere");
+    }
+
+    /// `times=` bounds kills across sessions: the first session's
+    /// trigger fires, later ones run clean.
+    #[test]
+    fn kill_budget_is_shared_across_sessions() {
+        let p = FaultPlan::parse("kill-after-frames=5,times=1").unwrap();
+        let mut s1 = p.session();
+        let first = s1.admit(10);
+        assert_eq!(
+            first,
+            Admit {
+                allowed: 5,
+                kill: true,
+                torn: false
+            }
+        );
+        let mut s2 = p.session();
+        assert_eq!(s2.admit(10).allowed, 10, "budget spent: session 2 clean");
+        assert!(!s2.admit(10).kill);
+    }
+
+    /// The trigger lands mid-batch and the admitted prefix is exact.
+    #[test]
+    fn admit_splits_batches_at_the_trigger() {
+        let p = FaultPlan::parse("kill-after-frames=7,torn").unwrap();
+        let mut s = p.session();
+        assert_eq!(s.admit(3).allowed, 3);
+        assert_eq!(s.admit(3).allowed, 3);
+        let last = s.admit(3);
+        assert_eq!(last.allowed, 1, "frames 6 allowed, 7 killed");
+        assert!(last.kill);
+        assert!(last.torn);
+    }
+
+    #[test]
+    fn handshake_failures_are_counted_down() {
+        let p = FaultPlan::parse("fail-handshake=2").unwrap();
+        assert!(p.fail_this_handshake());
+        assert!(p.fail_this_handshake());
+        assert!(!p.fail_this_handshake());
+        assert!(!p.fail_this_handshake());
+    }
+}

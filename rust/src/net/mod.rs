@@ -30,5 +30,6 @@
 
 pub mod client;
 pub mod codec;
+pub mod faults;
 pub mod server;
 pub mod transport;

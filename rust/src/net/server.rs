@@ -45,7 +45,9 @@ use crate::coordinator::{
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
 use crate::net::codec::{self, ServerPreamble, WireFromRank, WireToRank, HELLO_LEN};
-use crate::net::transport::{spawn_writer, FrameReader, FrameSender};
+use crate::net::faults::FaultPlan;
+use crate::net::transport::{spawn_writer_with, FrameReader, FrameSender};
+use std::sync::Arc;
 use crate::util::affinity::{self, CorePlan};
 use crate::util::error::{Context, Result};
 use crate::util::ring::{ring, RingReceiver};
@@ -77,6 +79,12 @@ pub struct RankServerConfig {
     /// Pin session shard threads round-robin onto the host's cores in
     /// NUMA order (`--pin-cores`); no-op off Linux.
     pub pin_cores: bool,
+    /// Deterministic wire fault injection for this server's sessions
+    /// ([`FaultPlan::parse`] grammar; `--fault-plan` on the CLI).
+    /// [`FaultPlan::none`] — the default — injects nothing. This is how
+    /// CI kills a live session mid-run to exercise the client's
+    /// reconnect path without OS-level tricks.
+    pub fault_plan: Arc<FaultPlan>,
 }
 
 /// A bound rank server (bind and accept are split so callers can learn
@@ -138,11 +146,17 @@ impl RankServer {
             // handle per connection it ever saw.
             handles.retain(|h| !h.is_finished());
             accepted += 1;
+            // `accepted` doubles as the server-side session counter the
+            // preamble advertises (1 on the first accepted session).
+            let session = accepted;
             let gpus = self.cfg.gpus.clone();
             let (busy_poll, pin_cores) = (self.cfg.busy_poll, self.cfg.pin_cores);
+            let faults = self.cfg.fault_plan.clone();
             handles.push(std::thread::Builder::new().name("rank-session".into()).spawn(
                 move || {
-                    if let Err(e) = serve_session(stream, shards, gpus, busy_poll, pin_cores) {
+                    if let Err(e) =
+                        serve_session(stream, session, shards, gpus, busy_poll, pin_cores, faults)
+                    {
                         eprintln!("rank-server: session failed: {e:#}");
                     }
                 },
@@ -166,18 +180,27 @@ fn shard_range(gpus: &std::ops::Range<u32>, shards: usize, s: usize) -> std::ops
     ShardTopology::split(gpus, shards, s)..ShardTopology::split(gpus, shards, s + 1)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_session(
     stream: TcpStream,
+    session: u64,
     shards: usize,
     gpus: std::ops::Range<u32>,
     busy_poll: bool,
     pin_cores: bool,
+    faults: Arc<FaultPlan>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "<unknown>".into());
+    // Injected handshake failure: drop the connection before the
+    // preamble, exactly what a server dying mid-accept looks like to
+    // the client's dialer.
+    if faults.fail_this_handshake() {
+        crate::bail!("{peer}: fault-plan: injected handshake failure");
+    }
 
     // Handshake: advertise what we host, learn the client's model
     // count and clock. A peer that stalls mid-handshake is dropped
@@ -186,6 +209,7 @@ fn serve_session(
         shards: shards as u16,
         gpu_lo: gpus.start,
         gpu_hi: gpus.end,
+        session,
     }))?;
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
     let mut hello = [0u8; HELLO_LEN];
@@ -206,13 +230,24 @@ fn serve_session(
     // Session shards run in the client's clock domain (offset by the
     // hello's one-way latency — budgeted by the client's net_bound).
     let clock = Clock::starting_at(Micros(hello.now_us));
+    if hello.epoch > 0 {
+        println!(
+            "rank-server: {peer} reconnected (client epoch {}, server session {session})",
+            hello.epoch
+        );
+    }
+
+    // Arm this session's fault schedule (deterministic per seed and
+    // session index) and the timed killer, if the plan has one.
+    let session_faults = faults.session();
+    let _ = faults.spawn_timed_killer(&stream);
 
     // Down path: coalescing writer + converter threads turning shard
     // verdicts and drain acks into frames. The verdict proxy is a ring
     // (it sits on the grant hot path); the drain-ack channel stays
     // mpsc — one-shot control-rate traffic behind the Sender<GpuId>
     // ack contract.
-    let (sender, writer_h) = spawn_writer(stream.try_clone()?)?;
+    let (sender, writer_h) = spawn_writer_with(stream.try_clone()?, Some(session_faults))?;
     let (model_tx, model_rx) = ring::<ToModel>(MODEL_RING_DEPTH);
     model_rx.set_busy_poll(busy_poll);
     let model_conv = {

@@ -25,6 +25,7 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::net::faults::{Admit, SessionFaults};
 use crate::util::ring::Waiter;
 use crate::util::sync::relock;
 
@@ -33,17 +34,33 @@ use crate::util::sync::relock;
 /// protocol, rejected without reading the claimed payload.
 pub const MAX_FRAME: usize = 4096;
 
-/// The peer (or the writer thread) is gone; the frame was not sent.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct WireClosed;
+/// Backlog cap, in frames, for a writer queue (see [`SendFail`]).
+pub const MAX_BACKLOG_FRAMES: usize = 1 << 16;
+/// Backlog cap, in payload bytes, for a writer queue.
+pub const MAX_BACKLOG_BYTES: usize = 8 << 20;
 
-impl std::fmt::Display for WireClosed {
+/// Why a frame was not enqueued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendFail {
+    /// The peer (or the writer thread) is gone.
+    Closed,
+    /// The backlog cap was hit: the peer has stalled long enough that
+    /// queuing more would only grow memory without bound, so *this*
+    /// send killed the session (queue closed, socket shut down). The
+    /// caller should count it as a backlog-overflow disconnect.
+    Overflow,
+}
+
+impl std::fmt::Display for SendFail {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "wire connection closed")
+        match self {
+            SendFail::Closed => write!(f, "wire connection closed"),
+            SendFail::Overflow => write!(f, "wire writer backlog overflow"),
+        }
     }
 }
 
-impl std::error::Error for WireClosed {}
+impl std::error::Error for SendFail {}
 
 /// Blocking frame reader over any `Read` (a `TcpStream` in production,
 /// a `Cursor` in tests). The payload buffer is reused across frames.
@@ -107,6 +124,8 @@ fn read_exact_or_eof<R: Read>(src: &mut R, buf: &mut [u8]) -> io::Result<bool> {
 
 struct QueueInner {
     frames: Vec<Vec<u8>>,
+    /// Payload bytes queued (the frames' summed lengths).
+    bytes: usize,
     senders: usize,
     closed: bool,
 }
@@ -115,6 +134,14 @@ struct QueueInner {
 struct FrameQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
+    /// Backlog caps (frames, bytes) — exceeding either fails the
+    /// session instead of growing memory against a stalled peer.
+    max_frames: usize,
+    max_bytes: usize,
+    /// A clone of the session stream, so an overflowing *sender* can
+    /// shut the socket down — unblocking a writer stuck in `write_all`
+    /// and the peer-facing reader — without waiting for the writer.
+    stream: Mutex<Option<TcpStream>>,
 }
 
 /// Clonable handle that enqueues encoded frame payloads for the writer
@@ -149,7 +176,7 @@ impl FrameSender {
     /// payload here comes from `codec::encode_*`, never from the peer —
     /// so a violation is a codec bug worth a loud stop, not a
     /// wire-reachable panic.
-    pub fn send(&self, frame: Vec<u8>) -> Result<(), WireClosed> {
+    pub fn send(&self, frame: Vec<u8>) -> Result<(), SendFail> {
         // lint:allow(panic-free-wire-surface): asserts on locally encoded
         // payloads (codec bug), not on peer-supplied input.
         assert!(
@@ -159,8 +186,23 @@ impl FrameSender {
         );
         let mut g = relock(&self.q.inner);
         if g.closed {
-            return Err(WireClosed);
+            return Err(SendFail::Closed);
         }
+        if g.frames.len() >= self.q.max_frames || g.bytes + frame.len() > self.q.max_bytes {
+            // Backlog full: the peer stopped draining. Fail the whole
+            // session now — queued frames are as undeliverable as this
+            // one, and the shutdown unblocks a writer wedged mid-write.
+            g.closed = true;
+            g.frames.clear();
+            g.bytes = 0;
+            drop(g);
+            self.q.cv.notify_all();
+            if let Some(s) = relock(&self.q.stream).take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            return Err(SendFail::Overflow);
+        }
+        g.bytes += frame.len();
         g.frames.push(frame);
         self.q.cv.notify_one();
         Ok(())
@@ -197,22 +239,52 @@ pub struct WriterStats {
 pub fn spawn_writer(
     stream: TcpStream,
 ) -> io::Result<(FrameSender, JoinHandle<io::Result<WriterStats>>)> {
+    spawn_writer_with(stream, None)
+}
+
+/// [`spawn_writer`] with a fault-injection hook: when `faults` is set,
+/// the writer consults it per batch — stalling, tearing, or killing the
+/// session exactly where the seeded [`crate::net::faults::FaultPlan`]
+/// says to.
+pub fn spawn_writer_with(
+    stream: TcpStream,
+    faults: Option<SessionFaults>,
+) -> io::Result<(FrameSender, JoinHandle<io::Result<WriterStats>>)> {
+    spawn_writer_bounded(stream, faults, MAX_BACKLOG_FRAMES, MAX_BACKLOG_BYTES)
+}
+
+/// [`spawn_writer_with`] with explicit backlog caps (tests shrink them
+/// to hit the overflow path without megabytes of traffic).
+pub fn spawn_writer_bounded(
+    stream: TcpStream,
+    faults: Option<SessionFaults>,
+    max_frames: usize,
+    max_bytes: usize,
+) -> io::Result<(FrameSender, JoinHandle<io::Result<WriterStats>>)> {
     let q = Arc::new(FrameQueue {
         inner: Mutex::new(QueueInner {
             frames: Vec::new(),
+            bytes: 0,
             senders: 1,
             closed: false,
         }),
         cv: Condvar::new(),
+        max_frames,
+        max_bytes,
+        stream: Mutex::new(stream.try_clone().ok()),
     });
     let sender = FrameSender { q: q.clone() };
     let handle = std::thread::Builder::new()
         .name("wire-writer".into())
-        .spawn(move || write_loop(q, stream))?;
+        .spawn(move || write_loop(q, stream, faults))?;
     Ok((sender, handle))
 }
 
-fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterStats> {
+fn write_loop(
+    q: Arc<FrameQueue>,
+    mut stream: TcpStream,
+    mut faults: Option<SessionFaults>,
+) -> io::Result<WriterStats> {
     let mut stats = WriterStats::default();
     let mut batch: Vec<Vec<u8>> = Vec::new();
     let mut out: Vec<u8> = Vec::new();
@@ -228,6 +300,7 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
             let mut g = relock(&q.inner);
             if !g.frames.is_empty() {
                 std::mem::swap(&mut g.frames, &mut batch);
+                g.bytes = 0;
                 break;
             }
             if g.closed {
@@ -238,6 +311,7 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
                     g = q.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
                 }
                 std::mem::swap(&mut g.frames, &mut batch);
+                g.bytes = 0;
                 if batch.is_empty() && g.closed {
                     break 'outer;
                 }
@@ -247,17 +321,45 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
             waiter.idle();
         }
         waiter.reset();
+        // Fault hooks: a seeded plan can stall the writer (modelling a
+        // saturated peer) and cut the session at an exact frame index.
+        let admit = match faults.as_mut() {
+            Some(f) => {
+                let stall = f.stall_us();
+                if stall > 0 {
+                    std::thread::sleep(Duration::from_micros(stall));
+                }
+                f.admit(batch.len())
+            }
+            None => Admit {
+                allowed: batch.len(),
+                kill: false,
+                torn: false,
+            },
+        };
         // One contiguous buffer, one syscall, however deep the backlog.
         out.clear();
-        for f in batch.drain(..) {
+        for f in batch.iter().take(admit.allowed) {
             out.extend_from_slice(&(f.len() as u32).to_le_bytes());
-            out.extend_from_slice(&f);
+            out.extend_from_slice(f);
             stats.frames += 1;
         }
+        if admit.kill && admit.torn {
+            // Ship the fatal frame's prefix and half its payload: the
+            // peer's reader must surface a torn frame as an error.
+            if let Some(f) = batch.get(admit.allowed) {
+                out.extend_from_slice(&(f.len() as u32).to_le_bytes());
+                if let Some(half) = f.get(..f.len() / 2) {
+                    out.extend_from_slice(half);
+                }
+            }
+        }
+        batch.clear();
         if let Err(e) = stream.write_all(&out) {
             let mut g = relock(&q.inner);
             g.closed = true;
             g.frames.clear();
+            g.bytes = 0;
             drop(g);
             q.cv.notify_all();
             let _ = stream.shutdown(Shutdown::Write);
@@ -265,6 +367,19 @@ fn write_loop(q: Arc<FrameQueue>, mut stream: TcpStream) -> io::Result<WriterSta
         }
         stats.writes += 1;
         stats.bytes += out.len() as u64;
+        if admit.kill {
+            let mut g = relock(&q.inner);
+            g.closed = true;
+            g.frames.clear();
+            g.bytes = 0;
+            drop(g);
+            q.cv.notify_all();
+            let _ = stream.shutdown(Shutdown::Both);
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionAborted,
+                "fault-plan kill",
+            ));
+        }
     }
     let _ = stream.shutdown(Shutdown::Write);
     Ok(stats)
@@ -400,10 +515,84 @@ mod tests {
         tx.send(vec![1]).unwrap();
         tx.close();
         assert!(tx.is_closed());
-        assert_eq!(tx.send(vec![2]), Err(WireClosed));
+        assert_eq!(tx.send(vec![2]), Err(SendFail::Closed));
         drop(tx);
         let stats = writer_h.join().unwrap().unwrap();
         assert_eq!(stats.frames, 1, "queued frame still flushed");
         drop(accept_h.join().unwrap());
+    }
+
+    /// The backlog-bound satellite's regression test: with the writer
+    /// stalled (fault plan) and a tiny frame cap, sends hit
+    /// `SendFail::Overflow`, the session dies, and later sends fail as
+    /// `Closed` — memory never grows without bound against a stalled
+    /// peer.
+    #[test]
+    fn backlog_overflow_fails_the_session() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept_h = std::thread::spawn(move || listener.accept().unwrap());
+        let stream = TcpStream::connect(addr).unwrap();
+        // Stall every write batch for 2s: the queue must absorb — and
+        // then refuse — everything sent during the stall.
+        let plan = crate::net::faults::FaultPlan::parse("stall-writer-us=2000000").unwrap();
+        let (tx, writer_h) =
+            spawn_writer_bounded(stream, Some(plan.session()), 8, 1 << 20).unwrap();
+        let mut overflowed = false;
+        for i in 0..64u32 {
+            match tx.send(i.to_le_bytes().to_vec()) {
+                Ok(()) => {}
+                Err(SendFail::Overflow) => {
+                    overflowed = true;
+                    break;
+                }
+                Err(SendFail::Closed) => panic!("closed before overflow"),
+            }
+        }
+        assert!(overflowed, "64 sends against an 8-frame cap must overflow");
+        assert!(tx.is_closed(), "overflow closes the whole session");
+        assert_eq!(tx.send(vec![9]), Err(SendFail::Closed));
+        drop(tx);
+        // The overflow shutdown unblocks the (stalled) writer; its exit
+        // status does not matter, only that it exits.
+        let _ = writer_h.join().unwrap();
+        drop(accept_h.join().unwrap());
+    }
+
+    /// A frame-count kill cuts the stream at exactly the planned frame,
+    /// and the same plan does the same thing every run (determinism at
+    /// the transport level).
+    #[test]
+    fn fault_kill_cuts_at_the_planned_frame() {
+        for _run in 0..2 {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let reader_h = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                let mut r = FrameReader::new(stream);
+                let mut got = 0u64;
+                loop {
+                    match r.next_frame() {
+                        Ok(Some(_)) => got += 1,
+                        Ok(None) => return (got, false),
+                        Err(_) => return (got, true),
+                    }
+                }
+            });
+            let stream = TcpStream::connect(addr).unwrap();
+            let plan = crate::net::faults::FaultPlan::parse("kill-after-frames=5,torn").unwrap();
+            let (tx, writer_h) = spawn_writer_with(stream, Some(plan.session())).unwrap();
+            for i in 0..32u32 {
+                if tx.send(i.to_le_bytes().to_vec()).is_err() {
+                    break; // killed mid-run: exactly what the plan wants
+                }
+            }
+            drop(tx);
+            let err = writer_h.join().unwrap().unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::ConnectionAborted, "{err}");
+            let (got, torn) = reader_h.join().unwrap();
+            assert_eq!(got, 5, "exactly the planned frames survive");
+            assert!(torn, "the torn fatal frame must read as an error");
+        }
     }
 }

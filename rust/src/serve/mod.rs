@@ -31,6 +31,8 @@ use crate::util::error::Result;
 use crate::autoscale::live::{GpuState, LiveAutoscaler};
 use crate::autoscale::{AutoscaleConfig, AutoscaleController, WindowStats};
 use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use crate::net::client::{DisconnectBreakdown, ReconnectPolicy};
+use crate::net::faults::FaultPlan;
 use crate::core::profile::{LatencyProfile, ModelSpec};
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
@@ -92,6 +94,12 @@ pub struct ServeConfig {
     /// cores (NUMA-node order). See `--pin-cores`; no-op off Linux.
     pub pin_cores: bool,
     pub seed: u64,
+    /// Deterministic client-side wire fault injection under
+    /// `--remote-ranks` ([`FaultPlan::parse`] grammar; `--fault-plan`
+    /// on the CLI). [`FaultPlan::none`] injects nothing. Sessions
+    /// killed by the plan recover through the reconnect machinery, so
+    /// a faulted run still completes — that is the point.
+    pub fault_plan: Arc<FaultPlan>,
 }
 
 /// What a serving run reports.
@@ -120,6 +128,15 @@ pub struct ServeReport {
     /// asking (always 0 with an in-process rank tier) — a disconnect
     /// is counted and logged, never silently wedged through.
     pub rank_disconnects: u64,
+    /// `rank_disconnects` split by cause (io / protocol / handshake /
+    /// backlog-overflow).
+    pub rank_disconnect_causes: DisconnectBreakdown,
+    /// Sessions re-established by the reconnect state machine. A chaos
+    /// run that kills K sessions should end with `rank_disconnects ==
+    /// K` and `rank_reconnects == K` (every death recovered).
+    pub rank_reconnects: u64,
+    /// Stale-session down-frames dropped by the epoch fence.
+    pub rank_fenced_frames: u64,
     /// Per-epoch autoscale timeline (empty without `autoscale`).
     pub timeline: Vec<EpochPoint>,
 }
@@ -279,6 +296,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
             remote_ranks: cfg.remote_ranks.clone(),
             busy_poll: cfg.busy_poll,
             pin_cores: cfg.pin_cores,
+            reconnect: ReconnectPolicy::default(),
+            fault_plan: cfg.fault_plan.clone(),
         },
         backend_txs.clone(),
         comp_tx.clone(),
@@ -515,6 +534,9 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         mis_steers: shard_stats.mis_steers,
         dropped_submits: front_stats.dropped_submits,
         rank_disconnects: front_stats.rank_disconnects,
+        rank_disconnect_causes: front_stats.rank_disconnect_causes,
+        rank_reconnects: front_stats.rank_reconnects,
+        rank_fenced_frames: front_stats.rank_fenced_frames,
         timeline,
     }
     .tap_duration(cfg.duration))
@@ -715,6 +737,7 @@ mod tests {
             busy_poll: false,
             pin_cores: false,
             seed: 5,
+            fault_plan: FaultPlan::none(),
         })
         .unwrap();
         assert!(report.submitted > 50, "submitted {}", report.submitted);
@@ -769,6 +792,7 @@ mod tests {
             busy_poll: false,
             pin_cores: false,
             seed: 11,
+            fault_plan: FaultPlan::none(),
         })
         .unwrap();
         let (first, peak, last) = crate::metrics::timeline_extent(&report.timeline)

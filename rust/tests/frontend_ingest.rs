@@ -50,6 +50,8 @@ fn spawn_cluster(
             remote_ranks: Vec::new(),
             busy_poll: false,
             pin_cores: false,
+            reconnect: symphony::net::client::ReconnectPolicy::default(),
+            fault_plan: symphony::net::faults::FaultPlan::none(),
         },
         backend_txs,
         comp_tx,

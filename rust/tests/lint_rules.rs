@@ -269,6 +269,34 @@ pub fn decode_down(tag: u8) -> Option<WireFromRank> {
         _ => None,
     }
 }
+
+pub struct ServerPreamble {
+    pub shards: u16,
+    pub session: u64,
+}
+
+pub fn encode_preamble(p: &ServerPreamble, out: &mut Vec<u8>) {
+    out.extend(p.shards.to_le_bytes());
+    out.extend(p.session.to_le_bytes());
+}
+
+pub fn decode_preamble() -> ServerPreamble {
+    ServerPreamble { shards: 0, session: 1 }
+}
+
+pub struct ClientHello {
+    pub n_models: u32,
+    pub epoch: u64,
+}
+
+pub fn encode_hello(h: &ClientHello, out: &mut Vec<u8>) {
+    out.extend(h.n_models.to_le_bytes());
+    out.extend(h.epoch.to_le_bytes());
+}
+
+pub fn decode_hello() -> ClientHello {
+    ClientHello { n_models: 0, epoch: 0 }
+}
 "#;
 
 fn drift(codec: &str) -> Vec<Finding> {
@@ -323,6 +351,26 @@ fn wire_drift_flags_field_drift() {
     assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
     assert_flagged(&f, DRIFT_RULE, line_of(&bad, "pub enum WireToRank"));
     assert!(f[0].message.contains("drift from"), "{}", f[0]);
+}
+
+/// Handshake structs are fixed-offset (no per-field tags): a field the
+/// encoder writes but the decoder never reads must be flagged, because
+/// at runtime it silently skews every later offset instead of failing.
+#[test]
+fn wire_drift_flags_one_sided_handshake_field() {
+    let bad = DRIFT_CODEC_OK.replace(
+        "ClientHello { n_models: 0, epoch: 0 }",
+        "ClientHello { n_models: 0, ..Default::default() }",
+    );
+    assert_ne!(bad, DRIFT_CODEC_OK);
+    let f = drift(&bad);
+    assert_eq!(f.len(), 1, "findings:\n{}", render(&f));
+    assert_flagged(&f, DRIFT_RULE, line_of(&bad, "pub struct ClientHello"));
+    assert!(
+        f[0].message.contains("decode_hello") && f[0].message.contains("ClientHello::epoch"),
+        "{}",
+        f[0]
+    );
 }
 
 #[test]

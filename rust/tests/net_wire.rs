@@ -1,21 +1,27 @@
 //! Wire-transport semantics: `serve --remote-ranks`-equivalent
 //! coordinators against a loopback `rank-server` must dispatch the
 //! same work as in-process shards, the drain/attach autoscaler
-//! protocol must round-trip as frames, and a rank-server disconnect
-//! must be surfaced (counted + logged) rather than silently wedging
-//! the model workers.
+//! protocol must round-trip as frames, a rank-server disconnect must
+//! be surfaced (counted + logged) rather than silently wedging the
+//! model workers, and — the survivability contract — a session killed
+//! mid-load by a seeded [`FaultPlan`] must heal: reconnect, replay
+//! registrations, and finish the workload with the exact same
+//! no-loss/no-dup dispatch multiset as a clean run.
 
 use std::collections::BTreeSet;
 use std::io::{Read, Write};
 use std::net::TcpListener;
 use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use symphony::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
 use symphony::core::profile::LatencyProfile;
 use symphony::core::time::Micros;
 use symphony::core::types::{GpuId, ModelId, Request, RequestId};
+use symphony::net::client::ReconnectPolicy;
 use symphony::net::codec::{self, ServerPreamble, HELLO_LEN};
+use symphony::net::faults::FaultPlan;
 use symphony::net::server::{RankServer, RankServerConfig};
 
 const N_MODELS: usize = 2;
@@ -34,22 +40,33 @@ fn config(remote_ranks: Vec<String>) -> CoordinatorConfig {
         remote_ranks,
         busy_poll: false,
         pin_cores: false,
+        reconnect: ReconnectPolicy::default(),
+        fault_plan: FaultPlan::none(),
     }
 }
 
-fn spawn_server(shards: usize) -> (String, std::thread::JoinHandle<()>) {
+fn spawn_server_with(
+    shards: usize,
+    max_sessions: usize,
+    fault_plan: Arc<FaultPlan>,
+) -> (String, std::thread::JoinHandle<()>) {
     let server = RankServer::bind(RankServerConfig {
         listen: "127.0.0.1:0".into(),
         shards,
         gpus: 0..NUM_GPUS as u32,
-        max_sessions: Some(1),
+        max_sessions: Some(max_sessions),
         busy_poll: false,
         pin_cores: false,
+        fault_plan,
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();
     let h = std::thread::spawn(move || server.run().expect("rank server run"));
     (addr, h)
+}
+
+fn spawn_server(shards: usize) -> (String, std::thread::JoinHandle<()>) {
+    spawn_server_with(shards, 1, FaultPlan::none())
 }
 
 /// Run one seeded workload through a coordinator and return
@@ -227,6 +244,7 @@ fn server_disconnect_is_counted_not_wedged() {
                 shards: 2,
                 gpu_lo: 0,
                 gpu_hi: NUM_GPUS as u32,
+                session: 1,
             }))
             .unwrap();
         let mut hello = [0u8; HELLO_LEN];
@@ -240,7 +258,11 @@ fn server_disconnect_is_counted_not_wedged() {
         backend_txs.push(tx);
     }
     let (comp_tx, _comp_rx) = channel::<Completion>();
-    let coord = Coordinator::spawn(config(vec![addr]), backend_txs, comp_tx);
+    // Reconnect off: this test pins down the terminal-death semantics
+    // (the reconnect path has its own test below).
+    let mut cfg = config(vec![addr]);
+    cfg.reconnect = ReconnectPolicy::disabled();
+    let coord = Coordinator::spawn(cfg, backend_txs, comp_tx);
     stub.join().unwrap();
 
     // The reader notices the EOF and counts it.
@@ -299,6 +321,84 @@ fn topology_mismatch_fails_spawn() {
     assert!(err.is_err(), "range mismatch must fail spawn");
     // The server saw one (aborted) session; let it exit.
     let _ = server.join();
+}
+
+/// The survivability contract, end to end: a rank-server session
+/// killed mid-load by a seeded fault plan must not lose or duplicate
+/// work. The server's timed killer drops the socket a few ms into the
+/// run; the client fences the dead session, redials, replays its
+/// registrations (`ToModel::Reregister`), and grants resume in
+/// session 2. Every submitted id is dispatched exactly once, the
+/// disconnect and the reconnect are both counted, and shutdown stays
+/// bounded.
+#[test]
+fn killed_session_reconnects_without_loss_or_duplication() {
+    let n = 600u64;
+    // Session 1 dies 3 ms in (well before the ≳60 ms of simulated GPU
+    // time the workload needs); session 2 runs clean (`times=1`).
+    let plan = FaultPlan::parse("seed=7,kill-after-us=3000,times=1").expect("plan");
+    let (addr, server) = spawn_server_with(2, 2, plan);
+    let mut backend_txs = Vec::new();
+    let mut backend_rxs = Vec::new();
+    for _ in 0..NUM_GPUS {
+        let (tx, rx) = channel::<ToBackend>();
+        backend_txs.push(tx);
+        backend_rxs.push(rx);
+    }
+    let (comp_tx, comp_rx) = channel::<Completion>();
+    // Tight backoff so the redial lands well inside the test budget.
+    let mut cfg = config(vec![addr]);
+    cfg.reconnect = ReconnectPolicy {
+        enabled: true,
+        backoff_base: Duration::from_millis(10),
+        backoff_cap: Duration::from_millis(100),
+        dead_after: Duration::from_secs(10),
+    };
+    let coord = Coordinator::spawn(cfg, backend_txs, comp_tx);
+    let slo = Micros::from_millis_f64(10_000.0);
+    for i in 0..n {
+        let now = coord.clock.now();
+        coord.submit(Request {
+            id: RequestId(i),
+            model: ModelId((i % N_MODELS as u64) as u32),
+            arrival: now,
+            deadline: now + slo,
+        });
+        if i % 16 == 15 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let mut dispatched: Vec<u64> = Vec::new();
+    let mut dropped = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while (dispatched.len() + dropped) < n as usize && Instant::now() < deadline {
+        for rx in &backend_rxs {
+            for msg in rx.try_iter() {
+                if let ToBackend::Execute { requests, .. } = msg {
+                    dispatched.extend(requests.iter().map(|r| r.id.0));
+                }
+            }
+        }
+        for c in comp_rx.try_iter() {
+            if let Completion::Dropped(rs) = c {
+                dropped += rs.len();
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (front, stats) = coord.shutdown_stats();
+    let _ = server.join();
+    assert_eq!(dropped, 0, "generous SLO + fast reconnect: nothing sheds");
+    dispatched.sort_unstable();
+    let expect: Vec<u64> = (0..n).collect();
+    assert_eq!(dispatched, expect, "every id exactly once across the kill");
+    assert_eq!(front.rank_disconnects, 1, "the seeded kill is counted once");
+    assert_eq!(
+        front.rank_disconnect_causes.io, 1,
+        "a socket kill surfaces as an io-cause disconnect"
+    );
+    assert_eq!(front.rank_reconnects, 1, "the redial healed into session 2");
+    assert!(stats.grants > 0, "grants resumed across the reconnect");
 }
 
 /// Ids used in sets above stay unique across helper runs.

@@ -191,6 +191,7 @@ fn spawn_loopback_rank_server(
         max_sessions: Some(1),
         busy_poll: false,
         pin_cores: false,
+        fault_plan: symphony::net::faults::FaultPlan::none(),
     })
     .expect("bind loopback rank server");
     let addr = server.local_addr().to_string();
@@ -247,6 +248,8 @@ fn drive_coordinator(rng: &mut Rng, rank_shards: usize, remote: bool) -> Vec<Vec
             remote_ranks,
             busy_poll: false,
             pin_cores: false,
+            reconnect: symphony::net::client::ReconnectPolicy::default(),
+            fault_plan: symphony::net::faults::FaultPlan::none(),
         },
         backend_txs,
         comp_tx,
@@ -460,6 +463,8 @@ fn drive_coordinator_with_resize(
             remote_ranks: Vec::new(),
             busy_poll: false,
             pin_cores: false,
+            reconnect: symphony::net::client::ReconnectPolicy::default(),
+            fault_plan: symphony::net::faults::FaultPlan::none(),
         },
         backend_txs,
         comp_tx,

@@ -31,6 +31,7 @@ fn sleep_backend_meets_slo_at_moderate_load() {
         busy_poll: false,
         pin_cores: false,
         seed: 11,
+        fault_plan: symphony::net::faults::FaultPlan::none(),
     })
     .unwrap();
     assert!(report.submitted > 150);
@@ -58,6 +59,7 @@ fn sleep_backend_batches_under_pressure() {
         busy_poll: false,
         pin_cores: false,
         seed: 3,
+        fault_plan: symphony::net::faults::FaultPlan::none(),
     })
     .unwrap();
     assert!(
@@ -134,6 +136,7 @@ fn pjrt_end_to_end_serving() {
         busy_poll: false,
         pin_cores: false,
         seed: 9,
+        fault_plan: symphony::net::faults::FaultPlan::none(),
     })
     .unwrap();
     assert!(report.submitted > 60, "submitted {}", report.submitted);
