@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Validate a flight-recorder Chrome trace dump (--trace-out FILE).
+
+Stdlib-only, mirrors compare_bench.py's role for the trace artifact:
+the CI observability smoke runs a short serve with tracing enabled and
+this script asserts the dump is a loadable trace with the lifecycle
+stages the recorder promises. Checks:
+
+  * the file parses as one JSON array of event objects;
+  * instant events (ph "i") cover the core request lifecycle stages;
+  * derived hop spans (ph "X") exist and carry non-negative durations;
+  * timestamps are non-negative integers (one shared time axis);
+  * per-request instants are monotone in stage order is the recorder's
+    own invariant (tested in-process) — here we only re-check span
+    durations, since stage names round-tripped through JSON.
+
+Usage: check_trace.py <trace.json>
+"""
+
+import json
+import sys
+
+# Stages a short in-process serve run must tap. Wire stages
+# (wire_cand_tx / wire_grant_rx) appear only on remote-rank runs and
+# are not required here.
+REQUIRED_STAGES = {
+    "submit",
+    "ingest_bin",
+    "worker_recv",
+    "cand_reg",
+    "rank_grant",
+    "grant_recv",
+    "dispatch",
+    "complete",
+}
+
+
+def fail(msg):
+    print(f"::error title=trace check::{msg}")
+    return 1
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: check_trace.py <trace.json>")
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            events = json.load(f)
+    except OSError as e:
+        return fail(f"cannot read {path}: {e}")
+    except ValueError as e:
+        return fail(f"{path} is not valid JSON: {e}")
+    if not isinstance(events, list) or not events:
+        return fail(f"{path} must be a non-empty JSON array of trace events")
+
+    instants = [e for e in events if e.get("ph") == "i"]
+    spans = [e for e in events if e.get("ph") == "X"]
+    if not instants:
+        return fail("no instant (ph 'i') events — the recorder captured nothing")
+    if not spans:
+        return fail("no hop span (ph 'X') events — per-request chains never formed")
+
+    for e in events:
+        ts = e.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            return fail(f"event with non-integer/negative ts: {e}")
+    for e in spans:
+        dur = e.get("dur")
+        if not isinstance(dur, int) or dur < 0:
+            return fail(f"hop span with bad duration: {e}")
+
+    seen = {e.get("name") for e in instants}
+    missing = sorted(REQUIRED_STAGES - seen)
+    if missing:
+        return fail(
+            f"lifecycle stages missing from the trace: {', '.join(missing)} "
+            f"(saw: {', '.join(sorted(s for s in seen if s))})"
+        )
+
+    shed = next(
+        (e for e in events if e.get("ph") == "C" and e.get("name") == "trace_shed"),
+        None,
+    )
+    shed_n = (shed or {}).get("args", {}).get("shed", "?")
+    print(
+        f"trace ok: {len(events)} events ({len(instants)} instants, "
+        f"{len(spans)} hop spans), {len(seen)} stages, shed={shed_n}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,7 @@ use symphony::core::profile::{reference, LatencyProfile};
 use symphony::core::time::Micros;
 use symphony::core::types::{GpuId, ModelId, Request, RequestId};
 use symphony::harness::{GoodputExperiment, SystemKind};
+use symphony::obs::trace::{self, Stage};
 use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
 use symphony::scheduler::Scheduler;
 use symphony::util::ring::ring;
@@ -223,6 +224,59 @@ fn main() {
             format!("{speedup:.2}"),
         ]);
         json.push(("ring_vs_mpsc_speedup".to_string(), speedup));
+    }
+
+    // 6. Flight-recorder tap cost — the observability tentpole's
+    //    overhead evidence. Untraced arm: the recorder is disabled, so
+    //    each tap is one relaxed load of the sampling word and a
+    //    predictable branch (the cost every production run pays at
+    //    every lifecycle hop). Traced arm: a live 1-in-64 session —
+    //    sampled taps clone a thread-cached ring sender and `try_send`
+    //    into the bounded span ring, shedding on overflow.
+    {
+        let n = 50_000_000u64;
+        assert!(!trace::enabled(), "bench process must start untraced");
+        let secs_off = time_it(|| {
+            for i in 0..n {
+                trace::req_event(Stage::Submit, RequestId(std::hint::black_box(i)));
+            }
+        });
+        let session = trace::install(64).expect("recorder free in a fresh bench process");
+        assert!(trace::enabled(), "sampled arm must actually trace");
+        let secs_on = time_it(|| {
+            for i in 0..n {
+                trace::req_event(Stage::Submit, RequestId(std::hint::black_box(i)));
+            }
+        });
+        let dump = session.finish();
+        assert!(
+            dump.events.len() as u64 + dump.shed > 0,
+            "sampled arm recorded nothing"
+        );
+        let off_ops = n as f64 / secs_off;
+        let on_ops = n as f64 / secs_on;
+        for (name, v) in [
+            ("trace_disabled", off_ops),
+            ("trace_sampled_1in64", on_ops),
+        ] {
+            table.row(vec![
+                name.to_string(),
+                "events_per_sec".to_string(),
+                format!("{v:.0}"),
+            ]);
+            table.row(vec![
+                name.to_string(),
+                "ns_per_event".to_string(),
+                format!("{:.2}", 1e9 / v),
+            ]);
+        }
+        table.row(vec![
+            "trace_tap".to_string(),
+            "sampled_over_disabled_cost".to_string(),
+            format!("{:.2}", off_ops / on_ops.max(1.0)),
+        ]);
+        json.push(("trace_disabled_events_per_sec".to_string(), off_ops));
+        json.push(("trace_sampled_events_per_sec".to_string(), on_ops));
     }
 
     table.emit("bench_hotpath");

@@ -112,6 +112,7 @@ fn bench_rtt(rounds: usize) -> (f64, f64, f64) {
         busy_poll: std::env::var_os("SYMPHONY_BUSY_POLL").is_some(),
         pin_cores: false,
         fault_plan: FaultPlan::none(),
+        metrics_listen: None,
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();

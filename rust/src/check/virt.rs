@@ -167,4 +167,10 @@ impl Fabric for VirtFabric {
     fn spin_budget() -> (u32, u32) {
         (0, 0)
     }
+
+    fn track_gauges() -> bool {
+        // Gauges are advisory (never read by the handoff protocol);
+        // their atomics would only multiply the explored state space.
+        false
+    }
 }

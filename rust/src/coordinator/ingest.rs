@@ -25,6 +25,7 @@ use std::thread::JoinHandle;
 use crate::coordinator::messages::ToModel;
 use crate::coordinator::{INGEST_RING_DEPTH, MAX_DRAIN};
 use crate::core::types::{ModelId, ReqBurst, Request};
+use crate::obs::trace::{self, Stage};
 use crate::util::affinity::{self, CorePlan};
 use crate::util::ring::{ring, RingReceiver, RingSender, TryRecvError};
 
@@ -80,6 +81,7 @@ impl IngestShard {
             if bins[mi].is_empty() {
                 touched.push(mi);
             }
+            trace::req_event(Stage::IngestBin, r.id);
             bins[mi].push(r);
         };
         // Absorb one producer message; returns true when it was the
@@ -277,6 +279,7 @@ impl IngestHandle {
     /// ingest ring with no room — or a dead shard — counts the
     /// submission into `dropped_submits`, never a silent loss.
     pub fn submit(&self, r: Request) {
+        trace::req_event(Stage::Submit, r.id);
         if self.txs[self.shard].try_send(ToIngest::One(r)).is_err() {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
@@ -291,6 +294,9 @@ impl IngestHandle {
             return;
         }
         let n = reqs.len() as u64;
+        for r in reqs {
+            trace::req_event(Stage::Submit, r.id);
+        }
         let msg = ToIngest::Batch(Box::new(ReqBurst::from_slice(reqs)));
         if self.txs[self.shard].try_send(msg).is_err() {
             self.dropped.fetch_add(n, Ordering::Relaxed);

@@ -32,6 +32,17 @@
 //!  backend worker per GPU  ── Completion ──▶ collector
 //! ```
 //!
+//! Flight-recorder tap points (`crate::obs::trace`, 1-in-N sampled):
+//! `Submit` where a producer hands the request over ([`IngestHandle`]
+//! or [`Coordinator::submit`]), `IngestBin` as an ingest shard bins
+//! it, `WorkerRecv` as its model worker absorbs it, `CandReg` when the
+//! worker registers a candidate (per model), `RankGrant` when a rank
+//! shard grants a GPU (per model), `GrantRecv` + `Dispatch` as the
+//! worker takes the burst and ships it to the backend, and `Complete`
+//! at the serve-side collector. The wire hops `WireCandTx` /
+//! `WireGrantRx` bracket the `--remote-ranks` process boundary in
+//! [`crate::net`].
+//!
 //! The rank tier is addressed through [`RankPort`]s, so it can live
 //! in-process (bounded lock-free rings, [`crate::util::ring`] — the
 //! default) or behind [`crate::net`]'s framed TCP in separate
@@ -87,15 +98,16 @@ use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId, ReqBurst, Request};
 use crate::net::client::{DisconnectBreakdown, DisconnectCounts, ReconnectPolicy, RemoteRank};
 use crate::net::faults::FaultPlan;
+use crate::obs::trace::{self, Stage};
 use crate::util::affinity::{self, CorePlan};
 use crate::util::error::Result;
-use crate::util::ring::{ring, RingSender};
+use crate::util::ring::{ring, RingProbe, RingSender};
 pub use clock::Clock;
 pub use ingest::IngestHandle;
 use ingest::IngestTier;
 pub use messages::{CandWindow, Completion, ToBackend, ToModel, ToRank};
 pub use model_thread::{ModelWorkerPool, QueueDepthProbe, WorkerStats};
-pub use rank_shard::{RankShard, ShardStats};
+pub use rank_shard::{RankShard, ShardLive, ShardStats};
 pub use router::{FreeHints, PortClosed, RankPort, RankRouter, ShardLiveness, ShardTopology};
 
 /// How long `--remote-ranks` keeps retrying a rank server that is not
@@ -226,6 +238,17 @@ pub struct FrontendStats {
     /// being dispatched (a stale `Granted` never leases a GPU in the
     /// successor session).
     pub rank_fenced_frames: u64,
+    /// High-watermark occupancy across the ingest-shard inbox rings:
+    /// how close producer bursts came to the shed point
+    /// ([`INGEST_RING_DEPTH`]).
+    pub ingest_ring_hwm: u64,
+    /// High-watermark occupancy across the model-worker inbox rings
+    /// ([`MODEL_RING_DEPTH`]).
+    pub model_ring_hwm: u64,
+    /// High-watermark occupancy across the in-process rank-shard inbox
+    /// rings ([`RANK_RING_DEPTH`]); 0 with a remote tier (the servers
+    /// report their own via [`ShardStats::inbox_hwm`]).
+    pub rank_ring_hwm: u64,
 }
 
 /// A live coordinator: ingest shards + model-worker pool + rank shards
@@ -249,6 +272,32 @@ pub struct Coordinator {
     /// Shared per-shard liveness: all-live for an in-process tier;
     /// maintained by the `RemoteRank` reconnect machinery otherwise.
     liveness: ShardLiveness,
+    /// Scrape-visible per-shard counters (in-process tier only; empty
+    /// with remote ranks — the servers expose their own).
+    shard_live: Vec<Arc<ShardLive>>,
+    /// Ring occupancy probes per tier, retained for `/metrics` and the
+    /// shutdown high-watermark report.
+    ingest_probes: Vec<Arc<dyn RingProbe>>,
+    model_probes: Vec<Arc<dyn RingProbe>>,
+    rank_probes: Vec<Arc<dyn RingProbe>>,
+}
+
+/// A cheap, clonable observation bundle for live `/metrics` exposition:
+/// everything a scrape needs to read from a running coordinator without
+/// touching its threads. Obtained from [`Coordinator::observe`]; all
+/// members are `Arc`-shared views, so the render closure can outlive
+/// individual requests (but not the coordinator's rings' storage — the
+/// probes keep that alive themselves).
+#[derive(Clone)]
+pub struct CoordObs {
+    pub dropped_submits: Arc<AtomicU64>,
+    pub disconnects: Arc<DisconnectCounts>,
+    pub remote: Vec<Arc<RemoteRank>>,
+    pub shard_live: Vec<Arc<ShardLive>>,
+    pub ingest_rings: Vec<Arc<dyn RingProbe>>,
+    pub model_rings: Vec<Arc<dyn RingProbe>>,
+    pub rank_rings: Vec<Arc<dyn RingProbe>>,
+    pub queue_depth: QueueDepthProbe,
 }
 
 /// Cheap clonable handle for runtime cluster resizing (§3.5 live
@@ -336,11 +385,13 @@ impl Coordinator {
         let mut remote: Vec<Arc<RemoteRank>> = Vec::new();
         let mut shard_offsets: Vec<usize> = Vec::new();
         let mut shard_rx_store = Vec::new();
+        let mut rank_probes: Vec<Arc<dyn RingProbe>> = Vec::new();
         let topo = if cfg.remote_ranks.is_empty() {
             let topo = ShardTopology::new(cfg.num_gpus, cfg.rank_shards);
             for _ in 0..topo.num_shards() {
                 let (tx, rx) = ring::<ToRank>(RANK_RING_DEPTH);
                 rx.set_busy_poll(cfg.busy_poll);
+                rank_probes.push(tx.probe());
                 ports.push(RankPort::Local(tx));
                 shard_rx_store.push(rx);
             }
@@ -427,12 +478,15 @@ impl Coordinator {
         let disconnects = Arc::new(DisconnectCounts::default());
 
         let mut shard_handles = Vec::new();
+        let mut shard_live: Vec<Arc<ShardLive>> = Vec::new();
         if cfg.remote_ranks.is_empty() {
             // Free hints exist only for in-process shards; a remote
             // tier's hints live server-side, per session.
             let hints = FreeHints::new(topo.num_shards());
             for (s, rx) in shard_rx_store.into_iter().enumerate() {
                 let range = topo.range(s);
+                let live = Arc::new(ShardLive::default());
+                shard_live.push(live.clone());
                 let shard = RankShard {
                     clock,
                     shard: s,
@@ -441,6 +495,7 @@ impl Coordinator {
                     active: range.start.min(active_end)..range.end.min(active_end),
                     gpus: range,
                     hints: hints.clone(),
+                    live,
                 };
                 let core = cores.assign();
                 shard_handles.push(
@@ -485,6 +540,9 @@ impl Coordinator {
             cfg.busy_poll,
             &mut cores,
         );
+        let ingest_probes: Vec<Arc<dyn RingProbe>> =
+            ingest.txs.iter().map(|tx| tx.probe()).collect();
+        let model_probes = pool.worker_ring_probes();
 
         Ok(Coordinator {
             clock,
@@ -499,6 +557,10 @@ impl Coordinator {
             dropped_submits,
             disconnects,
             liveness,
+            shard_live,
+            ingest_probes,
+            model_probes,
+            rank_probes,
         })
     }
 
@@ -524,6 +586,20 @@ impl Coordinator {
     /// queue-depth signal).
     pub fn queue_depth_probe(&self) -> QueueDepthProbe {
         self.depth.clone()
+    }
+
+    /// Everything a live `/metrics` scrape reads (see [`CoordObs`]).
+    pub fn observe(&self) -> CoordObs {
+        CoordObs {
+            dropped_submits: self.dropped_submits.clone(),
+            disconnects: self.disconnects.clone(),
+            remote: self.remote.clone(),
+            shard_live: self.shard_live.clone(),
+            ingest_rings: self.ingest_probes.clone(),
+            model_rings: self.model_probes.clone(),
+            rank_rings: self.rank_probes.clone(),
+            queue_depth: self.depth.clone(),
+        }
     }
 
     /// Remote rank-server sessions that ended without this coordinator
@@ -565,6 +641,7 @@ impl Coordinator {
     /// the request into `dropped_submits` instead of blocking the
     /// producer.
     pub fn submit(&self, r: Request) {
+        trace::req_event(Stage::Submit, r.id);
         if self.model_txs[r.model.0 as usize]
             .try_send(ToModel::Request(r))
             .is_err()
@@ -580,6 +657,9 @@ impl Coordinator {
     /// request. Same full-queue shed policy as [`Coordinator::submit`],
     /// counting the whole burst.
     pub fn submit_batch(&self, reqs: &mut [Request]) {
+        for r in reqs.iter() {
+            trace::req_event(Stage::Submit, r.id);
+        }
         reqs.sort_by_key(|r| r.model);
         let mut i = 0;
         while i < reqs.len() {
@@ -649,6 +729,9 @@ impl Coordinator {
             rank_reconnects += conn.reconnects();
             rank_fenced_frames += conn.fenced();
         }
+        let hwm = |probes: &[Arc<dyn RingProbe>]| {
+            probes.iter().map(|p| p.high_watermark()).max().unwrap_or(0) as u64
+        };
         let front = FrontendStats {
             processed: worker_stats.processed,
             flush_recomputes: worker_stats.flush_recomputes,
@@ -658,6 +741,9 @@ impl Coordinator {
             rank_disconnect_causes: self.disconnects.snapshot(),
             rank_reconnects,
             rank_fenced_frames,
+            ingest_ring_hwm: hwm(&self.ingest_probes),
+            model_ring_hwm: hwm(&self.model_probes),
+            rank_ring_hwm: hwm(&self.rank_probes),
         };
         (front, stats)
     }

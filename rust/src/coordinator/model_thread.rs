@@ -36,8 +36,9 @@ use crate::coordinator::router::{RankPort, RankRouter, ShardLiveness, ShardTopol
 use crate::core::profile::LatencyProfile;
 use crate::core::time::Micros;
 use crate::core::types::{ModelId, ReqBurst, Request};
+use crate::obs::trace::{self, Stage};
 use crate::util::affinity::{self, CorePlan};
-use crate::util::ring::{ring, RingReceiver, RingSender, TryRecvError};
+use crate::util::ring::{ring, RingProbe, RingReceiver, RingSender, TryRecvError};
 
 /// What one worker did over its lifetime; merged at shutdown into
 /// [`crate::coordinator::FrontendStats`].
@@ -209,6 +210,7 @@ impl ModelWorker {
                 self.queued += 1;
                 let si = self.slot_of(r.model);
                 debug_assert_eq!(self.slots[si].model, r.model, "slot layout broken");
+                trace::req_event(Stage::WorkerRecv, r.id);
                 self.slots[si].queue.push(r);
                 self.mark_dirty(si, dirty);
             }
@@ -218,6 +220,7 @@ impl ModelWorker {
                 let si = self.slot_of(model);
                 for &r in burst.iter() {
                     debug_assert_eq!(r.model, model, "mixed-model burst");
+                    trace::req_event(Stage::WorkerRecv, r.id);
                     self.slots[si].queue.push(r);
                 }
                 if !burst.is_empty() {
@@ -238,6 +241,10 @@ impl ModelWorker {
                         .saturating_add(slot.profile.latency(c.size))
                         .saturating_add(self.exec_margin);
                     let dispatched = batch.len() as u64;
+                    for r in batch.iter() {
+                        trace::req_event(Stage::GrantRecv, r.id);
+                        trace::req_event(Stage::Dispatch, r.id);
+                    }
                     let _ = self.backends[gpu.0 as usize].send(ToBackend::Execute {
                         model,
                         requests: batch,
@@ -460,6 +467,12 @@ impl ModelWorkerPool {
     /// Clonable live backlog view (see [`QueueDepthProbe`]).
     pub fn queue_depth_probe(&self) -> QueueDepthProbe {
         QueueDepthProbe(self.depth.clone())
+    }
+
+    /// One occupancy probe per worker inbox ring (for `/metrics`; see
+    /// [`crate::util::ring::RingProbe`]).
+    pub fn worker_ring_probes(&self) -> Vec<std::sync::Arc<dyn RingProbe>> {
+        self.worker_txs.iter().map(|tx| tx.probe()).collect()
     }
 
     /// One sender per model (clones of the owning worker's inbox) for

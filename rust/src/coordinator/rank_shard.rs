@@ -17,7 +17,9 @@
 //! GPUs from the top of the id space.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::clock::Clock;
@@ -25,6 +27,7 @@ use crate::coordinator::messages::{CandWindow, ToModel, ToRank};
 use crate::coordinator::router::FreeHints;
 use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId};
+use crate::obs::trace::{self, Stage};
 use crate::util::ring::{RecvTimeoutError, RingReceiver, RingSender, TryRecvError};
 use crate::util::stats::Histogram;
 
@@ -41,6 +44,28 @@ const LAT_CAP_US: u64 = 1_000_000;
 /// 8 MB per shard; 10 µs granularity bounds it to ~100 kB.
 const LAT_BUCKET_US: u64 = 10;
 
+/// Scrape-visible per-shard counters, shared between a running shard
+/// and the `/metrics` exposition (the end-of-run [`ShardStats`] are
+/// only available at shutdown). Published once per drain pass —
+/// batch-rate, not per-grant.
+#[derive(Debug, Default)]
+pub struct ShardLive {
+    pub grants: AtomicU64,
+    pub mis_steers: AtomicU64,
+}
+
+impl ShardLive {
+    pub fn grants(&self) -> u64 {
+        // relaxed: advisory scrape counter, no payload rides on it.
+        self.grants.load(Ordering::Relaxed)
+    }
+
+    pub fn mis_steers(&self) -> u64 {
+        // relaxed: advisory scrape counter, no payload rides on it.
+        self.mis_steers.load(Ordering::Relaxed)
+    }
+}
+
 /// What one shard did over its lifetime.
 #[derive(Clone, Debug)]
 pub struct ShardStats {
@@ -50,6 +75,9 @@ pub struct ShardStats {
     /// free hint was stale. The ROADMAP's "measure mis-steer rates"
     /// item; surfaced in the fig13 scalability report.
     pub mis_steers: u64,
+    /// Inbox-ring high-watermark occupancy (max across merged shards):
+    /// how close the control-traffic ring came to its bound.
+    pub inbox_hwm: u64,
     /// Histogram of grant latency in `LAT_BUCKET_US`-µs buckets: how
     /// long a candidate's window had been open (past `exec`) when the
     /// GPU was granted.
@@ -61,6 +89,7 @@ impl ShardStats {
         ShardStats {
             grants: 0,
             mis_steers: 0,
+            inbox_hwm: 0,
             grant_lat: Histogram::new(),
         }
     }
@@ -68,6 +97,7 @@ impl ShardStats {
     pub fn merge(&mut self, other: &ShardStats) {
         self.grants += other.grants;
         self.mis_steers += other.mis_steers;
+        self.inbox_hwm = self.inbox_hwm.max(other.inbox_hwm);
         self.grant_lat.merge(&other.grant_lat);
     }
 
@@ -360,6 +390,9 @@ pub struct RankShard {
     pub active: std::ops::Range<u32>,
     /// Shared free-GPU counters for overflow steering.
     pub hints: FreeHints,
+    /// Scrape-visible counters (see [`ShardLive`]); the spawner keeps
+    /// the other end for `/metrics`.
+    pub live: Arc<ShardLive>,
 }
 
 impl RankShard {
@@ -372,6 +405,7 @@ impl RankShard {
             gpus,
             active,
             hints,
+            live,
         } = self;
         let num_shards = hints.num_shards();
         let mut st = State::new(gpus, active);
@@ -463,6 +497,7 @@ impl RankShard {
                 st.ready.remove(&(latest, m));
                 st.pending.remove(&(cs.win.exec, m));
                 stats.grants += 1;
+                trace::model_event(Stage::RankGrant, m);
                 let waited = now.saturating_sub(cs.win.exec);
                 stats
                     .grant_lat
@@ -476,6 +511,9 @@ impl RankShard {
             }
 
             hints.publish(shard, st.free.len());
+            // relaxed: advisory scrape counters, published once per pass.
+            live.grants.store(stats.grants, Ordering::Relaxed);
+            live.mis_steers.store(stats.mis_steers, Ordering::Relaxed);
 
             // 5. Overflow steering: GPU-starved candidates migrate to
             //    the lowest sibling shard advertising free capacity
@@ -541,6 +579,7 @@ impl RankShard {
         }
         // Stop attracting overflow traffic once this shard is gone.
         hints.publish(shard, 0);
+        stats.inbox_hwm = inbox.high_watermark() as u64;
         stats
     }
 }
@@ -580,6 +619,7 @@ mod tests {
             active: gpus.clone(),
             gpus,
             hints,
+            live: Arc::new(ShardLive::default()),
         };
         let h = std::thread::spawn(move || rs.run());
         (clock, rank_tx, model_rxs, h)
@@ -860,6 +900,7 @@ mod tests {
             gpus: 0..2,
             active: 0..0, // all capacity starts detached
             hints,
+            live: Arc::new(ShardLive::default()),
         };
         let h = std::thread::spawn(move || rs.run());
         let far = clock.now() + ms(500.0);

@@ -24,6 +24,7 @@ use crate::core::time::Micros;
 use crate::core::types::{GpuId, ModelId};
 use crate::net::client::RemoteRank;
 use crate::net::codec::WireToRank;
+use crate::obs::trace::{self, Stage};
 use crate::util::ring::RingSender;
 use crate::util::shim::{Fabric, RealFabric, ShimAtomic};
 
@@ -504,6 +505,9 @@ impl RankRouter {
             seq: self.seq,
             hops,
         });
+        if res.is_ok() && cand.is_some() {
+            trace::model_event(Stage::CandReg, self.model);
+        }
         self.last_sent = if res.is_ok() { Some(cand) } else { None };
         res
     }

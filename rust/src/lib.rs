@@ -32,6 +32,7 @@ pub mod harness;
 pub mod lint;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod scheduler;

@@ -21,6 +21,9 @@
 //! - `relaxed-ordering-reason` — every `Ordering::Relaxed` on the
 //!   lock-free fabric states inline why no happens-before edge is
 //!   needed (`// relaxed:` comment).
+//! - `no-bare-eprintln` — no raw `eprintln!`/`println!` in
+//!   `coordinator/` or `net/`; diagnostics go through the rate-limited
+//!   logger (`obs/log.rs`).
 //!
 //! Findings can be silenced inline with
 //! `// lint:allow(rule-name): reason` — on the offending line, or on a

@@ -4,6 +4,7 @@ pub mod float_free;
 pub mod hot_path_channel;
 pub mod lock_send;
 pub mod micros_arith;
+pub mod no_bare_eprintln;
 pub mod panic_free;
 pub mod relaxed_reason;
 pub mod unsafe_safety;
@@ -30,6 +31,7 @@ pub fn all() -> Vec<Box<dyn Rule>> {
         Box::new(hot_path_channel::HotPathChannel),
         Box::new(unsafe_safety::UnsafeNeedsSafety),
         Box::new(relaxed_reason::RelaxedOrderingReason),
+        Box::new(no_bare_eprintln::NoBareEprintln),
     ]
 }
 

@@ -1,0 +1,84 @@
+//! `no-bare-eprintln` — no raw `eprintln!`/`println!` in
+//! `coordinator/` or `net/` outside `#[cfg(test)]` code.
+//!
+//! PR 10 routed every diagnostic on the serving path through the
+//! rate-limited leveled logger (`obs/log.rs`): `SYMPHONY_LOG` level
+//! filtering plus a per-call-site token bucket, so a reconnect storm
+//! or a flapping peer emits a bounded number of lines instead of
+//! filling the disk at wire rate. The bug class this guards: a later
+//! change drops a bare `eprintln!` into a per-frame or per-session
+//! path and the next fault injection run turns the log into the
+//! bottleneck (stderr writes serialize on a lock, so a hot print site
+//! is also a hidden synchronization point).
+//!
+//! Mechanics: an `eprintln` or `println` ident immediately followed by
+//! `!` in any file under `coordinator/` or `net/` is a finding, except
+//! in `#[cfg(test)]` code. Use `log_error!`/`log_warn!`/`log_info!`/
+//! `log_debug!` instead; a deliberate raw print (e.g. machine-parsed
+//! stdout) carries a named `// lint:allow(no-bare-eprintln): reason`
+//! suppression.
+
+use super::super::lexer::TokKind;
+use super::super::source::{SourceFile, SourceTree};
+use super::super::Finding;
+use super::Rule;
+
+pub struct NoBareEprintln;
+
+const RULE: &str = "no-bare-eprintln";
+
+impl Rule for NoBareEprintln {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn check(&self, tree: &SourceTree, out: &mut Vec<Finding>) {
+        for f in &tree.files {
+            if !in_scope(&f.path) {
+                continue;
+            }
+            check_file(f, out);
+        }
+    }
+}
+
+/// Is `path` inside a `coordinator/` or `net/` directory component?
+fn in_scope(path: &str) -> bool {
+    for dir in ["coordinator/", "net/"] {
+        if path.starts_with(dir) || path.contains(&format!("/{dir}")) {
+            return true;
+        }
+    }
+    false
+}
+
+fn check_file(f: &SourceFile, out: &mut Vec<Finding>) {
+    for ci in 0..f.clen() {
+        if f.ckind(ci) != Some(TokKind::Ident) {
+            continue;
+        }
+        let t = f.ctext(ci);
+        if t != "eprintln" && t != "println" {
+            continue;
+        }
+        // Only the macro invocation `name!(..)` — an ident that merely
+        // shares the name (a local, a doc mention) is not a print.
+        if f.ctext(ci + 1) != "!" {
+            continue;
+        }
+        if f.in_test(ci) {
+            continue;
+        }
+        out.push(Finding {
+            file: f.path.clone(),
+            line: f.cline(ci),
+            rule: RULE,
+            message: format!(
+                "bare `{t}!` on the serving path — diagnostics in coordinator/ and \
+                 net/ go through the rate-limited logger (log_error!/log_warn!/\
+                 log_info!/log_debug!, obs/log.rs); a deliberate raw print needs \
+                 a named lint:allow"
+            ),
+        });
+    }
+}

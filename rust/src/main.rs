@@ -65,10 +65,12 @@ fn usage() {
                  [--remote-ranks host:port,..] [--assert-grants]\n  \
                  [--busy-poll] [--pin-cores]\n  \
                  [--fault-plan SPEC] [--expect-disconnects N]\n  \
+                 [--trace-out FILE] [--trace-sample N] [--metrics-listen ADDR]\n  \
          symphony serve --autoscale [--initial-gpus N] [--min-gpus N] [--max-gpus N]\n  \
                  [--epoch-ms E] [--backlog-per-gpu B] [--rates R1,R2,..] [--assert-scale]\n  \
          symphony rank-server [--listen ADDR] [--shards R] [--gpu-range LO..HI]\n  \
                  [--max-sessions N] [--busy-poll] [--pin-cores] [--fault-plan SPEC]\n  \
+                 [--metrics-listen ADDR]\n  \
          symphony zoo [1080ti|a100]\n  symphony analytic <model> <slo_ms> <gpus>\n  \
          symphony partition [n_models] [parts] [budget_ms]\n  \
          symphony lint [--root rust/src] [--rule NAME]\n  \
@@ -348,6 +350,9 @@ fn cmd_serve(rest: &[String]) {
         pin_cores: f.contains_key("pin-cores"),
         seed: 7,
         fault_plan: parse_fault_plan(&f),
+        trace_sample: getu(&f, "trace-sample", 0) as u64,
+        trace_out: f.get("trace-out").map(std::path::PathBuf::from),
+        metrics_listen: f.get("metrics-listen").cloned(),
     }) {
         Ok(r) => r,
         Err(e) => {
@@ -356,6 +361,18 @@ fn cmd_serve(rest: &[String]) {
         }
     };
     println!("{report:#?}");
+    if !report.hop_breakdown.is_empty() {
+        let mut t = symphony::util::table::Table::new(vec!["hop", "count", "p50_us", "p99_us"]);
+        for h in &report.hop_breakdown {
+            t.row(vec![
+                h.hop.clone(),
+                h.count.to_string(),
+                h.p50_us.to_string(),
+                h.p99_us.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
     if !report.timeline.is_empty() {
         let mut t = symphony::util::table::Table::new(vec![
             "t_s", "offered_rps", "active_gpus", "bad_rate", "busy", "delta",
@@ -464,6 +481,7 @@ fn cmd_rank_server(rest: &[String]) {
             busy_poll: f.contains_key("busy-poll"),
             pin_cores: f.contains_key("pin-cores"),
             fault_plan: parse_fault_plan(&f),
+            metrics_listen: f.get("metrics-listen").cloned(),
         },
     ) {
         Ok(s) => s,

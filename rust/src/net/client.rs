@@ -68,7 +68,9 @@ use crate::net::faults::FaultPlan;
 use crate::net::transport::{
     connect_retry, spawn_writer_with, FrameReader, FrameSender, SendFail, WriterStats,
 };
+use crate::obs::trace::{self, Stage};
 use crate::util::error::{Context, Result};
+use crate::{log_error, log_info, log_warn};
 use crate::util::ring::RingSender;
 use crate::util::sync::relock;
 
@@ -414,7 +416,7 @@ impl RemoteRank {
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("rank-server {}: cloning stream failed: {e}", self.peer);
+                log_error!("rank-server {}: cloning stream failed: {e}", self.peer);
                 self.fail_session(DisconnectCause::Io, session_epoch);
                 return;
             }
@@ -430,7 +432,7 @@ impl RemoteRank {
         match h {
             Ok(h) => relock(&self.threads).push(h),
             Err(e) => {
-                eprintln!("rank-server {}: spawning reader failed: {e}", self.peer);
+                log_error!("rank-server {}: spawning reader failed: {e}", self.peer);
                 self.fail_session(DisconnectCause::Io, session_epoch);
             }
         }
@@ -481,7 +483,7 @@ impl RemoteRank {
             if let Some(w) = &wiring {
                 w.disconnects.count(cause);
             }
-            eprintln!(
+            log_warn!(
                 "rank-server {}: session epoch {observed_epoch} failed ({cause}); {}",
                 self.peer,
                 if reconnect {
@@ -504,7 +506,7 @@ impl RemoteRank {
         match h {
             Ok(h) => relock(&self.threads).push(h),
             Err(e) => {
-                eprintln!(
+                log_error!(
                     "rank-server {}: cannot spawn dialer ({e}); rank ports closed",
                     self.peer
                 );
@@ -542,7 +544,7 @@ impl RemoteRank {
             if !declared_dead && started.elapsed() >= self.policy.dead_after {
                 declared_dead = true;
                 wiring.liveness.set_range_live(shards.clone(), false);
-                eprintln!(
+                log_warn!(
                     "rank-server {}: unreachable for {:?}; shards {}..{} declared dead \
                      (candidates migrate to survivors; capacity re-tiles)",
                     self.peer, self.policy.dead_after, shards.start, shards.end
@@ -566,7 +568,7 @@ impl RemoteRank {
                             return;
                         }
                     } else {
-                        eprintln!(
+                        log_warn!(
                             "rank-server {}: reconnected but topology changed \
                              ({} shards over {}..{}, had {} over {}..{}); retrying",
                             self.peer,
@@ -580,14 +582,14 @@ impl RemoteRank {
                     }
                 }
                 Err(e) => {
-                    // First failure and every 16th after: enough to
-                    // trace a long outage without drowning the log.
-                    if attempts == 1 || attempts % 16 == 0 {
-                        eprintln!(
-                            "rank-server {}: reconnect attempt {attempts} failed: {e:#}",
-                            self.peer
-                        );
-                    }
+                    // The logger's per-call-site token bucket replaces
+                    // the old hand-rolled `attempts % 16` throttle: a
+                    // long outage still traces, without drowning the
+                    // log (the suppressed count says how long).
+                    log_warn!(
+                        "rank-server {}: reconnect attempt {attempts} failed: {e:#}",
+                        self.peer
+                    );
                 }
             }
             // Sliced sleep so close() stops the dialer within ~10ms.
@@ -662,7 +664,7 @@ impl RemoteRank {
                 model: ModelId(m as u32),
             });
         }
-        eprintln!(
+        log_info!(
             "rank-server {}: reconnected (client epoch {epoch}, server session {})",
             self.peer, info.session
         );
@@ -705,7 +707,7 @@ impl RemoteRank {
                     match codec::decode_down(frame) {
                         Ok(msg) => {
                             if let Err(why) = self.dispatch(msg, wiring) {
-                                eprintln!(
+                                log_error!(
                                     "rank-server {}: protocol violation: {why}",
                                     self.peer
                                 );
@@ -713,7 +715,7 @@ impl RemoteRank {
                             }
                         }
                         Err(e) => {
-                            eprintln!("rank-server {}: protocol error: {e}", self.peer);
+                            log_error!("rank-server {}: protocol error: {e}", self.peer);
                             return Some(DisconnectCause::Protocol);
                         }
                     }
@@ -731,7 +733,7 @@ impl RemoteRank {
                     {
                         return None;
                     }
-                    eprintln!("rank-server {}: read error: {e}", self.peer);
+                    log_error!("rank-server {}: read error: {e}", self.peer);
                     return Some(DisconnectCause::Io);
                 }
             }
@@ -754,6 +756,7 @@ impl RemoteRank {
                     return Err(format!("grant for unknown model {}", model.0));
                 };
                 self.grants.fetch_add(1, Ordering::Relaxed);
+                trace::model_event(Stage::WireGrantRx, model);
                 let _ = tx.send(ToModel::Granted { model, gpu });
             }
             WireFromRank::Revalidate { model } => {
@@ -826,6 +829,14 @@ impl RemoteRank {
                 ConnState::Closed => return Err(PortClosed),
             }
         };
+        if let WireToRank::Candidate {
+            model,
+            cand: Some(_),
+            ..
+        } = msg
+        {
+            trace::model_event(Stage::WireCandTx, *model);
+        }
         let mut buf = Vec::with_capacity(48);
         codec::encode_up(shard, msg, &mut buf);
         match sender.send(buf) {

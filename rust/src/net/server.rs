@@ -34,23 +34,28 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::messages::{ToModel, ToRank};
 use crate::coordinator::router::FreeHints;
 use crate::coordinator::{
-    Clock, RankShard, ShardStats, ShardTopology, MODEL_RING_DEPTH, RANK_RING_DEPTH,
+    Clock, RankShard, ShardLive, ShardStats, ShardTopology, MODEL_RING_DEPTH, RANK_RING_DEPTH,
 };
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
 use crate::net::codec::{self, ServerPreamble, WireFromRank, WireToRank, HELLO_LEN};
 use crate::net::faults::FaultPlan;
 use crate::net::transport::{spawn_writer_with, FrameReader, FrameSender};
-use std::sync::Arc;
+use crate::obs::http;
+use crate::obs::prom::Prom;
 use crate::util::affinity::{self, CorePlan};
 use crate::util::error::{Context, Result};
 use crate::util::ring::{ring, RingReceiver};
+use crate::util::sync::relock;
+use crate::{log_error, log_info};
 
 /// Most models one session may address (the hello's `n_models` sizes
 /// per-shard sender tables, so this wire-supplied number must be
@@ -85,6 +90,104 @@ pub struct RankServerConfig {
     /// CI kills a live session mid-run to exercise the client's
     /// reconnect path without OS-level tricks.
     pub fault_plan: Arc<FaultPlan>,
+    /// Serve Prometheus text exposition on this address
+    /// (`--metrics-listen ADDR`); `None` (the default) runs no
+    /// listener.
+    pub metrics_listen: Option<String>,
+}
+
+/// Scrape-visible server-side counters, shared by the accept loop,
+/// every live session (which registers its shards' [`ShardLive`]), and
+/// the `/metrics` listener. Closed sessions fold their final
+/// [`ShardStats`] into the cumulative counters so the exposed totals
+/// are monotone across session churn.
+#[derive(Default)]
+pub struct ServerMetrics {
+    /// Sessions accepted over the server's lifetime.
+    sessions: AtomicU64,
+    /// Sessions whose hello carried a bumped epoch — i.e. successful
+    /// client reconnects, as observed server-side.
+    reconnected_sessions: AtomicU64,
+    /// Grants / mis-steers from already-closed sessions.
+    closed_grants: AtomicU64,
+    closed_mis_steers: AtomicU64,
+    /// Per-shard live counters of open sessions, keyed by session id.
+    live: Mutex<Vec<(u64, Vec<Arc<ShardLive>>)>>,
+}
+
+impl ServerMetrics {
+    fn adopt(&self, session: u64, shards: Vec<Arc<ShardLive>>) {
+        relock(&self.live).push((session, shards));
+    }
+
+    /// Session teardown: swap the live counters for the authoritative
+    /// end-of-run stats.
+    fn fold(&self, session: u64, stats: &ShardStats) {
+        relock(&self.live).retain(|(s, _)| *s != session);
+        self.closed_grants.fetch_add(stats.grants, Ordering::Relaxed);
+        self.closed_mis_steers
+            .fetch_add(stats.mis_steers, Ordering::Relaxed);
+    }
+
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    pub fn reconnected_sessions(&self) -> u64 {
+        self.reconnected_sessions.load(Ordering::Relaxed)
+    }
+
+    pub fn grants(&self) -> u64 {
+        let live: u64 = relock(&self.live)
+            .iter()
+            .flat_map(|(_, shards)| shards.iter())
+            .map(|s| s.grants())
+            .sum();
+        self.closed_grants.load(Ordering::Relaxed) + live
+    }
+
+    pub fn mis_steers(&self) -> u64 {
+        let live: u64 = relock(&self.live)
+            .iter()
+            .flat_map(|(_, shards)| shards.iter())
+            .map(|s| s.mis_steers())
+            .sum();
+        self.closed_mis_steers.load(Ordering::Relaxed) + live
+    }
+
+    /// The server's Prometheus exposition page.
+    pub fn render(&self) -> String {
+        let mut p = Prom::new();
+        p.family(
+            "symphony_server_sessions_total",
+            "counter",
+            "Sessions accepted over the server's lifetime.",
+        );
+        p.sample("symphony_server_sessions_total", &[], self.sessions());
+        p.family(
+            "symphony_server_reconnected_sessions_total",
+            "counter",
+            "Accepted sessions whose hello carried a bumped client epoch (reconnects).",
+        );
+        p.sample(
+            "symphony_server_reconnected_sessions_total",
+            &[],
+            self.reconnected_sessions(),
+        );
+        p.family(
+            "symphony_server_grants_total",
+            "counter",
+            "GPU grants issued across all sessions (live + closed).",
+        );
+        p.sample("symphony_server_grants_total", &[], self.grants());
+        p.family(
+            "symphony_server_mis_steers_total",
+            "counter",
+            "Overflow-routed candidates that arrived on a stale free hint.",
+        );
+        p.sample("symphony_server_mis_steers_total", &[], self.mis_steers());
+        p.finish()
+    }
 }
 
 /// A bound rank server (bind and accept are split so callers can learn
@@ -120,13 +223,26 @@ impl RankServer {
     /// fatal to the server.
     pub fn run(self) -> Result<()> {
         let shards = self.num_shards();
-        println!(
+        log_info!(
             "rank-server: {} shards over GPUs {}..{} listening on {}",
             shards,
             self.cfg.gpus.start,
             self.cfg.gpus.end,
             self.local_addr()
         );
+        let metrics = Arc::new(ServerMetrics::default());
+        // The `/metrics` listener lives exactly as long as the accept
+        // loop: dropping the guard at return unblocks its thread.
+        let _metrics_srv = match &self.cfg.metrics_listen {
+            Some(addr) => {
+                let m = metrics.clone();
+                let srv = http::spawn(addr, Arc::new(move || m.render()))
+                    .with_context(|| format!("binding metrics listener on {addr}"))?;
+                log_info!("rank-server: metrics on http://{}/metrics", srv.addr());
+                Some(srv)
+            }
+            None => None,
+        };
         let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut accepted = 0u64;
         for stream in self.listener.incoming() {
@@ -137,7 +253,7 @@ impl RankServer {
             let stream = match stream {
                 Ok(s) => s,
                 Err(e) => {
-                    eprintln!("rank-server: accept failed: {e}");
+                    log_error!("rank-server: accept failed: {e}");
                     continue;
                 }
             };
@@ -149,15 +265,24 @@ impl RankServer {
             // `accepted` doubles as the server-side session counter the
             // preamble advertises (1 on the first accepted session).
             let session = accepted;
+            metrics.sessions.fetch_add(1, Ordering::Relaxed);
             let gpus = self.cfg.gpus.clone();
             let (busy_poll, pin_cores) = (self.cfg.busy_poll, self.cfg.pin_cores);
             let faults = self.cfg.fault_plan.clone();
+            let session_metrics = metrics.clone();
             handles.push(std::thread::Builder::new().name("rank-session".into()).spawn(
                 move || {
-                    if let Err(e) =
-                        serve_session(stream, session, shards, gpus, busy_poll, pin_cores, faults)
-                    {
-                        eprintln!("rank-server: session failed: {e:#}");
+                    if let Err(e) = serve_session(
+                        stream,
+                        session,
+                        shards,
+                        gpus,
+                        busy_poll,
+                        pin_cores,
+                        faults,
+                        session_metrics,
+                    ) {
+                        log_error!("rank-server: session failed: {e:#}");
                     }
                 },
             )?);
@@ -189,6 +314,7 @@ fn serve_session(
     busy_poll: bool,
     pin_cores: bool,
     faults: Arc<FaultPlan>,
+    metrics: Arc<ServerMetrics>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     let peer = stream
@@ -231,7 +357,8 @@ fn serve_session(
     // hello's one-way latency — budgeted by the client's net_bound).
     let clock = Clock::starting_at(Micros(hello.now_us));
     if hello.epoch > 0 {
-        println!(
+        metrics.reconnected_sessions.fetch_add(1, Ordering::Relaxed);
+        log_info!(
             "rank-server: {peer} reconnected (client epoch {}, server session {session})",
             hello.epoch
         );
@@ -271,11 +398,14 @@ fn serve_session(
     };
     let mut shard_txs = Vec::with_capacity(shards);
     let mut shard_handles = Vec::with_capacity(shards);
+    let mut shard_live = Vec::with_capacity(shards);
     for s in 0..shards {
         let (tx, rx) = ring::<ToRank>(RANK_RING_DEPTH);
         rx.set_busy_poll(busy_poll);
         shard_txs.push(tx);
         let range = shard_range(&gpus, shards, s);
+        let live = Arc::new(ShardLive::default());
+        shard_live.push(live.clone());
         let shard = RankShard {
             clock,
             shard: s,
@@ -284,6 +414,7 @@ fn serve_session(
             active: range.clone(),
             gpus: range,
             hints: hints.clone(),
+            live,
         };
         let core = cores.assign();
         shard_handles.push(
@@ -295,6 +426,9 @@ fn serve_session(
                 })?,
         );
     }
+    // From here the session is scrape-visible: its shard counters show
+    // up in `/metrics` totals until `fold` swaps them for final stats.
+    metrics.adopt(session, shard_live);
 
     // Up path: this thread is the session reader. A protocol violation
     // (bad frame, out-of-range shard/model/GPU) kills the session — a
@@ -358,7 +492,8 @@ fn serve_session(
     let _ = ack_conv.join();
     drop(sender);
     let _ = writer_h.join();
-    println!(
+    metrics.fold(session, &stats);
+    log_info!(
         "rank-server: session {peer} closed: frames_in={frames_in} grants={} \
          mis_steers={} p99_grant_latency_us={}",
         stats.grants,

@@ -1,0 +1,174 @@
+//! A deliberately tiny std-only HTTP/1.1 listener for `/metrics`.
+//!
+//! Scope: serve Prometheus scrapes from one render closure. One accept
+//! loop thread, one connection at a time, read-timeout bounded, no
+//! keep-alive (`Connection: close`). This is not a web server — a
+//! scraper polls it every few seconds, and anything fancier (thread
+//! pools, TLS, HTTP/2) belongs to the cluster's sidecar, not to the
+//! serving process. Shutdown unblocks the accept loop with a
+//! self-connect, the same trick the harness uses for blocking
+//! listeners elsewhere.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What the listener serves: a fresh exposition page per scrape.
+pub type Render = Arc<dyn Fn() -> String + Send + Sync>;
+
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Bind `listen` (e.g. `127.0.0.1:9184`, port 0 for ephemeral) and
+/// serve `render()` on every `GET /metrics`.
+pub fn spawn(listen: &str, render: Render) -> std::io::Result<MetricsServer> {
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("obs-metrics".into())
+        .spawn(move || accept_loop(listener, render, stop2))?;
+    Ok(MetricsServer {
+        stop,
+        addr,
+        handle: Some(handle),
+    })
+}
+
+impl MetricsServer {
+    /// The bound address (resolves port 0 for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        let Some(handle) = self.handle.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept; a wildcard bind answers on loopback.
+        let mut poke = self.addr;
+        if poke.ip().is_unspecified() {
+            poke.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(200));
+        let _ = handle.join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, render: Render, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Ok(mut stream) = conn else {
+            // Transient accept failure (ECONNABORTED, fd pressure):
+            // keep serving, same policy as the rank server.
+            continue;
+        };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+        let _ = serve_one(&mut stream, &render);
+    }
+}
+
+fn serve_one(stream: &mut TcpStream, render: &Render) -> std::io::Result<()> {
+    // Read until the end of the request head (or a 4 KiB cap — a
+    // scrape's GET has no body worth waiting for).
+    let mut head = [0u8; 4096];
+    let mut n = 0usize;
+    loop {
+        if n == head.len() {
+            break;
+        }
+        let read = match stream.read(&mut head[n..]) {
+            Ok(0) => break,
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        n += read;
+        if head[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let request = String::from_utf8_lossy(&head[..n]);
+    let path = request
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, body) = if path == "/metrics" || path == "/" {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", String::from("not found\n"))
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn scrape(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").expect("request");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("response");
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_elsewhere() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let render: Render = Arc::new(move || {
+            format!(
+                "symphony_scrapes_total {}\n",
+                h2.fetch_add(1, Ordering::Relaxed) + 1
+            )
+        });
+        let srv = spawn("127.0.0.1:0", render).expect("bind");
+        let addr = srv.addr();
+        let one = scrape(addr, "/metrics");
+        assert!(one.starts_with("HTTP/1.1 200 OK\r\n"), "{one}");
+        assert!(one.contains("symphony_scrapes_total 1"), "{one}");
+        let two = scrape(addr, "/metrics");
+        assert!(two.contains("symphony_scrapes_total 2"), "{two}");
+        let miss = scrape(addr, "/nope");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_promptly() {
+        let render: Render = Arc::new(|| String::from("x 1\n"));
+        let srv = spawn("127.0.0.1:0", render).expect("bind");
+        let t0 = std::time::Instant::now();
+        srv.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+}

@@ -1,0 +1,264 @@
+//! Rate-limited leveled logging: `log_error!` / `log_warn!` /
+//! `log_info!` / `log_debug!`.
+//!
+//! Two problems with the raw `eprintln!` calls these macros replace
+//! (the `no-bare-eprintln` lint rule now keeps them out of
+//! `coordinator/` and `net/`):
+//!
+//! * **Unbounded spam.** A flapping peer under fault injection drives
+//!   the read/write/dial loops through their error paths thousands of
+//!   times per second; the dial loop even grew a hand-rolled
+//!   `attempts % 16` throttle. Every call site now carries its own
+//!   token bucket ([`Site`]): a burst of [`BURST`] lines passes, then
+//!   the site is limited to [`REFILL_PER_SEC`] lines/second, and the
+//!   next line that does print says how many were suppressed —
+//!   evidence of the storm without the storm.
+//! * **No levels.** `SYMPHONY_LOG` (`off`, `error`, `warn`, `info`,
+//!   `debug`; default `info`) filters by severity, read once per
+//!   process.
+//!
+//! The macros expand to a per-call-site `static Site` plus one call
+//! into [`log`] — no allocation when the level is filtered or the
+//! bucket is dry, and the token bucket itself is three relaxed atomics
+//! (ordering is irrelevant: the worst race double-prints or
+//! double-counts one line of stderr).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Lines a call site may burst before the per-second limit kicks in.
+pub const BURST: u64 = 8;
+/// Sustained per-call-site rate once the burst is spent.
+pub const REFILL_PER_SEC: u64 = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Max level that prints; -1 silences everything (`SYMPHONY_LOG=off`).
+static MAX_LEVEL: OnceLock<i8> = OnceLock::new();
+static LOG_ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+fn max_level() -> i8 {
+    *MAX_LEVEL.get_or_init(|| parse_level(std::env::var("SYMPHONY_LOG").ok().as_deref()))
+}
+
+fn parse_level(v: Option<&str>) -> i8 {
+    match v.map(str::trim).map(str::to_ascii_lowercase).as_deref() {
+        Some("off") | Some("none") => -1,
+        Some("error") => Level::Error as i8,
+        Some("warn") | Some("warning") => Level::Warn as i8,
+        Some("debug") | Some("trace") => Level::Debug as i8,
+        // Unrecognized values (and unset) keep the default.
+        _ => Level::Info as i8,
+    }
+}
+
+pub fn level_enabled(level: Level) -> bool {
+    (level as i8) <= max_level()
+}
+
+fn now_ms() -> u64 {
+    LOG_ORIGIN.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Per-call-site token bucket. `const`-constructible so the logging
+/// macros can declare one `static` per expansion.
+pub struct Site {
+    /// ms timestamp (process origin) of the last whole-second refill.
+    last_refill_ms: AtomicU64,
+    tokens: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl Site {
+    pub const fn new() -> Self {
+        Site {
+            last_refill_ms: AtomicU64::new(0),
+            tokens: AtomicU64::new(BURST),
+            suppressed: AtomicU64::new(0),
+        }
+    }
+
+    /// Token-bucket admission at time `now_ms`. `Some(n)` means print
+    /// (with `n` lines suppressed since the site last printed); `None`
+    /// means suppress. Pure over its inputs, so tests drive it with a
+    /// synthetic clock.
+    pub fn admit(&self, now_ms: u64) -> Option<u64> {
+        let last = self.last_refill_ms.load(Ordering::Relaxed);
+        if now_ms > last {
+            let gained = (now_ms - last) / 1000 * REFILL_PER_SEC;
+            if gained > 0 {
+                let advanced = last + (gained / REFILL_PER_SEC) * 1000;
+                // One racer wins the refill window and credits the
+                // bucket; losers just try again next call.
+                if self
+                    .last_refill_ms
+                    .compare_exchange(last, advanced, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    let _ = self.tokens.fetch_update(
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                        |t| Some((t + gained).min(BURST)),
+                    );
+                }
+            }
+        }
+        if self
+            .tokens
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| t.checked_sub(1))
+            .is_ok()
+        {
+            Some(self.suppressed.swap(0, Ordering::Relaxed))
+        } else {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+}
+
+impl Default for Site {
+    fn default() -> Self {
+        Site::new()
+    }
+}
+
+/// The macro target: level filter, then token-bucket admission, then
+/// one stderr line (with the suppressed count when the site was
+/// recently dry).
+pub fn log(level: Level, site: &Site, args: std::fmt::Arguments<'_>) {
+    if !level_enabled(level) {
+        return;
+    }
+    match site.admit(now_ms()) {
+        Some(0) => eprintln!("[{}] {args}", level.tag()),
+        Some(n) => eprintln!("[{}] {args} ({n} similar lines suppressed)", level.tag()),
+        None => {}
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {{
+        static __SITE: $crate::obs::log::Site = $crate::obs::log::Site::new();
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Error,
+            &__SITE,
+            ::core::format_args!($($arg)*),
+        );
+    }};
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {{
+        static __SITE: $crate::obs::log::Site = $crate::obs::log::Site::new();
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Warn,
+            &__SITE,
+            ::core::format_args!($($arg)*),
+        );
+    }};
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {{
+        static __SITE: $crate::obs::log::Site = $crate::obs::log::Site::new();
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Info,
+            &__SITE,
+            ::core::format_args!($($arg)*),
+        );
+    }};
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {{
+        static __SITE: $crate::obs::log::Site = $crate::obs::log::Site::new();
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Debug,
+            &__SITE,
+            ::core::format_args!($($arg)*),
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_suppress_then_refill_with_count() {
+        let site = Site::new();
+        // The full burst passes, nothing suppressed yet.
+        for i in 0..BURST {
+            assert_eq!(site.admit(0), Some(0), "burst line {i}");
+        }
+        // Bucket dry: the next 5 lines are suppressed.
+        for _ in 0..5 {
+            assert_eq!(site.admit(10), None);
+        }
+        // One second later: REFILL_PER_SEC tokens return, and the first
+        // admitted line reports everything suppressed in between.
+        assert_eq!(site.admit(1000), Some(5));
+        for _ in 1..REFILL_PER_SEC {
+            assert_eq!(site.admit(1000), Some(0));
+        }
+        assert_eq!(site.admit(1000), None);
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let site = Site::new();
+        for _ in 0..BURST {
+            assert!(site.admit(0).is_some());
+        }
+        // A long quiet period refills to the cap, not beyond.
+        let mut admitted = 0;
+        for _ in 0..(2 * BURST) {
+            if site.admit(3_600_000).is_some() {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, BURST);
+    }
+
+    #[test]
+    fn sub_second_elapse_refills_nothing() {
+        let site = Site::new();
+        for _ in 0..BURST {
+            assert!(site.admit(0).is_some());
+        }
+        assert_eq!(site.admit(999), None);
+    }
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(parse_level(Some("off")), -1);
+        assert_eq!(parse_level(Some("ERROR")), 0);
+        assert_eq!(parse_level(Some("warn")), 1);
+        assert_eq!(parse_level(Some("info")), 2);
+        assert_eq!(parse_level(Some("debug")), 3);
+        assert_eq!(parse_level(None), 2);
+        assert_eq!(parse_level(Some("gibberish")), 2);
+    }
+}

@@ -1,0 +1,39 @@
+//! Observability: the flight recorder, the Prometheus `/metrics`
+//! exposition, and the rate-limited leveled logger.
+//!
+//! Everything here is std-only (offline registry, like the rest of the
+//! crate) and built to the same discipline as the fabric it watches:
+//!
+//! * [`trace`] — a **flight recorder**: a bounded lock-free span
+//!   buffer (one [`crate::util::ring`] MPSC ring with thread-cached
+//!   senders) recording integer-µs lifecycle events for a 1-in-N
+//!   sample of requests across every hop of the serving pipeline
+//!   (submit → ingest bin → worker → grant → dispatch → completion,
+//!   plus model-keyed registration/grant/wire events). Overflow sheds
+//!   and counts, never blocks; with tracing disabled every tap costs
+//!   one relaxed load and one predictable branch — zero allocations —
+//!   which `tests/alloc_free.rs` proves and `bench_hotpath`'s
+//!   traced-vs-untraced probe measures. Sampled spans aggregate into
+//!   a per-hop latency breakdown ([`crate::util::stats::LogHistogram`]
+//!   p50/p99 per stage) surfaced in `ServeReport`, and `--trace-out
+//!   FILE` dumps raw spans as Chrome trace-event JSON loadable in
+//!   Perfetto.
+//! * [`prom`] + [`http`] — a tiny std-only HTTP listener (`serve
+//!   --metrics-listen ADDR`, `rank-server --metrics-listen ADDR`)
+//!   exposing the already-collected counters (goodput, drops,
+//!   grants, mis-steers, per-cause disconnects, reconnects, fenced
+//!   frames, queue depths, ring occupancy high-watermarks, autoscale
+//!   gauges) in Prometheus text exposition format — the substrate
+//!   for the ROADMAP's k8s/cluster-autoscaler recipe.
+//! * [`log`] — a rate-limited leveled logger (level filter via
+//!   `SYMPHONY_LOG`, per-call-site token bucket with a
+//!   suppressed-count line) behind the `log_error!` / `log_warn!` /
+//!   `log_info!` / `log_debug!` macros. The `no-bare-eprintln` lint
+//!   rule keeps raw `eprintln!` out of `coordinator/` and `net/`, so
+//!   a flapping peer under fault injection can no longer spam stderr
+//!   unboundedly from the read/write/dial loops.
+
+pub mod http;
+pub mod log;
+pub mod prom;
+pub mod trace;

@@ -1,0 +1,131 @@
+//! Prometheus text exposition (format version 0.0.4), hand-rolled —
+//! the offline registry has no prometheus crate, and the exposition
+//! format is a handful of `name{labels} value` lines anyway.
+//!
+//! [`Prom`] is a write-once page builder: declare each metric family
+//! with [`Prom::family`] (emits `# HELP` / `# TYPE` once), then append
+//! samples. Family declarations are deduplicated and sample series
+//! (name + label set) are debug-asserted unique, which the golden test
+//! in `tests/observability.rs` re-checks from the parsed output.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+pub struct Prom {
+    out: String,
+    families: BTreeSet<String>,
+    #[cfg(debug_assertions)]
+    series: BTreeSet<String>,
+}
+
+impl Prom {
+    pub fn new() -> Self {
+        Prom {
+            out: String::with_capacity(4096),
+            families: BTreeSet::new(),
+            #[cfg(debug_assertions)]
+            series: BTreeSet::new(),
+        }
+    }
+
+    /// Declare a metric family once: `kind` is `counter` or `gauge`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        if self.families.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+        }
+    }
+
+    /// Append one sample. Labels render as `name{k="v",..} value`;
+    /// empty labels render bare.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        let series = self.render_series(name, labels);
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            self.series.insert(series.clone()),
+            "duplicate metric series {series}"
+        );
+        let _ = writeln!(self.out, "{series} {value}");
+    }
+
+    fn render_series(&self, name: &str, labels: &[(&str, &str)]) -> String {
+        if labels.is_empty() {
+            return name.to_string();
+        }
+        let mut s = String::with_capacity(name.len() + 16);
+        s.push_str(name);
+        s.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{k}=\"{}\"", escape_label(v));
+        }
+        s.push('}');
+        s
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for Prom {
+    fn default() -> Self {
+        Prom::new()
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_families_once_and_samples_in_order() {
+        let mut p = Prom::new();
+        p.family("symphony_grants_total", "counter", "grants issued");
+        p.sample("symphony_grants_total", &[("shard", "0")], 3);
+        p.sample("symphony_grants_total", &[("shard", "1")], 5);
+        p.family("symphony_grants_total", "counter", "grants issued");
+        p.family("symphony_gpus_active", "gauge", "active GPUs");
+        p.sample("symphony_gpus_active", &[], 4);
+        let s = p.finish();
+        assert_eq!(s.matches("# TYPE symphony_grants_total").count(), 1);
+        assert!(s.contains("symphony_grants_total{shard=\"0\"} 3\n"));
+        assert!(s.contains("symphony_grants_total{shard=\"1\"} 5\n"));
+        assert!(s.contains("symphony_gpus_active 4\n"));
+    }
+
+    #[test]
+    fn escapes_label_values() {
+        let mut p = Prom::new();
+        p.family("m", "counter", "x");
+        p.sample("m", &[("peer", "a\"b\\c\nd")], 1);
+        let s = p.finish();
+        assert!(s.contains("m{peer=\"a\\\"b\\\\c\\nd\"} 1\n"), "{s}");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "duplicate metric series")]
+    fn duplicate_series_panics_in_debug() {
+        let mut p = Prom::new();
+        p.family("m", "counter", "x");
+        p.sample("m", &[("a", "1")], 1);
+        p.sample("m", &[("a", "1")], 2);
+    }
+}

@@ -22,25 +22,30 @@
 //! [`ServeReport::timeline`].
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 
 use crate::autoscale::live::{GpuState, LiveAutoscaler};
 use crate::autoscale::{AutoscaleConfig, AutoscaleController, WindowStats};
-use crate::coordinator::{Completion, Coordinator, CoordinatorConfig, ToBackend};
+use crate::coordinator::{Completion, CoordObs, Coordinator, CoordinatorConfig, ToBackend};
 use crate::net::client::{DisconnectBreakdown, ReconnectPolicy};
 use crate::net::faults::FaultPlan;
 use crate::core::profile::{LatencyProfile, ModelSpec};
 use crate::core::time::Micros;
 use crate::core::types::GpuId;
 use crate::metrics::EpochPoint;
+use crate::obs::http;
+use crate::obs::prom::Prom;
+use crate::obs::trace::{self, HopStat, Stage};
 use crate::runtime::{ModelRuntime, IMAGE_CHANNELS, IMAGE_DIM};
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, Histogram};
 use crate::workload::{ArrivalKind, ArrivalStream};
+use crate::{log_error, log_info};
 
 /// Which execution substrate backs the GPUs.
 pub enum BackendKind {
@@ -100,6 +105,18 @@ pub struct ServeConfig {
     /// killed by the plan recover through the reconnect machinery, so
     /// a faulted run still completes — that is the point.
     pub fault_plan: Arc<FaultPlan>,
+    /// Flight-recorder sampling interval: trace 1 request in
+    /// `trace_sample` (rounded up to a power of two). 0 disables
+    /// tracing — unless `trace_out` is set, which implies a default
+    /// interval. See `--trace-sample`.
+    pub trace_sample: u64,
+    /// Dump the recorded spans as Chrome trace-event JSON here
+    /// (Perfetto / `chrome://tracing`). See `--trace-out`.
+    pub trace_out: Option<PathBuf>,
+    /// Serve Prometheus text exposition on this address for the
+    /// duration of the run (`--metrics-listen ADDR`); `None` runs no
+    /// listener.
+    pub metrics_listen: Option<String>,
 }
 
 /// What a serving run reports.
@@ -139,6 +156,19 @@ pub struct ServeReport {
     pub rank_fenced_frames: u64,
     /// Per-epoch autoscale timeline (empty without `autoscale`).
     pub timeline: Vec<EpochPoint>,
+    /// Per-hop p50/p99 latency rows from the flight recorder, in
+    /// pipeline order (empty when tracing was off).
+    pub hop_breakdown: Vec<HopStat>,
+    /// Sampled trace events shed by the recorder's bounded ring (0
+    /// when tracing was off — shedding loses spans, never requests).
+    pub trace_shed: u64,
+    /// Ring occupancy high-watermarks per tier (max slots ever
+    /// occupied across that tier's rings) — the "how close to
+    /// backpressure did this run get" gauge.
+    pub ingest_ring_hwm: u64,
+    pub model_ring_hwm: u64,
+    /// 0 with a remote rank tier (the rings live in the rank server).
+    pub rank_ring_hwm: u64,
 }
 
 impl ServeReport {
@@ -223,6 +253,18 @@ impl SleepWorkers {
 
 /// Run a serving experiment end to end.
 pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
+    // Flight recorder first, so taps are live before the first submit.
+    // `--trace-out` without an explicit interval gets a default that
+    // keeps the recorder well under its shed threshold at high rates.
+    let sample = if cfg.trace_sample > 0 {
+        cfg.trace_sample
+    } else if cfg.trace_out.is_some() {
+        64
+    } else {
+        0
+    };
+    let trace_session = if sample > 0 { trace::install(sample) } else { None };
+
     let (comp_tx, comp_rx) = channel::<Completion>();
     let initial_gpus = cfg.initial_gpus.unwrap_or(cfg.num_gpus).min(cfg.num_gpus);
 
@@ -316,6 +358,30 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         std::thread::spawn(move || collect(comp_rx, counts))
     };
 
+    // Scrape-visible run gauges the epoch loop keeps fresh (and that
+    // hold their initial values on non-autoscale runs).
+    let gpus_active = Arc::new(AtomicU64::new(initial_gpus as u64));
+    let autoscale_epochs = Arc::new(AtomicU64::new(0));
+
+    // The `/metrics` listener lives exactly as long as this run:
+    // dropping the guard at return unblocks its thread.
+    let _metrics_srv = match &cfg.metrics_listen {
+        Some(addr) => {
+            let obs = coord.observe();
+            let counts = counts.clone();
+            let ga = gpus_active.clone();
+            let ae = autoscale_epochs.clone();
+            let srv = http::spawn(
+                addr,
+                Arc::new(move || render_metrics(&counts, &obs, &ga, &ae)),
+            )
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+            log_info!("serve: metrics on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
     // Autoscale epoch loop (§3.5 live wiring).
     let (stop_tx, stop_rx) = channel::<()>();
     let scaler_handle = cfg.autoscale.map(|as_cfg| {
@@ -324,6 +390,8 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let counts = counts.clone();
         let workers = sleep_workers.clone();
         let depth_probe = depth_probe.clone();
+        let gpus_active = gpus_active.clone();
+        let autoscale_epochs = autoscale_epochs.clone();
         let epoch = Duration::from_micros(as_cfg.epoch.0.max(1));
         std::thread::spawn(move || {
             let mut log: Vec<EpochPoint> = Vec::new();
@@ -387,6 +455,9 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
                     busy_fraction: w.busy_fraction,
                     delta,
                 });
+                // relaxed: advisory scrape gauges, refreshed per epoch.
+                gpus_active.store(scaler.active_gpus() as u64, Ordering::Relaxed);
+                autoscale_epochs.fetch_add(1, Ordering::Relaxed);
                 last = (good, bad, busy);
                 last_t = now;
                 if stopping {
@@ -516,6 +587,26 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         let _ = h.join();
     }
 
+    // Tear down the recorder last: the collector (Complete taps) is
+    // joined, so the dump holds every sampled span of the run.
+    let (hop_breakdown, trace_shed) = match trace_session {
+        Some(session) => {
+            let dump = session.finish();
+            if let Some(path) = &cfg.trace_out {
+                match dump.write_chrome_trace(path) {
+                    Ok(()) => log_info!(
+                        "serve: wrote {} trace events to {}",
+                        dump.events.len(),
+                        path.display()
+                    ),
+                    Err(e) => log_error!("serve: writing trace to {}: {e}", path.display()),
+                }
+            }
+            (dump.hop_breakdown(), dump.shed)
+        }
+        None => (Vec::new(), 0),
+    };
+
     let wall_secs = (out.last.saturating_sub(out.first)).as_secs_f64().max(1e-9);
     let good = out.completed - out.violations;
     Ok(ServeReport {
@@ -538,6 +629,11 @@ pub fn serve(cfg: ServeConfig) -> Result<ServeReport> {
         rank_reconnects: front_stats.rank_reconnects,
         rank_fenced_frames: front_stats.rank_fenced_frames,
         timeline,
+        hop_breakdown,
+        trace_shed,
+        ingest_ring_hwm: front_stats.ingest_ring_hwm,
+        model_ring_hwm: front_stats.model_ring_hwm,
+        rank_ring_hwm: front_stats.rank_ring_hwm,
     }
     .tap_duration(cfg.duration))
 }
@@ -581,6 +677,7 @@ fn collect(comp_rx: Receiver<Completion>, counts: Arc<Mutex<LiveCounts>>) -> Col
                 let mut good = 0u64;
                 let mut bad = 0u64;
                 for r in &requests {
+                    trace::req_event(Stage::Complete, r.id);
                     out.completed += 1;
                     out.latencies.push((end.saturating_sub(r.arrival)).as_millis_f64());
                     if end > r.deadline {
@@ -604,6 +701,157 @@ fn collect(comp_rx: Receiver<Completion>, counts: Arc<Mutex<LiveCounts>>) -> Col
         }
     }
     out
+}
+
+/// One `/metrics` scrape: Prometheus 0.0.4 text exposition over the
+/// run's live counters. Every value is a relaxed load or one short
+/// mutex hold (the `LiveCounts` lock the collector already takes per
+/// batch) — a scrape never touches the request path.
+fn render_metrics(
+    counts: &Mutex<LiveCounts>,
+    obs: &CoordObs,
+    gpus_active: &AtomicU64,
+    autoscale_epochs: &AtomicU64,
+) -> String {
+    let (good, bad) = {
+        let c = counts.lock().unwrap();
+        (c.good, c.bad)
+    };
+    let mut p = Prom::new();
+    p.family(
+        "symphony_requests_good_total",
+        "counter",
+        "Requests completed within their SLO.",
+    );
+    p.sample("symphony_requests_good_total", &[], good);
+    p.family(
+        "symphony_requests_bad_total",
+        "counter",
+        "Requests completed late or dropped.",
+    );
+    p.sample("symphony_requests_bad_total", &[], bad);
+    p.family(
+        "symphony_dropped_submits_total",
+        "counter",
+        "Submissions that could not be delivered to a model worker.",
+    );
+    // relaxed: advisory scrape counter.
+    p.sample(
+        "symphony_dropped_submits_total",
+        &[],
+        obs.dropped_submits.load(Ordering::Relaxed),
+    );
+
+    p.family(
+        "symphony_grants_total",
+        "counter",
+        "GPU grants issued by the rank tier.",
+    );
+    p.family(
+        "symphony_mis_steers_total",
+        "counter",
+        "Overflow-routed candidates that landed on a shard with no free GPU.",
+    );
+    for (i, s) in obs.shard_live.iter().enumerate() {
+        let idx = i.to_string();
+        p.sample("symphony_grants_total", &[("shard", &idx)], s.grants());
+        p.sample("symphony_mis_steers_total", &[("shard", &idx)], s.mis_steers());
+    }
+    // With a remote tier, grants are what the wire reader has decoded;
+    // mis-steers stay server-side (scrape the rank server for them).
+    for (i, r) in obs.remote.iter().enumerate() {
+        let idx = format!("remote{i}");
+        p.sample("symphony_grants_total", &[("shard", &idx)], r.grants());
+    }
+
+    p.family(
+        "symphony_rank_disconnects_total",
+        "counter",
+        "Remote rank sessions that ended without this process asking, by cause.",
+    );
+    let d = &obs.disconnects;
+    for (cause, n) in [
+        ("io", d.io()),
+        ("protocol", d.protocol()),
+        ("handshake", d.handshake()),
+        ("backlog-overflow", d.backlog_overflow()),
+    ] {
+        p.sample("symphony_rank_disconnects_total", &[("cause", cause)], n);
+    }
+    p.family(
+        "symphony_rank_reconnects_total",
+        "counter",
+        "Remote rank sessions re-established by the reconnect state machine.",
+    );
+    p.sample(
+        "symphony_rank_reconnects_total",
+        &[],
+        obs.remote.iter().map(|r| r.reconnects()).sum(),
+    );
+    p.family(
+        "symphony_fenced_frames_total",
+        "counter",
+        "Stale-session down-frames dropped by the epoch fence.",
+    );
+    p.sample(
+        "symphony_fenced_frames_total",
+        &[],
+        obs.remote.iter().map(|r| r.fenced()).sum(),
+    );
+
+    p.family(
+        "symphony_queue_depth",
+        "gauge",
+        "Requests queued in model workers (admitted, not yet dispatched).",
+    );
+    p.sample("symphony_queue_depth", &[], obs.queue_depth.total());
+    p.family(
+        "symphony_ring_depth",
+        "gauge",
+        "Current occupancy of a pipeline ring.",
+    );
+    p.family(
+        "symphony_ring_hwm",
+        "gauge",
+        "High-watermark occupancy of a pipeline ring.",
+    );
+    for (tier, probes) in [
+        ("ingest", &obs.ingest_rings),
+        ("model", &obs.model_rings),
+        ("rank", &obs.rank_rings),
+    ] {
+        for (i, pr) in probes.iter().enumerate() {
+            let idx = i.to_string();
+            let labels = [("tier", tier), ("idx", idx.as_str())];
+            p.sample("symphony_ring_depth", &labels, pr.depth() as u64);
+            p.sample("symphony_ring_hwm", &labels, pr.high_watermark() as u64);
+        }
+    }
+
+    p.family(
+        "symphony_gpus_active",
+        "gauge",
+        "GPUs currently attached (tracks the autoscaler on autoscale runs).",
+    );
+    // relaxed: advisory scrape gauge.
+    p.sample("symphony_gpus_active", &[], gpus_active.load(Ordering::Relaxed));
+    p.family(
+        "symphony_autoscale_epochs_total",
+        "counter",
+        "Autoscale epochs evaluated so far.",
+    );
+    p.sample(
+        "symphony_autoscale_epochs_total",
+        &[],
+        autoscale_epochs.load(Ordering::Relaxed),
+    );
+    p.family(
+        "symphony_trace_shed_total",
+        "counter",
+        "Sampled flight-recorder events shed (ring full or retained cap).",
+    );
+    p.sample("symphony_trace_shed_total", &[], trace::shed_count());
+    p.finish()
 }
 
 impl ServeReport {
@@ -667,7 +915,7 @@ fn pjrt_executor(
     let rt = match ModelRuntime::load(&dir) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("pjrt executor: failed to load artifacts: {e:#}");
+            log_error!("pjrt executor: failed to load artifacts: {e:#}");
             return;
         }
     };
@@ -738,6 +986,9 @@ mod tests {
             pin_cores: false,
             seed: 5,
             fault_plan: FaultPlan::none(),
+            trace_sample: 0,
+            trace_out: None,
+            metrics_listen: None,
         })
         .unwrap();
         assert!(report.submitted > 50, "submitted {}", report.submitted);
@@ -793,6 +1044,9 @@ mod tests {
             pin_cores: false,
             seed: 11,
             fault_plan: FaultPlan::none(),
+            trace_sample: 0,
+            trace_out: None,
+            metrics_listen: None,
         })
         .unwrap();
         let (first, peak, last) = crate::metrics::timeline_extent(&report.timeline)

@@ -289,6 +289,10 @@ struct Inner<T, F: Fabric> {
     senders: F::Atomic,
     /// 1 while the receiver handle is alive.
     rx_alive: F::Atomic,
+    /// High-watermark occupancy gauge — max observed depth at publish
+    /// time, monotone for the ring's lifetime. Advisory only (never
+    /// read by the protocol), surfaced on `/metrics`.
+    hwm: F::Atomic,
     parker: GenericParker<F>,
 }
 
@@ -356,6 +360,7 @@ impl<T, F: Fabric> Inner<T, F> {
                         // the Release store of pos + 1 below.
                         unsafe { (*slot.val.get()).write(v) };
                         slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        self.note_depth(pos.wrapping_add(1));
                         return Ok(());
                     }
                     Err(now) => pos = now,
@@ -403,6 +408,67 @@ impl<T, F: Fabric> Inner<T, F> {
     fn rx_alive(&self) -> bool {
         self.rx_alive.load(Ordering::Acquire) == 1
     }
+
+    /// Producer-side gauge update after publishing at `tail_after - 1`.
+    /// The shim's [`ShimAtomic`] has no `fetch_max`, so the max rides a
+    /// `fetch_update` that short-circuits (returns `None`, no CAS) when
+    /// the observed depth is not a new high.
+    fn note_depth(&self, tail_after: usize) {
+        if !F::track_gauges() {
+            return;
+        }
+        // relaxed: advisory gauge — a stale head under-reports depth by
+        // a few slots and the fetch_update CAS keeps the max monotone;
+        // nothing in the handoff protocol reads this value.
+        let head = self.head.0.load(Ordering::Relaxed);
+        let depth = tail_after.wrapping_sub(head);
+        let _ = self
+            .hwm
+            // relaxed: same advisory gauge as above.
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                (depth > cur).then_some(depth)
+            });
+    }
+
+    /// Instantaneous occupancy: published-or-claimed minus consumed.
+    /// Advisory — both cursors can move between the two loads.
+    fn depth(&self) -> usize {
+        // relaxed: advisory gauge, see note_depth.
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        // relaxed: advisory gauge, see note_depth.
+        let head = self.head.0.load(Ordering::Relaxed);
+        tail.wrapping_sub(head).min(self.buf.len())
+    }
+}
+
+// ----------------------------------------------------------------- probe
+
+/// Type-erased occupancy probe over a live ring. Metrics code holds
+/// `Arc<dyn RingProbe>`s for rings of heterogeneous payload types and
+/// polls them at scrape time; a probe keeps the ring's storage alive
+/// but cannot send, receive, or block.
+pub trait RingProbe: Send + Sync {
+    /// Instantaneous occupancy (claimed-or-published minus consumed).
+    fn depth(&self) -> usize;
+    /// Max depth ever observed at publish time (monotone).
+    fn high_watermark(&self) -> usize;
+    /// Ring capacity after power-of-two rounding.
+    fn capacity(&self) -> usize;
+}
+
+impl<T: Send, F: Fabric> RingProbe for Inner<T, F> {
+    fn depth(&self) -> usize {
+        Inner::depth(self)
+    }
+
+    fn high_watermark(&self) -> usize {
+        // relaxed: advisory gauge, see note_depth.
+        self.hwm.load(Ordering::Relaxed)
+    }
+
+    fn capacity(&self) -> usize {
+        self.buf.len()
+    }
 }
 
 /// Create a bounded MPSC ring on the production fabric. `capacity` is
@@ -429,6 +495,7 @@ pub fn ring_in<T, F: Fabric>(capacity: usize) -> (RingSender<T, F>, RingReceiver
         head: Padded(F::atomic(0)),
         senders: F::atomic(1),
         rx_alive: F::atomic(1),
+        hwm: F::atomic(0),
         parker: GenericParker::new(),
     });
     (
@@ -521,6 +588,14 @@ impl<T, F: Fabric> RingSender<T, F> {
                 }
             }
         }
+    }
+
+    /// Type-erased occupancy probe; see [`RingProbe`].
+    pub fn probe(&self) -> Arc<dyn RingProbe>
+    where
+        T: Send + 'static,
+    {
+        self.inner.clone()
     }
 }
 
@@ -636,6 +711,25 @@ impl<T, F: Fabric> RingReceiver<T, F> {
     pub fn capacity(&self) -> usize {
         self.inner.buf.len()
     }
+
+    /// Instantaneous occupancy (advisory, see [`RingProbe::depth`]).
+    pub fn depth(&self) -> usize {
+        self.inner.depth()
+    }
+
+    /// Max depth ever observed at publish time.
+    pub fn high_watermark(&self) -> usize {
+        // relaxed: advisory gauge, see Inner::note_depth.
+        self.inner.hwm.load(Ordering::Relaxed)
+    }
+
+    /// Type-erased occupancy probe; see [`RingProbe`].
+    pub fn probe(&self) -> Arc<dyn RingProbe>
+    where
+        T: Send + 'static,
+    {
+        self.inner.clone()
+    }
 }
 
 pub struct TryIter<'a, T, F: Fabric = RealFabric> {
@@ -700,6 +794,36 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30)); // let it park
         tx.try_send(99).unwrap();
         assert_eq!(h.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn depth_and_high_watermark_track_occupancy() {
+        let (tx, rx) = ring::<u32>(8);
+        assert_eq!(rx.depth(), 0);
+        assert_eq!(rx.high_watermark(), 0);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        assert_eq!(rx.depth(), 5);
+        assert_eq!(rx.high_watermark(), 5);
+        for _ in 0..5 {
+            rx.try_recv().unwrap();
+        }
+        // Depth falls with consumption; the high watermark is sticky.
+        assert_eq!(rx.depth(), 0);
+        assert_eq!(rx.high_watermark(), 5);
+        tx.try_send(9).unwrap();
+        assert_eq!(rx.depth(), 1);
+        assert_eq!(rx.high_watermark(), 5);
+
+        // The type-erased probe agrees and outlives the handles.
+        let probe = tx.probe();
+        assert_eq!(probe.depth(), 1);
+        assert_eq!(probe.high_watermark(), 5);
+        assert_eq!(probe.capacity(), 8);
+        drop(tx);
+        drop(rx);
+        assert_eq!(probe.high_watermark(), 5);
     }
 
     #[test]

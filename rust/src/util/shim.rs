@@ -220,6 +220,13 @@ pub trait Fabric: Sized + Send + Sync + 'static {
     /// ladder is pure state-space, so virtual receivers go straight to
     /// the park edge — which is the protocol under test.
     fn spin_budget() -> (u32, u32);
+    /// Whether rings maintain their advisory occupancy gauges
+    /// (depth / high-watermark, surfaced on `/metrics`). On for
+    /// production; the checker turns them off — the protocol never
+    /// reads a gauge, so its atomics would be pure state-space.
+    fn track_gauges() -> bool {
+        true
+    }
 }
 
 /// The production fabric: plain std primitives, no instrumentation.

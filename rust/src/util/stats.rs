@@ -188,6 +188,101 @@ impl Histogram {
     }
 }
 
+/// Log-linear bucketed histogram over `u64` values (µs latencies):
+/// [`LOG_SUB_BITS`] sub-buckets per octave, so the relative error of
+/// any quantile is bounded by `2^-LOG_SUB_BITS` (~12.5% at 3 bits) —
+/// HdrHistogram's layout, sized for the flight recorder's per-hop
+/// latency breakdown where ranges span 1 µs queue hops to multi-second
+/// stalls and a dense `Histogram` would need millions of buckets.
+///
+/// Values below `2^LOG_SUB_BITS` are exact (bucket = value); above,
+/// bucket index is `(msb - b) * 2^b + (v >> (msb - b))` for
+/// `b = LOG_SUB_BITS`, which is contiguous with the linear region and
+/// monotone in `v`.
+#[derive(Clone, Debug, Default)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+/// Sub-bucket resolution: 2^3 = 8 sub-buckets per octave.
+const LOG_SUB_BITS: u32 = 3;
+
+/// Bucket count covering all of `u64`: 16 exact + (64 - 3) octaves × 8.
+const LOG_BUCKETS: usize = ((64 - LOG_SUB_BITS as usize) << LOG_SUB_BITS) + (1 << LOG_SUB_BITS);
+
+fn log_bucket(v: u64) -> usize {
+    let b = LOG_SUB_BITS;
+    if v < (1 << b) {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    (((msb - b) as usize) << b) + (v >> (msb - b)) as usize
+}
+
+/// Smallest value mapping to `bucket` (inverse of [`log_bucket`]).
+fn log_bucket_floor(bucket: usize) -> u64 {
+    let b = LOG_SUB_BITS as usize;
+    if bucket < (1 << b) {
+        return bucket as u64;
+    }
+    // bucket = (msb - b)*2^b + m with m = v >> (msb - b) in
+    // [2^b, 2^(b+1)), so bucket >> b = msb - b + 1.
+    let shift = (bucket >> b) - 1;
+    let m = bucket - (shift << b);
+    (m as u64) << shift
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: Vec::new(),
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, v: u64) {
+        let bucket = log_bucket(v).min(LOG_BUCKETS - 1);
+        if self.counts.len() <= bucket {
+            self.counts.resize(bucket + 1, 0);
+        }
+        self.counts[bucket] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Value at quantile `q` in [0, 1]: the floor of the bucket holding
+    /// the q-th sample (0 when empty). Within one sub-bucket of the
+    /// exact answer by construction.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (bucket, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return log_bucket_floor(bucket);
+            }
+        }
+        log_bucket_floor(self.counts.len().saturating_sub(1))
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (bucket, &c) in other.counts.iter().enumerate() {
+            self.counts[bucket] += c;
+        }
+        self.total += other.total;
+    }
+}
+
 /// Dump a sample's CDF at fixed evaluation points (for figure output).
 pub fn cdf_points(samples: &[f64], points: usize) -> Vec<(f64, f64)> {
     if samples.is_empty() {
@@ -249,6 +344,49 @@ mod tests {
         let cdf = h.cdf();
         assert_eq!(cdf.first().unwrap().0, 1);
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_bucket_is_monotone_and_inverts() {
+        let mut last = 0usize;
+        for v in 0..4096u64 {
+            let b = log_bucket(v);
+            assert!(b >= last, "bucket({v}) = {b} < {last}");
+            last = b;
+            let floor = log_bucket_floor(b);
+            assert!(floor <= v, "floor({b}) = {floor} > {v}");
+            // Relative bucket width is bounded by 2^-LOG_SUB_BITS.
+            assert!(v - floor <= (v >> LOG_SUB_BITS), "v={v} floor={floor}");
+        }
+        assert_eq!(log_bucket(u64::MAX).min(LOG_BUCKETS - 1), LOG_BUCKETS - 1);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_within_bucket_error() {
+        let mut h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.add(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!((440..=500).contains(&p50), "p50 {p50}");
+        assert!((870..=990).contains(&p99), "p99 {p99}");
+        assert_eq!(h.quantile(0.0).min(1), 1);
+        assert!(h.quantile(1.0) <= 1000);
+        assert_eq!(LogHistogram::new().quantile(0.99), 0);
+    }
+
+    #[test]
+    fn log_histogram_merge_sums_counts() {
+        let mut a = LogHistogram::new();
+        a.add(5);
+        a.add(100_000);
+        let mut b = LogHistogram::new();
+        b.add(5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.quantile(0.5), 5);
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! (§Perf): a counting `#[global_allocator]` wraps the system allocator
 //! and the test asserts that after warm-up, driving `on_request` (both
 //! the deferral path and the immediate-dispatch path) performs **zero**
-//! allocations. This file deliberately contains a single `#[test]` so no
-//! concurrent test thread can perturb the counter.
+//! allocations — and that the flight recorder's *disabled* taps add
+//! none on top (the obs contract: untraced runs pay one relaxed load
+//! and a predictable branch per tap, nothing else). This file
+//! deliberately contains a single `#[test]` so no concurrent test
+//! thread can perturb the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -11,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use symphony::core::profile::LatencyProfile;
 use symphony::core::time::Micros;
 use symphony::core::types::{GpuId, ModelId, Request, RequestId};
+use symphony::obs::trace::{self, Stage};
 use symphony::scheduler::deferred::{DeferredConfig, DeferredScheduler};
 use symphony::scheduler::{Command, Scheduler};
 
@@ -137,6 +141,29 @@ fn steady_state_on_request_is_allocation_free() {
         assert_eq!(
             delta, 0,
             "deferred steady state allocated {delta} times over 400 requests"
+        );
+    }
+
+    // Phase 3: disabled flight-recorder taps. No trace session is
+    // installed in this process, so every tap must short-circuit on the
+    // sampling word — zero allocations across every stage of both tap
+    // kinds.
+    {
+        assert!(!trace::enabled(), "no session installed in this test");
+        let before = allocs();
+        for i in 0..10_000u64 {
+            trace::req_event(Stage::Submit, RequestId(i));
+            trace::req_event(Stage::IngestBin, RequestId(i));
+            trace::req_event(Stage::WorkerRecv, RequestId(i));
+            trace::req_event(Stage::Dispatch, RequestId(i));
+            trace::req_event(Stage::Complete, RequestId(i));
+            trace::model_event(Stage::CandReg, ModelId((i % 7) as u32));
+            trace::model_event(Stage::RankGrant, ModelId((i % 7) as u32));
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "disabled trace taps allocated {delta} times over 70k events"
         );
     }
 }

@@ -869,6 +869,85 @@ fn relaxed_reason_suppression_round_trip() {
     assert_flagged(&bare, RELAXED_RULE, line_of(RELAXED_ALLOW_BARE, "seq.store"));
 }
 
+// -------------------------------------------------------------- eprintln
+
+const EPRINTLN_RULE: &str = "no-bare-eprintln";
+
+const EPRINTLN_BAD: &str = r#"
+pub fn dial(addr: &str) {
+    eprintln!("client: dialing {addr}");
+    println!("client: connected to {addr}");
+}
+"#;
+
+#[test]
+fn no_bare_eprintln_flags_prints_in_scope() {
+    for path in ["net/client.rs", "coordinator/ingest.rs"] {
+        let f = only(path, EPRINTLN_BAD, EPRINTLN_RULE);
+        assert_eq!(f.len(), 2, "findings for {path}:\n{}", render(&f));
+        assert_flagged(&f, EPRINTLN_RULE, line_of(EPRINTLN_BAD, "eprintln!"));
+        assert_flagged(&f, EPRINTLN_RULE, line_of(EPRINTLN_BAD, "println!"));
+        assert!(f[0].message.contains("rate-limited"), "{}", f[0]);
+    }
+}
+
+#[test]
+fn no_bare_eprintln_is_scoped() {
+    // The CLI, benches, and the obs crate itself print freely.
+    let f = only("main.rs", EPRINTLN_BAD, EPRINTLN_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+    let f = only("obs/log.rs", EPRINTLN_BAD, EPRINTLN_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const EPRINTLN_NEAR: &str = r#"
+pub fn report(eprintln: u64) -> u64 {
+    // A local that merely shares the name, and a doc mention of
+    // eprintln! in a comment, are not prints.
+    eprintln + 1
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_print_freely() {
+        eprintln!("debugging a fixture");
+        println!("and stdout too");
+    }
+}
+"#;
+
+#[test]
+fn no_bare_eprintln_exempts_non_macros_and_tests() {
+    let f = only("net/server.rs", EPRINTLN_NEAR, EPRINTLN_RULE);
+    assert!(f.is_empty(), "findings:\n{}", render(&f));
+}
+
+const EPRINTLN_ALLOW_OK: &str = r#"
+pub fn banner(addr: &str) {
+    // lint:allow(no-bare-eprintln): machine-parsed startup line on stdout
+    println!("listening on {addr}");
+}
+"#;
+
+const EPRINTLN_ALLOW_BARE: &str = r#"
+pub fn banner(addr: &str) {
+    // lint:allow(no-bare-eprintln)
+    println!("listening on {addr}");
+}
+"#;
+
+#[test]
+fn no_bare_eprintln_suppression_round_trip() {
+    let ok = lint_sources(&[("net/server.rs", EPRINTLN_ALLOW_OK)], None);
+    assert!(ok.is_empty(), "findings:\n{}", render(&ok));
+
+    let bare = lint_sources(&[("net/server.rs", EPRINTLN_ALLOW_BARE)], None);
+    assert_eq!(bare.len(), 2, "findings:\n{}", render(&bare));
+    assert_flagged(&bare, "suppression", line_of(EPRINTLN_ALLOW_BARE, "lint:allow"));
+    assert_flagged(&bare, EPRINTLN_RULE, line_of(EPRINTLN_ALLOW_BARE, "println!"));
+}
+
 // ---------------------------------------------------------- suppressions
 
 const HYGIENE: &str = r#"
@@ -914,6 +993,7 @@ fn rule_registry_is_complete() {
         CHANNEL_RULE,
         UNSAFE_RULE,
         RELAXED_RULE,
+        EPRINTLN_RULE,
         "suppression",
     ] {
         assert!(names.contains(&expected), "missing rule `{expected}` in {names:?}");

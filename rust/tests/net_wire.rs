@@ -58,6 +58,7 @@ fn spawn_server_with(
         busy_poll: false,
         pin_cores: false,
         fault_plan,
+        metrics_listen: None,
     })
     .expect("bind rank server");
     let addr = server.local_addr().to_string();

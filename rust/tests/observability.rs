@@ -1,0 +1,271 @@
+//! Observability integration: flight-recorder span accounting over
+//! real serving runs (in-process and loopback-wire), and the live
+//! `/metrics` endpoint end to end — exposition shape, and counter
+//! monotonicity across two scrapes of one run.
+//!
+//! The recorder is process-global (one session at a time), so every
+//! test that installs a session holds `RECORDER` for its duration;
+//! serve() is then configured with `trace_sample: 0` and the ambient
+//! session captures its taps.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use symphony::core::profile::ModelSpec;
+use symphony::net::faults::FaultPlan;
+use symphony::net::server::{RankServer, RankServerConfig};
+use symphony::obs::prom::Prom;
+use symphony::obs::trace::{self, Stage};
+use symphony::serve::{serve, BackendKind, ServeConfig};
+
+static RECORDER: Mutex<()> = Mutex::new(());
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        models: vec![
+            ModelSpec::new("a", 0.2, 2.0, 50.0),
+            ModelSpec::new("b", 0.2, 2.0, 50.0),
+        ],
+        num_gpus: 2,
+        initial_gpus: None,
+        rank_shards: 2,
+        ingest_shards: 1,
+        model_workers: None,
+        remote_ranks: Vec::new(),
+        total_rate: 300.0,
+        rate_phases: Vec::new(),
+        duration: Duration::from_millis(600),
+        backend: BackendKind::Sleep,
+        autoscale: None,
+        busy_poll: false,
+        pin_cores: false,
+        seed: 17,
+        fault_plan: FaultPlan::none(),
+        trace_sample: 0,
+        trace_out: None,
+        metrics_listen: None,
+    }
+}
+
+/// Every sampled request that completed must respect the span
+/// accounting invariants, and the lifecycle stages the pipeline
+/// promises must all actually appear in the dump.
+#[test]
+fn trace_invariants_hold_on_in_process_run() {
+    let _g = RECORDER.lock().unwrap();
+    let session = trace::install(1).expect("recorder free under RECORDER lock");
+    let report = serve(base_cfg()).unwrap();
+    let dump = session.finish();
+
+    assert!(report.completed > 0, "{report:?}");
+    assert!(!dump.events.is_empty(), "tracing captured nothing");
+    dump.check_invariants().unwrap_or_else(|e| panic!("invariant violated: {e}"));
+    for stage in [
+        Stage::Submit,
+        Stage::IngestBin,
+        Stage::WorkerRecv,
+        Stage::CandReg,
+        Stage::RankGrant,
+        Stage::GrantRecv,
+        Stage::Dispatch,
+        Stage::Complete,
+    ] {
+        assert!(
+            dump.events.iter().any(|e| e.stage == stage),
+            "no {stage:?} event in {} events",
+            dump.events.len()
+        );
+    }
+    // The hop table the report would carry: full pipeline order, every
+    // hop populated.
+    let hops = dump.hop_breakdown();
+    assert!(hops.len() >= 5, "hop table too sparse: {hops:?}");
+    assert!(hops.iter().all(|h| h.count > 0));
+}
+
+/// Same contract across the wire: a loopback rank-server run must add
+/// the wire-side stages (Candidate tx, Granted rx) and still satisfy
+/// the accounting invariants on one shared time axis.
+#[test]
+fn trace_invariants_hold_on_loopback_wire_run() {
+    let _g = RECORDER.lock().unwrap();
+    let server = RankServer::bind(RankServerConfig {
+        listen: "127.0.0.1:0".into(),
+        shards: 1,
+        gpus: 0..2,
+        max_sessions: Some(1),
+        busy_poll: false,
+        pin_cores: false,
+        fault_plan: FaultPlan::none(),
+        metrics_listen: None,
+    })
+    .expect("bind loopback rank server");
+    let addr = server.local_addr().to_string();
+    let server_h = std::thread::spawn(move || server.run().expect("rank server run"));
+
+    let session = trace::install(1).expect("recorder free under RECORDER lock");
+    let report = serve(ServeConfig {
+        remote_ranks: vec![addr],
+        ..base_cfg()
+    })
+    .unwrap();
+    let dump = session.finish();
+    server_h.join().expect("server thread");
+
+    assert!(report.grants > 0, "{report:?}");
+    dump.check_invariants().unwrap_or_else(|e| panic!("invariant violated: {e}"));
+    for stage in [Stage::WireCandTx, Stage::WireGrantRx, Stage::RankGrant] {
+        assert!(
+            dump.events.iter().any(|e| e.stage == stage),
+            "no {stage:?} event on the wire run"
+        );
+    }
+}
+
+/// Exact exposition golden: family headers, label escaping, and sample
+/// ordering are byte-stable — what a Prometheus scraper parses.
+#[test]
+fn prometheus_exposition_golden() {
+    let mut p = Prom::new();
+    p.family("symphony_grants_total", "counter", "GPU grants issued.");
+    p.sample("symphony_grants_total", &[("shard", "0")], 41);
+    p.sample("symphony_grants_total", &[("shard", "1")], 1);
+    p.family("symphony_queue_depth", "gauge", "Requests queued.");
+    p.sample("symphony_queue_depth", &[], 7);
+    assert_eq!(
+        p.finish(),
+        "# HELP symphony_grants_total GPU grants issued.\n\
+         # TYPE symphony_grants_total counter\n\
+         symphony_grants_total{shard=\"0\"} 41\n\
+         symphony_grants_total{shard=\"1\"} 1\n\
+         # HELP symphony_queue_depth Requests queued.\n\
+         # TYPE symphony_queue_depth gauge\n\
+         symphony_queue_depth 7\n"
+    );
+}
+
+/// One HTTP scrape against `addr`, returning the exposition body.
+fn scrape(addr: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect metrics listener");
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n")
+        .expect("send request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    assert!(raw.starts_with("HTTP/1.1 200"), "bad response: {raw:.100}");
+    assert!(
+        raw.contains("text/plain; version=0.0.4"),
+        "missing exposition content-type: {raw:.300}"
+    );
+    let (_, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    body.to_string()
+}
+
+/// Value of the first sample line for `name` (any labels) in `body`.
+fn metric(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find(|l| !l.starts_with('#') && l.starts_with(name))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} not in scrape:\n{body}"))
+}
+
+/// Scrape a live run twice: the page must carry the full metric
+/// surface, and cumulative counters must be monotone between scrapes.
+#[test]
+fn metrics_endpoint_scrapes_live_and_monotonic() {
+    let addr = "127.0.0.1:17891";
+    let run = std::thread::spawn(move || {
+        serve(ServeConfig {
+            duration: Duration::from_millis(1500),
+            metrics_listen: Some(addr.to_string()),
+            ..base_cfg()
+        })
+        .unwrap()
+    });
+    // First scrape early in the run, second near its end.
+    std::thread::sleep(Duration::from_millis(500));
+    let first = scrape(addr);
+    std::thread::sleep(Duration::from_millis(600));
+    let second = scrape(addr);
+    let report = run.join().expect("serve run");
+    assert!(report.completed > 0, "{report:?}");
+
+    for name in [
+        "symphony_requests_good_total",
+        "symphony_requests_bad_total",
+        "symphony_dropped_submits_total",
+        "symphony_grants_total{shard=\"0\"}",
+        "symphony_mis_steers_total{shard=\"0\"}",
+        "symphony_rank_disconnects_total{cause=\"io\"}",
+        "symphony_rank_reconnects_total",
+        "symphony_fenced_frames_total",
+        "symphony_queue_depth",
+        "symphony_ring_depth{tier=\"ingest\",idx=\"0\"}",
+        "symphony_ring_hwm{tier=\"model\",idx=\"0\"}",
+        "symphony_ring_hwm{tier=\"rank\",idx=\"1\"}",
+        "symphony_gpus_active",
+        "symphony_autoscale_epochs_total",
+        "symphony_trace_shed_total",
+    ] {
+        assert!(
+            first.lines().any(|l| l.starts_with(name)),
+            "metric {name} missing from scrape:\n{first}"
+        );
+    }
+    let g1 = metric(&first, "symphony_requests_good_total");
+    let g2 = metric(&second, "symphony_requests_good_total");
+    assert!(g2 >= g1, "good_total went backwards: {g1} -> {g2}");
+    assert!(g2 > 0, "no goodput visible by the second scrape");
+    let grants1 = metric(&first, "symphony_grants_total");
+    let grants2 = metric(&second, "symphony_grants_total");
+    assert!(grants2 >= grants1, "grants went backwards: {grants1} -> {grants2}");
+    assert_eq!(metric(&second, "symphony_gpus_active"), 2);
+}
+
+/// The rank server's own scrape surface: session counters appear and
+/// count the one session the run used.
+#[test]
+fn rank_server_metrics_count_sessions() {
+    let addr = "127.0.0.1:17892";
+    let server = RankServer::bind(RankServerConfig {
+        listen: "127.0.0.1:0".into(),
+        shards: 1,
+        gpus: 0..2,
+        max_sessions: Some(1),
+        busy_poll: false,
+        pin_cores: false,
+        fault_plan: FaultPlan::none(),
+        metrics_listen: Some(addr.to_string()),
+    })
+    .expect("bind loopback rank server");
+    let rank_addr = server.local_addr().to_string();
+    let server_h = std::thread::spawn(move || server.run().expect("rank server run"));
+    // Give the metrics listener a beat to bind before scraping.
+    std::thread::sleep(Duration::from_millis(100));
+    let idle = scrape(addr);
+    assert_eq!(metric(&idle, "symphony_server_sessions_total"), 0);
+
+    // Scrape mid-run: the server's listener lives only as long as
+    // `run()`, which returns (max_sessions=1) once the client hangs up.
+    let run = std::thread::spawn(move || {
+        serve(ServeConfig {
+            remote_ranks: vec![rank_addr],
+            ..base_cfg()
+        })
+        .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    let live = scrape(addr);
+    let report = run.join().expect("serve run");
+    server_h.join().expect("server thread");
+    assert!(report.grants > 0, "{report:?}");
+    assert_eq!(metric(&live, "symphony_server_sessions_total"), 1);
+    assert_eq!(metric(&live, "symphony_server_reconnected_sessions_total"), 0);
+    assert!(
+        metric(&live, "symphony_server_grants_total") > 0,
+        "grants invisible server-side:\n{live}"
+    );
+}

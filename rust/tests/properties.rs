@@ -192,6 +192,7 @@ fn spawn_loopback_rank_server(
         busy_poll: false,
         pin_cores: false,
         fault_plan: symphony::net::faults::FaultPlan::none(),
+        metrics_listen: None,
     })
     .expect("bind loopback rank server");
     let addr = server.local_addr().to_string();

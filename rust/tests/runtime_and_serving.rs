@@ -32,6 +32,9 @@ fn sleep_backend_meets_slo_at_moderate_load() {
         pin_cores: false,
         seed: 11,
         fault_plan: symphony::net::faults::FaultPlan::none(),
+        trace_sample: 0,
+        trace_out: None,
+        metrics_listen: None,
     })
     .unwrap();
     assert!(report.submitted > 150);
@@ -60,6 +63,9 @@ fn sleep_backend_batches_under_pressure() {
         pin_cores: false,
         seed: 3,
         fault_plan: symphony::net::faults::FaultPlan::none(),
+        trace_sample: 0,
+        trace_out: None,
+        metrics_listen: None,
     })
     .unwrap();
     assert!(
@@ -137,6 +143,9 @@ fn pjrt_end_to_end_serving() {
         pin_cores: false,
         seed: 9,
         fault_plan: symphony::net::faults::FaultPlan::none(),
+        trace_sample: 0,
+        trace_out: None,
+        metrics_listen: None,
     })
     .unwrap();
     assert!(report.submitted > 60, "submitted {}", report.submitted);
